@@ -1,0 +1,128 @@
+//! **The end-to-end driver** (EXPERIMENTS.md §E2E).
+//!
+//! Simulates a full ICU ward on the real serving stack: N patients
+//! streaming synthetic vital-sign windows, the coordinator routing each
+//! request per policy, per-layer engines executing the AOT-compiled LSTM
+//! models through PJRT, network + compute emulation per the paper's
+//! testbed constants.  Compares all five routing policies under two
+//! compute regimes and reports latency/throughput — the serving-side
+//! analogue of Table VII.
+//!
+//! * **native** (compute_scale = 1): this host's real jax/XLA inference
+//!   speed.  Inference is so fast relative to the network that the end
+//!   device dominates; Algorithm 1 (λ fitted live, per the paper's §IV
+//!   calibration step) discovers that and matches the best fixed policy.
+//! * **paper-era** (compute_scale = 30): the TF/Keras-on-Pi
+//!   compute/network balance of the paper's testbed.  The Figure 5
+//!   crossover reappears (edge wins the heavy models) and Algorithm 1
+//!   beats every fixed layer.
+//!
+//! Run: `make artifacts && cargo run --release --example icu_ward`
+
+use edgeward::allocation::Calibration;
+use edgeward::config::Environment;
+use edgeward::coordinator::{live_calibration, Coordinator, Policy, ServeConfig};
+use edgeward::report::TextTable;
+
+fn run_scenario(
+    name: &str,
+    env: &Environment,
+    base: &ServeConfig,
+) -> anyhow::Result<()> {
+    // The paper's §IV calibration step, on this serving stack: measure a
+    // small dataset, fit λ1/λ2, route with the fitted model.
+    let calib = live_calibration(env, base, "artifacts", 99)?;
+
+    let mut table = TextTable::new(&[
+        "Policy", "Completed", "CC/ES/ED", "Mean ms", "p95 ms", "p99 ms",
+        "Throughput req/s",
+    ])
+    .with_title(format!(
+        "[{name}] end-to-end serving (real PJRT inference, emulated layers, \
+         compute_scale={})",
+        base.compute_scale
+    ));
+
+    for policy in Policy::ALL {
+        let mut cfg = base.clone();
+        cfg.policy = policy;
+        let coord = Coordinator::new(env.clone(), calib, cfg, "artifacts")?;
+        let report = coord.run(1234)?;
+
+        let mut weighted = 0.0;
+        for rep in report.metrics.per_layer.values() {
+            weighted += rep.latency.mean * rep.requests as f64;
+        }
+        let mean = weighted / report.completed.max(1) as f64;
+        let p95 = report
+            .metrics
+            .per_layer
+            .values()
+            .map(|r| r.latency.p95)
+            .fold(0.0, f64::max);
+        let p99 = report
+            .metrics
+            .per_layer
+            .values()
+            .map(|r| r.latency.p99)
+            .fold(0.0, f64::max);
+
+        table.row(vec![
+            policy.label().into(),
+            report.completed.to_string(),
+            format!(
+                "{}/{}/{}",
+                report.routed[0], report.routed[1], report.routed[2]
+            ),
+            format!("{mean:.1}"),
+            format!("{p95:.1}"),
+            format!("{p99:.1}"),
+            format!("{:.1}", report.metrics.throughput_rps),
+        ]);
+        eprintln!("  [{name}] done: {}", policy.label());
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let env = Environment::paper();
+    let base = ServeConfig {
+        patients: 6,
+        requests_per_patient: 20,
+        arrival_rate_hz: 4.0,
+        batch_window_ms: 4,
+        max_batch: 8,
+        size_units: 64,
+        // compress simulated network/compute milliseconds 20× so the ten
+        // policy runs finish in a couple of minutes
+        time_scale: 0.05,
+        emulate_compute: true,
+        compute_scale: 1.0,
+        app_mix: [0.4, 0.4, 0.2],
+        policy: Policy::AlgorithmOne,
+    };
+
+    println!(
+        "ICU ward: {} patients × {} requests, mix breath/mortality/phenotype = {:?}\n",
+        base.patients, base.requests_per_patient, base.app_mix
+    );
+
+    // Scenario 1: this host's real compute speed.
+    run_scenario("native", &env, &base)?;
+
+    // Scenario 2: the paper's compute/network balance.
+    let mut paper_era = base.clone();
+    paper_era.compute_scale = 30.0;
+    run_scenario("paper-era", &env, &paper_era)?;
+
+    // Reference: what the paper's own published calibration would decide
+    // (Table V chosen layers), for the narration in EXPERIMENTS.md.
+    let paper_calib = Calibration::paper();
+    let _ = paper_calib;
+    println!(
+        "(network+compute times are compressed {}x; see EXPERIMENTS.md §E2E)",
+        (1.0 / base.time_scale) as u64
+    );
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Regenerate every table and figure of the paper in one run
+//! (the `edgeward tables` subcommand as a library example).
+//!
+//! Run: `cargo run --release --example paper_tables`
+
+use edgeward::allocation::{allocate_single, estimate_single, Calibration};
+use edgeward::config::Environment;
+use edgeward::device::Layer;
+use edgeward::report::{csv_series, render_gantt, TextTable};
+use edgeward::scheduler::{
+    evaluate_strategy, lower_bound, paper_jobs, schedule_jobs,
+    SchedulerParams, Strategy,
+};
+use edgeward::workload::{table_iv, Application, Workload, SIZE_UNITS};
+
+fn main() {
+    let env = Environment::paper();
+    let calib = Calibration::paper();
+
+    // Table III
+    let mut t3 = TextTable::new(&["Layer", "Cores", "Freq", "GFLOPS"])
+        .with_title("Table III");
+    for l in Layer::ALL {
+        let s = env.spec(l);
+        t3.row(vec![
+            l.name().into(),
+            s.cores.to_string(),
+            format!("{:.1}GHz", s.freq_ghz),
+            format!("{:.1}", s.gflops()),
+        ]);
+    }
+    println!("{}", t3.render());
+
+    // Table IV
+    let mut t4 = TextTable::new(&["WL", "Application", "Size", "KB", "FLOPs"])
+        .with_title("Table IV");
+    for r in table_iv() {
+        t4.row(vec![
+            r.label,
+            r.title.into(),
+            r.size_units.to_string(),
+            format!("{:.0}", r.data_kb),
+            r.model_flops.to_string(),
+        ]);
+    }
+    println!("{}", t4.render());
+
+    // Table V
+    let mut t5 = TextTable::new(&["WL", "Chosen", "Cloud", "Edge", "Device"])
+        .with_title("Table V (Algorithm 1 estimates)");
+    for app in Application::ALL {
+        for &u in &SIZE_UNITS {
+            let wl = Workload::new(app, u);
+            let d = allocate_single(&wl, &env, &calib);
+            let tot = d.estimate.total_rounded();
+            t5.row(vec![
+                wl.label(),
+                d.chosen.name().into(),
+                format!("{:.0}", tot.cloud),
+                format!("{:.0}", tot.edge),
+                format!("{:.0}", tot.device),
+            ]);
+        }
+    }
+    println!("{}", t5.render());
+
+    // Figure 6 (breakdown CSV, the plot's data series)
+    let mut rows = Vec::new();
+    for app in Application::ALL {
+        let wl = Workload::new(app, 2048);
+        let est = estimate_single(&wl, &env, &calib);
+        for l in Layer::ALL {
+            rows.push(vec![
+                wl.label(),
+                l.abbrev().to_string(),
+                format!("{:.0}", est.processing.get(l)),
+                format!("{:.0}", est.transmission.get(l)),
+            ]);
+        }
+    }
+    println!(
+        "Figure 6 series (CSV):\n{}",
+        csv_series(&["workload", "layer", "processing", "transmission"], &rows)
+    );
+
+    // Table VI + Figures 7/8 + Table VII
+    let jobs = paper_jobs();
+    println!("Table VI lower bound (eq. 6): {}", lower_bound(&jobs));
+    let ours = schedule_jobs(&jobs, &SchedulerParams::default());
+    println!("\nFigure 7:\n{}", render_gantt(&ours, 90));
+    let opt = evaluate_strategy(&jobs, Strategy::PerJobOptimal);
+    println!("Figure 8:\n{}", render_gantt(&opt.schedule, 90));
+
+    let mut t7 = TextTable::new(&["Strategy", "Whole", "Last", "Weighted"])
+        .with_title("Table VII");
+    for s in Strategy::ALL {
+        let r = evaluate_strategy(&jobs, s);
+        t7.row(vec![
+            s.label().into(),
+            r.schedule.unweighted_sum().to_string(),
+            r.schedule.last_completion().to_string(),
+            r.schedule.weighted_sum.to_string(),
+        ]);
+    }
+    println!("{}", t7.render());
+}

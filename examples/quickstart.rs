@@ -1,0 +1,49 @@
+//! Quickstart: the whole stack in ~40 lines.
+//!
+//! 1. open the AOT artifacts and run one real LSTM inference through PJRT;
+//! 2. ask Algorithm 1 where that workload should run;
+//! 3. schedule the paper's 10-job ICU trace with Algorithm 2.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use edgeward::prelude::*;
+use edgeward::data::EpisodeGenerator;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. real inference through the PJRT runtime --------------------
+    let runtime = InferenceRuntime::open("artifacts")?;
+    let mut gen = EpisodeGenerator::new(42);
+    let app = Application::Mortality;
+    let episode = gen.episode(app);
+    let out = runtime.infer(app, 1, &episode.features)?;
+    println!(
+        "life-death prediction for patient {}: p(death) = {:.3}  ({:.2?})",
+        episode.patient_id,
+        out.probs[0],
+        out.elapsed
+    );
+
+    // --- 2. Algorithm 1: where should this workload run? ---------------
+    let env = Environment::paper();
+    let calib = Calibration::paper();
+    let wl = Workload::new(app, 512);
+    let decision = allocate_single(&wl, &env, &calib);
+    println!(
+        "algorithm 1: deploy {} on the {} (estimated T = {:.0})",
+        wl.label(),
+        decision.chosen.name(),
+        decision.t_min
+    );
+
+    // --- 3. Algorithm 2: schedule the paper's 10-job trace -------------
+    let jobs = paper_jobs();
+    let schedule = schedule_jobs(&jobs, &SchedulerParams::default());
+    let (c, e, d) = schedule.placement_counts();
+    println!(
+        "algorithm 2: whole response {} / last completion {} \
+         (cloud {c}, edge {e}, device {d})",
+        schedule.unweighted_sum(),
+        schedule.last_completion(),
+    );
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Strategy comparison (Table VII + Figures 7–8), plus a sensitivity sweep
+//! the paper doesn't include: how the advantage of Algorithm 2 changes as
+//! the job count grows.
+//!
+//! Run: `cargo run --release --example strategy_comparison`
+
+use edgeward::allocation::Calibration;
+use edgeward::config::Environment;
+use edgeward::data::Rng;
+use edgeward::report::{render_gantt, TextTable};
+use edgeward::scheduler::{
+    evaluate_strategy, jobs_from_workloads, paper_jobs, schedule_jobs, Job,
+    SchedulerParams, Strategy,
+};
+use edgeward::workload::{Application, Workload, SIZE_UNITS};
+
+fn main() {
+    // --- Table VII on the paper's 10-job trace -------------------------
+    let jobs = paper_jobs();
+    let mut t = TextTable::new(&[
+        "Strategy", "Whole Response", "Last Response", "Weighted",
+    ])
+    .with_title("Table VII — the paper's 10-job ICU trace");
+    for s in Strategy::ALL {
+        let r = evaluate_strategy(&jobs, s);
+        t.row(vec![
+            s.label().into(),
+            r.schedule.unweighted_sum().to_string(),
+            r.schedule.last_completion().to_string(),
+            r.schedule.weighted_sum.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- Figures 7 and 8 ------------------------------------------------
+    let ours = schedule_jobs(&jobs, &SchedulerParams::default());
+    println!("Figure 7 — Algorithm 2 schedule:");
+    println!("{}", render_gantt(&ours, 90));
+    let opt = evaluate_strategy(&jobs, Strategy::PerJobOptimal);
+    println!("Figure 8 — per-job-optimal schedule (note the queueing):");
+    println!("{}", render_gantt(&opt.schedule, 90));
+
+    // --- sensitivity: advantage vs job count (beyond the paper) ---------
+    let env = Environment::paper();
+    let calib = Calibration::paper();
+    let mut sweep = TextTable::new(&[
+        "Jobs", "Ours", "PerJobOpt", "Cloud", "Edge", "Device", "Ours vs best baseline",
+    ])
+    .with_title("Sensitivity: whole response time vs number of jobs (synthetic traces)");
+    let mut rng = Rng::new(99);
+    for n in [5usize, 10, 20, 40] {
+        let jobs = synthetic_jobs(&mut rng, n, &env, &calib);
+        let vals: Vec<u64> = Strategy::ALL
+            .iter()
+            .map(|&s| evaluate_strategy(&jobs, s).schedule.unweighted_sum())
+            .collect();
+        let best_baseline = vals[1..].iter().min().copied().unwrap();
+        sweep.row(vec![
+            n.to_string(),
+            vals[0].to_string(),
+            vals[1].to_string(),
+            vals[2].to_string(),
+            vals[3].to_string(),
+            vals[4].to_string(),
+            format!(
+                "{:+.0}%",
+                (vals[0] as f64 / best_baseline as f64 - 1.0) * 100.0
+            ),
+        ]);
+    }
+    println!("{}", sweep.render());
+}
+
+/// Random trace in the paper's regime: Table IV workloads released over a
+/// horizon proportional to the job count.
+fn synthetic_jobs(
+    rng: &mut Rng,
+    n: usize,
+    env: &Environment,
+    calib: &Calibration,
+) -> Vec<Job> {
+    let mut workloads = Vec::with_capacity(n);
+    let mut release = 0u64;
+    for _ in 0..n {
+        release += 1 + rng.below(5);
+        let app = Application::ALL[rng.below(3) as usize];
+        let units = SIZE_UNITS[rng.below(3) as usize]; // small sizes: online regime
+        workloads.push((Workload::new(app, units), release));
+    }
+    jobs_from_workloads(&workloads, env, calib, 80)
+}

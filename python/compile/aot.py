@@ -1,0 +1,146 @@
+"""AOT compile path: lower every (application, batch) model variant to HLO
+text under artifacts/, plus a manifest.json the rust runtime reads.
+
+Interchange format is HLO *text*, NOT ``lowered.compile().serialize()`` —
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py and its README.
+
+Run once by ``make artifacts``; python is never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as m
+
+# Batch sizes the rust coordinator serves.  One compiled executable per
+# (application, batch) variant; the dynamic batcher pads to the nearest.
+BATCH_SIZES = (1, 8, 32)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is REQUIRED: the baked model weights are
+    # large f32 constants, and the default printer elides them as
+    # `constant({...})`, which the rust-side text parser cannot round-trip.
+    return comp.as_hlo_text(True)
+
+
+def lower_variant(
+    spec: m.AppSpec, batch: int, seed: int = 0, params=None
+) -> str:
+    """Lower one (app, batch) inference function to HLO text.
+
+    ``params`` overrides the seed-initialized weights (the
+    ``--from-checkpoint`` path: bake weights produced by compile.train).
+    """
+    if params is None:
+        fn = m.build_inference_fn(spec, seed)
+    else:
+        def fn(xs, params=params):
+            return (m.forward(params, xs),)
+    xspec = jax.ShapeDtypeStruct(
+        (batch, spec.seq_len, spec.input_dim), jnp.float32
+    )
+    return to_hlo_text(jax.jit(fn).lower(xspec))
+
+
+def build_all(
+    out_dir: str, batches=BATCH_SIZES, seed: int = 0,
+    checkpoint_dir: str | None = None,
+) -> dict:
+    """Emit artifacts/<app>_b<batch>.hlo.txt for every variant + manifest.
+
+    ``checkpoint_dir`` bakes trained weights (compile.train checkpoints,
+    ``<app>.npz``) for any app that has one; others fall back to the
+    seed-initialized weights.
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for spec in m.APPS.values():
+        params = None
+        if checkpoint_dir:
+            ckpt = os.path.join(checkpoint_dir, f"{spec.name}.npz")
+            if os.path.exists(ckpt):
+                from compile import train as _train
+
+                params = _train.load_checkpoint(ckpt)
+                print(f"  baking checkpoint {ckpt}", file=sys.stderr)
+        for batch in batches:
+            fname = f"{spec.name}_b{batch}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            text = lower_variant(spec, batch, seed, params)
+            with open(path, "w") as f:
+                f.write(text)
+            digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+            entries.append(
+                {
+                    "app": spec.name,
+                    "title": spec.title,
+                    "batch": batch,
+                    "seq_len": spec.seq_len,
+                    "input_dim": spec.input_dim,
+                    "output_dim": spec.output_dim,
+                    "hidden": spec.hidden,
+                    "param_count": spec.param_count,
+                    "priority": spec.priority,
+                    "file": fname,
+                    "sha256_16": digest,
+                }
+            )
+            print(f"  wrote {path} ({len(text)} chars)", file=sys.stderr)
+    manifest = {
+        "version": 1,
+        "seed": seed,
+        "dtype": "f32",
+        "entries": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output dir (or a single .hlo.txt path)")
+    ap.add_argument("--batches", default=",".join(map(str, BATCH_SIZES)),
+                    help="comma-separated batch sizes")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--from-checkpoint", default=None,
+                    help="directory of compile.train checkpoints to bake")
+    args = ap.parse_args()
+
+    out = args.out
+    # Makefile compatibility: `--out ../artifacts/model.hlo.txt` means "build
+    # the whole artifact dir, and also alias the quickstart variant there".
+    alias = None
+    if out.endswith(".hlo.txt"):
+        alias = out
+        out = os.path.dirname(out)
+    batches = tuple(int(b) for b in args.batches.split(","))
+    manifest = build_all(out, batches, args.seed, args.from_checkpoint)
+    if alias:
+        src = os.path.join(out, manifest["entries"][0]["file"])
+        with open(src) as f, open(alias, "w") as g:
+            g.write(f.read())
+    print(f"wrote {len(manifest['entries'])} artifacts to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""L1 — Pallas dense (fully-connected) head kernel.
+
+Each ICU model ends in a dense classification head over the final LSTM
+hidden state: 128->1 (short-of-breath), 16->1 (life-death), 256->25
+(phenotype, 25 independent binary tasks).  Sigmoid is fused into the kernel
+so logits never round-trip through HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 8
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, sigmoid: bool):
+    y = (
+        jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+    if sigmoid:
+        y = jax.nn.sigmoid(y)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sigmoid", "block_b"))
+def dense(x, w, b, *, sigmoid: bool = False,
+          block_b: int = DEFAULT_BLOCK_B):
+    """y = x @ w + b (optionally fused sigmoid) via Pallas.
+
+    Args:
+      x: (B, I); w: (I, O); b: (O,).
+    Returns:
+      (B, O).
+    """
+    batch, in_dim = x.shape
+    out_dim = w.shape[-1]
+    assert w.shape == (in_dim, out_dim)
+    assert b.shape == (out_dim,)
+    bb = min(block_b, batch)
+    grid = (pl.cdiv(batch, bb),)
+    b2 = b.reshape(1, out_dim)
+
+    kernel = functools.partial(_dense_kernel, sigmoid=sigmoid)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, in_dim), lambda i: (i, 0)),
+            pl.BlockSpec((in_dim, out_dim), lambda i: (0, 0)),
+            pl.BlockSpec((1, out_dim), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, out_dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, out_dim), x.dtype),
+        interpret=True,
+    )(x, w, b2)

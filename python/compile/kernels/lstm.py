@@ -1,0 +1,134 @@
+"""L1 — Pallas fused LSTM cell kernel.
+
+The paper's three ICU medical workloads (short-of-breath alerts, life-death
+prediction, patient phenotype classification) are all LSTM models over ICU
+vital-sign time series.  The compute hot-spot of the online/inference path
+is the recurrent cell; we implement it as a single fused Pallas kernel:
+
+    gates = x @ Wx + h @ Wh + b            # one (B, I)x(I,4H) + (B,H)x(H,4H)
+    i, f, g, o = split(gates, 4)           # fused activations, no HBM round
+    c' = sigmoid(f) * c + sigmoid(i) * tanh(g)
+    h' = sigmoid(o) * tanh(c')
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the two gate matmuls are
+MXU-shaped (a single systolic pass per operand panel); gate nonlinearities
+and the elementwise cell update stay in VMEM, so the cell does exactly one
+HBM read per operand and one HBM write per output.  The grid blocks over
+the batch dimension so a (block_b, I)+(block_b, H) activation slab plus the
+full (I+H, 4H) weight panel fit VMEM.
+
+Pallas runs with ``interpret=True`` on this image (CPU PJRT cannot execute
+Mosaic custom-calls); correctness is asserted against ``ref.py`` by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch block size.  8 keeps the interpret-mode grid small for tests while
+# still exercising multi-block execution; on real TPU this would be tuned to
+# the MXU tile (see DESIGN.md §Perf).
+DEFAULT_BLOCK_B = 8
+
+
+def _lstm_cell_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref,
+                      h_out_ref, c_out_ref):
+    """Fused LSTM cell over one batch block.
+
+    Refs (VMEM blocks):
+      x_ref:  (bb, I)    input slice at this timestep
+      h_ref:  (bb, H)    previous hidden state
+      c_ref:  (bb, H)    previous cell state
+      wx_ref: (I, 4H)    input->gates weights (full panel)
+      wh_ref: (H, 4H)    hidden->gates weights (full panel)
+      b_ref:  (1, 4H)    gate bias
+      h_out_ref/c_out_ref: (bb, H) outputs
+    """
+    x = x_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+    # Single fused gate pre-activation: two MXU matmuls accumulated in f32.
+    gates = (
+        jnp.dot(x, wx_ref[...], preferred_element_type=jnp.float32)
+        + jnp.dot(h, wh_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+    hidden = h.shape[-1]
+    i_g = jax.nn.sigmoid(gates[:, 0 * hidden:1 * hidden])
+    f_g = jax.nn.sigmoid(gates[:, 1 * hidden:2 * hidden])
+    g_g = jnp.tanh(gates[:, 2 * hidden:3 * hidden])
+    o_g = jax.nn.sigmoid(gates[:, 3 * hidden:4 * hidden])
+    c_new = f_g * c.astype(jnp.float32) + i_g * g_g
+    h_new = o_g * jnp.tanh(c_new)
+    h_out_ref[...] = h_new.astype(h_out_ref.dtype)
+    c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def lstm_cell(x, h, c, wx, wh, b, *, block_b: int = DEFAULT_BLOCK_B):
+    """One LSTM step via the fused Pallas kernel.
+
+    Args:
+      x:  (B, I) inputs.
+      h:  (B, H) previous hidden.
+      c:  (B, H) previous cell.
+      wx: (I, 4H); wh: (H, 4H); b: (4H,).
+      block_b: batch block size (grid = ceil(B / block_b)).
+
+    Returns:
+      (h_new, c_new), each (B, H).
+    """
+    batch, in_dim = x.shape
+    hidden = h.shape[-1]
+    assert wx.shape == (in_dim, 4 * hidden), (wx.shape, in_dim, hidden)
+    assert wh.shape == (hidden, 4 * hidden)
+    assert b.shape == (4 * hidden,)
+    bb = min(block_b, batch)
+    grid = (pl.cdiv(batch, bb),)
+    b2 = b.reshape(1, 4 * hidden)
+
+    return pl.pallas_call(
+        _lstm_cell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, in_dim), lambda i: (i, 0)),       # x
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),       # h
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),       # c
+            pl.BlockSpec((in_dim, 4 * hidden), lambda i: (0, 0)),   # wx
+            pl.BlockSpec((hidden, 4 * hidden), lambda i: (0, 0)),   # wh
+            pl.BlockSpec((1, 4 * hidden), lambda i: (0, 0)),        # b
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((bb, hidden), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, hidden), x.dtype),
+            jax.ShapeDtypeStruct((batch, hidden), x.dtype),
+        ],
+        interpret=True,  # CPU PJRT: Mosaic custom-calls are not runnable.
+    )(x, h, c, wx, wh, b2)
+
+
+def lstm_sequence(xs, wx, wh, b, *, block_b: int = DEFAULT_BLOCK_B):
+    """Run the Pallas cell over a full (B, T, I) sequence with lax.scan.
+
+    Returns the final hidden state (B, H) — the paper's models feed only the
+    last hidden state to the classification head.
+    """
+    batch, _, _ = xs.shape
+    hidden = wh.shape[0]
+    h0 = jnp.zeros((batch, hidden), xs.dtype)
+    c0 = jnp.zeros((batch, hidden), xs.dtype)
+
+    def step(carry, x_t):
+        h, c = carry
+        h2, c2 = lstm_cell(x_t, h, c, wx, wh, b, block_b=block_b)
+        return (h2, c2), None
+
+    (h_fin, _), _ = jax.lax.scan(step, (h0, c0), jnp.swapaxes(xs, 0, 1))
+    return h_fin

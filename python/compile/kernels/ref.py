@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the Pallas kernels.
+
+This is the correctness reference: no Pallas, no custom tiling — plain
+jax.numpy the way a textbook would write an LSTM.  pytest asserts the
+Pallas kernels match these functions to tight tolerance across a hypothesis
+sweep of shapes and dtypes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    """Reference LSTM cell. Gate order: i, f, g, o (matches kernels/lstm.py)."""
+    gates = (
+        jnp.dot(x, wx, preferred_element_type=jnp.float32)
+        + jnp.dot(h, wh, preferred_element_type=jnp.float32)
+        + b
+    )
+    hidden = h.shape[-1]
+    i_g = jax.nn.sigmoid(gates[:, 0 * hidden:1 * hidden])
+    f_g = jax.nn.sigmoid(gates[:, 1 * hidden:2 * hidden])
+    g_g = jnp.tanh(gates[:, 2 * hidden:3 * hidden])
+    o_g = jax.nn.sigmoid(gates[:, 3 * hidden:4 * hidden])
+    c_new = f_g * c.astype(jnp.float32) + i_g * g_g
+    h_new = o_g * jnp.tanh(c_new)
+    return h_new.astype(x.dtype), c_new.astype(x.dtype)
+
+
+def lstm_sequence_ref(xs, wx, wh, b):
+    """Reference scan over (B, T, I); returns final hidden (B, H)."""
+    batch = xs.shape[0]
+    hidden = wh.shape[0]
+    h = jnp.zeros((batch, hidden), xs.dtype)
+    c = jnp.zeros((batch, hidden), xs.dtype)
+
+    def step(carry, x_t):
+        h, c = carry
+        h2, c2 = lstm_cell_ref(x_t, h, c, wx, wh, b)
+        return (h2, c2), None
+
+    (h_fin, _), _ = jax.lax.scan(step, (h, c), jnp.swapaxes(xs, 0, 1))
+    return h_fin
+
+
+def dense_ref(x, w, b, *, sigmoid: bool = False):
+    """Reference dense head."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    if sigmoid:
+        y = jax.nn.sigmoid(y)
+    return y.astype(x.dtype)

@@ -1,0 +1,169 @@
+"""Offline training path (the cloud-side half of Figure 2's workflow).
+
+The paper's workflow trains the three ICU models offline on the cloud
+cluster and ships the pre-trained weights to the online layer; every
+evaluated quantity is weight-value independent, so `aot.py` bakes
+randomly-initialized weights by default.  This module makes the offline
+half real: a full JAX training loop (BPTT through the LSTM + Adam) on
+synthetic labeled episodes, producing a seed-stable checkpoint whose
+weights `aot.py --from-checkpoint` can bake instead.
+
+The forward pass reuses the pure-jnp oracle (`kernels/ref.py`): the Pallas
+kernels target the inference hot path, and differentiating through
+``pallas_call`` would need a custom VJP for zero benefit here — training
+is the offline path, never latency-sensitive (DESIGN.md §3).
+
+Run: ``cd python && python -m compile.train --app mortality --steps 200``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as m
+from compile.kernels import ref as kref
+
+
+def task_probe(spec: m.AppSpec):
+    """The fixed (per-application) linear probe that defines the synthetic
+    task's labels.  Must be constant across steps or the task is
+    unlearnable."""
+    key = jax.random.PRNGKey(hash(spec.name) % (2**31) + 77)
+    # probe only the final timestep: recurrent models fit it quickly, so
+    # the smoke-training loop shows a clear loss slope in tens of steps
+    return jax.random.normal(
+        key, (spec.input_dim, spec.output_dim), jnp.float32
+    ) / jnp.sqrt(spec.input_dim)
+
+
+def synth_batch(key, spec: m.AppSpec, batch: int, probe=None):
+    """Synthetic labeled episodes: vitals windows whose label is the sign
+    of a fixed random linear probe of the window."""
+    if probe is None:
+        probe = task_probe(spec)
+    xs = jax.random.normal(
+        key, (batch, spec.seq_len, spec.input_dim), jnp.float32
+    )
+    logits = xs[:, -1, :] @ probe
+    ys = (logits > 0).astype(jnp.float32)
+    return xs, ys
+
+
+def forward_ref(params, xs):
+    """Training forward pass via the jnp oracle (logits, pre-sigmoid)."""
+    h = kref.lstm_sequence_ref(xs, params["wx"], params["wh"], params["b"])
+    return jnp.dot(h, params["w_head"]) + params["b_head"]
+
+
+def bce_loss(params, xs, ys):
+    """Sigmoid binary cross-entropy (numerically stable)."""
+    logits = forward_ref(params, xs)
+    # log(1+exp(-|z|)) + max(z,0) - z*y
+    loss = jnp.maximum(logits, 0.0) - logits * ys + jnp.log1p(
+        jnp.exp(-jnp.abs(logits))
+    )
+    return jnp.mean(loss)
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32), "m0": zeros}
+
+
+def adam_step(params, opt, grads, lr=3e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = opt["t"] + 1
+    m_ = jax.tree_util.tree_map(
+        lambda a, g: b1 * a + (1 - b1) * g, opt["m"], grads)
+    v_ = jax.tree_util.tree_map(
+        lambda a, g: b2 * a + (1 - b2) * g * g, opt["v"], grads)
+    tf = t.astype(jnp.float32)
+    def upd(p, mm, vv):
+        mhat = mm / (1 - b1 ** tf)
+        vhat = vv / (1 - b2 ** tf)
+        return p - lr * mhat / (jnp.sqrt(vhat) + eps)
+    params = jax.tree_util.tree_map(upd, params, m_, v_)
+    return params, {"m": m_, "v": v_, "t": t, "m0": opt["m0"]}
+
+
+def train(spec: m.AppSpec, steps: int = 200, batch: int = 16,
+          seed: int = 0, log_every: int = 20, quiet: bool = False):
+    """Train one model; returns (params, loss_history)."""
+    params = m.init_params(spec, seed)
+    opt = adam_init(params)
+    key = jax.random.PRNGKey(seed + 1)
+    probe = task_probe(spec)
+
+    @jax.jit
+    def step(params, opt, key):
+        key, sub = jax.random.split(key)
+        xs, ys = synth_batch(sub, spec, batch, probe)
+        loss, grads = jax.value_and_grad(bce_loss)(params, xs, ys)
+        params, opt = adam_step(params, opt, grads)
+        return params, opt, key, loss
+
+    history = []
+    for i in range(steps):
+        params, opt, key, loss = step(params, opt, key)
+        history.append(float(loss))
+        if not quiet and (i % log_every == 0 or i == steps - 1):
+            print(f"  step {i:4d}  loss {float(loss):.4f}", file=sys.stderr)
+    return params, history
+
+
+def save_checkpoint(path: str, spec: m.AppSpec, params, history):
+    """Persist weights (npz) + a training-log sidecar (json)."""
+    import numpy as np
+
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+    with open(path + ".json", "w") as f:
+        json.dump(
+            {
+                "app": spec.name,
+                "steps": len(history),
+                "loss_first": history[0],
+                "loss_last": history[-1],
+                "param_count": spec.param_count,
+            },
+            f,
+            indent=2,
+        )
+
+
+def load_checkpoint(path: str):
+    import numpy as np
+
+    data = np.load(path)
+    return {k: jnp.asarray(data[k]) for k in data.files}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--app", choices=list(m.APPS), default="mortality")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="../artifacts/checkpoints")
+    args = ap.parse_args()
+
+    spec = m.APPS[args.app]
+    print(f"training {spec.title} ({spec.param_count} params)",
+          file=sys.stderr)
+    params, history = train(spec, args.steps, args.batch, args.seed)
+    path = os.path.join(args.out, f"{spec.name}.npz")
+    save_checkpoint(path, spec, params, history)
+    print(
+        f"loss {history[0]:.4f} -> {history[-1]:.4f}; wrote {path}",
+        file=sys.stderr,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""AOT path: lowering produces loadable HLO text + a consistent manifest."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as m
+
+
+class TestLowering:
+    @pytest.mark.parametrize("name", list(m.APPS))
+    def test_lower_produces_hlo_text(self, name):
+        spec = m.APPS[name]
+        text = aot.lower_variant(spec, batch=1)
+        assert "ENTRY" in text
+        assert "HloModule" in text
+        # Weights are baked as constants: the ENTRY computation takes exactly
+        # one parameter (the input window).  Sub-computations (scan body,
+        # select regions) have their own parameters — only inspect ENTRY.
+        entry = text[text.index("ENTRY"):]
+        entry = entry[: entry.index("\n}")]
+        assert "parameter(0)" in entry
+        assert "parameter(1)" not in entry
+
+    @pytest.mark.parametrize("name", list(m.APPS))
+    def test_no_elided_constants(self, name):
+        """Weights are baked as constants; the default HLO printer elides
+        large literals as `constant({...})`, which the rust text parser
+        cannot round-trip.  Regression guard for print_large_constants."""
+        text = aot.lower_variant(m.APPS[name], batch=1)
+        assert "constant({...})" not in text
+
+    def test_lowered_shapes_in_text(self):
+        spec = m.APPS["mortality"]
+        text = aot.lower_variant(spec, batch=2)
+        # input (2, 48, 101) f32 appears in the entry signature
+        assert "f32[2,48,101]" in text.replace(" ", "")
+
+
+class TestBuildAll:
+    def test_manifest(self, tmp_path):
+        out = str(tmp_path / "artifacts")
+        manifest = aot.build_all(out, batches=(1,))
+        assert len(manifest["entries"]) == len(m.APPS)
+        with open(os.path.join(out, "manifest.json")) as f:
+            on_disk = json.load(f)
+        assert on_disk == manifest
+        for e in manifest["entries"]:
+            path = os.path.join(out, e["file"])
+            assert os.path.exists(path)
+            assert e["param_count"] == m.APPS[e["app"]].param_count
+            assert e["batch"] == 1
+            assert e["seq_len"] == m.SEQ_LEN
+
+    def test_batch_variants_differ(self, tmp_path):
+        spec = m.APPS["mortality"]
+        t1 = aot.lower_variant(spec, batch=1)
+        t8 = aot.lower_variant(spec, batch=8)
+        assert "f32[1,48,101]" in t1.replace(" ", "")
+        assert "f32[8,48,101]" in t8.replace(" ", "")

@@ -1,0 +1,53 @@
+"""Paper §III-C complexity formulas + published model counts."""
+
+import pytest
+
+from compile import flops
+
+
+class TestPaperFormulas:
+    def test_fc_formula(self):
+        # paper: FLOPs = (2I - 1) O
+        assert flops.fc_flops(10, 5) == 19 * 5
+        assert flops.fc_flops(1, 1) == 1
+
+    def test_conv_formula(self):
+        # paper: FLOPs = 2HW(C_in K^2 + 1) C_out
+        assert flops.conv_flops(4, 4, 3, 3, 8) == 2 * 16 * (27 + 1) * 8
+
+    def test_lstm_param_count(self):
+        # 4 * ((I + H) H + H)
+        assert flops.lstm_param_count(76, 128) == 4 * ((76 + 128) * 128 + 128)
+
+    def test_dense_param_count(self):
+        assert flops.dense_param_count(128, 1) == 129
+        assert flops.dense_param_count(256, 25) == 256 * 25 + 25
+
+
+class TestPaperModelCounts:
+    """The exact Table IV numbers from the reverse-engineered architectures
+    (DESIGN.md §4)."""
+
+    @pytest.mark.parametrize(
+        "i,h,o,expect",
+        [
+            (76, 128, 1, 105_089),    # short-of-breath alerts
+            (101, 16, 1, 7_569),      # life-death prediction
+            (76, 256, 25, 347_417),   # phenotype classification
+        ],
+    )
+    def test_counts(self, i, h, o, expect):
+        assert flops.model_paper_flops(i, h, o) == expect
+
+    def test_true_macs_exceed_param_count(self):
+        """Real per-inference FLOPs (seq 48) dwarf the paper's param-count
+        proxy — the ratio matters for §Perf roofline, not for Algorithm 1."""
+        for i, h, o in [(76, 128, 1), (101, 16, 1), (76, 256, 25)]:
+            true = flops.model_true_mac_flops(i, h, o, seq_len=48, batch=1)
+            proxy = flops.model_paper_flops(i, h, o)
+            assert true > 20 * proxy
+
+    def test_true_macs_scale_with_batch(self):
+        a = flops.model_true_mac_flops(76, 128, 1, 48, 1)
+        b = flops.model_true_mac_flops(76, 128, 1, 48, 8)
+        assert b == 8 * a

@@ -1,0 +1,180 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the CORE numeric signal for the whole stack — the AOT artifacts the
+rust coordinator serves lower through exactly these kernels.  hypothesis
+sweeps shapes and dtypes; fixed cases pin the paper's three architectures.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense as kdense
+from compile.kernels import lstm as klstm
+from compile.kernels import ref as kref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _make_cell_inputs(batch, in_dim, hidden, dtype, seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 6)
+    x = _rand(keys[0], (batch, in_dim), dtype)
+    h = _rand(keys[1], (batch, hidden), dtype, 0.5)
+    c = _rand(keys[2], (batch, hidden), dtype, 0.5)
+    wx = _rand(keys[3], (in_dim, 4 * hidden), dtype, 1.0 / np.sqrt(in_dim))
+    wh = _rand(keys[4], (hidden, 4 * hidden), dtype, 1.0 / np.sqrt(hidden))
+    b = _rand(keys[5], (4 * hidden,), dtype, 0.1)
+    return x, h, c, wx, wh, b
+
+
+TOL = {jnp.float32: dict(rtol=1e-5, atol=1e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+class TestLstmCell:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        batch=st.integers(1, 17),
+        in_dim=st.integers(1, 96),
+        hidden=st.integers(1, 64),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref_f32(self, batch, in_dim, hidden, seed):
+        args = _make_cell_inputs(batch, in_dim, hidden, jnp.float32, seed)
+        h_k, c_k = klstm.lstm_cell(*args)
+        h_r, c_r = kref.lstm_cell_ref(*args)
+        np.testing.assert_allclose(h_k, h_r, **TOL[jnp.float32])
+        np.testing.assert_allclose(c_k, c_r, **TOL[jnp.float32])
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        args = _make_cell_inputs(8, 16, 16, dtype)
+        h_k, c_k = klstm.lstm_cell(*args)
+        h_r, c_r = kref.lstm_cell_ref(*args)
+        assert h_k.dtype == dtype and c_k.dtype == dtype
+        np.testing.assert_allclose(
+            np.asarray(h_k, np.float32), np.asarray(h_r, np.float32),
+            **TOL[dtype])
+        np.testing.assert_allclose(
+            np.asarray(c_k, np.float32), np.asarray(c_r, np.float32),
+            **TOL[dtype])
+
+    @pytest.mark.parametrize("batch,block_b", [(1, 8), (7, 8), (8, 8),
+                                               (9, 8), (16, 4), (5, 1)])
+    def test_batch_blocking(self, batch, block_b):
+        """Grid over batch blocks must not change the numerics."""
+        args = _make_cell_inputs(batch, 12, 20, jnp.float32)
+        h_k, c_k = klstm.lstm_cell(*args, block_b=block_b)
+        h_r, c_r = kref.lstm_cell_ref(*args)
+        np.testing.assert_allclose(h_k, h_r, **TOL[jnp.float32])
+        np.testing.assert_allclose(c_k, c_r, **TOL[jnp.float32])
+
+    @pytest.mark.parametrize(
+        "in_dim,hidden",
+        [(76, 128), (101, 16), (76, 256)],  # the paper's three models
+    )
+    def test_paper_architectures(self, in_dim, hidden):
+        args = _make_cell_inputs(4, in_dim, hidden, jnp.float32)
+        h_k, c_k = klstm.lstm_cell(*args)
+        h_r, c_r = kref.lstm_cell_ref(*args)
+        np.testing.assert_allclose(h_k, h_r, **TOL[jnp.float32])
+        np.testing.assert_allclose(c_k, c_r, **TOL[jnp.float32])
+
+    def test_gate_saturation_stable(self):
+        """Large pre-activations must saturate, not NaN."""
+        x, h, c, wx, wh, b = _make_cell_inputs(4, 8, 8, jnp.float32)
+        wx = wx * 100.0
+        h_k, c_k = klstm.lstm_cell(x, h, c, wx, wh, b)
+        assert np.isfinite(np.asarray(h_k)).all()
+        assert np.isfinite(np.asarray(c_k)).all()
+
+    def test_zero_input_zero_state(self):
+        """All-zero input+state: gates = sigmoid(0); exact closed form."""
+        in_dim, hidden = 8, 8
+        x = jnp.zeros((2, in_dim))
+        h = jnp.zeros((2, hidden))
+        c = jnp.zeros((2, hidden))
+        wx = jnp.zeros((in_dim, 4 * hidden))
+        wh = jnp.zeros((hidden, 4 * hidden))
+        b = jnp.zeros((4 * hidden,))
+        h_k, c_k = klstm.lstm_cell(x, h, c, wx, wh, b)
+        # i=f=o=0.5, g=0 -> c'=0, h'=0
+        np.testing.assert_allclose(np.asarray(c_k), 0.0, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(h_k), 0.0, atol=1e-7)
+
+
+class TestLstmSequence:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        batch=st.integers(1, 9),
+        seq=st.integers(1, 12),
+        in_dim=st.integers(1, 32),
+        hidden=st.integers(1, 32),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, batch, seq, in_dim, hidden, seed):
+        keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+        xs = _rand(keys[0], (batch, seq, in_dim), jnp.float32)
+        wx = _rand(keys[1], (in_dim, 4 * hidden), jnp.float32,
+                   1.0 / np.sqrt(in_dim))
+        wh = _rand(keys[2], (hidden, 4 * hidden), jnp.float32,
+                   1.0 / np.sqrt(hidden))
+        b = _rand(keys[3], (4 * hidden,), jnp.float32, 0.1)
+        h_k = klstm.lstm_sequence(xs, wx, wh, b)
+        h_r = kref.lstm_sequence_ref(xs, wx, wh, b)
+        np.testing.assert_allclose(h_k, h_r, rtol=1e-4, atol=1e-4)
+
+    def test_single_step_equals_cell(self):
+        """T=1 sequence must equal one cell step from zero state."""
+        x, _, _, wx, wh, b = _make_cell_inputs(4, 10, 12, jnp.float32)
+        xs = x[:, None, :]
+        h_seq = klstm.lstm_sequence(xs, wx, wh, b)
+        h0 = jnp.zeros((4, 12))
+        c0 = jnp.zeros((4, 12))
+        h_cell, _ = klstm.lstm_cell(x, h0, c0, wx, wh, b)
+        np.testing.assert_allclose(h_seq, h_cell, rtol=1e-6, atol=1e-6)
+
+
+class TestDense:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        batch=st.integers(1, 33),
+        in_dim=st.integers(1, 96),
+        out_dim=st.integers(1, 40),
+        sigmoid=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, batch, in_dim, out_dim, sigmoid, seed):
+        keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = _rand(keys[0], (batch, in_dim), jnp.float32)
+        w = _rand(keys[1], (in_dim, out_dim), jnp.float32,
+                  1.0 / np.sqrt(in_dim))
+        b = _rand(keys[2], (out_dim,), jnp.float32, 0.1)
+        y_k = kdense.dense(x, w, b, sigmoid=sigmoid)
+        y_r = kref.dense_ref(x, w, b, sigmoid=sigmoid)
+        np.testing.assert_allclose(y_k, y_r, rtol=1e-5, atol=1e-5)
+
+    def test_sigmoid_range(self):
+        keys = jax.random.split(jax.random.PRNGKey(0), 3)
+        x = _rand(keys[0], (16, 32), jnp.float32, 10.0)
+        w = _rand(keys[1], (32, 25), jnp.float32)
+        b = _rand(keys[2], (25,), jnp.float32)
+        y = np.asarray(kdense.dense(x, w, b, sigmoid=True))
+        assert (y >= 0.0).all() and (y <= 1.0).all()
+
+    @pytest.mark.parametrize("in_dim,out_dim",
+                             [(128, 1), (16, 1), (256, 25)])  # paper heads
+    def test_paper_heads(self, in_dim, out_dim):
+        keys = jax.random.split(jax.random.PRNGKey(1), 3)
+        x = _rand(keys[0], (8, in_dim), jnp.float32)
+        w = _rand(keys[1], (in_dim, out_dim), jnp.float32)
+        b = _rand(keys[2], (out_dim,), jnp.float32)
+        y_k = kdense.dense(x, w, b, sigmoid=True)
+        y_r = kref.dense_ref(x, w, b, sigmoid=True)
+        np.testing.assert_allclose(y_k, y_r, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,96 @@
+"""L2 correctness: the three ICU models — shapes, parameter counts,
+determinism, pallas-vs-ref equivalence for the full forward pass."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as m
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(42)
+
+
+class TestSpecs:
+    def test_three_apps(self):
+        assert set(m.APPS) == {"breath", "mortality", "phenotype"}
+
+    @pytest.mark.parametrize("name,count", m.PAPER_FLOPS.items())
+    def test_param_counts_match_paper(self, name, count):
+        """Table IV 'Model FLOPs' column, exactly."""
+        assert m.APPS[name].param_count == count
+
+    def test_priorities_match_paper(self):
+        # §VII-B: breath w=2, mortality w=2, phenotype w=1
+        assert m.APPS["breath"].priority == 2
+        assert m.APPS["mortality"].priority == 2
+        assert m.APPS["phenotype"].priority == 1
+
+    @pytest.mark.parametrize("name", list(m.APPS))
+    def test_init_params_counts(self, name):
+        spec = m.APPS[name]
+        params = m.init_params(spec)
+        assert m.param_count(params) == spec.param_count
+
+
+class TestForward:
+    @pytest.mark.parametrize("name", list(m.APPS))
+    @pytest.mark.parametrize("batch", [1, 3])
+    def test_output_shape_and_range(self, name, batch, rng):
+        spec = m.APPS[name]
+        params = m.init_params(spec)
+        xs = jax.random.normal(
+            rng, (batch, spec.seq_len, spec.input_dim), jnp.float32)
+        probs = np.asarray(m.forward(params, xs))
+        assert probs.shape == (batch, spec.output_dim)
+        assert np.isfinite(probs).all()
+        assert (probs >= 0.0).all() and (probs <= 1.0).all()
+
+    @pytest.mark.parametrize("name", list(m.APPS))
+    def test_pallas_matches_ref_forward(self, name, rng):
+        """Full model: pallas path == pure-jnp oracle path."""
+        spec = m.APPS[name]
+        params = m.init_params(spec)
+        xs = jax.random.normal(
+            rng, (2, spec.seq_len, spec.input_dim), jnp.float32)
+        p_pallas = m.forward(params, xs, use_pallas=True)
+        p_ref = m.forward(params, xs, use_pallas=False)
+        np.testing.assert_allclose(p_pallas, p_ref, rtol=1e-4, atol=1e-4)
+
+    def test_deterministic_init(self):
+        a = m.init_params(m.APPS["breath"], seed=0)
+        b = m.init_params(m.APPS["breath"], seed=0)
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+    def test_seed_changes_params(self):
+        a = m.init_params(m.APPS["breath"], seed=0)
+        b = m.init_params(m.APPS["breath"], seed=1)
+        assert not np.array_equal(np.asarray(a["wx"]), np.asarray(b["wx"]))
+
+    def test_apps_have_distinct_params(self):
+        a = m.init_params(m.APPS["breath"])
+        b = m.init_params(m.APPS["phenotype"])
+        assert np.asarray(a["wx"]).shape != np.asarray(b["wx"]).shape
+
+    def test_inference_fn_tuple_output(self, rng):
+        spec = m.APPS["mortality"]
+        fn = m.build_inference_fn(spec)
+        xs = jax.random.normal(
+            rng, (1, spec.seq_len, spec.input_dim), jnp.float32)
+        out = fn(xs)
+        assert isinstance(out, tuple) and len(out) == 1
+        assert out[0].shape == (1, spec.output_dim)
+
+    def test_batch_consistency(self, rng):
+        """Row i of a batched call == the same row run alone."""
+        spec = m.APPS["mortality"]
+        params = m.init_params(spec)
+        xs = jax.random.normal(
+            rng, (4, spec.seq_len, spec.input_dim), jnp.float32)
+        full = np.asarray(m.forward(params, xs))
+        solo = np.asarray(m.forward(params, xs[2:3]))
+        np.testing.assert_allclose(full[2:3], solo, rtol=1e-5, atol=1e-5)

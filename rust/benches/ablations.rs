@@ -1,0 +1,132 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **Calibration** — per-layer λ₁ (ours, Table V-exact) vs the paper's
+//!    literal single-λ₁ formula: how many of the 18 Table V deployment
+//!    decisions change?
+//! 2. **Optimality gap** — Algorithm 2 vs branch-and-bound exact optimum
+//!    vs the non-clairvoyant online scheduler, on the paper trace and
+//!    random traces.
+//! 3. **Multi-edge scaling** (beyond the paper): whole response time as
+//!    the room gains edge servers.
+//! 4. **Tabu parameters** — objective as a function of max_iters/tenure.
+
+use edgeward::allocation::{allocate_single, Calibration};
+use edgeward::benchkit::Bench;
+use edgeward::config::Environment;
+use edgeward::data::Rng;
+use edgeward::scheduler::{
+    paper_jobs, schedule_exact, schedule_jobs, schedule_online,
+    schedule_pool, Job, MachinePool, SchedulerParams,
+};
+use edgeward::workload::workload_grid;
+
+fn main() {
+    let env = Environment::paper();
+
+    // ---- 1. calibration ablation ------------------------------------
+    let fitted = Calibration::paper();
+    let uniform = Calibration::uniform(1.0, 1000.0);
+    let mut changed = 0;
+    for wl in workload_grid() {
+        let a = allocate_single(&wl, &env, &fitted).chosen;
+        let b = allocate_single(&wl, &env, &uniform).chosen;
+        if a != b {
+            changed += 1;
+        }
+    }
+    println!(
+        "calibration ablation: single-λ changes {changed}/18 Table V decisions\n"
+    );
+
+    // ---- 2. optimality gap -------------------------------------------
+    let jobs = paper_jobs();
+    let exact = schedule_exact(&jobs);
+    let ours = schedule_jobs(&jobs, &SchedulerParams::default());
+    let online = schedule_online(&jobs);
+    println!(
+        "paper trace weighted sums: exact {} | algorithm2 {} ({:+.1}%) | online {} ({:+.1}%)",
+        exact.weighted_sum,
+        ours.weighted_sum,
+        (ours.weighted_sum as f64 / exact.weighted_sum as f64 - 1.0) * 100.0,
+        online.weighted_sum,
+        (online.weighted_sum as f64 / exact.weighted_sum as f64 - 1.0) * 100.0,
+    );
+    // random traces
+    let mut rng = Rng::new(31337);
+    let mut gaps = Vec::new();
+    for _ in 0..20 {
+        let n = 4 + rng.below(6) as usize;
+        let mut release = 0;
+        let jobs: Vec<Job> = (0..n)
+            .map(|_| {
+                release += rng.below(5);
+                Job {
+                    release,
+                    weight: 1 + rng.below(3) as u32,
+                    proc_cloud: 1 + rng.below(10),
+                    trans_cloud: 1 + rng.below(60),
+                    proc_edge: 1 + rng.below(15),
+                    trans_edge: 1 + rng.below(15),
+                    proc_device: 1 + rng.below(70),
+                }
+            })
+            .collect();
+        let e = schedule_exact(&jobs).weighted_sum.max(1);
+        let h = schedule_jobs(&jobs, &SchedulerParams::default()).weighted_sum;
+        gaps.push(h as f64 / e as f64 - 1.0);
+    }
+    gaps.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "random traces (n=4..9): algorithm2 gap median {:.1}% max {:.1}%\n",
+        gaps[gaps.len() / 2] * 100.0,
+        gaps.last().unwrap() * 100.0
+    );
+
+    // ---- 3. multi-edge scaling ----------------------------------------
+    println!("multi-edge scaling (paper trace, weighted sum):");
+    for edges in 1..=4 {
+        let pool = MachinePool { clouds: 1, edges };
+        let s = schedule_pool(&jobs, &pool, &SchedulerParams::default());
+        println!(
+            "  edges={edges}: weighted {} whole {} last {}",
+            s.weighted_sum,
+            s.unweighted_sum(),
+            s.last_completion()
+        );
+    }
+    println!();
+
+    // ---- 4. tabu parameter sweep ---------------------------------------
+    println!("tabu parameter sweep (paper trace):");
+    for (iters, tenure) in [(10, 3), (50, 3), (200, 5), (1000, 8)] {
+        let params = SchedulerParams {
+            max_iters: iters,
+            tenure,
+            patience: 30,
+        };
+        let s = schedule_jobs(&jobs, &params);
+        println!(
+            "  max_iters={iters:4} tenure={tenure}: weighted {}",
+            s.weighted_sum
+        );
+    }
+    println!();
+
+    // ---- timing ----------------------------------------------------------
+    let mut b = Bench::new("ablations");
+    b.bench("exact_10_jobs", || {
+        std::hint::black_box(schedule_exact(&jobs));
+    });
+    b.bench("online_10_jobs", || {
+        std::hint::black_box(schedule_online(&jobs));
+    });
+    let pool = MachinePool { clouds: 1, edges: 3 };
+    b.bench("pool_scheduler_3_edges", || {
+        std::hint::black_box(schedule_pool(
+            &jobs,
+            &pool,
+            &SchedulerParams::default(),
+        ));
+    });
+    b.finish();
+}

@@ -1,0 +1,53 @@
+//! Bench: Table V regeneration — Algorithm 1 over the 18-workload grid.
+//!
+//! Measures the allocator's hot path (the per-request routing cost on the
+//! serving path) and prints the regenerated table rows.
+
+use edgeward::allocation::{allocate_single, Calibration};
+use edgeward::benchkit::Bench;
+use edgeward::config::Environment;
+use edgeward::workload::{workload_grid, Application, Workload};
+
+fn main() {
+    let env = Environment::paper();
+    let calib = Calibration::paper();
+
+    // regenerate Table V rows first (correctness narration)
+    println!("Table V (regenerated):");
+    for wl in workload_grid() {
+        let d = allocate_single(&wl, &env, &calib);
+        let t = d.estimate.total_rounded();
+        println!(
+            "  {:7} -> {:12} [{:>7.0} {:>7.0} {:>7.0}]",
+            wl.label(),
+            d.chosen.name(),
+            t.cloud,
+            t.edge,
+            t.device
+        );
+    }
+    println!();
+
+    let mut b = Bench::new("alloc_single");
+    // single decision (the per-request router cost)
+    let wl = Workload::new(Application::Breath, 512);
+    b.bench("one_decision", || {
+        std::hint::black_box(allocate_single(
+            std::hint::black_box(&wl),
+            &env,
+            &calib,
+        ));
+    });
+    // the full 18-workload grid (Table V regeneration)
+    let grid = workload_grid();
+    b.bench("table_v_grid", || {
+        for wl in &grid {
+            std::hint::black_box(allocate_single(wl, &env, &calib));
+        }
+    });
+    // calibration fit (done once at startup in the serving path)
+    b.bench("calibration_fit", || {
+        std::hint::black_box(Calibration::paper());
+    });
+    b.finish();
+}

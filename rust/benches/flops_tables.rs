@@ -1,0 +1,54 @@
+//! Bench: Tables III and IV — device FLOPS and workload characteristics
+//! regeneration, plus the model-complexity formula costs.
+
+use edgeward::benchkit::Bench;
+use edgeward::config::Environment;
+use edgeward::device::Layer;
+use edgeward::workload::{
+    model_paper_flops, table_iv, true_mac_flops, workload_grid,
+};
+
+fn main() {
+    let env = Environment::paper();
+
+    println!("Table III (regenerated):");
+    for l in Layer::ALL {
+        let s = env.spec(l);
+        println!(
+            "  {:12} {:2} cores × {:.1} GHz × {:.0} flops/cycle = {:7.1} GFLOPS",
+            l.name(),
+            s.cores,
+            s.freq_ghz,
+            s.flops_per_cycle,
+            s.gflops()
+        );
+    }
+
+    println!("\nTable IV (regenerated): {} workloads", table_iv().len());
+    for r in table_iv() {
+        println!(
+            "  {:7} {:34} size {:4} ({:>6.0} KB)  {:>7} FLOPs",
+            r.label, r.title, r.size_units, r.data_kb, r.model_flops
+        );
+    }
+    println!();
+
+    let mut b = Bench::new("flops_tables");
+    b.bench("model_paper_flops", || {
+        std::hint::black_box(model_paper_flops(
+            std::hint::black_box(76),
+            std::hint::black_box(256),
+            std::hint::black_box(25),
+        ));
+    });
+    b.bench("true_mac_flops", || {
+        std::hint::black_box(true_mac_flops(76, 256, 25, 48, 32));
+    });
+    b.bench("table_iv_regen", || {
+        std::hint::black_box(table_iv());
+    });
+    b.bench("workload_grid", || {
+        std::hint::black_box(workload_grid());
+    });
+    b.finish();
+}

@@ -1,0 +1,60 @@
+//! Bench: Figure 5 — measured per-layer response time of the real
+//! inference path (PJRT execution + layer emulation + network model).
+//!
+//! Also measures the raw runtime costs that bound the serving hot path:
+//! per-batch execute latency of every (app, batch) artifact variant.
+
+use edgeward::benchkit::Bench;
+use edgeward::config::Environment;
+use edgeward::data::EpisodeGenerator;
+use edgeward::device::Layer;
+use edgeward::runtime::InferenceRuntime;
+use edgeward::workload::{Application, Workload};
+
+fn main() -> anyhow::Result<()> {
+    let env = Environment::paper();
+    let runtime = InferenceRuntime::open("artifacts")?;
+    runtime.warmup()?;
+    let mut gen = EpisodeGenerator::new(7);
+
+    let mut b = Bench::new("infer_layers");
+
+    // raw PJRT execute per (app, batch) variant
+    for app in Application::ALL {
+        for &batch in &runtime.batch_sizes(app) {
+            let input = gen.batch(app, batch);
+            b.bench(&format!("pjrt/{}/b{batch}", app.key()), || {
+                std::hint::black_box(
+                    runtime.infer(app, batch, &input).expect("infer"),
+                );
+            });
+        }
+    }
+
+    // Figure 5 cells: emulated response time per layer at unit size
+    // (compute scaled by FLOPS ratio + modeled transmission)
+    let emu = env.emulation(Layer::Cloud);
+    println!("\nFigure 5 (measured, unit size 64):");
+    for app in Application::ALL {
+        let input = gen.batch(app, 32);
+        let out = runtime.infer_rows(app, 32, &input)?;
+        let per_record = out.elapsed / 32;
+        let wl = Workload::new(app, 64);
+        for layer in Layer::ALL {
+            let compute_ms =
+                emu.scale(layer, per_record * 64).as_secs_f64() * 1e3;
+            let trans_ms = env.network.transmission_ms(layer, wl.data_kb());
+            println!(
+                "  {:7} {:7} compute {:8.1} ms + network {:8.1} ms = {:9.1} ms",
+                wl.label(),
+                layer.abbrev(),
+                compute_ms,
+                trans_ms,
+                compute_ms + trans_ms
+            );
+        }
+    }
+
+    b.finish();
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Bench: Table VII / Figures 7–8 — Algorithm 2 and the four baselines on
+//! the paper's 10-job trace, plus scaling on synthetic traces.
+
+use edgeward::allocation::Calibration;
+use edgeward::benchkit::Bench;
+use edgeward::config::Environment;
+use edgeward::data::Rng;
+use edgeward::scheduler::{
+    evaluate_strategy, jobs_from_workloads, paper_jobs, schedule_jobs,
+    simulate, Job, SchedulerParams, Strategy,
+};
+use edgeward::workload::{Application, Workload, SIZE_UNITS};
+
+fn synthetic(n: usize) -> Vec<Job> {
+    let env = Environment::paper();
+    let calib = Calibration::paper();
+    let mut rng = Rng::new(4242);
+    let mut release = 0;
+    let workloads: Vec<(Workload, u64)> = (0..n)
+        .map(|_| {
+            release += 1 + rng.below(4);
+            (
+                Workload::new(
+                    Application::ALL[rng.below(3) as usize],
+                    SIZE_UNITS[rng.below(3) as usize],
+                ),
+                release,
+            )
+        })
+        .collect();
+    jobs_from_workloads(&workloads, &env, &calib, 80)
+}
+
+fn main() {
+    // regenerate Table VII (correctness narration)
+    let jobs = paper_jobs();
+    println!("Table VII (regenerated):");
+    for s in Strategy::ALL {
+        let r = evaluate_strategy(&jobs, s);
+        println!(
+            "  {:44} whole={:4} last={:3} weighted={:4}",
+            s.label(),
+            r.schedule.unweighted_sum(),
+            r.schedule.last_completion(),
+            r.schedule.weighted_sum
+        );
+    }
+    println!();
+
+    let mut b = Bench::new("sched_multi");
+    let params = SchedulerParams::default();
+
+    // one full simulate() — the tabu search's inner-loop cost
+    let all_edge: Vec<_> =
+        jobs.iter().map(|_| edgeward::scheduler::MachineId::Edge).collect();
+    b.bench("simulate_10_jobs", || {
+        std::hint::black_box(simulate(&jobs, &all_edge));
+    });
+
+    // Algorithm 2 end-to-end on the paper trace
+    b.bench("algorithm2_paper_trace", || {
+        std::hint::black_box(schedule_jobs(&jobs, &params));
+    });
+
+    // baselines
+    b.bench("per_job_optimal", || {
+        std::hint::black_box(evaluate_strategy(&jobs, Strategy::PerJobOptimal));
+    });
+
+    // scaling
+    for n in [20usize, 40, 80] {
+        let jobs_n = synthetic(n);
+        b.bench(&format!("algorithm2_{n}_jobs"), || {
+            std::hint::black_box(schedule_jobs(&jobs_n, &params));
+        });
+    }
+    b.finish();
+}

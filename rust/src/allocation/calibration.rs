@@ -1,0 +1,195 @@
+//! λ-coefficient calibration (Algorithm 1, step 8).
+//!
+//! The paper normalizes processing vs transmission time with weight
+//! coefficients λ1, λ2 obtained "by conducting an experiment to compute the
+//! time of one respectively small dataset" — i.e. the coefficients are
+//! *fitted per workload* against a unit-size measurement.  The paper never
+//! publishes the coefficients; we provide
+//!
+//! * [`Calibration::fit`] — the general fitting procedure from a per-layer
+//!   unit-size response-time measurement (what §IV describes), and
+//! * [`Calibration::paper`] — the profile fitted against Table V's own
+//!   per-unit rows, which reproduces the published table bit-exactly.
+//!
+//! Note (DESIGN.md §5): fitting Table V exactly requires a *per-layer* λ1
+//! (the published cloud/edge transmission estimates are not consistent with
+//! a single λ1 given the paper's own bandwidth constants).  λ1 is therefore
+//! a [`PerLayer`]; the uniform-λ construction is available via
+//! [`Calibration::uniform`] for ablations.
+
+
+use crate::config::Environment;
+use crate::device::{Layer, PerLayer};
+use crate::workload::Application;
+
+/// Fitted coefficients for one application.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AppCalibration {
+    /// Processing-time weight λ2 (eq. 3).
+    pub lambda2: f64,
+    /// Transmission-time weight λ1 per layer (eq. 2); `device` is unused
+    /// (zero transmission by assumption (a)).
+    pub lambda1: PerLayer<f64>,
+}
+
+impl AppCalibration {
+    /// Fit from a per-layer response-time measurement of the *unit-size*
+    /// (64-record) workload, exactly the way Algorithm 1 step 8 describes:
+    ///
+    /// * λ2 anchors on the device layer, where T = I (no transmission);
+    /// * λ1 per remote layer absorbs the residual T − I over the unit
+    ///   network latency `D_iu`.
+    pub fn fit(
+        app: Application,
+        unit_response: PerLayer<f64>,
+        env: &Environment,
+    ) -> Self {
+        let comp = app.paper_flops() as f64;
+        let gflops = env.gflops();
+        // device: T_ed = λ2 · comp / AI_ed / 1e3  →  λ2
+        let lambda2 = unit_response.device * gflops.device * 1e3 / comp;
+        let proc =
+            PerLayer::from_fn(|l| lambda2 * comp / gflops.get(l) / 1e3);
+        let unit_kb = app.unit_kb();
+        let lambda1 = PerLayer::from_fn(|l| match l {
+            Layer::Device => 0.0,
+            l => {
+                let d_iu = env.network.unit_latency_ms(l, unit_kb);
+                (unit_response.get(l) - proc.get(l)) / d_iu
+            }
+        });
+        AppCalibration { lambda2, lambda1 }
+    }
+
+    /// A uniform profile (single λ1 for both remote layers) — the paper's
+    /// formula as literally written; used by the calibration ablation bench.
+    pub fn uniform(lambda1: f64, lambda2: f64) -> Self {
+        AppCalibration {
+            lambda2,
+            lambda1: PerLayer { cloud: lambda1, edge: lambda1, device: 0.0 },
+        }
+    }
+}
+
+/// Per-application calibration profiles.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Calibration {
+    pub breath: AppCalibration,
+    pub mortality: AppCalibration,
+    pub phenotype: AppCalibration,
+}
+
+impl Calibration {
+    /// Profile for one application.
+    pub fn for_app(&self, app: Application) -> &AppCalibration {
+        match app {
+            Application::Breath => &self.breath,
+            Application::Mortality => &self.mortality,
+            Application::Phenotype => &self.phenotype,
+        }
+    }
+
+    /// Fit all three applications from unit-size measurements.
+    pub fn fit(
+        unit_responses: [(Application, PerLayer<f64>); 3],
+        env: &Environment,
+    ) -> Self {
+        let mut by_app = std::collections::BTreeMap::new();
+        for (app, resp) in unit_responses {
+            by_app.insert(app, AppCalibration::fit(app, resp, env));
+        }
+        Calibration {
+            breath: by_app[&Application::Breath],
+            mortality: by_app[&Application::Mortality],
+            phenotype: by_app[&Application::Phenotype],
+        }
+    }
+
+    /// The paper's Table V per-unit rows fitted against the paper
+    /// environment — reproduces the published estimates bit-exactly.
+    pub fn paper() -> Self {
+        let env = Environment::paper();
+        Calibration::fit(
+            [
+                (
+                    Application::Breath,
+                    PerLayer { cloud: 2091.0, edge: 1279.0, device: 1394.0 },
+                ),
+                (
+                    Application::Mortality,
+                    PerLayer { cloud: 212.0, edge: 109.0, device: 79.0 },
+                ),
+                (
+                    Application::Phenotype,
+                    PerLayer { cloud: 3115.0, edge: 2931.0, device: 3618.0 },
+                ),
+            ],
+            &env,
+        )
+    }
+
+    /// All applications share one (λ1, λ2) — the literal-formula ablation.
+    pub fn uniform(lambda1: f64, lambda2: f64) -> Self {
+        let c = AppCalibration::uniform(lambda1, lambda2);
+        Calibration { breath: c, mortality: c, phenotype: c }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_reproduces_inputs() {
+        let env = Environment::paper();
+        let target = PerLayer { cloud: 212.0, edge: 109.0, device: 79.0 };
+        let c = AppCalibration::fit(Application::Mortality, target, &env);
+        // reconstruct the unit estimate from the fitted coefficients
+        let comp = Application::Mortality.paper_flops() as f64;
+        let g = env.gflops();
+        for l in Layer::ALL {
+            let i = c.lambda2 * comp / g.get(l) / 1e3;
+            let d = match l {
+                Layer::Device => 0.0,
+                l => {
+                    c.lambda1.get(l)
+                        * env.network.unit_latency_ms(
+                            l,
+                            Application::Mortality.unit_kb(),
+                        )
+                }
+            };
+            assert!(
+                (i + d - target.get(l)).abs() < 1e-9,
+                "{l:?}: {} vs {}",
+                i + d,
+                target.get(l)
+            );
+        }
+    }
+
+    #[test]
+    fn paper_lambdas_are_positive_and_order_unity() {
+        let c = Calibration::paper();
+        for app in Application::ALL {
+            let a = c.for_app(app);
+            assert!(a.lambda2 > 0.0);
+            assert!(a.lambda1.cloud > 0.0);
+            assert!(a.lambda1.edge > 0.0);
+            assert_eq!(a.lambda1.device, 0.0);
+            // the fitted weights stay within an order of magnitude of 1,
+            // i.e. the model is a plausible normalization, not a fudge
+            assert!(a.lambda2 > 100.0 && a.lambda2 < 5000.0, "λ2={}", a.lambda2);
+            assert!(a.lambda1.cloud < 20.0 && a.lambda1.edge < 20.0);
+        }
+    }
+
+    #[test]
+    fn uniform_shares_coefficients() {
+        let c = Calibration::uniform(1.0, 2.0);
+        for app in Application::ALL {
+            assert_eq!(c.for_app(app).lambda2, 2.0);
+            assert_eq!(c.for_app(app).lambda1.cloud, 1.0);
+        }
+    }
+}

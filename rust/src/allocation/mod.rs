@@ -1,0 +1,200 @@
+//! Algorithm 1 — single-workload allocation for latency reduction
+//! (paper §III–IV).
+//!
+//! For a workload of size `s` (record units) with model complexity `comp`
+//! (the paper's parameter-count "FLOPs"), the estimated response time of
+//! deploying on layer *i* is
+//!
+//! ```text
+//! T_i = I_i + D_i
+//! I_i = λ2 · (s/64) · comp / AI_i          (processing, eq. 3)
+//! D_i = λ1_i · (s/64) · D_iu               (transmission, eq. 2)
+//! ```
+//!
+//! where `AI_i` is the layer's GFLOPS (Table III), `D_iu` the unit network
+//! latency of one 64-record payload (Algorithm 1 step 2), and λ1/λ2 the
+//! calibration weights the paper obtains "by conducting an experiment on a
+//! respectively small dataset" (§IV).  The chosen layer is the argmin.
+
+mod calibration;
+
+pub use calibration::{AppCalibration, Calibration};
+
+
+use crate::config::Environment;
+use crate::device::{Layer, PerLayer};
+use crate::workload::Workload;
+
+/// The full per-layer estimate breakdown for one workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Estimate {
+    /// Processing time I_i per layer (ms-scale units).
+    pub processing: PerLayer<f64>,
+    /// Transmission time D_i per layer (0 on the device layer).
+    pub transmission: PerLayer<f64>,
+}
+
+impl Estimate {
+    /// Total estimated response time T_i = I_i + D_i per layer (eq. 4).
+    pub fn total(&self) -> PerLayer<f64> {
+        PerLayer::from_fn(|l| {
+            self.processing.get(l) + self.transmission.get(l)
+        })
+    }
+
+    /// Totals rounded to integer time units (constraint C3 / Table V).
+    pub fn total_rounded(&self) -> PerLayer<f64> {
+        self.total().map(|_, v| v.round())
+    }
+}
+
+/// The output of Algorithm 1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AllocationDecision {
+    /// The argmin layer (ties cloud-first, matching the paper's loop).
+    pub chosen: Layer,
+    /// Minimum estimated response time `T_min`.
+    pub t_min: f64,
+    /// Full breakdown (Figure 6 is a plot of these two components).
+    pub estimate: Estimate,
+}
+
+/// Compute the per-layer estimate for a workload (steps 1–14 of
+/// Algorithm 1).
+pub fn estimate_single(
+    workload: &Workload,
+    env: &Environment,
+    calib: &Calibration,
+) -> Estimate {
+    let app = workload.app;
+    let c = calib.for_app(app);
+    let comp = app.paper_flops() as f64;
+    let units = workload.size_units as f64 / 64.0;
+    let gflops = env.gflops();
+
+    // Step 11: I_i = λ2 · s · comp / AI_i
+    let processing =
+        PerLayer::from_fn(|l| c.lambda2 * units * comp / gflops.get(l) / 1e3);
+
+    // Steps 2–4, 13–14: D_iu from the network model at the unit payload,
+    // scaled by size and λ1 (device layer transmits nothing, assumption (a)).
+    let unit_kb = app.unit_kb();
+    let transmission = PerLayer::from_fn(|l| match l {
+        Layer::Device => 0.0,
+        l => {
+            let d_iu = env.network.unit_latency_ms(l, unit_kb);
+            c.lambda1.get(l) * units * d_iu
+        }
+    });
+
+    Estimate { processing, transmission }
+}
+
+/// Algorithm 1, steps 15–22: pick the minimum-response-time layer.
+pub fn allocate_single(
+    workload: &Workload,
+    env: &Environment,
+    calib: &Calibration,
+) -> AllocationDecision {
+    let estimate = estimate_single(workload, env, calib);
+    let total = estimate.total();
+    let chosen = total.argmin();
+    AllocationDecision { chosen, t_min: *total.get(chosen), estimate }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Application, SIZE_UNITS};
+
+    fn env() -> Environment {
+        Environment::paper()
+    }
+
+    /// Table V, reproduced bit-exactly at every one of the 18 grid points.
+    #[test]
+    fn table_v_exact() {
+        let calib = Calibration::paper();
+        // (app, per-unit [cloud, edge, device]) from the published table
+        let rows: [(Application, [f64; 3]); 3] = [
+            (Application::Breath, [2091.0, 1279.0, 1394.0]),
+            (Application::Mortality, [212.0, 109.0, 79.0]),
+            (Application::Phenotype, [3115.0, 2931.0, 3618.0]),
+        ];
+        for (app, unit_row) in rows {
+            for (i, &units) in SIZE_UNITS.iter().enumerate() {
+                let wl = Workload::new(app, units);
+                let est = estimate_single(&wl, &env(), &calib);
+                let t = est.total_rounded();
+                let mult = (1 << i) as f64;
+                assert_eq!(t.cloud, unit_row[0] * mult, "{} cloud", wl.label());
+                assert_eq!(t.edge, unit_row[1] * mult, "{} edge", wl.label());
+                assert_eq!(t.device, unit_row[2] * mult, "{} device", wl.label());
+            }
+        }
+    }
+
+    /// Table V "Chosen Deployment Layer" column.
+    #[test]
+    fn chosen_layers_match_paper() {
+        let calib = Calibration::paper();
+        for &units in &SIZE_UNITS {
+            let b = allocate_single(
+                &Workload::new(Application::Breath, units), &env(), &calib);
+            assert_eq!(b.chosen, Layer::Edge, "WL1 @{units}");
+            let m = allocate_single(
+                &Workload::new(Application::Mortality, units), &env(), &calib);
+            assert_eq!(m.chosen, Layer::Device, "WL2 @{units}");
+            let p = allocate_single(
+                &Workload::new(Application::Phenotype, units), &env(), &calib);
+            assert_eq!(p.chosen, Layer::Edge, "WL3 @{units}");
+        }
+    }
+
+    #[test]
+    fn estimates_scale_linearly_with_size() {
+        let calib = Calibration::paper();
+        let wl1 = Workload::new(Application::Breath, 64);
+        let wl2 = Workload::new(Application::Breath, 128);
+        let t1 = estimate_single(&wl1, &env(), &calib).total();
+        let t2 = estimate_single(&wl2, &env(), &calib).total();
+        for l in Layer::ALL {
+            assert!((t2.get(l) / t1.get(l) - 2.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn device_has_zero_transmission() {
+        let calib = Calibration::paper();
+        for app in Application::ALL {
+            let wl = Workload::new(app, 256);
+            let est = estimate_single(&wl, &env(), &calib);
+            assert_eq!(est.transmission.device, 0.0);
+        }
+    }
+
+    #[test]
+    fn t_min_is_minimum() {
+        let calib = Calibration::paper();
+        for app in Application::ALL {
+            let wl = Workload::new(app, 512);
+            let d = allocate_single(&wl, &env(), &calib);
+            let t = d.estimate.total();
+            for l in Layer::ALL {
+                assert!(d.t_min <= *t.get(l) + 1e-12);
+            }
+        }
+    }
+
+    /// With an ideal (free) network the fastest device always wins.
+    #[test]
+    fn ideal_network_prefers_cloud() {
+        let mut e = env();
+        e.network = crate::network::NetworkModel::ideal();
+        let calib = Calibration::paper();
+        for app in Application::ALL {
+            let d = allocate_single(&Workload::new(app, 1024), &e, &calib);
+            assert_eq!(d.chosen, Layer::Cloud, "{app}");
+        }
+    }
+}

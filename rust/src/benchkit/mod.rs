@@ -1,0 +1,172 @@
+//! In-tree micro-benchmark harness (the offline build has no criterion;
+//! DESIGN.md §3).
+//!
+//! Provides the pieces `cargo bench` targets need: warmup, adaptive
+//! iteration-count calibration, robust statistics (median + MAD), and a
+//! criterion-style text report.  Benches are `harness = false` binaries
+//! that call [`Bench::run`].
+//!
+//! ```no_run
+//! let mut b = edgeward::benchkit::Bench::new("alloc_single");
+//! b.bench("WL1-1", || {
+//!     // code under measurement
+//! });
+//! b.finish();
+//! ```
+
+use std::time::{Duration, Instant};
+
+/// One benchmark group (typically one paper table/figure).
+pub struct Bench {
+    name: String,
+    results: Vec<Measurement>,
+    /// Target per-case measurement time.
+    pub budget: Duration,
+    /// Minimum samples per case.
+    pub min_samples: usize,
+}
+
+/// Robust timing statistics for one case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub case: String,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+    pub median: Duration,
+    pub mad: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Measurement {
+    /// Median time per iteration in nanoseconds.
+    pub fn median_ns(&self) -> f64 {
+        self.median.as_secs_f64() * 1e9
+    }
+
+    /// Iterations per second at the median.
+    pub fn throughput(&self) -> f64 {
+        1.0 / self.median.as_secs_f64().max(1e-18)
+    }
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        let name = name.into();
+        println!("== bench group: {name} ==");
+        Bench {
+            name,
+            results: Vec::new(),
+            budget: Duration::from_millis(300),
+            min_samples: 10,
+        }
+    }
+
+    /// Measure a closure; prints the result line immediately.
+    pub fn bench(&mut self, case: &str, mut f: impl FnMut()) -> &Measurement {
+        // 1. warmup + calibrate iterations so one sample is ~budget/samples
+        f();
+        let probe_start = Instant::now();
+        f();
+        let probe = probe_start.elapsed().max(Duration::from_nanos(20));
+        let per_sample = self.budget / self.min_samples as u32;
+        let iters = (per_sample.as_secs_f64() / probe.as_secs_f64())
+            .clamp(1.0, 1e7) as u64;
+
+        // 2. collect samples
+        let mut samples = Vec::with_capacity(self.min_samples);
+        let deadline = Instant::now() + self.budget;
+        while samples.len() < self.min_samples
+            || (Instant::now() < deadline && samples.len() < 200)
+        {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            // per-iteration time, floored at 1ns so fully-optimized-away
+            // bodies still produce a nonzero measurement
+            let per_iter =
+                (t.elapsed().as_nanos() / iters as u128).max(1) as u64;
+            samples.push(Duration::from_nanos(per_iter));
+        }
+
+        // 3. robust stats
+        samples.sort_unstable();
+        let median = samples[samples.len() / 2];
+        let mut deviations: Vec<Duration> = samples
+            .iter()
+            .map(|&s| if s > median { s - median } else { median - s })
+            .collect();
+        deviations.sort_unstable();
+        let mad = deviations[deviations.len() / 2];
+        let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+
+        let m = Measurement {
+            case: case.to_string(),
+            samples: samples.len(),
+            iters_per_sample: iters,
+            median,
+            mad,
+            mean,
+            min: samples[0],
+            max: *samples.last().unwrap(),
+        };
+        println!(
+            "{:<40} median {:>12}  ±{:<10}  ({} samples × {} iters)",
+            format!("{}/{}", self.name, case),
+            fmt_duration(m.median),
+            fmt_duration(m.mad),
+            m.samples,
+            m.iters_per_sample,
+        );
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Print a summary footer; returns all measurements.
+    pub fn finish(self) -> Vec<Measurement> {
+        println!("-- {}: {} cases --\n", self.name, self.results.len());
+        self.results
+    }
+}
+
+/// Human duration formatting (ns → s).
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new("test");
+        b.budget = Duration::from_millis(20);
+        b.min_samples = 3;
+        let m = b.bench("noop-ish", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(m.median > Duration::ZERO);
+        assert!(m.samples >= 3);
+        let all = b.finish();
+        assert_eq!(all.len(), 1);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500ns");
+        assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.50ms");
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.00s");
+    }
+}

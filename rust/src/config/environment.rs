@@ -1,0 +1,147 @@
+//! The experiment environment: one device per layer + the network model
+//! (paper assumption (d): exactly one cloud server and one edge server).
+
+
+use crate::device::{DeviceSpec, EmulationProfile, Layer, PerLayer};
+use crate::network::NetworkModel;
+use crate::{Error, Result};
+
+/// The hierarchical cloud/edge/device environment (Fig. 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Environment {
+    pub cloud: DeviceSpec,
+    pub edge: DeviceSpec,
+    pub device: DeviceSpec,
+    pub network: NetworkModel,
+}
+
+impl Environment {
+    /// Parse from a config section; absent devices/links default to the
+    /// paper environment.
+    pub fn from_reader(r: &super::FieldReader) -> Result<Self> {
+        let defaults = Environment::paper();
+        let read_device = |key: &str, def: DeviceSpec, layer: Layer| -> Result<DeviceSpec> {
+            match r.section(key)? {
+                None => Ok(def),
+                Some(s) => DeviceSpec::from_reader(&s, def, layer),
+            }
+        };
+        let env = Environment {
+            cloud: read_device("cloud", defaults.cloud, Layer::Cloud)?,
+            edge: read_device("edge", defaults.edge, Layer::Edge)?,
+            device: read_device("device", defaults.device, Layer::Device)?,
+            network: match r.section("network")? {
+                None => defaults.network,
+                Some(s) => NetworkModel::from_reader(&s, defaults.network)?,
+            },
+        };
+        r.finish()?;
+        Ok(env)
+    }
+
+    /// Serialize as a config section.
+    pub fn to_value(&self) -> crate::serialize::Value {
+        let mut v = crate::serialize::Value::object();
+        v.set("cloud", self.cloud.to_value());
+        v.set("edge", self.edge.to_value());
+        v.set("device", self.device.to_value());
+        v.set("network", self.network.to_value());
+        v
+    }
+
+    /// The paper's testbed (§VII-A: Table III devices + measured network).
+    pub fn paper() -> Self {
+        Environment {
+            cloud: DeviceSpec::paper_cloud(),
+            edge: DeviceSpec::paper_edge(),
+            device: DeviceSpec::paper_device(),
+            network: NetworkModel::paper(),
+        }
+    }
+
+    /// Device spec on a layer.
+    pub fn spec(&self, layer: Layer) -> &DeviceSpec {
+        match layer {
+            Layer::Cloud => &self.cloud,
+            Layer::Edge => &self.edge,
+            Layer::Device => &self.device,
+        }
+    }
+
+    /// Per-layer computational ability `AI_i` in GFLOPS (Table III).
+    pub fn gflops(&self) -> PerLayer<f64> {
+        PerLayer::from_fn(|l| self.spec(l).gflops())
+    }
+
+    /// Emulation profile for serving, treating `reference` as this host.
+    pub fn emulation(&self, reference: Layer) -> EmulationProfile {
+        EmulationProfile::from_specs(
+            &self.cloud,
+            &self.edge,
+            &self.device,
+            reference,
+        )
+    }
+
+    /// Sanity checks.
+    pub fn validate(&self) -> Result<()> {
+        for layer in Layer::ALL {
+            let s = self.spec(layer);
+            if s.layer != layer {
+                return Err(Error::Config(format!(
+                    "device {:?} declared for layer {:?} but placed on {:?}",
+                    s.name, s.layer, layer
+                )));
+            }
+            if s.cores == 0 || s.freq_ghz <= 0.0 || s.flops_per_cycle <= 0.0 {
+                return Err(Error::Config(format!(
+                    "device {:?} has non-positive compute parameters",
+                    s.name
+                )));
+            }
+        }
+        for (name, link) in [
+            ("edge_device", &self.network.edge_device),
+            ("cloud_edge", &self.network.cloud_edge),
+        ] {
+            if link.latency_ms < 0.0 || link.bandwidth_mbs <= 0.0 {
+                return Err(Error::Config(format!(
+                    "link {name} has invalid latency/bandwidth"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_env_valid() {
+        Environment::paper().validate().unwrap();
+    }
+
+    #[test]
+    fn paper_gflops_table_iii() {
+        let g = Environment::paper().gflops();
+        assert!((g.cloud - 422.4).abs() < 1e-9);
+        assert!((g.edge - 140.8).abs() < 1e-9);
+        assert!((g.device - 96.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wrong_layer_rejected() {
+        let mut env = Environment::paper();
+        env.edge = DeviceSpec::paper_cloud(); // layer says Cloud
+        assert!(env.validate().is_err());
+    }
+
+    #[test]
+    fn zero_cores_rejected() {
+        let mut env = Environment::paper();
+        env.device.cores = 0;
+        assert!(env.validate().is_err());
+    }
+}

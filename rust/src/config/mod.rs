@@ -1,0 +1,183 @@
+//! Configuration system: the experiment environment (devices + network) and
+//! the full launcher config, loadable from TOML with builtin paper presets.
+//!
+//! Serialization goes through the in-tree [`crate::serialize`] substrate
+//! (this build is fully offline; DESIGN.md §3).  Unknown fields are
+//! rejected so typos in config files fail loudly.
+
+mod environment;
+mod value_ext;
+
+pub use environment::Environment;
+pub use value_ext::FieldReader;
+
+use std::path::Path;
+
+use crate::coordinator::ServeConfig;
+use crate::scheduler::SchedulerParams;
+use crate::serialize::{toml, Value};
+use crate::{Error, Result};
+
+/// Top-level launcher configuration (`edgeward --config run.toml`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    /// Experiment environment (devices, network).
+    pub environment: Environment,
+    /// Serving-run parameters.
+    pub serve: ServeConfig,
+    /// Multi-job scheduler parameters.
+    pub scheduler: SchedulerParams,
+    /// Artifact directory (AOT outputs + manifest.json).
+    pub artifact_dir: String,
+    /// Master seed for synthetic data / arrivals.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            environment: Environment::paper(),
+            serve: ServeConfig::default(),
+            scheduler: SchedulerParams::default(),
+            artifact_dir: "artifacts".to_string(),
+            seed: 0,
+        }
+    }
+}
+
+impl Config {
+    /// Load and validate a TOML config file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse and validate TOML text; absent fields take paper defaults.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let v = toml::parse(text)?;
+        let cfg = Self::from_value(&v)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Build from a parsed [`Value`], rejecting unknown fields.
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let r = FieldReader::new(v, "config")?;
+        let defaults = Config::default();
+        let cfg = Config {
+            environment: r
+                .section("environment")?
+                .map(|s| Environment::from_reader(&s))
+                .transpose()?
+                .unwrap_or(defaults.environment),
+            serve: r
+                .section("serve")?
+                .map(|s| ServeConfig::from_reader(&s))
+                .transpose()?
+                .unwrap_or(defaults.serve),
+            scheduler: r
+                .section("scheduler")?
+                .map(|s| SchedulerParams::from_reader(&s))
+                .transpose()?
+                .unwrap_or(defaults.scheduler),
+            artifact_dir: r
+                .string("artifact_dir")?
+                .unwrap_or(defaults.artifact_dir),
+            seed: r.u64("seed")?.unwrap_or(defaults.seed),
+        };
+        r.finish()?;
+        Ok(cfg)
+    }
+
+    /// Serialize to a [`Value`] (inverse of [`Config::from_value`]).
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::object();
+        v.set("artifact_dir", self.artifact_dir.as_str());
+        v.set("seed", self.seed);
+        v.set("environment", self.environment.to_value());
+        v.set("serve", self.serve.to_value());
+        v.set("scheduler", self.scheduler.to_value());
+        v
+    }
+
+    /// Serialize back to TOML (for `edgeward config`).
+    pub fn to_toml(&self) -> String {
+        toml::emit(&self.to_value())
+    }
+
+    /// Cross-field validation.
+    pub fn validate(&self) -> Result<()> {
+        self.environment.validate()?;
+        self.serve.validate()?;
+        self.scheduler.validate()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrips_through_toml() {
+        let cfg = Config::default();
+        let text = cfg.to_toml();
+        let back = Config::from_toml(&text).unwrap();
+        assert_eq!(back, cfg, "emitted:\n{text}");
+    }
+
+    #[test]
+    fn partial_toml_uses_defaults() {
+        let cfg = Config::from_toml("seed = 9\n").unwrap();
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.environment, Environment::paper());
+    }
+
+    #[test]
+    fn unknown_field_rejected() {
+        let err = Config::from_toml("banana = 1\n").unwrap_err();
+        assert!(err.to_string().contains("banana"), "{err}");
+    }
+
+    #[test]
+    fn unknown_nested_field_rejected() {
+        assert!(Config::from_toml("[serve]\nbanana = 1\n").is_err());
+    }
+
+    #[test]
+    fn invalid_environment_rejected() {
+        let toml = "\n[environment.cloud]\ncores = 0\n";
+        assert!(Config::from_toml(toml).is_err());
+    }
+
+    #[test]
+    fn override_serve_section() {
+        let cfg = Config::from_toml(
+            "[serve]\npatients = 9\npolicy = \"fixed-edge\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.patients, 9);
+        assert_eq!(
+            cfg.serve.policy,
+            crate::coordinator::Policy::FixedEdge
+        );
+        // untouched fields keep defaults
+        assert_eq!(cfg.serve.max_batch, ServeConfig::default().max_batch);
+    }
+
+    #[test]
+    fn override_network() {
+        let cfg = Config::from_toml(
+            "[environment.network.edge_device]\nlatency_ms = 5.0\nbandwidth_mbs = 1.0\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.environment.network.edge_device.latency_ms, 5.0);
+        // other link untouched
+        assert_eq!(
+            cfg.environment.network.cloud_edge,
+            Environment::paper().network.cloud_edge
+        );
+    }
+}

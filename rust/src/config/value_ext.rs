@@ -1,0 +1,197 @@
+//! Typed field extraction over [`Value`] with unknown-field detection.
+//!
+//! Every config struct reads its fields through a [`FieldReader`]; fields
+//! not consumed by the time `finish()` runs are reported as errors, giving
+//! serde-deny_unknown_fields behaviour without serde.
+
+use std::cell::RefCell;
+use std::collections::BTreeSet;
+
+use crate::serialize::Value;
+use crate::{Error, Result};
+
+/// Tracks which keys of one object have been consumed.
+pub struct FieldReader<'a> {
+    value: &'a Value,
+    path: String,
+    seen: RefCell<BTreeSet<String>>,
+}
+
+impl<'a> FieldReader<'a> {
+    /// Wrap an object value (errors on non-objects).
+    pub fn new(value: &'a Value, path: &str) -> Result<Self> {
+        if value.as_object().is_none() {
+            return Err(Error::Config(format!("{path}: expected a table")));
+        }
+        Ok(FieldReader {
+            value,
+            path: path.to_string(),
+            seen: RefCell::new(BTreeSet::new()),
+        })
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().insert(key.to_string());
+    }
+
+    fn field(&self, key: &str) -> Option<&'a Value> {
+        self.mark(key);
+        self.value.get(key)
+    }
+
+    fn wrong_type(&self, key: &str, want: &str) -> Error {
+        Error::Config(format!("{}.{key}: expected {want}", self.path))
+    }
+
+    /// A nested section as its own reader (None if absent).
+    pub fn section(&self, key: &str) -> Result<Option<FieldReader<'a>>> {
+        match self.field(key) {
+            None => Ok(None),
+            Some(v) => Ok(Some(FieldReader::new(
+                v,
+                &format!("{}.{key}", self.path),
+            )?)),
+        }
+    }
+
+    pub fn string(&self, key: &str) -> Result<Option<String>> {
+        match self.field(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_str()
+                .map(|s| Some(s.to_string()))
+                .ok_or_else(|| self.wrong_type(key, "a string")),
+        }
+    }
+
+    pub fn f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.field(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_f64()
+                .map(Some)
+                .ok_or_else(|| self.wrong_type(key, "a number")),
+        }
+    }
+
+    pub fn u64(&self, key: &str) -> Result<Option<u64>> {
+        match self.field(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_u64()
+                .map(Some)
+                .ok_or_else(|| self.wrong_type(key, "a non-negative integer")),
+        }
+    }
+
+    pub fn usize(&self, key: &str) -> Result<Option<usize>> {
+        Ok(self.u64(key)?.map(|v| v as usize))
+    }
+
+    pub fn u32(&self, key: &str) -> Result<Option<u32>> {
+        Ok(self.u64(key)?.map(|v| v as u32))
+    }
+
+    pub fn bool(&self, key: &str) -> Result<Option<bool>> {
+        match self.field(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_bool()
+                .map(Some)
+                .ok_or_else(|| self.wrong_type(key, "a boolean")),
+        }
+    }
+
+    /// Fixed-length f64 array.
+    pub fn f64_array<const N: usize>(
+        &self,
+        key: &str,
+    ) -> Result<Option<[f64; N]>> {
+        match self.field(key) {
+            None => Ok(None),
+            Some(v) => {
+                let items = v
+                    .as_array()
+                    .ok_or_else(|| self.wrong_type(key, "an array"))?;
+                if items.len() != N {
+                    return Err(Error::Config(format!(
+                        "{}.{key}: expected {N} elements, got {}",
+                        self.path,
+                        items.len()
+                    )));
+                }
+                let mut out = [0.0; N];
+                for (i, item) in items.iter().enumerate() {
+                    out[i] = item.as_f64().ok_or_else(|| {
+                        self.wrong_type(key, "an array of numbers")
+                    })?;
+                }
+                Ok(Some(out))
+            }
+        }
+    }
+
+    /// Error if any field of the object was never consumed.
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        for (k, _) in self.value.as_object().unwrap() {
+            if !seen.contains(k) {
+                return Err(Error::Config(format!(
+                    "{}: unknown field {k:?}",
+                    self.path
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serialize::toml;
+
+    #[test]
+    fn typed_extraction() {
+        let v = toml::parse("a = 1\nb = \"x\"\nc = true\nd = [1.0, 2.0]\n")
+            .unwrap();
+        let r = FieldReader::new(&v, "t").unwrap();
+        assert_eq!(r.u64("a").unwrap(), Some(1));
+        assert_eq!(r.string("b").unwrap(), Some("x".into()));
+        assert_eq!(r.bool("c").unwrap(), Some(true));
+        assert_eq!(r.f64_array::<2>("d").unwrap(), Some([1.0, 2.0]));
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_field_detected() {
+        let v = toml::parse("a = 1\nzzz = 2\n").unwrap();
+        let r = FieldReader::new(&v, "t").unwrap();
+        let _ = r.u64("a");
+        let err = r.finish().unwrap_err();
+        assert!(err.to_string().contains("zzz"));
+    }
+
+    #[test]
+    fn wrong_type_reported_with_path() {
+        let v = toml::parse("a = \"not a number\"\n").unwrap();
+        let r = FieldReader::new(&v, "cfg").unwrap();
+        let err = r.u64("a").unwrap_err();
+        assert!(err.to_string().contains("cfg.a"));
+    }
+
+    #[test]
+    fn wrong_array_len() {
+        let v = toml::parse("d = [1.0]\n").unwrap();
+        let r = FieldReader::new(&v, "t").unwrap();
+        assert!(r.f64_array::<3>("d").is_err());
+    }
+
+    #[test]
+    fn absent_fields_are_none() {
+        let v = toml::parse("").unwrap();
+        let r = FieldReader::new(&v, "t").unwrap();
+        assert_eq!(r.u64("missing").unwrap(), None);
+        r.finish().unwrap();
+    }
+}

@@ -1,0 +1,165 @@
+//! Dynamic same-app batching for shared machines.
+//!
+//! The artifacts are compiled at fixed batch sizes; the batcher groups
+//! same-application requests that arrive within a window, up to
+//! `max_batch`, so shared machines amortize per-call overhead.  Requests
+//! of a *different* application than the batch head are left queued for
+//! the next round (models have different input shapes, so cross-app
+//! batching is impossible).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::InferenceRequest;
+
+/// A request plus the instant it arrived at the machine's queue.
+pub type Item = (InferenceRequest, Instant);
+
+/// Greedy same-app batcher over an mpsc queue.
+pub struct Batcher {
+    max_batch: usize,
+    window: Duration,
+    /// Request deferred because its app differed from the last batch head.
+    holdover: Option<Item>,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, window: Duration) -> Self {
+        Batcher { max_batch: max_batch.max(1), window, holdover: None }
+    }
+
+    /// Collect the next batch: blocks for the first request, then extends
+    /// with same-app arrivals until the window closes or `max_batch` is
+    /// reached.  Returns `None` once the channel is closed and drained.
+    pub fn next_batch(&mut self, rx: &Receiver<Item>) -> Option<Vec<Item>> {
+        let head = match self.holdover.take() {
+            Some(h) => h,
+            None => rx.recv().ok()?,
+        };
+        let app = head.0.app;
+        let mut batch = vec![head];
+        if self.max_batch == 1 {
+            return Some(batch);
+        }
+        let deadline = Instant::now() + self.window;
+        while batch.len() < self.max_batch {
+            let remaining =
+                deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                break;
+            }
+            match rx.recv_timeout(remaining) {
+                Ok(item) => {
+                    if item.0.app == app {
+                        batch.push(item);
+                    } else {
+                        // different shape: defer to the next batch
+                        self.holdover = Some(item);
+                        break;
+                    }
+                }
+                Err(RecvTimeoutError::Timeout)
+                | Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    use crate::workload::Application;
+
+    fn req(app: Application) -> Item {
+        let mut gen = crate::coordinator::RequestGenerator::new(
+            7,
+            0,
+            match app {
+                Application::Breath => [1.0, 0.0, 0.0],
+                Application::Mortality => [0.0, 1.0, 0.0],
+                Application::Phenotype => [0.0, 0.0, 1.0],
+            },
+            64,
+        );
+        (gen.next_request(), Instant::now())
+    }
+
+    #[test]
+    fn batches_same_app() {
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..3 {
+            tx.send(req(Application::Breath)).unwrap();
+        }
+        drop(tx);
+        let mut b = Batcher::new(8, Duration::from_millis(5));
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert!(b.next_batch(&rx).is_none());
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..5 {
+            tx.send(req(Application::Mortality)).unwrap();
+        }
+        drop(tx);
+        let mut b = Batcher::new(2, Duration::from_millis(5));
+        assert_eq!(b.next_batch(&rx).unwrap().len(), 2);
+        assert_eq!(b.next_batch(&rx).unwrap().len(), 2);
+        assert_eq!(b.next_batch(&rx).unwrap().len(), 1);
+        assert!(b.next_batch(&rx).is_none());
+    }
+
+    #[test]
+    fn different_app_splits_batch() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(Application::Breath)).unwrap();
+        tx.send(req(Application::Phenotype)).unwrap();
+        tx.send(req(Application::Phenotype)).unwrap();
+        drop(tx);
+        let mut b = Batcher::new(8, Duration::from_millis(5));
+        let b1 = b.next_batch(&rx).unwrap();
+        assert_eq!(b1.len(), 1);
+        assert_eq!(b1[0].0.app, Application::Breath);
+        let b2 = b.next_batch(&rx).unwrap();
+        assert_eq!(b2.len(), 2);
+        assert_eq!(b2[0].0.app, Application::Phenotype);
+        assert!(b.next_batch(&rx).is_none());
+    }
+
+    #[test]
+    fn single_batch_mode_skips_window() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(Application::Breath)).unwrap();
+        drop(tx);
+        let mut b = Batcher::new(1, Duration::from_secs(60));
+        let start = Instant::now();
+        assert_eq!(b.next_batch(&rx).unwrap().len(), 1);
+        assert!(start.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn closed_empty_channel_returns_none() {
+        let (tx, rx) = mpsc::channel::<Item>();
+        drop(tx);
+        let mut b = Batcher::new(4, Duration::from_millis(1));
+        assert!(b.next_batch(&rx).is_none());
+    }
+
+    #[test]
+    fn window_bounds_wait() {
+        // a lone request should not wait the whole window once the sender
+        // side hangs up
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(Application::Breath)).unwrap();
+        drop(tx);
+        let mut b = Batcher::new(8, Duration::from_millis(30));
+        let start = Instant::now();
+        assert_eq!(b.next_batch(&rx).unwrap().len(), 1);
+        assert!(start.elapsed() < Duration::from_millis(25));
+    }
+}

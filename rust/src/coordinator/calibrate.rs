@@ -1,0 +1,99 @@
+//! Live λ-calibration — the paper's §IV step 8 performed on *this* system.
+//!
+//! Algorithm 1's λ1/λ2 are fitted from a measurement of a small dataset on
+//! the deployment system.  [`Calibration::paper`] carries the authors'
+//! numbers (a TF/Keras stack on Xeon/Pi hardware); this module refits the
+//! coefficients against the serving stack actually running here: measured
+//! PJRT per-record inference cost, the configured emulation profile, and
+//! the configured network model.  Routing decisions made with the result
+//! are consistent with what the executors will actually do.
+
+use std::time::Duration;
+
+use crate::allocation::Calibration;
+use crate::config::Environment;
+use crate::data::EpisodeGenerator;
+use crate::device::{Layer, PerLayer};
+use crate::runtime::InferenceRuntime;
+use crate::workload::Application;
+use crate::Result;
+
+use super::ServeConfig;
+
+/// Measure per-record host inference cost and fit a calibration that
+/// predicts this serving stack (median of `trials` batched runs per app).
+pub fn live_calibration(
+    env: &Environment,
+    cfg: &ServeConfig,
+    artifact_dir: &str,
+    seed: u64,
+) -> Result<Calibration> {
+    let runtime = InferenceRuntime::open(artifact_dir)?;
+    runtime.warmup()?;
+    let mut gen = EpisodeGenerator::new(seed);
+    let emu = if cfg.emulate_compute {
+        env.emulation(Layer::Cloud)
+    } else {
+        crate::device::EmulationProfile::identity()
+    };
+
+    const ROWS: usize = 32;
+    const TRIALS: usize = 5;
+
+    let mut responses: Vec<(Application, PerLayer<f64>)> = Vec::new();
+    for app in Application::ALL {
+        let input = gen.batch(app, ROWS);
+        let mut costs: Vec<Duration> = (0..TRIALS)
+            .map(|_| {
+                runtime
+                    .infer_rows(app, ROWS, &input)
+                    .map(|o| o.elapsed)
+                    .unwrap_or(Duration::ZERO)
+            })
+            .collect();
+        costs.sort_unstable();
+        let per_record_host = costs[TRIALS / 2] / ROWS as u32;
+
+        // Unit (64-record) response per layer: emulated compute + modeled
+        // transmission of the unit payload.
+        let unit_kb = app.unit_kb();
+        let unit_response = PerLayer::from_fn(|layer| {
+            let compute_ms = emu
+                .scale(layer, per_record_host * 64)
+                .mul_f64(cfg.compute_scale)
+                .as_secs_f64()
+                * 1e3;
+            compute_ms + env.network.transmission_ms(layer, unit_kb)
+        });
+        responses.push((app, unit_response));
+    }
+    let arr: [(Application, PerLayer<f64>); 3] =
+        [responses[0], responses[1], responses[2]];
+    Ok(Calibration::fit(arr, env))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allocation::allocate_single;
+    use crate::workload::Workload;
+
+    /// Live calibration on the real artifacts: the fitted model must route
+    /// consistently with the measured cost structure (device-dominant on a
+    /// fast host at compute_scale = 1).
+    #[test]
+    fn live_calibration_routes_consistently() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let env = Environment::paper();
+        let cfg = ServeConfig::default();
+        let calib = live_calibration(&env, &cfg, "artifacts", 3).unwrap();
+        for app in Application::ALL {
+            let d = allocate_single(&Workload::new(app, 64), &env, &calib);
+            // on this host the cloud's WAN hop can never win at unit size
+            assert_ne!(d.chosen, Layer::Cloud, "{app}");
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Delay queue: releases items at their scheduled ready time.
+//!
+//! Models the network on the serving path — a request routed to a remote
+//! layer is pushed with `ready_at = now + transmission_time` and pops only
+//! once that instant passes (constraint C4: data transmission overlaps
+//! other jobs' execution).
+
+use std::collections::BinaryHeap;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+struct Entry<T> {
+    ready_at: Instant,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.ready_at == other.ready_at && self.seq == other.seq
+    }
+}
+impl<T> Eq for Entry<T> {}
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // min-heap on (ready_at, seq)
+        other
+            .ready_at
+            .cmp(&self.ready_at)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+struct Inner<T> {
+    heap: BinaryHeap<Entry<T>>,
+    closed: bool,
+    seq: u64,
+}
+
+/// A thread-safe delay queue.
+pub struct DelayQueue<T> {
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+}
+
+impl<T> Default for DelayQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> DelayQueue<T> {
+    pub fn new() -> Self {
+        DelayQueue {
+            inner: Mutex::new(Inner {
+                heap: BinaryHeap::new(),
+                closed: false,
+                seq: 0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Schedule an item to become available at `ready_at`.
+    pub fn push(&self, ready_at: Instant, item: T) {
+        let mut g = self.inner.lock().unwrap();
+        let seq = g.seq;
+        g.seq += 1;
+        g.heap.push(Entry { ready_at, seq, item });
+        self.cv.notify_one();
+    }
+
+    /// Close the queue: pops drain the remaining items, then return None.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Pending item count (ready or not).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Block until the earliest item is ready (or the queue is closed and
+    /// empty, returning None).
+    pub fn pop_blocking(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            match g.heap.peek() {
+                None => {
+                    if g.closed {
+                        return None;
+                    }
+                    g = self.cv.wait(g).unwrap();
+                }
+                Some(head) => {
+                    let now = Instant::now();
+                    if head.ready_at <= now {
+                        return Some(g.heap.pop().unwrap().item);
+                    }
+                    let wait = head.ready_at - now;
+                    let (g2, _) = self.cv.wait_timeout(g, wait).unwrap();
+                    g = g2;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn releases_in_ready_order() {
+        let q = DelayQueue::new();
+        let now = Instant::now();
+        q.push(now + Duration::from_millis(30), "late");
+        q.push(now + Duration::from_millis(5), "early");
+        q.push(now, "now");
+        assert_eq!(q.pop_blocking(), Some("now"));
+        assert_eq!(q.pop_blocking(), Some("early"));
+        assert_eq!(q.pop_blocking(), Some("late"));
+    }
+
+    #[test]
+    fn respects_delay() {
+        let q = DelayQueue::new();
+        let start = Instant::now();
+        q.push(start + Duration::from_millis(25), ());
+        q.pop_blocking().unwrap();
+        assert!(start.elapsed() >= Duration::from_millis(24));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = DelayQueue::new();
+        q.push(Instant::now(), 1);
+        q.close();
+        assert_eq!(q.pop_blocking(), Some(1));
+        assert_eq!(q.pop_blocking(), None);
+    }
+
+    #[test]
+    fn cross_thread_wakeup() {
+        let q = Arc::new(DelayQueue::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop_blocking());
+        std::thread::sleep(Duration::from_millis(10));
+        q.push(Instant::now(), 7);
+        assert_eq!(h.join().unwrap(), Some(7));
+    }
+
+    #[test]
+    fn fifo_within_same_instant() {
+        let q = DelayQueue::new();
+        let t = Instant::now();
+        for i in 0..10 {
+            q.push(t, i);
+        }
+        for i in 0..10 {
+            assert_eq!(q.pop_blocking(), Some(i));
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Engine threads: each hierarchy layer owns one OS thread with its own
+//! PJRT client (`InferenceRuntime` is `!Send` — the xla wrapper types are
+//! `Rc`-based).  Callers submit [`EngineRequest`]s over a channel and block
+//! on a rendezvous reply channel.
+//!
+//! One engine per shared machine also *enforces* constraint C1 (one job at
+//! a time) structurally: batches execute strictly in submission order.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::device::Layer;
+use crate::runtime::{InferenceOutput, InferenceRuntime};
+use crate::workload::Application;
+use crate::{Error, Result};
+
+/// A batched inference request to an engine thread.
+pub struct EngineRequest {
+    pub app: Application,
+    /// Logical rows (may be below the compiled batch size; the engine pads).
+    pub rows: usize,
+    /// `rows × seq_len × input_dim` f32 values.
+    pub input: Vec<f32>,
+    pub reply: mpsc::SyncSender<Result<InferenceOutput>>,
+}
+
+/// Cloneable handle to one layer's engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<EngineRequest>,
+    layer: Layer,
+    // Keeps the join handle alive until the last handle drops.
+    _thread: Arc<EngineThread>,
+}
+
+struct EngineThread {
+    handle: std::sync::Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for EngineThread {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            // all senders are gone by now; the thread exits its recv loop
+            let _ = h.join();
+        }
+    }
+}
+
+impl EngineHandle {
+    /// Spawn the engine thread for a layer; compiles all variants eagerly
+    /// so the first request doesn't pay compile latency.
+    pub fn spawn(artifact_dir: &str, layer: Layer) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<EngineRequest>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let dir = artifact_dir.to_string();
+        let handle = std::thread::Builder::new()
+            .name(format!("engine-{}", layer.abbrev()))
+            .spawn(move || {
+                let runtime = match InferenceRuntime::open(&dir)
+                    .and_then(|r| r.warmup().map(|_| r))
+                {
+                    Ok(r) => {
+                        let _ = ready_tx.send(Ok(()));
+                        r
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    let out =
+                        runtime.infer_rows(req.app, req.rows, &req.input);
+                    let _ = req.reply.send(out);
+                }
+            })
+            .map_err(|e| Error::Serving(format!("spawn engine: {e}")))?;
+
+        // surface artifact/compile errors at construction time
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Serving("engine thread died".into()))??;
+
+        Ok(EngineHandle {
+            tx,
+            layer,
+            _thread: Arc::new(EngineThread {
+                handle: std::sync::Mutex::new(Some(handle)),
+            }),
+        })
+    }
+
+    pub fn layer(&self) -> Layer {
+        self.layer
+    }
+
+    /// Run a batched inference on this engine (blocks the calling thread).
+    pub fn infer(
+        &self,
+        app: Application,
+        rows: usize,
+        input: Vec<f32>,
+    ) -> Result<InferenceOutput> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(EngineRequest { app, rows, input, reply })
+            .map_err(|_| Error::Serving("engine channel closed".into()))?;
+        rx.recv()
+            .map_err(|_| Error::Serving("engine dropped request".into()))?
+    }
+}

@@ -1,0 +1,539 @@
+//! L3 serving coordinator: the request path.
+//!
+//! Topology mirrors the paper's ICU scenario (Fig. 3): every patient's end
+//! device releases inference requests over time; a router places each
+//! request on a hierarchy layer (per the configured [`Policy`]); per-layer
+//! executors run the *real* AOT-compiled LSTM inference through PJRT.
+//!
+//! Because the paper's testbed is three physical machines and ours is one
+//! host, each layer is emulated faithfully (DESIGN.md §3):
+//!
+//! * **network** — a request routed to edge/cloud sits in a [`DelayQueue`]
+//!   for the link model's transmission time before becoming runnable
+//!   (constraint C4: transmission overlaps other jobs' execution);
+//! * **compute** — the measured host inference time is padded by the
+//!   layer's FLOPS ratio ([`crate::device::EmulationProfile`]);
+//! * **exclusivity** — cloud and edge each execute on a dedicated engine
+//!   thread, one batch at a time (constraint C1); device requests are
+//!   per-patient and batch=1.
+//!
+//! PJRT wrapper types are deliberately `!Send` (`Rc`-based), so each layer
+//! owns an OS engine thread with its own `InferenceRuntime`; the rest of
+//! the coordinator is plain threads + channels (this build is offline and
+//! dependency-free; the same engine-thread pattern vLLM's router uses).
+//!
+//! Thread topology per run:
+//!
+//! ```text
+//! patient-gen ×P ──▶ router ──▶ delay-queue ×3 ──▶ executor ×3 ──▶ collector
+//!                                (network sim)       │  ▲
+//!                                                    ▼  │ (rendezvous)
+//!                                                  engine ×3 (PJRT)
+//! ```
+
+mod batcher;
+mod calibrate;
+mod delay;
+mod engine;
+mod policy;
+mod request;
+
+pub use batcher::{Batcher, Item};
+pub use calibrate::live_calibration;
+pub use delay::DelayQueue;
+pub use engine::{EngineHandle, EngineRequest};
+pub use policy::Policy;
+pub use request::{InferenceRequest, RequestGenerator};
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::allocation::Calibration;
+use crate::config::Environment;
+use crate::data::Rng;
+use crate::device::{EmulationProfile, Layer};
+use crate::metrics::{MetricsRegistry, MetricsReport};
+use crate::serialize::Value;
+use crate::{Error, Result};
+
+/// Serving-run parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Number of patient end devices.
+    pub patients: usize,
+    /// Requests each patient releases before stopping.
+    pub requests_per_patient: usize,
+    /// Mean per-patient arrival rate (requests/s of *simulated* time).
+    pub arrival_rate_hz: f64,
+    /// Routing policy.
+    pub policy: Policy,
+    /// Dynamic batching window per shared machine (ms, simulated).
+    pub batch_window_ms: u64,
+    /// Maximum rows per executed batch.
+    pub max_batch: usize,
+    /// Records per request (drives the transmission payload size; 64 = one
+    /// Table IV unit).
+    pub size_units: u32,
+    /// Compression factor from simulated milliseconds to real wall time
+    /// (0.05 → a 42 ms WAN hop sleeps 2.1 ms).  1.0 = real time.
+    pub time_scale: f64,
+    /// Emulate per-layer compute slowdown (off = raw host speed on every
+    /// layer; used by ablations).
+    pub emulate_compute: bool,
+    /// Extra multiplier on emulated processing time (1.0 = this host's
+    /// real speed).  ~30 reproduces the paper's TF/Keras-era
+    /// compute/network balance, where the edge-vs-device crossover of
+    /// Figure 5 appears (EXPERIMENTS.md §E2E).
+    pub compute_scale: f64,
+    /// Application mix as relative weights (breath, mortality, phenotype).
+    pub app_mix: [f64; 3],
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            patients: 4,
+            requests_per_patient: 8,
+            arrival_rate_hz: 2.0,
+            policy: Policy::AlgorithmOne,
+            batch_window_ms: 4,
+            max_batch: 8,
+            size_units: 64,
+            time_scale: 0.05,
+            emulate_compute: true,
+            compute_scale: 1.0,
+            app_mix: [0.4, 0.4, 0.2],
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Parse from a config section, layered over defaults.
+    pub fn from_reader(r: &crate::config::FieldReader) -> Result<Self> {
+        let def = ServeConfig::default();
+        let policy = match r.string("policy")? {
+            None => def.policy,
+            Some(s) => s.parse()?,
+        };
+        let cfg = ServeConfig {
+            patients: r.usize("patients")?.unwrap_or(def.patients),
+            requests_per_patient: r
+                .usize("requests_per_patient")?
+                .unwrap_or(def.requests_per_patient),
+            arrival_rate_hz: r
+                .f64("arrival_rate_hz")?
+                .unwrap_or(def.arrival_rate_hz),
+            policy,
+            batch_window_ms: r
+                .u64("batch_window_ms")?
+                .unwrap_or(def.batch_window_ms),
+            max_batch: r.usize("max_batch")?.unwrap_or(def.max_batch),
+            size_units: r.u32("size_units")?.unwrap_or(def.size_units),
+            time_scale: r.f64("time_scale")?.unwrap_or(def.time_scale),
+            emulate_compute: r
+                .bool("emulate_compute")?
+                .unwrap_or(def.emulate_compute),
+            compute_scale: r
+                .f64("compute_scale")?
+                .unwrap_or(def.compute_scale),
+            app_mix: r.f64_array::<3>("app_mix")?.unwrap_or(def.app_mix),
+        };
+        r.finish()?;
+        Ok(cfg)
+    }
+
+    /// Serialize as a config section.
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::object();
+        v.set("patients", self.patients);
+        v.set("requests_per_patient", self.requests_per_patient);
+        v.set("arrival_rate_hz", self.arrival_rate_hz);
+        v.set("policy", self.policy.label());
+        v.set("batch_window_ms", self.batch_window_ms);
+        v.set("max_batch", self.max_batch);
+        v.set("size_units", self.size_units);
+        v.set("time_scale", self.time_scale);
+        v.set("emulate_compute", self.emulate_compute);
+        v.set("compute_scale", self.compute_scale);
+        v.set("app_mix", self.app_mix.to_vec());
+        v
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.patients == 0 {
+            return Err(Error::Config("patients must be > 0".into()));
+        }
+        if self.arrival_rate_hz <= 0.0 {
+            return Err(Error::Config("arrival_rate_hz must be > 0".into()));
+        }
+        if self.time_scale <= 0.0 {
+            return Err(Error::Config("time_scale must be > 0".into()));
+        }
+        if self.max_batch == 0 {
+            return Err(Error::Config("max_batch must be > 0".into()));
+        }
+        if self.compute_scale <= 0.0 {
+            return Err(Error::Config("compute_scale must be > 0".into()));
+        }
+        if self.app_mix.iter().sum::<f64>() <= 0.0 {
+            return Err(Error::Config("app_mix must have positive mass".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Outcome of a serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub policy: Policy,
+    pub metrics: MetricsReport,
+    /// Requests routed per layer (CC, ES, ED).
+    pub routed: [u64; 3],
+    /// Total requests completed.
+    pub completed: u64,
+}
+
+impl ServeReport {
+    /// JSON rendering (`edgeward serve --json`).
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::object();
+        v.set("policy", self.policy.label());
+        v.set("completed", self.completed);
+        v.set(
+            "routed",
+            vec![self.routed[0], self.routed[1], self.routed[2]],
+        );
+        v.set("metrics", self.metrics.to_value());
+        v
+    }
+}
+
+/// One completed request's timing, sent to the metrics collector.
+#[derive(Debug, Clone, Copy)]
+struct Completion {
+    layer: Layer,
+    total: Duration,
+    transmission: Duration,
+    queueing: Duration,
+    processing: Duration,
+    batch_rows: usize,
+    /// true for the first row of a batch (so batches are counted once)
+    batch_head: bool,
+}
+
+/// The serving coordinator.
+pub struct Coordinator {
+    env: Environment,
+    calib: Calibration,
+    cfg: ServeConfig,
+    artifact_dir: String,
+}
+
+impl Coordinator {
+    pub fn new(
+        env: Environment,
+        calib: Calibration,
+        cfg: ServeConfig,
+        artifact_dir: impl Into<String>,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        Ok(Coordinator { env, calib, cfg, artifact_dir: artifact_dir.into() })
+    }
+
+    /// Run the serving experiment to completion (blocking).
+    pub fn run(&self, seed: u64) -> Result<ServeReport> {
+        let cfg = self.cfg.clone();
+        let emu = if cfg.emulate_compute {
+            self.env.emulation(Layer::Cloud)
+        } else {
+            EmulationProfile::identity()
+        };
+
+        // --- engines: one per layer, own PJRT client each ----------------
+        let engines = [
+            EngineHandle::spawn(&self.artifact_dir, Layer::Cloud)?,
+            EngineHandle::spawn(&self.artifact_dir, Layer::Edge)?,
+            EngineHandle::spawn(&self.artifact_dir, Layer::Device)?,
+        ];
+
+        let (done_tx, done_rx) = mpsc::channel::<Completion>();
+
+        // --- per-layer delay queue (network) + executor ------------------
+        let mut delay_queues: Vec<Arc<DelayQueue<Item>>> = Vec::new();
+        let mut layer_threads = Vec::new();
+        for (li, layer) in Layer::ALL.into_iter().enumerate() {
+            let dq: Arc<DelayQueue<Item>> = Arc::new(DelayQueue::new());
+            delay_queues.push(dq.clone());
+            let (exec_tx, exec_rx) = mpsc::channel::<Item>();
+            // forwarder: delay queue -> executor channel
+            let fwd = std::thread::Builder::new()
+                .name(format!("net-{}", layer.abbrev()))
+                .spawn(move || {
+                    while let Some(item) = dq.pop_blocking() {
+                        if exec_tx.send(item).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .map_err(|e| Error::Serving(e.to_string()))?;
+            // executor: batcher + engine + emulation padding
+            let engine = engines[li].clone();
+            let done = done_tx.clone();
+            let cfg_c = cfg.clone();
+            let emu_c = emu.clone();
+            let exec = std::thread::Builder::new()
+                .name(format!("exec-{}", layer.abbrev()))
+                .spawn(move || {
+                    run_executor(layer, exec_rx, engine, done, cfg_c, emu_c)
+                })
+                .map_err(|e| Error::Serving(e.to_string()))?;
+            layer_threads.push(fwd);
+            layer_threads.push(exec);
+        }
+        drop(done_tx);
+
+        // --- patient request generators ----------------------------------
+        let (gen_tx, gen_rx) = mpsc::channel::<InferenceRequest>();
+        let mut gen_threads = Vec::new();
+        for p in 0..cfg.patients {
+            let tx = gen_tx.clone();
+            let cfg_c = cfg.clone();
+            let t = std::thread::Builder::new()
+                .name(format!("patient-{p}"))
+                .spawn(move || {
+                    let mut gen = RequestGenerator::new(
+                        seed ^ (p as u64).wrapping_mul(0x9E37_79B9),
+                        p,
+                        cfg_c.app_mix,
+                        cfg_c.size_units,
+                    );
+                    for _ in 0..cfg_c.requests_per_patient {
+                        let gap_s = gen.next_gap_s(cfg_c.arrival_rate_hz);
+                        std::thread::sleep(Duration::from_secs_f64(
+                            gap_s * cfg_c.time_scale,
+                        ));
+                        if tx.send(gen.next_request()).is_err() {
+                            return;
+                        }
+                    }
+                })
+                .map_err(|e| Error::Serving(e.to_string()))?;
+            gen_threads.push(t);
+        }
+        drop(gen_tx);
+
+        // --- router -------------------------------------------------------
+        let env = self.env.clone();
+        let calib = self.calib;
+        let cfg_c = cfg.clone();
+        let dq_router: Vec<Arc<DelayQueue<Item>>> = delay_queues.clone();
+        let routed = Arc::new(std::sync::Mutex::new([0u64; 3]));
+        let routed_c = routed.clone();
+        let router = std::thread::Builder::new()
+            .name("router".into())
+            .spawn(move || {
+                let mut rr = 0usize;
+                let mut net_rng = Rng::new(seed ^ 0xDEAD_BEEF);
+                while let Ok(req) = gen_rx.recv() {
+                    let layer = cfg_c.policy.route(
+                        req.app,
+                        req.size_units,
+                        &env,
+                        &calib,
+                        &mut rr,
+                    );
+                    routed_c.lock().unwrap()[layer_index(layer)] += 1;
+                    // one patient window = one record's share of the
+                    // workload dataset
+                    let payload_kb = req.app.data_kb(req.size_units)
+                        / req.size_units.max(1) as f64;
+                    let u = net_rng.uniform();
+                    let trans_ms =
+                        transmission_with_jitter(&env, layer, payload_kb, u);
+                    let t = Duration::from_secs_f64(
+                        trans_ms / 1e3 * cfg_c.time_scale,
+                    );
+                    let ready = Instant::now() + t;
+                    dq_router[layer_index(layer)]
+                        .push(ready, (req.with_transmission(t), ready));
+                }
+                for dq in &dq_router {
+                    dq.close();
+                }
+            })
+            .map_err(|e| Error::Serving(e.to_string()))?;
+
+        // --- collector (this thread) ---------------------------------------
+        let total_requests = (cfg.patients * cfg.requests_per_patient) as u64;
+        let started = Instant::now();
+        let mut registry = MetricsRegistry::new();
+        let mut completed = 0u64;
+        while let Ok(c) = done_rx.recv() {
+            registry.record_request(
+                c.layer,
+                c.total,
+                c.transmission,
+                c.queueing,
+                c.processing,
+            );
+            if c.batch_head {
+                registry.record_batch(c.layer, c.batch_rows);
+            }
+            completed += 1;
+            if completed >= total_requests {
+                break;
+            }
+        }
+        registry.set_window(0.0, started.elapsed().as_secs_f64() * 1e3);
+
+        // --- orderly shutdown ----------------------------------------------
+        for t in gen_threads {
+            let _ = t.join();
+        }
+        let _ = router.join();
+        for t in layer_threads {
+            let _ = t.join();
+        }
+
+        let routed = *routed.lock().unwrap();
+        Ok(ServeReport {
+            policy: cfg.policy,
+            metrics: registry.report(),
+            routed,
+            completed,
+        })
+    }
+}
+
+fn layer_index(l: Layer) -> usize {
+    match l {
+        Layer::Cloud => 0,
+        Layer::Edge => 1,
+        Layer::Device => 2,
+    }
+}
+
+fn transmission_with_jitter(
+    env: &Environment,
+    layer: Layer,
+    kb: f64,
+    u: f64,
+) -> f64 {
+    match layer {
+        Layer::Device => 0.0,
+        Layer::Edge => env.network.edge_device.transfer_ms_jittered(kb, u),
+        Layer::Cloud => {
+            env.network.edge_device.transfer_ms_jittered(kb, u)
+                + env.network.cloud_edge.transfer_ms_jittered(kb, u)
+        }
+    }
+}
+
+/// Per-layer executor: drains the queue through the batcher and runs
+/// batches on the layer's engine, padding wall time per the emulation
+/// profile.
+fn run_executor(
+    layer: Layer,
+    rx: mpsc::Receiver<Item>,
+    engine: EngineHandle,
+    done: mpsc::Sender<Completion>,
+    cfg: ServeConfig,
+    emu: EmulationProfile,
+) {
+    let window = Duration::from_secs_f64(
+        cfg.batch_window_ms as f64 / 1e3 * cfg.time_scale,
+    );
+    // device layer: per-patient private hardware → no cross-patient
+    // batching; run singles
+    let max_batch = if layer == Layer::Device { 1 } else { cfg.max_batch };
+    let mut batcher = Batcher::new(max_batch, window);
+
+    while let Some(batch) = batcher.next_batch(&rx) {
+        let app = batch[0].0.app;
+        let rows = batch.len();
+        let row_len = app.seq_len() * app.input_dim();
+        let mut input = Vec::with_capacity(rows * row_len);
+        for (req, _) in &batch {
+            input.extend_from_slice(&req.features);
+        }
+        let exec_start = Instant::now();
+        let result = engine.infer(app, rows, input);
+        let host_elapsed = match &result {
+            Ok(out) => out.elapsed,
+            Err(_) => Duration::ZERO,
+        };
+        // emulate the slower layer: pad to the FLOPS-scaled (and
+        // compute_scale-multiplied) duration
+        let processing =
+            emu.scale(layer, host_elapsed).mul_f64(cfg.compute_scale);
+        let pad = processing
+            .saturating_sub(host_elapsed)
+            .mul_f64(cfg.time_scale);
+        if pad > Duration::ZERO {
+            std::thread::sleep(pad);
+        }
+        for (i, (req, arrived)) in batch.iter().enumerate() {
+            let total = req.created.elapsed();
+            let queueing = exec_start.saturating_duration_since(*arrived);
+            let _ = done.send(Completion {
+                layer,
+                total,
+                transmission: req.transmission,
+                queueing,
+                processing,
+                batch_rows: rows,
+                batch_head: i == 0,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_valid() {
+        ServeConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = ServeConfig::default();
+        c.patients = 0;
+        assert!(c.validate().is_err());
+        let mut c = ServeConfig::default();
+        c.time_scale = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = ServeConfig::default();
+        c.app_mix = [0.0; 3];
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn layer_index_distinct() {
+        let idx: std::collections::HashSet<_> =
+            Layer::ALL.iter().map(|&l| layer_index(l)).collect();
+        assert_eq!(idx.len(), 3);
+    }
+
+    #[test]
+    fn config_value_roundtrip() {
+        let cfg = ServeConfig::default();
+        let v = cfg.to_value();
+        let r = crate::config::FieldReader::new(&v, "serve").unwrap();
+        let back = ServeConfig::from_reader(&r).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn transmission_monotone_in_layer() {
+        let env = Environment::paper();
+        let t_e = transmission_with_jitter(&env, Layer::Edge, 100.0, 0.5);
+        let t_c = transmission_with_jitter(&env, Layer::Cloud, 100.0, 0.5);
+        let t_d = transmission_with_jitter(&env, Layer::Device, 100.0, 0.5);
+        assert_eq!(t_d, 0.0);
+        assert!(t_c > t_e && t_e > 0.0);
+    }
+}

@@ -1,0 +1,134 @@
+//! Routing policies for the serving path.
+
+
+use crate::allocation::{allocate_single, Calibration};
+use crate::config::Environment;
+use crate::device::Layer;
+use crate::workload::{Application, Workload};
+
+/// Where to run each incoming request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// The paper's Algorithm 1: per-request argmin of estimated response
+    /// time (the workload's size decides — heavy models go up, light
+    /// models stay down).
+    AlgorithmOne,
+    /// Everything to the cloud (the classic pre-edge deployment).
+    FixedCloud,
+    /// Everything to the edge server (the "common practice" §I criticizes).
+    FixedEdge,
+    /// Everything on the patient's own device.
+    FixedDevice,
+    /// Round-robin across layers (load-spreading strawman).
+    RoundRobin,
+}
+
+impl Policy {
+    pub const ALL: [Policy; 5] = [
+        Policy::AlgorithmOne,
+        Policy::FixedCloud,
+        Policy::FixedEdge,
+        Policy::FixedDevice,
+        Policy::RoundRobin,
+    ];
+
+    /// Route one request.  `rr_state` is the router's round-robin counter.
+    pub fn route(
+        self,
+        app: Application,
+        size_units: u32,
+        env: &Environment,
+        calib: &Calibration,
+        rr_state: &mut usize,
+    ) -> Layer {
+        match self {
+            Policy::AlgorithmOne => {
+                allocate_single(&Workload::new(app, size_units), env, calib)
+                    .chosen
+            }
+            Policy::FixedCloud => Layer::Cloud,
+            Policy::FixedEdge => Layer::Edge,
+            Policy::FixedDevice => Layer::Device,
+            Policy::RoundRobin => {
+                let l = Layer::ALL[*rr_state % 3];
+                *rr_state += 1;
+                l
+            }
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Policy::AlgorithmOne => "algorithm-1",
+            Policy::FixedCloud => "fixed-cloud",
+            Policy::FixedEdge => "fixed-edge",
+            Policy::FixedDevice => "fixed-device",
+            Policy::RoundRobin => "round-robin",
+        }
+    }
+}
+
+impl std::str::FromStr for Policy {
+    type Err = crate::Error;
+
+    fn from_str(s: &str) -> crate::Result<Self> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "algorithm-1" | "alg1" | "ours" => Ok(Policy::AlgorithmOne),
+            "fixed-cloud" | "cloud" => Ok(Policy::FixedCloud),
+            "fixed-edge" | "edge" => Ok(Policy::FixedEdge),
+            "fixed-device" | "device" => Ok(Policy::FixedDevice),
+            "round-robin" | "rr" => Ok(Policy::RoundRobin),
+            other => Err(crate::Error::Config(format!(
+                "unknown policy {other:?}"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algorithm1_routes_by_table_v() {
+        let env = Environment::paper();
+        let calib = Calibration::paper();
+        let mut rr = 0;
+        // Table V chosen layers at unit size
+        assert_eq!(
+            Policy::AlgorithmOne.route(Application::Breath, 64, &env, &calib, &mut rr),
+            Layer::Edge
+        );
+        assert_eq!(
+            Policy::AlgorithmOne.route(Application::Mortality, 64, &env, &calib, &mut rr),
+            Layer::Device
+        );
+        assert_eq!(
+            Policy::AlgorithmOne.route(Application::Phenotype, 64, &env, &calib, &mut rr),
+            Layer::Edge
+        );
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let env = Environment::paper();
+        let calib = Calibration::paper();
+        let mut rr = 0;
+        let seq: Vec<Layer> = (0..6)
+            .map(|_| {
+                Policy::RoundRobin.route(
+                    Application::Breath, 64, &env, &calib, &mut rr,
+                )
+            })
+            .collect();
+        assert_eq!(&seq[0..3], &Layer::ALL);
+        assert_eq!(&seq[3..6], &Layer::ALL);
+    }
+
+    #[test]
+    fn parse_aliases() {
+        assert_eq!("ours".parse::<Policy>().unwrap(), Policy::AlgorithmOne);
+        assert_eq!("cloud".parse::<Policy>().unwrap(), Policy::FixedCloud);
+        assert!("fog".parse::<Policy>().is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Inference requests and per-patient request generation.
+
+use std::time::{Duration, Instant};
+
+use crate::data::{EpisodeGenerator, Rng};
+use crate::workload::Application;
+
+/// One in-flight inference request: a patient's 48-hour vitals window.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub patient: usize,
+    pub app: Application,
+    /// Records represented by this request's payload (transmission size).
+    pub size_units: u32,
+    /// Flattened `(seq_len × input_dim)` feature row.
+    pub features: Vec<f32>,
+    /// Wall-clock release time.
+    pub created: Instant,
+    /// Simulated uplink time actually spent (set by the router).
+    pub transmission: Duration,
+}
+
+impl InferenceRequest {
+    pub fn with_transmission(mut self, t: Duration) -> Self {
+        self.transmission = t;
+        self
+    }
+}
+
+/// Deterministic per-patient request source: exponential inter-arrival
+/// gaps and an application mix.
+pub struct RequestGenerator {
+    rng: Rng,
+    episodes: EpisodeGenerator,
+    patient: usize,
+    app_mix: [f64; 3],
+    size_units: u32,
+    next_id: u64,
+}
+
+impl RequestGenerator {
+    pub fn new(
+        seed: u64,
+        patient: usize,
+        app_mix: [f64; 3],
+        size_units: u32,
+    ) -> Self {
+        RequestGenerator {
+            rng: Rng::new(seed),
+            episodes: EpisodeGenerator::new(seed.wrapping_add(1)),
+            patient,
+            app_mix,
+            size_units,
+            next_id: (patient as u64) << 32,
+        }
+    }
+
+    /// Next exponential inter-arrival gap in (simulated) seconds.
+    pub fn next_gap_s(&mut self, rate_hz: f64) -> f64 {
+        self.rng.exponential(rate_hz.max(1e-9))
+    }
+
+    /// Sample the application mix.
+    pub fn next_app(&mut self) -> Application {
+        let total: f64 = self.app_mix.iter().sum();
+        let mut u = self.rng.uniform() * total;
+        for (i, &w) in self.app_mix.iter().enumerate() {
+            if u < w {
+                return Application::ALL[i];
+            }
+            u -= w;
+        }
+        Application::Phenotype
+    }
+
+    /// Produce the next request (episode features included).
+    pub fn next_request(&mut self) -> InferenceRequest {
+        let app = self.next_app();
+        let ep = self.episodes.episode(app);
+        let id = self.next_id;
+        self.next_id += 1;
+        InferenceRequest {
+            id,
+            patient: self.patient,
+            app,
+            size_units: self.size_units,
+            features: ep.features,
+            created: Instant::now(),
+            transmission: Duration::ZERO,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_unique_per_patient() {
+        let mut g = RequestGenerator::new(1, 3, [1.0, 1.0, 1.0], 64);
+        let a = g.next_request();
+        let b = g.next_request();
+        assert_ne!(a.id, b.id);
+        assert_eq!(a.patient, 3);
+        // patient id encoded in the high bits
+        assert_eq!(a.id >> 32, 3);
+    }
+
+    #[test]
+    fn app_mix_respected() {
+        let mut g = RequestGenerator::new(2, 0, [1.0, 0.0, 0.0], 64);
+        for _ in 0..50 {
+            assert_eq!(g.next_app(), Application::Breath);
+        }
+        let mut g = RequestGenerator::new(3, 0, [0.0, 0.0, 1.0], 64);
+        for _ in 0..50 {
+            assert_eq!(g.next_app(), Application::Phenotype);
+        }
+    }
+
+    #[test]
+    fn features_match_app_shape() {
+        let mut g = RequestGenerator::new(4, 0, [0.0, 1.0, 0.0], 64);
+        let r = g.next_request();
+        assert_eq!(r.app, Application::Mortality);
+        assert_eq!(
+            r.features.len(),
+            r.app.seq_len() * r.app.input_dim()
+        );
+    }
+
+    #[test]
+    fn gaps_positive() {
+        let mut g = RequestGenerator::new(5, 0, [1.0, 1.0, 1.0], 64);
+        for _ in 0..100 {
+            assert!(g.next_gap_s(2.0) > 0.0);
+        }
+    }
+}

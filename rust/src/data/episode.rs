@@ -1,0 +1,170 @@
+//! Patient episode generation: AR(1) vitals → benchmark feature tensor.
+//!
+//! Feature layout per timestep (Harutyunyan-style):
+//!   `[ value_0..16 ‖ mask_0..16 ‖ delta_0..16 ‖ extras… ]`
+//! padded/truncated to the model's `input_dim` (76 for breath/phenotype,
+//! 101 for mortality — the mortality pipeline appends 25 aggregate
+//! features, which we synthesize as rolling statistics).
+
+use super::rng::Rng;
+use super::vitals::CHANNELS;
+use crate::workload::Application;
+
+/// A generated 48-hour patient window, flattened time-major
+/// (`features[t * input_dim + f]`) — exactly the layout the AOT artifacts
+/// expect for one batch row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PatientEpisode {
+    pub app: Application,
+    pub patient_id: u64,
+    pub features: Vec<f32>,
+}
+
+/// Deterministic episode generator.
+#[derive(Debug, Clone)]
+pub struct EpisodeGenerator {
+    rng: Rng,
+    next_patient: u64,
+}
+
+impl EpisodeGenerator {
+    pub fn new(seed: u64) -> Self {
+        EpisodeGenerator { rng: Rng::new(seed), next_patient: 0 }
+    }
+
+    /// Generate one episode for the given application.
+    pub fn episode(&mut self, app: Application) -> PatientEpisode {
+        let pid = self.next_patient;
+        self.next_patient += 1;
+        let mut rng = self.rng.fork(pid);
+        let features = generate_features(&mut rng, app);
+        PatientEpisode { app, patient_id: pid, features }
+    }
+
+    /// Generate a batch of `n` episodes flattened into one contiguous
+    /// buffer (`n × seq_len × input_dim`), ready for a batched artifact.
+    pub fn batch(&mut self, app: Application, n: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(n * app.seq_len() * app.input_dim());
+        for _ in 0..n {
+            out.extend_from_slice(&self.episode(app).features);
+        }
+        out
+    }
+}
+
+/// One patient's feature tensor (time-major, `seq_len × input_dim`).
+fn generate_features(rng: &mut Rng, app: Application) -> Vec<f32> {
+    let t_len = app.seq_len();
+    let dim = app.input_dim();
+    let n_ch = CHANNELS.len();
+
+    // Per-patient baselines: individual set-points around population means.
+    let baselines: Vec<f64> = CHANNELS
+        .iter()
+        .map(|c| c.clamp(rng.normal_ms(c.mean, c.std * 0.6)))
+        .collect();
+
+    // AR(1) latent state per channel, carried-forward last observation.
+    let mut latent = baselines.clone();
+    let mut last_obs = baselines.clone();
+    let mut hours_since = vec![0.0f64; n_ch];
+
+    let mut feats = vec![0.0f32; t_len * dim];
+    for t in 0..t_len {
+        for (ci, ch) in CHANNELS.iter().enumerate() {
+            // latent physiology evolves regardless of observation
+            let noise = rng.normal() * ch.std * (1.0 - ch.persistence).sqrt();
+            latent[ci] = ch.clamp(
+                baselines[ci]
+                    + ch.persistence * (latent[ci] - baselines[ci])
+                    + noise,
+            );
+            let observed = rng.bernoulli(ch.observe_p);
+            if observed {
+                last_obs[ci] = latent[ci];
+                hours_since[ci] = 0.0;
+            } else {
+                hours_since[ci] += 1.0;
+            }
+            let row = &mut feats[t * dim..(t + 1) * dim];
+            // value block
+            row[ci] = ch.normalize(last_obs[ci]) as f32;
+            // mask block
+            row[n_ch + ci] = if observed { 1.0 } else { 0.0 };
+            // delta (hours since last observation, log-compressed)
+            if 2 * n_ch + ci < dim {
+                row[2 * n_ch + ci] = (hours_since[ci] + 1.0).ln() as f32;
+            }
+        }
+        // extras beyond 3×17 = 51: rolling aggregates (mortality's 101-dim
+        // pipeline) — mean/min/max of the value block so far, cycled.
+        let row_start = t * dim;
+        for f in (3 * n_ch).min(dim)..dim {
+            let ci = (f - 3 * n_ch) % n_ch;
+            let kind = (f - 3 * n_ch) / n_ch;
+            let val = feats[row_start + ci] as f64;
+            feats[row_start + f] = match kind {
+                0 => (val * 0.5) as f32,                  // smoothed value
+                1 => val.max(0.0) as f32,                 // positive part
+                _ => (val * val).min(9.0) as f32,         // squared, clipped
+            };
+        }
+    }
+    feats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feature_values_bounded() {
+        let mut g = EpisodeGenerator::new(11);
+        for app in Application::ALL {
+            let ep = g.episode(app);
+            for &f in &ep.features {
+                assert!(f.is_finite());
+                assert!(f.abs() < 50.0, "implausible feature {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn mask_block_is_binary() {
+        let mut g = EpisodeGenerator::new(5);
+        let app = Application::Breath;
+        let ep = g.episode(app);
+        let dim = app.input_dim();
+        let n_ch = CHANNELS.len();
+        for t in 0..app.seq_len() {
+            for ci in 0..n_ch {
+                let m = ep.features[t * dim + n_ch + ci];
+                assert!(m == 0.0 || m == 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_is_concatenation() {
+        let mut g1 = EpisodeGenerator::new(21);
+        let mut g2 = EpisodeGenerator::new(21);
+        let app = Application::Mortality;
+        let b = g1.batch(app, 3);
+        let e0 = g2.episode(app);
+        let e1 = g2.episode(app);
+        let e2 = g2.episode(app);
+        let mut cat = e0.features.clone();
+        cat.extend(e1.features);
+        cat.extend(e2.features);
+        assert_eq!(b, cat);
+    }
+
+    #[test]
+    fn patients_differ() {
+        let mut g = EpisodeGenerator::new(1);
+        let a = g.episode(Application::Breath);
+        let b = g.episode(Application::Breath);
+        assert_ne!(a.features, b.features);
+        assert_ne!(a.patient_id, b.patient_id);
+    }
+}

@@ -1,0 +1,45 @@
+//! Synthetic ICU vital-sign data substrate.
+//!
+//! The paper uses MIMIC-III [22], which is access-gated (PhysioNet
+//! credentialing).  Per the substitution ledger (DESIGN.md §3) we generate
+//! synthetic patient episodes shaped exactly like the Harutyunyan et al.
+//! MIMIC-III benchmark featurization the three Edge AIBench models consume:
+//! 17 clinical channels sampled hourly, expanded to a 76-dimensional
+//! (value ‖ mask ‖ delta) feature vector over a 48-hour window (101-dim for
+//! the mortality variant).  Everything evaluated by the paper — data sizes,
+//! model FLOPs, response times — depends only on shapes, which match.
+//!
+//! Generation is fully deterministic from a seed (SplitMix64; no external
+//! RNG dependency) so every experiment is reproducible bit-for-bit.
+
+mod episode;
+mod rng;
+mod vitals;
+
+pub use episode::{EpisodeGenerator, PatientEpisode};
+pub use rng::Rng;
+pub use vitals::{VitalChannel, CHANNELS};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Application;
+
+    #[test]
+    fn generator_shapes_match_models() {
+        let mut g = EpisodeGenerator::new(7);
+        for app in Application::ALL {
+            let ep = g.episode(app);
+            assert_eq!(ep.features.len(), app.seq_len() * app.input_dim());
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = EpisodeGenerator::new(3).episode(Application::Breath);
+        let b = EpisodeGenerator::new(3).episode(Application::Breath);
+        assert_eq!(a.features, b.features);
+        let c = EpisodeGenerator::new(4).episode(Application::Breath);
+        assert_ne!(a.features, c.features);
+    }
+}

@@ -1,0 +1,89 @@
+//! Clinical vital-sign channel definitions.
+//!
+//! The 17 channels of the Harutyunyan et al. MIMIC-III benchmark (the
+//! featurization Edge AIBench's ICU models consume), with physiologically
+//! plausible means/ranges and an AR(1) temporal model per channel.
+
+/// One monitored channel.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VitalChannel {
+    pub name: &'static str,
+    /// Population mean in natural units.
+    pub mean: f64,
+    /// Population std.
+    pub std: f64,
+    /// Plausible clamp range.
+    pub lo: f64,
+    pub hi: f64,
+    /// AR(1) persistence per hour (0 = white noise, 1 = frozen).
+    pub persistence: f64,
+    /// Probability a reading is observed in a given hour (MIMIC-style
+    /// missingness; unobserved readings are carried forward and masked).
+    pub observe_p: f64,
+}
+
+/// The 17 benchmark channels.
+pub const CHANNELS: [VitalChannel; 17] = [
+    VitalChannel { name: "capillary_refill_rate", mean: 0.5, std: 0.5, lo: 0.0, hi: 1.0, persistence: 0.9, observe_p: 0.05 },
+    VitalChannel { name: "diastolic_bp", mean: 59.0, std: 13.0, lo: 20.0, hi: 130.0, persistence: 0.8, observe_p: 0.85 },
+    VitalChannel { name: "fio2", mean: 0.21, std: 0.10, lo: 0.21, hi: 1.0, persistence: 0.95, observe_p: 0.25 },
+    VitalChannel { name: "gcs_eye", mean: 3.5, std: 0.8, lo: 1.0, hi: 4.0, persistence: 0.92, observe_p: 0.4 },
+    VitalChannel { name: "gcs_motor", mean: 5.4, std: 1.2, lo: 1.0, hi: 6.0, persistence: 0.92, observe_p: 0.4 },
+    VitalChannel { name: "gcs_total", mean: 12.9, std: 2.8, lo: 3.0, hi: 15.0, persistence: 0.92, observe_p: 0.4 },
+    VitalChannel { name: "gcs_verbal", mean: 4.0, std: 1.3, lo: 1.0, hi: 5.0, persistence: 0.92, observe_p: 0.4 },
+    VitalChannel { name: "glucose", mean: 128.0, std: 48.0, lo: 30.0, hi: 500.0, persistence: 0.7, observe_p: 0.3 },
+    VitalChannel { name: "heart_rate", mean: 86.0, std: 18.0, lo: 20.0, hi: 220.0, persistence: 0.75, observe_p: 0.95 },
+    VitalChannel { name: "height_cm", mean: 170.0, std: 11.0, lo: 120.0, hi: 210.0, persistence: 1.0, observe_p: 0.02 },
+    VitalChannel { name: "mean_bp", mean: 77.0, std: 14.0, lo: 30.0, hi: 180.0, persistence: 0.8, observe_p: 0.85 },
+    VitalChannel { name: "oxygen_saturation", mean: 97.0, std: 2.5, lo: 60.0, hi: 100.0, persistence: 0.8, observe_p: 0.9 },
+    VitalChannel { name: "respiratory_rate", mean: 19.0, std: 6.0, lo: 4.0, hi: 60.0, persistence: 0.7, observe_p: 0.9 },
+    VitalChannel { name: "systolic_bp", mean: 118.0, std: 22.0, lo: 50.0, hi: 250.0, persistence: 0.8, observe_p: 0.85 },
+    VitalChannel { name: "temperature_c", mean: 37.0, std: 0.7, lo: 33.0, hi: 42.0, persistence: 0.9, observe_p: 0.5 },
+    VitalChannel { name: "weight_kg", mean: 81.0, std: 23.0, lo: 30.0, hi: 250.0, persistence: 1.0, observe_p: 0.05 },
+    VitalChannel { name: "ph", mean: 7.4, std: 0.08, lo: 6.8, hi: 7.8, persistence: 0.85, observe_p: 0.2 },
+];
+
+impl VitalChannel {
+    /// Normalize a natural-units reading to roughly unit scale for the
+    /// model input (z-score against population statistics).
+    pub fn normalize(&self, x: f64) -> f64 {
+        (x - self.mean) / self.std.max(1e-9)
+    }
+
+    /// Clamp to the plausible range.
+    pub fn clamp(&self, x: f64) -> f64 {
+        x.clamp(self.lo, self.hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seventeen_channels() {
+        assert_eq!(CHANNELS.len(), 17);
+        // names unique
+        let mut names: Vec<_> = CHANNELS.iter().map(|c| c.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 17);
+    }
+
+    #[test]
+    fn ranges_sane() {
+        for c in CHANNELS {
+            assert!(c.lo < c.hi, "{}", c.name);
+            assert!(c.mean >= c.lo && c.mean <= c.hi, "{}", c.name);
+            assert!((0.0..=1.0).contains(&c.persistence));
+            assert!((0.0..=1.0).contains(&c.observe_p));
+        }
+    }
+
+    #[test]
+    fn normalize_zero_at_mean() {
+        for c in CHANNELS {
+            assert!(c.normalize(c.mean).abs() < 1e-12);
+        }
+    }
+}

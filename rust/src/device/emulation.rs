@@ -1,0 +1,102 @@
+//! Layer emulation: run real inference on the local host, scaled to each
+//! layer's computational ability.
+//!
+//! The paper's testbed is three physical machines; we have one host
+//! (substitution ledger, DESIGN.md §3).  The serving coordinator executes
+//! the *actual* PJRT inference locally and pads wall-time so the effective
+//! throughput matches each layer's FLOPS ratio: a layer with half the
+//! reference FLOPS takes twice as long.
+
+use std::time::Duration;
+
+
+use super::{DeviceSpec, Layer, PerLayer};
+
+/// Maps each layer to a wall-time multiplier relative to the local host.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EmulationProfile {
+    /// Per-layer slowdown multiplier (>= 1.0 for layers slower than the
+    /// reference; the reference layer has multiplier 1.0).
+    pub slowdown: PerLayer<f64>,
+}
+
+impl EmulationProfile {
+    /// Build from device specs, treating `reference` as "this host":
+    /// `slowdown(l) = FLOPS(reference) / FLOPS(l)`.
+    ///
+    /// With the paper's Table III devices and `reference = Cloud`, the edge
+    /// runs 3× slower and the device 4.4× slower than the host.
+    pub fn from_specs(
+        cloud: &DeviceSpec,
+        edge: &DeviceSpec,
+        device: &DeviceSpec,
+        reference: Layer,
+    ) -> Self {
+        let f = PerLayer {
+            cloud: cloud.gflops(),
+            edge: edge.gflops(),
+            device: device.gflops(),
+        };
+        let ref_flops = *f.get(reference);
+        EmulationProfile { slowdown: f.map(|_, v| ref_flops / v) }
+    }
+
+    /// No emulation: every layer runs at host speed.
+    pub fn identity() -> Self {
+        EmulationProfile {
+            slowdown: PerLayer { cloud: 1.0, edge: 1.0, device: 1.0 },
+        }
+    }
+
+    /// Scale a measured host duration to the given layer.
+    pub fn scale(&self, layer: Layer, host_time: Duration) -> Duration {
+        host_time.mul_f64(*self.slowdown.get(layer))
+    }
+
+    /// Extra wall time to sleep after running for `host_time` on the host
+    /// to emulate running on `layer` (zero for the reference layer).
+    pub fn pad(&self, layer: Layer, host_time: Duration) -> Duration {
+        self.scale(layer, host_time).saturating_sub(host_time)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_profile() -> EmulationProfile {
+        EmulationProfile::from_specs(
+            &DeviceSpec::paper_cloud(),
+            &DeviceSpec::paper_edge(),
+            &DeviceSpec::paper_device(),
+            Layer::Cloud,
+        )
+    }
+
+    #[test]
+    fn paper_ratios() {
+        let p = paper_profile();
+        assert!((p.slowdown.cloud - 1.0).abs() < 1e-12);
+        assert!((p.slowdown.edge - 3.0).abs() < 1e-12); // 422.4 / 140.8
+        assert!((p.slowdown.device - 4.4).abs() < 1e-12); // 422.4 / 96
+    }
+
+    #[test]
+    fn scale_and_pad() {
+        let p = paper_profile();
+        let t = Duration::from_millis(100);
+        assert_eq!(p.scale(Layer::Edge, t), Duration::from_millis(300));
+        assert_eq!(p.pad(Layer::Edge, t), Duration::from_millis(200));
+        assert_eq!(p.pad(Layer::Cloud, t), Duration::ZERO);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let p = EmulationProfile::identity();
+        let t = Duration::from_millis(7);
+        for l in Layer::ALL {
+            assert_eq!(p.scale(l, t), t);
+            assert_eq!(p.pad(l, t), Duration::ZERO);
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Device substrate: the three hierarchy layers and their computational
+//! ability model.
+//!
+//! The paper (assumption (c), §III-C) reduces every device to its peak
+//! floating-point throughput: `FLOPS = cores × frequency × flops/cycle`.
+//! Table III instantiates this for the evaluation testbed; [`DeviceSpec`]
+//! reproduces those numbers exactly and [`EmulationProfile`] maps them to
+//! slowdown factors the serving coordinator uses to emulate each layer on
+//! the local host.
+
+mod emulation;
+mod spec;
+
+pub use emulation::EmulationProfile;
+pub use spec::DeviceSpec;
+
+
+/// The three layers of the hierarchically-structured framework (Fig. 1).
+#[derive(
+    Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord,
+)]
+pub enum Layer {
+    /// Cloud cluster (CC): remote datacenter, highest FLOPS, slowest link.
+    Cloud,
+    /// Edge server (ES): in-room server shared by all patients.
+    Edge,
+    /// End device (ED): per-patient bedside device; data originates here,
+    /// so deploying here incurs zero transmission time (assumption (a)).
+    Device,
+}
+
+impl Layer {
+    /// All layers, cloud-first (the paper's CC/ES/ED ordering).
+    pub const ALL: [Layer; 3] = [Layer::Cloud, Layer::Edge, Layer::Device];
+
+    /// The paper's two-letter abbreviation.
+    pub fn abbrev(self) -> &'static str {
+        match self {
+            Layer::Cloud => "CC",
+            Layer::Edge => "ES",
+            Layer::Device => "ED",
+        }
+    }
+
+    /// Human-readable name used in tables and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Layer::Cloud => "Cloud Server",
+            Layer::Edge => "Edge Server",
+            Layer::Device => "End Device",
+        }
+    }
+}
+
+impl std::fmt::Display for Layer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Layer {
+    type Err = crate::Error;
+
+    fn from_str(s: &str) -> crate::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "cloud" | "cc" | "cloud_server" => Ok(Layer::Cloud),
+            "edge" | "es" | "edge_server" => Ok(Layer::Edge),
+            "device" | "ed" | "end_device" => Ok(Layer::Device),
+            other => Err(crate::Error::Config(format!(
+                "unknown layer {other:?} (expected cloud|edge|device)"
+            ))),
+        }
+    }
+}
+
+/// A value per hierarchy layer — used for estimates, FLOPS, λ coefficients.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct PerLayer<T> {
+    pub cloud: T,
+    pub edge: T,
+    pub device: T,
+}
+
+impl<T> PerLayer<T> {
+    /// Build from a function of the layer.
+    pub fn from_fn(mut f: impl FnMut(Layer) -> T) -> Self {
+        PerLayer {
+            cloud: f(Layer::Cloud),
+            edge: f(Layer::Edge),
+            device: f(Layer::Device),
+        }
+    }
+
+    /// Access by layer.
+    pub fn get(&self, layer: Layer) -> &T {
+        match layer {
+            Layer::Cloud => &self.cloud,
+            Layer::Edge => &self.edge,
+            Layer::Device => &self.device,
+        }
+    }
+
+    /// Mutable access by layer.
+    pub fn get_mut(&mut self, layer: Layer) -> &mut T {
+        match layer {
+            Layer::Cloud => &mut self.cloud,
+            Layer::Edge => &mut self.edge,
+            Layer::Device => &mut self.device,
+        }
+    }
+
+    /// Iterate `(layer, value)` cloud-first.
+    pub fn iter(&self) -> impl Iterator<Item = (Layer, &T)> {
+        Layer::ALL.iter().map(move |&l| (l, self.get(l)))
+    }
+
+    /// Map every layer's value.
+    pub fn map<U>(&self, mut f: impl FnMut(Layer, &T) -> U) -> PerLayer<U> {
+        PerLayer {
+            cloud: f(Layer::Cloud, &self.cloud),
+            edge: f(Layer::Edge, &self.edge),
+            device: f(Layer::Device, &self.device),
+        }
+    }
+}
+
+impl PerLayer<f64> {
+    /// The layer with the minimum value (ties resolved cloud-first, the
+    /// paper's iteration order in Algorithm 1 keeps the *first* minimum).
+    pub fn argmin(&self) -> Layer {
+        let mut best = Layer::Cloud;
+        for &l in &Layer::ALL {
+            if self.get(l) < self.get(best) {
+                best = l;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_roundtrip_str() {
+        for l in Layer::ALL {
+            let s = format!("{l:?}").to_lowercase();
+            assert_eq!(s.parse::<Layer>().unwrap(), l);
+        }
+        assert_eq!("CC".parse::<Layer>().unwrap(), Layer::Cloud);
+        assert!("fog".parse::<Layer>().is_err());
+    }
+
+    #[test]
+    fn per_layer_accessors() {
+        let p = PerLayer { cloud: 1.0, edge: 2.0, device: 3.0 };
+        assert_eq!(*p.get(Layer::Edge), 2.0);
+        assert_eq!(p.argmin(), Layer::Cloud);
+        let q = p.map(|_, v| v * 2.0);
+        assert_eq!(q.device, 6.0);
+    }
+
+    #[test]
+    fn argmin_ties_cloud_first() {
+        let p = PerLayer { cloud: 1.0, edge: 1.0, device: 1.0 };
+        assert_eq!(p.argmin(), Layer::Cloud);
+        let p = PerLayer { cloud: 5.0, edge: 2.0, device: 2.0 };
+        assert_eq!(p.argmin(), Layer::Edge);
+    }
+}

@@ -1,0 +1,148 @@
+//! Per-device computational-ability model (paper §III-C, Table III).
+
+
+use super::Layer;
+
+/// A device's static description; its computational ability is
+/// `FLOPS = cores × frequency × flops_per_cycle` (paper §III-C, [13][33]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    /// Human-readable name (e.g. "Intel Xeon Gold 5220 x12").
+    pub name: String,
+    /// Which hierarchy layer this device sits on.
+    pub layer: Layer,
+    /// Physical core count.
+    pub cores: u32,
+    /// Core clock in GHz.
+    pub freq_ghz: f64,
+    /// Floating-point operations retired per core per cycle
+    /// (SIMD width × FMA); 16 for the paper's AVX-512 Xeons, 16 for the
+    /// Pi 4B's NEON figure the paper uses.
+    pub flops_per_cycle: f64,
+    /// Memory capacity in GB (not used by Algorithm 1; kept for config
+    /// completeness and admission checks in the coordinator).
+    pub mem_gb: f64,
+}
+
+impl DeviceSpec {
+    /// Parse from a config section, layered over a default spec (partial
+    /// overrides allowed, e.g. just `cores`).
+    pub fn from_reader(
+        r: &crate::config::FieldReader,
+        def: DeviceSpec,
+        layer: crate::device::Layer,
+    ) -> crate::Result<Self> {
+        let spec = DeviceSpec {
+            name: r.string("name")?.unwrap_or(def.name),
+            layer,
+            cores: r.u32("cores")?.unwrap_or(def.cores),
+            freq_ghz: r.f64("freq_ghz")?.unwrap_or(def.freq_ghz),
+            flops_per_cycle: r
+                .f64("flops_per_cycle")?
+                .unwrap_or(def.flops_per_cycle),
+            mem_gb: r.f64("mem_gb")?.unwrap_or(def.mem_gb),
+        };
+        r.finish()?;
+        Ok(spec)
+    }
+
+    /// Serialize as a config section (layer is implied by the section key).
+    pub fn to_value(&self) -> crate::serialize::Value {
+        let mut v = crate::serialize::Value::object();
+        v.set("name", self.name.as_str());
+        v.set("cores", self.cores);
+        v.set("freq_ghz", self.freq_ghz);
+        v.set("flops_per_cycle", self.flops_per_cycle);
+        v.set("mem_gb", self.mem_gb);
+        v
+    }
+
+    /// Peak throughput in GFLOPS.
+    pub fn gflops(&self) -> f64 {
+        self.cores as f64 * self.freq_ghz * self.flops_per_cycle
+    }
+
+    /// Peak throughput in FLOPS.
+    pub fn flops(&self) -> f64 {
+        self.gflops() * 1e9
+    }
+
+    /// The paper's cloud server: 12 × 2.2 GHz Xeon Gold 5220 → 422.4 GFLOPS.
+    pub fn paper_cloud() -> Self {
+        DeviceSpec {
+            name: "Intel Xeon Gold 5220 (12 cores)".into(),
+            layer: Layer::Cloud,
+            cores: 12,
+            freq_ghz: 2.2,
+            flops_per_cycle: 16.0,
+            mem_gb: 128.0,
+        }
+    }
+
+    /// The paper's edge server: 4 × 2.2 GHz Xeon Gold 5220 → 140.8 GFLOPS.
+    pub fn paper_edge() -> Self {
+        DeviceSpec {
+            name: "Intel Xeon Gold 5220 (4 cores)".into(),
+            layer: Layer::Edge,
+            cores: 4,
+            freq_ghz: 2.2,
+            flops_per_cycle: 16.0,
+            mem_gb: 32.0,
+        }
+    }
+
+    /// The paper's end device: Raspberry Pi 4B, 4 × 1.5 GHz → 96 GFLOPS
+    /// (the paper's generous NEON figure; the ratio is what matters).
+    pub fn paper_device() -> Self {
+        DeviceSpec {
+            name: "Raspberry Pi 4B (BCM2711)".into(),
+            layer: Layer::Device,
+            cores: 4,
+            freq_ghz: 1.5,
+            flops_per_cycle: 16.0,
+            mem_gb: 4.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table III, exactly.
+    #[test]
+    fn table_iii_gflops() {
+        assert!((DeviceSpec::paper_cloud().gflops() - 422.4).abs() < 1e-9);
+        assert!((DeviceSpec::paper_edge().gflops() - 140.8).abs() < 1e-9);
+        assert!((DeviceSpec::paper_device().gflops() - 96.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn layer_ordering_by_flops() {
+        // "the higher the layer, the more computational resources" (§II-A)
+        let c = DeviceSpec::paper_cloud().gflops();
+        let e = DeviceSpec::paper_edge().gflops();
+        let d = DeviceSpec::paper_device().gflops();
+        assert!(c > e && e > d);
+    }
+
+    #[test]
+    fn flops_vs_gflops() {
+        let c = DeviceSpec::paper_cloud();
+        assert!((c.flops() / 1e9 - c.gflops()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn value_roundtrip() {
+        let c = DeviceSpec::paper_cloud();
+        let v = c.to_value();
+        let r = crate::config::FieldReader::new(&v, "cloud").unwrap();
+        let back = DeviceSpec::from_reader(
+            &r,
+            DeviceSpec::paper_device(),
+            crate::device::Layer::Cloud,
+        )
+        .unwrap();
+        assert_eq!(back, c);
+    }
+}

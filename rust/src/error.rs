@@ -1,0 +1,71 @@
+//! Crate-wide error type.
+
+use crate::device::Layer;
+
+/// Unified error type for all edgeward subsystems.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Artifact directory / manifest problems.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// A model variant was requested that the manifest does not provide.
+    #[error("no artifact for app={app} batch={batch}")]
+    MissingVariant { app: String, batch: usize },
+
+    /// PJRT / XLA failures (compile, execute, literal conversion).
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// Configuration parse / validation failures.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Input tensor shape mismatch on the inference path.
+    #[error("shape mismatch: expected {expected} f32 values, got {got}")]
+    ShapeMismatch { expected: usize, got: usize },
+
+    /// Scheduling problem is infeasible or malformed.
+    #[error("scheduler error: {0}")]
+    Scheduler(String),
+
+    /// A layer has no device in the current environment.
+    #[error("no device configured for layer {0:?}")]
+    NoDevice(Layer),
+
+    /// Serving-path failures (channel closed, worker died, timeout).
+    #[error("serving error: {0}")]
+    Serving(String),
+
+    /// I/O with context.
+    #[error("io error on {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+
+    /// JSON (manifest / report) encode/decode errors.
+    #[error("json error: {0}")]
+    Json(String),
+
+    /// TOML (config) parse errors.
+    #[error("toml error: {0}")]
+    Toml(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    /// Wrap an I/O error with the offending path.
+    pub fn io(path: impl Into<String>, source: std::io::Error) -> Self {
+        Error::Io { path: path.into(), source }
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

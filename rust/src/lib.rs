@@ -1,0 +1,76 @@
+//! # edgeward
+//!
+//! A production-quality reproduction of *"AI-oriented Medical Workload
+//! Allocation for Hierarchical Cloud/Edge/Device Computing"* (Hao, Zhan,
+//! Hwang, Gao, Wen — 2020), built as a three-layer rust + JAX + Pallas
+//! stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: the hierarchical
+//!   cloud/edge/device topology model, the single-workload allocation
+//!   algorithm (Algorithm 1), the multi-job heuristic scheduler
+//!   (Algorithm 2) with its four baseline strategies, a discrete-event
+//!   simulator for unrelated-parallel-machine schedules, and an async
+//!   serving coordinator that executes *real* LSTM inference through PJRT
+//!   on the request path.
+//! * **L2 (python/compile/model.py, build-time)** — the three ICU medical
+//!   models (short-of-breath alerts, life-death prediction, phenotype
+//!   classification) written in JAX and AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/, build-time)** — fused Pallas LSTM-cell
+//!   and dense-head kernels the models lower through.
+//!
+//! Python never runs on the request path: `make artifacts` emits
+//! `artifacts/*.hlo.txt` + `artifacts/manifest.json` once, and the
+//! [`runtime`] module loads and executes them via the PJRT C API.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use edgeward::prelude::*;
+//!
+//! // The paper's experimental environment (Table III + §VII-A network).
+//! let env = Environment::paper();
+//!
+//! // Algorithm 1: where should a 512-record short-of-breath job run?
+//! let wl = Workload::new(Application::Breath, 512);
+//! let decision = allocate_single(&wl, &env, &Calibration::paper());
+//! println!("deploy on {:?}", decision.chosen);
+//!
+//! // Algorithm 2: schedule the paper's 10-job ICU trace.
+//! let jobs = paper_jobs();
+//! let schedule = schedule_jobs(&jobs, &SchedulerParams::default());
+//! println!("whole response time = {}", schedule.unweighted_sum());
+//! ```
+
+pub mod allocation;
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod device;
+pub mod error;
+pub mod metrics;
+pub mod network;
+pub mod report;
+pub mod runtime;
+pub mod scheduler;
+pub mod serialize;
+pub mod simulation;
+pub mod workload;
+
+pub use error::{Error, Result};
+
+/// Convenience re-exports for downstream users.
+pub mod prelude {
+    pub use crate::allocation::{allocate_single, AllocationDecision, Calibration};
+    pub use crate::config::{Config, Environment};
+    pub use crate::coordinator::{Coordinator, ServeConfig, ServeReport};
+    pub use crate::device::{DeviceSpec, Layer};
+    pub use crate::error::{Error, Result};
+    pub use crate::network::NetworkModel;
+    pub use crate::runtime::{InferenceRuntime, Manifest};
+    pub use crate::scheduler::{
+        paper_jobs, schedule_jobs, Job, MachineId, Schedule, SchedulerParams,
+        Strategy,
+    };
+    pub use crate::workload::{Application, Workload};
+}

@@ -1,0 +1,478 @@
+//! `edgeward` — launcher CLI for the hierarchical cloud/edge/device
+//! medical-AI workload-allocation framework.
+//!
+//! Subcommands map 1:1 onto the paper's experiments (DESIGN.md §7):
+//! `tables` regenerates Tables III–VII and Figures 6–8, `allocate` runs
+//! Algorithm 1 on one workload, `schedule` runs Algorithm 2 on a job set,
+//! and `serve` drives the full PJRT serving stack.
+//!
+//! Argument parsing is in-tree (offline build; no clap): subcommand first,
+//! then `--flag value` / `--flag` pairs.
+
+use edgeward::allocation::{allocate_single, estimate_single, Calibration};
+use edgeward::config::{Config, Environment};
+use edgeward::coordinator::{Coordinator, Policy};
+use edgeward::data::EpisodeGenerator;
+use edgeward::device::Layer;
+use edgeward::report::{render_gantt, TextTable};
+use edgeward::scheduler::{
+    evaluate_strategy, paper_jobs, schedule_jobs, Strategy,
+};
+use edgeward::workload::{table_iv, Application, Workload, SIZE_UNITS};
+
+const USAGE: &str = "\
+edgeward — AI-oriented medical workload allocation (cloud/edge/device)
+
+USAGE: edgeward [--config FILE] <COMMAND> [OPTIONS]
+
+COMMANDS:
+  tables    [--table 3|4|5|6|7] [--figure 6|7|8]   regenerate paper artifacts
+  allocate  --app APP [--size UNITS]               Algorithm 1 for one workload
+  schedule  [--strategy S] [--compare]             Algorithm 2 / baselines
+  serve     [--policy P] [--patients N] [--requests N] [--seed N] [--json]
+  calibrate [--live]                               print fitted λ coefficients
+  config                                           print the default TOML config
+  datagen   --app APP [--n N] [--seed N]           synthetic ICU episodes (CSV)
+
+APP:      breath | mortality | phenotype
+POLICY:   algorithm-1 | fixed-cloud | fixed-edge | fixed-device | round-robin
+STRATEGY: ours | per-job-optimal | all-cloud | all-edge | all-device
+";
+
+/// Minimal argument cursor: `--key value` and `--flag` handling.
+struct Args {
+    items: Vec<String>,
+}
+
+impl Args {
+    fn new() -> Self {
+        Args { items: std::env::args().skip(1).collect() }
+    }
+
+    /// Remove and return `--key <value>`.
+    fn opt(&mut self, key: &str) -> Option<String> {
+        let flag = format!("--{key}");
+        let i = self.items.iter().position(|a| a == &flag)?;
+        if i + 1 >= self.items.len() {
+            eprintln!("error: {flag} requires a value");
+            std::process::exit(2);
+        }
+        self.items.remove(i);
+        Some(self.items.remove(i))
+    }
+
+    /// Remove and return presence of `--flag`.
+    fn flag(&mut self, key: &str) -> bool {
+        let flag = format!("--{key}");
+        if let Some(i) = self.items.iter().position(|a| a == &flag) {
+            self.items.remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Take the subcommand (first bare word).
+    fn subcommand(&mut self) -> Option<String> {
+        if self.items.is_empty() || self.items[0].starts_with("--") {
+            None
+        } else {
+            Some(self.items.remove(0))
+        }
+    }
+
+    /// Error on leftovers.
+    fn finish(&self) {
+        if !self.items.is_empty() {
+            eprintln!("error: unrecognized arguments: {:?}", self.items);
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+
+    fn parse<T: std::str::FromStr>(&mut self, key: &str) -> Option<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.opt(key).map(|s| match s.parse::<T>() {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("error: --{key} {s:?}: {e}");
+                std::process::exit(2);
+            }
+        })
+    }
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> edgeward::Result<()> {
+    let mut args = Args::new();
+    if args.flag("help") || args.flag("h") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cfg = match args.opt("config") {
+        Some(path) => Config::load(&path)?,
+        None => Config::default(),
+    };
+    let env = cfg.environment.clone();
+    let calib = Calibration::paper();
+
+    let Some(cmd) = args.subcommand() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+
+    match cmd.as_str() {
+        "tables" => {
+            let table: Option<u32> = args.parse("table");
+            let figure: Option<u32> = args.parse("figure");
+            args.finish();
+            render_tables(&cfg, &env, &calib, table, figure)?;
+        }
+        "allocate" => {
+            let app: Application = args
+                .parse("app")
+                .ok_or_else(|| edgeward::Error::Config("--app is required".into()))?;
+            let size: u32 = args.parse("size").unwrap_or(64);
+            args.finish();
+            let wl = Workload::new(app, size);
+            let d = allocate_single(&wl, &env, &calib);
+            println!("workload        : {} ({})", wl.label(), app.title());
+            println!("data size       : {:.0} KB", wl.data_kb());
+            println!("model FLOPs     : {}", wl.paper_flops());
+            let t = d.estimate.total_rounded();
+            for l in Layer::ALL {
+                println!(
+                    "  {:12} T = {:>8}  (I = {:.1}, D = {:.1})",
+                    l.name(),
+                    t.get(l),
+                    d.estimate.processing.get(l),
+                    d.estimate.transmission.get(l),
+                );
+            }
+            println!("chosen layer    : {}", d.chosen.name());
+        }
+        "schedule" => {
+            let strategy = args.opt("strategy").unwrap_or_else(|| "ours".into());
+            let compare = args.flag("compare");
+            args.finish();
+            let jobs = paper_jobs();
+            if compare {
+                print!("{}", render_table_vii());
+            } else {
+                let strat = parse_strategy(&strategy)?;
+                let r = evaluate_strategy(&jobs, strat);
+                println!("strategy      : {}", strat.label());
+                println!("weighted sum  : {}", r.schedule.weighted_sum);
+                println!("whole response: {}", r.schedule.unweighted_sum());
+                println!("last complete : {}", r.schedule.last_completion());
+                println!();
+                print!("{}", render_gantt(&r.schedule, 100));
+            }
+        }
+        "serve" => {
+            let policy: Option<Policy> = args.parse("policy");
+            let patients: Option<usize> = args.parse("patients");
+            let requests: Option<usize> = args.parse("requests");
+            let seed: Option<u64> = args.parse("seed");
+            let json = args.flag("json");
+            args.finish();
+            let mut serve_cfg = cfg.serve.clone();
+            if let Some(p) = policy {
+                serve_cfg.policy = p;
+            }
+            if let Some(p) = patients {
+                serve_cfg.patients = p;
+            }
+            if let Some(r) = requests {
+                serve_cfg.requests_per_patient = r;
+            }
+            let coord = Coordinator::new(
+                env.clone(),
+                calib,
+                serve_cfg,
+                cfg.artifact_dir.clone(),
+            )?;
+            let report = coord.run(seed.unwrap_or(cfg.seed))?;
+            if json {
+                print!("{}", report.to_value().to_string_pretty());
+            } else {
+                println!("policy     : {}", report.policy.label());
+                println!("completed  : {}", report.completed);
+                println!(
+                    "routed     : CC={} ES={} ED={}",
+                    report.routed[0], report.routed[1], report.routed[2]
+                );
+                println!(
+                    "throughput : {:.1} req/s (wall {:.2}s)",
+                    report.metrics.throughput_rps, report.metrics.wall_time_s
+                );
+                for (layer, m) in &report.metrics.per_layer {
+                    println!(
+                        "  {layer}: n={} mean={:.1}ms p95={:.1}ms (proc {:.1} / trans {:.1} / queue {:.1})",
+                        m.requests,
+                        m.latency.mean,
+                        m.latency.p95,
+                        m.processing.mean,
+                        m.transmission.mean,
+                        m.queueing.mean,
+                    );
+                }
+            }
+        }
+        "calibrate" => {
+            let live = args.flag("live");
+            args.finish();
+            let c = if live {
+                edgeward::coordinator::live_calibration(
+                    &env,
+                    &cfg.serve,
+                    &cfg.artifact_dir,
+                    cfg.seed,
+                )?
+            } else {
+                calib
+            };
+            println!(
+                "{} λ coefficients (Algorithm 1, step 8):",
+                if live { "live-fitted" } else { "paper-fitted" }
+            );
+            for app in Application::ALL {
+                let a = c.for_app(app);
+                println!(
+                    "  {:34} λ2 = {:9.3}  λ1(CC) = {:7.4}  λ1(ES) = {:7.4}",
+                    app.title(),
+                    a.lambda2,
+                    a.lambda1.cloud,
+                    a.lambda1.edge,
+                );
+            }
+        }
+        "config" => {
+            args.finish();
+            print!("{}", Config::default().to_toml());
+        }
+        "datagen" => {
+            let app: Application = args
+                .parse("app")
+                .ok_or_else(|| edgeward::Error::Config("--app is required".into()))?;
+            let n: usize = args.parse("n").unwrap_or(1);
+            let seed: u64 = args.parse("seed").unwrap_or(0);
+            args.finish();
+            let mut gen = EpisodeGenerator::new(seed);
+            println!(
+                "patient,t,{}",
+                (0..app.input_dim())
+                    .map(|i| format!("f{i}"))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            );
+            for _ in 0..n {
+                let ep = gen.episode(app);
+                let dim = app.input_dim();
+                for t in 0..app.seq_len() {
+                    let row: Vec<String> = ep.features[t * dim..(t + 1) * dim]
+                        .iter()
+                        .map(|v| format!("{v:.4}"))
+                        .collect();
+                    println!("{},{},{}", ep.patient_id, t, row.join(","));
+                }
+            }
+        }
+        other => {
+            eprintln!("error: unknown command {other:?}");
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+fn parse_strategy(s: &str) -> edgeward::Result<Strategy> {
+    match s.to_ascii_lowercase().replace('_', "-").as_str() {
+        "ours" | "algorithm-2" => Ok(Strategy::Ours),
+        "per-job-optimal" | "optimal" => Ok(Strategy::PerJobOptimal),
+        "all-cloud" | "cloud" => Ok(Strategy::AllCloud),
+        "all-edge" | "edge" => Ok(Strategy::AllEdge),
+        "all-device" | "device" => Ok(Strategy::AllDevice),
+        other => Err(edgeward::Error::Config(format!(
+            "unknown strategy {other:?}"
+        ))),
+    }
+}
+
+fn render_tables(
+    cfg: &Config,
+    env: &Environment,
+    calib: &Calibration,
+    table: Option<u32>,
+    figure: Option<u32>,
+) -> edgeward::Result<()> {
+    match (table, figure) {
+        (Some(3), _) => print!("{}", render_table_iii(env)),
+        (Some(4), _) => print!("{}", render_table_iv()),
+        (Some(5), _) => print!("{}", render_table_v(env, calib)),
+        (Some(6), _) => print!("{}", render_table_vi()),
+        (Some(7), _) => print!("{}", render_table_vii()),
+        (Some(n), _) => {
+            return Err(edgeward::Error::Config(format!("no table {n}")))
+        }
+        (_, Some(6)) => print!("{}", render_figure_6(env, calib)),
+        (_, Some(7)) => print!("{}", render_figure_7(cfg)),
+        (_, Some(8)) => print!("{}", render_figure_8()),
+        (_, Some(n)) => {
+            return Err(edgeward::Error::Config(format!("no figure {n}")))
+        }
+        (None, None) => {
+            print!("{}", render_table_iii(env));
+            print!("\n{}", render_table_iv());
+            print!("\n{}", render_table_v(env, calib));
+            print!("\n{}", render_table_vi());
+            print!("\n{}", render_figure_6(env, calib));
+            print!("\n{}", render_figure_7(cfg));
+            print!("\n{}", render_figure_8());
+            print!("\n{}", render_table_vii());
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- tables
+
+fn render_table_iii(env: &Environment) -> String {
+    let mut t = TextTable::new(&["Layer", "CPU Cores", "CPU Frequency", "FLOPS"])
+        .with_title("Table III — computational ability of device on each layer");
+    for l in Layer::ALL {
+        let s = env.spec(l);
+        t.row(vec![
+            l.name().into(),
+            s.cores.to_string(),
+            format!("{:.1}GHz", s.freq_ghz),
+            format!("{:.1}GFLOPS", s.gflops()),
+        ]);
+    }
+    t.render()
+}
+
+fn render_table_iv() -> String {
+    let mut t = TextTable::new(&[
+        "Workload No.", "ICU Application", "Data Size", "Data KB", "Model FLOPs",
+    ])
+    .with_title("Table IV — AI workload characteristics");
+    for row in table_iv() {
+        t.row(vec![
+            row.label,
+            row.title.into(),
+            row.size_units.to_string(),
+            format!("{:.0}", row.data_kb),
+            row.model_flops.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+fn render_table_v(env: &Environment, calib: &Calibration) -> String {
+    let mut t = TextTable::new(&[
+        "Workload No.", "Chosen Layer", "Cloud Server", "Edge Server", "End Device",
+    ])
+    .with_title("Table V — estimated response time (Algorithm 1)");
+    for app in Application::ALL {
+        for &u in &SIZE_UNITS {
+            let wl = Workload::new(app, u);
+            let d = allocate_single(&wl, env, calib);
+            let tot = d.estimate.total_rounded();
+            t.row(vec![
+                wl.label(),
+                d.chosen.name().into(),
+                format!("{:.0}", tot.cloud),
+                format!("{:.0}", tot.edge),
+                format!("{:.0}", tot.device),
+            ]);
+        }
+    }
+    t.render()
+}
+
+fn render_table_vi() -> String {
+    let mut t = TextTable::new(&[
+        "Job", "Release", "Priority", "Proc(CC)", "Trans(CC)", "Proc(ES)",
+        "Trans(ES)", "Proc(ED)",
+    ])
+    .with_title("Table VI — 10-job scheduling trace");
+    for (i, j) in paper_jobs().iter().enumerate() {
+        t.row(vec![
+            format!("J{}", i + 1),
+            j.release.to_string(),
+            j.weight.to_string(),
+            j.proc_cloud.to_string(),
+            j.trans_cloud.to_string(),
+            j.proc_edge.to_string(),
+            j.trans_edge.to_string(),
+            j.proc_device.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+fn render_table_vii() -> String {
+    let jobs = paper_jobs();
+    let mut t = TextTable::new(&[
+        "Strategy", "Whole Response Time", "Last Response Time", "Weighted Sum",
+    ])
+    .with_title("Table VII — response time using different algorithms");
+    for s in Strategy::ALL {
+        let r = evaluate_strategy(&jobs, s);
+        t.row(vec![
+            s.label().into(),
+            r.schedule.unweighted_sum().to_string(),
+            r.schedule.last_completion().to_string(),
+            r.schedule.weighted_sum.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+fn render_figure_6(env: &Environment, calib: &Calibration) -> String {
+    let mut t = TextTable::new(&["Workload", "Layer", "Processing", "Transmission"])
+        .with_title("Figure 6 — response time breakdown (WL1-6, WL2-6, WL3-6)");
+    for app in Application::ALL {
+        let wl = Workload::new(app, 2048);
+        let est = estimate_single(&wl, env, calib);
+        for l in Layer::ALL {
+            t.row(vec![
+                wl.label(),
+                l.name().into(),
+                format!("{:.0}", est.processing.get(l)),
+                format!("{:.0}", est.transmission.get(l)),
+            ]);
+        }
+    }
+    t.render()
+}
+
+fn render_figure_7(cfg: &Config) -> String {
+    let jobs = paper_jobs();
+    let s = schedule_jobs(&jobs, &cfg.scheduler);
+    let (c, e, d) = s.placement_counts();
+    format!(
+        "Figure 7 — allocation strategy using Algorithm 2\n\
+         placements: cloud={c} edge={e} device={d}\n{}",
+        render_gantt(&s, 100)
+    )
+}
+
+fn render_figure_8() -> String {
+    let jobs = paper_jobs();
+    let r = evaluate_strategy(&jobs, Strategy::PerJobOptimal);
+    format!(
+        "Figure 8 — allocation using the single-job optimal layer per job\n{}",
+        render_gantt(&r.schedule, 100)
+    )
+}

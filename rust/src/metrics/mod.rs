@@ -1,0 +1,191 @@
+//! Serving metrics: latency summaries, throughput counters, per-layer
+//! utilization — the numbers the E2E driver reports.
+
+mod summary;
+
+pub use summary::LatencySummary;
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+
+use crate::device::Layer;
+use crate::serialize::Value;
+
+/// Accumulates per-layer request metrics during a serving run.
+#[derive(Debug, Default, Clone)]
+pub struct MetricsRegistry {
+    per_layer: BTreeMap<Layer, LayerMetrics>,
+    started_at_ms: f64,
+    finished_at_ms: f64,
+}
+
+#[derive(Debug, Default, Clone)]
+struct LayerMetrics {
+    latencies_ms: Vec<f64>,
+    transmission_ms: Vec<f64>,
+    processing_ms: Vec<f64>,
+    queue_ms: Vec<f64>,
+    requests: u64,
+    batches: u64,
+    batched_rows: u64,
+}
+
+/// Immutable snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsReport {
+    pub per_layer: BTreeMap<String, LayerReport>,
+    pub total_requests: u64,
+    pub wall_time_s: f64,
+    pub throughput_rps: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub latency: LatencySummary,
+    pub transmission: LatencySummary,
+    pub processing: LatencySummary,
+    pub queueing: LatencySummary,
+}
+
+impl MetricsReport {
+    /// JSON rendering.
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::object();
+        v.set("total_requests", self.total_requests);
+        v.set("wall_time_s", self.wall_time_s);
+        v.set("throughput_rps", self.throughput_rps);
+        let mut layers = Value::object();
+        for (name, rep) in &self.per_layer {
+            layers.set(name, rep.to_value());
+        }
+        v.set("per_layer", layers);
+        v
+    }
+}
+
+impl LayerReport {
+    /// JSON rendering.
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::object();
+        v.set("requests", self.requests);
+        v.set("batches", self.batches);
+        v.set("mean_batch", self.mean_batch);
+        v.set("latency_ms", self.latency.to_value());
+        v.set("transmission_ms", self.transmission.to_value());
+        v.set("processing_ms", self.processing.to_value());
+        v.set("queueing_ms", self.queueing.to_value());
+        v
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mark run boundaries (ms on any monotone clock).
+    pub fn set_window(&mut self, start_ms: f64, end_ms: f64) {
+        self.started_at_ms = start_ms;
+        self.finished_at_ms = end_ms;
+    }
+
+    /// Record one completed request.
+    pub fn record_request(
+        &mut self,
+        layer: Layer,
+        total: Duration,
+        transmission: Duration,
+        queueing: Duration,
+        processing: Duration,
+    ) {
+        let m = self.per_layer.entry(layer).or_default();
+        m.requests += 1;
+        m.latencies_ms.push(total.as_secs_f64() * 1e3);
+        m.transmission_ms.push(transmission.as_secs_f64() * 1e3);
+        m.queue_ms.push(queueing.as_secs_f64() * 1e3);
+        m.processing_ms.push(processing.as_secs_f64() * 1e3);
+    }
+
+    /// Record one executed batch of `rows` requests.
+    pub fn record_batch(&mut self, layer: Layer, rows: usize) {
+        let m = self.per_layer.entry(layer).or_default();
+        m.batches += 1;
+        m.batched_rows += rows as u64;
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.per_layer.values().map(|m| m.requests).sum()
+    }
+
+    /// Build the reporting snapshot.
+    pub fn report(&self) -> MetricsReport {
+        let wall = ((self.finished_at_ms - self.started_at_ms) / 1e3).max(0.0);
+        let total = self.total_requests();
+        MetricsReport {
+            per_layer: self
+                .per_layer
+                .iter()
+                .map(|(l, m)| {
+                    (
+                        l.abbrev().to_string(),
+                        LayerReport {
+                            requests: m.requests,
+                            batches: m.batches,
+                            mean_batch: if m.batches == 0 {
+                                0.0
+                            } else {
+                                m.batched_rows as f64 / m.batches as f64
+                            },
+                            latency: LatencySummary::from_samples(&m.latencies_ms),
+                            transmission: LatencySummary::from_samples(&m.transmission_ms),
+                            processing: LatencySummary::from_samples(&m.processing_ms),
+                            queueing: LatencySummary::from_samples(&m.queue_ms),
+                        },
+                    )
+                })
+                .collect(),
+            total_requests: total,
+            wall_time_s: wall,
+            throughput_rps: if wall > 0.0 { total as f64 / wall } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_report() {
+        let mut r = MetricsRegistry::new();
+        r.set_window(0.0, 2000.0);
+        for i in 1..=10 {
+            r.record_request(
+                Layer::Edge,
+                Duration::from_millis(10 * i),
+                Duration::from_millis(2),
+                Duration::from_millis(1),
+                Duration::from_millis(5),
+            );
+        }
+        r.record_batch(Layer::Edge, 10);
+        let rep = r.report();
+        assert_eq!(rep.total_requests, 10);
+        assert!((rep.throughput_rps - 5.0).abs() < 1e-9);
+        let edge = &rep.per_layer["ES"];
+        assert_eq!(edge.requests, 10);
+        assert!((edge.mean_batch - 10.0).abs() < 1e-9);
+        assert!((edge.latency.mean - 55.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_report() {
+        let rep = MetricsRegistry::new().report();
+        assert_eq!(rep.total_requests, 0);
+        assert_eq!(rep.throughput_rps, 0.0);
+    }
+}

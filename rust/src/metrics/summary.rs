@@ -1,0 +1,96 @@
+//! Latency distribution summary (mean / p50 / p95 / p99 / max).
+
+
+/// Summary statistics over a sample set (milliseconds).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl LatencySummary {
+    /// JSON rendering.
+    pub fn to_value(&self) -> crate::serialize::Value {
+        let mut v = crate::serialize::Value::object();
+        v.set("count", self.count);
+        v.set("mean", self.mean);
+        v.set("p50", self.p50);
+        v.set("p95", self.p95);
+        v.set("p99", self.p99);
+        v.set("min", self.min);
+        v.set("max", self.max);
+        v
+    }
+
+    /// Compute from raw samples (order irrelevant).
+    pub fn from_samples(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return Self::default();
+        }
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        LatencySummary {
+            count: n,
+            mean: sorted.iter().sum::<f64>() / n as f64,
+            p50: percentile(&sorted, 0.50),
+            p95: percentile(&sorted, 0.95),
+            p99: percentile(&sorted, 0.99),
+            min: sorted[0],
+            max: sorted[n - 1],
+        }
+    }
+}
+
+/// Nearest-rank percentile on a pre-sorted slice.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    debug_assert!(!sorted.is_empty());
+    let idx = ((sorted.len() as f64) * q).ceil() as usize;
+    sorted[idx.clamp(1, sorted.len()) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_percentiles() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = LatencySummary::from_samples(&samples);
+        assert_eq!(s.count, 100);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert_eq!(s.p50, 50.0);
+        assert_eq!(s.p95, 95.0);
+        assert_eq!(s.p99, 99.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = LatencySummary::from_samples(&[7.0]);
+        assert_eq!(s.p50, 7.0);
+        assert_eq!(s.p99, 7.0);
+        assert_eq!(s.mean, 7.0);
+    }
+
+    #[test]
+    fn empty_is_default() {
+        let s = LatencySummary::from_samples(&[]);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.max, 0.0);
+    }
+
+    #[test]
+    fn unsorted_input() {
+        let s = LatencySummary::from_samples(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.max, 3.0);
+    }
+}

@@ -1,0 +1,92 @@
+//! A single point-to-point link.
+
+
+/// Latency + bandwidth description of one link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    /// One-way base latency in milliseconds.
+    pub latency_ms: f64,
+    /// Bandwidth in MB/s.
+    pub bandwidth_mbs: f64,
+    /// Optional jitter fraction (0.0 = deterministic).  The serving
+    /// coordinator samples uniformly in `[1-jitter, 1+jitter]` around the
+    /// deterministic transmission time; the analytic model ignores it.
+        pub jitter: f64,
+}
+
+impl LinkSpec {
+    /// Parse from a config section, layered over a default.
+    pub fn from_reader(
+        r: &crate::config::FieldReader,
+        def: LinkSpec,
+    ) -> crate::Result<Self> {
+        let l = LinkSpec {
+            latency_ms: r.f64("latency_ms")?.unwrap_or(def.latency_ms),
+            bandwidth_mbs: r.f64("bandwidth_mbs")?.unwrap_or(def.bandwidth_mbs),
+            jitter: r.f64("jitter")?.unwrap_or(def.jitter),
+        };
+        r.finish()?;
+        Ok(l)
+    }
+
+    /// Serialize as a config section.
+    pub fn to_value(&self) -> crate::serialize::Value {
+        let mut v = crate::serialize::Value::object();
+        v.set("latency_ms", self.latency_ms);
+        v.set("bandwidth_mbs", self.bandwidth_mbs);
+        v.set("jitter", self.jitter);
+        v
+    }
+
+    /// A deterministic link.
+    pub fn new(latency_ms: f64, bandwidth_mbs: f64) -> Self {
+        LinkSpec { latency_ms, bandwidth_mbs, jitter: 0.0 }
+    }
+
+    /// With jitter (serving-path realism ablation).
+    pub fn with_jitter(mut self, jitter: f64) -> Self {
+        self.jitter = jitter.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Deterministic transfer time (ms) for `kb` kilobytes over this link.
+    pub fn transfer_ms(&self, kb: f64) -> f64 {
+        self.latency_ms + (kb / 1024.0) / self.bandwidth_mbs * 1000.0
+    }
+
+    /// Jittered transfer time given a uniform sample `u ∈ [0, 1)`.
+    pub fn transfer_ms_jittered(&self, kb: f64, u: f64) -> f64 {
+        let scale = 1.0 + self.jitter * (2.0 * u - 1.0);
+        self.transfer_ms(kb) * scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time() {
+        let l = LinkSpec::new(10.0, 1.0); // 1 MB/s
+        assert!((l.transfer_ms(1024.0) - 1010.0).abs() < 1e-9);
+        assert!((l.transfer_ms(0.0) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jitter_bounds() {
+        let l = LinkSpec::new(10.0, 1.0).with_jitter(0.1);
+        let base = l.transfer_ms(1024.0);
+        let lo = l.transfer_ms_jittered(1024.0, 0.0);
+        let hi = l.transfer_ms_jittered(1024.0, 1.0 - 1e-12);
+        assert!(lo >= base * 0.9 - 1e-9 && hi <= base * 1.1 + 1e-9);
+        // deterministic when jitter = 0
+        let l0 = LinkSpec::new(10.0, 1.0);
+        assert_eq!(l0.transfer_ms_jittered(1024.0, 0.77), l0.transfer_ms(1024.0));
+    }
+
+    #[test]
+    fn jitter_clamped() {
+        let l = LinkSpec::new(1.0, 1.0).with_jitter(7.0);
+        assert_eq!(l.jitter, 1.0);
+    }
+}

@@ -1,0 +1,189 @@
+//! Network substrate: link model and transmission-time calculation.
+//!
+//! The paper's network model (§VII-A, assumption (b)):
+//!
+//! * edge server ↔ end device: 0.239 ms latency, 10 MB/s bandwidth
+//!   (measured in the authors' lab LAN);
+//! * cloud server ↔ end device: 42 ms latency, 2.9 MB/s bandwidth
+//!   (taken from Zhou et al. [36]);
+//! * `T_CC−ED = T_CC−ES + T_ES−ED` — the cloud path composes through the
+//!   edge (assumption (b)), so the cloud↔edge link is the difference.
+//!
+//! Transmission time of `s` bytes over a link is `latency + s/bandwidth`.
+//! Deploying on the end device incurs zero transmission (assumption (a):
+//! data originates there).
+
+mod link;
+
+pub use link::LinkSpec;
+
+
+use crate::device::{Layer, PerLayer};
+
+/// The two physical links of the three-layer topology.  Paths compose per
+/// assumption (b).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkModel {
+    /// Edge server ↔ end device link.
+    pub edge_device: LinkSpec,
+    /// Cloud cluster ↔ edge server link.
+    pub cloud_edge: LinkSpec,
+}
+
+impl NetworkModel {
+    /// Parse from a config section, layered over defaults.
+    pub fn from_reader(
+        r: &crate::config::FieldReader,
+        def: NetworkModel,
+    ) -> crate::Result<Self> {
+        let read_link = |key: &str, def: LinkSpec| -> crate::Result<LinkSpec> {
+            match r.section(key)? {
+                None => Ok(def),
+                Some(s) => LinkSpec::from_reader(&s, def),
+            }
+        };
+        let n = NetworkModel {
+            edge_device: read_link("edge_device", def.edge_device)?,
+            cloud_edge: read_link("cloud_edge", def.cloud_edge)?,
+        };
+        r.finish()?;
+        Ok(n)
+    }
+
+    /// Serialize as a config section.
+    pub fn to_value(&self) -> crate::serialize::Value {
+        let mut v = crate::serialize::Value::object();
+        v.set("edge_device", self.edge_device.to_value());
+        v.set("cloud_edge", self.cloud_edge.to_value());
+        v
+    }
+
+    /// The paper's measured/cited constants.  The paper reports the
+    /// *cloud↔device* path (42 ms, 2.9 MB/s); we decompose it so that the
+    /// composed path reproduces those numbers exactly: the cloud↔edge hop
+    /// carries the residual latency, and the path bandwidth is bottlenecked
+    /// by the slower hop.
+    pub fn paper() -> Self {
+        let edge_device = LinkSpec::new(0.239, 10.0);
+        // Residual latency so that composed latency = 42 ms; bandwidth
+        // 2.9 MB/s is the WAN bottleneck hop.
+        let cloud_edge = LinkSpec::new(42.0 - 0.239, 2.9);
+        NetworkModel { edge_device, cloud_edge }
+    }
+
+    /// A zero-latency, infinite-bandwidth model (unit tests, ablations).
+    pub fn ideal() -> Self {
+        NetworkModel {
+            edge_device: LinkSpec::new(0.0, f64::INFINITY),
+            cloud_edge: LinkSpec::new(0.0, f64::INFINITY),
+        }
+    }
+
+    /// One-way base latency (ms) from the end device (data source) to the
+    /// execution layer.
+    pub fn path_latency_ms(&self, layer: Layer) -> f64 {
+        match layer {
+            Layer::Device => 0.0,
+            Layer::Edge => self.edge_device.latency_ms,
+            Layer::Cloud => {
+                self.edge_device.latency_ms + self.cloud_edge.latency_ms
+            }
+        }
+    }
+
+    /// Effective path bandwidth (MB/s) from the end device to the layer:
+    /// the minimum of the traversed hops (store-and-forward bottleneck).
+    pub fn path_bandwidth_mbs(&self, layer: Layer) -> f64 {
+        match layer {
+            Layer::Device => f64::INFINITY,
+            Layer::Edge => self.edge_device.bandwidth_mbs,
+            Layer::Cloud => self
+                .edge_device
+                .bandwidth_mbs
+                .min(self.cloud_edge.bandwidth_mbs),
+        }
+    }
+
+    /// Transmission time (ms) of `kb` kilobytes from the end device to the
+    /// execution layer: `latency + size / bandwidth` (0 for the device
+    /// layer, assumption (a)).
+    pub fn transmission_ms(&self, layer: Layer, kb: f64) -> f64 {
+        if layer == Layer::Device {
+            return 0.0;
+        }
+        let mb = kb / 1024.0;
+        self.path_latency_ms(layer)
+            + mb / self.path_bandwidth_mbs(layer) * 1000.0
+    }
+
+    /// Per-layer transmission time for a payload, as a [`PerLayer`].
+    pub fn transmission_all(&self, kb: f64) -> PerLayer<f64> {
+        PerLayer::from_fn(|l| self.transmission_ms(l, kb))
+    }
+
+    /// The paper's Algorithm 1 step 2: unit network latency `D_iu` — the
+    /// transmission time of one unit (`unit_kb` kilobytes) of the workload's
+    /// dataset to the layer.
+    pub fn unit_latency_ms(&self, layer: Layer, unit_kb: f64) -> f64 {
+        self.transmission_ms(layer, unit_kb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_composed_path_matches_reported_constants() {
+        let n = NetworkModel::paper();
+        // assumption (b): T_CC-ED = T_CC-ES + T_ES-ED = 42 ms
+        assert!((n.path_latency_ms(Layer::Cloud) - 42.0).abs() < 1e-12);
+        assert!((n.path_bandwidth_mbs(Layer::Cloud) - 2.9).abs() < 1e-12);
+        assert!((n.path_latency_ms(Layer::Edge) - 0.239).abs() < 1e-12);
+    }
+
+    #[test]
+    fn device_layer_is_free() {
+        let n = NetworkModel::paper();
+        assert_eq!(n.transmission_ms(Layer::Device, 1e9), 0.0);
+    }
+
+    #[test]
+    fn transmission_scales_with_size() {
+        let n = NetworkModel::paper();
+        let t1 = n.transmission_ms(Layer::Edge, 1024.0);
+        // 1 MB over 10 MB/s = 100 ms + 0.239 ms
+        assert!((t1 - 100.239).abs() < 1e-9);
+        let t2 = n.transmission_ms(Layer::Edge, 2048.0);
+        assert!(t2 > t1);
+        // latency is not doubled, only the payload term
+        assert!((t2 - (200.0 + 0.239)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cloud_slower_than_edge_for_any_payload() {
+        let n = NetworkModel::paper();
+        for kb in [1.0, 100.0, 10_000.0] {
+            assert!(
+                n.transmission_ms(Layer::Cloud, kb)
+                    > n.transmission_ms(Layer::Edge, kb)
+            );
+        }
+    }
+
+    #[test]
+    fn ideal_network_is_zero() {
+        let n = NetworkModel::ideal();
+        for l in Layer::ALL {
+            assert_eq!(n.transmission_ms(l, 5000.0), 0.0);
+        }
+    }
+
+    #[test]
+    fn per_layer_view() {
+        let n = NetworkModel::paper();
+        let t = n.transmission_all(700.0);
+        assert_eq!(t.device, 0.0);
+        assert!(t.cloud > t.edge);
+    }
+}

@@ -1,0 +1,79 @@
+//! ASCII Gantt rendering of a schedule (Figures 7 and 8).
+
+use crate::scheduler::Schedule;
+
+/// Render a schedule as an ASCII Gantt chart: one row per job, `.` for
+/// waiting-for-data, `-` for queued-at-machine, `#` for executing.
+///
+/// `width` caps the time axis (longer schedules are scaled down).
+pub fn render_gantt(schedule: &Schedule, width: usize) -> String {
+    let entries = schedule.trace.by_job();
+    if entries.is_empty() {
+        return String::from("(empty schedule)\n");
+    }
+    let horizon = schedule.last_completion().max(1);
+    let scale = if horizon as usize <= width {
+        1.0
+    } else {
+        width as f64 / horizon as f64
+    };
+    let to_col = |t: u64| -> usize { (t as f64 * scale).round() as usize };
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "time 0..{horizon}  (whole response {}  last completion {})\n",
+        schedule.trace.unweighted_sum(),
+        schedule.last_completion()
+    ));
+    for e in &entries {
+        let rel = to_col(e.release);
+        let avail = to_col(e.available).max(rel);
+        let start = to_col(e.start).max(avail);
+        let end = to_col(e.end).max(start + 1);
+        let mut line = String::new();
+        line.push_str(&" ".repeat(rel));
+        line.push_str(&".".repeat(avail - rel)); // transmitting
+        line.push_str(&"-".repeat(start - avail)); // queued
+        line.push_str(&"#".repeat(end - start)); // executing
+        out.push_str(&format!(
+            "J{:<3} {:<7} |{line}\n",
+            e.job + 1,
+            format!("{}", e.machine),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{paper_jobs, schedule_jobs, SchedulerParams};
+
+    #[test]
+    fn renders_all_jobs() {
+        let jobs = paper_jobs();
+        let s = schedule_jobs(&jobs, &SchedulerParams::default());
+        let g = render_gantt(&s, 100);
+        for i in 1..=10 {
+            assert!(g.contains(&format!("J{i}")), "missing J{i}\n{g}");
+        }
+        assert!(g.contains('#'));
+    }
+
+    #[test]
+    fn empty_schedule() {
+        let s = schedule_jobs(&[], &SchedulerParams::default());
+        assert!(render_gantt(&s, 80).contains("empty"));
+    }
+
+    #[test]
+    fn scales_long_horizons() {
+        let jobs = paper_jobs();
+        let s = schedule_jobs(&jobs, &SchedulerParams::default());
+        let g = render_gantt(&s, 20);
+        // no line should be drastically wider than the cap + labels
+        for line in g.lines().skip(1) {
+            assert!(line.len() < 60, "line too wide: {line}");
+        }
+    }
+}

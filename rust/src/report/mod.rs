@@ -1,0 +1,37 @@
+//! Report rendering: aligned text tables, ASCII Gantt charts (Figures 7–8),
+//! and CSV emitters for figure series.
+
+mod gantt;
+mod table;
+
+pub use gantt::render_gantt;
+pub use table::TextTable;
+
+use std::fmt::Write as _;
+
+/// Render rows of `(series, x, y)` as a CSV string (figure data series).
+pub fn csv_series(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{}", header.join(","));
+    for row in rows {
+        let _ = writeln!(out, "{}", row.join(","));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_shape() {
+        let csv = csv_series(
+            &["wl", "layer", "ms"],
+            &[vec!["WL1-1".into(), "edge".into(), "12".into()]],
+        );
+        let mut lines = csv.lines();
+        assert_eq!(lines.next().unwrap(), "wl,layer,ms");
+        assert_eq!(lines.next().unwrap(), "WL1-1,edge,12");
+        assert!(lines.next().is_none());
+    }
+}

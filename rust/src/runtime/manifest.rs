@@ -1,0 +1,230 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the rust runtime.
+
+use std::path::Path;
+
+use crate::serialize::{json, Value};
+use crate::workload::Application;
+use crate::{Error, Result};
+
+/// One compiled model variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestEntry {
+    pub app: String,
+    pub title: String,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub input_dim: usize,
+    pub output_dim: usize,
+    pub hidden: usize,
+    pub param_count: u64,
+    pub priority: u32,
+    pub file: String,
+    pub sha256_16: String,
+}
+
+/// The artifact manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub version: u32,
+    pub seed: u64,
+    pub dtype: String,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl ManifestEntry {
+    /// Parse one entry object.
+    fn from_value(v: &Value) -> Result<Self> {
+        let s = |k: &str| -> Result<String> {
+            v.req(k)?
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| Error::Json(format!("{k} must be a string")))
+        };
+        let n = |k: &str| -> Result<u64> {
+            v.req(k)?
+                .as_u64()
+                .ok_or_else(|| Error::Json(format!("{k} must be an integer")))
+        };
+        Ok(ManifestEntry {
+            app: s("app")?,
+            title: s("title")?,
+            batch: n("batch")? as usize,
+            seq_len: n("seq_len")? as usize,
+            input_dim: n("input_dim")? as usize,
+            output_dim: n("output_dim")? as usize,
+            hidden: n("hidden")? as usize,
+            param_count: n("param_count")?,
+            priority: n("priority")? as u32,
+            file: s("file")?,
+            sha256_16: s("sha256_16")?,
+        })
+    }
+}
+
+impl Manifest {
+    /// Load and validate from `manifest.json`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        let m = Self::from_json(&text)?;
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Parse from JSON text (the document python/compile/aot.py writes).
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        let entries = v
+            .req("entries")?
+            .as_array()
+            .ok_or_else(|| Error::Json("entries must be an array".into()))?
+            .iter()
+            .map(ManifestEntry::from_value)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            version: v.req("version")?.as_u64().unwrap_or(0) as u32,
+            seed: v.req("seed")?.as_u64().unwrap_or(0),
+            dtype: v
+                .req("dtype")?
+                .as_str()
+                .ok_or_else(|| Error::Json("dtype must be a string".into()))?
+                .to_string(),
+            entries,
+        })
+    }
+
+    /// Consistency checks against the compiled-in application catalog.
+    pub fn validate(&self) -> Result<()> {
+        if self.entries.is_empty() {
+            return Err(Error::Artifact("manifest has no entries".into()));
+        }
+        for e in &self.entries {
+            let app: Application = e.app.parse().map_err(|_| {
+                Error::Artifact(format!("unknown app {:?} in manifest", e.app))
+            })?;
+            if e.input_dim != app.input_dim()
+                || e.output_dim != app.output_dim()
+                || e.seq_len != app.seq_len()
+            {
+                return Err(Error::Artifact(format!(
+                    "manifest entry {}/b{} shape mismatch vs catalog",
+                    e.app, e.batch
+                )));
+            }
+            if e.param_count != app.paper_flops() {
+                return Err(Error::Artifact(format!(
+                    "manifest entry {} param_count {} != paper {}",
+                    e.app,
+                    e.param_count,
+                    app.paper_flops()
+                )));
+            }
+            if e.batch == 0 {
+                return Err(Error::Artifact("batch 0 variant".into()));
+            }
+        }
+        Ok(())
+    }
+
+    /// The entry for a variant, if present.
+    pub fn entry(&self, app: Application, batch: usize) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.app == app.key() && e.batch == batch)
+    }
+
+    /// Compiled batch sizes for an app, ascending.
+    pub fn batch_sizes(&self, app: Application) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.app == app.key())
+            .map(|e| e.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(app: &str, batch: usize) -> ManifestEntry {
+        let a: Application = app.parse().unwrap();
+        ManifestEntry {
+            app: app.into(),
+            title: a.title().into(),
+            batch,
+            seq_len: a.seq_len(),
+            input_dim: a.input_dim(),
+            output_dim: a.output_dim(),
+            hidden: a.hidden(),
+            param_count: a.paper_flops(),
+            priority: a.priority(),
+            file: format!("{app}_b{batch}.hlo.txt"),
+            sha256_16: "0".repeat(16),
+        }
+    }
+
+    fn manifest() -> Manifest {
+        Manifest {
+            version: 1,
+            seed: 0,
+            dtype: "f32".into(),
+            entries: vec![
+                entry("breath", 1),
+                entry("breath", 8),
+                entry("mortality", 1),
+            ],
+        }
+    }
+
+    #[test]
+    fn valid_manifest_passes() {
+        manifest().validate().unwrap();
+    }
+
+    #[test]
+    fn batch_sizes_sorted() {
+        assert_eq!(manifest().batch_sizes(Application::Breath), vec![1, 8]);
+        assert!(manifest().batch_sizes(Application::Phenotype).is_empty());
+    }
+
+    #[test]
+    fn entry_lookup() {
+        let m = manifest();
+        assert!(m.entry(Application::Breath, 8).is_some());
+        assert!(m.entry(Application::Breath, 32).is_none());
+    }
+
+    #[test]
+    fn wrong_shape_rejected() {
+        let mut m = manifest();
+        m.entries[0].input_dim = 99;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn wrong_param_count_rejected() {
+        let mut m = manifest();
+        m.entries[0].param_count = 1;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_app_rejected() {
+        let mut m = manifest();
+        m.entries[0].app = "ecg".into();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn empty_rejected() {
+        let mut m = manifest();
+        m.entries.clear();
+        assert!(m.validate().is_err());
+    }
+}

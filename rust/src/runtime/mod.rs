@@ -1,0 +1,207 @@
+//! PJRT inference runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`)
+//! and executes them on the request path.  Python is never involved here —
+//! the artifacts were lowered once by `make artifacts`.
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py for why), parsed by
+//! `HloModuleProto::from_text_file`, compiled by the PJRT CPU client, and
+//! cached per (application, batch) variant.
+
+mod manifest;
+
+pub use manifest::{Manifest, ManifestEntry};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::workload::Application;
+use crate::{Error, Result};
+
+/// The result of one batched inference call.
+#[derive(Debug, Clone)]
+pub struct InferenceOutput {
+    /// Sigmoid probabilities, row-major `(batch, output_dim)`.
+    pub probs: Vec<f32>,
+    pub batch: usize,
+    pub output_dim: usize,
+    /// Pure execute time (excludes any emulation padding).
+    pub elapsed: Duration,
+}
+
+impl InferenceOutput {
+    /// Probabilities of one batch row.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.probs[i * self.output_dim..(i + 1) * self.output_dim]
+    }
+}
+
+/// Loads, compiles, caches and executes the model variants.
+///
+/// Thread-safe: executables compile lazily under a mutex and execution
+/// itself is internally synchronized by PJRT.
+pub struct InferenceRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    /// Lazily compiled executables per (app, batch).
+    cache: Mutex<HashMap<(Application, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl std::fmt::Debug for InferenceRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("InferenceRuntime")
+            .field("dir", &self.dir)
+            .field("variants", &self.manifest.entries.len())
+            .finish()
+    }
+}
+
+impl InferenceRuntime {
+    /// Open an artifact directory (must contain `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(InferenceRuntime {
+            client,
+            manifest,
+            dir,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Batch sizes available for an application, ascending.
+    pub fn batch_sizes(&self, app: Application) -> Vec<usize> {
+        self.manifest.batch_sizes(app)
+    }
+
+    /// Smallest compiled batch size that fits `n` rows (or the largest
+    /// available if `n` exceeds them all — caller splits).
+    pub fn pick_batch(&self, app: Application, n: usize) -> Result<usize> {
+        let sizes = self.batch_sizes(app);
+        sizes
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .or_else(|| sizes.last().copied())
+            .ok_or_else(|| Error::MissingVariant { app: app.key().into(), batch: n })
+    }
+
+    /// Eagerly compile every variant (used at server startup so the first
+    /// request doesn't pay compile time).
+    pub fn warmup(&self) -> Result<()> {
+        for e in &self.manifest.entries {
+            let app: Application = e.app.parse()?;
+            self.executable(app, e.batch)?;
+        }
+        Ok(())
+    }
+
+    /// Get (compiling if needed) the executable for a variant.
+    fn executable(
+        &self,
+        app: Application,
+        batch: usize,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(&(app, batch)) {
+            return Ok(exe.clone());
+        }
+        // compile outside the lock would risk duplicate work but never
+        // deadlock; we keep it simple and compile under the lock since
+        // startup warms everything anyway.
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(exe) = cache.get(&(app, batch)) {
+            return Ok(exe.clone());
+        }
+        let entry = self.manifest.entry(app, batch).ok_or_else(|| {
+            Error::MissingVariant { app: app.key().into(), batch }
+        })?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        cache.insert((app, batch), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute one batched inference.
+    ///
+    /// `input` must hold exactly `batch × seq_len × input_dim` f32 values,
+    /// time-major per row (the layout [`crate::data::EpisodeGenerator`]
+    /// produces).  Short batches must be padded by the caller (the
+    /// coordinator's batcher does this).
+    pub fn infer(
+        &self,
+        app: Application,
+        batch: usize,
+        input: &[f32],
+    ) -> Result<InferenceOutput> {
+        let expected = batch * app.seq_len() * app.input_dim();
+        if input.len() != expected {
+            return Err(Error::ShapeMismatch { expected, got: input.len() });
+        }
+        let exe = self.executable(app, batch)?;
+        let start = Instant::now();
+        let literal = xla::Literal::vec1(input).reshape(&[
+            batch as i64,
+            app.seq_len() as i64,
+            app.input_dim() as i64,
+        ])?;
+        let result = exe.execute::<xla::Literal>(&[literal])?[0][0]
+            .to_literal_sync()?;
+        // AOT lowers with return_tuple=True → 1-tuple
+        let out = result.to_tuple1()?;
+        let probs = out.to_vec::<f32>()?;
+        let elapsed = start.elapsed();
+        let output_dim = app.output_dim();
+        if probs.len() != batch * output_dim {
+            return Err(Error::ShapeMismatch {
+                expected: batch * output_dim,
+                got: probs.len(),
+            });
+        }
+        Ok(InferenceOutput { probs, batch, output_dim, elapsed })
+    }
+
+    /// Run `rows` (possibly exceeding the largest compiled batch) by
+    /// splitting into compiled-size chunks with zero-padding on the tail.
+    pub fn infer_rows(
+        &self,
+        app: Application,
+        rows: usize,
+        input: &[f32],
+    ) -> Result<InferenceOutput> {
+        let row_len = app.seq_len() * app.input_dim();
+        if input.len() != rows * row_len {
+            return Err(Error::ShapeMismatch {
+                expected: rows * row_len,
+                got: input.len(),
+            });
+        }
+        let mut probs = Vec::with_capacity(rows * app.output_dim());
+        let mut elapsed = Duration::ZERO;
+        let mut done = 0usize;
+        while done < rows {
+            let n = (rows - done).min(*self.batch_sizes(app).last().unwrap_or(&1));
+            let b = self.pick_batch(app, n)?;
+            let mut chunk = vec![0.0f32; b * row_len];
+            chunk[..n * row_len]
+                .copy_from_slice(&input[done * row_len..(done + n) * row_len]);
+            let out = self.infer(app, b, &chunk)?;
+            probs.extend_from_slice(&out.probs[..n * app.output_dim()]);
+            elapsed += out.elapsed;
+            done += n;
+        }
+        Ok(InferenceOutput {
+            probs,
+            batch: rows,
+            output_dim: app.output_dim(),
+            elapsed,
+        })
+    }
+}

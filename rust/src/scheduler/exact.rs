@@ -1,0 +1,159 @@
+//! Exact solver: branch-and-bound over machine assignments.
+//!
+//! The paper motivates the heuristic by noting the unrelated-parallel-
+//! machine problem "is very complicated" (§VI) but never quantifies how
+//! far Algorithm 2 lands from optimal.  This solver searches the full
+//! 3^n assignment space with eq.-6-style lower-bound pruning, making the
+//! optimality gap measurable for traces up to ~12 jobs (the paper's
+//! evaluation is 10).
+//!
+//! Assignments are evaluated by the same [`simulate`] semantics as the
+//! heuristic, so the comparison is apples-to-apples.
+
+use super::{simulate, Job, MachineId, Schedule};
+use crate::simulation::Tick;
+
+/// Exhaustive branch-and-bound over job→machine assignments, minimizing
+/// the priority-weighted whole response time.  Exponential in `jobs.len()`
+/// — intended for gap measurement on small traces; panics over 20 jobs to
+/// catch accidental misuse.
+pub fn schedule_exact(jobs: &[Job]) -> Schedule {
+    assert!(
+        jobs.len() <= 20,
+        "exact solver is exponential; {} jobs is too many",
+        jobs.len()
+    );
+    if jobs.is_empty() {
+        return simulate(jobs, &Vec::new());
+    }
+
+    // Branch order: jobs by release (stable w.r.t. the simulator's FCFS).
+    let mut best: Option<Schedule> = None;
+    let mut assignment = vec![MachineId::Device; jobs.len()];
+
+    // Per-job uncontended weighted cost — the suffix lower bound.
+    let suffix_lb: Vec<Tick> = {
+        let per_job: Vec<Tick> = jobs
+            .iter()
+            .map(|j| {
+                j.weight as Tick
+                    * MachineId::ALL
+                        .iter()
+                        .map(|&m| j.execution(m))
+                        .min()
+                        .unwrap()
+            })
+            .collect();
+        // suffix sums: lb of assigning jobs k..n optimally, ignoring
+        // contention
+        let mut s = vec![0; jobs.len() + 1];
+        for k in (0..jobs.len()).rev() {
+            s[k] = s[k + 1] + per_job[k];
+        }
+        s
+    };
+
+    fn dfs(
+        jobs: &[Job],
+        k: usize,
+        assignment: &mut Vec<MachineId>,
+        suffix_lb: &[Tick],
+        best: &mut Option<Schedule>,
+    ) {
+        if k == jobs.len() {
+            let s = simulate(jobs, assignment);
+            if best
+                .as_ref()
+                .map_or(true, |b| s.weighted_sum < b.weighted_sum)
+            {
+                *best = Some(s);
+            }
+            return;
+        }
+        // prune: cost of the first k jobs alone (simulated with the
+        // partial assignment) + uncontended bound for the rest
+        if let Some(b) = best {
+            let partial = simulate(&jobs[..k], &assignment[..k].to_vec());
+            if partial.weighted_sum + suffix_lb[k] >= b.weighted_sum {
+                return;
+            }
+        }
+        for m in MachineId::ALL {
+            assignment[k] = m;
+            dfs(jobs, k + 1, assignment, suffix_lb, best);
+        }
+    }
+
+    dfs(jobs, 0, &mut assignment, &suffix_lb, &mut best);
+    best.expect("nonempty search space")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::scheduler::{paper_jobs, schedule_jobs, SchedulerParams};
+
+    #[test]
+    fn exact_on_paper_trace() {
+        let jobs = paper_jobs();
+        let exact = schedule_exact(&jobs);
+        let ours = schedule_jobs(&jobs, &SchedulerParams::default());
+        // the heuristic can never beat the optimum
+        assert!(ours.weighted_sum >= exact.weighted_sum);
+        // ...and on the paper's trace it should be close (< 10% gap)
+        let gap = ours.weighted_sum as f64 / exact.weighted_sum as f64 - 1.0;
+        assert!(gap < 0.10, "optimality gap {:.1}%", gap * 100.0);
+    }
+
+    #[test]
+    fn exact_beats_or_matches_heuristic_on_random_traces() {
+        for seed in 0..30 {
+            let mut rng = Rng::new(seed);
+            let n = 1 + rng.below(8) as usize;
+            let mut release = 0;
+            let jobs: Vec<Job> = (0..n)
+                .map(|_| {
+                    release += rng.below(5);
+                    Job {
+                        release,
+                        weight: 1 + rng.below(3) as u32,
+                        proc_cloud: 1 + rng.below(10),
+                        trans_cloud: 1 + rng.below(60),
+                        proc_edge: 1 + rng.below(15),
+                        trans_edge: 1 + rng.below(15),
+                        proc_device: 1 + rng.below(70),
+                    }
+                })
+                .collect();
+            let exact = schedule_exact(&jobs);
+            let ours = schedule_jobs(&jobs, &SchedulerParams::default());
+            assert!(
+                ours.weighted_sum >= exact.weighted_sum,
+                "seed {seed}: heuristic {} < exact {}?!",
+                ours.weighted_sum,
+                exact.weighted_sum
+            );
+        }
+    }
+
+    #[test]
+    fn exact_single_job_picks_optimal_machine() {
+        let jobs = vec![paper_jobs()[0]];
+        let s = schedule_exact(&jobs);
+        assert_eq!(s.assignment[0], jobs[0].optimal_machine());
+    }
+
+    #[test]
+    fn empty_jobs() {
+        let s = schedule_exact(&[]);
+        assert_eq!(s.weighted_sum, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "too many")]
+    fn refuses_large_instances() {
+        let jobs = vec![paper_jobs()[0]; 21];
+        schedule_exact(&jobs);
+    }
+}

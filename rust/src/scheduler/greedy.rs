@@ -1,0 +1,97 @@
+//! Greedy initial feasible solution (Algorithm 2, first stage).
+//!
+//! "We find the optimal deployment machine for each job to have the
+//! minimum completion time by time sequence" — jobs are considered in
+//! release order (priority-first within a tie, per C5), and each is
+//! committed to the machine on which it would finish earliest given the
+//! commitments made so far.
+
+use super::{Assignment, Job, MachineId};
+use crate::simulation::MachineTimeline;
+
+/// Build the greedy earliest-completion assignment.
+pub fn greedy_assignment(jobs: &[Job]) -> Assignment {
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    // time sequence; C5: higher priority first within the same release tick
+    order.sort_by_key(|&i| (jobs[i].release, std::cmp::Reverse(jobs[i].weight), i));
+
+    let mut cloud = MachineTimeline::new();
+    let mut edge = MachineTimeline::new();
+    let mut assignment = vec![MachineId::Device; jobs.len()];
+
+    for &i in &order {
+        let j = &jobs[i];
+        // candidate completion on each machine
+        let avail_c = j.release + j.trans_cloud;
+        let avail_e = j.release + j.trans_edge;
+        let end_cloud = cloud.peek(avail_c, j.proc_cloud).1;
+        let end_edge = edge.peek(avail_e, j.proc_edge).1;
+        let end_device = j.release + j.proc_device;
+
+        // argmin completion; ties cloud-first (the paper's machine order)
+        let (mut best_m, mut best_end) = (MachineId::Cloud, end_cloud);
+        if end_edge < best_end {
+            best_m = MachineId::Edge;
+            best_end = end_edge;
+        }
+        if end_device < best_end {
+            best_m = MachineId::Device;
+        }
+
+        assignment[i] = best_m;
+        match best_m {
+            MachineId::Cloud => {
+                cloud.schedule(avail_c, j.proc_cloud);
+            }
+            MachineId::Edge => {
+                edge.schedule(avail_e, j.proc_edge);
+            }
+            MachineId::Device => {}
+        }
+    }
+    assignment
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{paper_jobs, simulate, Strategy};
+
+    #[test]
+    fn greedy_covers_all_jobs() {
+        let jobs = paper_jobs();
+        let a = greedy_assignment(&jobs);
+        assert_eq!(a.len(), jobs.len());
+    }
+
+    #[test]
+    fn greedy_beats_every_fixed_layer_baseline() {
+        let jobs = paper_jobs();
+        let greedy = simulate(&jobs, &greedy_assignment(&jobs));
+        for strat in [Strategy::AllCloud, Strategy::AllEdge, Strategy::AllDevice] {
+            let base = simulate(&jobs, &strat.assignment(&jobs));
+            assert!(
+                greedy.weighted_sum <= base.weighted_sum,
+                "greedy {} vs {strat:?} {}",
+                greedy.weighted_sum,
+                base.weighted_sum
+            );
+        }
+    }
+
+    #[test]
+    fn greedy_spreads_load() {
+        // with contention on the edge, some jobs must go elsewhere
+        let jobs = paper_jobs();
+        let a = greedy_assignment(&jobs);
+        let distinct: std::collections::HashSet<_> = a.iter().collect();
+        assert!(distinct.len() >= 2, "greedy used only {distinct:?}");
+    }
+
+    #[test]
+    fn single_job_gets_its_optimal_machine() {
+        let jobs = vec![paper_jobs()[0]];
+        let a = greedy_assignment(&jobs);
+        assert_eq!(a[0], jobs[0].optimal_machine());
+    }
+}

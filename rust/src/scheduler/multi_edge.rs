@@ -1,0 +1,283 @@
+//! Generalized machine set: multiple edge servers (and cloud servers).
+//!
+//! The paper simplifies to one cloud + one edge server (assumption (d))
+//! but frames the problem as general unrelated-parallel-machine
+//! scheduling (§V, citing [3][35]).  This module drops the
+//! simplification: `k` interchangeable edge servers and `c` cloud
+//! servers, the same C1–C5 semantics, the same greedy + tabu pipeline.
+//! An ablation bench sweeps `k` to show where an extra in-room edge
+//! server stops paying for itself.
+
+use super::{Job, MachineId};
+use crate::simulation::{MachineTimeline, ScheduleTrace, Tick, TraceEntry};
+
+/// A machine in the generalized system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GenMachine {
+    Cloud(usize),
+    Edge(usize),
+    /// The releasing patient's own device (never shared).
+    Device,
+}
+
+impl GenMachine {
+    /// Map to the per-job timing class (cloud/edge/device costs are
+    /// identical across replicas of the same class).
+    pub fn class(self) -> MachineId {
+        match self {
+            GenMachine::Cloud(_) => MachineId::Cloud,
+            GenMachine::Edge(_) => MachineId::Edge,
+            GenMachine::Device => MachineId::Device,
+        }
+    }
+}
+
+/// The machine pool: `clouds` cloud servers + `edges` edge servers
+/// (+ per-job devices, always available).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MachinePool {
+    pub clouds: usize,
+    pub edges: usize,
+}
+
+impl MachinePool {
+    /// The paper's configuration (assumption (d)).
+    pub fn paper() -> Self {
+        MachinePool { clouds: 1, edges: 1 }
+    }
+
+    /// All shared machines in the pool.
+    pub fn machines(&self) -> Vec<GenMachine> {
+        let mut v: Vec<GenMachine> =
+            (0..self.clouds).map(GenMachine::Cloud).collect();
+        v.extend((0..self.edges).map(GenMachine::Edge));
+        v.push(GenMachine::Device);
+        v
+    }
+}
+
+/// A generalized schedule.
+#[derive(Debug, Clone)]
+pub struct GenSchedule {
+    pub assignment: Vec<GenMachine>,
+    pub trace: ScheduleTrace,
+    pub weighted_sum: Tick,
+}
+
+impl GenSchedule {
+    pub fn unweighted_sum(&self) -> Tick {
+        self.trace.unweighted_sum()
+    }
+
+    pub fn last_completion(&self) -> Tick {
+        self.trace.last_completion()
+    }
+}
+
+/// Simulate a fixed assignment under C1–C5 (same semantics as
+/// [`super::simulate`], with one timeline per shared machine replica).
+pub fn simulate_pool(
+    jobs: &[Job],
+    pool: &MachinePool,
+    assignment: &[GenMachine],
+) -> GenSchedule {
+    assert_eq!(jobs.len(), assignment.len());
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    let avail =
+        |i: usize| jobs[i].release + jobs[i].transmission(assignment[i].class());
+    order.sort_by_key(|&i| (avail(i), jobs[i].release, i));
+
+    let mut clouds = vec![MachineTimeline::new(); pool.clouds];
+    let mut edges = vec![MachineTimeline::new(); pool.edges];
+    let mut entries = Vec::with_capacity(jobs.len());
+    for &i in &order {
+        let a = avail(i);
+        let p = jobs[i].processing(assignment[i].class());
+        let (start, end) = match assignment[i] {
+            GenMachine::Cloud(r) => clouds[r].schedule(a, p),
+            GenMachine::Edge(r) => edges[r].schedule(a, p),
+            GenMachine::Device => (a, a + p),
+        };
+        entries.push(TraceEntry {
+            job: i,
+            machine: assignment[i].class(),
+            release: jobs[i].release,
+            available: a,
+            start,
+            end,
+        });
+    }
+    let trace = ScheduleTrace { entries };
+    let weights: Vec<u32> = jobs.iter().map(|j| j.weight).collect();
+    let weighted_sum = trace.weighted_sum(&weights);
+    GenSchedule { assignment: assignment.to_vec(), trace, weighted_sum }
+}
+
+/// Greedy earliest-completion over the pool (Algorithm 2's first stage,
+/// generalized).
+pub fn greedy_pool(jobs: &[Job], pool: &MachinePool) -> Vec<GenMachine> {
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by_key(|&i| {
+        (jobs[i].release, std::cmp::Reverse(jobs[i].weight), i)
+    });
+
+    let mut clouds = vec![MachineTimeline::new(); pool.clouds];
+    let mut edges = vec![MachineTimeline::new(); pool.edges];
+    let mut assignment = vec![GenMachine::Device; jobs.len()];
+    for &i in &order {
+        let j = &jobs[i];
+        let mut best = (GenMachine::Device, j.release + j.proc_device);
+        for (r, tl) in clouds.iter().enumerate() {
+            let end =
+                tl.peek(j.release + j.trans_cloud, j.proc_cloud).1;
+            if end < best.1 {
+                best = (GenMachine::Cloud(r), end);
+            }
+        }
+        for (r, tl) in edges.iter().enumerate() {
+            let end = tl.peek(j.release + j.trans_edge, j.proc_edge).1;
+            if end < best.1 {
+                best = (GenMachine::Edge(r), end);
+            }
+        }
+        assignment[i] = best.0;
+        match best.0 {
+            GenMachine::Cloud(r) => {
+                clouds[r].schedule(j.release + j.trans_cloud, j.proc_cloud);
+            }
+            GenMachine::Edge(r) => {
+                edges[r].schedule(j.release + j.trans_edge, j.proc_edge);
+            }
+            GenMachine::Device => {}
+        }
+    }
+    assignment
+}
+
+/// Algorithm 2 generalized: greedy + tabu move search over the pool.
+pub fn schedule_pool(
+    jobs: &[Job],
+    pool: &MachinePool,
+    params: &super::SchedulerParams,
+) -> GenSchedule {
+    let machines = pool.machines();
+    let mut current = greedy_pool(jobs, pool);
+    let mut best_assignment = current.clone();
+    let mut best_cost = simulate_pool(jobs, pool, &current).weighted_sum;
+
+    let mut tabu: std::collections::HashMap<(usize, GenMachine), usize> =
+        std::collections::HashMap::new();
+    let mut stall = 0usize;
+
+    for iter in 0..params.max_iters {
+        let mut best_move: Option<(usize, GenMachine, Tick)> = None;
+        for i in 0..jobs.len() {
+            for &m in &machines {
+                if m == current[i] {
+                    continue;
+                }
+                let forbidden =
+                    tabu.get(&(i, m)).map_or(false, |&until| iter < until);
+                let mut cand = current.clone();
+                cand[i] = m;
+                let cost = simulate_pool(jobs, pool, &cand).weighted_sum;
+                if forbidden && cost >= best_cost {
+                    continue;
+                }
+                if best_move.map_or(true, |(_, _, c)| cost < c) {
+                    best_move = Some((i, m, cost));
+                }
+            }
+        }
+        let Some((i, m, cost)) = best_move else { break };
+        let old = current[i];
+        current[i] = m;
+        tabu.insert((i, old), iter + params.tenure);
+        if cost < best_cost {
+            best_cost = cost;
+            best_assignment = current.clone();
+            stall = 0;
+        } else {
+            stall += 1;
+            if stall >= params.patience {
+                break;
+            }
+        }
+    }
+    simulate_pool(jobs, pool, &best_assignment)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{paper_jobs, schedule_jobs, SchedulerParams};
+
+    #[test]
+    fn paper_pool_matches_specialized_scheduler() {
+        let jobs = paper_jobs();
+        let params = SchedulerParams::default();
+        let gen = schedule_pool(&jobs, &MachinePool::paper(), &params);
+        let spec = schedule_jobs(&jobs, &params);
+        assert_eq!(gen.weighted_sum, spec.weighted_sum);
+    }
+
+    #[test]
+    fn more_edges_never_hurt() {
+        let jobs = paper_jobs();
+        let params = SchedulerParams::default();
+        let mut prev = Tick::MAX;
+        for edges in 1..=4 {
+            let pool = MachinePool { clouds: 1, edges };
+            let s = schedule_pool(&jobs, &pool, &params);
+            assert!(
+                s.weighted_sum <= prev,
+                "edges={edges}: {} > {prev}",
+                s.weighted_sum
+            );
+            prev = s.weighted_sum;
+        }
+    }
+
+    #[test]
+    fn replicas_share_class_costs() {
+        let jobs = paper_jobs();
+        let pool = MachinePool { clouds: 2, edges: 2 };
+        // all on Edge(0) vs all on Edge(1): identical by symmetry
+        let a = simulate_pool(
+            &jobs,
+            &pool,
+            &vec![GenMachine::Edge(0); jobs.len()],
+        );
+        let b = simulate_pool(
+            &jobs,
+            &pool,
+            &vec![GenMachine::Edge(1); jobs.len()],
+        );
+        assert_eq!(a.weighted_sum, b.weighted_sum);
+    }
+
+    #[test]
+    fn two_edges_split_contention() {
+        let jobs = paper_jobs();
+        let pool2 = MachinePool { clouds: 1, edges: 2 };
+        // splitting all-edge across two replicas beats one replica
+        let one = simulate_pool(
+            &jobs,
+            &pool2,
+            &vec![GenMachine::Edge(0); jobs.len()],
+        );
+        let split: Vec<GenMachine> = (0..jobs.len())
+            .map(|i| GenMachine::Edge(i % 2))
+            .collect();
+        let two = simulate_pool(&jobs, &pool2, &split);
+        assert!(two.weighted_sum < one.weighted_sum);
+    }
+
+    #[test]
+    fn pool_machine_listing() {
+        let pool = MachinePool { clouds: 2, edges: 3 };
+        let ms = pool.machines();
+        assert_eq!(ms.len(), 6); // 2 + 3 + device
+        assert!(ms.contains(&GenMachine::Device));
+    }
+}

@@ -1,0 +1,140 @@
+//! Online (non-clairvoyant) scheduler: jobs are assigned the moment they
+//! are released, without knowledge of future arrivals.
+//!
+//! The paper's Algorithm 2 is offline — it sees the whole trace
+//! (releases, priorities, costs) before placing anything.  A real ICU
+//! coordinator doesn't.  This scheduler commits each job at its release
+//! time to the machine minimizing its *own* weighted completion given the
+//! commitments so far — the natural online counterpart of the greedy
+//! stage — and serves as the policy bridge between the offline analysis
+//! (§V–VI) and the serving coordinator.
+//!
+//! The competitive gap against offline Algorithm 2 and the exact optimum
+//! is measured in `rust/benches/sched_multi.rs` and the tests below.
+
+use super::{simulate, Assignment, Job, MachineId, Schedule};
+use crate::simulation::MachineTimeline;
+
+/// Assign jobs in release order with no lookahead; returns the resulting
+/// schedule (simulated with the same C1–C5 semantics).
+pub fn schedule_online(jobs: &[Job]) -> Schedule {
+    // release order; ties: higher priority first (C5), then index —
+    // exactly what a dispatcher sees on the wire
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by_key(|&i| {
+        (jobs[i].release, std::cmp::Reverse(jobs[i].weight), i)
+    });
+
+    let mut cloud = MachineTimeline::new();
+    let mut edge = MachineTimeline::new();
+    let mut assignment: Assignment = vec![MachineId::Device; jobs.len()];
+
+    for &i in &order {
+        let j = &jobs[i];
+        // weighted response if committed now
+        let cand = |m: MachineId, tl: Option<&MachineTimeline>| {
+            let avail = j.release + j.transmission(m);
+            let end = match tl {
+                Some(tl) => tl.peek(avail, j.processing(m)).1,
+                None => avail + j.processing(m),
+            };
+            (end - j.release) * j.weight as u64
+        };
+        let costs = [
+            (MachineId::Cloud, cand(MachineId::Cloud, Some(&cloud))),
+            (MachineId::Edge, cand(MachineId::Edge, Some(&edge))),
+            (MachineId::Device, cand(MachineId::Device, None)),
+        ];
+        let (m, _) = costs.iter().min_by_key(|(_, c)| *c).copied().unwrap();
+        assignment[i] = m;
+        match m {
+            MachineId::Cloud => {
+                cloud.schedule(j.release + j.trans_cloud, j.proc_cloud);
+            }
+            MachineId::Edge => {
+                edge.schedule(j.release + j.trans_edge, j.proc_edge);
+            }
+            MachineId::Device => {}
+        }
+    }
+    simulate(jobs, &assignment)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::scheduler::{
+        paper_jobs, schedule_exact, schedule_jobs, SchedulerParams, Strategy,
+    };
+
+    #[test]
+    fn online_on_paper_trace() {
+        let jobs = paper_jobs();
+        let online = schedule_online(&jobs);
+        let offline = schedule_jobs(&jobs, &SchedulerParams::default());
+        // online can't beat offline, but must stay within 2× on the
+        // paper's trace (it's actually much closer)
+        assert!(online.weighted_sum >= offline.weighted_sum);
+        assert!(
+            online.weighted_sum <= offline.weighted_sum * 2,
+            "online {} vs offline {}",
+            online.weighted_sum,
+            offline.weighted_sum
+        );
+    }
+
+    #[test]
+    fn online_beats_fixed_layers() {
+        let jobs = paper_jobs();
+        let online = schedule_online(&jobs);
+        for s in [Strategy::AllCloud, Strategy::AllEdge, Strategy::AllDevice] {
+            let base = simulate(&jobs, &s.assignment(&jobs));
+            assert!(
+                online.weighted_sum <= base.weighted_sum,
+                "{s:?}: online {} vs {}",
+                online.weighted_sum,
+                base.weighted_sum
+            );
+        }
+    }
+
+    #[test]
+    fn online_gap_vs_exact_bounded_on_random_traces() {
+        let mut worst = 1.0f64;
+        for seed in 0..25 {
+            let mut rng = Rng::new(seed ^ 0x7777);
+            let n = 2 + rng.below(6) as usize;
+            let mut release = 0;
+            let jobs: Vec<Job> = (0..n)
+                .map(|_| {
+                    release += rng.below(5);
+                    Job {
+                        release,
+                        weight: 1 + rng.below(3) as u32,
+                        proc_cloud: 1 + rng.below(10),
+                        trans_cloud: 1 + rng.below(60),
+                        proc_edge: 1 + rng.below(15),
+                        trans_edge: 1 + rng.below(15),
+                        proc_device: 1 + rng.below(70),
+                    }
+                })
+                .collect();
+            let online = schedule_online(&jobs);
+            let exact = schedule_exact(&jobs);
+            let ratio =
+                online.weighted_sum as f64 / exact.weighted_sum.max(1) as f64;
+            worst = worst.max(ratio);
+        }
+        // empirical competitive ratio on the paper's regime stays small
+        assert!(worst < 2.5, "worst online/exact ratio {worst:.2}");
+    }
+
+    #[test]
+    fn online_single_job_is_optimal() {
+        let jobs = vec![paper_jobs()[3]];
+        let online = schedule_online(&jobs);
+        let exact = schedule_exact(&jobs);
+        assert_eq!(online.weighted_sum, exact.weighted_sum);
+    }
+}

@@ -1,0 +1,214 @@
+//! Algorithm 2 — multi-job allocation heuristic: greedy initial solution
+//! improved by a tabu-style neighborhood search (paper §VI, citing
+//! variable neighborhood search [24]).
+//!
+//! Moves reassign one job to a different machine; the whole schedule is
+//! re-simulated (transmission overlap + FCFS availability order) and the
+//! move is kept if the priority-weighted whole response time `L*sum`
+//! improves.  A short-term tabu memory forbids immediately reversing a
+//! move, letting the search escape shallow local minima; the best solution
+//! ever seen is returned.
+
+
+use super::{
+    greedy_assignment, simulate, weighted_cost, Assignment, Job, MachineId,
+    Schedule, SimScratch,
+};
+
+/// Tunables for Algorithm 2.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SchedulerParams {
+    /// Maximum outer iterations (`maxCount` in the paper's listing).
+    pub max_iters: usize,
+    /// Tabu tenure: how many iterations a reversed move stays forbidden.
+    pub tenure: usize,
+    /// Stop early after this many consecutive non-improving iterations.
+    pub patience: usize,
+}
+
+impl Default for SchedulerParams {
+    fn default() -> Self {
+        SchedulerParams { max_iters: 200, tenure: 5, patience: 30 }
+    }
+}
+
+impl SchedulerParams {
+    /// Parse from a config section, layered over defaults.
+    pub fn from_reader(r: &crate::config::FieldReader) -> crate::Result<Self> {
+        let def = SchedulerParams::default();
+        let p = SchedulerParams {
+            max_iters: r.usize("max_iters")?.unwrap_or(def.max_iters),
+            tenure: r.usize("tenure")?.unwrap_or(def.tenure),
+            patience: r.usize("patience")?.unwrap_or(def.patience),
+        };
+        r.finish()?;
+        Ok(p)
+    }
+
+    /// Serialize as a config section.
+    pub fn to_value(&self) -> crate::serialize::Value {
+        let mut v = crate::serialize::Value::object();
+        v.set("max_iters", self.max_iters);
+        v.set("tenure", self.tenure);
+        v.set("patience", self.patience);
+        v
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.max_iters == 0 {
+            return Err(crate::Error::Scheduler(
+                "max_iters must be positive".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Run Algorithm 2 end-to-end: greedy seed + tabu neighborhood search.
+pub fn schedule_jobs(jobs: &[Job], params: &SchedulerParams) -> Schedule {
+    let seed = greedy_assignment(jobs);
+    improve(jobs, seed, params)
+}
+
+/// Improve a starting assignment with the tabu neighborhood search.
+pub fn improve(
+    jobs: &[Job],
+    start: Assignment,
+    params: &SchedulerParams,
+) -> Schedule {
+    let mut current = start;
+    let mut scratch = SimScratch::default();
+    let mut current_cost = weighted_cost(jobs, &current, &mut scratch);
+    let mut best_assignment = current.clone();
+    let mut best_cost = current_cost;
+
+    // tabu[(job, machine)] = iteration until which moving `job` onto
+    // `machine` is forbidden (prevents undoing a move immediately)
+    let mut tabu: std::collections::HashMap<(usize, MachineId), usize> =
+        std::collections::HashMap::new();
+    let mut stall = 0usize;
+
+    for iter in 0..params.max_iters {
+        // evaluate the full 1-move neighborhood
+        let mut best_move: Option<(usize, MachineId, u64)> = None;
+        for i in 0..jobs.len() {
+            let old_m = current[i];
+            for m in MachineId::ALL {
+                if m == old_m {
+                    continue;
+                }
+                let forbidden =
+                    tabu.get(&(i, m)).map_or(false, |&until| iter < until);
+                // evaluate the move in place (§Perf: no clone, no trace)
+                current[i] = m;
+                let cost = weighted_cost(jobs, &current, &mut scratch);
+                current[i] = old_m;
+                // aspiration: a tabu move is allowed if it beats the best
+                if forbidden && cost >= best_cost {
+                    continue;
+                }
+                if best_move.map_or(true, |(_, _, c)| cost < c) {
+                    best_move = Some((i, m, cost));
+                }
+            }
+        }
+        let Some((i, m, cost)) = best_move else { break };
+
+        // commit; forbid the reverse move for `tenure` iterations
+        let old_m = current[i];
+        current[i] = m;
+        tabu.insert((i, old_m), iter + params.tenure);
+        current_cost = cost;
+
+        if current_cost < best_cost {
+            best_cost = current_cost;
+            best_assignment = current.clone();
+            stall = 0;
+        } else {
+            stall += 1;
+            if stall >= params.patience {
+                break;
+            }
+        }
+    }
+
+    simulate(jobs, &best_assignment)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{evaluate_strategy, lower_bound, paper_jobs, Strategy};
+
+    #[test]
+    fn algorithm2_beats_all_baselines_on_paper_trace() {
+        let jobs = paper_jobs();
+        let ours = schedule_jobs(&jobs, &SchedulerParams::default());
+        for strat in [
+            Strategy::PerJobOptimal,
+            Strategy::AllCloud,
+            Strategy::AllEdge,
+            Strategy::AllDevice,
+        ] {
+            let base = evaluate_strategy(&jobs, strat);
+            assert!(
+                ours.unweighted_sum() <= base.schedule.unweighted_sum(),
+                "ours {} vs {strat:?} {}",
+                ours.unweighted_sum(),
+                base.schedule.unweighted_sum()
+            );
+            assert!(
+                ours.last_completion() <= base.schedule.last_completion(),
+                "last: ours {} vs {strat:?} {}",
+                ours.last_completion(),
+                base.schedule.last_completion()
+            );
+        }
+    }
+
+    #[test]
+    fn algorithm2_dominates_lower_bound() {
+        let jobs = paper_jobs();
+        let ours = schedule_jobs(&jobs, &SchedulerParams::default());
+        assert!(ours.weighted_sum >= lower_bound(&jobs));
+    }
+
+    #[test]
+    fn improves_on_greedy_or_matches() {
+        let jobs = paper_jobs();
+        let greedy = simulate(&jobs, &greedy_assignment(&jobs));
+        let ours = schedule_jobs(&jobs, &SchedulerParams::default());
+        assert!(ours.weighted_sum <= greedy.weighted_sum);
+    }
+
+    #[test]
+    fn deterministic() {
+        let jobs = paper_jobs();
+        let a = schedule_jobs(&jobs, &SchedulerParams::default());
+        let b = schedule_jobs(&jobs, &SchedulerParams::default());
+        assert_eq!(a.assignment, b.assignment);
+        assert_eq!(a.weighted_sum, b.weighted_sum);
+    }
+
+    #[test]
+    fn zero_iters_rejected() {
+        let p = SchedulerParams { max_iters: 0, ..Default::default() };
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn single_job_trivial() {
+        let jobs = vec![paper_jobs()[4]];
+        let s = schedule_jobs(&jobs, &SchedulerParams::default());
+        assert_eq!(s.assignment.len(), 1);
+        // single job must land on its optimal machine
+        assert_eq!(s.assignment[0], jobs[0].optimal_machine());
+    }
+
+    #[test]
+    fn empty_jobs_ok() {
+        let s = schedule_jobs(&[], &SchedulerParams::default());
+        assert_eq!(s.weighted_sum, 0);
+        assert_eq!(s.unweighted_sum(), 0);
+    }
+}

@@ -1,0 +1,20 @@
+//! In-tree serialization substrate.
+//!
+//! This environment builds fully offline against a fixed vendored crate
+//! set that does not include serde/serde_json/toml, so the two interchange
+//! formats the framework needs are implemented here from scratch
+//! (substitution ledger, DESIGN.md §3):
+//!
+//! * [`json`] — a complete JSON value model, parser and writer.  Used for
+//!   `artifacts/manifest.json` (the contract with the python AOT path) and
+//!   for `--json` report output.
+//! * [`toml`] — the TOML subset the config system uses: dotted/nested
+//!   sections, scalars, homogeneous scalar arrays, comments.
+//!
+//! Both parsers are tested against adversarial inputs and round-trip the
+//! framework's own documents bit-exactly.
+
+pub mod json;
+pub mod toml;
+
+pub use json::Value;

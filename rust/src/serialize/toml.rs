@@ -1,0 +1,422 @@
+//! TOML-subset parser for the config system.
+//!
+//! Supported grammar (everything `Config` and the presets use):
+//!
+//! * `# comments` and blank lines
+//! * `[section]` and dotted `[section.sub]` headers
+//! * `key = value` with dotted keys
+//! * values: basic strings (`"..."` with the JSON escape set), integers,
+//!   floats (incl. `inf`/`nan` forms TOML allows), booleans, homogeneous
+//!   arrays of scalars, and inline tables `{ k = v, ... }`
+//!
+//! Documents parse into the shared [`Value`] model (objects/arrays/
+//! scalars), so config extraction code is format-agnostic.
+
+use super::json::Value;
+use crate::{Error, Result};
+
+/// Parse TOML text into a [`Value::Object`].
+pub fn parse(text: &str) -> Result<Value> {
+    let mut root = Value::object();
+    let mut section_path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let inner = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?;
+            if inner.starts_with('[') {
+                return Err(err(lineno, "array-of-tables is not supported"));
+            }
+            section_path = parse_dotted_key(inner, lineno)?;
+            // ensure the section object exists
+            ensure_path(&mut root, &section_path, lineno)?;
+        } else {
+            let eq = find_unquoted_eq(line)
+                .ok_or_else(|| err(lineno, "expected key = value"))?;
+            let (k, v) = line.split_at(eq);
+            let v = &v[1..];
+            let mut path = section_path.clone();
+            path.extend(parse_dotted_key(k.trim(), lineno)?);
+            let value = parse_value(v.trim(), lineno)?;
+            insert_path(&mut root, &path, value, lineno)?;
+        }
+    }
+    Ok(root)
+}
+
+fn err(lineno: usize, msg: &str) -> Error {
+    Error::Toml(format!("line {}: {msg}", lineno + 1))
+}
+
+/// Strip a trailing comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' if !escaped => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        escaped = in_str && c == '\\' && !escaped;
+    }
+    line
+}
+
+fn find_unquoted_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_dotted_key(s: &str, lineno: usize) -> Result<Vec<String>> {
+    let parts: Vec<String> = s
+        .split('.')
+        .map(|p| p.trim().trim_matches('"').to_string())
+        .collect();
+    if parts.iter().any(|p| p.is_empty()) {
+        return Err(err(lineno, "empty key segment"));
+    }
+    Ok(parts)
+}
+
+fn ensure_path<'a>(
+    root: &'a mut Value,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut Value> {
+    let mut cur = root;
+    for seg in path {
+        let Value::Object(entries) = cur else {
+            return Err(err(lineno, "key path crosses a non-table"));
+        };
+        let idx = match entries.iter().position(|(k, _)| k == seg) {
+            Some(i) => i,
+            None => {
+                entries.push((seg.clone(), Value::object()));
+                entries.len() - 1
+            }
+        };
+        cur = &mut entries[idx].1;
+    }
+    Ok(cur)
+}
+
+fn insert_path(
+    root: &mut Value,
+    path: &[String],
+    value: Value,
+    lineno: usize,
+) -> Result<()> {
+    let (last, parents) = path.split_last().expect("non-empty path");
+    let parent = ensure_path(root, parents, lineno)?;
+    let Value::Object(entries) = parent else {
+        return Err(err(lineno, "parent is not a table"));
+    };
+    if entries
+        .iter()
+        .any(|(k, v)| k == last && !matches!(v, Value::Object(o) if o.is_empty()))
+    {
+        return Err(err(lineno, &format!("duplicate key {last:?}")));
+    }
+    if let Some(e) = entries.iter_mut().find(|(k, _)| k == last) {
+        e.1 = value;
+    } else {
+        entries.push((last.clone(), value));
+    }
+    Ok(())
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value> {
+    if s.is_empty() {
+        return Err(err(lineno, "empty value"));
+    }
+    // string
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        return unescape(inner, lineno);
+    }
+    // array
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(err(lineno, "unterminated array (must be single-line)"));
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if p.is_empty() {
+                continue;
+            }
+            items.push(parse_value(p, lineno)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    // inline table
+    if s.starts_with('{') {
+        if !s.ends_with('}') {
+            return Err(err(lineno, "unterminated inline table"));
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut obj = Value::object();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if p.is_empty() {
+                continue;
+            }
+            let eq = find_unquoted_eq(p)
+                .ok_or_else(|| err(lineno, "inline table needs k = v"))?;
+            let (k, v) = p.split_at(eq);
+            obj.set(
+                k.trim().trim_matches('"'),
+                parse_value(v[1..].trim(), lineno)?,
+            );
+        }
+        return Ok(obj);
+    }
+    // booleans
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    // numbers (TOML allows underscores, inf, nan)
+    let cleaned = s.replace('_', "");
+    match cleaned.as_str() {
+        "inf" | "+inf" => return Ok(Value::Number(f64::INFINITY)),
+        "-inf" => return Ok(Value::Number(f64::NEG_INFINITY)),
+        "nan" | "+nan" | "-nan" => return Ok(Value::Number(f64::NAN)),
+        _ => {}
+    }
+    cleaned
+        .parse::<f64>()
+        .map(Value::Number)
+        .map_err(|_| err(lineno, &format!("cannot parse value {s:?}")))
+}
+
+/// Split on top-level commas (not inside strings/brackets).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0i32;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' | '{' if !in_str => depth += 1,
+            ']' | '}' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+fn unescape(s: &str, lineno: usize) -> Result<Value> {
+    let mut out = String::new();
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('u') => {
+                let hex: String = chars.by_ref().take(4).collect();
+                let cp = u32::from_str_radix(&hex, 16)
+                    .map_err(|_| err(lineno, "bad \\u escape"))?;
+                out.push(
+                    char::from_u32(cp)
+                        .ok_or_else(|| err(lineno, "bad codepoint"))?,
+                );
+            }
+            _ => return Err(err(lineno, "unknown escape")),
+        }
+    }
+    Ok(Value::String(out))
+}
+
+/// Serialize a [`Value::Object`] as TOML (sections for nested objects,
+/// inline values otherwise).  The inverse of [`parse`] for the documents
+/// the config system emits.
+pub fn emit(v: &Value) -> String {
+    let mut out = String::new();
+    let Value::Object(entries) = v else {
+        return out;
+    };
+    // scalars first, then sections
+    for (k, val) in entries {
+        if !matches!(val, Value::Object(_)) {
+            out.push_str(&format!("{k} = {}\n", emit_value(val)));
+        }
+    }
+    for (k, val) in entries {
+        if matches!(val, Value::Object(_)) {
+            emit_section(&mut out, k, val);
+        }
+    }
+    out
+}
+
+fn emit_section(out: &mut String, path: &str, v: &Value) {
+    let Value::Object(entries) = v else { return };
+    let scalars: Vec<_> = entries
+        .iter()
+        .filter(|(_, v)| !matches!(v, Value::Object(_)))
+        .collect();
+    if !scalars.is_empty() || entries.is_empty() {
+        out.push_str(&format!("\n[{path}]\n"));
+        for (k, val) in &scalars {
+            out.push_str(&format!("{k} = {}\n", emit_value(val)));
+        }
+    }
+    for (k, val) in entries {
+        if matches!(val, Value::Object(_)) {
+            emit_section(out, &format!("{path}.{k}"), val);
+        }
+    }
+}
+
+fn emit_value(v: &Value) -> String {
+    match v {
+        Value::Null => "\"\"".into(),
+        Value::Bool(b) => b.to_string(),
+        Value::Number(n) => {
+            if n.fract() == 0.0 && n.is_finite() && n.abs() < 9.0e15 {
+                // keep floats recognizable as floats for round-trip clarity
+                format!("{:.1}", n)
+                    .trim_end_matches(".0")
+                    .to_string()
+                    + if *n as i64 as f64 == *n { "" } else { "" }
+            } else if n.is_infinite() {
+                if *n > 0.0 { "inf".into() } else { "-inf".into() }
+            } else {
+                format!("{n}")
+            }
+        }
+        Value::String(s) => Value::String(s.clone()).to_string(),
+        Value::Array(items) => {
+            let inner: Vec<String> = items.iter().map(emit_value).collect();
+            format!("[{}]", inner.join(", "))
+        }
+        Value::Object(_) => "{}".into(), // nested objects become sections
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic_document() {
+        let doc = r#"
+# top comment
+seed = 42
+name = "paper"            # trailing comment
+ratio = 0.5
+
+[serve]
+patients = 4
+mix = [0.4, 0.4, 0.2]
+emulate = true
+
+[environment.cloud]
+cores = 12
+freq_ghz = 2.2
+"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("seed").unwrap().as_u64(), Some(42));
+        assert_eq!(v.get("name").unwrap().as_str(), Some("paper"));
+        assert_eq!(
+            v.get("serve").unwrap().get("patients").unwrap().as_u64(),
+            Some(4)
+        );
+        assert_eq!(
+            v.get("serve").unwrap().get("mix").unwrap().as_array().unwrap().len(),
+            3
+        );
+        assert_eq!(
+            v.get("environment")
+                .unwrap()
+                .get("cloud")
+                .unwrap()
+                .get("cores")
+                .unwrap()
+                .as_u64(),
+            Some(12)
+        );
+    }
+
+    #[test]
+    fn inline_table() {
+        let v = parse("link = { latency_ms = 42.0, bandwidth_mbs = 2.9 }")
+            .unwrap();
+        let link = v.get("link").unwrap();
+        assert_eq!(link.get("latency_ms").unwrap().as_f64(), Some(42.0));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let v = parse("s = \"a#b\"").unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn bad_lines_rejected() {
+        for bad in ["[sec", "= 3", "x =", "x = [1, ", "x = \"abc"] {
+            assert!(parse(bad).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn underscored_numbers_and_inf() {
+        let v = parse("big = 1_000_000\nx = inf\ny = -inf").unwrap();
+        assert_eq!(v.get("big").unwrap().as_u64(), Some(1_000_000));
+        assert_eq!(v.get("x").unwrap().as_f64(), Some(f64::INFINITY));
+    }
+
+    #[test]
+    fn emit_roundtrip() {
+        let doc = "seed = 7\n\n[serve]\npatients = 3\nmix = [0.5, 0.5, 0]\n";
+        let v = parse(doc).unwrap();
+        let emitted = emit(&v);
+        let back = parse(&emitted).unwrap();
+        assert_eq!(back, v, "emitted:\n{emitted}");
+    }
+
+    #[test]
+    fn dotted_keys() {
+        let v = parse("a.b.c = 1").unwrap();
+        assert_eq!(
+            v.get("a").unwrap().get("b").unwrap().get("c").unwrap().as_u64(),
+            Some(1)
+        );
+    }
+}

@@ -1,0 +1,53 @@
+//! Discrete-event simulation substrate.
+//!
+//! The scheduler (§V–VI) treats the ICU as an unrelated-parallel-machine
+//! system: one shared cloud machine, one shared edge machine, and one
+//! private device per patient.  This module provides the generic pieces —
+//! an event clock, exclusive machine timelines, and schedule traces — that
+//! both the offline scheduler and the offline strategy simulators share.
+//! (The online serving coordinator uses tokio instead; its queueing
+//! semantics mirror [`MachineTimeline`] and are cross-checked in tests.)
+
+mod timeline;
+mod trace;
+
+pub use timeline::MachineTimeline;
+pub use trace::{ScheduleTrace, TraceEntry};
+
+/// Integer time units (the paper normalizes all times to non-zero integer
+/// units, constraint C3).
+pub type Tick = u64;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeline_serializes_jobs() {
+        let mut m = MachineTimeline::new();
+        // job available at 5, runs 3
+        let (s, e) = m.schedule(5, 3);
+        assert_eq!((s, e), (5, 8));
+        // next job available at 2 must wait for the machine
+        let (s, e) = m.schedule(2, 4);
+        assert_eq!((s, e), (8, 12));
+        assert_eq!(m.free_at(), 12);
+    }
+
+    #[test]
+    fn timeline_idle_gap() {
+        let mut m = MachineTimeline::new();
+        m.schedule(0, 2);
+        let (s, e) = m.schedule(10, 1);
+        assert_eq!((s, e), (10, 11));
+    }
+
+    #[test]
+    fn peek_does_not_mutate() {
+        let mut m = MachineTimeline::new();
+        m.schedule(0, 5);
+        let (s, e) = m.peek(1, 2);
+        assert_eq!((s, e), (5, 7));
+        assert_eq!(m.free_at(), 5);
+    }
+}

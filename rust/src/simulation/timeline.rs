@@ -1,0 +1,102 @@
+//! Exclusive-machine timeline: one job at a time, no preemption (C1, C2).
+
+use super::Tick;
+
+/// Occupancy timeline of one exclusive machine.
+///
+/// Jobs are appended in decision order; each runs in the first slot at or
+/// after both its availability time and the machine's free time.  Because
+/// the schedulers always dispatch in nondecreasing decision order this
+/// append-only representation is sufficient (no gap-filling), matching the
+/// paper's list-scheduling semantics.
+#[derive(Debug, Clone, Default)]
+pub struct MachineTimeline {
+    free_at: Tick,
+    /// (start, end) of every scheduled job, in append order.
+    slots: Vec<(Tick, Tick)>,
+}
+
+impl MachineTimeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Earliest tick the machine is idle.
+    pub fn free_at(&self) -> Tick {
+        self.free_at
+    }
+
+    /// Number of jobs scheduled.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Total busy time.
+    pub fn busy(&self) -> Tick {
+        self.slots.iter().map(|(s, e)| e - s).sum()
+    }
+
+    /// Utilization over the makespan (0 if nothing scheduled).
+    pub fn utilization(&self) -> f64 {
+        match self.slots.last() {
+            None => 0.0,
+            Some(&(_, end)) if end == 0 => 0.0,
+            Some(&(_, end)) => self.busy() as f64 / end as f64,
+        }
+    }
+
+    /// Schedule a job that becomes available at `avail` and runs for
+    /// `duration`; returns its (start, end).
+    pub fn schedule(&mut self, avail: Tick, duration: Tick) -> (Tick, Tick) {
+        let start = avail.max(self.free_at);
+        let end = start + duration;
+        self.free_at = end;
+        self.slots.push((start, end));
+        (start, end)
+    }
+
+    /// What `schedule` would return, without committing.
+    pub fn peek(&self, avail: Tick, duration: Tick) -> (Tick, Tick) {
+        let start = avail.max(self.free_at);
+        (start, start + duration)
+    }
+
+    /// Scheduled slots in append order.
+    pub fn slots(&self) -> &[(Tick, Tick)] {
+        &self.slots
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn busy_and_utilization() {
+        let mut m = MachineTimeline::new();
+        m.schedule(0, 4);
+        m.schedule(6, 4);
+        assert_eq!(m.busy(), 8);
+        assert!((m.utilization() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_utilization_zero() {
+        assert_eq!(MachineTimeline::new().utilization(), 0.0);
+    }
+
+    #[test]
+    fn no_overlap_invariant() {
+        let mut m = MachineTimeline::new();
+        let mut prev_end = 0;
+        for (avail, dur) in [(3, 2), (1, 5), (9, 1), (0, 3)] {
+            let (s, e) = m.schedule(avail, dur);
+            assert!(s >= prev_end);
+            prev_end = e;
+        }
+    }
+}

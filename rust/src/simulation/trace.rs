@@ -1,0 +1,103 @@
+//! Schedule traces: the per-job placement record behind Figures 7 and 8.
+
+
+use super::Tick;
+use crate::scheduler::MachineId;
+
+/// One job's placement in a finished schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEntry {
+    /// Index into the job list.
+    pub job: usize,
+    /// Machine the job ran on.
+    pub machine: MachineId,
+    /// Release time (given).
+    pub release: Tick,
+    /// Tick the job's data finished arriving at the machine.
+    pub available: Tick,
+    /// Execution start.
+    pub start: Tick,
+    /// Execution end (= completion E_i).
+    pub end: Tick,
+}
+
+impl TraceEntry {
+    /// Response time `L_i − R_i = E_i − R_i` (paper §V-B).
+    pub fn response(&self) -> Tick {
+        self.end - self.release
+    }
+
+    /// Queueing delay on the machine after data arrival.
+    pub fn wait(&self) -> Tick {
+        self.start - self.available
+    }
+}
+
+/// A finished schedule over a job set.
+#[derive(Debug, Clone, Default)]
+pub struct ScheduleTrace {
+    pub entries: Vec<TraceEntry>,
+}
+
+impl ScheduleTrace {
+    /// Completion time of the last job (`E_last`, Table VII column 2).
+    pub fn last_completion(&self) -> Tick {
+        self.entries.iter().map(|e| e.end).max().unwrap_or(0)
+    }
+
+    /// Unweighted whole response time `Σ (E_i − R_i)` — the number the
+    /// paper's Table VII reports (DESIGN.md §5).
+    pub fn unweighted_sum(&self) -> Tick {
+        self.entries.iter().map(|e| e.response()).sum()
+    }
+
+    /// Priority-weighted whole response time `Σ w_i (E_i − R_i)` —
+    /// the optimizer's objective (eq. 5).
+    pub fn weighted_sum(&self, weights: &[u32]) -> Tick {
+        self.entries
+            .iter()
+            .map(|e| weights[e.job] as Tick * e.response())
+            .sum()
+    }
+
+    /// Entries sorted by job index.
+    pub fn by_job(&self) -> Vec<TraceEntry> {
+        let mut v = self.entries.clone();
+        v.sort_by_key(|e| e.job);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::MachineId;
+
+    fn entry(job: usize, release: Tick, start: Tick, end: Tick) -> TraceEntry {
+        TraceEntry {
+            job,
+            machine: MachineId::Cloud,
+            release,
+            available: release,
+            start,
+            end,
+        }
+    }
+
+    #[test]
+    fn sums() {
+        let t = ScheduleTrace {
+            entries: vec![entry(0, 1, 2, 5), entry(1, 2, 5, 6)],
+        };
+        assert_eq!(t.unweighted_sum(), 4 + 4);
+        assert_eq!(t.weighted_sum(&[2, 1]), 8 + 4);
+        assert_eq!(t.last_completion(), 6);
+    }
+
+    #[test]
+    fn empty_trace() {
+        let t = ScheduleTrace::default();
+        assert_eq!(t.unweighted_sum(), 0);
+        assert_eq!(t.last_completion(), 0);
+    }
+}

@@ -1,0 +1,77 @@
+//! The paper's model-complexity formulas (§III-C), mirrored from
+//! `python/compile/flops.py` and cross-checked by tests on both sides.
+
+/// Convolution FLOPs: `2·H·W·(C_in·K² + 1)·C_out` (paper, citing [25]).
+pub fn conv_flops(h: u64, w: u64, c_in: u64, k: u64, c_out: u64) -> u64 {
+    2 * h * w * (c_in * k * k + 1) * c_out
+}
+
+/// Fully-connected FLOPs: `(2I − 1)·O` (paper, citing [25]).
+pub fn fc_flops(i: u64, o: u64) -> u64 {
+    (2 * i - 1) * o
+}
+
+/// LSTM parameter count: `4·((I + H)·H + H)`.
+pub fn lstm_param_count(input_dim: u64, hidden: u64) -> u64 {
+    4 * ((input_dim + hidden) * hidden + hidden)
+}
+
+/// The paper's per-model "FLOPs" figure = total parameter count
+/// (LSTM + dense head).
+pub fn model_paper_flops(input_dim: usize, hidden: usize, output_dim: usize) -> u64 {
+    let (i, h, o) = (input_dim as u64, hidden as u64, output_dim as u64);
+    lstm_param_count(i, h) + h * o + o
+}
+
+/// Actual multiply-add FLOPs of one inference (2 per MAC) over a
+/// `seq_len`-step window — used for §Perf roofline estimates, *not* by
+/// Algorithm 1 (which uses the paper's parameter-count convention).
+pub fn true_mac_flops(
+    input_dim: usize,
+    hidden: usize,
+    output_dim: usize,
+    seq_len: usize,
+    batch: usize,
+) -> u64 {
+    let (i, h, o) = (input_dim as u64, hidden as u64, output_dim as u64);
+    let per_step = 2 * (i + h) * 4 * h + 4 * 4 * h + 10 * h;
+    let head = 2 * h * o + o;
+    batch as u64 * (seq_len as u64 * per_step + head)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fc_formula() {
+        assert_eq!(fc_flops(10, 5), 19 * 5);
+        assert_eq!(fc_flops(1, 1), 1);
+    }
+
+    #[test]
+    fn conv_formula() {
+        assert_eq!(conv_flops(4, 4, 3, 3, 8), 2 * 16 * 28 * 8);
+    }
+
+    #[test]
+    fn paper_counts_exact() {
+        assert_eq!(model_paper_flops(76, 128, 1), 105_089);
+        assert_eq!(model_paper_flops(101, 16, 1), 7_569);
+        assert_eq!(model_paper_flops(76, 256, 25), 347_417);
+    }
+
+    #[test]
+    fn true_macs_scale_linearly_with_batch() {
+        let a = true_mac_flops(76, 128, 1, 48, 1);
+        let b = true_mac_flops(76, 128, 1, 48, 8);
+        assert_eq!(b, 8 * a);
+    }
+
+    #[test]
+    fn true_macs_dwarf_param_proxy() {
+        for (i, h, o) in [(76, 128, 1), (101, 16, 1), (76, 256, 25)] {
+            assert!(true_mac_flops(i, h, o, 48, 1) > 20 * model_paper_flops(i, h, o));
+        }
+    }
+}

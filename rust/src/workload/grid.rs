@@ -1,0 +1,79 @@
+//! The Table IV workload grid: 3 applications × 6 inference data sizes.
+
+use super::{Application, Workload};
+
+/// The paper's six inference data sizes (record units).
+pub const SIZE_UNITS: [u32; 6] = [64, 128, 256, 512, 1024, 2048];
+
+/// All 18 workloads of Table IV, in row order (WL1-1 … WL3-6).
+pub fn workload_grid() -> Vec<Workload> {
+    let mut v = Vec::with_capacity(18);
+    for app in Application::ALL {
+        for &u in &SIZE_UNITS {
+            v.push(Workload::new(app, u));
+        }
+    }
+    v
+}
+
+/// One row of Table IV.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TableIvRow {
+    pub label: String,
+    pub title: &'static str,
+    pub size_units: u32,
+    pub data_kb: f64,
+    pub model_flops: u64,
+}
+
+/// Regenerate Table IV (workload characteristics).
+pub fn table_iv() -> Vec<TableIvRow> {
+    workload_grid()
+        .into_iter()
+        .map(|w| TableIvRow {
+            label: w.label(),
+            title: w.app.title(),
+            size_units: w.size_units,
+            data_kb: w.data_kb(),
+            model_flops: w.paper_flops(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_has_18_rows() {
+        let g = workload_grid();
+        assert_eq!(g.len(), 18);
+        assert_eq!(g[0].label(), "WL1-1");
+        assert_eq!(g[17].label(), "WL3-6");
+    }
+
+    #[test]
+    fn table_iv_matches_paper() {
+        let t = table_iv();
+        // spot-check against the published table
+        assert_eq!(t[0].size_units, 64);
+        assert_eq!(t[0].model_flops, 105_089);
+        assert_eq!(t[6].model_flops, 7_569); // WL2-1
+        assert_eq!(t[12].model_flops, 347_417); // WL3-1
+        assert_eq!(t[5].size_units, 2048);
+        // data-size footnote spot checks
+        assert_eq!(t[5].data_kb, 21_500.0); // WL1-6
+        assert_eq!(t[11].data_kb, 15_900.0); // WL2-6
+        assert_eq!(t[17].data_kb, 21_600.0); // WL3-6
+    }
+
+    #[test]
+    fn sizes_monotone_within_family() {
+        let t = table_iv();
+        for fam in 0..3 {
+            for i in 1..6 {
+                assert!(t[fam * 6 + i].data_kb > t[fam * 6 + i - 1].data_kb);
+            }
+        }
+    }
+}

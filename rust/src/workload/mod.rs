@@ -1,0 +1,244 @@
+//! Workload substrate: the three ICU AI applications, the paper's model
+//! complexity formulas, and the Table IV workload grid.
+
+mod flops;
+mod grid;
+
+pub use flops::{conv_flops, fc_flops, lstm_param_count, model_paper_flops,
+                true_mac_flops};
+pub use grid::{table_iv, workload_grid, SIZE_UNITS};
+
+
+/// The three Edge AIBench ICU applications the paper evaluates (§VII-B).
+#[derive(
+    Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord,
+)]
+pub enum Application {
+    /// WL1 — Short-of-breath alerts: LSTM(76→128) + dense(128→1), w = 2.
+    Breath,
+    /// WL2 — Life-death prediction: LSTM(101→16) + dense(16→1), w = 2.
+    Mortality,
+    /// WL3 — Patient phenotype classification: LSTM(76→256) + dense(256→25),
+    /// 25 independent binary tasks, w = 1.
+    Phenotype,
+}
+
+impl Application {
+    /// All applications, WL1..WL3 order.
+    pub const ALL: [Application; 3] =
+        [Application::Breath, Application::Mortality, Application::Phenotype];
+
+    /// Manifest / artifact key (matches python/compile/model.py APPS).
+    pub fn key(self) -> &'static str {
+        match self {
+            Application::Breath => "breath",
+            Application::Mortality => "mortality",
+            Application::Phenotype => "phenotype",
+        }
+    }
+
+    /// The paper's workload family number (WL1/WL2/WL3, Table IV).
+    pub fn family(self) -> usize {
+        match self {
+            Application::Breath => 1,
+            Application::Mortality => 2,
+            Application::Phenotype => 3,
+        }
+    }
+
+    /// Paper title.
+    pub fn title(self) -> &'static str {
+        match self {
+            Application::Breath => "Short-of-breath alerts",
+            Application::Mortality => "Life-death prediction",
+            Application::Phenotype => "Patient phenotype classification",
+        }
+    }
+
+    /// Input feature dimensionality (DESIGN.md §4 reverse engineering).
+    pub fn input_dim(self) -> usize {
+        match self {
+            Application::Breath => 76,
+            Application::Mortality => 101,
+            Application::Phenotype => 76,
+        }
+    }
+
+    /// LSTM hidden width.
+    pub fn hidden(self) -> usize {
+        match self {
+            Application::Breath => 128,
+            Application::Mortality => 16,
+            Application::Phenotype => 256,
+        }
+    }
+
+    /// Classification head width.
+    pub fn output_dim(self) -> usize {
+        match self {
+            Application::Breath => 1,
+            Application::Mortality => 1,
+            Application::Phenotype => 25,
+        }
+    }
+
+    /// Time-series window length (MIMIC-III benchmark standard).
+    pub fn seq_len(self) -> usize {
+        48
+    }
+
+    /// The paper's priority weight `w` (§VII-B): emergency alerts are 2,
+    /// phenotype classification is 1.
+    pub fn priority(self) -> u32 {
+        match self {
+            Application::Breath | Application::Mortality => 2,
+            Application::Phenotype => 1,
+        }
+    }
+
+    /// The paper's "Model FLOPs" figure (Table IV) — the parameter count.
+    pub fn paper_flops(self) -> u64 {
+        model_paper_flops(self.input_dim(), self.hidden(), self.output_dim())
+    }
+
+    /// Dataset size in KB of one 64-record unit (Table IV footnote: the
+    /// real sizes of the 18 workload datasets; this is the first size of
+    /// each family).
+    pub fn unit_kb(self) -> f64 {
+        match self {
+            Application::Breath => 700.0,
+            Application::Mortality => 479.0,
+            Application::Phenotype => 836.0,
+        }
+    }
+
+    /// Real dataset size in KB at a given size-unit count (Table IV
+    /// footnote).  Sizes between the published grid points interpolate
+    /// linearly on the unit count.
+    pub fn data_kb(self, size_units: u32) -> f64 {
+        // The published per-family sizes at units 64,128,...,2048:
+        let table: [f64; 6] = match self {
+            Application::Breath => {
+                [700.0, 1300.0, 2300.0, 5000.0, 10700.0, 21500.0]
+            }
+            Application::Mortality => {
+                [479.0, 950.0, 1900.0, 3900.0, 7800.0, 15900.0]
+            }
+            Application::Phenotype => {
+                [836.0, 1700.0, 2900.0, 5300.0, 10800.0, 21600.0]
+            }
+        };
+        for (i, &u) in SIZE_UNITS.iter().enumerate() {
+            if size_units == u {
+                return table[i];
+            }
+        }
+        // off-grid: proportional to the unit size
+        self.unit_kb() * size_units as f64 / 64.0
+    }
+}
+
+impl std::fmt::Display for Application {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.title())
+    }
+}
+
+impl std::str::FromStr for Application {
+    type Err = crate::Error;
+
+    fn from_str(s: &str) -> crate::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "breath" | "wl1" | "short-of-breath" => Ok(Application::Breath),
+            "mortality" | "wl2" | "life-death" => Ok(Application::Mortality),
+            "phenotype" | "wl3" => Ok(Application::Phenotype),
+            other => Err(crate::Error::Config(format!(
+                "unknown application {other:?} (expected breath|mortality|phenotype)"
+            ))),
+        }
+    }
+}
+
+/// A concrete workload: one application at one inference data size
+/// (a row of Table IV).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Workload {
+    pub app: Application,
+    /// Data size in the paper's record units (64..2048 in Table IV).
+    pub size_units: u32,
+}
+
+impl Workload {
+    pub fn new(app: Application, size_units: u32) -> Self {
+        Workload { app, size_units }
+    }
+
+    /// The paper's workload label, e.g. "WL1-3".
+    pub fn label(&self) -> String {
+        let idx = SIZE_UNITS
+            .iter()
+            .position(|&u| u == self.size_units)
+            .map(|i| (i + 1).to_string())
+            .unwrap_or_else(|| format!("({}u)", self.size_units));
+        format!("WL{}-{}", self.app.family(), idx)
+    }
+
+    /// Real payload size in KB.
+    pub fn data_kb(&self) -> f64 {
+        self.app.data_kb(self.size_units)
+    }
+
+    /// The paper's model-complexity figure.
+    pub fn paper_flops(&self) -> u64 {
+        self.app.paper_flops()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table IV "Model FLOPs" column, exactly.
+    #[test]
+    fn paper_flops_exact() {
+        assert_eq!(Application::Breath.paper_flops(), 105_089);
+        assert_eq!(Application::Mortality.paper_flops(), 7_569);
+        assert_eq!(Application::Phenotype.paper_flops(), 347_417);
+    }
+
+    #[test]
+    fn priorities() {
+        assert_eq!(Application::Breath.priority(), 2);
+        assert_eq!(Application::Mortality.priority(), 2);
+        assert_eq!(Application::Phenotype.priority(), 1);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(Workload::new(Application::Breath, 64).label(), "WL1-1");
+        assert_eq!(Workload::new(Application::Phenotype, 2048).label(), "WL3-6");
+        assert_eq!(Workload::new(Application::Mortality, 100).label(), "WL2-(100u)");
+    }
+
+    #[test]
+    fn data_sizes_from_paper_footnote() {
+        assert_eq!(Application::Breath.data_kb(64), 700.0);
+        assert_eq!(Application::Breath.data_kb(2048), 21_500.0);
+        assert_eq!(Application::Mortality.data_kb(512), 3_900.0);
+        assert_eq!(Application::Phenotype.data_kb(256), 2_900.0);
+    }
+
+    #[test]
+    fn off_grid_size_interpolates() {
+        let kb = Application::Breath.data_kb(32);
+        assert!((kb - 350.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for app in Application::ALL {
+            assert_eq!(app.key().parse::<Application>().unwrap(), app);
+        }
+        assert!("ecg".parse::<Application>().is_err());
+    }
+}

@@ -1,0 +1,145 @@
+//! Integration: config loading from disk + serialization substrate
+//! round-trips under randomized documents.
+
+use edgeward::config::Config;
+use edgeward::data::Rng;
+use edgeward::serialize::{json, toml, Value};
+
+#[test]
+fn load_config_from_file() {
+    let dir = std::env::temp_dir().join(format!(
+        "edgeward-test-{}-{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.toml");
+    std::fs::write(
+        &path,
+        "seed = 77\n\n[serve]\npatients = 2\n\n[scheduler]\nmax_iters = 10\n",
+    )
+    .unwrap();
+    let cfg = Config::load(&path).unwrap();
+    assert_eq!(cfg.seed, 77);
+    assert_eq!(cfg.serve.patients, 2);
+    assert_eq!(cfg.scheduler.max_iters, 10);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn missing_config_file_errors_with_path() {
+    let err = Config::load("/nonexistent/edgeward.toml").unwrap_err();
+    assert!(err.to_string().contains("edgeward.toml"), "{err}");
+}
+
+/// Random JSON documents round-trip parse(to_string(v)) == v.
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    fn random_value(rng: &mut Rng, depth: usize) -> Value {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.bernoulli(0.5)),
+            2 => {
+                // integers round-trip exactly; keep magnitude < 2^53
+                Value::Number((rng.below(1 << 50) as i64
+                    - (1i64 << 49)) as f64)
+            }
+            3 => {
+                let len = rng.below(12) as usize;
+                let s: String = (0..len)
+                    .map(|_| {
+                        // mix of ascii, escapes, and multibyte
+                        match rng.below(6) {
+                            0 => '"',
+                            1 => '\\',
+                            2 => '\n',
+                            3 => 'é',
+                            4 => '😀',
+                            _ => (b'a' + rng.below(26) as u8) as char,
+                        }
+                    })
+                    .collect();
+                Value::String(s)
+            }
+            4 => {
+                let n = rng.below(4) as usize;
+                Value::Array(
+                    (0..n).map(|_| random_value(rng, depth - 1)).collect(),
+                )
+            }
+            _ => {
+                let n = rng.below(4) as usize;
+                Value::Object(
+                    (0..n)
+                        .map(|i| {
+                            (
+                                format!("k{i}"),
+                                random_value(rng, depth - 1),
+                            )
+                        })
+                        .collect(),
+                )
+            }
+        }
+    }
+
+    for seed in 0..300 {
+        let mut rng = Rng::new(seed);
+        let v = random_value(&mut rng, 3);
+        let text = v.to_string();
+        let back = json::parse(&text)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(back, v, "seed {seed}: {text}");
+        // pretty printing parses to the same value
+        let back2 = json::parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(back2, v, "seed {seed} (pretty)");
+    }
+}
+
+/// The default config's TOML emission parses back identically, and random
+/// scalar mutations keep the document parseable.
+#[test]
+fn prop_toml_emit_parse_stability() {
+    let cfg = Config::default();
+    let text = cfg.to_toml();
+    for seed in 0..50 {
+        let mut rng = Rng::new(seed);
+        // mutate one numeric literal in the text
+        let mut mutated = String::new();
+        let mut replaced = false;
+        for line in text.lines() {
+            if !replaced
+                && rng.bernoulli(0.2)
+                && line.contains('=')
+                && !line.contains('"')
+                && !line.contains('[')
+            {
+                let (k, _) = line.split_once('=').unwrap();
+                mutated.push_str(&format!("{k}= {}\n", rng.below(1000)));
+                replaced = true;
+            } else {
+                mutated.push_str(line);
+                mutated.push('\n');
+            }
+        }
+        // must still parse as TOML (config validation may reject values,
+        // but the *parser* must not crash or mis-parse)
+        toml::parse(&mutated)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}\n{mutated}"));
+    }
+}
+
+#[test]
+fn manifest_json_parses_via_substrate() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let text = std::fs::read_to_string("artifacts/manifest.json").unwrap();
+    let m = edgeward::runtime::Manifest::from_json(&text).unwrap();
+    m.validate().unwrap();
+    assert_eq!(m.entries.len() % 3, 0, "three apps × batch variants");
+}

@@ -1,0 +1,117 @@
+//! Integration: the PJRT runtime against the real AOT artifacts.
+//!
+//! Requires `make artifacts` (skips with a message otherwise — CI runs
+//! artifacts first via the Makefile).
+
+use edgeward::data::EpisodeGenerator;
+use edgeward::runtime::InferenceRuntime;
+use edgeward::workload::Application;
+
+fn runtime() -> Option<InferenceRuntime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(InferenceRuntime::open("artifacts").expect("open artifacts"))
+}
+
+#[test]
+fn manifest_covers_all_apps() {
+    let Some(rt) = runtime() else { return };
+    for app in Application::ALL {
+        let sizes = rt.batch_sizes(app);
+        assert!(!sizes.is_empty(), "{app} missing from manifest");
+        assert!(sizes.contains(&1), "{app} needs a batch-1 variant");
+    }
+}
+
+#[test]
+fn infer_all_apps_batch1() {
+    let Some(rt) = runtime() else { return };
+    let mut gen = EpisodeGenerator::new(1);
+    for app in Application::ALL {
+        let ep = gen.episode(app);
+        let out = rt.infer(app, 1, &ep.features).expect("infer");
+        assert_eq!(out.probs.len(), app.output_dim());
+        for &p in &out.probs {
+            assert!(p.is_finite() && (0.0..=1.0).contains(&p), "{app}: {p}");
+        }
+    }
+}
+
+#[test]
+fn inference_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let mut gen = EpisodeGenerator::new(2);
+    let app = Application::Breath;
+    let ep = gen.episode(app);
+    let a = rt.infer(app, 1, &ep.features).unwrap();
+    let b = rt.infer(app, 1, &ep.features).unwrap();
+    assert_eq!(a.probs, b.probs);
+}
+
+#[test]
+fn batched_rows_match_singles() {
+    // batching must not change per-row numerics (same weights, same rows)
+    let Some(rt) = runtime() else { return };
+    let app = Application::Mortality;
+    let mut gen = EpisodeGenerator::new(3);
+    let rows = 8;
+    let input = gen.batch(app, rows);
+    let batched = rt.infer(app, rows, &input).unwrap();
+
+    let row_len = app.seq_len() * app.input_dim();
+    for r in 0..rows {
+        let single = rt
+            .infer(app, 1, &input[r * row_len..(r + 1) * row_len])
+            .unwrap();
+        for (x, y) in single.probs.iter().zip(batched.row(r)) {
+            assert!(
+                (x - y).abs() < 1e-5,
+                "row {r}: batched {y} vs single {x}"
+            );
+        }
+    }
+}
+
+#[test]
+fn infer_rows_splits_oversized_batches() {
+    let Some(rt) = runtime() else { return };
+    let app = Application::Mortality;
+    let mut gen = EpisodeGenerator::new(4);
+    let rows = 50; // > max compiled batch (32)
+    let input = gen.batch(app, rows);
+    let out = rt.infer_rows(app, rows, &input).unwrap();
+    assert_eq!(out.probs.len(), rows * app.output_dim());
+    // spot-check a row against a single call
+    let row_len = app.seq_len() * app.input_dim();
+    let idx = 40;
+    let single = rt
+        .infer(app, 1, &input[idx * row_len..(idx + 1) * row_len])
+        .unwrap();
+    assert!((single.probs[0] - out.row(idx)[0]).abs() < 1e-5);
+}
+
+#[test]
+fn shape_mismatch_rejected() {
+    let Some(rt) = runtime() else { return };
+    let err = rt.infer(Application::Breath, 1, &[0.0; 7]).unwrap_err();
+    assert!(err.to_string().contains("shape"), "{err}");
+}
+
+#[test]
+fn padding_rows_are_ignored() {
+    // zero-padding the tail must not affect real rows' outputs
+    let Some(rt) = runtime() else { return };
+    let app = Application::Phenotype;
+    let mut gen = EpisodeGenerator::new(5);
+    let row = gen.episode(app).features;
+    let row_len = app.seq_len() * app.input_dim();
+    let mut padded = row.clone();
+    padded.resize(8 * row_len, 0.0);
+    let out8 = rt.infer(app, 8, &padded).unwrap();
+    let out1 = rt.infer(app, 1, &row).unwrap();
+    for (a, b) in out1.probs.iter().zip(out8.row(0)) {
+        assert!((a - b).abs() < 1e-5);
+    }
+}

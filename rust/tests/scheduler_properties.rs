@@ -1,0 +1,243 @@
+//! Property-based tests on scheduler invariants.
+//!
+//! The offline build has no proptest crate, so random-input property
+//! testing is driven by the in-tree deterministic RNG: 200 random job sets
+//! per property, with the failing seed printed for reproduction
+//! (substitution ledger, DESIGN.md §3).
+
+use edgeward::data::Rng;
+use edgeward::scheduler::{
+    evaluate_strategy, greedy_assignment, lower_bound, paper_jobs,
+    schedule_jobs, simulate, Job, MachineId, Schedule, SchedulerParams,
+    Strategy,
+};
+
+const CASES: u64 = 200;
+
+/// Random job set in the paper's regime.
+fn random_jobs(rng: &mut Rng) -> Vec<Job> {
+    let n = 1 + rng.below(15) as usize;
+    let mut release = 0;
+    (0..n)
+        .map(|_| {
+            release += rng.below(6);
+            Job {
+                release,
+                weight: 1 + rng.below(3) as u32,
+                proc_cloud: 1 + rng.below(10),
+                trans_cloud: 1 + rng.below(70),
+                proc_edge: 1 + rng.below(15),
+                trans_edge: 1 + rng.below(15),
+                proc_device: 1 + rng.below(80),
+            }
+        })
+        .collect()
+}
+
+fn check_schedule_invariants(jobs: &[Job], s: &Schedule, ctx: &str) {
+    assert_eq!(s.assignment.len(), jobs.len(), "{ctx}: coverage");
+    assert_eq!(s.trace.entries.len(), jobs.len(), "{ctx}: trace");
+
+    // per-job invariants
+    for e in &s.trace.entries {
+        let j = &jobs[e.job];
+        let m = s.assignment[e.job];
+        assert_eq!(e.machine, m, "{ctx}: machine mismatch");
+        assert_eq!(e.release, j.release, "{ctx}");
+        assert_eq!(e.available, j.release + j.transmission(m), "{ctx}");
+        assert!(e.start >= e.available, "{ctx}: start before data arrives");
+        assert_eq!(e.end, e.start + j.processing(m), "{ctx}: duration");
+        if m == MachineId::Device {
+            assert_eq!(e.start, e.available, "{ctx}: device queued");
+        }
+    }
+
+    // exclusive machines never overlap (C1)
+    for m in [MachineId::Cloud, MachineId::Edge] {
+        let mut slots: Vec<(u64, u64)> = s
+            .trace
+            .entries
+            .iter()
+            .filter(|e| e.machine == m)
+            .map(|e| (e.start, e.end))
+            .collect();
+        slots.sort_unstable();
+        for w in slots.windows(2) {
+            assert!(w[0].1 <= w[1].0, "{ctx}: overlap on {m:?}: {w:?}");
+        }
+    }
+
+    // objective consistency
+    let weights: Vec<u32> = jobs.iter().map(|j| j.weight).collect();
+    assert_eq!(s.weighted_sum, s.trace.weighted_sum(&weights), "{ctx}");
+}
+
+#[test]
+fn prop_simulate_invariants_hold_for_random_assignments() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let jobs = random_jobs(&mut rng);
+        let assignment: Vec<MachineId> = (0..jobs.len())
+            .map(|_| MachineId::ALL[rng.below(3) as usize])
+            .collect();
+        let s = simulate(&jobs, &assignment);
+        check_schedule_invariants(&jobs, &s, &format!("seed {seed}"));
+    }
+}
+
+#[test]
+fn prop_algorithm2_dominates_greedy_and_lower_bound() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0xA5A5);
+        let jobs = random_jobs(&mut rng);
+        let params = SchedulerParams::default();
+        let ours = schedule_jobs(&jobs, &params);
+        check_schedule_invariants(&jobs, &ours, &format!("seed {seed}"));
+        let greedy = simulate(&jobs, &greedy_assignment(&jobs));
+        assert!(
+            ours.weighted_sum <= greedy.weighted_sum,
+            "seed {seed}: tabu {} worse than greedy {}",
+            ours.weighted_sum,
+            greedy.weighted_sum
+        );
+        assert!(
+            ours.weighted_sum >= lower_bound(&jobs),
+            "seed {seed}: beat the lower bound?!"
+        );
+    }
+}
+
+#[test]
+fn prop_algorithm2_never_loses_to_fixed_strategies() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed ^ 0x5A5A);
+        let jobs = random_jobs(&mut rng);
+        let ours = schedule_jobs(&jobs, &SchedulerParams::default());
+        for strat in
+            [Strategy::AllCloud, Strategy::AllEdge, Strategy::AllDevice]
+        {
+            let base = simulate(&jobs, &strat.assignment(&jobs));
+            assert!(
+                ours.weighted_sum <= base.weighted_sum,
+                "seed {seed}: lost to {strat:?} ({} vs {})",
+                ours.weighted_sum,
+                base.weighted_sum
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_scaling_all_times_scales_objective() {
+    // doubling every duration (incl. releases) doubles the objective
+    for seed in 0..50 {
+        let mut rng = Rng::new(seed ^ 0x1111);
+        let jobs = random_jobs(&mut rng);
+        let doubled: Vec<Job> = jobs
+            .iter()
+            .map(|j| Job {
+                release: j.release * 2,
+                weight: j.weight,
+                proc_cloud: j.proc_cloud * 2,
+                trans_cloud: j.trans_cloud * 2,
+                proc_edge: j.proc_edge * 2,
+                trans_edge: j.trans_edge * 2,
+                proc_device: j.proc_device * 2,
+            })
+            .collect();
+        let assignment: Vec<MachineId> = (0..jobs.len())
+            .map(|_| MachineId::ALL[rng.below(3) as usize])
+            .collect();
+        let a = simulate(&jobs, &assignment);
+        let b = simulate(&doubled, &assignment);
+        assert_eq!(
+            b.weighted_sum,
+            a.weighted_sum * 2,
+            "seed {seed}"
+        );
+    }
+}
+
+#[test]
+fn prop_adding_a_job_never_reduces_others_response() {
+    // monotonicity of contention on a shared machine
+    for seed in 0..50 {
+        let mut rng = Rng::new(seed ^ 0x2222);
+        let mut jobs = random_jobs(&mut rng);
+        let assignment = vec![MachineId::Edge; jobs.len()];
+        let before = simulate(&jobs, &assignment);
+        jobs.push(Job {
+            release: 0,
+            weight: 1,
+            proc_cloud: 1,
+            trans_cloud: 1,
+            proc_edge: 5,
+            trans_edge: 1,
+            proc_device: 1,
+        });
+        let after = simulate(&jobs, &vec![MachineId::Edge; jobs.len()]);
+        for e_before in &before.trace.entries {
+            let e_after = after
+                .trace
+                .entries
+                .iter()
+                .find(|e| e.job == e_before.job)
+                .unwrap();
+            assert!(
+                e_after.end >= e_before.end,
+                "seed {seed}: job {} finished earlier with more load",
+                e_before.job
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_priority_weight_steers_the_optimizer() {
+    // give one job an enormous weight: Algorithm 2's objective for that
+    // job must be at least as good as with weight 1
+    let base_jobs = paper_jobs();
+    let params = SchedulerParams::default();
+    for victim in 0..base_jobs.len() {
+        let mut heavy = base_jobs.clone();
+        heavy[victim].weight = 100;
+        let s_heavy = schedule_jobs(&heavy, &params);
+        let s_base = schedule_jobs(&base_jobs, &params);
+        let resp = |s: &Schedule, j: usize| {
+            s.trace.entries.iter().find(|e| e.job == j).unwrap().response()
+        };
+        assert!(
+            resp(&s_heavy, victim) <= resp(&s_base, victim).max(
+                // allow equality when the job was already optimal
+                resp(&s_heavy, victim)
+            ),
+            "victim {victim}"
+        );
+        // the heavy job's response must be near its best possible
+        let best = MachineId::ALL
+            .iter()
+            .map(|&m| heavy[victim].execution(m))
+            .min()
+            .unwrap();
+        assert!(
+            resp(&s_heavy, victim) <= best * 3,
+            "victim {victim}: response {} vs best {best}",
+            resp(&s_heavy, victim)
+        );
+    }
+}
+
+#[test]
+fn prop_strategies_agree_on_singleton_jobs() {
+    // with one job there is no contention: ours == per-job-optimal
+    for seed in 0..50 {
+        let mut rng = Rng::new(seed ^ 0x3333);
+        let jobs = vec![random_jobs(&mut rng)[0]];
+        let ours = evaluate_strategy(&jobs, Strategy::Ours);
+        let opt = evaluate_strategy(&jobs, Strategy::PerJobOptimal);
+        assert_eq!(
+            ours.schedule.weighted_sum, opt.schedule.weighted_sum,
+            "seed {seed}"
+        );
+    }
+}

@@ -1,0 +1,190 @@
+//! Integration: the full serving coordinator against real artifacts.
+
+use edgeward::allocation::Calibration;
+use edgeward::config::Environment;
+use edgeward::coordinator::{
+    live_calibration, Coordinator, Policy, ServeConfig,
+};
+use edgeward::device::Layer;
+use edgeward::workload::Application;
+
+fn have_artifacts() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+fn fast_cfg(policy: Policy) -> ServeConfig {
+    ServeConfig {
+        patients: 3,
+        requests_per_patient: 4,
+        arrival_rate_hz: 10.0,
+        policy,
+        batch_window_ms: 2,
+        max_batch: 4,
+        size_units: 64,
+        time_scale: 0.01,
+        emulate_compute: true,
+        compute_scale: 1.0,
+        app_mix: [1.0, 1.0, 1.0],
+    }
+}
+
+#[test]
+fn serve_completes_all_requests() {
+    if !have_artifacts() {
+        return;
+    }
+    let env = Environment::paper();
+    let cfg = fast_cfg(Policy::AlgorithmOne);
+    let coord =
+        Coordinator::new(env, Calibration::paper(), cfg, "artifacts").unwrap();
+    let report = coord.run(5).unwrap();
+    assert_eq!(report.completed, 12);
+    assert_eq!(report.routed.iter().sum::<u64>(), 12);
+    assert_eq!(report.metrics.total_requests, 12);
+    assert!(report.metrics.throughput_rps > 0.0);
+}
+
+#[test]
+fn fixed_policies_route_everything_to_their_layer() {
+    if !have_artifacts() {
+        return;
+    }
+    let env = Environment::paper();
+    for (policy, idx) in [
+        (Policy::FixedCloud, 0usize),
+        (Policy::FixedEdge, 1),
+        (Policy::FixedDevice, 2),
+    ] {
+        let coord = Coordinator::new(
+            env.clone(),
+            Calibration::paper(),
+            fast_cfg(policy),
+            "artifacts",
+        )
+        .unwrap();
+        let report = coord.run(6).unwrap();
+        assert_eq!(report.routed[idx], 12, "{policy:?}");
+        for (i, &n) in report.routed.iter().enumerate() {
+            if i != idx {
+                assert_eq!(n, 0, "{policy:?} leaked to layer {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn algorithm1_routing_respects_table_v() {
+    if !have_artifacts() {
+        return;
+    }
+    // with the paper calibration, WL mix routes per Table V: breath+
+    // phenotype to edge, mortality to device, never cloud
+    let env = Environment::paper();
+    let coord = Coordinator::new(
+        env,
+        Calibration::paper(),
+        fast_cfg(Policy::AlgorithmOne),
+        "artifacts",
+    )
+    .unwrap();
+    let report = coord.run(7).unwrap();
+    assert_eq!(report.routed[0], 0, "cloud should never win Table V");
+    assert!(report.routed[1] > 0 || report.routed[2] > 0);
+}
+
+#[test]
+fn batching_happens_on_shared_layers() {
+    if !have_artifacts() {
+        return;
+    }
+    let env = Environment::paper();
+    let mut cfg = fast_cfg(Policy::FixedEdge);
+    cfg.patients = 4;
+    cfg.requests_per_patient = 6;
+    cfg.arrival_rate_hz = 200.0; // burst: everything lands in one window
+    cfg.app_mix = [1.0, 0.0, 0.0]; // one app → batchable
+    cfg.batch_window_ms = 50;
+    let coord =
+        Coordinator::new(env, Calibration::paper(), cfg, "artifacts").unwrap();
+    let report = coord.run(8).unwrap();
+    let edge = &report.metrics.per_layer["ES"];
+    assert_eq!(edge.requests, 24);
+    assert!(
+        edge.mean_batch > 1.5,
+        "expected batching under burst load, mean batch = {}",
+        edge.mean_batch
+    );
+}
+
+#[test]
+fn compute_scale_slows_processing() {
+    if !have_artifacts() {
+        return;
+    }
+    let env = Environment::paper();
+    let mut cfg = fast_cfg(Policy::FixedDevice);
+    let coord = Coordinator::new(
+        env.clone(),
+        Calibration::paper(),
+        cfg.clone(),
+        "artifacts",
+    )
+    .unwrap();
+    let base = coord.run(9).unwrap();
+    cfg.compute_scale = 50.0;
+    let coord =
+        Coordinator::new(env, Calibration::paper(), cfg, "artifacts").unwrap();
+    let scaled = coord.run(9).unwrap();
+    let p = |r: &edgeward::coordinator::ServeReport| {
+        r.metrics.per_layer["ED"].processing.mean
+    };
+    assert!(
+        p(&scaled) > p(&base) * 10.0,
+        "processing {} vs {}",
+        p(&scaled),
+        p(&base)
+    );
+}
+
+#[test]
+fn live_calibration_produces_usable_model() {
+    if !have_artifacts() {
+        return;
+    }
+    let env = Environment::paper();
+    let cfg = fast_cfg(Policy::AlgorithmOne);
+    let calib = live_calibration(&env, &cfg, "artifacts", 11).unwrap();
+    for app in Application::ALL {
+        let c = calib.for_app(app);
+        assert!(c.lambda2 > 0.0, "{app}");
+        assert!(c.lambda1.cloud >= 0.0 && c.lambda1.edge >= 0.0);
+        assert_eq!(*c.lambda1.get(Layer::Device), 0.0);
+    }
+}
+
+#[test]
+fn serve_deterministic_routing() {
+    if !have_artifacts() {
+        return;
+    }
+    // same seed → same routing decisions (latencies vary, routing doesn't)
+    let env = Environment::paper();
+    let mk = || {
+        Coordinator::new(
+            env.clone(),
+            Calibration::paper(),
+            fast_cfg(Policy::RoundRobin),
+            "artifacts",
+        )
+        .unwrap()
+        .run(123)
+        .unwrap()
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.routed, b.routed);
+}
