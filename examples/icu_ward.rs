@@ -23,6 +23,7 @@ use edgeward::allocation::Calibration;
 use edgeward::config::Environment;
 use edgeward::coordinator::{live_calibration, Coordinator, Policy, ServeConfig};
 use edgeward::report::TextTable;
+use edgeward::topology::Topology;
 
 fn run_scenario(
     name: &str,
@@ -79,6 +80,17 @@ fn run_scenario(
             format!("{p99:.1}"),
             format!("{:.1}", report.metrics.throughput_rps),
         ]);
+        if !report.topology.is_paper() {
+            for lane in &report.lanes {
+                eprintln!(
+                    "  [{name}] {} lane {}: n={} util={:.1}%",
+                    policy.label(),
+                    lane.machine.label(),
+                    lane.requests,
+                    lane.utilization * 100.0,
+                );
+            }
+        }
         eprintln!("  [{name}] done: {}", policy.label());
     }
     println!("{}", table.render());
@@ -101,6 +113,7 @@ fn main() -> anyhow::Result<()> {
         compute_scale: 1.0,
         app_mix: [0.4, 0.4, 0.2],
         policy: Policy::AlgorithmOne,
+        topology: Topology::paper(),
     };
 
     println!(
@@ -115,6 +128,13 @@ fn main() -> anyhow::Result<()> {
     let mut paper_era = base.clone();
     paper_era.compute_scale = 30.0;
     run_scenario("paper-era", &env, &paper_era)?;
+
+    // Scenario 3: paper-era balance with a second in-room edge server —
+    // the replica-aware serving path turns the multi-edge ablation into
+    // a servable scenario.
+    let mut two_edge = paper_era.clone();
+    two_edge.topology = Topology::new(1, 2);
+    run_scenario("paper-era-2-edges", &env, &two_edge)?;
 
     // Reference: what the paper's own published calibration would decide
     // (Table V chosen layers), for the narration in EXPERIMENTS.md.

@@ -9,7 +9,7 @@ use edgeward::device::Layer;
 use edgeward::report::{csv_series, render_gantt, TextTable};
 use edgeward::scheduler::{
     evaluate_strategy, lower_bound, paper_jobs, schedule_jobs,
-    SchedulerParams, Strategy,
+    SchedulerParams, Strategy, Topology,
 };
 use edgeward::workload::{table_iv, Application, Workload, SIZE_UNITS};
 
@@ -86,15 +86,17 @@ fn main() {
     // Table VI + Figures 7/8 + Table VII
     let jobs = paper_jobs();
     println!("Table VI lower bound (eq. 6): {}", lower_bound(&jobs));
-    let ours = schedule_jobs(&jobs, &SchedulerParams::default());
+    let ours =
+        schedule_jobs(&jobs, &Topology::paper(), &SchedulerParams::default());
     println!("\nFigure 7:\n{}", render_gantt(&ours, 90));
-    let opt = evaluate_strategy(&jobs, Strategy::PerJobOptimal);
+    let opt =
+        evaluate_strategy(&jobs, &Topology::paper(), Strategy::PerJobOptimal);
     println!("Figure 8:\n{}", render_gantt(&opt.schedule, 90));
 
     let mut t7 = TextTable::new(&["Strategy", "Whole", "Last", "Weighted"])
         .with_title("Table VII");
     for s in Strategy::ALL {
-        let r = evaluate_strategy(&jobs, s);
+        let r = evaluate_strategy(&jobs, &Topology::paper(), s);
         t7.row(vec![
             s.label().into(),
             r.schedule.unweighted_sum().to_string(),

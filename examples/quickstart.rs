@@ -37,13 +37,23 @@ fn main() -> anyhow::Result<()> {
 
     // --- 3. Algorithm 2: schedule the paper's 10-job trace -------------
     let jobs = paper_jobs();
-    let schedule = schedule_jobs(&jobs, &SchedulerParams::default());
+    let schedule =
+        schedule_jobs(&jobs, &Topology::paper(), &SchedulerParams::default());
     let (c, e, d) = schedule.placement_counts();
     println!(
         "algorithm 2: whole response {} / last completion {} \
          (cloud {c}, edge {e}, device {d})",
         schedule.unweighted_sum(),
         schedule.last_completion(),
+    );
+
+    // --- 4. the same scheduler on a 2-edge ward -------------------------
+    let wider =
+        schedule_jobs(&jobs, &Topology::new(1, 2), &SchedulerParams::default());
+    println!(
+        "with a second edge server: whole response {} (was {})",
+        wider.unweighted_sum(),
+        schedule.unweighted_sum(),
     );
     Ok(())
 }

@@ -10,7 +10,7 @@ use edgeward::data::Rng;
 use edgeward::report::{render_gantt, TextTable};
 use edgeward::scheduler::{
     evaluate_strategy, jobs_from_workloads, paper_jobs, schedule_jobs, Job,
-    SchedulerParams, Strategy,
+    SchedulerParams, Strategy, Topology,
 };
 use edgeward::workload::{Application, Workload, SIZE_UNITS};
 
@@ -22,7 +22,7 @@ fn main() {
     ])
     .with_title("Table VII — the paper's 10-job ICU trace");
     for s in Strategy::ALL {
-        let r = evaluate_strategy(&jobs, s);
+        let r = evaluate_strategy(&jobs, &Topology::paper(), s);
         t.row(vec![
             s.label().into(),
             r.schedule.unweighted_sum().to_string(),
@@ -33,10 +33,12 @@ fn main() {
     println!("{}", t.render());
 
     // --- Figures 7 and 8 ------------------------------------------------
-    let ours = schedule_jobs(&jobs, &SchedulerParams::default());
+    let ours =
+        schedule_jobs(&jobs, &Topology::paper(), &SchedulerParams::default());
     println!("Figure 7 — Algorithm 2 schedule:");
     println!("{}", render_gantt(&ours, 90));
-    let opt = evaluate_strategy(&jobs, Strategy::PerJobOptimal);
+    let opt =
+        evaluate_strategy(&jobs, &Topology::paper(), Strategy::PerJobOptimal);
     println!("Figure 8 — per-job-optimal schedule (note the queueing):");
     println!("{}", render_gantt(&opt.schedule, 90));
 
@@ -52,7 +54,11 @@ fn main() {
         let jobs = synthetic_jobs(&mut rng, n, &env, &calib);
         let vals: Vec<u64> = Strategy::ALL
             .iter()
-            .map(|&s| evaluate_strategy(&jobs, s).schedule.unweighted_sum())
+            .map(|&s| {
+                evaluate_strategy(&jobs, &Topology::paper(), s)
+                    .schedule
+                    .unweighted_sum()
+            })
             .collect();
         let best_baseline = vals[1..].iter().min().copied().unwrap();
         sweep.row(vec![

@@ -15,8 +15,8 @@ use edgeward::benchkit::Bench;
 use edgeward::config::Environment;
 use edgeward::data::Rng;
 use edgeward::scheduler::{
-    paper_jobs, schedule_exact, schedule_jobs, schedule_online,
-    schedule_pool, Job, MachinePool, SchedulerParams,
+    paper_jobs, schedule_exact, schedule_jobs, schedule_online, Job,
+    SchedulerParams, Topology,
 };
 use edgeward::workload::workload_grid;
 
@@ -40,9 +40,10 @@ fn main() {
 
     // ---- 2. optimality gap -------------------------------------------
     let jobs = paper_jobs();
-    let exact = schedule_exact(&jobs);
-    let ours = schedule_jobs(&jobs, &SchedulerParams::default());
-    let online = schedule_online(&jobs);
+    let paper = Topology::paper();
+    let exact = schedule_exact(&jobs, &paper);
+    let ours = schedule_jobs(&jobs, &paper, &SchedulerParams::default());
+    let online = schedule_online(&jobs, &paper);
     println!(
         "paper trace weighted sums: exact {} | algorithm2 {} ({:+.1}%) | online {} ({:+.1}%)",
         exact.weighted_sum,
@@ -71,8 +72,9 @@ fn main() {
                 }
             })
             .collect();
-        let e = schedule_exact(&jobs).weighted_sum.max(1);
-        let h = schedule_jobs(&jobs, &SchedulerParams::default()).weighted_sum;
+        let e = schedule_exact(&jobs, &paper).weighted_sum.max(1);
+        let h = schedule_jobs(&jobs, &paper, &SchedulerParams::default())
+            .weighted_sum;
         gaps.push(h as f64 / e as f64 - 1.0);
     }
     gaps.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -85,8 +87,8 @@ fn main() {
     // ---- 3. multi-edge scaling ----------------------------------------
     println!("multi-edge scaling (paper trace, weighted sum):");
     for edges in 1..=4 {
-        let pool = MachinePool { clouds: 1, edges };
-        let s = schedule_pool(&jobs, &pool, &SchedulerParams::default());
+        let topo = Topology::new(1, edges);
+        let s = schedule_jobs(&jobs, &topo, &SchedulerParams::default());
         println!(
             "  edges={edges}: weighted {} whole {} last {}",
             s.weighted_sum,
@@ -104,7 +106,7 @@ fn main() {
             tenure,
             patience: 30,
         };
-        let s = schedule_jobs(&jobs, &params);
+        let s = schedule_jobs(&jobs, &paper, &params);
         println!(
             "  max_iters={iters:4} tenure={tenure}: weighted {}",
             s.weighted_sum
@@ -115,16 +117,16 @@ fn main() {
     // ---- timing ----------------------------------------------------------
     let mut b = Bench::new("ablations");
     b.bench("exact_10_jobs", || {
-        std::hint::black_box(schedule_exact(&jobs));
+        std::hint::black_box(schedule_exact(&jobs, &paper));
     });
     b.bench("online_10_jobs", || {
-        std::hint::black_box(schedule_online(&jobs));
+        std::hint::black_box(schedule_online(&jobs, &paper));
     });
-    let pool = MachinePool { clouds: 1, edges: 3 };
+    let wide = Topology::new(1, 3);
     b.bench("pool_scheduler_3_edges", || {
-        std::hint::black_box(schedule_pool(
+        std::hint::black_box(schedule_jobs(
             &jobs,
-            &pool,
+            &wide,
             &SchedulerParams::default(),
         ));
     });

@@ -1,5 +1,7 @@
 //! Bench: Table VII / Figures 7–8 — Algorithm 2 and the four baselines on
-//! the paper's 10-job trace, plus scaling on synthetic traces.
+//! the paper's 10-job trace, plus scaling on synthetic traces and the
+//! replica-scaling curve (edges = 1..=4) through the unified
+//! topology-parameterized path.
 
 use edgeward::allocation::Calibration;
 use edgeward::benchkit::Bench;
@@ -7,7 +9,7 @@ use edgeward::config::Environment;
 use edgeward::data::Rng;
 use edgeward::scheduler::{
     evaluate_strategy, jobs_from_workloads, paper_jobs, schedule_jobs,
-    simulate, Job, SchedulerParams, Strategy,
+    simulate, Job, MachineRef, SchedulerParams, Strategy, Topology,
 };
 use edgeward::workload::{Application, Workload, SIZE_UNITS};
 
@@ -32,11 +34,13 @@ fn synthetic(n: usize) -> Vec<Job> {
 }
 
 fn main() {
+    let paper = Topology::paper();
+
     // regenerate Table VII (correctness narration)
     let jobs = paper_jobs();
     println!("Table VII (regenerated):");
     for s in Strategy::ALL {
-        let r = evaluate_strategy(&jobs, s);
+        let r = evaluate_strategy(&jobs, &paper, s);
         println!(
             "  {:44} whole={:4} last={:3} weighted={:4}",
             s.label(),
@@ -47,31 +51,66 @@ fn main() {
     }
     println!();
 
-    let mut b = Bench::new("sched_multi");
     let params = SchedulerParams::default();
 
+    // replica scaling through the unified path: where does one more
+    // in-room edge server stop paying for itself?
+    println!("replica scaling (paper trace, unified scheduler):");
+    for edges in 1..=4usize {
+        let topo = Topology::new(1, edges);
+        let s = schedule_jobs(&jobs, &topo, &params);
+        let util: Vec<String> = s
+            .replica_utilization()
+            .iter()
+            .map(|(m, u)| format!("{}={:.0}%", m.label(), u * 100.0))
+            .collect();
+        println!(
+            "  {}: weighted={:4} whole={:4} last={:3}  [{}]",
+            topo.label(),
+            s.weighted_sum,
+            s.unweighted_sum(),
+            s.last_completion(),
+            util.join(" ")
+        );
+    }
+    println!();
+
+    let mut b = Bench::new("sched_multi");
+
     // one full simulate() — the tabu search's inner-loop cost
-    let all_edge: Vec<_> =
-        jobs.iter().map(|_| edgeward::scheduler::MachineId::Edge).collect();
+    let all_edge: Vec<MachineRef> =
+        jobs.iter().map(|_| MachineRef::edge(0)).collect();
     b.bench("simulate_10_jobs", || {
-        std::hint::black_box(simulate(&jobs, &all_edge));
+        std::hint::black_box(simulate(&jobs, &paper, &all_edge));
     });
 
     // Algorithm 2 end-to-end on the paper trace
     b.bench("algorithm2_paper_trace", || {
-        std::hint::black_box(schedule_jobs(&jobs, &params));
+        std::hint::black_box(schedule_jobs(&jobs, &paper, &params));
     });
 
     // baselines
     b.bench("per_job_optimal", || {
-        std::hint::black_box(evaluate_strategy(&jobs, Strategy::PerJobOptimal));
+        std::hint::black_box(evaluate_strategy(
+            &jobs,
+            &paper,
+            Strategy::PerJobOptimal,
+        ));
     });
+
+    // replica scaling cost: the tabu neighborhood grows with the pool
+    for edges in 1..=4usize {
+        let topo = Topology::new(1, edges);
+        b.bench(&format!("algorithm2_paper_trace_{}edges", edges), || {
+            std::hint::black_box(schedule_jobs(&jobs, &topo, &params));
+        });
+    }
 
     // scaling
     for n in [20usize, 40, 80] {
         let jobs_n = synthetic(n);
         b.bench(&format!("algorithm2_{n}_jobs"), || {
-            std::hint::black_box(schedule_jobs(&jobs_n, &params));
+            std::hint::black_box(schedule_jobs(&jobs_n, &paper, &params));
         });
     }
     b.finish();

@@ -168,6 +168,20 @@ mod tests {
     }
 
     #[test]
+    fn override_serve_topology() {
+        let cfg = Config::from_toml(
+            "[serve]\npatients = 2\n\n[serve.topology]\nedges = 3\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.topology.edges, 3);
+        assert_eq!(cfg.serve.topology.clouds, 1); // default
+        // invalid replica counts are rejected at parse time
+        assert!(
+            Config::from_toml("[serve.topology]\nclouds = 0\n").is_err()
+        );
+    }
+
+    #[test]
     fn override_network() {
         let cfg = Config::from_toml(
             "[environment.network.edge_device]\nlatency_ms = 5.0\nbandwidth_mbs = 1.0\n",

@@ -1,16 +1,19 @@
-//! Engine threads: each hierarchy layer owns one OS thread with its own
+//! Engine threads: each machine replica owns one OS thread with its own
 //! PJRT client (`InferenceRuntime` is `!Send` — the xla wrapper types are
 //! `Rc`-based).  Callers submit [`EngineRequest`]s over a channel and block
 //! on a rendezvous reply channel.
 //!
-//! One engine per shared machine also *enforces* constraint C1 (one job at
-//! a time) structurally: batches execute strictly in submission order.
+//! One engine per shared replica also *enforces* constraint C1 (one job at
+//! a time per machine) structurally: batches execute strictly in
+//! submission order on their replica, while replicas of the same class
+//! run concurrently.
 
 use std::sync::mpsc;
 use std::sync::Arc;
 
 use crate::device::Layer;
 use crate::runtime::{InferenceOutput, InferenceRuntime};
+use crate::topology::MachineRef;
 use crate::workload::Application;
 use crate::{Error, Result};
 
@@ -24,11 +27,11 @@ pub struct EngineRequest {
     pub reply: mpsc::SyncSender<Result<InferenceOutput>>,
 }
 
-/// Cloneable handle to one layer's engine thread.
+/// Cloneable handle to one machine replica's engine thread.
 #[derive(Clone)]
 pub struct EngineHandle {
     tx: mpsc::Sender<EngineRequest>,
-    layer: Layer,
+    machine: MachineRef,
     // Keeps the join handle alive until the last handle drops.
     _thread: Arc<EngineThread>,
 }
@@ -47,14 +50,14 @@ impl Drop for EngineThread {
 }
 
 impl EngineHandle {
-    /// Spawn the engine thread for a layer; compiles all variants eagerly
-    /// so the first request doesn't pay compile latency.
-    pub fn spawn(artifact_dir: &str, layer: Layer) -> Result<Self> {
+    /// Spawn the engine thread for a machine replica; compiles all
+    /// variants eagerly so the first request doesn't pay compile latency.
+    pub fn spawn(artifact_dir: &str, machine: MachineRef) -> Result<Self> {
         let (tx, rx) = mpsc::channel::<EngineRequest>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let dir = artifact_dir.to_string();
         let handle = std::thread::Builder::new()
-            .name(format!("engine-{}", layer.abbrev()))
+            .name(format!("engine-{}", machine.label()))
             .spawn(move || {
                 let runtime = match InferenceRuntime::open(&dir)
                     .and_then(|r| r.warmup().map(|_| r))
@@ -83,15 +86,21 @@ impl EngineHandle {
 
         Ok(EngineHandle {
             tx,
-            layer,
+            machine,
             _thread: Arc::new(EngineThread {
                 handle: std::sync::Mutex::new(Some(handle)),
             }),
         })
     }
 
+    /// The machine replica this engine serves.
+    pub fn machine(&self) -> MachineRef {
+        self.machine
+    }
+
+    /// The hierarchy layer of the replica's class.
     pub fn layer(&self) -> Layer {
-        self.layer
+        self.machine.layer()
     }
 
     /// Run a batched inference on this engine (blocks the calling thread).

@@ -1,35 +1,42 @@
 //! L3 serving coordinator: the request path.
 //!
-//! Topology mirrors the paper's ICU scenario (Fig. 3): every patient's end
-//! device releases inference requests over time; a router places each
-//! request on a hierarchy layer (per the configured [`Policy`]); per-layer
-//! executors run the *real* AOT-compiled LSTM inference through PJRT.
+//! Machine layout follows the configured [`Topology`] (the paper's ICU
+//! scenario, Fig. 3, generalized to N-replica cloud/edge pools): every
+//! patient's end device releases inference requests over time; a router
+//! places each request on a concrete machine replica (per the configured
+//! [`Policy`]); per-replica executors run the *real* AOT-compiled LSTM
+//! inference through PJRT.
 //!
-//! Because the paper's testbed is three physical machines and ours is one
-//! host, each layer is emulated faithfully (DESIGN.md §3):
+//! Because the paper's testbed is physical machines and ours is one host,
+//! each replica is emulated faithfully (DESIGN.md §3):
 //!
-//! * **network** — a request routed to edge/cloud sits in a [`DelayQueue`]
-//!   for the link model's transmission time before becoming runnable
-//!   (constraint C4: transmission overlaps other jobs' execution);
+//! * **network** — a request routed to an edge/cloud replica sits in that
+//!   replica's [`DelayQueue`] for the link model's transmission time
+//!   before becoming runnable (constraint C4: transmission overlaps other
+//!   jobs' execution);
 //! * **compute** — the measured host inference time is padded by the
 //!   layer's FLOPS ratio ([`crate::device::EmulationProfile`]);
-//! * **exclusivity** — cloud and edge each execute on a dedicated engine
-//!   thread, one batch at a time (constraint C1); device requests are
-//!   per-patient and batch=1.
+//! * **exclusivity** — every shared replica executes on a dedicated
+//!   engine thread, one batch at a time (constraint C1); device requests
+//!   are per-patient and batch=1.
 //!
-//! PJRT wrapper types are deliberately `!Send` (`Rc`-based), so each layer
-//! owns an OS engine thread with its own `InferenceRuntime`; the rest of
-//! the coordinator is plain threads + channels (this build is offline and
-//! dependency-free; the same engine-thread pattern vLLM's router uses).
+//! PJRT wrapper types are deliberately `!Send` (`Rc`-based), so each
+//! replica owns an OS engine thread with its own `InferenceRuntime`; the
+//! rest of the coordinator is plain threads + channels (this build is
+//! offline and dependency-free; the same engine-thread pattern vLLM's
+//! router uses).
 //!
-//! Thread topology per run:
+//! Thread layout per run, with `L = clouds + edges + 1` dispatch lanes:
 //!
 //! ```text
-//! patient-gen ×P ──▶ router ──▶ delay-queue ×3 ──▶ executor ×3 ──▶ collector
+//! patient-gen ×P ──▶ router ──▶ delay-queue ×L ──▶ executor ×L ──▶ collector
 //!                                (network sim)       │  ▲
 //!                                                    ▼  │ (rendezvous)
-//!                                                  engine ×3 (PJRT)
+//!                                                  engine ×L (PJRT)
 //! ```
+//!
+//! The router tracks per-lane backlog (queued + in-flight requests) so
+//! replica-aware policies can steer to the least-loaded replica.
 
 mod batcher;
 mod calibrate;
@@ -45,6 +52,7 @@ pub use engine::{EngineHandle, EngineRequest};
 pub use policy::Policy;
 pub use request::{InferenceRequest, RequestGenerator};
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -55,6 +63,7 @@ use crate::data::Rng;
 use crate::device::{EmulationProfile, Layer};
 use crate::metrics::{MetricsRegistry, MetricsReport};
 use crate::serialize::Value;
+use crate::topology::{MachineRef, Topology};
 use crate::{Error, Result};
 
 /// Serving-run parameters.
@@ -68,6 +77,9 @@ pub struct ServeConfig {
     pub arrival_rate_hz: f64,
     /// Routing policy.
     pub policy: Policy,
+    /// Machine replicas to serve with (one engine thread + delay queue
+    /// per replica; `Topology::paper()` is the paper's 3-lane setup).
+    pub topology: Topology,
     /// Dynamic batching window per shared machine (ms, simulated).
     pub batch_window_ms: u64,
     /// Maximum rows per executed batch.
@@ -97,6 +109,7 @@ impl Default for ServeConfig {
             requests_per_patient: 8,
             arrival_rate_hz: 2.0,
             policy: Policy::AlgorithmOne,
+            topology: Topology::paper(),
             batch_window_ms: 4,
             max_batch: 8,
             size_units: 64,
@@ -116,6 +129,11 @@ impl ServeConfig {
             None => def.policy,
             Some(s) => s.parse()?,
         };
+        let topology = r
+            .section("topology")?
+            .map(|s| Topology::from_reader(&s))
+            .transpose()?
+            .unwrap_or(def.topology);
         let cfg = ServeConfig {
             patients: r.usize("patients")?.unwrap_or(def.patients),
             requests_per_patient: r
@@ -125,6 +143,7 @@ impl ServeConfig {
                 .f64("arrival_rate_hz")?
                 .unwrap_or(def.arrival_rate_hz),
             policy,
+            topology,
             batch_window_ms: r
                 .u64("batch_window_ms")?
                 .unwrap_or(def.batch_window_ms),
@@ -150,6 +169,7 @@ impl ServeConfig {
         v.set("requests_per_patient", self.requests_per_patient);
         v.set("arrival_rate_hz", self.arrival_rate_hz);
         v.set("policy", self.policy.label());
+        v.set("topology", self.topology.to_value());
         v.set("batch_window_ms", self.batch_window_ms);
         v.set("max_batch", self.max_batch);
         v.set("size_units", self.size_units);
@@ -179,17 +199,37 @@ impl ServeConfig {
         if self.app_mix.iter().sum::<f64>() <= 0.0 {
             return Err(Error::Config("app_mix must have positive mass".into()));
         }
+        self.topology.validate()?;
         Ok(())
     }
+}
+
+/// One dispatch lane's serving outcome (per machine replica).
+#[derive(Debug, Clone, Copy)]
+pub struct LaneReport {
+    pub machine: MachineRef,
+    /// Requests completed on this replica.
+    pub requests: u64,
+    /// Total engine-busy time (batch execution, emulation included —
+    /// *simulated* milliseconds, like the latency metrics).
+    pub busy_ms: f64,
+    /// Simulated busy time over the run's real wall window; can exceed 1
+    /// when `time_scale` compresses the clock (the emulated machine was
+    /// busier than real time allowed).
+    pub utilization: f64,
 }
 
 /// Outcome of a serving run.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
     pub policy: Policy,
+    pub topology: Topology,
     pub metrics: MetricsReport,
-    /// Requests routed per layer (CC, ES, ED).
+    /// Requests routed per machine class (CC, ES, ED).
     pub routed: [u64; 3],
+    /// Per-replica serving outcome, in lane order (cloud replicas, edge
+    /// replicas, device).
+    pub lanes: Vec<LaneReport>,
     /// Total requests completed.
     pub completed: u64,
 }
@@ -199,11 +239,25 @@ impl ServeReport {
     pub fn to_value(&self) -> Value {
         let mut v = Value::object();
         v.set("policy", self.policy.label());
+        v.set("topology", self.topology.to_value());
         v.set("completed", self.completed);
         v.set(
             "routed",
             vec![self.routed[0], self.routed[1], self.routed[2]],
         );
+        let lanes: Vec<Value> = self
+            .lanes
+            .iter()
+            .map(|lane| {
+                let mut l = Value::object();
+                l.set("machine", lane.machine.label());
+                l.set("requests", lane.requests);
+                l.set("busy_ms", lane.busy_ms);
+                l.set("utilization", lane.utilization);
+                l
+            })
+            .collect();
+        v.set("lanes", lanes);
         v.set("metrics", self.metrics.to_value());
         v
     }
@@ -212,7 +266,8 @@ impl ServeReport {
 /// One completed request's timing, sent to the metrics collector.
 #[derive(Debug, Clone, Copy)]
 struct Completion {
-    layer: Layer,
+    machine: MachineRef,
+    lane: usize,
     total: Duration,
     transmission: Duration,
     queueing: Duration,
@@ -244,31 +299,39 @@ impl Coordinator {
     /// Run the serving experiment to completion (blocking).
     pub fn run(&self, seed: u64) -> Result<ServeReport> {
         let cfg = self.cfg.clone();
+        let topo = cfg.topology;
+        let lanes = topo.machines();
         let emu = if cfg.emulate_compute {
             self.env.emulation(Layer::Cloud)
         } else {
             EmulationProfile::identity()
         };
 
-        // --- engines: one per layer, own PJRT client each ----------------
-        let engines = [
-            EngineHandle::spawn(&self.artifact_dir, Layer::Cloud)?,
-            EngineHandle::spawn(&self.artifact_dir, Layer::Edge)?,
-            EngineHandle::spawn(&self.artifact_dir, Layer::Device)?,
-        ];
+        // --- engines: one per machine replica, own PJRT client each ------
+        let engines: Vec<EngineHandle> = lanes
+            .iter()
+            .map(|&m| EngineHandle::spawn(&self.artifact_dir, m))
+            .collect::<Result<_>>()?;
 
         let (done_tx, done_rx) = mpsc::channel::<Completion>();
 
-        // --- per-layer delay queue (network) + executor ------------------
+        // per-lane outstanding requests (queued + in-flight): incremented
+        // by the router at dispatch, decremented by the executor on
+        // completion — the backlog signal replica-aware policies read
+        let backlog: Arc<Vec<AtomicU64>> = Arc::new(
+            (0..topo.lane_count()).map(|_| AtomicU64::new(0)).collect(),
+        );
+
+        // --- per-lane delay queue (network) + executor -------------------
         let mut delay_queues: Vec<Arc<DelayQueue<Item>>> = Vec::new();
-        let mut layer_threads = Vec::new();
-        for (li, layer) in Layer::ALL.into_iter().enumerate() {
+        let mut lane_threads = Vec::new();
+        for (li, &machine) in lanes.iter().enumerate() {
             let dq: Arc<DelayQueue<Item>> = Arc::new(DelayQueue::new());
             delay_queues.push(dq.clone());
             let (exec_tx, exec_rx) = mpsc::channel::<Item>();
             // forwarder: delay queue -> executor channel
             let fwd = std::thread::Builder::new()
-                .name(format!("net-{}", layer.abbrev()))
+                .name(format!("net-{}", machine.label()))
                 .spawn(move || {
                     while let Some(item) = dq.pop_blocking() {
                         if exec_tx.send(item).is_err() {
@@ -282,14 +345,18 @@ impl Coordinator {
             let done = done_tx.clone();
             let cfg_c = cfg.clone();
             let emu_c = emu.clone();
+            let backlog_c = backlog.clone();
             let exec = std::thread::Builder::new()
-                .name(format!("exec-{}", layer.abbrev()))
+                .name(format!("exec-{}", machine.label()))
                 .spawn(move || {
-                    run_executor(layer, exec_rx, engine, done, cfg_c, emu_c)
+                    run_executor(
+                        machine, li, exec_rx, engine, done, cfg_c, emu_c,
+                        backlog_c,
+                    )
                 })
                 .map_err(|e| Error::Serving(e.to_string()))?;
-            layer_threads.push(fwd);
-            layer_threads.push(exec);
+            lane_threads.push(fwd);
+            lane_threads.push(exec);
         }
         drop(done_tx);
 
@@ -328,6 +395,7 @@ impl Coordinator {
         let calib = self.calib;
         let cfg_c = cfg.clone();
         let dq_router: Vec<Arc<DelayQueue<Item>>> = delay_queues.clone();
+        let backlog_r = backlog.clone();
         let routed = Arc::new(std::sync::Mutex::new([0u64; 3]));
         let routed_c = routed.clone();
         let router = std::thread::Builder::new()
@@ -335,27 +403,42 @@ impl Coordinator {
             .spawn(move || {
                 let mut rr = 0usize;
                 let mut net_rng = Rng::new(seed ^ 0xDEAD_BEEF);
+                let mut snapshot = vec![0u64; topo.lane_count()];
                 while let Ok(req) = gen_rx.recv() {
-                    let layer = cfg_c.policy.route(
+                    for (s, a) in
+                        snapshot.iter_mut().zip(backlog_r.iter())
+                    {
+                        *s = a.load(Ordering::Relaxed);
+                    }
+                    let machine = cfg_c.policy.route(
                         req.app,
                         req.size_units,
                         &env,
                         &calib,
+                        &topo,
+                        &snapshot,
                         &mut rr,
                     );
-                    routed_c.lock().unwrap()[layer_index(layer)] += 1;
+                    let lane = topo.lane_index(machine);
+                    routed_c.lock().unwrap()
+                        [layer_index(machine.layer())] += 1;
+                    backlog_r[lane].fetch_add(1, Ordering::Relaxed);
                     // one patient window = one record's share of the
                     // workload dataset
                     let payload_kb = req.app.data_kb(req.size_units)
                         / req.size_units.max(1) as f64;
                     let u = net_rng.uniform();
-                    let trans_ms =
-                        transmission_with_jitter(&env, layer, payload_kb, u);
+                    let trans_ms = transmission_with_jitter(
+                        &env,
+                        machine.layer(),
+                        payload_kb,
+                        u,
+                    );
                     let t = Duration::from_secs_f64(
                         trans_ms / 1e3 * cfg_c.time_scale,
                     );
                     let ready = Instant::now() + t;
-                    dq_router[layer_index(layer)]
+                    dq_router[lane]
                         .push(ready, (req.with_transmission(t), ready));
                 }
                 for dq in &dq_router {
@@ -369,38 +452,65 @@ impl Coordinator {
         let started = Instant::now();
         let mut registry = MetricsRegistry::new();
         let mut completed = 0u64;
+        let mut lane_requests = vec![0u64; topo.lane_count()];
+        let mut lane_busy = vec![Duration::ZERO; topo.lane_count()];
         while let Ok(c) = done_rx.recv() {
             registry.record_request(
-                c.layer,
+                c.machine.layer(),
                 c.total,
                 c.transmission,
                 c.queueing,
                 c.processing,
             );
+            lane_requests[c.lane] += 1;
             if c.batch_head {
-                registry.record_batch(c.layer, c.batch_rows);
+                registry.record_batch(c.machine.layer(), c.batch_rows);
+                // the batch occupies its engine once, not once per row
+                lane_busy[c.lane] += c.processing;
             }
             completed += 1;
             if completed >= total_requests {
                 break;
             }
         }
-        registry.set_window(0.0, started.elapsed().as_secs_f64() * 1e3);
+        let wall_ms = started.elapsed().as_secs_f64() * 1e3;
+        registry.set_window(0.0, wall_ms);
 
         // --- orderly shutdown ----------------------------------------------
         for t in gen_threads {
             let _ = t.join();
         }
         let _ = router.join();
-        for t in layer_threads {
+        for t in lane_threads {
             let _ = t.join();
         }
+
+        let lane_reports: Vec<LaneReport> = lanes
+            .iter()
+            .enumerate()
+            .map(|(li, &machine)| {
+                let busy_ms =
+                    lane_busy[li].as_secs_f64() * 1e3;
+                LaneReport {
+                    machine,
+                    requests: lane_requests[li],
+                    busy_ms,
+                    utilization: if wall_ms > 0.0 {
+                        busy_ms / wall_ms
+                    } else {
+                        0.0
+                    },
+                }
+            })
+            .collect();
 
         let routed = *routed.lock().unwrap();
         Ok(ServeReport {
             policy: cfg.policy,
+            topology: topo,
             metrics: registry.report(),
             routed,
+            lanes: lane_reports,
             completed,
         })
     }
@@ -430,23 +540,27 @@ fn transmission_with_jitter(
     }
 }
 
-/// Per-layer executor: drains the queue through the batcher and runs
-/// batches on the layer's engine, padding wall time per the emulation
+/// Per-lane executor: drains the queue through the batcher and runs
+/// batches on the replica's engine, padding wall time per the emulation
 /// profile.
+#[allow(clippy::too_many_arguments)]
 fn run_executor(
-    layer: Layer,
+    machine: MachineRef,
+    lane: usize,
     rx: mpsc::Receiver<Item>,
     engine: EngineHandle,
     done: mpsc::Sender<Completion>,
     cfg: ServeConfig,
     emu: EmulationProfile,
+    backlog: Arc<Vec<AtomicU64>>,
 ) {
+    let layer = machine.layer();
     let window = Duration::from_secs_f64(
         cfg.batch_window_ms as f64 / 1e3 * cfg.time_scale,
     );
-    // device layer: per-patient private hardware → no cross-patient
+    // device lane: per-patient private hardware → no cross-patient
     // batching; run singles
-    let max_batch = if layer == Layer::Device { 1 } else { cfg.max_batch };
+    let max_batch = if machine.is_shared() { cfg.max_batch } else { 1 };
     let mut batcher = Batcher::new(max_batch, window);
 
     while let Some(batch) = batcher.next_batch(&rx) {
@@ -474,10 +588,12 @@ fn run_executor(
             std::thread::sleep(pad);
         }
         for (i, (req, arrived)) in batch.iter().enumerate() {
+            backlog[lane].fetch_sub(1, Ordering::Relaxed);
             let total = req.created.elapsed();
             let queueing = exec_start.saturating_duration_since(*arrived);
             let _ = done.send(Completion {
-                layer,
+                machine,
+                lane,
                 total,
                 transmission: req.transmission,
                 queueing,
@@ -509,6 +625,9 @@ mod tests {
         let mut c = ServeConfig::default();
         c.app_mix = [0.0; 3];
         assert!(c.validate().is_err());
+        let mut c = ServeConfig::default();
+        c.topology = Topology::new(0, 1);
+        assert!(c.validate().is_err());
     }
 
     #[test]
@@ -524,6 +643,17 @@ mod tests {
         let v = cfg.to_value();
         let r = crate::config::FieldReader::new(&v, "serve").unwrap();
         let back = ServeConfig::from_reader(&r).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn config_roundtrip_multi_edge() {
+        let mut cfg = ServeConfig::default();
+        cfg.topology = Topology::new(2, 3);
+        let v = cfg.to_value();
+        let r = crate::config::FieldReader::new(&v, "serve").unwrap();
+        let back = ServeConfig::from_reader(&r).unwrap();
+        assert_eq!(back.topology, Topology::new(2, 3));
         assert_eq!(back, cfg);
     }
 

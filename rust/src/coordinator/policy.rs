@@ -1,9 +1,16 @@
 //! Routing policies for the serving path.
-
+//!
+//! A policy maps each incoming request to a concrete [`MachineRef`] in
+//! the configured [`Topology`].  Class selection follows the paper
+//! (Algorithm 1 / fixed layers); replica selection within a class is
+//! backlog-aware: the router passes the per-lane backlog (queued +
+//! in-flight requests, indexed by [`Topology::lane_index`]) and ties go
+//! to the lowest replica, so the paper topology reproduces the old
+//! per-layer behavior exactly.
 
 use crate::allocation::{allocate_single, Calibration};
 use crate::config::Environment;
-use crate::device::Layer;
+use crate::topology::{MachineId, MachineRef, Topology};
 use crate::workload::{Application, Workload};
 
 /// Where to run each incoming request.
@@ -11,49 +18,75 @@ use crate::workload::{Application, Workload};
 pub enum Policy {
     /// The paper's Algorithm 1: per-request argmin of estimated response
     /// time (the workload's size decides — heavy models go up, light
-    /// models stay down).
+    /// models stay down); least-backlogged replica of the chosen class.
     AlgorithmOne,
-    /// Everything to the cloud (the classic pre-edge deployment).
+    /// Everything to the cloud pool (the classic pre-edge deployment).
     FixedCloud,
-    /// Everything to the edge server (the "common practice" §I criticizes).
+    /// Everything to the edge pool (the "common practice" §I criticizes).
     FixedEdge,
     /// Everything on the patient's own device.
     FixedDevice,
-    /// Round-robin across layers (load-spreading strawman).
+    /// Round-robin across all machines (load-spreading strawman).
     RoundRobin,
+    /// The least-backlogged machine overall, ignoring cost estimates —
+    /// the queue-depth-only strawman that shows why Algorithm 1's
+    /// estimates matter.
+    LeastLoaded,
 }
 
 impl Policy {
-    pub const ALL: [Policy; 5] = [
+    pub const ALL: [Policy; 6] = [
         Policy::AlgorithmOne,
         Policy::FixedCloud,
         Policy::FixedEdge,
         Policy::FixedDevice,
         Policy::RoundRobin,
+        Policy::LeastLoaded,
     ];
 
-    /// Route one request.  `rr_state` is the router's round-robin counter.
+    /// Route one request.  `backlog` is the per-lane outstanding-request
+    /// count (see [`Topology::lane_index`]); `rr_state` is the router's
+    /// round-robin counter.
     pub fn route(
         self,
         app: Application,
         size_units: u32,
         env: &Environment,
         calib: &Calibration,
+        topo: &Topology,
+        backlog: &[u64],
         rr_state: &mut usize,
-    ) -> Layer {
+    ) -> MachineRef {
         match self {
             Policy::AlgorithmOne => {
-                allocate_single(&Workload::new(app, size_units), env, calib)
-                    .chosen
+                let layer = allocate_single(
+                    &Workload::new(app, size_units),
+                    env,
+                    calib,
+                )
+                .chosen;
+                least_loaded_replica(
+                    topo,
+                    MachineId::from_layer(layer),
+                    backlog,
+                )
             }
-            Policy::FixedCloud => Layer::Cloud,
-            Policy::FixedEdge => Layer::Edge,
-            Policy::FixedDevice => Layer::Device,
+            Policy::FixedCloud => {
+                least_loaded_replica(topo, MachineId::Cloud, backlog)
+            }
+            Policy::FixedEdge => {
+                least_loaded_replica(topo, MachineId::Edge, backlog)
+            }
+            Policy::FixedDevice => MachineRef::DEVICE,
             Policy::RoundRobin => {
-                let l = Layer::ALL[*rr_state % 3];
+                let m = topo.machine_at(*rr_state % topo.lane_count());
                 *rr_state += 1;
-                l
+                m
             }
+            Policy::LeastLoaded => (0..topo.lane_count())
+                .map(|lane| topo.machine_at(lane))
+                .min_by_key(|&m| backlog_of(topo, m, backlog))
+                .expect("topology has at least the device"),
         }
     }
 
@@ -64,8 +97,27 @@ impl Policy {
             Policy::FixedEdge => "fixed-edge",
             Policy::FixedDevice => "fixed-device",
             Policy::RoundRobin => "round-robin",
+            Policy::LeastLoaded => "least-loaded",
         }
     }
+}
+
+fn backlog_of(topo: &Topology, m: MachineRef, backlog: &[u64]) -> u64 {
+    backlog.get(topo.lane_index(m)).copied().unwrap_or(0)
+}
+
+/// The replica of `class` with the smallest backlog; ties go to the
+/// lowest replica index (so an idle pool degenerates to replica 0, the
+/// paper's single machine).
+fn least_loaded_replica(
+    topo: &Topology,
+    class: MachineId,
+    backlog: &[u64],
+) -> MachineRef {
+    (0..topo.replicas(class).max(1))
+        .map(|r| MachineRef { class, replica: r })
+        .min_by_key(|&m| backlog_of(topo, m, backlog))
+        .expect("classes have at least one replica")
 }
 
 impl std::str::FromStr for Policy {
@@ -78,6 +130,7 @@ impl std::str::FromStr for Policy {
             "fixed-edge" | "edge" => Ok(Policy::FixedEdge),
             "fixed-device" | "device" => Ok(Policy::FixedDevice),
             "round-robin" | "rr" => Ok(Policy::RoundRobin),
+            "least-loaded" | "ll" => Ok(Policy::LeastLoaded),
             other => Err(crate::Error::Config(format!(
                 "unknown policy {other:?}"
             ))),
@@ -88,37 +141,107 @@ impl std::str::FromStr for Policy {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::device::Layer;
+
+    fn route_idle(
+        policy: Policy,
+        app: Application,
+        topo: &Topology,
+        rr: &mut usize,
+    ) -> MachineRef {
+        let env = Environment::paper();
+        let calib = Calibration::paper();
+        let backlog = vec![0u64; topo.lane_count()];
+        policy.route(app, 64, &env, &calib, topo, &backlog, rr)
+    }
 
     #[test]
     fn algorithm1_routes_by_table_v() {
-        let env = Environment::paper();
-        let calib = Calibration::paper();
+        let topo = Topology::paper();
         let mut rr = 0;
         // Table V chosen layers at unit size
         assert_eq!(
-            Policy::AlgorithmOne.route(Application::Breath, 64, &env, &calib, &mut rr),
+            route_idle(Policy::AlgorithmOne, Application::Breath, &topo, &mut rr)
+                .layer(),
             Layer::Edge
         );
         assert_eq!(
-            Policy::AlgorithmOne.route(Application::Mortality, 64, &env, &calib, &mut rr),
+            route_idle(
+                Policy::AlgorithmOne,
+                Application::Mortality,
+                &topo,
+                &mut rr
+            )
+            .layer(),
             Layer::Device
         );
         assert_eq!(
-            Policy::AlgorithmOne.route(Application::Phenotype, 64, &env, &calib, &mut rr),
+            route_idle(
+                Policy::AlgorithmOne,
+                Application::Phenotype,
+                &topo,
+                &mut rr
+            )
+            .layer(),
             Layer::Edge
         );
     }
 
     #[test]
-    fn round_robin_cycles() {
+    fn algorithm1_picks_least_backlogged_replica() {
+        let topo = Topology::new(1, 2);
         let env = Environment::paper();
         let calib = Calibration::paper();
         let mut rr = 0;
+        // lanes: [CC0, ES0, ES1, ED]; Breath routes to the edge class
+        let backlog = vec![0, 3, 1, 0];
+        let m = Policy::AlgorithmOne.route(
+            Application::Breath,
+            64,
+            &env,
+            &calib,
+            &topo,
+            &backlog,
+            &mut rr,
+        );
+        assert_eq!(m, MachineRef::edge(1));
+        // idle pool degenerates to replica 0
+        let idle = vec![0; 4];
+        let m = Policy::AlgorithmOne.route(
+            Application::Breath,
+            64,
+            &env,
+            &calib,
+            &topo,
+            &idle,
+            &mut rr,
+        );
+        assert_eq!(m, MachineRef::edge(0));
+    }
+
+    #[test]
+    fn round_robin_cycles_all_replicas() {
+        let topo = Topology::new(1, 2);
+        let mut rr = 0;
+        let seq: Vec<MachineRef> = (0..8)
+            .map(|_| {
+                route_idle(Policy::RoundRobin, Application::Breath, &topo, &mut rr)
+            })
+            .collect();
+        let lanes = topo.machines();
+        assert_eq!(&seq[0..4], &lanes[..]);
+        assert_eq!(&seq[4..8], &lanes[..]);
+    }
+
+    #[test]
+    fn round_robin_paper_matches_layer_cycle() {
+        // degenerate topology: the old CC → ES → ED cycle
+        let topo = Topology::paper();
+        let mut rr = 0;
         let seq: Vec<Layer> = (0..6)
             .map(|_| {
-                Policy::RoundRobin.route(
-                    Application::Breath, 64, &env, &calib, &mut rr,
-                )
+                route_idle(Policy::RoundRobin, Application::Breath, &topo, &mut rr)
+                    .layer()
             })
             .collect();
         assert_eq!(&seq[0..3], &Layer::ALL);
@@ -126,9 +249,62 @@ mod tests {
     }
 
     #[test]
+    fn least_loaded_ignores_class() {
+        let topo = Topology::new(1, 2);
+        let env = Environment::paper();
+        let calib = Calibration::paper();
+        let mut rr = 0;
+        let backlog = vec![5, 2, 4, 3]; // ES0 least
+        let m = Policy::LeastLoaded.route(
+            Application::Phenotype,
+            64,
+            &env,
+            &calib,
+            &topo,
+            &backlog,
+            &mut rr,
+        );
+        assert_eq!(m, MachineRef::edge(0));
+        // ties go to the earliest machine in canonical order
+        let flat = vec![1, 1, 1, 1];
+        let m = Policy::LeastLoaded.route(
+            Application::Phenotype,
+            64,
+            &env,
+            &calib,
+            &topo,
+            &flat,
+            &mut rr,
+        );
+        assert_eq!(m, MachineRef::cloud(0));
+    }
+
+    #[test]
+    fn fixed_policies_stay_in_class() {
+        let topo = Topology::new(2, 3);
+        let mut rr = 0;
+        for (p, class) in [
+            (Policy::FixedCloud, MachineId::Cloud),
+            (Policy::FixedEdge, MachineId::Edge),
+            (Policy::FixedDevice, MachineId::Device),
+        ] {
+            let m = route_idle(p, Application::Breath, &topo, &mut rr);
+            assert_eq!(m.class, class, "{p:?}");
+        }
+    }
+
+    #[test]
     fn parse_aliases() {
         assert_eq!("ours".parse::<Policy>().unwrap(), Policy::AlgorithmOne);
         assert_eq!("cloud".parse::<Policy>().unwrap(), Policy::FixedCloud);
+        assert_eq!("ll".parse::<Policy>().unwrap(), Policy::LeastLoaded);
         assert!("fog".parse::<Policy>().is_err());
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        for p in Policy::ALL {
+            assert_eq!(p.label().parse::<Policy>().unwrap(), p);
+        }
     }
 }

@@ -35,10 +35,29 @@
 //! let decision = allocate_single(&wl, &env, &Calibration::paper());
 //! println!("deploy on {:?}", decision.chosen);
 //!
-//! // Algorithm 2: schedule the paper's 10-job ICU trace.
+//! // Algorithm 2: schedule the paper's 10-job ICU trace on the paper's
+//! // 1-cloud + 1-edge machine set (assumption (d))...
 //! let jobs = paper_jobs();
-//! let schedule = schedule_jobs(&jobs, &SchedulerParams::default());
+//! let schedule = schedule_jobs(
+//!     &jobs,
+//!     &Topology::paper(),
+//!     &SchedulerParams::default(),
+//! );
 //! println!("whole response time = {}", schedule.unweighted_sum());
+//!
+//! // ...or on any cloud/edge pool: the same cores, one extra in-room
+//! // edge server.  Every assignment names a concrete replica
+//! // (`MachineRef { class, replica }`), and the serving coordinator
+//! // accepts the same `Topology` to spawn one engine per replica.
+//! let wider = schedule_jobs(
+//!     &jobs,
+//!     &Topology::new(1, 2),
+//!     &SchedulerParams::default(),
+//! );
+//! println!("with a second edge server = {}", wider.unweighted_sum());
+//! for (machine, util) in wider.replica_utilization() {
+//!     println!("{machine}: {:.0}% busy", util * 100.0);
+//! }
 //! ```
 
 pub mod allocation;
@@ -55,6 +74,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod serialize;
 pub mod simulation;
+pub mod topology;
 pub mod workload;
 
 pub use error::{Error, Result};
@@ -69,8 +89,8 @@ pub mod prelude {
     pub use crate::network::NetworkModel;
     pub use crate::runtime::{InferenceRuntime, Manifest};
     pub use crate::scheduler::{
-        paper_jobs, schedule_jobs, Job, MachineId, Schedule, SchedulerParams,
-        Strategy,
+        paper_jobs, schedule_jobs, Job, Schedule, SchedulerParams, Strategy,
     };
+    pub use crate::topology::{MachineId, MachineRef, Topology};
     pub use crate::workload::{Application, Workload};
 }

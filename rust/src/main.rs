@@ -14,9 +14,9 @@ use edgeward::config::{Config, Environment};
 use edgeward::coordinator::{Coordinator, Policy};
 use edgeward::data::EpisodeGenerator;
 use edgeward::device::Layer;
-use edgeward::report::{render_gantt, TextTable};
+use edgeward::report::{render_gantt, render_replica_utilization, TextTable};
 use edgeward::scheduler::{
-    evaluate_strategy, paper_jobs, schedule_jobs, Strategy,
+    evaluate_strategy, paper_jobs, schedule_jobs, Strategy, Topology,
 };
 use edgeward::workload::{table_iv, Application, Workload, SIZE_UNITS};
 
@@ -28,15 +28,22 @@ USAGE: edgeward [--config FILE] <COMMAND> [OPTIONS]
 COMMANDS:
   tables    [--table 3|4|5|6|7] [--figure 6|7|8]   regenerate paper artifacts
   allocate  --app APP [--size UNITS]               Algorithm 1 for one workload
-  schedule  [--strategy S] [--compare]             Algorithm 2 / baselines
-  serve     [--policy P] [--patients N] [--requests N] [--seed N] [--json]
+  schedule  [--strategy S] [--compare] [--clouds N] [--edges N]
+                                                   Algorithm 2 / baselines
+  serve     [--policy P] [--patients N] [--requests N] [--clouds N]
+            [--edges N] [--seed N] [--json]
   calibrate [--live]                               print fitted λ coefficients
   config                                           print the default TOML config
   datagen   --app APP [--n N] [--seed N]           synthetic ICU episodes (CSV)
 
 APP:      breath | mortality | phenotype
-POLICY:   algorithm-1 | fixed-cloud | fixed-edge | fixed-device | round-robin
+POLICY:   algorithm-1 | fixed-cloud | fixed-edge | fixed-device |
+          round-robin | least-loaded
 STRATEGY: ours | per-job-optimal | all-cloud | all-edge | all-device
+
+--clouds/--edges select the machine topology (default: the paper's 1+1);
+every extra replica is a real engine on the serving path and an extra
+exclusive timeline in the scheduler.
 ";
 
 /// Minimal argument cursor: `--key value` and `--flag` handling.
@@ -162,25 +169,36 @@ fn run() -> edgeward::Result<()> {
         "schedule" => {
             let strategy = args.opt("strategy").unwrap_or_else(|| "ours".into());
             let compare = args.flag("compare");
+            let clouds: Option<usize> = args.parse("clouds");
+            let edges: Option<usize> = args.parse("edges");
             args.finish();
+            let topo = Topology::new(clouds.unwrap_or(1), edges.unwrap_or(1));
+            topo.validate()?;
             let jobs = paper_jobs();
             if compare {
-                print!("{}", render_table_vii());
+                print!("{}", render_table_vii(&topo));
             } else {
                 let strat = parse_strategy(&strategy)?;
-                let r = evaluate_strategy(&jobs, strat);
+                let r = evaluate_strategy(&jobs, &topo, strat);
                 println!("strategy      : {}", strat.label());
+                println!("topology      : {}", topo.label());
                 println!("weighted sum  : {}", r.schedule.weighted_sum);
                 println!("whole response: {}", r.schedule.unweighted_sum());
                 println!("last complete : {}", r.schedule.last_completion());
                 println!();
                 print!("{}", render_gantt(&r.schedule, 100));
+                if !topo.is_paper() {
+                    println!();
+                    print!("{}", render_replica_utilization(&r.schedule));
+                }
             }
         }
         "serve" => {
             let policy: Option<Policy> = args.parse("policy");
             let patients: Option<usize> = args.parse("patients");
             let requests: Option<usize> = args.parse("requests");
+            let clouds: Option<usize> = args.parse("clouds");
+            let edges: Option<usize> = args.parse("edges");
             let seed: Option<u64> = args.parse("seed");
             let json = args.flag("json");
             args.finish();
@@ -194,6 +212,12 @@ fn run() -> edgeward::Result<()> {
             if let Some(r) = requests {
                 serve_cfg.requests_per_patient = r;
             }
+            if let Some(c) = clouds {
+                serve_cfg.topology.clouds = c;
+            }
+            if let Some(e) = edges {
+                serve_cfg.topology.edges = e;
+            }
             let coord = Coordinator::new(
                 env.clone(),
                 calib,
@@ -205,11 +229,21 @@ fn run() -> edgeward::Result<()> {
                 print!("{}", report.to_value().to_string_pretty());
             } else {
                 println!("policy     : {}", report.policy.label());
+                println!("topology   : {}", report.topology.label());
                 println!("completed  : {}", report.completed);
                 println!(
                     "routed     : CC={} ES={} ED={}",
                     report.routed[0], report.routed[1], report.routed[2]
                 );
+                for lane in &report.lanes {
+                    println!(
+                        "  lane {:4}: n={:<4} busy={:.1}ms util={:.1}%",
+                        lane.machine.label(),
+                        lane.requests,
+                        lane.busy_ms,
+                        lane.utilization * 100.0,
+                    );
+                }
                 println!(
                     "throughput : {:.1} req/s (wall {:.2}s)",
                     report.metrics.throughput_rps, report.metrics.wall_time_s
@@ -320,7 +354,7 @@ fn render_tables(
         (Some(4), _) => print!("{}", render_table_iv()),
         (Some(5), _) => print!("{}", render_table_v(env, calib)),
         (Some(6), _) => print!("{}", render_table_vi()),
-        (Some(7), _) => print!("{}", render_table_vii()),
+        (Some(7), _) => print!("{}", render_table_vii(&Topology::paper())),
         (Some(n), _) => {
             return Err(edgeward::Error::Config(format!("no table {n}")))
         }
@@ -338,7 +372,7 @@ fn render_tables(
             print!("\n{}", render_figure_6(env, calib));
             print!("\n{}", render_figure_7(cfg));
             print!("\n{}", render_figure_8());
-            print!("\n{}", render_table_vii());
+            print!("\n{}", render_table_vii(&Topology::paper()));
         }
     }
     Ok(())
@@ -421,14 +455,22 @@ fn render_table_vi() -> String {
     t.render()
 }
 
-fn render_table_vii() -> String {
+fn render_table_vii(topo: &Topology) -> String {
     let jobs = paper_jobs();
+    let title = if topo.is_paper() {
+        "Table VII — response time using different algorithms".to_string()
+    } else {
+        format!(
+            "Table VII — response time using different algorithms ({})",
+            topo.label()
+        )
+    };
     let mut t = TextTable::new(&[
         "Strategy", "Whole Response Time", "Last Response Time", "Weighted Sum",
     ])
-    .with_title("Table VII — response time using different algorithms");
+    .with_title(title.as_str());
     for s in Strategy::ALL {
-        let r = evaluate_strategy(&jobs, s);
+        let r = evaluate_strategy(&jobs, topo, s);
         t.row(vec![
             s.label().into(),
             r.schedule.unweighted_sum().to_string(),
@@ -459,7 +501,7 @@ fn render_figure_6(env: &Environment, calib: &Calibration) -> String {
 
 fn render_figure_7(cfg: &Config) -> String {
     let jobs = paper_jobs();
-    let s = schedule_jobs(&jobs, &cfg.scheduler);
+    let s = schedule_jobs(&jobs, &Topology::paper(), &cfg.scheduler);
     let (c, e, d) = s.placement_counts();
     format!(
         "Figure 7 — allocation strategy using Algorithm 2\n\
@@ -470,7 +512,11 @@ fn render_figure_7(cfg: &Config) -> String {
 
 fn render_figure_8() -> String {
     let jobs = paper_jobs();
-    let r = evaluate_strategy(&jobs, Strategy::PerJobOptimal);
+    let r = evaluate_strategy(
+        &jobs,
+        &Topology::paper(),
+        Strategy::PerJobOptimal,
+    );
     format!(
         "Figure 8 — allocation using the single-job optimal layer per job\n{}",
         render_gantt(&r.schedule, 100)

@@ -3,7 +3,9 @@
 use crate::scheduler::Schedule;
 
 /// Render a schedule as an ASCII Gantt chart: one row per job, `.` for
-/// waiting-for-data, `-` for queued-at-machine, `#` for executing.
+/// waiting-for-data, `-` for queued-at-machine, `#` for executing.  The
+/// machine column names the concrete replica (`Edge:1`), so multi-replica
+/// topologies read unambiguously; paper-topology labels are unchanged.
 ///
 /// `width` caps the time axis (longer schedules are scaled down).
 pub fn render_gantt(schedule: &Schedule, width: usize) -> String {
@@ -36,7 +38,7 @@ pub fn render_gantt(schedule: &Schedule, width: usize) -> String {
         line.push_str(&"-".repeat(start - avail)); // queued
         line.push_str(&"#".repeat(end - start)); // executing
         out.push_str(&format!(
-            "J{:<3} {:<7} |{line}\n",
+            "J{:<3} {:<8} |{line}\n",
             e.job + 1,
             format!("{}", e.machine),
         ));
@@ -44,15 +46,31 @@ pub fn render_gantt(schedule: &Schedule, width: usize) -> String {
     out
 }
 
+/// Per-replica utilization summary under the Gantt (the replica-scaling
+/// narration for multi-edge runs).
+pub fn render_replica_utilization(schedule: &Schedule) -> String {
+    let mut out = String::new();
+    for (m, u) in schedule.replica_utilization() {
+        out.push_str(&format!("{:<8} {:>5.1}% busy\n", m.to_string(), u * 100.0));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::scheduler::{paper_jobs, schedule_jobs, SchedulerParams};
+    use crate::scheduler::{
+        paper_jobs, schedule_jobs, SchedulerParams, Topology,
+    };
 
     #[test]
     fn renders_all_jobs() {
         let jobs = paper_jobs();
-        let s = schedule_jobs(&jobs, &SchedulerParams::default());
+        let s = schedule_jobs(
+            &jobs,
+            &Topology::paper(),
+            &SchedulerParams::default(),
+        );
         let g = render_gantt(&s, 100);
         for i in 1..=10 {
             assert!(g.contains(&format!("J{i}")), "missing J{i}\n{g}");
@@ -62,18 +80,42 @@ mod tests {
 
     #[test]
     fn empty_schedule() {
-        let s = schedule_jobs(&[], &SchedulerParams::default());
+        let s = schedule_jobs(
+            &[],
+            &Topology::paper(),
+            &SchedulerParams::default(),
+        );
         assert!(render_gantt(&s, 80).contains("empty"));
     }
 
     #[test]
     fn scales_long_horizons() {
         let jobs = paper_jobs();
-        let s = schedule_jobs(&jobs, &SchedulerParams::default());
+        let s = schedule_jobs(
+            &jobs,
+            &Topology::paper(),
+            &SchedulerParams::default(),
+        );
         let g = render_gantt(&s, 20);
         // no line should be drastically wider than the cap + labels
         for line in g.lines().skip(1) {
             assert!(line.len() < 60, "line too wide: {line}");
         }
+    }
+
+    #[test]
+    fn replica_labels_appear_in_multi_edge_gantt() {
+        // force jobs onto the second edge replica and check the row label
+        let jobs = paper_jobs();
+        let topo = Topology::new(1, 2);
+        let assignment: Vec<_> = (0..jobs.len())
+            .map(|i| crate::topology::MachineRef::edge(i % 2))
+            .collect();
+        let s = crate::scheduler::simulate(&jobs, &topo, &assignment);
+        let g = render_gantt(&s, 100);
+        assert!(g.contains("Edge:1"), "{g}");
+        let util = render_replica_utilization(&s);
+        assert!(util.contains("Edge:1"), "{util}");
+        assert!(util.contains("Cloud"), "{util}");
     }
 }

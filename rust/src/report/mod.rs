@@ -4,7 +4,7 @@
 mod gantt;
 mod table;
 
-pub use gantt::render_gantt;
+pub use gantt::{render_gantt, render_replica_utilization};
 pub use table::TextTable;
 
 use std::fmt::Write as _;

@@ -1,8 +1,9 @@
 //! The four comparison strategies of Table VII.
 
-
-use super::{schedule_jobs, simulate, Assignment, Job, MachineId, Schedule,
-            SchedulerParams};
+use super::{
+    schedule_jobs, simulate, Assignment, Job, MachineId, Schedule,
+    SchedulerParams, Topology,
+};
 
 /// A deployment strategy over a job set.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -12,9 +13,9 @@ pub enum Strategy {
     /// Each job on its single-job-optimal layer (argmin I+D), then
     /// simulated with contention (Figure 8's strategy).
     PerJobOptimal,
-    /// Everything on the shared cloud server.
+    /// Everything on the shared cloud servers.
     AllCloud,
-    /// Everything on the shared edge server.
+    /// Everything on the shared edge servers.
     AllEdge,
     /// Everything on the patients' own devices.
     AllDevice,
@@ -43,17 +44,37 @@ impl Strategy {
 
     /// The fixed assignment this strategy induces (Ours requires running
     /// the optimizer; use [`evaluate_strategy`] instead for that).
-    pub fn assignment(self, jobs: &[Job]) -> Assignment {
+    /// Fixed-class strategies cycle over the class's replicas, which
+    /// degenerates to the single machine in the paper topology.
+    pub fn assignment(self, jobs: &[Job], topo: &Topology) -> Assignment {
+        let fixed = |class: MachineId| -> Assignment {
+            (0..jobs.len()).map(|i| topo.spread(class, i)).collect()
+        };
         match self {
             Strategy::Ours => {
-                schedule_jobs(jobs, &SchedulerParams::default()).assignment
+                schedule_jobs(jobs, topo, &SchedulerParams::default())
+                    .assignment
             }
             Strategy::PerJobOptimal => {
-                jobs.iter().map(|j| j.optimal_machine()).collect()
+                // per-class counters keep the spread dense per class
+                let mut placed = [0usize; 3];
+                jobs.iter()
+                    .map(|j| {
+                        let class = j.optimal_machine();
+                        let k = match class {
+                            MachineId::Cloud => &mut placed[0],
+                            MachineId::Edge => &mut placed[1],
+                            MachineId::Device => &mut placed[2],
+                        };
+                        let m = topo.spread(class, *k);
+                        *k += 1;
+                        m
+                    })
+                    .collect()
             }
-            Strategy::AllCloud => vec![MachineId::Cloud; jobs.len()],
-            Strategy::AllEdge => vec![MachineId::Edge; jobs.len()],
-            Strategy::AllDevice => vec![MachineId::Device; jobs.len()],
+            Strategy::AllCloud => fixed(MachineId::Cloud),
+            Strategy::AllEdge => fixed(MachineId::Edge),
+            Strategy::AllDevice => fixed(MachineId::Device),
         }
     }
 }
@@ -66,10 +87,16 @@ pub struct StrategyResult {
 }
 
 /// Evaluate a strategy on a job set with the default scheduler parameters.
-pub fn evaluate_strategy(jobs: &[Job], strategy: Strategy) -> StrategyResult {
+pub fn evaluate_strategy(
+    jobs: &[Job],
+    topo: &Topology,
+    strategy: Strategy,
+) -> StrategyResult {
     let schedule = match strategy {
-        Strategy::Ours => schedule_jobs(jobs, &SchedulerParams::default()),
-        s => simulate(jobs, &s.assignment(jobs)),
+        Strategy::Ours => {
+            schedule_jobs(jobs, topo, &SchedulerParams::default())
+        }
+        s => simulate(jobs, topo, &s.assignment(jobs, topo)),
     };
     StrategyResult { strategy, schedule }
 }
@@ -85,9 +112,10 @@ mod tests {
     #[test]
     fn table_vii_shape() {
         let jobs = paper_jobs();
+        let topo = Topology::paper();
         let rows: Vec<_> = Strategy::ALL
             .iter()
-            .map(|&s| evaluate_strategy(&jobs, s))
+            .map(|&s| evaluate_strategy(&jobs, &topo, s))
             .collect();
         let ours = &rows[0];
         for other in &rows[1..] {
@@ -113,8 +141,13 @@ mod tests {
         // Figure 8's point: independently-optimal placement piles jobs on
         // the same machine and queues them.
         let jobs = paper_jobs();
-        let r = evaluate_strategy(&jobs, Strategy::PerJobOptimal);
-        let waits: u64 = r.schedule.trace.entries.iter().map(|e| e.wait()).sum();
+        let r = evaluate_strategy(
+            &jobs,
+            &Topology::paper(),
+            Strategy::PerJobOptimal,
+        );
+        let waits: u64 =
+            r.schedule.trace.entries.iter().map(|e| e.wait()).sum();
         assert!(waits > 0, "expected queueing under per-job-optimal");
     }
 
@@ -122,12 +155,14 @@ mod tests {
     fn ours_improvement_factor_in_paper_range() {
         // paper: ours is 33–63% lower than the alternatives
         let jobs = paper_jobs();
-        let ours = evaluate_strategy(&jobs, Strategy::Ours)
+        let topo = Topology::paper();
+        let ours = evaluate_strategy(&jobs, &topo, Strategy::Ours)
             .schedule
             .unweighted_sum() as f64;
         for s in [Strategy::AllCloud, Strategy::AllEdge, Strategy::AllDevice] {
-            let base =
-                evaluate_strategy(&jobs, s).schedule.unweighted_sum() as f64;
+            let base = evaluate_strategy(&jobs, &topo, s)
+                .schedule
+                .unweighted_sum() as f64;
             let reduction = 1.0 - ours / base;
             assert!(
                 reduction > 0.15,
@@ -138,8 +173,30 @@ mod tests {
     }
 
     #[test]
+    fn fixed_class_spreads_over_replicas() {
+        let jobs = paper_jobs();
+        let topo = Topology::new(1, 2);
+        let a = Strategy::AllEdge.assignment(&jobs, &topo);
+        assert!(a.iter().all(|m| m.class == MachineId::Edge));
+        let used: std::collections::HashSet<usize> =
+            a.iter().map(|m| m.replica).collect();
+        assert_eq!(used.len(), 2, "both edge replicas should be used");
+        // ...and spreading across replicas strictly helps the baseline
+        let narrow = evaluate_strategy(
+            &jobs,
+            &Topology::paper(),
+            Strategy::AllEdge,
+        );
+        let wide = evaluate_strategy(&jobs, &topo, Strategy::AllEdge);
+        assert!(
+            wide.schedule.weighted_sum < narrow.schedule.weighted_sum
+        );
+    }
+
+    #[test]
     fn labels_unique() {
-        let mut labels: Vec<_> = Strategy::ALL.iter().map(|s| s.label()).collect();
+        let mut labels: Vec<_> =
+            Strategy::ALL.iter().map(|s| s.label()).collect();
         labels.sort_unstable();
         labels.dedup();
         assert_eq!(labels.len(), 5);

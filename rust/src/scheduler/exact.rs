@@ -3,35 +3,38 @@
 //! The paper motivates the heuristic by noting the unrelated-parallel-
 //! machine problem "is very complicated" (§VI) but never quantifies how
 //! far Algorithm 2 lands from optimal.  This solver searches the full
-//! 3^n assignment space with eq.-6-style lower-bound pruning, making the
-//! optimality gap measurable for traces up to ~12 jobs (the paper's
-//! evaluation is 10).
+//! `(clouds + edges + 1)^n` assignment space with eq.-6-style lower-bound
+//! pruning, making the optimality gap measurable for traces up to ~12 jobs
+//! on the paper topology (the paper's evaluation is 10).
 //!
 //! Assignments are evaluated by the same [`simulate`] semantics as the
 //! heuristic, so the comparison is apples-to-apples.
 
-use super::{simulate, Job, MachineId, Schedule};
+use super::{simulate, Job, MachineId, MachineRef, Schedule, Topology};
 use crate::simulation::Tick;
 
 /// Exhaustive branch-and-bound over job→machine assignments, minimizing
 /// the priority-weighted whole response time.  Exponential in `jobs.len()`
 /// — intended for gap measurement on small traces; panics over 20 jobs to
 /// catch accidental misuse.
-pub fn schedule_exact(jobs: &[Job]) -> Schedule {
+pub fn schedule_exact(jobs: &[Job], topo: &Topology) -> Schedule {
     assert!(
         jobs.len() <= 20,
         "exact solver is exponential; {} jobs is too many",
         jobs.len()
     );
     if jobs.is_empty() {
-        return simulate(jobs, &Vec::new());
+        return simulate(jobs, topo, &[]);
     }
 
-    // Branch order: jobs by release (stable w.r.t. the simulator's FCFS).
+    // Branch order: jobs by release (stable w.r.t. the simulator's FCFS);
+    // machines in canonical order (cloud replicas, edge replicas, device).
+    let machines = topo.machines();
     let mut best: Option<Schedule> = None;
-    let mut assignment = vec![MachineId::Device; jobs.len()];
+    let mut assignment = vec![MachineRef::DEVICE; jobs.len()];
 
-    // Per-job uncontended weighted cost — the suffix lower bound.
+    // Per-job uncontended weighted cost — the suffix lower bound
+    // (class-level, so replica count doesn't change it).
     let suffix_lb: Vec<Tick> = {
         let per_job: Vec<Tick> = jobs
             .iter()
@@ -55,13 +58,15 @@ pub fn schedule_exact(jobs: &[Job]) -> Schedule {
 
     fn dfs(
         jobs: &[Job],
+        topo: &Topology,
+        machines: &[MachineRef],
         k: usize,
-        assignment: &mut Vec<MachineId>,
+        assignment: &mut Vec<MachineRef>,
         suffix_lb: &[Tick],
         best: &mut Option<Schedule>,
     ) {
         if k == jobs.len() {
-            let s = simulate(jobs, assignment);
+            let s = simulate(jobs, topo, assignment);
             if best
                 .as_ref()
                 .map_or(true, |b| s.weighted_sum < b.weighted_sum)
@@ -73,18 +78,26 @@ pub fn schedule_exact(jobs: &[Job]) -> Schedule {
         // prune: cost of the first k jobs alone (simulated with the
         // partial assignment) + uncontended bound for the rest
         if let Some(b) = best {
-            let partial = simulate(&jobs[..k], &assignment[..k].to_vec());
+            let partial = simulate(&jobs[..k], topo, &assignment[..k]);
             if partial.weighted_sum + suffix_lb[k] >= b.weighted_sum {
                 return;
             }
         }
-        for m in MachineId::ALL {
+        for &m in machines {
             assignment[k] = m;
-            dfs(jobs, k + 1, assignment, suffix_lb, best);
+            dfs(jobs, topo, machines, k + 1, assignment, suffix_lb, best);
         }
     }
 
-    dfs(jobs, 0, &mut assignment, &suffix_lb, &mut best);
+    dfs(
+        jobs,
+        topo,
+        &machines,
+        0,
+        &mut assignment,
+        &suffix_lb,
+        &mut best,
+    );
     best.expect("nonempty search space")
 }
 
@@ -97,8 +110,10 @@ mod tests {
     #[test]
     fn exact_on_paper_trace() {
         let jobs = paper_jobs();
-        let exact = schedule_exact(&jobs);
-        let ours = schedule_jobs(&jobs, &SchedulerParams::default());
+        let topo = Topology::paper();
+        let exact = schedule_exact(&jobs, &topo);
+        let ours =
+            schedule_jobs(&jobs, &topo, &SchedulerParams::default());
         // the heuristic can never beat the optimum
         assert!(ours.weighted_sum >= exact.weighted_sum);
         // ...and on the paper's trace it should be close (< 10% gap)
@@ -126,8 +141,15 @@ mod tests {
                     }
                 })
                 .collect();
-            let exact = schedule_exact(&jobs);
-            let ours = schedule_jobs(&jobs, &SchedulerParams::default());
+            // alternate paper and a 1-cloud + 2-edge topology
+            let topo = if seed % 2 == 0 {
+                Topology::paper()
+            } else {
+                Topology::new(1, 2)
+            };
+            let exact = schedule_exact(&jobs, &topo);
+            let ours =
+                schedule_jobs(&jobs, &topo, &SchedulerParams::default());
             assert!(
                 ours.weighted_sum >= exact.weighted_sum,
                 "seed {seed}: heuristic {} < exact {}?!",
@@ -138,15 +160,24 @@ mod tests {
     }
 
     #[test]
+    fn exact_with_extra_edge_never_worse() {
+        // the optimum is provably monotone in the machine set
+        let jobs: Vec<Job> = paper_jobs().into_iter().take(7).collect();
+        let narrow = schedule_exact(&jobs, &Topology::paper());
+        let wide = schedule_exact(&jobs, &Topology::new(1, 2));
+        assert!(wide.weighted_sum <= narrow.weighted_sum);
+    }
+
+    #[test]
     fn exact_single_job_picks_optimal_machine() {
         let jobs = vec![paper_jobs()[0]];
-        let s = schedule_exact(&jobs);
-        assert_eq!(s.assignment[0], jobs[0].optimal_machine());
+        let s = schedule_exact(&jobs, &Topology::paper());
+        assert_eq!(s.assignment[0].class, jobs[0].optimal_machine());
     }
 
     #[test]
     fn empty_jobs() {
-        let s = schedule_exact(&[]);
+        let s = schedule_exact(&[], &Topology::paper());
         assert_eq!(s.weighted_sum, 0);
     }
 
@@ -154,6 +185,6 @@ mod tests {
     #[should_panic(expected = "too many")]
     fn refuses_large_instances() {
         let jobs = vec![paper_jobs()[0]; 21];
-        schedule_exact(&jobs);
+        schedule_exact(&jobs, &Topology::paper());
     }
 }

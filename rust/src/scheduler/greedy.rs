@@ -1,52 +1,53 @@
-//! Greedy initial feasible solution (Algorithm 2, first stage).
+//! Greedy initial feasible solution (Algorithm 2, first stage), over an
+//! arbitrary [`Topology`].
 //!
 //! "We find the optimal deployment machine for each job to have the
 //! minimum completion time by time sequence" — jobs are considered in
 //! release order (priority-first within a tie, per C5), and each is
 //! committed to the machine on which it would finish earliest given the
-//! commitments made so far.
+//! commitments made so far.  Ties go to the earliest machine in canonical
+//! order (cloud replicas, then edge replicas, then the device — the
+//! paper's machine order, preserved from the pre-topology scheduler).
 
-use super::{Assignment, Job, MachineId};
+use super::{Assignment, Job, Topology};
 use crate::simulation::MachineTimeline;
 
 /// Build the greedy earliest-completion assignment.
-pub fn greedy_assignment(jobs: &[Job]) -> Assignment {
+pub fn greedy_assignment(jobs: &[Job], topo: &Topology) -> Assignment {
     let mut order: Vec<usize> = (0..jobs.len()).collect();
     // time sequence; C5: higher priority first within the same release tick
-    order.sort_by_key(|&i| (jobs[i].release, std::cmp::Reverse(jobs[i].weight), i));
+    order.sort_by_key(|&i| {
+        (jobs[i].release, std::cmp::Reverse(jobs[i].weight), i)
+    });
 
-    let mut cloud = MachineTimeline::new();
-    let mut edge = MachineTimeline::new();
-    let mut assignment = vec![MachineId::Device; jobs.len()];
+    let machines = topo.machines();
+    let mut timelines =
+        vec![MachineTimeline::new(); topo.shared_count()];
+    let mut assignment: Assignment =
+        vec![crate::topology::MachineRef::DEVICE; jobs.len()];
 
     for &i in &order {
         let j = &jobs[i];
-        // candidate completion on each machine
-        let avail_c = j.release + j.trans_cloud;
-        let avail_e = j.release + j.trans_edge;
-        let end_cloud = cloud.peek(avail_c, j.proc_cloud).1;
-        let end_edge = edge.peek(avail_e, j.proc_edge).1;
-        let end_device = j.release + j.proc_device;
-
-        // argmin completion; ties cloud-first (the paper's machine order)
-        let (mut best_m, mut best_end) = (MachineId::Cloud, end_cloud);
-        if end_edge < best_end {
-            best_m = MachineId::Edge;
-            best_end = end_edge;
-        }
-        if end_device < best_end {
-            best_m = MachineId::Device;
-        }
-
-        assignment[i] = best_m;
-        match best_m {
-            MachineId::Cloud => {
-                cloud.schedule(avail_c, j.proc_cloud);
+        // candidate completion on each machine; first minimum wins
+        // (canonical order = cloud-first, the paper's tie-break)
+        let mut best = None;
+        for &m in &machines {
+            let avail = j.release + j.transmission(m.class);
+            let end = match topo.shared_index(m) {
+                Some(s) => timelines[s].peek(avail, j.processing(m.class)).1,
+                None => avail + j.processing(m.class),
+            };
+            if best.map_or(true, |(_, b)| end < b) {
+                best = Some((m, end));
             }
-            MachineId::Edge => {
-                edge.schedule(avail_e, j.proc_edge);
-            }
-            MachineId::Device => {}
+        }
+        let (m, _) = best.expect("topology has at least the device");
+        assignment[i] = m;
+        if let Some(s) = topo.shared_index(m) {
+            timelines[s].schedule(
+                j.release + j.transmission(m.class),
+                j.processing(m.class),
+            );
         }
     }
     assignment
@@ -55,21 +56,28 @@ pub fn greedy_assignment(jobs: &[Job]) -> Assignment {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::scheduler::{paper_jobs, simulate, Strategy};
+    use crate::scheduler::{paper_jobs, simulate, MachineRef, Strategy};
 
     #[test]
     fn greedy_covers_all_jobs() {
         let jobs = paper_jobs();
-        let a = greedy_assignment(&jobs);
+        let topo = Topology::paper();
+        let a = greedy_assignment(&jobs, &topo);
         assert_eq!(a.len(), jobs.len());
+        assert!(a.iter().all(|&m| topo.contains(m)));
     }
 
     #[test]
     fn greedy_beats_every_fixed_layer_baseline() {
         let jobs = paper_jobs();
-        let greedy = simulate(&jobs, &greedy_assignment(&jobs));
-        for strat in [Strategy::AllCloud, Strategy::AllEdge, Strategy::AllDevice] {
-            let base = simulate(&jobs, &strat.assignment(&jobs));
+        let topo = Topology::paper();
+        let greedy =
+            simulate(&jobs, &topo, &greedy_assignment(&jobs, &topo));
+        for strat in
+            [Strategy::AllCloud, Strategy::AllEdge, Strategy::AllDevice]
+        {
+            let base =
+                simulate(&jobs, &topo, &strat.assignment(&jobs, &topo));
             assert!(
                 greedy.weighted_sum <= base.weighted_sum,
                 "greedy {} vs {strat:?} {}",
@@ -83,15 +91,38 @@ mod tests {
     fn greedy_spreads_load() {
         // with contention on the edge, some jobs must go elsewhere
         let jobs = paper_jobs();
-        let a = greedy_assignment(&jobs);
+        let a = greedy_assignment(&jobs, &Topology::paper());
         let distinct: std::collections::HashSet<_> = a.iter().collect();
         assert!(distinct.len() >= 2, "greedy used only {distinct:?}");
     }
 
     #[test]
+    fn greedy_uses_extra_edge_replicas_under_contention() {
+        // duplicate the paper trace so one edge server saturates; the
+        // greedy stage must route work onto the second replica
+        let mut jobs = paper_jobs();
+        let dup: Vec<_> = jobs.clone();
+        jobs.extend(dup);
+        let topo = Topology::new(1, 2);
+        let a = greedy_assignment(&jobs, &topo);
+        let edge_replicas: std::collections::HashSet<usize> = a
+            .iter()
+            .filter(|m| m.class == crate::topology::MachineId::Edge)
+            .map(|m| m.replica)
+            .collect();
+        assert!(
+            edge_replicas.len() > 1,
+            "expected both edge replicas used, got {edge_replicas:?}"
+        );
+    }
+
+    #[test]
     fn single_job_gets_its_optimal_machine() {
         let jobs = vec![paper_jobs()[0]];
-        let a = greedy_assignment(&jobs);
-        assert_eq!(a[0], jobs[0].optimal_machine());
+        let a = greedy_assignment(&jobs, &Topology::paper());
+        assert_eq!(
+            a[0],
+            MachineRef { class: jobs[0].optimal_machine(), replica: 0 }
+        );
     }
 }

@@ -1,10 +1,13 @@
 //! Multi-job workload allocation and scheduling (paper §V–VI).
 //!
-//! The ICU room is an unrelated-parallel-machine system: one shared cloud
-//! server, one shared edge server, and a private end device per patient.
-//! Jobs arrive in a time sequence with priorities; the objective is the
-//! priority-weighted whole response time `Σ wᵢ(Eᵢ − Rᵢ)` (eq. 5) under
-//! constraints C1–C5.
+//! The ICU room is an unrelated-parallel-machine system described by a
+//! [`Topology`]: `clouds` shared cloud servers, `edges` shared edge
+//! servers, and a private end device per patient.  Jobs arrive in a time
+//! sequence with priorities; the objective is the priority-weighted whole
+//! response time `Σ wᵢ(Eᵢ − Rᵢ)` (eq. 5) under constraints C1–C5.
+//! [`Topology::paper`] is the paper's degenerate 1-cloud + 1-edge setup
+//! (assumption (d)) and reproduces its Table VII numbers bit-for-bit;
+//! every core below accepts arbitrary replica counts.
 //!
 //! * [`simulate`] — list-scheduling simulator for a fixed assignment
 //!   (transmission overlaps other jobs' execution per C4; shared machines
@@ -12,84 +15,38 @@
 //! * [`greedy_assignment`] — the initial feasible solution: jobs in release
 //!   order, each on its earliest-completion machine.
 //! * [`schedule_jobs`] — Algorithm 2: greedy + tabu neighborhood search.
+//! * [`schedule_exact`] / [`schedule_online`] — branch-and-bound optimum
+//!   and the non-clairvoyant counterpart, for gap measurement.
 //! * [`Strategy`] — the four baseline strategies of Table VII.
 
 mod baselines;
 mod exact;
 mod greedy;
 mod jobs;
-mod multi_edge;
 mod online;
 mod simulate;
 mod tabu;
 
 pub use baselines::{evaluate_strategy, Strategy, StrategyResult};
 pub use exact::schedule_exact;
-pub use multi_edge::{
-    greedy_pool, schedule_pool, simulate_pool, GenMachine, GenSchedule,
-    MachinePool,
-};
-pub use online::schedule_online;
 pub use greedy::greedy_assignment;
 pub use jobs::{jobs_from_workloads, paper_jobs, Job};
+pub use online::schedule_online;
 pub use simulate::{simulate, weighted_cost, Assignment, SimScratch};
-pub use tabu::{schedule_jobs, SchedulerParams};
+pub use tabu::{improve, schedule_jobs, SchedulerParams};
 
+pub use crate::topology::{MachineId, MachineRef, Topology};
 
-use crate::device::Layer;
 use crate::simulation::{ScheduleTrace, Tick};
 
-/// A machine in the unrelated-parallel-machine system.
-///
-/// `Device` is the *releasing patient's own* bedside device — each job has
-/// exactly one, so devices never queue across jobs (paper §VI: "the end
-/// device is not the shared machine").
-#[derive(
-    Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord,
-)]
-pub enum MachineId {
-    Cloud,
-    Edge,
-    Device,
-}
-
-impl MachineId {
-    pub const ALL: [MachineId; 3] =
-        [MachineId::Cloud, MachineId::Edge, MachineId::Device];
-
-    /// The corresponding hierarchy layer.
-    pub fn layer(self) -> Layer {
-        match self {
-            MachineId::Cloud => Layer::Cloud,
-            MachineId::Edge => Layer::Edge,
-            MachineId::Device => Layer::Device,
-        }
-    }
-
-    pub fn from_layer(layer: Layer) -> Self {
-        match layer {
-            Layer::Cloud => MachineId::Cloud,
-            Layer::Edge => MachineId::Edge,
-            Layer::Device => MachineId::Device,
-        }
-    }
-}
-
-impl std::fmt::Display for MachineId {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str(match self {
-            MachineId::Cloud => "Cloud",
-            MachineId::Edge => "Edge",
-            MachineId::Device => "Device",
-        })
-    }
-}
-
-/// A finished schedule: the assignment, its trace, and objective values.
+/// A finished schedule: the topology it ran on, the assignment, its trace,
+/// and objective values.
 #[derive(Debug, Clone)]
 pub struct Schedule {
+    /// The machine set the schedule was computed against.
+    pub topology: Topology,
     /// Per-job machine assignment.
-    pub assignment: Vec<MachineId>,
+    pub assignment: Vec<MachineRef>,
     /// Per-job placement (start/end/machine).
     pub trace: ScheduleTrace,
     /// Priority-weighted whole response time (the optimizer objective).
@@ -109,15 +66,45 @@ impl Schedule {
 
     /// How many jobs run on each machine class (Figure 7 narration).
     pub fn placement_counts(&self) -> (usize, usize, usize) {
-        let c = self.assignment.iter().filter(|m| **m == MachineId::Cloud).count();
-        let e = self.assignment.iter().filter(|m| **m == MachineId::Edge).count();
-        let d = self.assignment.iter().filter(|m| **m == MachineId::Device).count();
-        (c, e, d)
+        let count = |class: MachineId| {
+            self.assignment.iter().filter(|m| m.class == class).count()
+        };
+        (
+            count(MachineId::Cloud),
+            count(MachineId::Edge),
+            count(MachineId::Device),
+        )
+    }
+
+    /// Busy time and utilization of every shared replica over the
+    /// makespan (replica-scaling reports; empty schedules yield zeros).
+    pub fn replica_utilization(&self) -> Vec<(MachineRef, f64)> {
+        let horizon = self.last_completion();
+        let mut busy: Vec<Tick> = vec![0; self.topology.shared_count()];
+        for e in &self.trace.entries {
+            if let Some(s) = self.topology.shared_index(e.machine) {
+                busy[s] += e.end - e.start;
+            }
+        }
+        self.topology
+            .shared_machines()
+            .into_iter()
+            .zip(busy)
+            .map(|(m, b)| {
+                let u = if horizon == 0 {
+                    0.0
+                } else {
+                    b as f64 / horizon as f64
+                };
+                (m, u)
+            })
+            .collect()
     }
 }
 
 /// Lower bound on the weighted whole response time (eq. 6): every job at
-/// its machine-minimal execution time, ignoring contention.
+/// its machine-minimal execution time, ignoring contention.  Replicas
+/// share their class's costs, so the bound is topology-independent.
 pub fn lower_bound(jobs: &[Job]) -> Tick {
     jobs.iter()
         .map(|j| {
@@ -136,19 +123,40 @@ mod tests {
     use super::*;
 
     #[test]
-    fn machine_layer_roundtrip() {
-        for m in MachineId::ALL {
-            assert_eq!(MachineId::from_layer(m.layer()), m);
-        }
-    }
-
-    #[test]
     fn lower_bound_paper_jobs() {
         let jobs = paper_jobs();
         let lb = lower_bound(&jobs);
         // every schedule's weighted sum must dominate the bound
-        let sched = schedule_jobs(&jobs, &SchedulerParams::default());
+        let sched = schedule_jobs(
+            &jobs,
+            &Topology::paper(),
+            &SchedulerParams::default(),
+        );
         assert!(sched.weighted_sum >= lb, "{} < {lb}", sched.weighted_sum);
         assert!(lb > 0);
+    }
+
+    #[test]
+    fn placement_counts_by_class() {
+        let jobs = paper_jobs();
+        let topo = Topology::new(1, 2);
+        let assignment: Vec<MachineRef> = (0..jobs.len())
+            .map(|i| topo.spread(MachineId::Edge, i))
+            .collect();
+        let s = simulate(&jobs, &topo, &assignment);
+        assert_eq!(s.placement_counts(), (0, jobs.len(), 0));
+    }
+
+    #[test]
+    fn replica_utilization_covers_shared_machines() {
+        let jobs = paper_jobs();
+        let topo = Topology::new(1, 2);
+        let s = schedule_jobs(&jobs, &topo, &SchedulerParams::default());
+        let util = s.replica_utilization();
+        assert_eq!(util.len(), 3); // CC0, ES0, ES1
+        for (m, u) in util {
+            assert!(m.is_shared());
+            assert!((0.0..=1.0).contains(&u), "{m}: {u}");
+        }
     }
 }

@@ -7,17 +7,19 @@
 //! time to the machine minimizing its *own* weighted completion given the
 //! commitments so far — the natural online counterpart of the greedy
 //! stage — and serves as the policy bridge between the offline analysis
-//! (§V–VI) and the serving coordinator.
+//! (§V–VI) and the serving coordinator.  With multiple replicas it is
+//! exactly the "least-backlogged replica of the best class" rule the
+//! serving router applies.
 //!
 //! The competitive gap against offline Algorithm 2 and the exact optimum
 //! is measured in `rust/benches/sched_multi.rs` and the tests below.
 
-use super::{simulate, Assignment, Job, MachineId, Schedule};
+use super::{simulate, Assignment, Job, Schedule, Topology};
 use crate::simulation::MachineTimeline;
 
 /// Assign jobs in release order with no lookahead; returns the resulting
 /// schedule (simulated with the same C1–C5 semantics).
-pub fn schedule_online(jobs: &[Job]) -> Schedule {
+pub fn schedule_online(jobs: &[Job], topo: &Topology) -> Schedule {
     // release order; ties: higher priority first (C5), then index —
     // exactly what a dispatcher sees on the wire
     let mut order: Vec<usize> = (0..jobs.len()).collect();
@@ -25,39 +27,39 @@ pub fn schedule_online(jobs: &[Job]) -> Schedule {
         (jobs[i].release, std::cmp::Reverse(jobs[i].weight), i)
     });
 
-    let mut cloud = MachineTimeline::new();
-    let mut edge = MachineTimeline::new();
-    let mut assignment: Assignment = vec![MachineId::Device; jobs.len()];
+    let machines = topo.machines();
+    let mut timelines =
+        vec![MachineTimeline::new(); topo.shared_count()];
+    let mut assignment: Assignment =
+        vec![crate::topology::MachineRef::DEVICE; jobs.len()];
 
     for &i in &order {
         let j = &jobs[i];
-        // weighted response if committed now
-        let cand = |m: MachineId, tl: Option<&MachineTimeline>| {
-            let avail = j.release + j.transmission(m);
-            let end = match tl {
-                Some(tl) => tl.peek(avail, j.processing(m)).1,
-                None => avail + j.processing(m),
-            };
-            (end - j.release) * j.weight as u64
-        };
-        let costs = [
-            (MachineId::Cloud, cand(MachineId::Cloud, Some(&cloud))),
-            (MachineId::Edge, cand(MachineId::Edge, Some(&edge))),
-            (MachineId::Device, cand(MachineId::Device, None)),
-        ];
-        let (m, _) = costs.iter().min_by_key(|(_, c)| *c).copied().unwrap();
+        // weighted response if committed now; first minimum wins
+        // (canonical order keeps the paper's cloud-first tie-break)
+        let (m, _) = machines
+            .iter()
+            .map(|&m| {
+                let avail = j.release + j.transmission(m.class);
+                let end = match topo.shared_index(m) {
+                    Some(s) => {
+                        timelines[s].peek(avail, j.processing(m.class)).1
+                    }
+                    None => avail + j.processing(m.class),
+                };
+                (m, (end - j.release) * j.weight as u64)
+            })
+            .min_by_key(|(_, c)| *c)
+            .expect("topology has at least the device");
         assignment[i] = m;
-        match m {
-            MachineId::Cloud => {
-                cloud.schedule(j.release + j.trans_cloud, j.proc_cloud);
-            }
-            MachineId::Edge => {
-                edge.schedule(j.release + j.trans_edge, j.proc_edge);
-            }
-            MachineId::Device => {}
+        if let Some(s) = topo.shared_index(m) {
+            timelines[s].schedule(
+                j.release + j.transmission(m.class),
+                j.processing(m.class),
+            );
         }
     }
-    simulate(jobs, &assignment)
+    simulate(jobs, topo, &assignment)
 }
 
 #[cfg(test)]
@@ -65,14 +67,17 @@ mod tests {
     use super::*;
     use crate::data::Rng;
     use crate::scheduler::{
-        paper_jobs, schedule_exact, schedule_jobs, SchedulerParams, Strategy,
+        paper_jobs, schedule_exact, schedule_jobs, SchedulerParams,
+        Strategy,
     };
 
     #[test]
     fn online_on_paper_trace() {
         let jobs = paper_jobs();
-        let online = schedule_online(&jobs);
-        let offline = schedule_jobs(&jobs, &SchedulerParams::default());
+        let topo = Topology::paper();
+        let online = schedule_online(&jobs, &topo);
+        let offline =
+            schedule_jobs(&jobs, &topo, &SchedulerParams::default());
         // online can't beat offline, but must stay within 2× on the
         // paper's trace (it's actually much closer)
         assert!(online.weighted_sum >= offline.weighted_sum);
@@ -87,9 +92,11 @@ mod tests {
     #[test]
     fn online_beats_fixed_layers() {
         let jobs = paper_jobs();
-        let online = schedule_online(&jobs);
-        for s in [Strategy::AllCloud, Strategy::AllEdge, Strategy::AllDevice] {
-            let base = simulate(&jobs, &s.assignment(&jobs));
+        let topo = Topology::paper();
+        let online = schedule_online(&jobs, &topo);
+        for s in [Strategy::AllCloud, Strategy::AllEdge, Strategy::AllDevice]
+        {
+            let base = simulate(&jobs, &topo, &s.assignment(&jobs, &topo));
             assert!(
                 online.weighted_sum <= base.weighted_sum,
                 "{s:?}: online {} vs {}",
@@ -120,8 +127,9 @@ mod tests {
                     }
                 })
                 .collect();
-            let online = schedule_online(&jobs);
-            let exact = schedule_exact(&jobs);
+            let topo = Topology::paper();
+            let online = schedule_online(&jobs, &topo);
+            let exact = schedule_exact(&jobs, &topo);
             let ratio =
                 online.weighted_sum as f64 / exact.weighted_sum.max(1) as f64;
             worst = worst.max(ratio);
@@ -133,8 +141,35 @@ mod tests {
     #[test]
     fn online_single_job_is_optimal() {
         let jobs = vec![paper_jobs()[3]];
-        let online = schedule_online(&jobs);
-        let exact = schedule_exact(&jobs);
+        let topo = Topology::paper();
+        let online = schedule_online(&jobs, &topo);
+        let exact = schedule_exact(&jobs, &topo);
         assert_eq!(online.weighted_sum, exact.weighted_sum);
+    }
+
+    #[test]
+    fn online_spills_to_second_edge_replica() {
+        // a released burst of edge-optimal jobs must fan out across
+        // replicas instead of queueing on Edge:0
+        let burst: Vec<Job> = (0..4)
+            .map(|_| Job {
+                release: 1,
+                weight: 1,
+                proc_cloud: 50,
+                trans_cloud: 50,
+                proc_edge: 10,
+                trans_edge: 1,
+                proc_device: 100,
+            })
+            .collect();
+        let topo = Topology::new(1, 2);
+        let s = schedule_online(&burst, &topo);
+        let replicas: std::collections::HashSet<usize> = s
+            .assignment
+            .iter()
+            .filter(|m| m.class == crate::topology::MachineId::Edge)
+            .map(|m| m.replica)
+            .collect();
+        assert!(replicas.len() > 1, "burst stayed on {replicas:?}");
     }
 }

@@ -1,38 +1,43 @@
-//! List-scheduling simulator for a fixed job→machine assignment.
+//! List-scheduling simulator for a fixed job→machine assignment, over an
+//! arbitrary [`Topology`].
 //!
 //! Semantics (constraints C1–C5, validated against the paper's Table VII
 //! baselines in tests):
 //!
 //! * data transmission starts at release and overlaps other jobs'
 //!   execution on the target machine (C4) — a job becomes *available* at
-//!   `release + transmission`;
-//! * shared machines (cloud, edge) execute one job at a time without
+//!   `release + transmission`; transmission cost is per *class*
+//!   (replicas of a class share the class timing model);
+//! * every shared replica (cloud, edge) executes one job at a time without
 //!   preemption (C1, C2), serving in FCFS order of availability (ties:
 //!   earlier release, then lower index);
 //! * each job's own end device is private — device jobs start the moment
 //!   they are released.
 
-use super::{Job, MachineId, Schedule};
+use super::{Job, MachineRef, Schedule, Topology};
 use crate::simulation::{MachineTimeline, ScheduleTrace, TraceEntry};
 
 /// A per-job machine assignment.
-pub type Assignment = Vec<MachineId>;
+pub type Assignment = Vec<MachineRef>;
 
 /// Reusable scratch for [`weighted_cost`] — lets the tabu search evaluate
 /// thousands of candidate moves without allocating (§Perf: this is the
-/// optimizer's inner loop).
+/// optimizer's inner loop).  Holds the dispatch order and one free-time
+/// slot per shared replica.
 #[derive(Debug, Default, Clone)]
 pub struct SimScratch {
     order: Vec<usize>,
+    free: Vec<u64>,
 }
 
 /// Compute only the priority-weighted whole response time of an
 /// assignment — the same semantics as [`simulate`], minus trace
-/// construction and allocation.  `simulate(jobs, a).weighted_sum ==
-/// weighted_cost(jobs, a, ..)` is asserted by tests.
+/// construction and allocation.  `simulate(jobs, topo, a).weighted_sum ==
+/// weighted_cost(jobs, topo, a, ..)` is asserted by tests.
 pub fn weighted_cost(
     jobs: &[Job],
-    assignment: &[MachineId],
+    topo: &Topology,
+    assignment: &[MachineRef],
     scratch: &mut SimScratch,
 ) -> u64 {
     debug_assert_eq!(jobs.len(), assignment.len());
@@ -43,31 +48,32 @@ pub fn weighted_cost(
     // win over a fresh sort at these n — see EXPERIMENTS.md §Perf)
     order.sort_unstable_by_key(|&i| {
         (
-            jobs[i].release + jobs[i].transmission(assignment[i]),
+            jobs[i].release + jobs[i].transmission(assignment[i].class),
             jobs[i].release,
             i,
         )
     });
 
-    let (mut cloud_free, mut edge_free) = (0u64, 0u64);
+    let free = &mut scratch.free;
+    free.clear();
+    free.resize(topo.shared_count(), 0);
     let mut sum = 0u64;
     for &i in order.iter() {
         let j = &jobs[i];
         let m = assignment[i];
-        let avail = j.release + j.transmission(m);
-        let p = j.processing(m);
-        let end = match m {
-            MachineId::Cloud => {
-                let start = avail.max(cloud_free);
-                cloud_free = start + p;
-                cloud_free
+        debug_assert!(
+            topo.contains(m),
+            "job {i} assigned to {m:?}, outside topology {topo:?}"
+        );
+        let avail = j.release + j.transmission(m.class);
+        let p = j.processing(m.class);
+        let end = match topo.shared_index(m) {
+            Some(s) => {
+                let start = avail.max(free[s]);
+                free[s] = start + p;
+                free[s]
             }
-            MachineId::Edge => {
-                let start = avail.max(edge_free);
-                edge_free = start + p;
-                edge_free
-            }
-            MachineId::Device => avail + p,
+            None => avail + p,
         };
         sum += j.weight as u64 * (end - j.release);
     }
@@ -79,34 +85,45 @@ pub fn weighted_cost(
 /// Simulate an assignment and return the finished [`Schedule`].
 ///
 /// # Panics
-/// Panics if `assignment.len() != jobs.len()` (programming error).
-pub fn simulate(jobs: &[Job], assignment: &Assignment) -> Schedule {
+/// Panics if `assignment.len() != jobs.len()` or an assigned replica is
+/// outside the topology (programming errors).
+pub fn simulate(
+    jobs: &[Job],
+    topo: &Topology,
+    assignment: &[MachineRef],
+) -> Schedule {
     assert_eq!(
         jobs.len(),
         assignment.len(),
         "assignment must cover every job"
     );
+    for (i, m) in assignment.iter().enumerate() {
+        assert!(
+            topo.contains(*m),
+            "job {i} assigned to {m:?}, outside topology {topo:?}"
+        );
+    }
 
     // availability time per job on its assigned machine
     let mut order: Vec<usize> = (0..jobs.len()).collect();
-    let avail =
-        |i: usize| jobs[i].release + jobs[i].transmission(assignment[i]);
+    let avail = |i: usize| {
+        jobs[i].release + jobs[i].transmission(assignment[i].class)
+    };
     // FCFS by availability; ties by release then index
     order.sort_by_key(|&i| (avail(i), jobs[i].release, i));
 
-    let mut cloud = MachineTimeline::new();
-    let mut edge = MachineTimeline::new();
+    let mut timelines =
+        vec![MachineTimeline::new(); topo.shared_count()];
     let mut entries = Vec::with_capacity(jobs.len());
 
     for &i in &order {
         let m = assignment[i];
         let a = avail(i);
-        let p = jobs[i].processing(m);
-        let (start, end) = match m {
-            MachineId::Cloud => cloud.schedule(a, p),
-            MachineId::Edge => edge.schedule(a, p),
+        let p = jobs[i].processing(m.class);
+        let (start, end) = match topo.shared_index(m) {
+            Some(s) => timelines[s].schedule(a, p),
             // private device: immediate start at availability (= release)
-            MachineId::Device => (a, a + p),
+            None => (a, a + p),
         };
         entries.push(TraceEntry {
             job: i,
@@ -121,14 +138,23 @@ pub fn simulate(jobs: &[Job], assignment: &Assignment) -> Schedule {
     let trace = ScheduleTrace { entries };
     let weights: Vec<u32> = jobs.iter().map(|j| j.weight).collect();
     let weighted_sum = trace.weighted_sum(&weights);
-    Schedule { assignment: assignment.clone(), trace, weighted_sum }
+    Schedule {
+        topology: *topo,
+        assignment: assignment.to_vec(),
+        trace,
+        weighted_sum,
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::scheduler::paper_jobs;
+    use crate::scheduler::{paper_jobs, MachineId};
     use crate::simulation::Tick;
+
+    fn all_on(m: MachineRef, n: usize) -> Assignment {
+        vec![m; n]
+    }
 
     /// All-on-one-shared-machine sanity: FCFS with overlap-able
     /// transmission reproduces the paper's Table VII numbers
@@ -136,7 +162,11 @@ mod tests {
     #[test]
     fn all_cloud_matches_paper_row() {
         let jobs = paper_jobs();
-        let sched = simulate(&jobs, &vec![MachineId::Cloud; 10]);
+        let sched = simulate(
+            &jobs,
+            &Topology::paper(),
+            &all_on(MachineRef::cloud(0), 10),
+        );
         // The paper's Table VII labels this 416/100 result "Edge Server".
         assert_eq!(sched.unweighted_sum(), 416);
         assert_eq!(sched.last_completion(), 100);
@@ -145,7 +175,11 @@ mod tests {
     #[test]
     fn all_edge_matches_paper_row() {
         let jobs = paper_jobs();
-        let sched = simulate(&jobs, &vec![MachineId::Edge; 10]);
+        let sched = simulate(
+            &jobs,
+            &Topology::paper(),
+            &all_on(MachineRef::edge(0), 10),
+        );
         // The paper's Table VII labels this result "Cloud Server" (291/74).
         assert_eq!(sched.unweighted_sum(), 291);
         // Our FCFS-by-availability order completes at 72; the paper prints
@@ -156,7 +190,11 @@ mod tests {
     #[test]
     fn all_device_matches_paper_row() {
         let jobs = paper_jobs();
-        let sched = simulate(&jobs, &vec![MachineId::Device; 10]);
+        let sched = simulate(
+            &jobs,
+            &Topology::paper(),
+            &all_on(MachineRef::DEVICE, 10),
+        );
         assert_eq!(sched.unweighted_sum(), 366);
         assert_eq!(sched.last_completion(), 94);
     }
@@ -164,7 +202,11 @@ mod tests {
     #[test]
     fn device_jobs_never_queue() {
         let jobs = paper_jobs();
-        let sched = simulate(&jobs, &vec![MachineId::Device; 10]);
+        let sched = simulate(
+            &jobs,
+            &Topology::paper(),
+            &all_on(MachineRef::DEVICE, 10),
+        );
         for e in &sched.trace.entries {
             assert_eq!(e.start, e.release);
             assert_eq!(e.wait(), 0);
@@ -174,8 +216,9 @@ mod tests {
     #[test]
     fn shared_machines_exclusive() {
         let jobs = paper_jobs();
-        for m in [MachineId::Cloud, MachineId::Edge] {
-            let sched = simulate(&jobs, &vec![m; 10]);
+        for m in [MachineRef::cloud(0), MachineRef::edge(0)] {
+            let sched =
+                simulate(&jobs, &Topology::paper(), &all_on(m, 10));
             let mut slots: Vec<(Tick, Tick)> = sched
                 .trace
                 .entries
@@ -192,12 +235,14 @@ mod tests {
     #[test]
     fn start_never_precedes_availability() {
         let jobs = paper_jobs();
+        let topo = Topology::paper();
+        let machines = topo.machines();
         let assignment: Assignment = jobs
             .iter()
             .enumerate()
-            .map(|(i, _)| MachineId::ALL[i % 3])
+            .map(|(i, _)| machines[i % machines.len()])
             .collect();
-        let sched = simulate(&jobs, &assignment);
+        let sched = simulate(&jobs, &topo, &assignment);
         for e in &sched.trace.entries {
             assert!(e.start >= e.available);
             assert!(e.available >= e.release);
@@ -211,19 +256,79 @@ mod tests {
         for seed in 0..100 {
             let mut rng = Rng::new(seed);
             let jobs = paper_jobs();
+            // alternate between the paper topology and a wider one
+            let topo = if seed % 2 == 0 {
+                Topology::paper()
+            } else {
+                Topology::new(2, 3)
+            };
+            let machines = topo.machines();
             let assignment: Assignment = (0..jobs.len())
-                .map(|_| MachineId::ALL[rng.below(3) as usize])
+                .map(|_| {
+                    machines[rng.below(machines.len() as u64) as usize]
+                })
                 .collect();
-            let full = simulate(&jobs, &assignment).weighted_sum;
-            let fast = weighted_cost(&jobs, &assignment, &mut scratch);
+            let full = simulate(&jobs, &topo, &assignment).weighted_sum;
+            let fast =
+                weighted_cost(&jobs, &topo, &assignment, &mut scratch);
             assert_eq!(full, fast, "seed {seed}");
         }
+    }
+
+    #[test]
+    fn replicas_share_class_costs() {
+        // all on Edge:0 vs all on Edge:1: identical by symmetry
+        let jobs = paper_jobs();
+        let topo = Topology::new(2, 2);
+        let a =
+            simulate(&jobs, &topo, &all_on(MachineRef::edge(0), 10));
+        let b =
+            simulate(&jobs, &topo, &all_on(MachineRef::edge(1), 10));
+        assert_eq!(a.weighted_sum, b.weighted_sum);
+        assert_eq!(a.unweighted_sum(), b.unweighted_sum());
+    }
+
+    #[test]
+    fn two_replicas_split_contention() {
+        // splitting all-edge across two replicas beats one replica
+        let jobs = paper_jobs();
+        let topo = Topology::new(1, 2);
+        let one =
+            simulate(&jobs, &topo, &all_on(MachineRef::edge(0), 10));
+        let split: Assignment = (0..jobs.len())
+            .map(|i| MachineRef::edge(i % 2))
+            .collect();
+        let two = simulate(&jobs, &topo, &split);
+        assert!(two.weighted_sum < one.weighted_sum);
     }
 
     #[test]
     #[should_panic(expected = "assignment must cover")]
     fn mismatched_assignment_panics() {
         let jobs = paper_jobs();
-        simulate(&jobs, &vec![MachineId::Cloud; 3]);
+        simulate(
+            &jobs,
+            &Topology::paper(),
+            &all_on(MachineRef::cloud(0), 3),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "outside topology")]
+    fn out_of_range_replica_panics() {
+        let jobs = paper_jobs();
+        simulate(
+            &jobs,
+            &Topology::paper(),
+            &all_on(MachineRef::edge(1), 10),
+        );
+    }
+
+    #[test]
+    fn table_vi_machine_id_costs_still_reachable() {
+        // class-level costs drive the model; MachineId stays the timing key
+        let j = paper_jobs()[0];
+        assert_eq!(j.processing(MachineId::Cloud), 6);
+        assert_eq!(j.transmission(MachineId::Device), 0);
     }
 }

@@ -1,18 +1,17 @@
 //! Algorithm 2 — multi-job allocation heuristic: greedy initial solution
 //! improved by a tabu-style neighborhood search (paper §VI, citing
-//! variable neighborhood search [24]).
+//! variable neighborhood search [24]), over an arbitrary [`Topology`].
 //!
-//! Moves reassign one job to a different machine; the whole schedule is
-//! re-simulated (transmission overlap + FCFS availability order) and the
-//! move is kept if the priority-weighted whole response time `L*sum`
-//! improves.  A short-term tabu memory forbids immediately reversing a
-//! move, letting the search escape shallow local minima; the best solution
-//! ever seen is returned.
-
+//! Moves reassign one job to a different machine (any replica of any
+//! class); the whole schedule is re-simulated (transmission overlap + FCFS
+//! availability order) and the move is kept if the priority-weighted whole
+//! response time `L*sum` improves.  A short-term tabu memory forbids
+//! immediately reversing a move, letting the search escape shallow local
+//! minima; the best solution ever seen is returned.
 
 use super::{
-    greedy_assignment, simulate, weighted_cost, Assignment, Job, MachineId,
-    Schedule, SimScratch,
+    greedy_assignment, simulate, weighted_cost, Assignment, Job,
+    MachineRef, Schedule, SimScratch, Topology,
 };
 
 /// Tunables for Algorithm 2.
@@ -65,35 +64,49 @@ impl SchedulerParams {
 }
 
 /// Run Algorithm 2 end-to-end: greedy seed + tabu neighborhood search.
-pub fn schedule_jobs(jobs: &[Job], params: &SchedulerParams) -> Schedule {
-    let seed = greedy_assignment(jobs);
-    improve(jobs, seed, params)
+pub fn schedule_jobs(
+    jobs: &[Job],
+    topo: &Topology,
+    params: &SchedulerParams,
+) -> Schedule {
+    let seed = greedy_assignment(jobs, topo);
+    improve(jobs, topo, seed, params)
 }
 
-/// Improve a starting assignment with the tabu neighborhood search.
+/// Improve a starting assignment with the tabu neighborhood search.  The
+/// result is never worse than `start` (the best assignment ever seen —
+/// including the start — is returned), which makes warm-starting a larger
+/// topology from a smaller one's solution monotone by construction.
+///
+/// `start` must only reference machines of `topo` (warm-start from a
+/// topology whose replicas are a subset, e.g. fewer edges): checked by
+/// `debug_assert` in the hot path and by the final `simulate`.
 pub fn improve(
     jobs: &[Job],
+    topo: &Topology,
     start: Assignment,
     params: &SchedulerParams,
 ) -> Schedule {
+    let machines = topo.machines();
     let mut current = start;
     let mut scratch = SimScratch::default();
-    let mut current_cost = weighted_cost(jobs, &current, &mut scratch);
+    let mut current_cost =
+        weighted_cost(jobs, topo, &current, &mut scratch);
     let mut best_assignment = current.clone();
     let mut best_cost = current_cost;
 
     // tabu[(job, machine)] = iteration until which moving `job` onto
     // `machine` is forbidden (prevents undoing a move immediately)
-    let mut tabu: std::collections::HashMap<(usize, MachineId), usize> =
+    let mut tabu: std::collections::HashMap<(usize, MachineRef), usize> =
         std::collections::HashMap::new();
     let mut stall = 0usize;
 
     for iter in 0..params.max_iters {
         // evaluate the full 1-move neighborhood
-        let mut best_move: Option<(usize, MachineId, u64)> = None;
+        let mut best_move: Option<(usize, MachineRef, u64)> = None;
         for i in 0..jobs.len() {
             let old_m = current[i];
-            for m in MachineId::ALL {
+            for &m in &machines {
                 if m == old_m {
                     continue;
                 }
@@ -101,7 +114,8 @@ pub fn improve(
                     tabu.get(&(i, m)).map_or(false, |&until| iter < until);
                 // evaluate the move in place (§Perf: no clone, no trace)
                 current[i] = m;
-                let cost = weighted_cost(jobs, &current, &mut scratch);
+                let cost =
+                    weighted_cost(jobs, topo, &current, &mut scratch);
                 current[i] = old_m;
                 // aspiration: a tabu move is allowed if it beats the best
                 if forbidden && cost >= best_cost {
@@ -132,25 +146,29 @@ pub fn improve(
         }
     }
 
-    simulate(jobs, &best_assignment)
+    simulate(jobs, topo, &best_assignment)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::scheduler::{evaluate_strategy, lower_bound, paper_jobs, Strategy};
+    use crate::scheduler::{
+        evaluate_strategy, lower_bound, paper_jobs, Strategy,
+    };
 
     #[test]
     fn algorithm2_beats_all_baselines_on_paper_trace() {
         let jobs = paper_jobs();
-        let ours = schedule_jobs(&jobs, &SchedulerParams::default());
+        let topo = Topology::paper();
+        let ours =
+            schedule_jobs(&jobs, &topo, &SchedulerParams::default());
         for strat in [
             Strategy::PerJobOptimal,
             Strategy::AllCloud,
             Strategy::AllEdge,
             Strategy::AllDevice,
         ] {
-            let base = evaluate_strategy(&jobs, strat);
+            let base = evaluate_strategy(&jobs, &topo, strat);
             assert!(
                 ours.unweighted_sum() <= base.schedule.unweighted_sum(),
                 "ours {} vs {strat:?} {}",
@@ -169,23 +187,51 @@ mod tests {
     #[test]
     fn algorithm2_dominates_lower_bound() {
         let jobs = paper_jobs();
-        let ours = schedule_jobs(&jobs, &SchedulerParams::default());
+        let ours = schedule_jobs(
+            &jobs,
+            &Topology::paper(),
+            &SchedulerParams::default(),
+        );
         assert!(ours.weighted_sum >= lower_bound(&jobs));
     }
 
     #[test]
     fn improves_on_greedy_or_matches() {
         let jobs = paper_jobs();
-        let greedy = simulate(&jobs, &greedy_assignment(&jobs));
-        let ours = schedule_jobs(&jobs, &SchedulerParams::default());
+        let topo = Topology::paper();
+        let greedy =
+            simulate(&jobs, &topo, &greedy_assignment(&jobs, &topo));
+        let ours =
+            schedule_jobs(&jobs, &topo, &SchedulerParams::default());
         assert!(ours.weighted_sum <= greedy.weighted_sum);
+    }
+
+    #[test]
+    fn improve_never_worse_than_start() {
+        // the warm-start monotonicity contract documented on `improve`
+        let jobs = paper_jobs();
+        for topo in [Topology::paper(), Topology::new(1, 2)] {
+            let start: Assignment =
+                vec![MachineRef::cloud(0); jobs.len()];
+            let mut scratch = SimScratch::default();
+            let start_cost =
+                weighted_cost(&jobs, &topo, &start, &mut scratch);
+            let s = improve(
+                &jobs,
+                &topo,
+                start,
+                &SchedulerParams::default(),
+            );
+            assert!(s.weighted_sum <= start_cost);
+        }
     }
 
     #[test]
     fn deterministic() {
         let jobs = paper_jobs();
-        let a = schedule_jobs(&jobs, &SchedulerParams::default());
-        let b = schedule_jobs(&jobs, &SchedulerParams::default());
+        let topo = Topology::new(1, 2);
+        let a = schedule_jobs(&jobs, &topo, &SchedulerParams::default());
+        let b = schedule_jobs(&jobs, &topo, &SchedulerParams::default());
         assert_eq!(a.assignment, b.assignment);
         assert_eq!(a.weighted_sum, b.weighted_sum);
     }
@@ -199,15 +245,23 @@ mod tests {
     #[test]
     fn single_job_trivial() {
         let jobs = vec![paper_jobs()[4]];
-        let s = schedule_jobs(&jobs, &SchedulerParams::default());
+        let s = schedule_jobs(
+            &jobs,
+            &Topology::paper(),
+            &SchedulerParams::default(),
+        );
         assert_eq!(s.assignment.len(), 1);
-        // single job must land on its optimal machine
-        assert_eq!(s.assignment[0], jobs[0].optimal_machine());
+        // single job must land on its optimal machine class
+        assert_eq!(s.assignment[0].class, jobs[0].optimal_machine());
     }
 
     #[test]
     fn empty_jobs_ok() {
-        let s = schedule_jobs(&[], &SchedulerParams::default());
+        let s = schedule_jobs(
+            &[],
+            &Topology::paper(),
+            &SchedulerParams::default(),
+        );
         assert_eq!(s.weighted_sum, 0);
         assert_eq!(s.unweighted_sum(), 0);
     }

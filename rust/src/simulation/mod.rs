@@ -1,11 +1,12 @@
 //! Discrete-event simulation substrate.
 //!
 //! The scheduler (§V–VI) treats the ICU as an unrelated-parallel-machine
-//! system: one shared cloud machine, one shared edge machine, and one
-//! private device per patient.  This module provides the generic pieces —
-//! an event clock, exclusive machine timelines, and schedule traces — that
-//! both the offline scheduler and the offline strategy simulators share.
-//! (The online serving coordinator uses tokio instead; its queueing
+//! system described by a [`crate::topology::Topology`]: shared cloud and
+//! edge replicas plus one private device per patient.  This module
+//! provides the generic pieces — an event clock, exclusive machine
+//! timelines (one per shared replica), and schedule traces — that both
+//! the offline scheduler and the offline strategy simulators share.  (The
+//! online serving coordinator runs real threads instead; its queueing
 //! semantics mirror [`MachineTimeline`] and are cross-checked in tests.)
 
 mod timeline;

@@ -2,15 +2,15 @@
 
 
 use super::Tick;
-use crate::scheduler::MachineId;
+use crate::topology::MachineRef;
 
 /// One job's placement in a finished schedule.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TraceEntry {
     /// Index into the job list.
     pub job: usize,
-    /// Machine the job ran on.
-    pub machine: MachineId,
+    /// Machine replica the job ran on.
+    pub machine: MachineRef,
     /// Release time (given).
     pub release: Tick,
     /// Tick the job's data finished arriving at the machine.
@@ -71,12 +71,11 @@ impl ScheduleTrace {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::scheduler::MachineId;
 
     fn entry(job: usize, release: Tick, start: Tick, end: Tick) -> TraceEntry {
         TraceEntry {
             job,
-            machine: MachineId::Cloud,
+            machine: MachineRef::cloud(0),
             release,
             available: release,
             start,

@@ -1,0 +1,389 @@
+//! First-class machine topology for the cloud/edge/device continuum.
+//!
+//! The paper frames ICU workload allocation as general unrelated-parallel-
+//! machine scheduling (§V, citing [3][35]) but experiments with the
+//! degenerate 1-cloud + 1-edge configuration (assumption (d)).  This module
+//! is the single source of truth for the machine set: a [`Topology`] names
+//! how many interchangeable replicas each shared class has, and a
+//! [`MachineRef`] names one concrete machine (class + replica).  Every
+//! scheduler core and the serving coordinator are parameterized by it;
+//! [`Topology::paper`] reproduces the paper's setup bit-for-bit.
+//!
+//! Replicas of a class share the class's timing model (processing and
+//! transmission costs are per-class, per assumption (c)); what a replica
+//! adds is an independent exclusive execution timeline (constraint C1).
+//! The per-patient end device is never shared, so it is modeled as a
+//! single pseudo-replica whose queue never forms.
+
+use crate::device::Layer;
+use crate::serialize::Value;
+use crate::{Error, Result};
+
+/// A machine *class* in the unrelated-parallel-machine system.
+///
+/// `Device` is the *releasing patient's own* bedside device — each job has
+/// exactly one, so devices never queue across jobs (paper §VI: "the end
+/// device is not the shared machine").
+#[derive(
+    Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord,
+)]
+pub enum MachineId {
+    Cloud,
+    Edge,
+    Device,
+}
+
+impl MachineId {
+    pub const ALL: [MachineId; 3] =
+        [MachineId::Cloud, MachineId::Edge, MachineId::Device];
+
+    /// The corresponding hierarchy layer.
+    pub fn layer(self) -> Layer {
+        match self {
+            MachineId::Cloud => Layer::Cloud,
+            MachineId::Edge => Layer::Edge,
+            MachineId::Device => Layer::Device,
+        }
+    }
+
+    pub fn from_layer(layer: Layer) -> Self {
+        match layer {
+            Layer::Cloud => MachineId::Cloud,
+            Layer::Edge => MachineId::Edge,
+            Layer::Device => MachineId::Device,
+        }
+    }
+}
+
+impl std::fmt::Display for MachineId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            MachineId::Cloud => "Cloud",
+            MachineId::Edge => "Edge",
+            MachineId::Device => "Device",
+        })
+    }
+}
+
+/// One concrete machine: a class plus a replica index within that class.
+///
+/// Replica indices are dense (`0..topology.replicas(class)`).  The device
+/// pseudo-replica is always `replica == 0`; the job's own device is
+/// implied by the job, not by the index.
+///
+/// The derived `Ord` (class-major, replica-minor) is the canonical
+/// dispatch/move order everywhere: cloud replicas first, then edge
+/// replicas, then the device — the paper's CC/ES/ED machine order, which
+/// keeps every tie-break identical to the pre-topology scheduler.
+#[derive(
+    Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord,
+)]
+pub struct MachineRef {
+    pub class: MachineId,
+    pub replica: usize,
+}
+
+impl MachineRef {
+    /// The (only) device pseudo-replica.
+    pub const DEVICE: MachineRef =
+        MachineRef { class: MachineId::Device, replica: 0 };
+
+    pub fn cloud(replica: usize) -> Self {
+        MachineRef { class: MachineId::Cloud, replica }
+    }
+
+    pub fn edge(replica: usize) -> Self {
+        MachineRef { class: MachineId::Edge, replica }
+    }
+
+    pub fn device() -> Self {
+        Self::DEVICE
+    }
+
+    /// The hierarchy layer of this machine's class.
+    pub fn layer(self) -> Layer {
+        self.class.layer()
+    }
+
+    /// Whether the machine is shared across jobs (cloud/edge replicas are;
+    /// the per-patient device is not).
+    pub fn is_shared(self) -> bool {
+        self.class != MachineId::Device
+    }
+
+    /// Short label for thread names and reports (`CC0`, `ES1`, `ED`).
+    pub fn label(self) -> String {
+        match self.class {
+            MachineId::Device => self.layer().abbrev().to_string(),
+            _ => format!("{}{}", self.layer().abbrev(), self.replica),
+        }
+    }
+}
+
+impl std::fmt::Display for MachineRef {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // replica 0 prints as the bare class so paper-topology output is
+        // unchanged; extra replicas disambiguate ("Edge:1")
+        if self.replica == 0 {
+            write!(f, "{}", self.class)
+        } else {
+            write!(f, "{}:{}", self.class, self.replica)
+        }
+    }
+}
+
+/// The machine set: `clouds` cloud servers + `edges` edge servers, plus
+/// the per-patient end devices (always available, never shared).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Topology {
+    pub clouds: usize,
+    pub edges: usize,
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology::paper()
+    }
+}
+
+impl Topology {
+    pub fn new(clouds: usize, edges: usize) -> Self {
+        Topology { clouds, edges }
+    }
+
+    /// The paper's configuration: one cloud + one edge server
+    /// (assumption (d)).
+    pub fn paper() -> Self {
+        Topology { clouds: 1, edges: 1 }
+    }
+
+    pub fn is_paper(&self) -> bool {
+        *self == Topology::paper()
+    }
+
+    /// Compact label for reports and bench rows (`1c+2e`).
+    pub fn label(&self) -> String {
+        format!("{}c+{}e", self.clouds, self.edges)
+    }
+
+    /// Number of shared machines (cloud + edge replicas).
+    pub fn shared_count(&self) -> usize {
+        self.clouds + self.edges
+    }
+
+    /// Number of dispatch lanes the serving coordinator runs: one per
+    /// shared replica plus the device lane.
+    pub fn lane_count(&self) -> usize {
+        self.shared_count() + 1
+    }
+
+    /// Replicas of a class (the device counts as one pseudo-replica).
+    pub fn replicas(&self, class: MachineId) -> usize {
+        match class {
+            MachineId::Cloud => self.clouds,
+            MachineId::Edge => self.edges,
+            MachineId::Device => 1,
+        }
+    }
+
+    /// Whether a machine reference is valid in this topology.
+    pub fn contains(&self, m: MachineRef) -> bool {
+        m.replica < self.replicas(m.class)
+    }
+
+    /// All machines in canonical order: `Cloud:0..c`, `Edge:0..e`,
+    /// `Device`.  This is the scheduler's move/dispatch order and the
+    /// coordinator's lane order.
+    pub fn machines(&self) -> Vec<MachineRef> {
+        let mut v = self.shared_machines();
+        v.push(MachineRef::DEVICE);
+        v
+    }
+
+    /// The machine at a dense lane index (inverse of [`Self::lane_index`];
+    /// allocation-free, for per-request routing).
+    ///
+    /// # Panics
+    /// Panics if `lane >= self.lane_count()`.
+    pub fn machine_at(&self, lane: usize) -> MachineRef {
+        if lane < self.clouds {
+            MachineRef::cloud(lane)
+        } else if lane < self.shared_count() {
+            MachineRef::edge(lane - self.clouds)
+        } else {
+            assert!(lane == self.shared_count(), "lane {lane} out of range");
+            MachineRef::DEVICE
+        }
+    }
+
+    /// The shared machines only (no device), canonical order.
+    pub fn shared_machines(&self) -> Vec<MachineRef> {
+        let mut v: Vec<MachineRef> =
+            (0..self.clouds).map(MachineRef::cloud).collect();
+        v.extend((0..self.edges).map(MachineRef::edge));
+        v
+    }
+
+    /// Dense index of a *shared* machine into per-replica state vectors
+    /// (free-times, timelines); `None` for the device.
+    pub fn shared_index(&self, m: MachineRef) -> Option<usize> {
+        match m.class {
+            MachineId::Cloud => Some(m.replica),
+            MachineId::Edge => Some(self.clouds + m.replica),
+            MachineId::Device => None,
+        }
+    }
+
+    /// Dense lane index (shared replicas first, device last) — the
+    /// serving coordinator's queue/engine indexing.
+    pub fn lane_index(&self, m: MachineRef) -> usize {
+        self.shared_index(m).unwrap_or(self.shared_count())
+    }
+
+    /// The `k`-th placement within a class, cycling over its replicas —
+    /// how fixed-class strategies spread load (degenerates to replica 0
+    /// in the paper topology).
+    pub fn spread(&self, class: MachineId, k: usize) -> MachineRef {
+        MachineRef { class, replica: k % self.replicas(class).max(1) }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.clouds == 0 || self.edges == 0 {
+            return Err(Error::Config(
+                "topology needs at least one cloud and one edge server"
+                    .into(),
+            ));
+        }
+        if self.shared_count() > 64 {
+            return Err(Error::Config(format!(
+                "topology has {} shared machines; >64 is almost certainly \
+                 a config typo",
+                self.shared_count()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Parse from a config section, layered over the paper defaults.
+    pub fn from_reader(r: &crate::config::FieldReader) -> Result<Self> {
+        let def = Topology::paper();
+        let t = Topology {
+            clouds: r.usize("clouds")?.unwrap_or(def.clouds),
+            edges: r.usize("edges")?.unwrap_or(def.edges),
+        };
+        r.finish()?;
+        t.validate()?;
+        Ok(t)
+    }
+
+    /// Serialize as a config section.
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::object();
+        v.set("clouds", self.clouds);
+        v.set("edges", self.edges);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn machine_layer_roundtrip() {
+        for m in MachineId::ALL {
+            assert_eq!(MachineId::from_layer(m.layer()), m);
+        }
+    }
+
+    #[test]
+    fn paper_topology_machines_match_machine_id_order() {
+        // the degenerate topology must enumerate exactly like the old
+        // MachineId::ALL so every tie-break is preserved
+        let ms = Topology::paper().machines();
+        assert_eq!(
+            ms,
+            vec![
+                MachineRef::cloud(0),
+                MachineRef::edge(0),
+                MachineRef::DEVICE
+            ]
+        );
+        let classes: Vec<MachineId> = ms.iter().map(|m| m.class).collect();
+        assert_eq!(classes, MachineId::ALL.to_vec());
+    }
+
+    #[test]
+    fn machine_listing_and_indexing() {
+        let t = Topology::new(2, 3);
+        let ms = t.machines();
+        assert_eq!(ms.len(), 6); // 2 + 3 + device
+        assert_eq!(t.shared_count(), 5);
+        assert_eq!(t.lane_count(), 6);
+        for (i, &m) in t.shared_machines().iter().enumerate() {
+            assert_eq!(t.shared_index(m), Some(i));
+            assert_eq!(t.lane_index(m), i);
+            assert!(t.contains(m));
+        }
+        // machine_at is the inverse of lane_index, in lane order
+        for (lane, &m) in t.machines().iter().enumerate() {
+            assert_eq!(t.machine_at(lane), m);
+            assert_eq!(t.lane_index(t.machine_at(lane)), lane);
+        }
+        assert_eq!(t.shared_index(MachineRef::DEVICE), None);
+        assert_eq!(t.lane_index(MachineRef::DEVICE), 5);
+        assert!(!t.contains(MachineRef::cloud(2)));
+        assert!(!t.contains(MachineRef::edge(3)));
+        assert!(t.contains(MachineRef::DEVICE));
+    }
+
+    #[test]
+    fn canonical_order_is_class_major() {
+        let t = Topology::new(2, 2);
+        let ms = t.machines();
+        let mut sorted = ms.clone();
+        sorted.sort_unstable();
+        assert_eq!(ms, sorted, "machines() must already be in Ord order");
+    }
+
+    #[test]
+    fn spread_cycles_replicas() {
+        let t = Topology::new(1, 3);
+        let picks: Vec<usize> = (0..6)
+            .map(|k| t.spread(MachineId::Edge, k).replica)
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        // the paper topology degenerates to replica 0
+        for k in 0..5 {
+            assert_eq!(Topology::paper().spread(MachineId::Cloud, k).replica, 0);
+        }
+        // device is always the single pseudo-replica
+        assert_eq!(t.spread(MachineId::Device, 7), MachineRef::DEVICE);
+    }
+
+    #[test]
+    fn validation() {
+        assert!(Topology::paper().validate().is_ok());
+        assert!(Topology::new(0, 1).validate().is_err());
+        assert!(Topology::new(1, 0).validate().is_err());
+        assert!(Topology::new(1, 64).validate().is_err());
+        assert!(Topology::new(2, 4).validate().is_ok());
+    }
+
+    #[test]
+    fn config_roundtrip() {
+        let t = Topology::new(2, 3);
+        let v = t.to_value();
+        let r = crate::config::FieldReader::new(&v, "topology").unwrap();
+        assert_eq!(Topology::from_reader(&r).unwrap(), t);
+    }
+
+    #[test]
+    fn display_keeps_paper_labels() {
+        assert_eq!(MachineRef::cloud(0).to_string(), "Cloud");
+        assert_eq!(MachineRef::edge(1).to_string(), "Edge:1");
+        assert_eq!(MachineRef::DEVICE.to_string(), "Device");
+        assert_eq!(MachineRef::edge(1).label(), "ES1");
+        assert_eq!(MachineRef::DEVICE.label(), "ED");
+    }
+}

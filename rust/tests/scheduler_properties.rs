@@ -7,9 +7,9 @@
 
 use edgeward::data::Rng;
 use edgeward::scheduler::{
-    evaluate_strategy, greedy_assignment, lower_bound, paper_jobs,
-    schedule_jobs, simulate, Job, MachineId, Schedule, SchedulerParams,
-    Strategy,
+    evaluate_strategy, greedy_assignment, improve, lower_bound, paper_jobs,
+    schedule_jobs, simulate, Job, MachineId, MachineRef, Schedule,
+    SchedulerParams, Strategy, Topology,
 };
 
 const CASES: u64 = 200;
@@ -34,6 +34,7 @@ fn random_jobs(rng: &mut Rng) -> Vec<Job> {
         .collect()
 }
 
+/// C1–C5 invariants of a finished schedule, for any topology.
 fn check_schedule_invariants(jobs: &[Job], s: &Schedule, ctx: &str) {
     assert_eq!(s.assignment.len(), jobs.len(), "{ctx}: coverage");
     assert_eq!(s.trace.entries.len(), jobs.len(), "{ctx}: trace");
@@ -42,18 +43,26 @@ fn check_schedule_invariants(jobs: &[Job], s: &Schedule, ctx: &str) {
     for e in &s.trace.entries {
         let j = &jobs[e.job];
         let m = s.assignment[e.job];
+        assert!(s.topology.contains(m), "{ctx}: replica out of range");
         assert_eq!(e.machine, m, "{ctx}: machine mismatch");
         assert_eq!(e.release, j.release, "{ctx}");
-        assert_eq!(e.available, j.release + j.transmission(m), "{ctx}");
+        // C4: transmission starts at release and overlaps execution — the
+        // job is available exactly transmission later, never blocked on
+        // the machine being busy
+        assert_eq!(
+            e.available,
+            j.release + j.transmission(m.class),
+            "{ctx}"
+        );
         assert!(e.start >= e.available, "{ctx}: start before data arrives");
-        assert_eq!(e.end, e.start + j.processing(m), "{ctx}: duration");
-        if m == MachineId::Device {
+        assert_eq!(e.end, e.start + j.processing(m.class), "{ctx}: duration");
+        if m.class == MachineId::Device {
             assert_eq!(e.start, e.available, "{ctx}: device queued");
         }
     }
 
-    // exclusive machines never overlap (C1)
-    for m in [MachineId::Cloud, MachineId::Edge] {
+    // C1: exclusive machines never overlap, checked per *replica*
+    for m in s.topology.shared_machines() {
         let mut slots: Vec<(u64, u64)> = s
             .trace
             .entries
@@ -77,10 +86,12 @@ fn prop_simulate_invariants_hold_for_random_assignments() {
     for seed in 0..CASES {
         let mut rng = Rng::new(seed);
         let jobs = random_jobs(&mut rng);
-        let assignment: Vec<MachineId> = (0..jobs.len())
-            .map(|_| MachineId::ALL[rng.below(3) as usize])
+        let topo = Topology::paper();
+        let machines = topo.machines();
+        let assignment: Vec<MachineRef> = (0..jobs.len())
+            .map(|_| machines[rng.below(machines.len() as u64) as usize])
             .collect();
-        let s = simulate(&jobs, &assignment);
+        let s = simulate(&jobs, &topo, &assignment);
         check_schedule_invariants(&jobs, &s, &format!("seed {seed}"));
     }
 }
@@ -90,10 +101,12 @@ fn prop_algorithm2_dominates_greedy_and_lower_bound() {
     for seed in 0..CASES {
         let mut rng = Rng::new(seed ^ 0xA5A5);
         let jobs = random_jobs(&mut rng);
+        let topo = Topology::paper();
         let params = SchedulerParams::default();
-        let ours = schedule_jobs(&jobs, &params);
+        let ours = schedule_jobs(&jobs, &topo, &params);
         check_schedule_invariants(&jobs, &ours, &format!("seed {seed}"));
-        let greedy = simulate(&jobs, &greedy_assignment(&jobs));
+        let greedy =
+            simulate(&jobs, &topo, &greedy_assignment(&jobs, &topo));
         assert!(
             ours.weighted_sum <= greedy.weighted_sum,
             "seed {seed}: tabu {} worse than greedy {}",
@@ -112,11 +125,13 @@ fn prop_algorithm2_never_loses_to_fixed_strategies() {
     for seed in 0..CASES {
         let mut rng = Rng::new(seed ^ 0x5A5A);
         let jobs = random_jobs(&mut rng);
-        let ours = schedule_jobs(&jobs, &SchedulerParams::default());
+        let topo = Topology::paper();
+        let ours = schedule_jobs(&jobs, &topo, &SchedulerParams::default());
         for strat in
             [Strategy::AllCloud, Strategy::AllEdge, Strategy::AllDevice]
         {
-            let base = simulate(&jobs, &strat.assignment(&jobs));
+            let base =
+                simulate(&jobs, &topo, &strat.assignment(&jobs, &topo));
             assert!(
                 ours.weighted_sum <= base.weighted_sum,
                 "seed {seed}: lost to {strat:?} ({} vs {})",
@@ -124,6 +139,88 @@ fn prop_algorithm2_never_loses_to_fixed_strategies() {
                 base.weighted_sum
             );
         }
+    }
+}
+
+/// Sweep the replica grid `clouds ∈ 1..=2, edges ∈ 1..=4`: every schedule
+/// respects C1 (no overlap per replica) and C4 (transmission overlaps
+/// execution; availability = release + transmission), and the weighted
+/// cost is monotonically non-increasing as replicas are added.  The
+/// monotone comparison warm-starts each topology from the previous
+/// (smaller) topology's best assignment — feasible because replicas only
+/// grow — so the property holds by construction of `improve` and catches
+/// any regression where extra machines make the scheduler worse.
+#[test]
+fn prop_topology_sweep_monotone_and_feasible() {
+    let params = SchedulerParams::default();
+    let traces: Vec<(String, Vec<Job>)> = {
+        let mut v = vec![("paper".to_string(), paper_jobs())];
+        for seed in 0..10u64 {
+            let mut rng = Rng::new(seed ^ 0xB0B0);
+            v.push((format!("seed {seed}"), random_jobs(&mut rng)));
+        }
+        v
+    };
+
+    for (name, jobs) in &traces {
+        for clouds in 1..=2usize {
+            let mut prev: Option<Schedule> = None;
+            for edges in 1..=4usize {
+                let topo = Topology::new(clouds, edges);
+                let mut best = schedule_jobs(jobs, &topo, &params);
+                check_schedule_invariants(
+                    jobs,
+                    &best,
+                    &format!("{name} {}", topo.label()),
+                );
+                if let Some(p) = &prev {
+                    // the smaller topology's assignment stays feasible
+                    let warm =
+                        improve(jobs, &topo, p.assignment.clone(), &params);
+                    check_schedule_invariants(
+                        jobs,
+                        &warm,
+                        &format!("{name} warm {}", topo.label()),
+                    );
+                    if warm.weighted_sum < best.weighted_sum {
+                        best = warm;
+                    }
+                    assert!(
+                        best.weighted_sum <= p.weighted_sum,
+                        "{name}: cost rose {} -> {} at {}",
+                        p.weighted_sum,
+                        best.weighted_sum,
+                        topo.label()
+                    );
+                }
+                prev = Some(best);
+            }
+        }
+    }
+}
+
+/// Replicas of a class are interchangeable: permuting which replica a
+/// fixed all-edge assignment uses never changes the objective.
+#[test]
+fn prop_replica_symmetry() {
+    for seed in 0..50 {
+        let mut rng = Rng::new(seed ^ 0x6666);
+        let jobs = random_jobs(&mut rng);
+        let topo = Topology::new(1, 3);
+        let costs: Vec<u64> = (0..3)
+            .map(|r| {
+                simulate(
+                    &jobs,
+                    &topo,
+                    &vec![MachineRef::edge(r); jobs.len()],
+                )
+                .weighted_sum
+            })
+            .collect();
+        assert!(
+            costs.windows(2).all(|w| w[0] == w[1]),
+            "seed {seed}: replica asymmetry {costs:?}"
+        );
     }
 }
 
@@ -145,16 +242,14 @@ fn prop_scaling_all_times_scales_objective() {
                 proc_device: j.proc_device * 2,
             })
             .collect();
-        let assignment: Vec<MachineId> = (0..jobs.len())
-            .map(|_| MachineId::ALL[rng.below(3) as usize])
+        let topo = Topology::paper();
+        let machines = topo.machines();
+        let assignment: Vec<MachineRef> = (0..jobs.len())
+            .map(|_| machines[rng.below(machines.len() as u64) as usize])
             .collect();
-        let a = simulate(&jobs, &assignment);
-        let b = simulate(&doubled, &assignment);
-        assert_eq!(
-            b.weighted_sum,
-            a.weighted_sum * 2,
-            "seed {seed}"
-        );
+        let a = simulate(&jobs, &topo, &assignment);
+        let b = simulate(&doubled, &topo, &assignment);
+        assert_eq!(b.weighted_sum, a.weighted_sum * 2, "seed {seed}");
     }
 }
 
@@ -164,8 +259,9 @@ fn prop_adding_a_job_never_reduces_others_response() {
     for seed in 0..50 {
         let mut rng = Rng::new(seed ^ 0x2222);
         let mut jobs = random_jobs(&mut rng);
-        let assignment = vec![MachineId::Edge; jobs.len()];
-        let before = simulate(&jobs, &assignment);
+        let topo = Topology::paper();
+        let assignment = vec![MachineRef::edge(0); jobs.len()];
+        let before = simulate(&jobs, &topo, &assignment);
         jobs.push(Job {
             release: 0,
             weight: 1,
@@ -175,7 +271,11 @@ fn prop_adding_a_job_never_reduces_others_response() {
             trans_edge: 1,
             proc_device: 1,
         });
-        let after = simulate(&jobs, &vec![MachineId::Edge; jobs.len()]);
+        let after = simulate(
+            &jobs,
+            &topo,
+            &vec![MachineRef::edge(0); jobs.len()],
+        );
         for e_before in &before.trace.entries {
             let e_after = after
                 .trace
@@ -197,12 +297,13 @@ fn prop_priority_weight_steers_the_optimizer() {
     // give one job an enormous weight: Algorithm 2's objective for that
     // job must be at least as good as with weight 1
     let base_jobs = paper_jobs();
+    let topo = Topology::paper();
     let params = SchedulerParams::default();
     for victim in 0..base_jobs.len() {
         let mut heavy = base_jobs.clone();
         heavy[victim].weight = 100;
-        let s_heavy = schedule_jobs(&heavy, &params);
-        let s_base = schedule_jobs(&base_jobs, &params);
+        let s_heavy = schedule_jobs(&heavy, &topo, &params);
+        let s_base = schedule_jobs(&base_jobs, &topo, &params);
         let resp = |s: &Schedule, j: usize| {
             s.trace.entries.iter().find(|e| e.job == j).unwrap().response()
         };
@@ -230,11 +331,12 @@ fn prop_priority_weight_steers_the_optimizer() {
 #[test]
 fn prop_strategies_agree_on_singleton_jobs() {
     // with one job there is no contention: ours == per-job-optimal
+    let topo = Topology::paper();
     for seed in 0..50 {
         let mut rng = Rng::new(seed ^ 0x3333);
         let jobs = vec![random_jobs(&mut rng)[0]];
-        let ours = evaluate_strategy(&jobs, Strategy::Ours);
-        let opt = evaluate_strategy(&jobs, Strategy::PerJobOptimal);
+        let ours = evaluate_strategy(&jobs, &topo, Strategy::Ours);
+        let opt = evaluate_strategy(&jobs, &topo, Strategy::PerJobOptimal);
         assert_eq!(
             ours.schedule.weighted_sum, opt.schedule.weighted_sum,
             "seed {seed}"

@@ -6,6 +6,7 @@ use edgeward::coordinator::{
     live_calibration, Coordinator, Policy, ServeConfig,
 };
 use edgeward::device::Layer;
+use edgeward::topology::Topology;
 use edgeward::workload::Application;
 
 fn have_artifacts() -> bool {
@@ -22,6 +23,7 @@ fn fast_cfg(policy: Policy) -> ServeConfig {
         requests_per_patient: 4,
         arrival_rate_hz: 10.0,
         policy,
+        topology: Topology::paper(),
         batch_window_ms: 2,
         max_batch: 4,
         size_units: 64,
@@ -46,6 +48,75 @@ fn serve_completes_all_requests() {
     assert_eq!(report.routed.iter().sum::<u64>(), 12);
     assert_eq!(report.metrics.total_requests, 12);
     assert!(report.metrics.throughput_rps > 0.0);
+    // lane accounting covers every completion
+    assert_eq!(report.lanes.len(), 3);
+    assert_eq!(
+        report.lanes.iter().map(|l| l.requests).sum::<u64>(),
+        12
+    );
+}
+
+#[test]
+fn multi_edge_serving_completes_and_reports_utilization() {
+    if !have_artifacts() {
+        return;
+    }
+    // the acceptance scenario: edges = 2 wired through the coordinator —
+    // four lanes (CC0, ES0, ES1, ED), round-robin so every lane sees
+    // deterministic traffic
+    let env = Environment::paper();
+    let mut cfg = fast_cfg(Policy::RoundRobin);
+    cfg.topology = Topology::new(1, 2);
+    cfg.patients = 4;
+    cfg.requests_per_patient = 4; // 16 = 4 full round-robin cycles
+    let coord =
+        Coordinator::new(env, Calibration::paper(), cfg, "artifacts").unwrap();
+    let report = coord.run(21).unwrap();
+    assert_eq!(report.completed, 16);
+    assert_eq!(report.topology, Topology::new(1, 2));
+    assert_eq!(report.lanes.len(), 4);
+    // round-robin over 4 lanes × 16 requests = 4 per lane
+    for lane in &report.lanes {
+        assert_eq!(
+            lane.requests,
+            4,
+            "lane {} got {} requests",
+            lane.machine.label(),
+            lane.requests
+        );
+        // emulated busy time over real wall time: non-negative and
+        // finite (it can exceed 1 when time_scale compresses the clock)
+        assert!(
+            lane.utilization >= 0.0 && lane.utilization.is_finite(),
+            "lane {} utilization {}",
+            lane.machine.label(),
+            lane.utilization
+        );
+    }
+    // per-class routing: 4 cloud, 8 edge (two replicas), 4 device
+    assert_eq!(report.routed, [4, 8, 4]);
+    // the JSON report carries the per-lane rows
+    let v = report.to_value();
+    let rendered = v.to_string_pretty();
+    assert!(rendered.contains("ES1"), "{rendered}");
+}
+
+#[test]
+fn least_loaded_policy_serves_all_requests() {
+    if !have_artifacts() {
+        return;
+    }
+    let env = Environment::paper();
+    let mut cfg = fast_cfg(Policy::LeastLoaded);
+    cfg.topology = Topology::new(1, 2);
+    let coord =
+        Coordinator::new(env, Calibration::paper(), cfg, "artifacts").unwrap();
+    let report = coord.run(22).unwrap();
+    assert_eq!(report.completed, 12);
+    assert_eq!(
+        report.lanes.iter().map(|l| l.requests).sum::<u64>(),
+        12
+    );
 }
 
 #[test]

@@ -1,0 +1,304 @@
+//! Equivalence regression: the unified topology-parameterized scheduler
+//! at `Topology::paper()` must reproduce the pre-topology scheduler
+//! bit-for-bit.
+//!
+//! The `reference` module below is a frozen copy of the seed scheduler's
+//! semantics — hard-coded cloud/edge scalars, `MachineId`-only
+//! assignments, the cloud-first tie-breaks — kept as the golden oracle.
+//! Every test drives both implementations over the paper trace and random
+//! job sets and asserts identical weighted sums, traces, greedy
+//! assignments, and tabu outcomes, plus the recorded Table VII golden
+//! numbers (416/100, 291, 366/94).
+
+use edgeward::data::Rng;
+use edgeward::scheduler::{
+    greedy_assignment, paper_jobs, schedule_jobs, simulate, weighted_cost,
+    Job, MachineId, MachineRef, SchedulerParams, SimScratch, Topology,
+};
+
+/// The seed scheduler, frozen: one cloud scalar, one edge scalar, moves
+/// over `MachineId::ALL`.  Do not "improve" this module — its whole value
+/// is staying identical to the pre-refactor behavior.
+mod reference {
+    use edgeward::scheduler::{Job, MachineId, SchedulerParams};
+    use edgeward::simulation::MachineTimeline;
+
+    pub fn weighted_cost(jobs: &[Job], assignment: &[MachineId]) -> u64 {
+        let mut order: Vec<usize> = (0..jobs.len()).collect();
+        order.sort_unstable_by_key(|&i| {
+            (
+                jobs[i].release + jobs[i].transmission(assignment[i]),
+                jobs[i].release,
+                i,
+            )
+        });
+        let (mut cloud_free, mut edge_free) = (0u64, 0u64);
+        let mut sum = 0u64;
+        for &i in &order {
+            let j = &jobs[i];
+            let m = assignment[i];
+            let avail = j.release + j.transmission(m);
+            let p = j.processing(m);
+            let end = match m {
+                MachineId::Cloud => {
+                    let start = avail.max(cloud_free);
+                    cloud_free = start + p;
+                    cloud_free
+                }
+                MachineId::Edge => {
+                    let start = avail.max(edge_free);
+                    edge_free = start + p;
+                    edge_free
+                }
+                MachineId::Device => avail + p,
+            };
+            sum += j.weight as u64 * (end - j.release);
+        }
+        sum
+    }
+
+    /// (start, end) per job, in job order — the trace shape.
+    pub fn simulate_slots(
+        jobs: &[Job],
+        assignment: &[MachineId],
+    ) -> Vec<(u64, u64)> {
+        let mut order: Vec<usize> = (0..jobs.len()).collect();
+        let avail =
+            |i: usize| jobs[i].release + jobs[i].transmission(assignment[i]);
+        order.sort_by_key(|&i| (avail(i), jobs[i].release, i));
+        let mut cloud = MachineTimeline::new();
+        let mut edge = MachineTimeline::new();
+        let mut slots = vec![(0u64, 0u64); jobs.len()];
+        for &i in &order {
+            let a = avail(i);
+            let p = jobs[i].processing(assignment[i]);
+            slots[i] = match assignment[i] {
+                MachineId::Cloud => cloud.schedule(a, p),
+                MachineId::Edge => edge.schedule(a, p),
+                MachineId::Device => (a, a + p),
+            };
+        }
+        slots
+    }
+
+    pub fn greedy_assignment(jobs: &[Job]) -> Vec<MachineId> {
+        let mut order: Vec<usize> = (0..jobs.len()).collect();
+        order.sort_by_key(|&i| {
+            (jobs[i].release, std::cmp::Reverse(jobs[i].weight), i)
+        });
+        let mut cloud = MachineTimeline::new();
+        let mut edge = MachineTimeline::new();
+        let mut assignment = vec![MachineId::Device; jobs.len()];
+        for &i in &order {
+            let j = &jobs[i];
+            let avail_c = j.release + j.trans_cloud;
+            let avail_e = j.release + j.trans_edge;
+            let end_cloud = cloud.peek(avail_c, j.proc_cloud).1;
+            let end_edge = edge.peek(avail_e, j.proc_edge).1;
+            let end_device = j.release + j.proc_device;
+            let (mut best_m, mut best_end) = (MachineId::Cloud, end_cloud);
+            if end_edge < best_end {
+                best_m = MachineId::Edge;
+                best_end = end_edge;
+            }
+            if end_device < best_end {
+                best_m = MachineId::Device;
+            }
+            assignment[i] = best_m;
+            match best_m {
+                MachineId::Cloud => {
+                    cloud.schedule(avail_c, j.proc_cloud);
+                }
+                MachineId::Edge => {
+                    edge.schedule(avail_e, j.proc_edge);
+                }
+                MachineId::Device => {}
+            }
+        }
+        assignment
+    }
+
+    pub fn schedule_jobs(
+        jobs: &[Job],
+        params: &SchedulerParams,
+    ) -> (Vec<MachineId>, u64) {
+        let mut current = greedy_assignment(jobs);
+        let mut best_assignment = current.clone();
+        let mut best_cost = weighted_cost(jobs, &current);
+        let mut tabu: std::collections::HashMap<(usize, MachineId), usize> =
+            std::collections::HashMap::new();
+        let mut stall = 0usize;
+        for iter in 0..params.max_iters {
+            let mut best_move: Option<(usize, MachineId, u64)> = None;
+            for i in 0..jobs.len() {
+                let old_m = current[i];
+                for m in MachineId::ALL {
+                    if m == old_m {
+                        continue;
+                    }
+                    let forbidden = tabu
+                        .get(&(i, m))
+                        .map_or(false, |&until| iter < until);
+                    current[i] = m;
+                    let cost = weighted_cost(jobs, &current);
+                    current[i] = old_m;
+                    if forbidden && cost >= best_cost {
+                        continue;
+                    }
+                    if best_move.map_or(true, |(_, _, c)| cost < c) {
+                        best_move = Some((i, m, cost));
+                    }
+                }
+            }
+            let Some((i, m, cost)) = best_move else { break };
+            let old_m = current[i];
+            current[i] = m;
+            tabu.insert((i, old_m), iter + params.tenure);
+            if cost < best_cost {
+                best_cost = cost;
+                best_assignment = current.clone();
+                stall = 0;
+            } else {
+                stall += 1;
+                if stall >= params.patience {
+                    break;
+                }
+            }
+        }
+        let cost = weighted_cost(jobs, &best_assignment);
+        (best_assignment, cost)
+    }
+}
+
+fn random_jobs(rng: &mut Rng) -> Vec<Job> {
+    let n = 1 + rng.below(12) as usize;
+    let mut release = 0;
+    (0..n)
+        .map(|_| {
+            release += rng.below(6);
+            Job {
+                release,
+                weight: 1 + rng.below(3) as u32,
+                proc_cloud: 1 + rng.below(10),
+                trans_cloud: 1 + rng.below(70),
+                proc_edge: 1 + rng.below(15),
+                trans_edge: 1 + rng.below(15),
+                proc_device: 1 + rng.below(80),
+            }
+        })
+        .collect()
+}
+
+/// Lift a class-only assignment into the paper topology (replica 0).
+fn lift(assignment: &[MachineId]) -> Vec<MachineRef> {
+    assignment
+        .iter()
+        .map(|&class| MachineRef { class, replica: 0 })
+        .collect()
+}
+
+#[test]
+fn golden_table_vii_baselines() {
+    // golden values recorded from the seed scheduler before the refactor
+    let jobs = paper_jobs();
+    let topo = Topology::paper();
+    let cloud = simulate(&jobs, &topo, &vec![MachineRef::cloud(0); 10]);
+    assert_eq!(cloud.unweighted_sum(), 416);
+    assert_eq!(cloud.last_completion(), 100);
+    let edge = simulate(&jobs, &topo, &vec![MachineRef::edge(0); 10]);
+    assert_eq!(edge.unweighted_sum(), 291);
+    let device = simulate(&jobs, &topo, &vec![MachineRef::DEVICE; 10]);
+    assert_eq!(device.unweighted_sum(), 366);
+    assert_eq!(device.last_completion(), 94);
+}
+
+#[test]
+fn simulate_matches_reference_on_random_assignments() {
+    let mut scratch = SimScratch::default();
+    let topo = Topology::paper();
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed ^ 0xEEE1);
+        let jobs = random_jobs(&mut rng);
+        let classes: Vec<MachineId> = (0..jobs.len())
+            .map(|_| MachineId::ALL[rng.below(3) as usize])
+            .collect();
+        let unified = simulate(&jobs, &topo, &lift(&classes));
+        let ref_cost = reference::weighted_cost(&jobs, &classes);
+        assert_eq!(unified.weighted_sum, ref_cost, "seed {seed}");
+        let fast =
+            weighted_cost(&jobs, &topo, &lift(&classes), &mut scratch);
+        assert_eq!(fast, ref_cost, "seed {seed} (scratch path)");
+        // full trace equivalence, not just the objective
+        let ref_slots = reference::simulate_slots(&jobs, &classes);
+        for e in &unified.trace.entries {
+            assert_eq!(
+                (e.start, e.end),
+                ref_slots[e.job],
+                "seed {seed} job {}",
+                e.job
+            );
+        }
+    }
+}
+
+#[test]
+fn greedy_matches_reference() {
+    let topo = Topology::paper();
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed ^ 0xEEE2);
+        let jobs = random_jobs(&mut rng);
+        let unified = greedy_assignment(&jobs, &topo);
+        let golden = reference::greedy_assignment(&jobs);
+        assert_eq!(unified, lift(&golden), "seed {seed}");
+    }
+    // and on the paper trace
+    let jobs = paper_jobs();
+    assert_eq!(
+        greedy_assignment(&jobs, &topo),
+        lift(&reference::greedy_assignment(&jobs))
+    );
+}
+
+#[test]
+fn tabu_matches_reference() {
+    let topo = Topology::paper();
+    let params = SchedulerParams::default();
+    // the paper trace: identical assignment and objective
+    let jobs = paper_jobs();
+    let unified = schedule_jobs(&jobs, &topo, &params);
+    let (ref_assignment, ref_cost) =
+        reference::schedule_jobs(&jobs, &params);
+    assert_eq!(unified.assignment, lift(&ref_assignment));
+    assert_eq!(unified.weighted_sum, ref_cost);
+
+    // random traces (fewer cases: the reference tabu is O(n² · iters))
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed ^ 0xEEE3);
+        let jobs = random_jobs(&mut rng);
+        let unified = schedule_jobs(&jobs, &topo, &params);
+        let (ref_assignment, ref_cost) =
+            reference::schedule_jobs(&jobs, &params);
+        assert_eq!(
+            unified.assignment,
+            lift(&ref_assignment),
+            "seed {seed}"
+        );
+        assert_eq!(unified.weighted_sum, ref_cost, "seed {seed}");
+    }
+}
+
+#[test]
+fn single_allocation_classes_unchanged() {
+    // the single-job argmin (Algorithm 1's scheduling analogue) is a
+    // class-level decision and must not shift under the topology API
+    for (i, j) in paper_jobs().iter().enumerate() {
+        let topo = Topology::paper();
+        let s = schedule_jobs(&[*j], &topo, &SchedulerParams::default());
+        assert_eq!(
+            s.assignment[0].class,
+            j.optimal_machine(),
+            "paper job {}",
+            i + 1
+        );
+    }
+}
