@@ -23,6 +23,7 @@ use edgeward::allocation::Calibration;
 use edgeward::config::Environment;
 use edgeward::coordinator::{live_calibration, Coordinator, Policy, ServeConfig};
 use edgeward::report::TextTable;
+use edgeward::scenario::{Arrival, Objective, Scenario};
 use edgeward::topology::Topology;
 
 fn run_scenario(
@@ -120,6 +121,30 @@ fn main() -> anyhow::Result<()> {
         "ICU ward: {} patients × {} requests, mix breath/mortality/phenotype = {:?}\n",
         base.patients, base.requests_per_patient, base.app_mix
     );
+
+    // Offline capacity check before serving: a Poisson ward in the same
+    // traffic regime, solved under Makespan through the scenario registry
+    // — how long would this burst take on each candidate topology?
+    for topo in [Topology::paper(), Topology::new(1, 2)] {
+        let plan = Scenario::builder()
+            .name("ward-plan")
+            .arrival(Arrival::PoissonWard {
+                jobs: base.patients * 2,
+                rate: base.arrival_rate_hz / 10.0,
+            })
+            .seed(1234)
+            .topology(topo)
+            .objective(Objective::Makespan)
+            .build()?;
+        let s = plan.solve("tabu")?;
+        let (c, e, d) = s.placement_counts();
+        println!(
+            "offline plan [{:5}]: makespan {:4} ticks  (cloud {c}, edge {e}, device {d})",
+            topo.label(),
+            plan.evaluate(&s),
+        );
+    }
+    println!();
 
     // Scenario 1: this host's real compute speed.
     run_scenario("native", &env, &base)?;

@@ -7,10 +7,8 @@ use edgeward::allocation::{allocate_single, estimate_single, Calibration};
 use edgeward::config::Environment;
 use edgeward::device::Layer;
 use edgeward::report::{csv_series, render_gantt, TextTable};
-use edgeward::scheduler::{
-    evaluate_strategy, lower_bound, paper_jobs, schedule_jobs,
-    SchedulerParams, Strategy, Topology,
-};
+use edgeward::scenario::Scenario;
+use edgeward::scheduler::{lower_bound, paper_jobs, Strategy};
 use edgeward::workload::{table_iv, Application, Workload, SIZE_UNITS};
 
 fn main() {
@@ -83,25 +81,24 @@ fn main() {
         csv_series(&["workload", "layer", "processing", "transmission"], &rows)
     );
 
-    // Table VI + Figures 7/8 + Table VII
+    // Table VI + Figures 7/8 + Table VII (all through the registry)
     let jobs = paper_jobs();
     println!("Table VI lower bound (eq. 6): {}", lower_bound(&jobs));
-    let ours =
-        schedule_jobs(&jobs, &Topology::paper(), &SchedulerParams::default());
+    let paper = Scenario::paper();
+    let ours = paper.solve("tabu").expect("tabu");
     println!("\nFigure 7:\n{}", render_gantt(&ours, 90));
-    let opt =
-        evaluate_strategy(&jobs, &Topology::paper(), Strategy::PerJobOptimal);
-    println!("Figure 8:\n{}", render_gantt(&opt.schedule, 90));
+    let opt = paper.solve("per-job-optimal").expect("per-job-optimal");
+    println!("Figure 8:\n{}", render_gantt(&opt, 90));
 
     let mut t7 = TextTable::new(&["Strategy", "Whole", "Last", "Weighted"])
         .with_title("Table VII");
     for s in Strategy::ALL {
-        let r = evaluate_strategy(&jobs, &Topology::paper(), s);
+        let r = paper.solve(s.solver_key()).expect("registry solver");
         t7.row(vec![
             s.label().into(),
-            r.schedule.unweighted_sum().to_string(),
-            r.schedule.last_completion().to_string(),
-            r.schedule.weighted_sum.to_string(),
+            r.unweighted_sum().to_string(),
+            r.last_completion().to_string(),
+            r.weighted_sum.to_string(),
         ]);
     }
     println!("{}", t7.render());

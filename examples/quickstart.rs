@@ -2,7 +2,8 @@
 //!
 //! 1. open the AOT artifacts and run one real LSTM inference through PJRT;
 //! 2. ask Algorithm 1 where that workload should run;
-//! 3. schedule the paper's 10-job ICU trace with Algorithm 2.
+//! 3. solve the paper's scheduling scenario through the solver registry;
+//! 4. solve a generated Poisson-ward scenario under a different objective.
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
@@ -35,10 +36,9 @@ fn main() -> anyhow::Result<()> {
         decision.t_min
     );
 
-    // --- 3. Algorithm 2: schedule the paper's 10-job trace -------------
-    let jobs = paper_jobs();
-    let schedule =
-        schedule_jobs(&jobs, &Topology::paper(), &SchedulerParams::default());
+    // --- 3. the paper's scheduling scenario through the registry -------
+    let paper = Scenario::paper();
+    let schedule = paper.solve("tabu")?;
     let (c, e, d) = schedule.placement_counts();
     println!(
         "algorithm 2: whole response {} / last completion {} \
@@ -47,13 +47,18 @@ fn main() -> anyhow::Result<()> {
         schedule.last_completion(),
     );
 
-    // --- 4. the same scheduler on a 2-edge ward -------------------------
-    let wider =
-        schedule_jobs(&jobs, &Topology::new(1, 2), &SchedulerParams::default());
+    // --- 4. a generated ward, another topology, another objective ------
+    let ward = Scenario::builder()
+        .arrival(Arrival::PoissonWard { jobs: 12, rate: 0.25 })
+        .seed(42)
+        .topology(Topology::try_new(1, 2)?)
+        .objective(Objective::Makespan)
+        .build()?;
+    let plan = ward.solve("tabu")?;
     println!(
-        "with a second edge server: whole response {} (was {})",
-        wider.unweighted_sum(),
-        schedule.unweighted_sum(),
+        "poisson ward on 1c+2e: makespan {} (vs greedy {})",
+        ward.evaluate(&plan),
+        ward.evaluate(&ward.solve("greedy")?),
     );
     Ok(())
 }

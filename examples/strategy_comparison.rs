@@ -1,6 +1,7 @@
-//! Strategy comparison (Table VII + Figures 7–8), plus a sensitivity sweep
-//! the paper doesn't include: how the advantage of Algorithm 2 changes as
-//! the job count grows.
+//! Strategy comparison (Table VII + Figures 7–8) through the solver
+//! registry, plus two sweeps the paper doesn't include: how the advantage
+//! of Algorithm 2 changes as the job count grows, and how every
+//! registered solver scores a scenario under every objective.
 //!
 //! Run: `cargo run --release --example strategy_comparison`
 
@@ -8,39 +9,37 @@ use edgeward::allocation::Calibration;
 use edgeward::config::Environment;
 use edgeward::data::Rng;
 use edgeward::report::{render_gantt, TextTable};
+use edgeward::scenario::{solver_names, Objective, Scenario};
 use edgeward::scheduler::{
-    evaluate_strategy, jobs_from_workloads, paper_jobs, schedule_jobs, Job,
-    SchedulerParams, Strategy, Topology,
+    jobs_from_workloads, paper_jobs, Job, Strategy, Topology,
 };
 use edgeward::workload::{Application, Workload, SIZE_UNITS};
 
 fn main() {
-    // --- Table VII on the paper's 10-job trace -------------------------
-    let jobs = paper_jobs();
+    // --- Table VII on the paper's 10-job trace, via the registry -------
+    let paper = Scenario::paper();
     let mut t = TextTable::new(&[
         "Strategy", "Whole Response", "Last Response", "Weighted",
     ])
     .with_title("Table VII — the paper's 10-job ICU trace");
     for s in Strategy::ALL {
-        let r = evaluate_strategy(&jobs, &Topology::paper(), s);
+        let r = paper.solve(s.solver_key()).expect("registry solver");
         t.row(vec![
             s.label().into(),
-            r.schedule.unweighted_sum().to_string(),
-            r.schedule.last_completion().to_string(),
-            r.schedule.weighted_sum.to_string(),
+            r.unweighted_sum().to_string(),
+            r.last_completion().to_string(),
+            r.weighted_sum.to_string(),
         ]);
     }
     println!("{}", t.render());
 
     // --- Figures 7 and 8 ------------------------------------------------
-    let ours =
-        schedule_jobs(&jobs, &Topology::paper(), &SchedulerParams::default());
+    let ours = paper.solve("tabu").expect("tabu");
     println!("Figure 7 — Algorithm 2 schedule:");
     println!("{}", render_gantt(&ours, 90));
-    let opt =
-        evaluate_strategy(&jobs, &Topology::paper(), Strategy::PerJobOptimal);
+    let opt = paper.solve("per-job-optimal").expect("per-job-optimal");
     println!("Figure 8 — per-job-optimal schedule (note the queueing):");
-    println!("{}", render_gantt(&opt.schedule, 90));
+    println!("{}", render_gantt(&opt, 90));
 
     // --- sensitivity: advantage vs job count (beyond the paper) ---------
     let env = Environment::paper();
@@ -52,11 +51,17 @@ fn main() {
     let mut rng = Rng::new(99);
     for n in [5usize, 10, 20, 40] {
         let jobs = synthetic_jobs(&mut rng, n, &env, &calib);
+        let scenario = Scenario::builder()
+            .name(format!("synthetic-{n}"))
+            .jobs(jobs)
+            .build()
+            .expect("valid scenario");
         let vals: Vec<u64> = Strategy::ALL
             .iter()
             .map(|&s| {
-                evaluate_strategy(&jobs, &Topology::paper(), s)
-                    .schedule
+                scenario
+                    .solve(s.solver_key())
+                    .expect("registry solver")
                     .unweighted_sum()
             })
             .collect();
@@ -75,6 +80,42 @@ fn main() {
         ]);
     }
     println!("{}", sweep.render());
+
+    // --- every solver × every objective on one ward (new axis) ----------
+    let objectives = [
+        Objective::WeightedSum,
+        Objective::UnweightedSum,
+        Objective::Makespan,
+        Objective::DeadlineMiss { deadlines: vec![40] },
+    ];
+    let mut grid = TextTable::new(&[
+        "Solver", "weighted-sum", "unweighted-sum", "makespan", "deadline-miss(40)",
+    ])
+    .with_title("Every registered solver under every objective (8-job trace, 1c+2e)");
+    // one scenario per objective; 8 jobs keeps the exact solver's 4^n
+    // search quick
+    let grid_scenarios: Vec<Scenario> = objectives
+        .iter()
+        .map(|obj| {
+            Scenario::builder()
+                .jobs(paper_jobs().into_iter().take(8).collect())
+                .topology(Topology::try_new(1, 2).unwrap())
+                .objective(obj.clone())
+                .build()
+                .expect("valid scenario")
+        })
+        .collect();
+    for name in solver_names() {
+        let mut cells = vec![name.to_string()];
+        for scenario in &grid_scenarios {
+            match scenario.solve(name) {
+                Ok(s) => cells.push(scenario.evaluate(&s).to_string()),
+                Err(_) => cells.push("-".into()),
+            }
+        }
+        grid.row(cells);
+    }
+    println!("{}", grid.render());
 }
 
 /// Random trace in the paper's regime: Table IV workloads released over a

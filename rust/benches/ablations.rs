@@ -14,11 +14,24 @@ use edgeward::allocation::{allocate_single, Calibration};
 use edgeward::benchkit::Bench;
 use edgeward::config::Environment;
 use edgeward::data::Rng;
+use edgeward::scenario::Objective;
 use edgeward::scheduler::{
-    paper_jobs, schedule_exact, schedule_jobs, schedule_online, Job,
-    SchedulerParams, Topology,
+    paper_jobs, schedule_exact_objective, schedule_jobs_objective,
+    schedule_online_objective, Job, Schedule, SchedulerParams, Topology,
 };
+
+/// The paper objective, through the objective-aware cores.
+const EQ5: Objective = Objective::WeightedSum;
+
+fn exact(jobs: &[Job], topo: &Topology) -> Schedule {
+    schedule_exact_objective(jobs, topo, &EQ5).expect("small instance")
+}
+
 use edgeward::workload::workload_grid;
+
+fn tabu(jobs: &[Job], topo: &Topology, params: &SchedulerParams) -> Schedule {
+    schedule_jobs_objective(jobs, topo, params, &EQ5)
+}
 
 fn main() {
     let env = Environment::paper();
@@ -41,16 +54,16 @@ fn main() {
     // ---- 2. optimality gap -------------------------------------------
     let jobs = paper_jobs();
     let paper = Topology::paper();
-    let exact = schedule_exact(&jobs, &paper);
-    let ours = schedule_jobs(&jobs, &paper, &SchedulerParams::default());
-    let online = schedule_online(&jobs, &paper);
+    let optimum = exact(&jobs, &paper);
+    let ours = tabu(&jobs, &paper, &SchedulerParams::default());
+    let online = schedule_online_objective(&jobs, &paper, &EQ5);
     println!(
         "paper trace weighted sums: exact {} | algorithm2 {} ({:+.1}%) | online {} ({:+.1}%)",
-        exact.weighted_sum,
+        optimum.weighted_sum,
         ours.weighted_sum,
-        (ours.weighted_sum as f64 / exact.weighted_sum as f64 - 1.0) * 100.0,
+        (ours.weighted_sum as f64 / optimum.weighted_sum as f64 - 1.0) * 100.0,
         online.weighted_sum,
-        (online.weighted_sum as f64 / exact.weighted_sum as f64 - 1.0) * 100.0,
+        (online.weighted_sum as f64 / optimum.weighted_sum as f64 - 1.0) * 100.0,
     );
     // random traces
     let mut rng = Rng::new(31337);
@@ -72,8 +85,8 @@ fn main() {
                 }
             })
             .collect();
-        let e = schedule_exact(&jobs, &paper).weighted_sum.max(1);
-        let h = schedule_jobs(&jobs, &paper, &SchedulerParams::default())
+        let e = exact(&jobs, &paper).weighted_sum.max(1);
+        let h = tabu(&jobs, &paper, &SchedulerParams::default())
             .weighted_sum;
         gaps.push(h as f64 / e as f64 - 1.0);
     }
@@ -88,7 +101,7 @@ fn main() {
     println!("multi-edge scaling (paper trace, weighted sum):");
     for edges in 1..=4 {
         let topo = Topology::new(1, edges);
-        let s = schedule_jobs(&jobs, &topo, &SchedulerParams::default());
+        let s = tabu(&jobs, &topo, &SchedulerParams::default());
         println!(
             "  edges={edges}: weighted {} whole {} last {}",
             s.weighted_sum,
@@ -106,7 +119,7 @@ fn main() {
             tenure,
             patience: 30,
         };
-        let s = schedule_jobs(&jobs, &paper, &params);
+        let s = tabu(&jobs, &paper, &params);
         println!(
             "  max_iters={iters:4} tenure={tenure}: weighted {}",
             s.weighted_sum
@@ -117,18 +130,29 @@ fn main() {
     // ---- timing ----------------------------------------------------------
     let mut b = Bench::new("ablations");
     b.bench("exact_10_jobs", || {
-        std::hint::black_box(schedule_exact(&jobs, &paper));
+        std::hint::black_box(exact(&jobs, &paper));
     });
     b.bench("online_10_jobs", || {
-        std::hint::black_box(schedule_online(&jobs, &paper));
+        std::hint::black_box(schedule_online_objective(&jobs, &paper, &EQ5));
     });
     let wide = Topology::new(1, 3);
     b.bench("pool_scheduler_3_edges", || {
-        std::hint::black_box(schedule_jobs(
-            &jobs,
-            &wide,
-            &SchedulerParams::default(),
-        ));
+        std::hint::black_box(tabu(&jobs, &wide, &SchedulerParams::default()));
     });
+    // objective ablation: what does the tabu core pay for a non-eq.5
+    // objective (the generic accumulate loop vs the weighted hot path)?
+    for (name, obj) in [
+        ("tabu_makespan", Objective::Makespan),
+        ("tabu_unweighted", Objective::UnweightedSum),
+    ] {
+        b.bench(name, || {
+            std::hint::black_box(schedule_jobs_objective(
+                &jobs,
+                &paper,
+                &SchedulerParams::default(),
+                &obj,
+            ));
+        });
+    }
     b.finish();
 }

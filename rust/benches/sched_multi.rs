@@ -1,15 +1,17 @@
-//! Bench: Table VII / Figures 7–8 — Algorithm 2 and the four baselines on
-//! the paper's 10-job trace, plus scaling on synthetic traces and the
-//! replica-scaling curve (edges = 1..=4) through the unified
-//! topology-parameterized path.
+//! Bench: Table VII / Figures 7–8 — every registered solver on the
+//! paper scenario, scaling on synthetic traces, the replica-scaling curve
+//! (edges = 1..=4), and objective-generality cases — all through the
+//! `Scenario`/`Solver` front door.  Emits a machine-readable
+//! `BENCH_sched.json` for the perf trajectory.
 
 use edgeward::allocation::Calibration;
-use edgeward::benchkit::Bench;
+use edgeward::benchkit::{write_json, Bench};
 use edgeward::config::Environment;
 use edgeward::data::Rng;
+use edgeward::scenario::{Arrival, Objective, Scenario, SOLVERS};
 use edgeward::scheduler::{
-    evaluate_strategy, jobs_from_workloads, paper_jobs, schedule_jobs,
-    simulate, Job, MachineRef, SchedulerParams, Strategy, Topology,
+    jobs_from_workloads, schedule_jobs_objective, simulate, Job,
+    MachineRef, SchedulerParams, Topology,
 };
 use edgeward::workload::{Application, Workload, SIZE_UNITS};
 
@@ -34,31 +36,38 @@ fn synthetic(n: usize) -> Vec<Job> {
 }
 
 fn main() {
-    let paper = Topology::paper();
+    let paper = Scenario::paper();
 
-    // regenerate Table VII (correctness narration)
-    let jobs = paper_jobs();
-    println!("Table VII (regenerated):");
-    for s in Strategy::ALL {
-        let r = evaluate_strategy(&jobs, &paper, s);
-        println!(
-            "  {:44} whole={:4} last={:3} weighted={:4}",
-            s.label(),
-            r.schedule.unweighted_sum(),
-            r.schedule.last_completion(),
-            r.schedule.weighted_sum
-        );
+    // regenerate Table VII through the registry (correctness narration)
+    println!("Table VII (regenerated, solver registry):");
+    for spec in SOLVERS {
+        match paper.solve(spec.name) {
+            Ok(s) => println!(
+                "  {:16} whole={:4} last={:3} weighted={:4}",
+                spec.name,
+                s.unweighted_sum(),
+                s.last_completion(),
+                s.weighted_sum
+            ),
+            Err(e) => println!("  {:16} skipped: {e}", spec.name),
+        }
     }
     println!();
 
     let params = SchedulerParams::default();
+    let jobs = paper.jobs.clone();
 
     // replica scaling through the unified path: where does one more
     // in-room edge server stop paying for itself?
     println!("replica scaling (paper trace, unified scheduler):");
     for edges in 1..=4usize {
         let topo = Topology::new(1, edges);
-        let s = schedule_jobs(&jobs, &topo, &params);
+        let s = schedule_jobs_objective(
+            &jobs,
+            &topo,
+            &params,
+            &Objective::WeightedSum,
+        );
         let util: Vec<String> = s
             .replica_utilization()
             .iter()
@@ -76,33 +85,62 @@ fn main() {
     println!();
 
     let mut b = Bench::new("sched_multi");
+    let paper_topo = Topology::paper();
 
     // one full simulate() — the tabu search's inner-loop cost
     let all_edge: Vec<MachineRef> =
         jobs.iter().map(|_| MachineRef::edge(0)).collect();
     b.bench("simulate_10_jobs", || {
-        std::hint::black_box(simulate(&jobs, &paper, &all_edge));
+        std::hint::black_box(simulate(&jobs, &paper_topo, &all_edge));
     });
 
-    // Algorithm 2 end-to-end on the paper trace
+    // Algorithm 2 end-to-end on the paper scenario, via the registry
     b.bench("algorithm2_paper_trace", || {
-        std::hint::black_box(schedule_jobs(&jobs, &paper, &params));
+        std::hint::black_box(paper.solve("tabu").expect("tabu"));
     });
 
     // baselines
     b.bench("per_job_optimal", || {
-        std::hint::black_box(evaluate_strategy(
-            &jobs,
-            &paper,
-            Strategy::PerJobOptimal,
-        ));
+        std::hint::black_box(
+            paper.solve("per-job-optimal").expect("baseline"),
+        );
+    });
+
+    // objective generality: the tabu core under each non-paper objective
+    for (case, obj) in [
+        ("algorithm2_makespan", Objective::Makespan),
+        ("algorithm2_unweighted", Objective::UnweightedSum),
+        (
+            "algorithm2_deadline_miss",
+            Objective::DeadlineMiss { deadlines: vec![40] },
+        ),
+    ] {
+        b.bench(case, || {
+            std::hint::black_box(schedule_jobs_objective(
+                &jobs,
+                &paper_topo,
+                &params,
+                &obj,
+            ));
+        });
+    }
+
+    // scenario generation cost (the Poisson ward is the CLI default)
+    let ward = Arrival::PoissonWard { jobs: 40, rate: 0.25 };
+    b.bench("generate_poisson_ward_40", || {
+        std::hint::black_box(ward.generate(7));
     });
 
     // replica scaling cost: the tabu neighborhood grows with the pool
     for edges in 1..=4usize {
         let topo = Topology::new(1, edges);
         b.bench(&format!("algorithm2_paper_trace_{}edges", edges), || {
-            std::hint::black_box(schedule_jobs(&jobs, &topo, &params));
+            std::hint::black_box(schedule_jobs_objective(
+                &jobs,
+                &topo,
+                &params,
+                &Objective::WeightedSum,
+            ));
         });
     }
 
@@ -110,8 +148,17 @@ fn main() {
     for n in [20usize, 40, 80] {
         let jobs_n = synthetic(n);
         b.bench(&format!("algorithm2_{n}_jobs"), || {
-            std::hint::black_box(schedule_jobs(&jobs_n, &paper, &params));
+            std::hint::black_box(schedule_jobs_objective(
+                &jobs_n,
+                &paper_topo,
+                &params,
+                &Objective::WeightedSum,
+            ));
         });
     }
-    b.finish();
+    let results = b.finish();
+    if let Err(e) = write_json("sched_multi", &results, "BENCH_sched.json")
+    {
+        eprintln!("could not write BENCH_sched.json: {e}");
+    }
 }

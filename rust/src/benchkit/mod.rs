@@ -16,6 +16,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::serialize::Value;
+
 /// One benchmark group (typically one paper table/figure).
 pub struct Bench {
     name: String,
@@ -49,6 +51,39 @@ impl Measurement {
     pub fn throughput(&self) -> f64 {
         1.0 / self.median.as_secs_f64().max(1e-18)
     }
+
+    /// Machine-readable form (one row of a `BENCH_*.json` report).
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::object();
+        v.set("case", self.case.as_str());
+        v.set("samples", self.samples);
+        v.set("iters_per_sample", self.iters_per_sample);
+        v.set("median_ns", self.median.as_nanos() as u64);
+        v.set("mad_ns", self.mad.as_nanos() as u64);
+        v.set("mean_ns", self.mean.as_nanos() as u64);
+        v.set("min_ns", self.min.as_nanos() as u64);
+        v.set("max_ns", self.max.as_nanos() as u64);
+        v
+    }
+}
+
+/// Write a bench group's measurements as a machine-readable JSON report
+/// (the perf-trajectory contract: `{group, results: [...]}`).
+pub fn write_json(
+    group: &str,
+    results: &[Measurement],
+    path: &str,
+) -> crate::Result<()> {
+    let mut root = Value::object();
+    root.set("group", group);
+    root.set(
+        "results",
+        Value::Array(results.iter().map(|m| m.to_value()).collect()),
+    );
+    std::fs::write(path, root.to_string_pretty())
+        .map_err(|e| crate::Error::io(path, e))?;
+    println!("wrote {path} ({} cases)", results.len());
+    Ok(())
 }
 
 impl Bench {
@@ -161,6 +196,28 @@ mod tests {
         assert!(m.samples >= 3);
         let all = b.finish();
         assert_eq!(all.len(), 1);
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let mut b = Bench::new("jsontest");
+        b.budget = Duration::from_millis(10);
+        b.min_samples = 2;
+        b.bench("case_a", || {
+            std::hint::black_box(2 + 2);
+        });
+        let results = b.finish();
+        let path = std::env::temp_dir().join("BENCH_jsontest.json");
+        let path = path.to_str().unwrap();
+        write_json("jsontest", &results, path).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        let v = crate::serialize::json::parse(&text).unwrap();
+        assert_eq!(v.get("group").unwrap().as_str(), Some("jsontest"));
+        let rows = v.get("results").unwrap().as_array().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("case").unwrap().as_str(), Some("case_a"));
+        assert!(rows[0].get("median_ns").unwrap().as_u64().unwrap() > 0);
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

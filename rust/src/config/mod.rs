@@ -14,6 +14,7 @@ pub use value_ext::FieldReader;
 use std::path::Path;
 
 use crate::coordinator::ServeConfig;
+use crate::scenario::Scenario;
 use crate::scheduler::SchedulerParams;
 use crate::serialize::{toml, Value};
 use crate::{Error, Result};
@@ -27,6 +28,9 @@ pub struct Config {
     pub serve: ServeConfig,
     /// Multi-job scheduler parameters.
     pub scheduler: SchedulerParams,
+    /// Default scheduling scenario for `edgeward solve` (absent: the
+    /// paper scenario).
+    pub scenario: Option<Scenario>,
     /// Artifact directory (AOT outputs + manifest.json).
     pub artifact_dir: String,
     /// Master seed for synthetic data / arrivals.
@@ -39,6 +43,7 @@ impl Default for Config {
             environment: Environment::paper(),
             serve: ServeConfig::default(),
             scheduler: SchedulerParams::default(),
+            scenario: None,
             artifact_dir: "artifacts".to_string(),
             seed: 0,
         }
@@ -66,6 +71,27 @@ impl Config {
     pub fn from_value(v: &Value) -> Result<Self> {
         let r = FieldReader::new(v, "config")?;
         let defaults = Config::default();
+        let scheduler = r
+            .section("scheduler")?
+            .map(|s| SchedulerParams::from_reader(&s))
+            .transpose()?
+            .unwrap_or(defaults.scheduler);
+        let mut scenario = r
+            .section("scenario")?
+            .map(|s| Scenario::from_reader(&s))
+            .transpose()?;
+        // a [scenario] without its own [scenario.scheduler] subsection
+        // inherits the config-level tunables instead of silently
+        // resetting to the defaults
+        if let Some(sc) = &mut scenario {
+            let has_own = v
+                .get("scenario")
+                .and_then(|s| s.get("scheduler"))
+                .is_some();
+            if !has_own {
+                sc.params = scheduler;
+            }
+        }
         let cfg = Config {
             environment: r
                 .section("environment")?
@@ -77,11 +103,8 @@ impl Config {
                 .map(|s| ServeConfig::from_reader(&s))
                 .transpose()?
                 .unwrap_or(defaults.serve),
-            scheduler: r
-                .section("scheduler")?
-                .map(|s| SchedulerParams::from_reader(&s))
-                .transpose()?
-                .unwrap_or(defaults.scheduler),
+            scheduler,
+            scenario,
             artifact_dir: r
                 .string("artifact_dir")?
                 .unwrap_or(defaults.artifact_dir),
@@ -99,6 +122,14 @@ impl Config {
         v.set("environment", self.environment.to_value());
         v.set("serve", self.serve.to_value());
         v.set("scheduler", self.scheduler.to_value());
+        // literal-job scenarios are not expressible in TOML; omitting the
+        // section is honest (reload falls back to the paper scenario)
+        // where emitting an arrival spec would silently swap the job set
+        if let Some(s) = &self.scenario {
+            if s.arrival.is_some() {
+                v.set("scenario", s.to_value());
+            }
+        }
         v
     }
 
@@ -112,6 +143,9 @@ impl Config {
         self.environment.validate()?;
         self.serve.validate()?;
         self.scheduler.validate()?;
+        if let Some(s) = &self.scenario {
+            s.validate()?;
+        }
         Ok(())
     }
 }
@@ -179,6 +213,64 @@ mod tests {
         assert!(
             Config::from_toml("[serve.topology]\nclouds = 0\n").is_err()
         );
+    }
+
+    #[test]
+    fn scenario_section_parses_and_roundtrips() {
+        let cfg = Config::from_toml(
+            "[scenario]\narrival = \"poisson-ward\"\njobs = 6\nseed = 3\n\
+             objective = \"makespan\"\n",
+        )
+        .unwrap();
+        let s = cfg.scenario.as_ref().unwrap();
+        assert_eq!(s.jobs.len(), 6);
+        assert_eq!(s.seed, 3);
+        assert_eq!(s.objective, crate::scenario::Objective::Makespan);
+        // and the section survives the TOML round trip
+        let back = Config::from_toml(&cfg.to_toml()).unwrap();
+        assert_eq!(back, cfg);
+        // invalid scenario topologies are rejected at parse time
+        assert!(Config::from_toml(
+            "[scenario.topology]\nedges = 0\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn scenario_inherits_config_scheduler_tunables() {
+        // [scenario] without its own [scenario.scheduler] picks up the
+        // config-level [scheduler] section...
+        let cfg = Config::from_toml(
+            "[scheduler]\nmax_iters = 999\n\n[scenario]\nseed = 1\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.scenario.unwrap().params.max_iters, 999);
+        // ...but an explicit [scenario.scheduler] wins
+        let cfg = Config::from_toml(
+            "[scheduler]\nmax_iters = 999\n\n[scenario]\nseed = 1\n\n\
+             [scenario.scheduler]\nmax_iters = 7\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.scenario.unwrap().params.max_iters, 7);
+    }
+
+    #[test]
+    fn literal_jobs_scenario_is_omitted_from_toml() {
+        use crate::scheduler::paper_jobs;
+        let cfg = Config {
+            scenario: Some(
+                crate::scenario::Scenario::builder()
+                    .jobs(paper_jobs().into_iter().take(3).collect())
+                    .build()
+                    .unwrap(),
+            ),
+            ..Config::default()
+        };
+        // no [scenario] section is emitted (literal jobs are not
+        // expressible in TOML), so reload yields no scenario rather
+        // than a silently different job set
+        let back = Config::from_toml(&cfg.to_toml()).unwrap();
+        assert!(back.scenario.is_none());
     }
 
     #[test]

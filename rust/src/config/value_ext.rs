@@ -131,6 +131,31 @@ impl<'a> FieldReader<'a> {
         }
     }
 
+    /// Variable-length list of non-negative integers (e.g. per-job
+    /// deadlines).
+    pub fn u64_list(&self, key: &str) -> Result<Option<Vec<u64>>> {
+        match self.field(key) {
+            None => Ok(None),
+            Some(v) => {
+                let items = v
+                    .as_array()
+                    .ok_or_else(|| self.wrong_type(key, "an array"))?;
+                items
+                    .iter()
+                    .map(|item| {
+                        item.as_u64().ok_or_else(|| {
+                            self.wrong_type(
+                                key,
+                                "an array of non-negative integers",
+                            )
+                        })
+                    })
+                    .collect::<Result<Vec<u64>>>()
+                    .map(Some)
+            }
+        }
+    }
+
     /// Error if any field of the object was never consumed.
     pub fn finish(&self) -> Result<()> {
         let seen = self.seen.borrow();
@@ -178,6 +203,15 @@ mod tests {
         let r = FieldReader::new(&v, "cfg").unwrap();
         let err = r.u64("a").unwrap_err();
         assert!(err.to_string().contains("cfg.a"));
+    }
+
+    #[test]
+    fn u64_list_extraction() {
+        let v = toml::parse("d = [1, 2, 30]\nbad = [1, -2]\n").unwrap();
+        let r = FieldReader::new(&v, "t").unwrap();
+        assert_eq!(r.u64_list("d").unwrap(), Some(vec![1, 2, 30]));
+        assert_eq!(r.u64_list("missing").unwrap(), None);
+        assert!(r.u64_list("bad").is_err());
     }
 
     #[test]

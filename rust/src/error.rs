@@ -21,6 +21,18 @@ pub enum Error {
     #[error("config error: {0}")]
     Config(String),
 
+    /// A machine topology with no usable replicas (or an absurd replica
+    /// count) was requested.  Raised at construction/validation time so
+    /// callers never reach the scheduler cores with an empty machine set.
+    #[error(
+        "invalid topology {clouds}c+{edges}e: {reason}"
+    )]
+    InvalidTopology {
+        clouds: usize,
+        edges: usize,
+        reason: String,
+    },
+
     /// Input tensor shape mismatch on the inference path.
     #[error("shape mismatch: expected {expected} f32 values, got {got}")]
     ShapeMismatch { expected: usize, got: usize },

@@ -15,9 +15,8 @@ use edgeward::coordinator::{Coordinator, Policy};
 use edgeward::data::EpisodeGenerator;
 use edgeward::device::Layer;
 use edgeward::report::{render_gantt, render_replica_utilization, TextTable};
-use edgeward::scheduler::{
-    evaluate_strategy, paper_jobs, schedule_jobs, Strategy, Topology,
-};
+use edgeward::scenario::{Arrival, Objective, Scenario, SOLVERS};
+use edgeward::scheduler::{paper_jobs, Strategy, Topology};
 use edgeward::workload::{table_iv, Application, Workload, SIZE_UNITS};
 
 const USAGE: &str = "\
@@ -28,6 +27,10 @@ USAGE: edgeward [--config FILE] <COMMAND> [OPTIONS]
 COMMANDS:
   tables    [--table 3|4|5|6|7] [--figure 6|7|8]   regenerate paper artifacts
   allocate  --app APP [--size UNITS]               Algorithm 1 for one workload
+  solve     [--scenario FILE] [--solver NAME] [--objective OBJ]
+            [--arrival A] [--jobs N] [--rate X] [--surge N] [--surge-at T]
+            [--deadline T] [--seed N] [--clouds N] [--edges N] [--compare]
+                                                   solve a Scenario
   schedule  [--strategy S] [--compare] [--clouds N] [--edges N]
                                                    Algorithm 2 / baselines
   serve     [--policy P] [--patients N] [--requests N] [--clouds N]
@@ -36,14 +39,22 @@ COMMANDS:
   config                                           print the default TOML config
   datagen   --app APP [--n N] [--seed N]           synthetic ICU episodes (CSV)
 
-APP:      breath | mortality | phenotype
-POLICY:   algorithm-1 | fixed-cloud | fixed-edge | fixed-device |
-          round-robin | least-loaded
-STRATEGY: ours | per-job-optimal | all-cloud | all-edge | all-device
+APP:       breath | mortality | phenotype
+POLICY:    algorithm-1 | fixed-cloud | fixed-edge | fixed-device |
+           round-robin | least-loaded
+STRATEGY:  ours | per-job-optimal | all-cloud | all-edge | all-device
+SOLVER:    tabu | greedy | exact | online | per-job-optimal | all-cloud |
+           all-edge | all-device
+OBJECTIVE: weighted-sum | unweighted-sum | makespan | deadline-miss
+ARRIVAL:   paper-trace | poisson-ward | code-blue-surge
 
---clouds/--edges select the machine topology (default: the paper's 1+1);
-every extra replica is a real engine on the serving path and an extra
-exclusive timeline in the scheduler.
+`solve` is the polymorphic front door: a scenario (from --scenario TOML,
+an [scenario] section in --config, or --arrival flags) run through any
+registered solver; --seed makes generated scenarios reproducible and
+--compare runs the whole registry.  --clouds/--edges select the machine
+topology (default: the paper's 1+1); every extra replica is a real
+engine on the serving path and an extra exclusive timeline in the
+scheduler.
 ";
 
 /// Minimal argument cursor: `--key value` and `--flag` handling.
@@ -166,30 +177,129 @@ fn run() -> edgeward::Result<()> {
             }
             println!("chosen layer    : {}", d.chosen.name());
         }
+        "solve" => {
+            let scenario_file = args.opt("scenario");
+            let solver_name =
+                args.opt("solver").unwrap_or_else(|| "tabu".into());
+            let objective: Option<String> = args.opt("objective");
+            let arrival: Option<String> = args.opt("arrival");
+            let jobs_n: Option<usize> = args.parse("jobs");
+            let rate: Option<f64> = args.parse("rate");
+            let surge: Option<usize> = args.parse("surge");
+            let surge_at: Option<u64> = args.parse("surge-at");
+            let deadline: Option<u64> = args.parse("deadline");
+            let seed: Option<u64> = args.parse("seed");
+            let clouds: Option<usize> = args.parse("clouds");
+            let edges: Option<usize> = args.parse("edges");
+            let compare = args.flag("compare");
+            args.finish();
+
+            // precedence: --scenario file, then the config's [scenario]
+            // section, then the paper scenario (with the config's
+            // scheduler tunables); flags override fields
+            let base = match &scenario_file {
+                Some(path) => Scenario::load(path)?,
+                None => match cfg.scenario.clone() {
+                    Some(s) => s,
+                    None => Scenario::builder()
+                        .name("paper")
+                        .params(cfg.scheduler)
+                        .build()?,
+                },
+            };
+            let scenario = override_scenario(
+                base,
+                arrival.as_deref(),
+                jobs_n,
+                rate,
+                surge,
+                surge_at,
+                objective.as_deref(),
+                deadline,
+                seed,
+                clouds,
+                edges,
+            )?;
+
+            println!("scenario   : {}", scenario.label());
+            if let Some(a) = &scenario.arrival {
+                println!("arrival    : {a} (seed {})", scenario.seed);
+            }
+            if compare {
+                let mut t = TextTable::new(&[
+                    "Solver",
+                    "Objective Value",
+                    "Whole Response",
+                    "Last Completion",
+                ])
+                .with_title(format!(
+                    "solver registry on {} (objective: {})",
+                    scenario.name,
+                    scenario.objective.label()
+                ));
+                for spec in SOLVERS {
+                    match scenario.solve(spec.name) {
+                        Ok(s) => t.row(vec![
+                            spec.name.into(),
+                            scenario.evaluate(&s).to_string(),
+                            s.unweighted_sum().to_string(),
+                            s.last_completion().to_string(),
+                        ]),
+                        Err(e) => t.row(vec![
+                            spec.name.into(),
+                            format!("(skipped: {e})"),
+                            "-".into(),
+                            "-".into(),
+                        ]),
+                    };
+                }
+                print!("{}", t.render());
+            } else {
+                let s = scenario.solve(&solver_name)?;
+                println!("solver     : {solver_name}");
+                println!(
+                    "objective  : {} = {}",
+                    scenario.objective.label(),
+                    scenario.evaluate(&s)
+                );
+                println!("whole resp : {}", s.unweighted_sum());
+                println!("last compl : {}", s.last_completion());
+                println!();
+                print!("{}", render_gantt(&s, 100));
+                if !scenario.topology.is_paper() {
+                    println!();
+                    print!("{}", render_replica_utilization(&s));
+                }
+            }
+        }
         "schedule" => {
             let strategy = args.opt("strategy").unwrap_or_else(|| "ours".into());
             let compare = args.flag("compare");
             let clouds: Option<usize> = args.parse("clouds");
             let edges: Option<usize> = args.parse("edges");
             args.finish();
-            let topo = Topology::new(clouds.unwrap_or(1), edges.unwrap_or(1));
-            topo.validate()?;
-            let jobs = paper_jobs();
+            let topo =
+                Topology::try_new(clouds.unwrap_or(1), edges.unwrap_or(1))?;
             if compare {
                 print!("{}", render_table_vii(&topo));
             } else {
                 let strat = parse_strategy(&strategy)?;
-                let r = evaluate_strategy(&jobs, &topo, strat);
+                let scenario = Scenario::builder()
+                    .name("paper")
+                    .topology(topo)
+                    .params(cfg.scheduler)
+                    .build()?;
+                let s = scenario.solve(strat.solver_key())?;
                 println!("strategy      : {}", strat.label());
                 println!("topology      : {}", topo.label());
-                println!("weighted sum  : {}", r.schedule.weighted_sum);
-                println!("whole response: {}", r.schedule.unweighted_sum());
-                println!("last complete : {}", r.schedule.last_completion());
+                println!("weighted sum  : {}", s.weighted_sum);
+                println!("whole response: {}", s.unweighted_sum());
+                println!("last complete : {}", s.last_completion());
                 println!();
-                print!("{}", render_gantt(&r.schedule, 100));
+                print!("{}", render_gantt(&s, 100));
                 if !topo.is_paper() {
                     println!();
-                    print!("{}", render_replica_utilization(&r.schedule));
+                    print!("{}", render_replica_utilization(&s));
                 }
             }
         }
@@ -329,6 +439,94 @@ fn run() -> edgeward::Result<()> {
     Ok(())
 }
 
+/// Layer `edgeward solve` flag overrides onto a base scenario and
+/// rebuild it through the validating builder.
+#[allow(clippy::too_many_arguments)]
+fn override_scenario(
+    base: Scenario,
+    arrival: Option<&str>,
+    jobs_n: Option<usize>,
+    rate: Option<f64>,
+    surge: Option<usize>,
+    surge_at: Option<u64>,
+    objective: Option<&str>,
+    deadline: Option<u64>,
+    seed: Option<u64>,
+    clouds: Option<usize>,
+    edges: Option<usize>,
+) -> edgeward::Result<Scenario> {
+    // arrival process: --arrival replaces, sizing flags override fields
+    // (and error loudly when the effective process has no use for them)
+    let replaced = arrival.is_some();
+    let mut arr = match arrival {
+        Some(kind) => Some(Arrival::parse(kind)?),
+        None => base.arrival.clone(),
+    };
+    match &mut arr {
+        Some(a) => a.override_sizing(jobs_n, rate, surge, surge_at)?,
+        None => {
+            if jobs_n.is_some()
+                || rate.is_some()
+                || surge.is_some()
+                || surge_at.is_some()
+            {
+                return Err(edgeward::Error::Config(
+                    "sizing options (--jobs/--rate/--surge/--surge-at) \
+                     need a generative --arrival; this scenario has a \
+                     literal job list"
+                        .into(),
+                ));
+            }
+        }
+    }
+    // objective: --objective selects; --deadline supplies/overrides the
+    // (broadcast) deadline for deadline-miss
+    let objective = match objective {
+        Some(name) => {
+            let deadlines: Vec<u64> = match (deadline, &base.objective) {
+                (Some(d), _) => vec![d],
+                (None, Objective::DeadlineMiss { deadlines }) => {
+                    deadlines.clone()
+                }
+                (None, _) => vec![],
+            };
+            let parsed = Objective::parse(name, &deadlines)?;
+            if deadline.is_some()
+                && !matches!(parsed, Objective::DeadlineMiss { .. })
+            {
+                return Err(edgeward::Error::Config(
+                    "--deadline is only meaningful with \
+                     --objective deadline-miss"
+                        .into(),
+                ));
+            }
+            parsed
+        }
+        None => match deadline {
+            Some(d) => Objective::DeadlineMiss { deadlines: vec![d] },
+            None => base.objective.clone(),
+        },
+    };
+    let topology = Topology::try_new(
+        clouds.unwrap_or(base.topology.clouds),
+        edges.unwrap_or(base.topology.edges),
+    )?;
+    let mut b = Scenario::builder()
+        .seed(seed.unwrap_or(base.seed))
+        .topology(topology)
+        .objective(objective)
+        .params(base.params);
+    if !replaced {
+        // keep the base name; a newly selected arrival renames itself
+        b = b.name(base.name.clone());
+    }
+    b = match arr {
+        Some(a) => b.arrival(a),
+        None => b.jobs(base.jobs),
+    };
+    b.build()
+}
+
 fn parse_strategy(s: &str) -> edgeward::Result<Strategy> {
     match s.to_ascii_lowercase().replace('_', "-").as_str() {
         "ours" | "algorithm-2" => Ok(Strategy::Ours),
@@ -456,7 +654,11 @@ fn render_table_vi() -> String {
 }
 
 fn render_table_vii(topo: &Topology) -> String {
-    let jobs = paper_jobs();
+    let scenario = Scenario::builder()
+        .name("paper")
+        .topology(*topo)
+        .build()
+        .expect("paper trace on a validated topology");
     let title = if topo.is_paper() {
         "Table VII — response time using different algorithms".to_string()
     } else {
@@ -470,12 +672,14 @@ fn render_table_vii(topo: &Topology) -> String {
     ])
     .with_title(title.as_str());
     for s in Strategy::ALL {
-        let r = evaluate_strategy(&jobs, topo, s);
+        let r = scenario
+            .solve(s.solver_key())
+            .expect("registered solver on the paper trace");
         t.row(vec![
             s.label().into(),
-            r.schedule.unweighted_sum().to_string(),
-            r.schedule.last_completion().to_string(),
-            r.schedule.weighted_sum.to_string(),
+            r.unweighted_sum().to_string(),
+            r.last_completion().to_string(),
+            r.weighted_sum.to_string(),
         ]);
     }
     t.render()
@@ -500,8 +704,12 @@ fn render_figure_6(env: &Environment, calib: &Calibration) -> String {
 }
 
 fn render_figure_7(cfg: &Config) -> String {
-    let jobs = paper_jobs();
-    let s = schedule_jobs(&jobs, &Topology::paper(), &cfg.scheduler);
+    let scenario = Scenario::builder()
+        .name("paper")
+        .params(cfg.scheduler)
+        .build()
+        .expect("paper trace is always valid");
+    let s = scenario.solve("tabu").expect("tabu on the paper trace");
     let (c, e, d) = s.placement_counts();
     format!(
         "Figure 7 — allocation strategy using Algorithm 2\n\
@@ -511,14 +719,11 @@ fn render_figure_7(cfg: &Config) -> String {
 }
 
 fn render_figure_8() -> String {
-    let jobs = paper_jobs();
-    let r = evaluate_strategy(
-        &jobs,
-        &Topology::paper(),
-        Strategy::PerJobOptimal,
-    );
+    let s = Scenario::paper()
+        .solve("per-job-optimal")
+        .expect("baseline on the paper trace");
     format!(
         "Figure 8 — allocation using the single-job optimal layer per job\n{}",
-        render_gantt(&r.schedule, 100)
+        render_gantt(&s, 100)
     )
 }

@@ -59,18 +59,12 @@ pub fn render_replica_utilization(schedule: &Schedule) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::scheduler::{
-        paper_jobs, schedule_jobs, SchedulerParams, Topology,
-    };
+    use crate::scenario::Scenario;
+    use crate::scheduler::{paper_jobs, Topology};
 
     #[test]
     fn renders_all_jobs() {
-        let jobs = paper_jobs();
-        let s = schedule_jobs(
-            &jobs,
-            &Topology::paper(),
-            &SchedulerParams::default(),
-        );
+        let s = Scenario::paper().solve("tabu").unwrap();
         let g = render_gantt(&s, 100);
         for i in 1..=10 {
             assert!(g.contains(&format!("J{i}")), "missing J{i}\n{g}");
@@ -80,22 +74,18 @@ mod tests {
 
     #[test]
     fn empty_schedule() {
-        let s = schedule_jobs(
-            &[],
-            &Topology::paper(),
-            &SchedulerParams::default(),
-        );
+        let s = Scenario::builder()
+            .jobs(Vec::new())
+            .build()
+            .unwrap()
+            .solve("tabu")
+            .unwrap();
         assert!(render_gantt(&s, 80).contains("empty"));
     }
 
     #[test]
     fn scales_long_horizons() {
-        let jobs = paper_jobs();
-        let s = schedule_jobs(
-            &jobs,
-            &Topology::paper(),
-            &SchedulerParams::default(),
-        );
+        let s = Scenario::paper().solve("tabu").unwrap();
         let g = render_gantt(&s, 20);
         // no line should be drastically wider than the cap + labels
         for line in g.lines().skip(1) {

@@ -1,0 +1,384 @@
+//! Generative job-arrival processes.
+//!
+//! A [`Scenario`](super::Scenario) holds either a literal job list or an
+//! [`Arrival`] process realized from one deterministic seed.  Generated
+//! jobs are sampled from the paper's Table VI rows (the calibrated
+//! cost profile of the three ICU applications) with ±25% jitter, so
+//! synthetic wards stay in the paper's cost regime while release times
+//! follow the selected process:
+//!
+//! * [`Arrival::PaperTrace`] — the 10-job Table VI trace, verbatim.
+//! * [`Arrival::PoissonWard`] — a steady ward: exponential interarrivals
+//!   at `rate` jobs per tick.
+//! * [`Arrival::CodeBlueSurge`] — the same steady ward plus a burst of
+//!   emergency-priority jobs released nearly simultaneously at
+//!   `surge_at` (a code-blue event: every monitor in the room fires).
+//!
+//! Generation is a pure function of `(process, seed)` — the same seed
+//! reproduces the same job list bit-for-bit, which the registry tests
+//! and benches rely on.
+
+use crate::data::Rng;
+use crate::scheduler::{paper_jobs, Job};
+use crate::simulation::Tick;
+use crate::{Error, Result};
+
+/// How a scenario's jobs come to exist.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arrival {
+    /// The paper's 10-job Table VI trace (seed-independent).
+    PaperTrace,
+    /// `jobs` arrivals with exponential interarrival times at `rate`
+    /// jobs per tick, each job sampled from the Table VI catalog.
+    PoissonWard { jobs: usize, rate: f64 },
+    /// A Poisson baseline of `baseline` jobs at `rate`, plus `surge`
+    /// emergency (weight-2) jobs released within a few ticks of
+    /// `surge_at`.
+    CodeBlueSurge {
+        baseline: usize,
+        rate: f64,
+        surge: usize,
+        surge_at: Tick,
+    },
+}
+
+impl Default for Arrival {
+    fn default() -> Self {
+        Arrival::PaperTrace
+    }
+}
+
+impl Arrival {
+    /// Canonical CLI/TOML key.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Arrival::PaperTrace => "paper-trace",
+            Arrival::PoissonWard { .. } => "poisson-ward",
+            Arrival::CodeBlueSurge { .. } => "code-blue-surge",
+        }
+    }
+
+    /// A Poisson ward with the default CLI sizing.
+    pub fn poisson_ward() -> Arrival {
+        Arrival::PoissonWard { jobs: 12, rate: 0.25 }
+    }
+
+    /// A code-blue surge with the default CLI sizing.
+    pub fn code_blue_surge() -> Arrival {
+        Arrival::CodeBlueSurge {
+            baseline: 8,
+            rate: 0.2,
+            surge: 5,
+            surge_at: 30,
+        }
+    }
+
+    /// Parse a CLI/TOML arrival key into the default-sized process (the
+    /// scenario spec then overrides individual fields).
+    pub fn parse(name: &str) -> Result<Arrival> {
+        match name.to_ascii_lowercase().replace('_', "-").as_str() {
+            "paper-trace" | "paper" | "table-vi" => {
+                Ok(Arrival::PaperTrace)
+            }
+            "poisson-ward" | "poisson" | "ward" => {
+                Ok(Arrival::poisson_ward())
+            }
+            "code-blue-surge" | "code-blue" | "surge" => {
+                Ok(Arrival::code_blue_surge())
+            }
+            other => Err(Error::Config(format!(
+                "unknown arrival process {other:?}; expected paper-trace \
+                 | poisson-ward | code-blue-surge"
+            ))),
+        }
+    }
+
+    /// Apply generic sizing overrides (the CLI's `--jobs/--rate/--surge/
+    /// --surge-at` flags): `count` sets `jobs` (PoissonWard) or
+    /// `baseline` (CodeBlueSurge).  Errors loudly instead of silently
+    /// ignoring a flag the selected process has no use for.
+    pub fn override_sizing(
+        &mut self,
+        count: Option<usize>,
+        rate: Option<f64>,
+        surge: Option<usize>,
+        surge_at: Option<Tick>,
+    ) -> Result<()> {
+        match self {
+            Arrival::PaperTrace => {
+                if count.is_some()
+                    || rate.is_some()
+                    || surge.is_some()
+                    || surge_at.is_some()
+                {
+                    return Err(Error::Config(
+                        "sizing options (--jobs/--rate/--surge/\
+                         --surge-at) need a generative arrival process \
+                         (poisson-ward | code-blue-surge); the paper \
+                         trace is fixed"
+                            .into(),
+                    ));
+                }
+            }
+            Arrival::PoissonWard { jobs, rate: r } => {
+                if surge.is_some() || surge_at.is_some() {
+                    return Err(Error::Config(
+                        "--surge/--surge-at only apply to the \
+                         code-blue-surge arrival process"
+                            .into(),
+                    ));
+                }
+                if let Some(n) = count {
+                    *jobs = n;
+                }
+                if let Some(x) = rate {
+                    *r = x;
+                }
+            }
+            Arrival::CodeBlueSurge {
+                baseline,
+                rate: r,
+                surge: s,
+                surge_at: t,
+            } => {
+                if let Some(n) = count {
+                    *baseline = n;
+                }
+                if let Some(x) = rate {
+                    *r = x;
+                }
+                if let Some(n) = surge {
+                    *s = n;
+                }
+                if let Some(x) = surge_at {
+                    *t = x;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Reject degenerate process parameters before generation.
+    pub fn validate(&self) -> Result<()> {
+        let rate = match self {
+            Arrival::PaperTrace => return Ok(()),
+            Arrival::PoissonWard { rate, .. } => *rate,
+            Arrival::CodeBlueSurge { rate, .. } => *rate,
+        };
+        if !(rate > 0.0) || !rate.is_finite() {
+            return Err(Error::Config(format!(
+                "arrival rate must be a positive finite number of jobs \
+                 per tick, got {rate}"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Realize the process into a concrete job list — deterministic in
+    /// `seed`.
+    pub fn generate(&self, seed: u64) -> Vec<Job> {
+        match *self {
+            Arrival::PaperTrace => paper_jobs(),
+            Arrival::PoissonWard { jobs, rate } => {
+                let mut rng = Rng::new(seed ^ 0x5CE9_A210);
+                poisson_stream(&mut rng, jobs, rate, 1)
+            }
+            Arrival::CodeBlueSurge {
+                baseline,
+                rate,
+                surge,
+                surge_at,
+            } => {
+                let mut rng = Rng::new(seed ^ 0xC0DE_B10E);
+                let mut jobs = poisson_stream(&mut rng, baseline, rate, 1);
+                let emergencies: Vec<Job> = paper_jobs()
+                    .into_iter()
+                    .filter(|j| j.weight >= 2)
+                    .collect();
+                for _ in 0..surge {
+                    let template = emergencies
+                        [rng.below(emergencies.len() as u64) as usize];
+                    let mut j = jitter(&mut rng, template);
+                    // the whole room fires within a couple of ticks
+                    j.release = surge_at + rng.below(3);
+                    j.weight = 2;
+                    jobs.push(j);
+                }
+                jobs
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Arrival {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            Arrival::PaperTrace => f.write_str("paper-trace"),
+            Arrival::PoissonWard { jobs, rate } => {
+                write!(f, "poisson-ward(jobs={jobs}, rate={rate})")
+            }
+            Arrival::CodeBlueSurge {
+                baseline,
+                rate,
+                surge,
+                surge_at,
+            } => write!(
+                f,
+                "code-blue-surge(baseline={baseline}, rate={rate}, \
+                 surge={surge} @ t={surge_at})"
+            ),
+        }
+    }
+}
+
+/// Poisson arrivals of Table-VI-like jobs starting at `t0`.
+fn poisson_stream(
+    rng: &mut Rng,
+    n: usize,
+    rate: f64,
+    t0: Tick,
+) -> Vec<Job> {
+    let catalog = paper_jobs();
+    let mut t = t0 as f64;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(rate);
+            let template =
+                catalog[rng.below(catalog.len() as u64) as usize];
+            let mut j = jitter(rng, template);
+            j.release = t.ceil() as Tick;
+            j
+        })
+        .collect()
+}
+
+/// Jitter every cost of a catalog row by ±25% (integer ticks, floor 1 —
+/// constraint C3 keeps all times non-zero integers).
+fn jitter(rng: &mut Rng, template: Job) -> Job {
+    let mut scale = |v: Tick| -> Tick {
+        ((v as f64 * rng.range(0.75, 1.25)).round() as Tick).max(1)
+    };
+    Job {
+        release: template.release,
+        weight: template.weight,
+        proc_cloud: scale(template.proc_cloud),
+        trans_cloud: scale(template.trans_cloud),
+        proc_edge: scale(template.proc_edge),
+        trans_edge: scale(template.trans_edge),
+        proc_device: scale(template.proc_device),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_trace_is_table_vi() {
+        assert_eq!(Arrival::PaperTrace.generate(0), paper_jobs());
+        assert_eq!(Arrival::PaperTrace.generate(7), paper_jobs());
+    }
+
+    #[test]
+    fn generation_is_deterministic_in_the_seed() {
+        for arrival in
+            [Arrival::poisson_ward(), Arrival::code_blue_surge()]
+        {
+            let a = arrival.generate(42);
+            let b = arrival.generate(42);
+            assert_eq!(a, b, "{arrival}: same seed must reproduce");
+            let c = arrival.generate(43);
+            assert_ne!(a, c, "{arrival}: different seed, same jobs?");
+        }
+    }
+
+    #[test]
+    fn poisson_ward_shape() {
+        let jobs =
+            Arrival::PoissonWard { jobs: 30, rate: 0.5 }.generate(9);
+        assert_eq!(jobs.len(), 30);
+        // releases are non-decreasing and strictly positive integers
+        for w in jobs.windows(2) {
+            assert!(w[0].release <= w[1].release);
+        }
+        assert!(jobs[0].release >= 1);
+        // every cost respects C3 (non-zero except device transmission)
+        for j in &jobs {
+            assert!(j.proc_cloud >= 1 && j.proc_edge >= 1);
+            assert!(j.proc_device >= 1);
+            assert!(j.trans_cloud >= 1 && j.trans_edge >= 1);
+        }
+    }
+
+    #[test]
+    fn code_blue_surge_injects_emergencies() {
+        let arrival = Arrival::CodeBlueSurge {
+            baseline: 6,
+            rate: 0.2,
+            surge: 4,
+            surge_at: 50,
+        };
+        let jobs = arrival.generate(3);
+        assert_eq!(jobs.len(), 10);
+        let surge = jobs
+            .iter()
+            .filter(|j| (50..53).contains(&j.release) && j.weight == 2)
+            .count();
+        assert!(surge >= 4, "surge jobs missing: {jobs:?}");
+    }
+
+    #[test]
+    fn override_sizing_is_loud_about_inapplicable_flags() {
+        let mut a = Arrival::PaperTrace;
+        assert!(a.override_sizing(None, None, None, None).is_ok());
+        assert!(a.override_sizing(Some(5), None, None, None).is_err());
+        let mut p = Arrival::poisson_ward();
+        assert!(p
+            .override_sizing(Some(5), Some(0.5), None, None)
+            .is_ok());
+        assert_eq!(p, Arrival::PoissonWard { jobs: 5, rate: 0.5 });
+        assert!(p.override_sizing(None, None, Some(2), None).is_err());
+        let mut c = Arrival::code_blue_surge();
+        c.override_sizing(Some(4), None, Some(2), Some(60)).unwrap();
+        match c {
+            Arrival::CodeBlueSurge {
+                baseline, surge, surge_at, ..
+            } => {
+                assert_eq!((baseline, surge, surge_at), (4, 2, 60));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn zero_or_negative_rates_rejected() {
+        assert!(Arrival::PoissonWard { jobs: 3, rate: 0.0 }
+            .validate()
+            .is_err());
+        assert!(Arrival::PoissonWard { jobs: 3, rate: -1.0 }
+            .validate()
+            .is_err());
+        assert!(Arrival::PoissonWard { jobs: 3, rate: f64::NAN }
+            .validate()
+            .is_err());
+        assert!(Arrival::poisson_ward().validate().is_ok());
+        assert!(Arrival::PaperTrace.validate().is_ok());
+    }
+
+    #[test]
+    fn parse_keys() {
+        assert_eq!(
+            Arrival::parse("paper").unwrap(),
+            Arrival::PaperTrace
+        );
+        assert_eq!(
+            Arrival::parse("poisson-ward").unwrap().key(),
+            "poisson-ward"
+        );
+        assert_eq!(
+            Arrival::parse("code_blue_surge").unwrap().key(),
+            "code-blue-surge"
+        );
+        assert!(Arrival::parse("meteor").is_err());
+    }
+}

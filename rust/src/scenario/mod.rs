@@ -1,0 +1,527 @@
+//! First-class scheduling scenarios: the library's polymorphic front
+//! door.
+//!
+//! A [`Scenario`] bundles everything a solver needs — a job set (literal,
+//! or realized from a seeded [`Arrival`] process), a
+//! [`Topology`](crate::topology::Topology), an [`Objective`], and the
+//! scheduler tunables — and every strategy behind the [`Solver`] trait
+//! consumes one.  [`Scenario::paper`] is the paper's experiment (Table VI
+//! trace, 1-cloud + 1-edge, eq. 5) and reproduces Table VII bit-for-bit
+//! through the registry; everything else is a builder call away:
+//!
+//! ```
+//! use edgeward::scenario::{Arrival, Objective, Scenario};
+//! use edgeward::topology::Topology;
+//!
+//! // Table VII's all-edge row through the registry
+//! let paper = Scenario::paper();
+//! assert_eq!(paper.solve("all-edge")?.unweighted_sum(), 291);
+//!
+//! // a Poisson ward, two edge servers, minimizing makespan
+//! let ward = Scenario::builder()
+//!     .arrival(Arrival::PoissonWard { jobs: 12, rate: 0.25 })
+//!     .seed(7)
+//!     .topology(Topology::try_new(1, 2)?)
+//!     .objective(Objective::Makespan)
+//!     .build()?;
+//! let best = ward.solve("tabu")?;
+//! assert!(ward.evaluate(&best) <= ward.evaluate(&ward.solve("greedy")?));
+//! # Ok::<(), edgeward::Error>(())
+//! ```
+
+mod arrival;
+mod objective;
+mod solver;
+
+pub use arrival::Arrival;
+pub use objective::Objective;
+pub use solver::{solver, solver_names, Solver, SolverSpec, SOLVERS};
+
+use crate::config::FieldReader;
+use crate::scheduler::{Job, Schedule, SchedulerParams};
+use crate::serialize::Value;
+use crate::topology::Topology;
+use crate::{Error, Result};
+
+/// A fully-specified scheduling problem instance.
+///
+/// Construct via [`Scenario::builder`], [`Scenario::paper`], or a TOML
+/// `[scenario]` section ([`Scenario::load`]).  Fields are public for
+/// inspection; mutate through the builder so validation stays in one
+/// place (solvers re-run [`Scenario::validate`] defensively).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    /// Display name (defaults to the arrival-process key).
+    pub name: String,
+    /// The realized job set.
+    pub jobs: Vec<Job>,
+    /// The arrival process the jobs came from (`None` for literal job
+    /// lists).
+    pub arrival: Option<Arrival>,
+    /// The seed the arrival process was realized with.
+    pub seed: u64,
+    /// The machine set.
+    pub topology: Topology,
+    /// What solvers minimize.
+    pub objective: Objective,
+    /// Algorithm 2 tunables (used by the tabu solver).
+    pub params: SchedulerParams,
+}
+
+impl Scenario {
+    /// Start building a scenario (paper topology, paper trace, eq. 5
+    /// objective unless overridden).
+    pub fn builder() -> ScenarioBuilder {
+        ScenarioBuilder::default()
+    }
+
+    /// The paper's scheduling experiment: Table VI trace on the 1-cloud +
+    /// 1-edge topology under the eq.-5 objective.  Every solver in the
+    /// registry reproduces its published Table VII row on this scenario.
+    pub fn paper() -> Scenario {
+        Scenario::builder()
+            .name("paper")
+            .build()
+            .expect("paper scenario is always valid")
+    }
+
+    /// Solve with a registry solver (`"tabu"`, `"exact"`, `"all-edge"`,
+    /// ... — see [`solver_names`]).
+    pub fn solve(&self, solver_name: &str) -> Result<Schedule> {
+        solver(solver_name)?.solve(self)
+    }
+
+    /// The scenario objective's value of a schedule.
+    pub fn evaluate(&self, schedule: &Schedule) -> u64 {
+        self.objective.evaluate(&self.jobs, &schedule.trace)
+    }
+
+    /// Re-check invariants (builder-validated; solvers call this so even
+    /// hand-mutated scenarios fail loudly with typed errors).
+    pub fn validate(&self) -> Result<()> {
+        self.topology.validate()?;
+        self.params.validate()?;
+        if let Some(a) = &self.arrival {
+            a.validate()?;
+        }
+        if let Objective::DeadlineMiss { deadlines } = &self.objective {
+            if deadlines.is_empty() {
+                return Err(Error::Config(
+                    "deadline-miss objective needs at least one deadline"
+                        .into(),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML file holding a `[scenario]` section (or the
+    /// scenario fields at top level).
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Scenario> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML text (see [`Scenario::load`]).
+    pub fn from_toml(text: &str) -> Result<Scenario> {
+        let v = crate::serialize::toml::parse(text)?;
+        let root = FieldReader::new(&v, "scenario")?;
+        let scenario = match root.section("scenario")? {
+            Some(section) => {
+                let s = Scenario::from_reader(&section)?;
+                root.finish()?;
+                s
+            }
+            None => Scenario::from_reader(&root)?,
+        };
+        Ok(scenario)
+    }
+
+    /// Parse a `[scenario]` section, layered over paper defaults.
+    pub fn from_reader(r: &FieldReader) -> Result<Scenario> {
+        let mut b = Scenario::builder();
+        if let Some(name) = r.string("name")? {
+            b = b.name(name);
+        }
+        if let Some(seed) = r.u64("seed")? {
+            b = b.seed(seed);
+        }
+        // arrival process + its sizing fields (only the fields of the
+        // selected process are meaningful; others are rejected as
+        // unknown by `finish`)
+        let mut arrival = match r.string("arrival")? {
+            Some(kind) => Arrival::parse(&kind)?,
+            None => Arrival::PaperTrace,
+        };
+        match &mut arrival {
+            Arrival::PaperTrace => {}
+            Arrival::PoissonWard { jobs, rate } => {
+                if let Some(n) = r.usize("jobs")? {
+                    *jobs = n;
+                }
+                if let Some(x) = r.f64("rate")? {
+                    *rate = x;
+                }
+            }
+            Arrival::CodeBlueSurge {
+                baseline,
+                rate,
+                surge,
+                surge_at,
+            } => {
+                if let Some(n) = r.usize("baseline")? {
+                    *baseline = n;
+                }
+                if let Some(x) = r.f64("rate")? {
+                    *rate = x;
+                }
+                if let Some(n) = r.usize("surge")? {
+                    *surge = n;
+                }
+                if let Some(t) = r.u64("surge_at")? {
+                    *surge_at = t;
+                }
+            }
+        }
+        b = b.arrival(arrival);
+        // objective (+ deadlines, only meaningful for deadline-miss)
+        let deadlines = r.u64_list("deadlines")?.unwrap_or_default();
+        match r.string("objective")? {
+            Some(obj) => {
+                let parsed = Objective::parse(&obj, &deadlines)?;
+                if !deadlines.is_empty()
+                    && !matches!(parsed, Objective::DeadlineMiss { .. })
+                {
+                    return Err(Error::Config(
+                        "scenario.deadlines is only meaningful with \
+                         `objective = \"deadline-miss\"`"
+                            .into(),
+                    ));
+                }
+                b = b.objective(parsed);
+            }
+            None if !deadlines.is_empty() => {
+                return Err(Error::Config(
+                    "scenario.deadlines is only meaningful with \
+                     `objective = \"deadline-miss\"`"
+                        .into(),
+                ));
+            }
+            None => {}
+        }
+        if let Some(t) = r.section("topology")? {
+            b = b.topology(Topology::from_reader(&t)?);
+        }
+        if let Some(p) = r.section("scheduler")? {
+            b = b.params(SchedulerParams::from_reader(&p)?);
+        }
+        r.finish()?;
+        b.build()
+    }
+
+    /// Serialize the scenario *spec* as a config section (inverse of
+    /// [`Scenario::from_reader`] for arrival-generated scenarios;
+    /// literal job lists are not expressible in TOML and are omitted —
+    /// such a scenario round-trips as the paper trace).
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::object();
+        v.set("name", self.name.as_str());
+        v.set("seed", self.seed);
+        let arrival = self.arrival.clone().unwrap_or_default();
+        v.set("arrival", arrival.key());
+        match arrival {
+            Arrival::PaperTrace => {}
+            Arrival::PoissonWard { jobs, rate } => {
+                v.set("jobs", jobs);
+                v.set("rate", rate);
+            }
+            Arrival::CodeBlueSurge {
+                baseline,
+                rate,
+                surge,
+                surge_at,
+            } => {
+                v.set("baseline", baseline);
+                v.set("rate", rate);
+                v.set("surge", surge);
+                v.set("surge_at", surge_at);
+            }
+        }
+        v.set("objective", self.objective.key());
+        if let Objective::DeadlineMiss { deadlines } = &self.objective {
+            v.set(
+                "deadlines",
+                Value::Array(
+                    deadlines.iter().map(|&d| Value::from(d)).collect(),
+                ),
+            );
+        }
+        v.set("topology", self.topology.to_value());
+        v.set("scheduler", self.params.to_value());
+        v
+    }
+
+    /// One-line description for reports.
+    pub fn label(&self) -> String {
+        format!(
+            "{} ({} jobs, {}, objective {})",
+            self.name,
+            self.jobs.len(),
+            self.topology.label(),
+            self.objective.key()
+        )
+    }
+}
+
+/// Builder for [`Scenario`] — the only construction path that validates.
+#[derive(Debug, Clone, Default)]
+pub struct ScenarioBuilder {
+    name: Option<String>,
+    jobs: Option<Vec<Job>>,
+    arrival: Option<Arrival>,
+    seed: u64,
+    topology: Topology,
+    objective: Objective,
+    params: SchedulerParams,
+}
+
+impl ScenarioBuilder {
+    /// Display name.
+    pub fn name(mut self, name: impl Into<String>) -> Self {
+        self.name = Some(name.into());
+        self
+    }
+
+    /// A literal job list (mutually exclusive with [`Self::arrival`]).
+    pub fn jobs(mut self, jobs: Vec<Job>) -> Self {
+        self.jobs = Some(jobs);
+        self
+    }
+
+    /// A generative arrival process (mutually exclusive with
+    /// [`Self::jobs`]); realized with the builder seed at
+    /// [`Self::build`] time.
+    pub fn arrival(mut self, arrival: Arrival) -> Self {
+        self.arrival = Some(arrival);
+        self
+    }
+
+    /// Deterministic seed for the arrival process (default 0): the same
+    /// `(arrival, seed)` pair always realizes the same job list.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// The machine set (default: the paper's 1-cloud + 1-edge).
+    pub fn topology(mut self, topology: Topology) -> Self {
+        self.topology = topology;
+        self
+    }
+
+    /// The objective solvers minimize (default: eq. 5).
+    pub fn objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
+    }
+
+    /// Algorithm 2 tunables for the tabu solver.
+    pub fn params(mut self, params: SchedulerParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    /// Validate and realize the scenario (generates jobs from the
+    /// arrival process if one was given).
+    pub fn build(self) -> Result<Scenario> {
+        self.topology.validate()?;
+        if self.jobs.is_some() && self.arrival.is_some() {
+            return Err(Error::Config(
+                "scenario: provide either a literal job list or an \
+                 arrival process, not both"
+                    .into(),
+            ));
+        }
+        let (jobs, arrival) = match (self.jobs, self.arrival) {
+            (Some(jobs), None) => (jobs, None),
+            (None, arrival) => {
+                let a = arrival.unwrap_or_default();
+                a.validate()?;
+                (a.generate(self.seed), Some(a))
+            }
+            (Some(_), Some(_)) => unreachable!("rejected above"),
+        };
+        let name = self.name.unwrap_or_else(|| {
+            arrival
+                .as_ref()
+                .map(|a| a.key().to_string())
+                .unwrap_or_else(|| "custom".to_string())
+        });
+        let scenario = Scenario {
+            name,
+            jobs,
+            arrival,
+            seed: self.seed,
+            topology: self.topology,
+            objective: self.objective,
+            params: self.params,
+        };
+        scenario.validate()?;
+        Ok(scenario)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::paper_jobs;
+
+    #[test]
+    fn paper_scenario_is_the_paper_experiment() {
+        let s = Scenario::paper();
+        assert_eq!(s.jobs, paper_jobs());
+        assert!(s.topology.is_paper());
+        assert_eq!(s.objective, Objective::WeightedSum);
+        assert_eq!(s.arrival, Some(Arrival::PaperTrace));
+    }
+
+    #[test]
+    fn builder_rejects_jobs_and_arrival_together() {
+        let err = Scenario::builder()
+            .jobs(paper_jobs())
+            .arrival(Arrival::poisson_ward())
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("not both"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_invalid_topology_with_typed_error() {
+        let err = Scenario::builder()
+            .topology(Topology::new(0, 1))
+            .build()
+            .unwrap_err();
+        assert!(
+            matches!(err, Error::InvalidTopology { .. }),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn hand_mutated_params_fail_loudly_in_solvers() {
+        let mut s = Scenario::paper();
+        s.params.max_iters = 0;
+        assert!(s.validate().is_err());
+        assert!(s.solve("tabu").is_err());
+    }
+
+    #[test]
+    fn builder_rejects_empty_deadlines() {
+        let err = Scenario::builder()
+            .objective(Objective::DeadlineMiss { deadlines: vec![] })
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("deadline"), "{err}");
+    }
+
+    #[test]
+    fn generated_scenarios_are_seed_reproducible() {
+        let build = |seed| {
+            Scenario::builder()
+                .arrival(Arrival::poisson_ward())
+                .seed(seed)
+                .build()
+                .unwrap()
+        };
+        assert_eq!(build(5).jobs, build(5).jobs);
+        assert_ne!(build(5).jobs, build(6).jobs);
+    }
+
+    #[test]
+    fn toml_scenario_roundtrip() {
+        let text = "\
+[scenario]
+name = \"icu-b\"
+arrival = \"poisson-ward\"
+jobs = 9
+rate = 0.5
+seed = 11
+objective = \"deadline-miss\"
+deadlines = [25, 40]
+
+[scenario.topology]
+clouds = 1
+edges = 2
+";
+        let s = Scenario::from_toml(text).unwrap();
+        assert_eq!(s.name, "icu-b");
+        assert_eq!(s.jobs.len(), 9);
+        assert_eq!(s.seed, 11);
+        assert_eq!(s.topology, Topology::new(1, 2));
+        assert_eq!(
+            s.objective,
+            Objective::DeadlineMiss { deadlines: vec![25, 40] }
+        );
+        // spec serialization re-parses to the same scenario
+        let mut root = Value::object();
+        root.set("scenario", s.to_value());
+        let text2 =
+            crate::serialize::toml::emit(&root);
+        let back = Scenario::from_toml(&text2).unwrap();
+        assert_eq!(back, s, "emitted:\n{text2}");
+    }
+
+    #[test]
+    fn toml_without_section_header_also_parses() {
+        let s = Scenario::from_toml(
+            "arrival = \"code-blue-surge\"\nsurge = 3\n",
+        )
+        .unwrap();
+        assert_eq!(s.name, "code-blue-surge");
+        match s.arrival {
+            Some(Arrival::CodeBlueSurge { surge, .. }) => {
+                assert_eq!(surge, 3)
+            }
+            other => panic!("wrong arrival: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn toml_unknown_fields_rejected() {
+        assert!(Scenario::from_toml("[scenario]\nbanana = 1\n").is_err());
+        // sizing fields of the *other* process are unknown too
+        assert!(Scenario::from_toml(
+            "[scenario]\narrival = \"paper-trace\"\nrate = 0.5\n"
+        )
+        .is_err());
+        // deadlines without the deadline-miss objective are rejected,
+        // whether the objective is implicit or explicit
+        assert!(Scenario::from_toml(
+            "[scenario]\ndeadlines = [5]\n"
+        )
+        .is_err());
+        assert!(Scenario::from_toml(
+            "[scenario]\nobjective = \"makespan\"\ndeadlines = [5]\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn solve_through_the_registry() {
+        let s = Scenario::paper();
+        let tabu = s.solve("tabu").unwrap();
+        let edge = s.solve("all-edge").unwrap();
+        assert!(s.evaluate(&tabu) <= s.evaluate(&edge));
+        assert!(s.solve("nope").is_err());
+    }
+
+    #[test]
+    fn label_mentions_the_essentials() {
+        let l = Scenario::paper().label();
+        assert!(l.contains("paper"), "{l}");
+        assert!(l.contains("10 jobs"), "{l}");
+        assert!(l.contains("weighted-sum"), "{l}");
+    }
+}

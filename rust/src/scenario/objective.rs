@@ -1,0 +1,284 @@
+//! Pluggable scheduling objectives.
+//!
+//! The paper optimizes exactly one quantity — the priority-weighted whole
+//! response time `Σ wᵢ(Eᵢ − Rᵢ)` (eq. 5).  The Cloud Continuum literature
+//! on time-sensitive allocation frames the same machine model under
+//! several other objectives (makespan, deadline satisfaction, unweighted
+//! latency sums); an [`Objective`] names one of them and every solver core
+//! ([`crate::scheduler`]) optimizes whichever is selected.
+//!
+//! All objectives are *monotone* in job completion times: delaying any
+//! job never improves the value.  That single property is what makes the
+//! branch-and-bound prefix pruning and the warm-start monotonicity
+//! arguments valid for every variant here, so new objectives must
+//! preserve it.
+
+use crate::scheduler::Job;
+use crate::simulation::{ScheduleTrace, Tick};
+use crate::{Error, Result};
+
+/// What a solver minimizes over a job set.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Objective {
+    /// Priority-weighted whole response time `Σ wᵢ(Eᵢ − Rᵢ)` — the
+    /// paper's eq. 5, the default everywhere.
+    WeightedSum,
+    /// Unweighted whole response time `Σ (Eᵢ − Rᵢ)` — the number the
+    /// paper's Table VII actually prints.
+    UnweightedSum,
+    /// Completion time of the last job `max Eᵢ`.
+    Makespan,
+    /// Number of jobs whose response time `Eᵢ − Rᵢ` exceeds their
+    /// deadline.  `deadlines` is cycled over job indices (`i % len`), so
+    /// a single entry broadcasts one deadline to every job; it must be
+    /// non-empty (validated by the scenario builder).
+    DeadlineMiss { deadlines: Vec<Tick> },
+}
+
+impl Default for Objective {
+    fn default() -> Self {
+        Objective::WeightedSum
+    }
+}
+
+impl Objective {
+    /// Canonical CLI/TOML key (`deadline-miss` etc.).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Objective::WeightedSum => "weighted-sum",
+            Objective::UnweightedSum => "unweighted-sum",
+            Objective::Makespan => "makespan",
+            Objective::DeadlineMiss { .. } => "deadline-miss",
+        }
+    }
+
+    /// Human label for tables and reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Objective::WeightedSum => "weighted whole response (eq. 5)",
+            Objective::UnweightedSum => "whole response time",
+            Objective::Makespan => "makespan",
+            Objective::DeadlineMiss { .. } => "deadline misses",
+        }
+    }
+
+    /// Parse a CLI/TOML objective key.  `deadlines` is only consulted for
+    /// `deadline-miss` and must be non-empty there.
+    pub fn parse(name: &str, deadlines: &[Tick]) -> Result<Objective> {
+        match name.to_ascii_lowercase().replace('_', "-").as_str() {
+            "weighted-sum" | "weighted" | "eq5" => {
+                Ok(Objective::WeightedSum)
+            }
+            "unweighted-sum" | "unweighted" | "whole-response" => {
+                Ok(Objective::UnweightedSum)
+            }
+            "makespan" | "last-completion" => Ok(Objective::Makespan),
+            "deadline-miss" | "deadline" | "misses" => {
+                if deadlines.is_empty() {
+                    return Err(Error::Config(
+                        "objective deadline-miss needs at least one \
+                         deadline (set `deadlines = [..]` or --deadline)"
+                            .into(),
+                    ));
+                }
+                Ok(Objective::DeadlineMiss {
+                    deadlines: deadlines.to_vec(),
+                })
+            }
+            other => Err(Error::Config(format!(
+                "unknown objective {other:?}; expected weighted-sum | \
+                 unweighted-sum | makespan | deadline-miss"
+            ))),
+        }
+    }
+
+    /// The deadline applied to job `i` (`Tick::MAX` for objectives
+    /// without deadlines).
+    pub fn deadline(&self, i: usize) -> Tick {
+        match self {
+            Objective::DeadlineMiss { deadlines }
+                if !deadlines.is_empty() =>
+            {
+                deadlines[i % deadlines.len()]
+            }
+            _ => Tick::MAX,
+        }
+    }
+
+    /// Fold one completed job into a running objective value.  The
+    /// identity accumulator is `0` for every variant (sums add, makespan
+    /// maxes).
+    pub fn accumulate(
+        &self,
+        acc: u64,
+        i: usize,
+        job: &Job,
+        end: Tick,
+    ) -> u64 {
+        let response = end - job.release;
+        match self {
+            Objective::WeightedSum => {
+                acc + job.weight as u64 * response
+            }
+            Objective::UnweightedSum => acc + response,
+            Objective::Makespan => acc.max(end),
+            Objective::DeadlineMiss { .. } => {
+                acc + u64::from(response > self.deadline(i))
+            }
+        }
+    }
+
+    /// Objective value of a finished schedule trace.
+    pub fn evaluate(&self, jobs: &[Job], trace: &ScheduleTrace) -> u64 {
+        trace.entries.iter().fold(0, |acc, e| {
+            self.accumulate(acc, e.job, &jobs[e.job], e.end)
+        })
+    }
+
+    /// Marginal cost of committing job `i` to finish at `end`, for myopic
+    /// (online/greedy-style) solvers.  For `DeadlineMiss` a large miss
+    /// penalty is tie-broken by the response time so the dispatcher still
+    /// prefers faster machines among equal miss outcomes.
+    pub fn marginal(&self, i: usize, job: &Job, end: Tick) -> u64 {
+        let response = end - job.release;
+        match self {
+            Objective::WeightedSum => job.weight as u64 * response,
+            Objective::UnweightedSum => response,
+            Objective::Makespan => end,
+            Objective::DeadlineMiss { .. } => {
+                const MISS: u64 = 1 << 40;
+                u64::from(response > self.deadline(i)) * MISS + response
+            }
+        }
+    }
+
+    /// Combine a (monotone) partial-schedule value with a suffix lower
+    /// bound: additive objectives add, makespan maxes.
+    pub fn combine(&self, partial: u64, suffix_bound: u64) -> u64 {
+        match self {
+            Objective::Makespan => partial.max(suffix_bound),
+            _ => partial + suffix_bound,
+        }
+    }
+
+    /// `bounds[k]` = lower bound on the objective contribution of jobs
+    /// `k..`, each at its machine-minimal uncontended execution time —
+    /// the eq.-6 bound generalized per objective.  Replicas share class
+    /// costs, so the bound is topology-independent.
+    pub fn suffix_bounds(&self, jobs: &[Job]) -> Vec<u64> {
+        use crate::scheduler::MachineId;
+        let mut bounds = vec![0u64; jobs.len() + 1];
+        for k in (0..jobs.len()).rev() {
+            let j = &jobs[k];
+            let best = MachineId::ALL
+                .iter()
+                .map(|&m| j.execution(m))
+                .min()
+                .unwrap_or(0);
+            let contrib = match self {
+                Objective::WeightedSum => j.weight as u64 * best,
+                Objective::UnweightedSum => best,
+                Objective::Makespan => j.release + best,
+                Objective::DeadlineMiss { .. } => {
+                    u64::from(best > self.deadline(k))
+                }
+            };
+            bounds[k] = self.combine(contrib, bounds[k + 1]);
+        }
+        bounds
+    }
+}
+
+impl std::fmt::Display for Objective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{paper_jobs, simulate, MachineRef, Topology};
+
+    #[test]
+    fn parse_roundtrips_keys() {
+        for obj in [
+            Objective::WeightedSum,
+            Objective::UnweightedSum,
+            Objective::Makespan,
+            Objective::DeadlineMiss { deadlines: vec![30] },
+        ] {
+            let back = Objective::parse(obj.key(), &[30]).unwrap();
+            assert_eq!(back, obj);
+        }
+        assert!(Objective::parse("banana", &[]).is_err());
+        // deadline-miss without deadlines is rejected
+        assert!(Objective::parse("deadline-miss", &[]).is_err());
+    }
+
+    #[test]
+    fn evaluate_matches_schedule_sums() {
+        let jobs = paper_jobs();
+        let s = simulate(
+            &jobs,
+            &Topology::paper(),
+            &vec![MachineRef::edge(0); jobs.len()],
+        );
+        assert_eq!(
+            Objective::WeightedSum.evaluate(&jobs, &s.trace),
+            s.weighted_sum
+        );
+        assert_eq!(
+            Objective::UnweightedSum.evaluate(&jobs, &s.trace),
+            s.unweighted_sum()
+        );
+        assert_eq!(
+            Objective::Makespan.evaluate(&jobs, &s.trace),
+            s.last_completion()
+        );
+    }
+
+    #[test]
+    fn deadline_miss_counts_and_broadcasts() {
+        let jobs = paper_jobs();
+        let s = simulate(
+            &jobs,
+            &Topology::paper(),
+            &vec![MachineRef::DEVICE; jobs.len()],
+        );
+        // on the device every response equals proc_device (no queueing)
+        let tight = Objective::DeadlineMiss { deadlines: vec![0] };
+        assert_eq!(tight.evaluate(&jobs, &s.trace), jobs.len() as u64);
+        let loose = Objective::DeadlineMiss { deadlines: vec![1000] };
+        assert_eq!(loose.evaluate(&jobs, &s.trace), 0);
+        // a single deadline broadcasts to every job index
+        for i in 0..jobs.len() {
+            assert_eq!(loose.deadline(i), 1000);
+        }
+    }
+
+    #[test]
+    fn suffix_bounds_dominated_by_real_schedules() {
+        let jobs = paper_jobs();
+        let topo = Topology::paper();
+        for obj in [
+            Objective::WeightedSum,
+            Objective::UnweightedSum,
+            Objective::Makespan,
+            Objective::DeadlineMiss { deadlines: vec![10] },
+        ] {
+            let bounds = obj.suffix_bounds(&jobs);
+            assert_eq!(bounds.len(), jobs.len() + 1);
+            assert_eq!(bounds[jobs.len()], 0);
+            // bounds[0] never exceeds the value of any feasible schedule
+            for m in topo.machines() {
+                let s = simulate(&jobs, &topo, &vec![m; jobs.len()]);
+                assert!(
+                    bounds[0] <= obj.evaluate(&jobs, &s.trace),
+                    "{obj}: bound {} beats schedule on {m}",
+                    bounds[0]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! The polymorphic solver front door: one trait, one string-keyed
+//! registry.
+//!
+//! Every allocation strategy in the repo — Algorithm 2's greedy stage and
+//! tabu search, the branch-and-bound optimum, the non-clairvoyant online
+//! dispatcher, and the four Table VII baselines — implements [`Solver`]
+//! and is discoverable through [`SOLVERS`].  The CLI, benches, and tests
+//! enumerate strategies uniformly instead of hard-wiring free functions;
+//! adding a strategy is one registry entry.
+
+use crate::scheduler::{
+    greedy_assignment, schedule_exact_objective, schedule_jobs_objective,
+    schedule_online_objective, simulate, Schedule, Strategy,
+};
+use crate::{Error, Result};
+
+use super::Scenario;
+
+/// A scheduling strategy: consumes a [`Scenario`] (jobs + topology +
+/// objective + tunables), produces a [`Schedule`].
+pub trait Solver {
+    /// Canonical registry key.
+    fn name(&self) -> &'static str;
+
+    /// Solve the scenario, optimizing (or at least respecting) its
+    /// objective.
+    fn solve(&self, scenario: &Scenario) -> Result<Schedule>;
+}
+
+/// One registry row.
+pub struct SolverSpec {
+    /// Canonical key (`edgeward solve --solver <name>`).
+    pub name: &'static str,
+    /// Accepted aliases (lowercase, dash-normalized).
+    pub aliases: &'static [&'static str],
+    /// One-line description for `--compare` tables and docs.
+    pub summary: &'static str,
+    build: fn() -> Box<dyn Solver>,
+}
+
+impl SolverSpec {
+    /// Instantiate this registry row's solver.
+    pub fn build(&self) -> Box<dyn Solver> {
+        (self.build)()
+    }
+}
+
+/// Every registered solver, in Table VII narration order: ours first,
+/// then the reference solvers, then the fixed baselines.
+pub const SOLVERS: &[SolverSpec] = &[
+    SolverSpec {
+        name: "tabu",
+        aliases: &["ours", "algorithm-2"],
+        summary: "Algorithm 2: greedy seed + tabu neighborhood search",
+        build: || Box::new(TabuSolver),
+    },
+    SolverSpec {
+        name: "greedy",
+        aliases: &["algorithm-2-greedy"],
+        summary: "Algorithm 2's greedy earliest-completion stage only",
+        build: || Box::new(GreedySolver),
+    },
+    SolverSpec {
+        name: "exact",
+        aliases: &["optimal", "branch-and-bound"],
+        summary: "branch-and-bound optimum (exponential; <= 20 jobs)",
+        build: || Box::new(ExactSolver),
+    },
+    SolverSpec {
+        name: "online",
+        aliases: &["non-clairvoyant"],
+        summary: "non-clairvoyant dispatcher: commit at release time",
+        build: || Box::new(OnlineSolver),
+    },
+    SolverSpec {
+        name: "per-job-optimal",
+        aliases: &["per-job"],
+        summary: "each job on its single-job-optimal layer (Figure 8)",
+        build: || Box::new(FixedSolver(Strategy::PerJobOptimal)),
+    },
+    SolverSpec {
+        name: "all-cloud",
+        aliases: &["cloud"],
+        summary: "everything on the shared cloud servers",
+        build: || Box::new(FixedSolver(Strategy::AllCloud)),
+    },
+    SolverSpec {
+        name: "all-edge",
+        aliases: &["edge"],
+        summary: "everything on the shared edge servers",
+        build: || Box::new(FixedSolver(Strategy::AllEdge)),
+    },
+    SolverSpec {
+        name: "all-device",
+        aliases: &["device"],
+        summary: "everything on the patients' own devices",
+        build: || Box::new(FixedSolver(Strategy::AllDevice)),
+    },
+];
+
+/// Look up a solver by canonical name or alias (case- and
+/// underscore-insensitive).
+pub fn solver(name: &str) -> Result<Box<dyn Solver>> {
+    let key = name.to_ascii_lowercase().replace('_', "-");
+    SOLVERS
+        .iter()
+        .find(|s| s.name == key || s.aliases.contains(&key.as_str()))
+        .map(|s| s.build())
+        .ok_or_else(|| {
+            Error::Config(format!(
+                "unknown solver {name:?}; registered solvers: {}",
+                solver_names().join(", ")
+            ))
+        })
+}
+
+/// Canonical names of every registered solver, in registry order.
+pub fn solver_names() -> Vec<&'static str> {
+    SOLVERS.iter().map(|s| s.name).collect()
+}
+
+// ------------------------------------------------------------- solvers
+
+/// Algorithm 2: greedy seed improved by the tabu neighborhood search,
+/// minimizing the scenario objective.
+struct TabuSolver;
+
+impl Solver for TabuSolver {
+    fn name(&self) -> &'static str {
+        "tabu"
+    }
+
+    fn solve(&self, scenario: &Scenario) -> Result<Schedule> {
+        scenario.validate()?;
+        Ok(schedule_jobs_objective(
+            &scenario.jobs,
+            &scenario.topology,
+            &scenario.params,
+            &scenario.objective,
+        ))
+    }
+}
+
+/// Algorithm 2's first stage alone (the initial feasible solution).
+struct GreedySolver;
+
+impl Solver for GreedySolver {
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+
+    fn solve(&self, scenario: &Scenario) -> Result<Schedule> {
+        scenario.validate()?;
+        let a = greedy_assignment(&scenario.jobs, &scenario.topology);
+        Ok(simulate(&scenario.jobs, &scenario.topology, &a))
+    }
+}
+
+/// Branch-and-bound exact optimum under the scenario objective.
+struct ExactSolver;
+
+impl Solver for ExactSolver {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn solve(&self, scenario: &Scenario) -> Result<Schedule> {
+        scenario.validate()?;
+        schedule_exact_objective(
+            &scenario.jobs,
+            &scenario.topology,
+            &scenario.objective,
+        )
+    }
+}
+
+/// Non-clairvoyant dispatcher minimizing the scenario objective's
+/// marginal cost per released job.
+struct OnlineSolver;
+
+impl Solver for OnlineSolver {
+    fn name(&self) -> &'static str {
+        "online"
+    }
+
+    fn solve(&self, scenario: &Scenario) -> Result<Schedule> {
+        scenario.validate()?;
+        Ok(schedule_online_objective(
+            &scenario.jobs,
+            &scenario.topology,
+            &scenario.objective,
+        ))
+    }
+}
+
+/// A fixed Table VII baseline strategy (objective-independent placement;
+/// the objective still decides how the result is scored).
+struct FixedSolver(Strategy);
+
+impl Solver for FixedSolver {
+    fn name(&self) -> &'static str {
+        self.0.solver_key()
+    }
+
+    fn solve(&self, scenario: &Scenario) -> Result<Schedule> {
+        scenario.validate()?;
+        let a = self.0.assignment(&scenario.jobs, &scenario.topology);
+        Ok(simulate(&scenario.jobs, &scenario.topology, &a))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_and_aliases_resolve() {
+        for spec in SOLVERS {
+            assert_eq!(solver(spec.name).unwrap().name(), spec.name);
+            for alias in spec.aliases {
+                assert_eq!(solver(alias).unwrap().name(), spec.name);
+            }
+        }
+        // normalization: case and underscores
+        assert_eq!(solver("ALL_CLOUD").unwrap().name(), "all-cloud");
+        assert_eq!(solver("Ours").unwrap().name(), "tabu");
+    }
+
+    #[test]
+    fn unknown_solver_lists_the_registry() {
+        let err = solver("simulated-annealing").unwrap_err().to_string();
+        assert!(err.contains("tabu"), "{err}");
+        assert!(err.contains("all-device"), "{err}");
+    }
+
+    #[test]
+    fn names_unique_and_every_strategy_key_registered() {
+        let mut names = solver_names();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), SOLVERS.len());
+        for s in Strategy::ALL {
+            assert!(
+                solver(s.solver_key()).is_ok(),
+                "{:?} key {} not in registry",
+                s,
+                s.solver_key()
+            );
+        }
+    }
+}

@@ -1,9 +1,10 @@
 //! The four comparison strategies of Table VII.
 
 use super::{
-    schedule_jobs, simulate, Assignment, Job, MachineId, Schedule,
-    SchedulerParams, Topology,
+    schedule_jobs_objective, simulate, Assignment, Job, MachineId,
+    Schedule, SchedulerParams, Topology,
 };
+use crate::scenario::Objective;
 
 /// A deployment strategy over a job set.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -31,6 +32,18 @@ impl Strategy {
         Strategy::AllDevice,
     ];
 
+    /// The [`crate::scenario`] solver-registry key this strategy maps to
+    /// (Table VII row → registry entry).
+    pub fn solver_key(self) -> &'static str {
+        match self {
+            Strategy::Ours => "tabu",
+            Strategy::PerJobOptimal => "per-job-optimal",
+            Strategy::AllCloud => "all-cloud",
+            Strategy::AllEdge => "all-edge",
+            Strategy::AllDevice => "all-device",
+        }
+    }
+
     /// Paper row label.
     pub fn label(self) -> &'static str {
         match self {
@@ -42,18 +55,24 @@ impl Strategy {
         }
     }
 
-    /// The fixed assignment this strategy induces (Ours requires running
-    /// the optimizer; use [`evaluate_strategy`] instead for that).
-    /// Fixed-class strategies cycle over the class's replicas, which
-    /// degenerates to the single machine in the paper topology.
+    /// The fixed assignment this strategy induces (Ours runs the tabu
+    /// optimizer; prefer solving through the [`crate::scenario`] registry
+    /// via [`Strategy::solver_key`]).  Fixed-class strategies cycle over
+    /// the class's replicas, which degenerates to the single machine in
+    /// the paper topology.
     pub fn assignment(self, jobs: &[Job], topo: &Topology) -> Assignment {
         let fixed = |class: MachineId| -> Assignment {
             (0..jobs.len()).map(|i| topo.spread(class, i)).collect()
         };
         match self {
             Strategy::Ours => {
-                schedule_jobs(jobs, topo, &SchedulerParams::default())
-                    .assignment
+                schedule_jobs_objective(
+                    jobs,
+                    topo,
+                    &SchedulerParams::default(),
+                    &Objective::WeightedSum,
+                )
+                .assignment
             }
             Strategy::PerJobOptimal => {
                 // per-class counters keep the spread dense per class
@@ -87,15 +106,22 @@ pub struct StrategyResult {
 }
 
 /// Evaluate a strategy on a job set with the default scheduler parameters.
+#[deprecated(
+    note = "use `scenario::Scenario::solve` with the strategy's \
+            `solver_key()` through the solver registry"
+)]
 pub fn evaluate_strategy(
     jobs: &[Job],
     topo: &Topology,
     strategy: Strategy,
 ) -> StrategyResult {
     let schedule = match strategy {
-        Strategy::Ours => {
-            schedule_jobs(jobs, topo, &SchedulerParams::default())
-        }
+        Strategy::Ours => schedule_jobs_objective(
+            jobs,
+            topo,
+            &SchedulerParams::default(),
+            &Objective::WeightedSum,
+        ),
         s => simulate(jobs, topo, &s.assignment(jobs, topo)),
     };
     StrategyResult { strategy, schedule }
@@ -106,6 +132,20 @@ mod tests {
     use super::*;
     use crate::scheduler::paper_jobs;
 
+    /// Evaluate a strategy through the non-deprecated cores (what the
+    /// registry solvers do).
+    fn eval(jobs: &[Job], topo: &Topology, s: Strategy) -> Schedule {
+        match s {
+            Strategy::Ours => schedule_jobs_objective(
+                jobs,
+                topo,
+                &SchedulerParams::default(),
+                &Objective::WeightedSum,
+            ),
+            s => simulate(jobs, topo, &s.assignment(jobs, topo)),
+        }
+    }
+
     /// Table VII, all five rows.  Fixed-layer rows reproduce the paper's
     /// numbers exactly (modulo the cloud/edge label swap, DESIGN.md §5);
     /// "ours" must win both columns.
@@ -113,27 +153,41 @@ mod tests {
     fn table_vii_shape() {
         let jobs = paper_jobs();
         let topo = Topology::paper();
-        let rows: Vec<_> = Strategy::ALL
+        let rows: Vec<(Strategy, Schedule)> = Strategy::ALL
             .iter()
-            .map(|&s| evaluate_strategy(&jobs, &topo, s))
+            .map(|&s| (s, eval(&jobs, &topo, s)))
             .collect();
-        let ours = &rows[0];
-        for other in &rows[1..] {
+        let ours = &rows[0].1;
+        for (strategy, schedule) in &rows[1..] {
             assert!(
-                ours.schedule.unweighted_sum()
-                    <= other.schedule.unweighted_sum(),
-                "{:?}",
-                other.strategy
+                ours.unweighted_sum() <= schedule.unweighted_sum(),
+                "{strategy:?}"
             );
         }
         // published fixed-layer numbers
         let by_strat = |s: Strategy| {
-            rows.iter().find(|r| r.strategy == s).unwrap()
+            &rows.iter().find(|(r, _)| *r == s).unwrap().1
         };
-        assert_eq!(by_strat(Strategy::AllCloud).schedule.unweighted_sum(), 416);
-        assert_eq!(by_strat(Strategy::AllEdge).schedule.unweighted_sum(), 291);
-        assert_eq!(by_strat(Strategy::AllDevice).schedule.unweighted_sum(), 366);
-        assert_eq!(by_strat(Strategy::AllDevice).schedule.last_completion(), 94);
+        assert_eq!(by_strat(Strategy::AllCloud).unweighted_sum(), 416);
+        assert_eq!(by_strat(Strategy::AllEdge).unweighted_sum(), 291);
+        assert_eq!(by_strat(Strategy::AllDevice).unweighted_sum(), 366);
+        assert_eq!(by_strat(Strategy::AllDevice).last_completion(), 94);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_evaluate_strategy_matches_eval() {
+        let jobs = paper_jobs();
+        let topo = Topology::paper();
+        for s in Strategy::ALL {
+            let old = evaluate_strategy(&jobs, &topo, s);
+            let new = eval(&jobs, &topo, s);
+            assert_eq!(old.schedule.assignment, new.assignment, "{s:?}");
+            assert_eq!(
+                old.schedule.weighted_sum, new.weighted_sum,
+                "{s:?}"
+            );
+        }
     }
 
     #[test]
@@ -141,13 +195,9 @@ mod tests {
         // Figure 8's point: independently-optimal placement piles jobs on
         // the same machine and queues them.
         let jobs = paper_jobs();
-        let r = evaluate_strategy(
-            &jobs,
-            &Topology::paper(),
-            Strategy::PerJobOptimal,
-        );
+        let r = eval(&jobs, &Topology::paper(), Strategy::PerJobOptimal);
         let waits: u64 =
-            r.schedule.trace.entries.iter().map(|e| e.wait()).sum();
+            r.trace.entries.iter().map(|e| e.wait()).sum();
         assert!(waits > 0, "expected queueing under per-job-optimal");
     }
 
@@ -156,13 +206,10 @@ mod tests {
         // paper: ours is 33–63% lower than the alternatives
         let jobs = paper_jobs();
         let topo = Topology::paper();
-        let ours = evaluate_strategy(&jobs, &topo, Strategy::Ours)
-            .schedule
-            .unweighted_sum() as f64;
+        let ours =
+            eval(&jobs, &topo, Strategy::Ours).unweighted_sum() as f64;
         for s in [Strategy::AllCloud, Strategy::AllEdge, Strategy::AllDevice] {
-            let base = evaluate_strategy(&jobs, &topo, s)
-                .schedule
-                .unweighted_sum() as f64;
+            let base = eval(&jobs, &topo, s).unweighted_sum() as f64;
             let reduction = 1.0 - ours / base;
             assert!(
                 reduction > 0.15,
@@ -182,23 +229,23 @@ mod tests {
             a.iter().map(|m| m.replica).collect();
         assert_eq!(used.len(), 2, "both edge replicas should be used");
         // ...and spreading across replicas strictly helps the baseline
-        let narrow = evaluate_strategy(
-            &jobs,
-            &Topology::paper(),
-            Strategy::AllEdge,
-        );
-        let wide = evaluate_strategy(&jobs, &topo, Strategy::AllEdge);
-        assert!(
-            wide.schedule.weighted_sum < narrow.schedule.weighted_sum
-        );
+        let narrow =
+            eval(&jobs, &Topology::paper(), Strategy::AllEdge);
+        let wide = eval(&jobs, &topo, Strategy::AllEdge);
+        assert!(wide.weighted_sum < narrow.weighted_sum);
     }
 
     #[test]
-    fn labels_unique() {
+    fn labels_and_solver_keys_unique() {
         let mut labels: Vec<_> =
             Strategy::ALL.iter().map(|s| s.label()).collect();
         labels.sort_unstable();
         labels.dedup();
         assert_eq!(labels.len(), 5);
+        let mut keys: Vec<_> =
+            Strategy::ALL.iter().map(|s| s.solver_key()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), 5);
     }
 }

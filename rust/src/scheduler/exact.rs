@@ -7,85 +7,102 @@
 //! pruning, making the optimality gap measurable for traces up to ~12 jobs
 //! on the paper topology (the paper's evaluation is 10).
 //!
-//! Assignments are evaluated by the same [`simulate`] semantics as the
-//! heuristic, so the comparison is apples-to-apples.
+//! The search minimizes any [`Objective`]: every objective is monotone in
+//! completion times (adding jobs never improves the partial value), so the
+//! prefix-simulation + uncontended-suffix bound prunes soundly for all of
+//! them.  Assignments are evaluated by the same [`simulate`] semantics as
+//! the heuristic, so comparisons are apples-to-apples.
 
-use super::{simulate, Job, MachineId, MachineRef, Schedule, Topology};
-use crate::simulation::Tick;
+use super::{simulate, Job, MachineRef, Schedule, Topology};
+use crate::scenario::Objective;
+use crate::{Error, Result};
 
-/// Exhaustive branch-and-bound over job→machine assignments, minimizing
-/// the priority-weighted whole response time.  Exponential in `jobs.len()`
-/// — intended for gap measurement on small traces; panics over 20 jobs to
+/// Largest instance the exact search accepts.
+pub const EXACT_JOB_LIMIT: usize = 20;
+
+/// Exhaustive branch-and-bound minimizing the priority-weighted whole
+/// response time (eq. 5).  Exponential in `jobs.len()` — intended for gap
+/// measurement on small traces; panics over [`EXACT_JOB_LIMIT`] jobs to
 /// catch accidental misuse.
+#[deprecated(
+    note = "use `scenario::Scenario` with the \"exact\" solver, or \
+            `schedule_exact_objective` for an explicit objective"
+)]
 pub fn schedule_exact(jobs: &[Job], topo: &Topology) -> Schedule {
-    assert!(
-        jobs.len() <= 20,
-        "exact solver is exponential; {} jobs is too many",
-        jobs.len()
-    );
+    schedule_exact_objective(jobs, topo, &Objective::WeightedSum)
+        .unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Exhaustive branch-and-bound minimizing `objective`.  Returns
+/// [`Error::Scheduler`] (instead of searching forever) for instances over
+/// [`EXACT_JOB_LIMIT`] jobs.
+pub fn schedule_exact_objective(
+    jobs: &[Job],
+    topo: &Topology,
+    objective: &Objective,
+) -> Result<Schedule> {
+    if jobs.len() > EXACT_JOB_LIMIT {
+        return Err(Error::Scheduler(format!(
+            "exact solver is exponential; {} jobs is too many \
+             (limit {EXACT_JOB_LIMIT})",
+            jobs.len()
+        )));
+    }
     if jobs.is_empty() {
-        return simulate(jobs, topo, &[]);
+        return Ok(simulate(jobs, topo, &[]));
     }
 
     // Branch order: jobs by release (stable w.r.t. the simulator's FCFS);
     // machines in canonical order (cloud replicas, edge replicas, device).
     let machines = topo.machines();
-    let mut best: Option<Schedule> = None;
+    let mut best: Option<(Schedule, u64)> = None;
     let mut assignment = vec![MachineRef::DEVICE; jobs.len()];
 
-    // Per-job uncontended weighted cost — the suffix lower bound
-    // (class-level, so replica count doesn't change it).
-    let suffix_lb: Vec<Tick> = {
-        let per_job: Vec<Tick> = jobs
-            .iter()
-            .map(|j| {
-                j.weight as Tick
-                    * MachineId::ALL
-                        .iter()
-                        .map(|&m| j.execution(m))
-                        .min()
-                        .unwrap()
-            })
-            .collect();
-        // suffix sums: lb of assigning jobs k..n optimally, ignoring
-        // contention
-        let mut s = vec![0; jobs.len() + 1];
-        for k in (0..jobs.len()).rev() {
-            s[k] = s[k + 1] + per_job[k];
-        }
-        s
-    };
+    // Per-objective uncontended suffix bound: the value contribution of
+    // jobs k..n each at its machine-minimal execution time (class-level,
+    // so replica count doesn't change it).
+    let suffix_lb = objective.suffix_bounds(jobs);
 
     fn dfs(
         jobs: &[Job],
         topo: &Topology,
         machines: &[MachineRef],
+        objective: &Objective,
         k: usize,
         assignment: &mut Vec<MachineRef>,
-        suffix_lb: &[Tick],
-        best: &mut Option<Schedule>,
+        suffix_lb: &[u64],
+        best: &mut Option<(Schedule, u64)>,
     ) {
+        // eq. 5 values come free with `simulate`; other objectives fold
+        // the trace (avoids re-summing in the search's hottest loop)
+        let value_of = |s: &Schedule, jobs: &[Job]| match objective {
+            Objective::WeightedSum => s.weighted_sum,
+            _ => objective.evaluate(jobs, &s.trace),
+        };
         if k == jobs.len() {
             let s = simulate(jobs, topo, assignment);
-            if best
-                .as_ref()
-                .map_or(true, |b| s.weighted_sum < b.weighted_sum)
-            {
-                *best = Some(s);
+            let v = value_of(&s, jobs);
+            if best.as_ref().map_or(true, |(_, bv)| v < *bv) {
+                *best = Some((s, v));
             }
             return;
         }
-        // prune: cost of the first k jobs alone (simulated with the
-        // partial assignment) + uncontended bound for the rest
-        if let Some(b) = best {
+        // prune: value of the first k jobs alone (simulated with the
+        // partial assignment) combined with the uncontended bound for the
+        // rest — sound because completions only grow as jobs are added
+        if let Some((_, bv)) = best {
             let partial = simulate(&jobs[..k], topo, &assignment[..k]);
-            if partial.weighted_sum + suffix_lb[k] >= b.weighted_sum {
+            let pv = value_of(&partial, &jobs[..k]);
+            if objective.combine(pv, suffix_lb[k]) >= *bv {
                 return;
             }
         }
         for &m in machines {
             assignment[k] = m;
-            dfs(jobs, topo, machines, k + 1, assignment, suffix_lb, best);
+            dfs(
+                jobs, topo, machines, objective, k + 1, assignment,
+                suffix_lb, best,
+            );
         }
     }
 
@@ -93,27 +110,43 @@ pub fn schedule_exact(jobs: &[Job], topo: &Topology) -> Schedule {
         jobs,
         topo,
         &machines,
+        objective,
         0,
         &mut assignment,
         &suffix_lb,
         &mut best,
     );
-    best.expect("nonempty search space")
+    Ok(best.expect("nonempty search space").0)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::Rng;
-    use crate::scheduler::{paper_jobs, schedule_jobs, SchedulerParams};
+    use crate::scheduler::{
+        paper_jobs, schedule_jobs_objective, SchedulerParams,
+    };
+
+    fn exact(jobs: &[Job], topo: &Topology) -> Schedule {
+        schedule_exact_objective(jobs, topo, &Objective::WeightedSum)
+            .unwrap()
+    }
+
+    fn tabu(jobs: &[Job], topo: &Topology) -> Schedule {
+        schedule_jobs_objective(
+            jobs,
+            topo,
+            &SchedulerParams::default(),
+            &Objective::WeightedSum,
+        )
+    }
 
     #[test]
     fn exact_on_paper_trace() {
         let jobs = paper_jobs();
         let topo = Topology::paper();
-        let exact = schedule_exact(&jobs, &topo);
-        let ours =
-            schedule_jobs(&jobs, &topo, &SchedulerParams::default());
+        let exact = exact(&jobs, &topo);
+        let ours = tabu(&jobs, &topo);
         // the heuristic can never beat the optimum
         assert!(ours.weighted_sum >= exact.weighted_sum);
         // ...and on the paper's trace it should be close (< 10% gap)
@@ -147,9 +180,8 @@ mod tests {
             } else {
                 Topology::new(1, 2)
             };
-            let exact = schedule_exact(&jobs, &topo);
-            let ours =
-                schedule_jobs(&jobs, &topo, &SchedulerParams::default());
+            let exact = exact(&jobs, &topo);
+            let ours = tabu(&jobs, &topo);
             assert!(
                 ours.weighted_sum >= exact.weighted_sum,
                 "seed {seed}: heuristic {} < exact {}?!",
@@ -160,31 +192,77 @@ mod tests {
     }
 
     #[test]
+    fn exact_optimal_per_objective() {
+        // the exact solver under each objective is at least as good as
+        // every other solver's schedule *evaluated under that objective*
+        let jobs: Vec<Job> = paper_jobs().into_iter().take(7).collect();
+        let topo = Topology::paper();
+        for obj in [
+            Objective::UnweightedSum,
+            Objective::Makespan,
+            Objective::DeadlineMiss { deadlines: vec![25] },
+        ] {
+            let opt =
+                schedule_exact_objective(&jobs, &topo, &obj).unwrap();
+            let opt_v = obj.evaluate(&jobs, &opt.trace);
+            // compare against tabu under the same objective and the
+            // eq.-5 exact optimum
+            for other in [
+                schedule_jobs_objective(
+                    &jobs,
+                    &topo,
+                    &SchedulerParams::default(),
+                    &obj,
+                ),
+                exact(&jobs, &topo),
+            ] {
+                assert!(
+                    opt_v <= obj.evaluate(&jobs, &other.trace),
+                    "{obj}: exact not optimal"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn exact_with_extra_edge_never_worse() {
         // the optimum is provably monotone in the machine set
         let jobs: Vec<Job> = paper_jobs().into_iter().take(7).collect();
-        let narrow = schedule_exact(&jobs, &Topology::paper());
-        let wide = schedule_exact(&jobs, &Topology::new(1, 2));
+        let narrow = exact(&jobs, &Topology::paper());
+        let wide = exact(&jobs, &Topology::new(1, 2));
         assert!(wide.weighted_sum <= narrow.weighted_sum);
     }
 
     #[test]
     fn exact_single_job_picks_optimal_machine() {
         let jobs = vec![paper_jobs()[0]];
-        let s = schedule_exact(&jobs, &Topology::paper());
+        let s = exact(&jobs, &Topology::paper());
         assert_eq!(s.assignment[0].class, jobs[0].optimal_machine());
     }
 
     #[test]
     fn empty_jobs() {
-        let s = schedule_exact(&[], &Topology::paper());
+        let s = exact(&[], &Topology::paper());
         assert_eq!(s.weighted_sum, 0);
     }
 
     #[test]
+    fn refuses_large_instances_with_typed_error() {
+        let jobs = vec![paper_jobs()[0]; EXACT_JOB_LIMIT + 1];
+        let err = schedule_exact_objective(
+            &jobs,
+            &Topology::paper(),
+            &Objective::WeightedSum,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("too many"), "{err}");
+    }
+
+    #[test]
     #[should_panic(expected = "too many")]
-    fn refuses_large_instances() {
-        let jobs = vec![paper_jobs()[0]; 21];
+    #[allow(deprecated)]
+    fn deprecated_shim_still_panics_on_large_instances() {
+        let jobs = vec![paper_jobs()[0]; EXACT_JOB_LIMIT + 1];
         schedule_exact(&jobs, &Topology::paper());
     }
 }

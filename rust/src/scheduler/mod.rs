@@ -14,10 +14,18 @@
 //!   are exclusive per C1; no preemption per C2).
 //! * [`greedy_assignment`] — the initial feasible solution: jobs in release
 //!   order, each on its earliest-completion machine.
-//! * [`schedule_jobs`] — Algorithm 2: greedy + tabu neighborhood search.
-//! * [`schedule_exact`] / [`schedule_online`] — branch-and-bound optimum
-//!   and the non-clairvoyant counterpart, for gap measurement.
+//! * [`schedule_jobs_objective`] — Algorithm 2: greedy + tabu neighborhood
+//!   search, minimizing any [`crate::scenario::Objective`].
+//! * [`schedule_exact_objective`] / [`schedule_online_objective`] —
+//!   branch-and-bound optimum and the non-clairvoyant counterpart, for
+//!   gap measurement.
 //! * [`Strategy`] — the four baseline strategies of Table VII.
+//!
+//! These cores power the [`crate::scenario`] solver registry — the
+//! preferred entry point (`Scenario::paper().solve("tabu")`).  The old
+//! single-objective free functions (`schedule_jobs`, `schedule_exact`,
+//! `schedule_online`, `evaluate_strategy`) remain as thin deprecated
+//! shims with bit-for-bit identical results.
 
 mod baselines;
 mod exact;
@@ -27,13 +35,28 @@ mod online;
 mod simulate;
 mod tabu;
 
-pub use baselines::{evaluate_strategy, Strategy, StrategyResult};
-pub use exact::schedule_exact;
+pub use baselines::{Strategy, StrategyResult};
+pub use exact::{schedule_exact_objective, EXACT_JOB_LIMIT};
 pub use greedy::greedy_assignment;
 pub use jobs::{jobs_from_workloads, paper_jobs, Job};
+pub use online::schedule_online_objective;
+pub use simulate::{
+    objective_cost, simulate, weighted_cost, Assignment, SimScratch,
+};
+pub use tabu::{
+    improve, improve_objective, schedule_jobs_objective, SchedulerParams,
+};
+
+// the deprecated single-objective entry points stay re-exported so old
+// call sites keep compiling (with a deprecation warning)
+#[allow(deprecated)]
+pub use baselines::evaluate_strategy;
+#[allow(deprecated)]
+pub use exact::schedule_exact;
+#[allow(deprecated)]
 pub use online::schedule_online;
-pub use simulate::{simulate, weighted_cost, Assignment, SimScratch};
-pub use tabu::{improve, schedule_jobs, SchedulerParams};
+#[allow(deprecated)]
+pub use tabu::schedule_jobs;
 
 pub use crate::topology::{MachineId, MachineRef, Topology};
 
@@ -127,10 +150,11 @@ mod tests {
         let jobs = paper_jobs();
         let lb = lower_bound(&jobs);
         // every schedule's weighted sum must dominate the bound
-        let sched = schedule_jobs(
+        let sched = schedule_jobs_objective(
             &jobs,
             &Topology::paper(),
             &SchedulerParams::default(),
+            &crate::scenario::Objective::WeightedSum,
         );
         assert!(sched.weighted_sum >= lb, "{} < {lb}", sched.weighted_sum);
         assert!(lb > 0);
@@ -151,7 +175,12 @@ mod tests {
     fn replica_utilization_covers_shared_machines() {
         let jobs = paper_jobs();
         let topo = Topology::new(1, 2);
-        let s = schedule_jobs(&jobs, &topo, &SchedulerParams::default());
+        let s = schedule_jobs_objective(
+            &jobs,
+            &topo,
+            &SchedulerParams::default(),
+            &crate::scenario::Objective::WeightedSum,
+        );
         let util = s.replica_utilization();
         assert_eq!(util.len(), 3); // CC0, ES0, ES1
         for (m, u) in util {

@@ -15,11 +15,28 @@
 //! is measured in `rust/benches/sched_multi.rs` and the tests below.
 
 use super::{simulate, Assignment, Job, Schedule, Topology};
+use crate::scenario::Objective;
 use crate::simulation::MachineTimeline;
 
-/// Assign jobs in release order with no lookahead; returns the resulting
-/// schedule (simulated with the same C1–C5 semantics).
+/// Assign jobs in release order with no lookahead, minimizing the paper
+/// objective (eq. 5) — see [`schedule_online_objective`].
+#[deprecated(
+    note = "use `scenario::Scenario` with the \"online\" solver, or \
+            `schedule_online_objective` for an explicit objective"
+)]
 pub fn schedule_online(jobs: &[Job], topo: &Topology) -> Schedule {
+    schedule_online_objective(jobs, topo, &Objective::WeightedSum)
+}
+
+/// Assign jobs in release order with no lookahead; each job is committed
+/// to the machine minimizing its *own* marginal cost under `objective`
+/// given the commitments so far.  Returns the resulting schedule
+/// (simulated with the same C1–C5 semantics).
+pub fn schedule_online_objective(
+    jobs: &[Job],
+    topo: &Topology,
+    objective: &Objective,
+) -> Schedule {
     // release order; ties: higher priority first (C5), then index —
     // exactly what a dispatcher sees on the wire
     let mut order: Vec<usize> = (0..jobs.len()).collect();
@@ -35,8 +52,8 @@ pub fn schedule_online(jobs: &[Job], topo: &Topology) -> Schedule {
 
     for &i in &order {
         let j = &jobs[i];
-        // weighted response if committed now; first minimum wins
-        // (canonical order keeps the paper's cloud-first tie-break)
+        // marginal cost if committed now; first minimum wins (canonical
+        // order keeps the paper's cloud-first tie-break)
         let (m, _) = machines
             .iter()
             .map(|&m| {
@@ -47,7 +64,7 @@ pub fn schedule_online(jobs: &[Job], topo: &Topology) -> Schedule {
                     }
                     None => avail + j.processing(m.class),
                 };
-                (m, (end - j.release) * j.weight as u64)
+                (m, objective.marginal(i, j, end))
             })
             .min_by_key(|(_, c)| *c)
             .expect("topology has at least the device");
@@ -67,17 +84,30 @@ mod tests {
     use super::*;
     use crate::data::Rng;
     use crate::scheduler::{
-        paper_jobs, schedule_exact, schedule_jobs, SchedulerParams,
-        Strategy,
+        paper_jobs, schedule_exact_objective, schedule_jobs_objective,
+        SchedulerParams, Strategy,
     };
+
+    fn online(jobs: &[Job], topo: &Topology) -> Schedule {
+        schedule_online_objective(jobs, topo, &Objective::WeightedSum)
+    }
+
+    fn exact(jobs: &[Job], topo: &Topology) -> Schedule {
+        schedule_exact_objective(jobs, topo, &Objective::WeightedSum)
+            .unwrap()
+    }
 
     #[test]
     fn online_on_paper_trace() {
         let jobs = paper_jobs();
         let topo = Topology::paper();
-        let online = schedule_online(&jobs, &topo);
-        let offline =
-            schedule_jobs(&jobs, &topo, &SchedulerParams::default());
+        let online = online(&jobs, &topo);
+        let offline = schedule_jobs_objective(
+            &jobs,
+            &topo,
+            &SchedulerParams::default(),
+            &Objective::WeightedSum,
+        );
         // online can't beat offline, but must stay within 2× on the
         // paper's trace (it's actually much closer)
         assert!(online.weighted_sum >= offline.weighted_sum);
@@ -93,7 +123,7 @@ mod tests {
     fn online_beats_fixed_layers() {
         let jobs = paper_jobs();
         let topo = Topology::paper();
-        let online = schedule_online(&jobs, &topo);
+        let online = online(&jobs, &topo);
         for s in [Strategy::AllCloud, Strategy::AllEdge, Strategy::AllDevice]
         {
             let base = simulate(&jobs, &topo, &s.assignment(&jobs, &topo));
@@ -128,8 +158,8 @@ mod tests {
                 })
                 .collect();
             let topo = Topology::paper();
-            let online = schedule_online(&jobs, &topo);
-            let exact = schedule_exact(&jobs, &topo);
+            let online = online(&jobs, &topo);
+            let exact = exact(&jobs, &topo);
             let ratio =
                 online.weighted_sum as f64 / exact.weighted_sum.max(1) as f64;
             worst = worst.max(ratio);
@@ -142,9 +172,24 @@ mod tests {
     fn online_single_job_is_optimal() {
         let jobs = vec![paper_jobs()[3]];
         let topo = Topology::paper();
-        let online = schedule_online(&jobs, &topo);
-        let exact = schedule_exact(&jobs, &topo);
+        let online = online(&jobs, &topo);
+        let exact = exact(&jobs, &topo);
         assert_eq!(online.weighted_sum, exact.weighted_sum);
+    }
+
+    #[test]
+    fn online_objective_threading_is_live() {
+        // a non-eq.5 objective produces a complete, valid schedule (the
+        // dispatcher minimizes absolute completion under Makespan)
+        let jobs = paper_jobs();
+        let topo = Topology::paper();
+        let by_makespan = schedule_online_objective(
+            &jobs,
+            &topo,
+            &Objective::Makespan,
+        );
+        assert_eq!(by_makespan.assignment.len(), jobs.len());
+        assert!(by_makespan.last_completion() > 0);
     }
 
     #[test]
@@ -163,7 +208,7 @@ mod tests {
             })
             .collect();
         let topo = Topology::new(1, 2);
-        let s = schedule_online(&burst, &topo);
+        let s = online(&burst, &topo);
         let replicas: std::collections::HashSet<usize> = s
             .assignment
             .iter()

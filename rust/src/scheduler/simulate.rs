@@ -15,6 +15,7 @@
 //!   they are released.
 
 use super::{Job, MachineRef, Schedule, Topology};
+use crate::scenario::Objective;
 use crate::simulation::{MachineTimeline, ScheduleTrace, TraceEntry};
 
 /// A per-job machine assignment.
@@ -30,16 +31,19 @@ pub struct SimScratch {
     free: Vec<u64>,
 }
 
-/// Compute only the priority-weighted whole response time of an
-/// assignment — the same semantics as [`simulate`], minus trace
-/// construction and allocation.  `simulate(jobs, topo, a).weighted_sum ==
-/// weighted_cost(jobs, topo, a, ..)` is asserted by tests.
-pub fn weighted_cost(
+/// The FCFS completion-time fold shared by [`weighted_cost`] and
+/// [`objective_cost`]: compute each job's completion in availability
+/// order (the exact semantics of [`simulate`], minus trace
+/// construction) and hand `(job index, job, end)` to `f`.
+/// Monomorphized per caller, so the eq.-5 hot path stays branch-free.
+#[inline(always)]
+fn fold_completions(
     jobs: &[Job],
     topo: &Topology,
     assignment: &[MachineRef],
     scratch: &mut SimScratch,
-) -> u64 {
+    mut f: impl FnMut(usize, &Job, u64),
+) {
     debug_assert_eq!(jobs.len(), assignment.len());
     let order = &mut scratch.order;
     order.clear();
@@ -57,7 +61,6 @@ pub fn weighted_cost(
     let free = &mut scratch.free;
     free.clear();
     free.resize(topo.shared_count(), 0);
-    let mut sum = 0u64;
     for &i in order.iter() {
         let j = &jobs[i];
         let m = assignment[i];
@@ -75,11 +78,49 @@ pub fn weighted_cost(
             }
             None => avail + p,
         };
-        sum += j.weight as u64 * (end - j.release);
+        f(i, j, end);
     }
+}
+
+/// Compute only the priority-weighted whole response time of an
+/// assignment — the same semantics as [`simulate`], minus trace
+/// construction and allocation.  `simulate(jobs, topo, a).weighted_sum ==
+/// weighted_cost(jobs, topo, a, ..)` is asserted by tests.
+pub fn weighted_cost(
+    jobs: &[Job],
+    topo: &Topology,
+    assignment: &[MachineRef],
+    scratch: &mut SimScratch,
+) -> u64 {
+    let mut sum = 0u64;
+    fold_completions(jobs, topo, assignment, scratch, |_, j, end| {
+        sum += j.weight as u64 * (end - j.release);
+    });
     sum
     // (an early-exit cutoff variant was tried and reverted: the branch
     // bought nothing at these n — EXPERIMENTS.md §Perf)
+}
+
+/// [`weighted_cost`] generalized over an [`Objective`]: the same
+/// availability-ordered FCFS completion times, folded per the selected
+/// objective instead of hard-wiring eq. 5.  The eq.-5 case dispatches to
+/// [`weighted_cost`] itself, so the paper objective keeps its exact
+/// (bit-for-bit, branch-free) hot path.
+pub fn objective_cost(
+    jobs: &[Job],
+    topo: &Topology,
+    assignment: &[MachineRef],
+    objective: &Objective,
+    scratch: &mut SimScratch,
+) -> u64 {
+    if matches!(objective, Objective::WeightedSum) {
+        return weighted_cost(jobs, topo, assignment, scratch);
+    }
+    let mut acc = 0u64;
+    fold_completions(jobs, topo, assignment, scratch, |i, j, end| {
+        acc = objective.accumulate(acc, i, j, end);
+    });
+    acc
 }
 
 /// Simulate an assignment and return the finished [`Schedule`].
@@ -272,6 +313,44 @@ mod tests {
             let fast =
                 weighted_cost(&jobs, &topo, &assignment, &mut scratch);
             assert_eq!(full, fast, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn objective_cost_agrees_with_simulate_evaluation() {
+        use crate::data::Rng;
+        let mut scratch = SimScratch::default();
+        let objectives = [
+            Objective::WeightedSum,
+            Objective::UnweightedSum,
+            Objective::Makespan,
+            Objective::DeadlineMiss { deadlines: vec![15, 40] },
+        ];
+        for seed in 0..60 {
+            let mut rng = Rng::new(seed ^ 0x0B1E);
+            let jobs = paper_jobs();
+            let topo = if seed % 2 == 0 {
+                Topology::paper()
+            } else {
+                Topology::new(2, 3)
+            };
+            let machines = topo.machines();
+            let assignment: Assignment = (0..jobs.len())
+                .map(|_| {
+                    machines[rng.below(machines.len() as u64) as usize]
+                })
+                .collect();
+            let s = simulate(&jobs, &topo, &assignment);
+            for obj in &objectives {
+                let fast = objective_cost(
+                    &jobs, &topo, &assignment, obj, &mut scratch,
+                );
+                assert_eq!(
+                    fast,
+                    obj.evaluate(&jobs, &s.trace),
+                    "seed {seed}, objective {obj}"
+                );
+            }
         }
     }
 

@@ -10,9 +10,10 @@
 //! minima; the best solution ever seen is returned.
 
 use super::{
-    greedy_assignment, simulate, weighted_cost, Assignment, Job,
+    greedy_assignment, objective_cost, simulate, Assignment, Job,
     MachineRef, Schedule, SimScratch, Topology,
 };
+use crate::scenario::Objective;
 
 /// Tunables for Algorithm 2.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -64,34 +65,63 @@ impl SchedulerParams {
 }
 
 /// Run Algorithm 2 end-to-end: greedy seed + tabu neighborhood search.
+#[deprecated(
+    note = "use `scenario::Scenario` with the \"tabu\" solver, or \
+            `schedule_jobs_objective` for an explicit objective"
+)]
 pub fn schedule_jobs(
     jobs: &[Job],
     topo: &Topology,
     params: &SchedulerParams,
 ) -> Schedule {
-    let seed = greedy_assignment(jobs, topo);
-    improve(jobs, topo, seed, params)
+    schedule_jobs_objective(jobs, topo, params, &Objective::WeightedSum)
 }
 
-/// Improve a starting assignment with the tabu neighborhood search.  The
-/// result is never worse than `start` (the best assignment ever seen —
-/// including the start — is returned), which makes warm-starting a larger
-/// topology from a smaller one's solution monotone by construction.
-///
-/// `start` must only reference machines of `topo` (warm-start from a
-/// topology whose replicas are a subset, e.g. fewer edges): checked by
-/// `debug_assert` in the hot path and by the final `simulate`.
+/// Algorithm 2 (greedy seed + tabu neighborhood search) minimizing an
+/// arbitrary [`Objective`].  With [`Objective::WeightedSum`] this is
+/// bit-for-bit the paper's Algorithm 2.
+pub fn schedule_jobs_objective(
+    jobs: &[Job],
+    topo: &Topology,
+    params: &SchedulerParams,
+    objective: &Objective,
+) -> Schedule {
+    let seed = greedy_assignment(jobs, topo);
+    improve_objective(jobs, topo, seed, params, objective)
+}
+
+/// Improve a starting assignment with the tabu neighborhood search under
+/// the paper objective (eq. 5) — see [`improve_objective`].
 pub fn improve(
     jobs: &[Job],
     topo: &Topology,
     start: Assignment,
     params: &SchedulerParams,
 ) -> Schedule {
+    improve_objective(jobs, topo, start, params, &Objective::WeightedSum)
+}
+
+/// Improve a starting assignment with the tabu neighborhood search,
+/// minimizing `objective`.  The result is never worse than `start` under
+/// that objective (the best assignment ever seen — including the start —
+/// is returned), which makes warm-starting a larger topology from a
+/// smaller one's solution monotone by construction *for any objective*.
+///
+/// `start` must only reference machines of `topo` (warm-start from a
+/// topology whose replicas are a subset, e.g. fewer edges): checked by
+/// `debug_assert` in the hot path and by the final `simulate`.
+pub fn improve_objective(
+    jobs: &[Job],
+    topo: &Topology,
+    start: Assignment,
+    params: &SchedulerParams,
+    objective: &Objective,
+) -> Schedule {
     let machines = topo.machines();
     let mut current = start;
     let mut scratch = SimScratch::default();
     let mut current_cost =
-        weighted_cost(jobs, topo, &current, &mut scratch);
+        objective_cost(jobs, topo, &current, objective, &mut scratch);
     let mut best_assignment = current.clone();
     let mut best_cost = current_cost;
 
@@ -114,8 +144,9 @@ pub fn improve(
                     tabu.get(&(i, m)).map_or(false, |&until| iter < until);
                 // evaluate the move in place (§Perf: no clone, no trace)
                 current[i] = m;
-                let cost =
-                    weighted_cost(jobs, topo, &current, &mut scratch);
+                let cost = objective_cost(
+                    jobs, topo, &current, objective, &mut scratch,
+                );
                 current[i] = old_m;
                 // aspiration: a tabu move is allowed if it beats the best
                 if forbidden && cost >= best_cost {
@@ -153,33 +184,43 @@ pub fn improve(
 mod tests {
     use super::*;
     use crate::scheduler::{
-        evaluate_strategy, lower_bound, paper_jobs, Strategy,
+        lower_bound, paper_jobs, weighted_cost, Strategy,
     };
+
+    /// Algorithm 2 under the paper objective (the old `schedule_jobs`).
+    fn tabu(jobs: &[Job], topo: &Topology) -> Schedule {
+        schedule_jobs_objective(
+            jobs,
+            topo,
+            &SchedulerParams::default(),
+            &Objective::WeightedSum,
+        )
+    }
 
     #[test]
     fn algorithm2_beats_all_baselines_on_paper_trace() {
         let jobs = paper_jobs();
         let topo = Topology::paper();
-        let ours =
-            schedule_jobs(&jobs, &topo, &SchedulerParams::default());
+        let ours = tabu(&jobs, &topo);
         for strat in [
             Strategy::PerJobOptimal,
             Strategy::AllCloud,
             Strategy::AllEdge,
             Strategy::AllDevice,
         ] {
-            let base = evaluate_strategy(&jobs, &topo, strat);
+            let base =
+                simulate(&jobs, &topo, &strat.assignment(&jobs, &topo));
             assert!(
-                ours.unweighted_sum() <= base.schedule.unweighted_sum(),
+                ours.unweighted_sum() <= base.unweighted_sum(),
                 "ours {} vs {strat:?} {}",
                 ours.unweighted_sum(),
-                base.schedule.unweighted_sum()
+                base.unweighted_sum()
             );
             assert!(
-                ours.last_completion() <= base.schedule.last_completion(),
+                ours.last_completion() <= base.last_completion(),
                 "last: ours {} vs {strat:?} {}",
                 ours.last_completion(),
-                base.schedule.last_completion()
+                base.last_completion()
             );
         }
     }
@@ -187,11 +228,7 @@ mod tests {
     #[test]
     fn algorithm2_dominates_lower_bound() {
         let jobs = paper_jobs();
-        let ours = schedule_jobs(
-            &jobs,
-            &Topology::paper(),
-            &SchedulerParams::default(),
-        );
+        let ours = tabu(&jobs, &Topology::paper());
         assert!(ours.weighted_sum >= lower_bound(&jobs));
     }
 
@@ -201,8 +238,7 @@ mod tests {
         let topo = Topology::paper();
         let greedy =
             simulate(&jobs, &topo, &greedy_assignment(&jobs, &topo));
-        let ours =
-            schedule_jobs(&jobs, &topo, &SchedulerParams::default());
+        let ours = tabu(&jobs, &topo);
         assert!(ours.weighted_sum <= greedy.weighted_sum);
     }
 
@@ -227,11 +263,40 @@ mod tests {
     }
 
     #[test]
+    fn improve_objective_never_worse_than_start_for_any_objective() {
+        let jobs = paper_jobs();
+        let topo = Topology::new(1, 2);
+        let mut scratch = SimScratch::default();
+        for obj in [
+            Objective::UnweightedSum,
+            Objective::Makespan,
+            Objective::DeadlineMiss { deadlines: vec![20] },
+        ] {
+            let start: Assignment =
+                vec![MachineRef::DEVICE; jobs.len()];
+            let start_cost = objective_cost(
+                &jobs, &topo, &start, &obj, &mut scratch,
+            );
+            let s = improve_objective(
+                &jobs,
+                &topo,
+                start,
+                &SchedulerParams::default(),
+                &obj,
+            );
+            assert!(
+                obj.evaluate(&jobs, &s.trace) <= start_cost,
+                "{obj}"
+            );
+        }
+    }
+
+    #[test]
     fn deterministic() {
         let jobs = paper_jobs();
         let topo = Topology::new(1, 2);
-        let a = schedule_jobs(&jobs, &topo, &SchedulerParams::default());
-        let b = schedule_jobs(&jobs, &topo, &SchedulerParams::default());
+        let a = tabu(&jobs, &topo);
+        let b = tabu(&jobs, &topo);
         assert_eq!(a.assignment, b.assignment);
         assert_eq!(a.weighted_sum, b.weighted_sum);
     }
@@ -245,11 +310,7 @@ mod tests {
     #[test]
     fn single_job_trivial() {
         let jobs = vec![paper_jobs()[4]];
-        let s = schedule_jobs(
-            &jobs,
-            &Topology::paper(),
-            &SchedulerParams::default(),
-        );
+        let s = tabu(&jobs, &Topology::paper());
         assert_eq!(s.assignment.len(), 1);
         // single job must land on its optimal machine class
         assert_eq!(s.assignment[0].class, jobs[0].optimal_machine());
@@ -257,12 +318,22 @@ mod tests {
 
     #[test]
     fn empty_jobs_ok() {
-        let s = schedule_jobs(
-            &[],
-            &Topology::paper(),
-            &SchedulerParams::default(),
-        );
+        let s = tabu(&[], &Topology::paper());
         assert_eq!(s.weighted_sum, 0);
         assert_eq!(s.unweighted_sum(), 0);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shim_is_bit_for_bit() {
+        // the old entry point must stay identical to the objective-aware
+        // core under eq. 5
+        let jobs = paper_jobs();
+        let topo = Topology::paper();
+        let old =
+            schedule_jobs(&jobs, &topo, &SchedulerParams::default());
+        let new = tabu(&jobs, &topo);
+        assert_eq!(old.assignment, new.assignment);
+        assert_eq!(old.weighted_sum, new.weighted_sum);
     }
 }

@@ -147,8 +147,23 @@ impl Default for Topology {
 }
 
 impl Topology {
+    /// Construct without validation (infallible, for literals known to be
+    /// sane).  Degenerate replica counts only surface when a scheduler
+    /// core is reached, so prefer [`Topology::try_new`] on any path that
+    /// takes user input — it rejects them up front with
+    /// [`Error::InvalidTopology`].
     pub fn new(clouds: usize, edges: usize) -> Self {
         Topology { clouds, edges }
+    }
+
+    /// Validated construction: the front-door constructor for config,
+    /// CLI, and [`crate::scenario`] input.  `try_new(0, _)` /
+    /// `try_new(_, 0)` return [`Error::InvalidTopology`] instead of
+    /// panicking later inside `simulate`.
+    pub fn try_new(clouds: usize, edges: usize) -> Result<Self> {
+        let t = Topology { clouds, edges };
+        t.validate()?;
+        Ok(t)
     }
 
     /// The paper's configuration: one cloud + one edge server
@@ -249,17 +264,23 @@ impl Topology {
 
     pub fn validate(&self) -> Result<()> {
         if self.clouds == 0 || self.edges == 0 {
-            return Err(Error::Config(
-                "topology needs at least one cloud and one edge server"
+            return Err(Error::InvalidTopology {
+                clouds: self.clouds,
+                edges: self.edges,
+                reason: "needs at least one cloud and one edge server"
                     .into(),
-            ));
+            });
         }
         if self.shared_count() > 64 {
-            return Err(Error::Config(format!(
-                "topology has {} shared machines; >64 is almost certainly \
-                 a config typo",
-                self.shared_count()
-            )));
+            return Err(Error::InvalidTopology {
+                clouds: self.clouds,
+                edges: self.edges,
+                reason: format!(
+                    "{} shared machines; >64 is almost certainly a \
+                     config typo",
+                    self.shared_count()
+                ),
+            });
         }
         Ok(())
     }
@@ -368,6 +389,22 @@ mod tests {
         assert!(Topology::new(1, 0).validate().is_err());
         assert!(Topology::new(1, 64).validate().is_err());
         assert!(Topology::new(2, 4).validate().is_ok());
+    }
+
+    #[test]
+    fn try_new_returns_typed_error() {
+        assert_eq!(Topology::try_new(1, 2).unwrap(), Topology::new(1, 2));
+        for (c, e) in [(0usize, 1usize), (1, 0), (0, 0), (32, 33)] {
+            match Topology::try_new(c, e) {
+                Err(Error::InvalidTopology { clouds, edges, .. }) => {
+                    assert_eq!((clouds, edges), (c, e));
+                }
+                other => panic!("expected InvalidTopology, got {other:?}"),
+            }
+        }
+        // the message names the offending counts
+        let msg = Topology::try_new(0, 3).unwrap_err().to_string();
+        assert!(msg.contains("0c+3e"), "{msg}");
     }
 
     #[test]

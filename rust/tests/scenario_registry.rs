@@ -1,0 +1,194 @@
+//! Registry-wide golden tests: every registered solver runs on
+//! [`Scenario::paper`] and the Table VII fixed-layer rows reproduce the
+//! paper's published numbers bit-for-bit (416/100, 291, 366/94), plus
+//! end-to-end coverage of the `Scenario` front door (TOML specs,
+//! objective threading, seeded reproducibility).
+
+use edgeward::scenario::{
+    solver, solver_names, Arrival, Objective, Scenario, SOLVERS,
+};
+use edgeward::scheduler::{paper_jobs, Schedule, Topology};
+
+/// C1/C4 sanity on any finished schedule.
+fn check_schedule(s: &Schedule, jobs: usize, ctx: &str) {
+    assert_eq!(s.assignment.len(), jobs, "{ctx}: coverage");
+    assert_eq!(s.trace.entries.len(), jobs, "{ctx}: trace");
+    for e in &s.trace.entries {
+        assert!(s.topology.contains(e.machine), "{ctx}: replica range");
+        assert!(e.start >= e.available, "{ctx}: starts before data");
+    }
+}
+
+#[test]
+fn every_registered_solver_handles_the_paper_scenario() {
+    let paper = Scenario::paper();
+    for spec in SOLVERS {
+        let s = paper
+            .solve(spec.name)
+            .unwrap_or_else(|e| panic!("{} failed: {e}", spec.name));
+        check_schedule(&s, paper.jobs.len(), spec.name);
+        // the objective value reported through the scenario equals the
+        // schedule's own eq.-5 sum under the default objective
+        assert_eq!(paper.evaluate(&s), s.weighted_sum, "{}", spec.name);
+    }
+}
+
+#[test]
+fn golden_table_vii_rows_bit_for_bit() {
+    let paper = Scenario::paper();
+    // the paper's Table VII fixed-layer rows (cloud/edge label swap
+    // documented in DESIGN.md §5)
+    let cloud = paper.solve("all-cloud").unwrap();
+    assert_eq!(cloud.unweighted_sum(), 416);
+    assert_eq!(cloud.last_completion(), 100);
+    let edge = paper.solve("all-edge").unwrap();
+    assert_eq!(edge.unweighted_sum(), 291);
+    let device = paper.solve("all-device").unwrap();
+    assert_eq!(device.unweighted_sum(), 366);
+    assert_eq!(device.last_completion(), 94);
+    // ours beats every baseline on both published columns
+    let ours = paper.solve("tabu").unwrap();
+    for name in ["per-job-optimal", "all-cloud", "all-edge", "all-device"]
+    {
+        let base = paper.solve(name).unwrap();
+        assert!(
+            ours.unweighted_sum() <= base.unweighted_sum(),
+            "tabu lost to {name}"
+        );
+    }
+    // and the optimum bounds ours
+    let exact = paper.solve("exact").unwrap();
+    assert!(exact.weighted_sum <= ours.weighted_sum);
+    let online = paper.solve("online").unwrap();
+    assert!(online.weighted_sum >= exact.weighted_sum);
+    let greedy = paper.solve("greedy").unwrap();
+    assert!(ours.weighted_sum <= greedy.weighted_sum);
+}
+
+#[test]
+fn registry_is_complete_and_aliased() {
+    let names = solver_names();
+    for expected in [
+        "tabu",
+        "greedy",
+        "exact",
+        "online",
+        "per-job-optimal",
+        "all-cloud",
+        "all-edge",
+        "all-device",
+    ] {
+        assert!(names.contains(&expected), "missing {expected}");
+    }
+    // the paper's name for Algorithm 2 resolves
+    assert_eq!(solver("ours").unwrap().name(), "tabu");
+    assert!(solver("no-such-solver").is_err());
+}
+
+#[test]
+fn objective_threading_reaches_every_solver() {
+    // under Makespan, the exact solver's makespan bounds everyone else's
+    let mk = |objective: Objective| {
+        Scenario::builder()
+            .jobs(paper_jobs().into_iter().take(7).collect())
+            .objective(objective)
+            .build()
+            .unwrap()
+    };
+    let scenario = mk(Objective::Makespan);
+    let optimum = scenario.evaluate(&scenario.solve("exact").unwrap());
+    for name in solver_names() {
+        let s = scenario.solve(name).unwrap();
+        assert!(
+            scenario.evaluate(&s) >= optimum,
+            "{name} beat the exact makespan optimum?!"
+        );
+    }
+    // under DeadlineMiss the tabu solver never misses more than the
+    // greedy seed it starts from
+    let scenario = mk(Objective::DeadlineMiss { deadlines: vec![20] });
+    let tabu = scenario.evaluate(&scenario.solve("tabu").unwrap());
+    let greedy = scenario.evaluate(&scenario.solve("greedy").unwrap());
+    assert!(tabu <= greedy);
+}
+
+#[test]
+fn generated_scenarios_run_end_to_end_and_reproduce() {
+    for arrival in [
+        Arrival::PoissonWard { jobs: 9, rate: 0.3 },
+        Arrival::CodeBlueSurge {
+            baseline: 6,
+            rate: 0.2,
+            surge: 3,
+            surge_at: 25,
+        },
+    ] {
+        let build = |seed: u64| {
+            Scenario::builder()
+                .arrival(arrival.clone())
+                .seed(seed)
+                .topology(Topology::try_new(1, 2).unwrap())
+                .objective(Objective::Makespan)
+                .build()
+                .unwrap()
+        };
+        let a = build(11);
+        let b = build(11);
+        assert_eq!(a.jobs, b.jobs, "same seed, same scenario");
+        let sa = a.solve("tabu").unwrap();
+        let sb = b.solve("tabu").unwrap();
+        assert_eq!(sa.assignment, sb.assignment, "deterministic solve");
+        check_schedule(&sa, a.jobs.len(), "generated");
+        // the tabu plan is never worse than greedy under the objective
+        assert!(
+            a.evaluate(&sa) <= a.evaluate(&a.solve("greedy").unwrap())
+        );
+    }
+}
+
+#[test]
+fn toml_scenario_end_to_end() {
+    // the acceptance-criteria flow: a Poisson-ward TOML spec solved
+    // under makespan by the tabu solver
+    let text = "\
+[scenario]
+arrival = \"poisson-ward\"
+jobs = 10
+rate = 0.4
+seed = 99
+objective = \"makespan\"
+
+[scenario.topology]
+clouds = 1
+edges = 2
+";
+    let scenario = Scenario::from_toml(text).unwrap();
+    assert_eq!(scenario.jobs.len(), 10);
+    let s = scenario.solve("tabu").unwrap();
+    check_schedule(&s, 10, "toml ward");
+    assert_eq!(scenario.evaluate(&s), s.last_completion());
+}
+
+#[test]
+fn invalid_topologies_are_typed_errors_not_panics() {
+    // the satellite fix: a 0-replica topology surfaces as
+    // Error::InvalidTopology from the front door, not a panic inside
+    // simulate
+    let err = Scenario::builder()
+        .topology(Topology::new(0, 1))
+        .build()
+        .unwrap_err();
+    assert!(
+        matches!(err, edgeward::Error::InvalidTopology { .. }),
+        "{err:?}"
+    );
+    // even a hand-mutated scenario fails loudly in every solver
+    let mut scenario = Scenario::paper();
+    scenario.topology = Topology::new(1, 0);
+    for spec in SOLVERS {
+        match scenario.solve(spec.name) {
+            Err(edgeward::Error::InvalidTopology { .. }) => {}
+            other => panic!("{}: expected typed error, got {other:?}", spec.name),
+        }
+    }
+}

@@ -6,13 +6,24 @@
 //! (substitution ledger, DESIGN.md §3).
 
 use edgeward::data::Rng;
+use edgeward::scenario::Objective;
 use edgeward::scheduler::{
-    evaluate_strategy, greedy_assignment, improve, lower_bound, paper_jobs,
-    schedule_jobs, simulate, Job, MachineId, MachineRef, Schedule,
-    SchedulerParams, Strategy, Topology,
+    greedy_assignment, improve, improve_objective, lower_bound,
+    paper_jobs, schedule_jobs_objective, simulate, Job, MachineId,
+    MachineRef, Schedule, SchedulerParams, Strategy, Topology,
 };
 
 const CASES: u64 = 200;
+
+/// Algorithm 2 under the paper objective (the pre-scenario
+/// `schedule_jobs`).
+fn schedule_jobs(
+    jobs: &[Job],
+    topo: &Topology,
+    params: &SchedulerParams,
+) -> Schedule {
+    schedule_jobs_objective(jobs, topo, params, &Objective::WeightedSum)
+}
 
 /// Random job set in the paper's regime.
 fn random_jobs(rng: &mut Rng) -> Vec<Job> {
@@ -335,11 +346,75 @@ fn prop_strategies_agree_on_singleton_jobs() {
     for seed in 0..50 {
         let mut rng = Rng::new(seed ^ 0x3333);
         let jobs = vec![random_jobs(&mut rng)[0]];
-        let ours = evaluate_strategy(&jobs, &topo, Strategy::Ours);
-        let opt = evaluate_strategy(&jobs, &topo, Strategy::PerJobOptimal);
+        let ours =
+            schedule_jobs(&jobs, &topo, &SchedulerParams::default());
+        let opt = simulate(
+            &jobs,
+            &topo,
+            &Strategy::PerJobOptimal.assignment(&jobs, &topo),
+        );
         assert_eq!(
-            ours.schedule.weighted_sum, opt.schedule.weighted_sum,
+            ours.weighted_sum, opt.weighted_sum,
             "seed {seed}"
         );
+    }
+}
+
+/// The warm-started replica sweep is monotone for *every* objective, not
+/// just eq. 5: adding an edge replica never worsens the best makespan or
+/// deadline-miss count (the smaller topology's assignment stays feasible
+/// and `improve_objective` returns the best assignment ever seen).
+#[test]
+fn prop_makespan_and_deadline_objectives_monotone_in_replicas() {
+    let params = SchedulerParams::default();
+    let objectives = [
+        Objective::Makespan,
+        Objective::DeadlineMiss { deadlines: vec![25] },
+        Objective::DeadlineMiss { deadlines: vec![12, 30, 60] },
+    ];
+    let traces: Vec<(String, Vec<Job>)> = {
+        let mut v = vec![("paper".to_string(), paper_jobs())];
+        for seed in 0..6u64 {
+            let mut rng = Rng::new(seed ^ 0xD00D);
+            v.push((format!("seed {seed}"), random_jobs(&mut rng)));
+        }
+        v
+    };
+    for obj in &objectives {
+        for (name, jobs) in &traces {
+            let mut prev: Option<(Vec<MachineRef>, u64)> = None;
+            for edges in 1..=4usize {
+                let topo = Topology::new(1, edges);
+                let fresh =
+                    schedule_jobs_objective(jobs, &topo, &params, obj);
+                let mut best_val = obj.evaluate(jobs, &fresh.trace);
+                let mut best_assignment = fresh.assignment;
+                if let Some((prev_assignment, prev_val)) = &prev {
+                    // warm start: the smaller topology's solution is
+                    // still feasible, so the best only improves
+                    let warm = improve_objective(
+                        jobs,
+                        &topo,
+                        prev_assignment.clone(),
+                        &params,
+                        obj,
+                    );
+                    let warm_val = obj.evaluate(jobs, &warm.trace);
+                    if warm_val < best_val {
+                        best_val = warm_val;
+                        best_assignment = warm.assignment;
+                    }
+                    assert!(
+                        best_val <= *prev_val,
+                        "{name} [{}]: {} rose {prev_val} -> {best_val} \
+                         at {}",
+                        obj.key(),
+                        obj.label(),
+                        topo.label()
+                    );
+                }
+                prev = Some((best_assignment, best_val));
+            }
+        }
     }
 }

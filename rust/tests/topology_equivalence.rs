@@ -10,6 +10,10 @@
 //! assignments, and tabu outcomes, plus the recorded Table VII golden
 //! numbers (416/100, 291, 366/94).
 
+// this suite deliberately exercises the deprecated single-objective shims:
+// their whole contract is staying bit-for-bit with the seed scheduler
+#![allow(deprecated)]
+
 use edgeward::data::Rng;
 use edgeward::scheduler::{
     greedy_assignment, paper_jobs, schedule_jobs, simulate, weighted_cost,
