@@ -67,6 +67,18 @@ impl Measurement {
     }
 }
 
+/// Write any JSON document to disk, pretty-printed with a trailing
+/// newline — the shared writer behind bench reports and the
+/// scenario-suite results matrix / golden baselines.
+pub fn write_value(
+    path: impl AsRef<std::path::Path>,
+    root: &Value,
+) -> crate::Result<()> {
+    let path = path.as_ref();
+    std::fs::write(path, root.to_string_pretty())
+        .map_err(|e| crate::Error::io(path.display().to_string(), e))
+}
+
 /// Write a bench group's measurements as a machine-readable JSON report
 /// (the perf-trajectory contract: `{group, results: [...]}`).
 pub fn write_json(
@@ -80,8 +92,7 @@ pub fn write_json(
         "results",
         Value::Array(results.iter().map(|m| m.to_value()).collect()),
     );
-    std::fs::write(path, root.to_string_pretty())
-        .map_err(|e| crate::Error::io(path, e))?;
+    write_value(path, &root)?;
     println!("wrote {path} ({} cases)", results.len());
     Ok(())
 }

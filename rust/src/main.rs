@@ -17,6 +17,7 @@ use edgeward::device::Layer;
 use edgeward::report::{render_gantt, render_replica_utilization, TextTable};
 use edgeward::scenario::{Arrival, Objective, Scenario, SOLVERS};
 use edgeward::scheduler::{paper_jobs, Strategy, Topology};
+use edgeward::suite::{CellStatus, Suite, SuiteConfig};
 use edgeward::workload::{table_iv, Application, Workload, SIZE_UNITS};
 
 const USAGE: &str = "\
@@ -31,6 +32,9 @@ COMMANDS:
             [--arrival A] [--jobs N] [--rate X] [--surge N] [--surge-at T]
             [--deadline T] [--seed N] [--clouds N] [--edges N] [--compare]
                                                    solve a Scenario
+  suite     DIR [--check DIR] [--bless DIR] [--out FILE] [--seed N]
+            [--seeds a,b,..] [--solvers s,..] [--objectives o,..]
+            [--threads N]                          batch-run scenario DIR
   schedule  [--strategy S] [--compare] [--clouds N] [--edges N]
                                                    Algorithm 2 / baselines
   serve     [--policy P] [--patients N] [--requests N] [--clouds N]
@@ -46,7 +50,7 @@ STRATEGY:  ours | per-job-optimal | all-cloud | all-edge | all-device
 SOLVER:    tabu | greedy | exact | online | per-job-optimal | all-cloud |
            all-edge | all-device
 OBJECTIVE: weighted-sum | unweighted-sum | makespan | deadline-miss
-ARRIVAL:   paper-trace | poisson-ward | code-blue-surge
+ARRIVAL:   paper-trace | poisson-ward | code-blue-surge | diurnal-ward
 
 `solve` is the polymorphic front door: a scenario (from --scenario TOML,
 an [scenario] section in --config, or --arrival flags) run through any
@@ -55,6 +59,12 @@ registered solver; --seed makes generated scenarios reproducible and
 topology (default: the paper's 1+1); every extra replica is a real
 engine on the serving path and an extra exclusive timeline in the
 scheduler.
+
+`suite` is the regression harness: it batch-runs every scenario TOML
+under DIR across the solver registry (in parallel), writes the results
+matrix to --out (default suite_results.json), and with --check compares
+every cell against committed goldens — exiting non-zero on any drift.
+--bless (re)writes the goldens from the current run.
 ";
 
 /// Minimal argument cursor: `--key value` and `--flag` handling.
@@ -269,6 +279,107 @@ fn run() -> edgeward::Result<()> {
                 if !scenario.topology.is_paper() {
                     println!();
                     print!("{}", render_replica_utilization(&s));
+                }
+            }
+        }
+        "suite" => {
+            let check_dir = args.opt("check");
+            let bless_dir = args.opt("bless");
+            if check_dir.is_some() && bless_dir.is_some() {
+                return Err(edgeward::Error::Config(
+                    "--check and --bless are mutually exclusive: bless \
+                     rewrites the goldens, which would make the check \
+                     vacuously pass"
+                        .into(),
+                ));
+            }
+            let out =
+                args.opt("out").unwrap_or_else(|| "suite_results.json".into());
+            let seed: Option<u64> = args.parse("seed");
+            let seeds_csv = args.opt("seeds");
+            let solvers_csv = args.opt("solvers");
+            let objectives_csv = args.opt("objectives");
+            let threads: Option<usize> = args.parse("threads");
+            let dir = args.subcommand().ok_or_else(|| {
+                edgeward::Error::Config(
+                    "suite: missing scenario directory \
+                     (usage: edgeward suite scenarios/)"
+                        .into(),
+                )
+            })?;
+            args.finish();
+            // bless would also refuse after the run; reject the
+            // combination up front so the user fails in milliseconds,
+            // not after the whole matrix has been solved
+            if bless_dir.is_some()
+                && (solvers_csv.is_some() || objectives_csv.is_some())
+            {
+                return Err(edgeward::Error::Config(
+                    "--bless cannot be combined with --solvers or \
+                     --objectives: baselines are written wholesale and \
+                     must cover the full matrix"
+                        .into(),
+                ));
+            }
+
+            let mut config = SuiteConfig::default();
+            if seed.is_some() && seeds_csv.is_some() {
+                return Err(edgeward::Error::Config(
+                    "--seed and --seeds are mutually exclusive".into(),
+                ));
+            }
+            if let Some(s) = seed {
+                config.seeds = vec![s];
+            }
+            if let Some(csv) = seeds_csv {
+                config.seeds = parse_seed_list(&csv)?;
+            }
+            if let Some(csv) = solvers_csv {
+                config.solvers = split_csv("--solvers", &csv)?;
+            }
+            if let Some(csv) = objectives_csv {
+                config.objectives = split_csv("--objectives", &csv)?;
+            }
+            if let Some(t) = threads {
+                config.threads = t;
+            }
+
+            let suite = Suite::discover(&dir, config)?;
+            let result = suite.run();
+            print!("{}", result.render());
+            result.write(&out)?;
+            println!("wrote {out} ({} cells)", result.cells.len());
+            // a run with solver errors is never healthy; --check would
+            // fail these cells, and a bare run must not exit 0 either
+            let errored = result
+                .cells
+                .iter()
+                .filter(|c| {
+                    matches!(c.status, CellStatus::Error { .. })
+                })
+                .count();
+            if errored > 0 && check_dir.is_none() {
+                return Err(edgeward::Error::Config(format!(
+                    "{errored} suite cell(s) errored (see the Note \
+                     column above)"
+                )));
+            }
+            if let Some(bdir) = &bless_dir {
+                let n = edgeward::suite::bless(&result, bdir)?;
+                println!("blessed {n} baseline file(s) under {bdir}");
+            }
+            if let Some(cdir) = &check_dir {
+                let report = edgeward::suite::check(&result, cdir);
+                print!("{}", report.render());
+                if !report.clean() {
+                    return Err(edgeward::Error::Config(format!(
+                        "suite check against {cdir} failed: {} drifted, \
+                         {} failed (to accept intentional changes, \
+                         re-run with --bless {cdir} and the same \
+                         --seed/--seeds flags, then commit the diff)",
+                        report.drifted(),
+                        report.failed()
+                    )));
                 }
             }
         }
@@ -525,6 +636,34 @@ fn override_scenario(
         None => b.jobs(base.jobs),
     };
     b.build()
+}
+
+/// Split a `--solvers`/`--objectives` comma list into trimmed names;
+/// a list with no entries is a typo, not "no override" — error loudly.
+fn split_csv(flag: &str, csv: &str) -> edgeward::Result<Vec<String>> {
+    let items: Vec<String> = csv
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if items.is_empty() {
+        return Err(edgeward::Error::Config(format!(
+            "{flag} needs at least one entry, got {csv:?}"
+        )));
+    }
+    Ok(items)
+}
+
+/// Parse a `--seeds` comma list.
+fn parse_seed_list(csv: &str) -> edgeward::Result<Vec<u64>> {
+    split_csv("--seeds", csv)?
+        .iter()
+        .map(|s| {
+            s.parse::<u64>().map_err(|e| {
+                edgeward::Error::Config(format!("--seeds {s:?}: {e}"))
+            })
+        })
+        .collect()
 }
 
 fn parse_strategy(s: &str) -> edgeward::Result<Strategy> {

@@ -27,6 +27,15 @@ impl LatencySummary {
         v
     }
 
+    /// Compute from integer tick samples (scheduler response times) —
+    /// the bridge between the discrete-event simulator and the serving
+    /// metrics vocabulary, used by the scenario-suite matrix.
+    pub fn from_ticks(samples: &[u64]) -> Self {
+        let as_f64: Vec<f64> =
+            samples.iter().map(|&t| t as f64).collect();
+        Self::from_samples(&as_f64)
+    }
+
     /// Compute from raw samples (order irrelevant).
     pub fn from_samples(samples: &[f64]) -> Self {
         if samples.is_empty() {
@@ -92,5 +101,16 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.p50, 2.0);
         assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn ticks_match_f64_samples() {
+        let ticks: Vec<u64> = (1..=40).collect();
+        let floats: Vec<f64> = ticks.iter().map(|&t| t as f64).collect();
+        let a = LatencySummary::from_ticks(&ticks);
+        let b = LatencySummary::from_samples(&floats);
+        assert_eq!(a.p95, b.p95);
+        assert_eq!(a.p95, 38.0);
+        assert_eq!(LatencySummary::from_ticks(&[]).p95, 0.0);
     }
 }

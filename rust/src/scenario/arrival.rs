@@ -13,10 +13,20 @@
 //! * [`Arrival::CodeBlueSurge`] — the same steady ward plus a burst of
 //!   emergency-priority jobs released nearly simultaneously at
 //!   `surge_at` (a code-blue event: every monitor in the room fires).
+//! * [`Arrival::DiurnalWard`] — a time-varying Poisson ward following a
+//!   day/night rhythm: the instantaneous rate swings around `rate` by
+//!   ±`amplitude` along a `period`-long piecewise-linear wave, realized
+//!   by Lewis–Shedler thinning.  The waveform is a triangle rather than
+//!   a sinusoid on purpose: the modulation itself is exact IEEE-754
+//!   arithmetic, adding no libm dependence beyond the `log` already
+//!   inside every ward's exponential sampler ([`Rng::exponential`]).
 //!
 //! Generation is a pure function of `(process, seed)` — the same seed
-//! reproduces the same job list bit-for-bit, which the registry tests
-//! and benches rely on.
+//! reproduces the same job list bit-for-bit on a given platform, which
+//! the registry tests, benches, and the [`crate::suite`] golden
+//! baselines rely on.  (Cross-platform, the single remaining
+//! platform-defined operation is libm's `log`; everything else is exact
+//! integer or IEEE-754 arithmetic.)
 
 use crate::data::Rng;
 use crate::scheduler::{paper_jobs, Job};
@@ -40,6 +50,16 @@ pub enum Arrival {
         surge: usize,
         surge_at: Tick,
     },
+    /// `jobs` arrivals from a time-varying Poisson process whose
+    /// instantaneous rate follows a day/night rhythm: a triangle wave of
+    /// the given `period` (ticks per full day) swinging the mean `rate`
+    /// by ±`amplitude` (0 = steady ward, 1 = the ward empties at night).
+    DiurnalWard {
+        jobs: usize,
+        rate: f64,
+        amplitude: f64,
+        period: Tick,
+    },
 }
 
 impl Default for Arrival {
@@ -55,7 +75,19 @@ impl Arrival {
             Arrival::PaperTrace => "paper-trace",
             Arrival::PoissonWard { .. } => "poisson-ward",
             Arrival::CodeBlueSurge { .. } => "code-blue-surge",
+            Arrival::DiurnalWard { .. } => "diurnal-ward",
         }
+    }
+
+    /// Every arrival process with its default CLI sizing, in key order
+    /// (what `Arrival::parse` accepts; suite/docs enumeration).
+    pub fn defaults() -> [Arrival; 4] {
+        [
+            Arrival::PaperTrace,
+            Arrival::poisson_ward(),
+            Arrival::code_blue_surge(),
+            Arrival::diurnal_ward(),
+        ]
     }
 
     /// A Poisson ward with the default CLI sizing.
@@ -73,6 +105,17 @@ impl Arrival {
         }
     }
 
+    /// A diurnal ward with the default CLI sizing: a two-shift day of 48
+    /// ticks, load swinging ±80% around the mean rate.
+    pub fn diurnal_ward() -> Arrival {
+        Arrival::DiurnalWard {
+            jobs: 12,
+            rate: 0.25,
+            amplitude: 0.8,
+            period: 48,
+        }
+    }
+
     /// Parse a CLI/TOML arrival key into the default-sized process (the
     /// scenario spec then overrides individual fields).
     pub fn parse(name: &str) -> Result<Arrival> {
@@ -86,9 +129,10 @@ impl Arrival {
             "code-blue-surge" | "code-blue" | "surge" => {
                 Ok(Arrival::code_blue_surge())
             }
+            "diurnal-ward" | "diurnal" => Ok(Arrival::diurnal_ward()),
             other => Err(Error::Config(format!(
                 "unknown arrival process {other:?}; expected paper-trace \
-                 | poisson-ward | code-blue-surge"
+                 | poisson-ward | code-blue-surge | diurnal-ward"
             ))),
         }
     }
@@ -154,6 +198,21 @@ impl Arrival {
                     *t = x;
                 }
             }
+            Arrival::DiurnalWard { jobs, rate: r, .. } => {
+                if surge.is_some() || surge_at.is_some() {
+                    return Err(Error::Config(
+                        "--surge/--surge-at only apply to the \
+                         code-blue-surge arrival process"
+                            .into(),
+                    ));
+                }
+                if let Some(n) = count {
+                    *jobs = n;
+                }
+                if let Some(x) = rate {
+                    *r = x;
+                }
+            }
         }
         Ok(())
     }
@@ -164,6 +223,25 @@ impl Arrival {
             Arrival::PaperTrace => return Ok(()),
             Arrival::PoissonWard { rate, .. } => *rate,
             Arrival::CodeBlueSurge { rate, .. } => *rate,
+            Arrival::DiurnalWard {
+                rate,
+                amplitude,
+                period,
+                ..
+            } => {
+                if !(0.0..=1.0).contains(amplitude) {
+                    return Err(Error::Config(format!(
+                        "diurnal amplitude must be within [0, 1] (the \
+                         rate cannot go negative), got {amplitude}"
+                    )));
+                }
+                if *period == 0 {
+                    return Err(Error::Config(
+                        "diurnal period must be at least one tick".into(),
+                    ));
+                }
+                *rate
+            }
         };
         if !(rate > 0.0) || !rate.is_finite() {
             return Err(Error::Config(format!(
@@ -206,8 +284,41 @@ impl Arrival {
                 }
                 jobs
             }
+            Arrival::DiurnalWard {
+                jobs,
+                rate,
+                amplitude,
+                period,
+            } => {
+                let mut rng = Rng::new(seed ^ 0xD1A5_0C0D);
+                let catalog = paper_jobs();
+                // Lewis–Shedler thinning: candidates at the peak rate,
+                // accepted with probability rate(t)/peak
+                let peak = rate * (1.0 + amplitude);
+                let mut out = Vec::with_capacity(jobs);
+                let mut t = 1.0_f64;
+                while out.len() < jobs {
+                    t += rng.exponential(peak);
+                    let lambda_t =
+                        rate * diurnal_factor(t, period as f64, amplitude);
+                    if rng.uniform() * peak <= lambda_t {
+                        out.push(sample_job_at(&mut rng, &catalog, t));
+                    }
+                }
+                out
+            }
         }
     }
+}
+
+/// Piecewise-linear day/night modulation factor in
+/// `[1 - amplitude, 1 + amplitude]`: a `period`-periodic triangle wave
+/// bottoming out at the start of each day and peaking mid-period.  Pure
+/// exact arithmetic — the waveform adds no libm dependence of its own.
+fn diurnal_factor(t: f64, period: f64, amplitude: f64) -> f64 {
+    let x = (t / period).fract(); // position within the day, [0, 1)
+    let tri = if x < 0.5 { 4.0 * x - 1.0 } else { 3.0 - 4.0 * x };
+    1.0 + amplitude * tri
 }
 
 impl std::fmt::Display for Arrival {
@@ -227,6 +338,16 @@ impl std::fmt::Display for Arrival {
                 "code-blue-surge(baseline={baseline}, rate={rate}, \
                  surge={surge} @ t={surge_at})"
             ),
+            Arrival::DiurnalWard {
+                jobs,
+                rate,
+                amplitude,
+                period,
+            } => write!(
+                f,
+                "diurnal-ward(jobs={jobs}, rate={rate}, \
+                 amplitude={amplitude}, period={period})"
+            ),
         }
     }
 }
@@ -243,13 +364,20 @@ fn poisson_stream(
     (0..n)
         .map(|_| {
             t += rng.exponential(rate);
-            let template =
-                catalog[rng.below(catalog.len() as u64) as usize];
-            let mut j = jitter(rng, template);
-            j.release = t.ceil() as Tick;
-            j
+            sample_job_at(rng, &catalog, t)
         })
         .collect()
+}
+
+/// Draw one catalog job (template pick, then jitter — two RNG stages
+/// every generative ward shares) released at the ceiling of time `t`.
+fn sample_job_at(rng: &mut Rng, catalog: &[Job], t: f64) -> Job {
+    let template = catalog[rng.below(catalog.len() as u64) as usize];
+    let mut j = jitter(rng, template);
+    // C3: releases are positive integer ticks (the floor only engages
+    // for t < 1, which no current process produces)
+    j.release = (t.ceil() as Tick).max(1);
+    j
 }
 
 /// Jitter every cost of a catalog row by ±25% (integer ticks, floor 1 —
@@ -281,15 +409,88 @@ mod tests {
 
     #[test]
     fn generation_is_deterministic_in_the_seed() {
-        for arrival in
-            [Arrival::poisson_ward(), Arrival::code_blue_surge()]
-        {
+        for arrival in [
+            Arrival::poisson_ward(),
+            Arrival::code_blue_surge(),
+            Arrival::diurnal_ward(),
+        ] {
             let a = arrival.generate(42);
             let b = arrival.generate(42);
             assert_eq!(a, b, "{arrival}: same seed must reproduce");
             let c = arrival.generate(43);
             assert_ne!(a, c, "{arrival}: different seed, same jobs?");
         }
+    }
+
+    #[test]
+    fn diurnal_ward_shape() {
+        let arrival = Arrival::DiurnalWard {
+            jobs: 25,
+            rate: 0.4,
+            amplitude: 0.8,
+            period: 48,
+        };
+        let jobs = arrival.generate(5);
+        assert_eq!(jobs.len(), 25);
+        // releases are non-decreasing, strictly positive integers (C3)
+        for w in jobs.windows(2) {
+            assert!(w[0].release <= w[1].release);
+        }
+        assert!(jobs[0].release >= 1);
+        for j in &jobs {
+            assert!(j.proc_cloud >= 1 && j.proc_edge >= 1);
+            assert!(j.proc_device >= 1);
+            assert!(j.trans_cloud >= 1 && j.trans_edge >= 1);
+        }
+    }
+
+    #[test]
+    fn diurnal_factor_waveform() {
+        // the triangle wave bottoms at the start of a day, peaks
+        // mid-period, and is period-periodic
+        assert_eq!(diurnal_factor(0.0, 48.0, 0.5), 0.5);
+        assert_eq!(diurnal_factor(24.0, 48.0, 0.5), 1.5);
+        assert_eq!(diurnal_factor(48.0, 48.0, 0.5), 0.5);
+        assert_eq!(diurnal_factor(12.0, 48.0, 0.5), 1.0);
+        assert_eq!(
+            diurnal_factor(7.0, 48.0, 0.8),
+            diurnal_factor(7.0 + 96.0, 48.0, 0.8)
+        );
+        // amplitude 0 degenerates to the homogeneous ward
+        for t in 0..100 {
+            assert_eq!(diurnal_factor(t as f64, 48.0, 0.0), 1.0);
+        }
+    }
+
+    #[test]
+    fn diurnal_ward_rejects_degenerate_parameters() {
+        let ok = Arrival::diurnal_ward();
+        assert!(ok.validate().is_ok());
+        let bad_amp = |amplitude: f64| Arrival::DiurnalWard {
+            jobs: 5,
+            rate: 0.3,
+            amplitude,
+            period: 48,
+        };
+        assert!(bad_amp(-0.1).validate().is_err());
+        assert!(bad_amp(1.5).validate().is_err());
+        assert!(bad_amp(f64::NAN).validate().is_err());
+        assert!(Arrival::DiurnalWard {
+            jobs: 5,
+            rate: 0.3,
+            amplitude: 0.5,
+            period: 0,
+        }
+        .validate()
+        .is_err());
+        assert!(Arrival::DiurnalWard {
+            jobs: 5,
+            rate: 0.0,
+            amplitude: 0.5,
+            period: 48,
+        }
+        .validate()
+        .is_err());
     }
 
     #[test]
@@ -379,6 +580,34 @@ mod tests {
             Arrival::parse("code_blue_surge").unwrap().key(),
             "code-blue-surge"
         );
+        assert_eq!(
+            Arrival::parse("diurnal").unwrap().key(),
+            "diurnal-ward"
+        );
         assert!(Arrival::parse("meteor").is_err());
+    }
+
+    #[test]
+    fn parse_and_key_roundtrip_for_all_variants() {
+        for arrival in Arrival::defaults() {
+            let back = Arrival::parse(arrival.key())
+                .unwrap_or_else(|e| panic!("{}: {e}", arrival.key()));
+            assert_eq!(back, arrival, "{} did not round-trip", arrival);
+        }
+    }
+
+    #[test]
+    fn diurnal_override_sizing() {
+        let mut d = Arrival::diurnal_ward();
+        d.override_sizing(Some(20), Some(0.5), None, None).unwrap();
+        match d {
+            Arrival::DiurnalWard { jobs, rate, .. } => {
+                assert_eq!((jobs, rate), (20, 0.5));
+            }
+            other => panic!("{other:?}"),
+        }
+        // surge flags stay exclusive to code-blue-surge
+        assert!(d.override_sizing(None, None, Some(2), None).is_err());
+        assert!(d.override_sizing(None, None, None, Some(9)).is_err());
     }
 }

@@ -35,7 +35,9 @@ mod solver;
 
 pub use arrival::Arrival;
 pub use objective::Objective;
-pub use solver::{solver, solver_names, Solver, SolverSpec, SOLVERS};
+pub use solver::{
+    solver, solver_names, solver_spec, Solver, SolverSpec, SOLVERS,
+};
 
 use crate::config::FieldReader;
 use crate::scheduler::{Job, Schedule, SchedulerParams};
@@ -184,6 +186,25 @@ impl Scenario {
                     *surge_at = t;
                 }
             }
+            Arrival::DiurnalWard {
+                jobs,
+                rate,
+                amplitude,
+                period,
+            } => {
+                if let Some(n) = r.usize("jobs")? {
+                    *jobs = n;
+                }
+                if let Some(x) = r.f64("rate")? {
+                    *rate = x;
+                }
+                if let Some(x) = r.f64("amplitude")? {
+                    *amplitude = x;
+                }
+                if let Some(p) = r.u64("period")? {
+                    *period = p;
+                }
+            }
         }
         b = b.arrival(arrival);
         // objective (+ deadlines, only meaningful for deadline-miss)
@@ -247,6 +268,17 @@ impl Scenario {
                 v.set("rate", rate);
                 v.set("surge", surge);
                 v.set("surge_at", surge_at);
+            }
+            Arrival::DiurnalWard {
+                jobs,
+                rate,
+                amplitude,
+                period,
+            } => {
+                v.set("jobs", jobs);
+                v.set("rate", rate);
+                v.set("amplitude", amplitude);
+                v.set("period", period);
             }
         }
         v.set("objective", self.objective.key());
@@ -471,6 +503,41 @@ edges = 2
             crate::serialize::toml::emit(&root);
         let back = Scenario::from_toml(&text2).unwrap();
         assert_eq!(back, s, "emitted:\n{text2}");
+    }
+
+    #[test]
+    fn toml_diurnal_ward_roundtrip() {
+        let text = "\
+[scenario]
+arrival = \"diurnal-ward\"
+jobs = 8
+rate = 0.3
+amplitude = 0.6
+period = 36
+seed = 4
+";
+        let s = Scenario::from_toml(text).unwrap();
+        assert_eq!(s.jobs.len(), 8);
+        assert_eq!(
+            s.arrival,
+            Some(Arrival::DiurnalWard {
+                jobs: 8,
+                rate: 0.3,
+                amplitude: 0.6,
+                period: 36,
+            })
+        );
+        let mut root = Value::object();
+        root.set("scenario", s.to_value());
+        let back =
+            Scenario::from_toml(&crate::serialize::toml::emit(&root))
+                .unwrap();
+        assert_eq!(back, s);
+        // diurnal sizing fields stay unknown on the other processes
+        assert!(Scenario::from_toml(
+            "[scenario]\narrival = \"poisson-ward\"\namplitude = 0.5\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -35,6 +35,12 @@ pub struct SolverSpec {
     pub aliases: &'static [&'static str],
     /// One-line description for `--compare` tables and docs.
     pub summary: &'static str,
+    /// Largest job count the batch suite ([`crate::suite`]) runs this
+    /// solver at; bigger scenarios get a typed "skipped" cell instead of
+    /// an open-ended run.  Only the exponential exact search sets one
+    /// (well below [`crate::scheduler::EXACT_JOB_LIMIT`], which merely
+    /// guards against pathological misuse).
+    pub suite_limit: Option<usize>,
     build: fn() -> Box<dyn Solver>,
 }
 
@@ -42,6 +48,20 @@ impl SolverSpec {
     /// Instantiate this registry row's solver.
     pub fn build(&self) -> Box<dyn Solver> {
         (self.build)()
+    }
+
+    /// Why the batch suite would skip this solver on `scenario`
+    /// (`None` = run it).
+    pub fn skip_reason(&self, scenario: &Scenario) -> Option<String> {
+        match self.suite_limit {
+            Some(limit) if scenario.jobs.len() > limit => Some(format!(
+                "{} jobs exceed {}'s {}-job suite limit",
+                scenario.jobs.len(),
+                self.name,
+                limit
+            )),
+            _ => None,
+        }
     }
 }
 
@@ -52,66 +72,81 @@ pub const SOLVERS: &[SolverSpec] = &[
         name: "tabu",
         aliases: &["ours", "algorithm-2"],
         summary: "Algorithm 2: greedy seed + tabu neighborhood search",
+        suite_limit: None,
         build: || Box::new(TabuSolver),
     },
     SolverSpec {
         name: "greedy",
         aliases: &["algorithm-2-greedy"],
         summary: "Algorithm 2's greedy earliest-completion stage only",
+        suite_limit: None,
         build: || Box::new(GreedySolver),
     },
     SolverSpec {
         name: "exact",
         aliases: &["optimal", "branch-and-bound"],
         summary: "branch-and-bound optimum (exponential; <= 20 jobs)",
+        suite_limit: Some(10),
         build: || Box::new(ExactSolver),
     },
     SolverSpec {
         name: "online",
         aliases: &["non-clairvoyant"],
         summary: "non-clairvoyant dispatcher: commit at release time",
+        suite_limit: None,
         build: || Box::new(OnlineSolver),
     },
     SolverSpec {
         name: "per-job-optimal",
         aliases: &["per-job"],
         summary: "each job on its single-job-optimal layer (Figure 8)",
+        suite_limit: None,
         build: || Box::new(FixedSolver(Strategy::PerJobOptimal)),
     },
     SolverSpec {
         name: "all-cloud",
         aliases: &["cloud"],
         summary: "everything on the shared cloud servers",
+        suite_limit: None,
         build: || Box::new(FixedSolver(Strategy::AllCloud)),
     },
     SolverSpec {
         name: "all-edge",
         aliases: &["edge"],
         summary: "everything on the shared edge servers",
+        suite_limit: None,
         build: || Box::new(FixedSolver(Strategy::AllEdge)),
     },
     SolverSpec {
         name: "all-device",
         aliases: &["device"],
         summary: "everything on the patients' own devices",
+        suite_limit: None,
         build: || Box::new(FixedSolver(Strategy::AllDevice)),
     },
 ];
 
-/// Look up a solver by canonical name or alias (case- and
-/// underscore-insensitive).
-pub fn solver(name: &str) -> Result<Box<dyn Solver>> {
+/// Look up a registry row by canonical name or alias (case- and
+/// underscore-insensitive) — the enumeration entry point for the batch
+/// suite and anything else that needs [`SolverSpec`] metadata rather
+/// than an instantiated solver.
+pub fn solver_spec(name: &str) -> Result<&'static SolverSpec> {
     let key = name.to_ascii_lowercase().replace('_', "-");
     SOLVERS
         .iter()
         .find(|s| s.name == key || s.aliases.contains(&key.as_str()))
-        .map(|s| s.build())
         .ok_or_else(|| {
             Error::Config(format!(
                 "unknown solver {name:?}; registered solvers: {}",
                 solver_names().join(", ")
             ))
         })
+}
+
+/// Look up a solver by canonical name or alias (case- and
+/// underscore-insensitive).
+pub fn solver(name: &str) -> Result<Box<dyn Solver>> {
+    solver_spec(name).map(|s| s.build())
 }
 
 /// Canonical names of every registered solver, in registry order.
@@ -231,6 +266,30 @@ mod tests {
         let err = solver("simulated-annealing").unwrap_err().to_string();
         assert!(err.contains("tabu"), "{err}");
         assert!(err.contains("all-device"), "{err}");
+    }
+
+    #[test]
+    fn spec_lookup_and_suite_limits() {
+        assert_eq!(solver_spec("optimal").unwrap().name, "exact");
+        assert!(solver_spec("nope").is_err());
+        // only the exponential exact search carries a suite limit, and
+        // its skip reason names the offending job count
+        for spec in SOLVERS {
+            assert_eq!(spec.suite_limit.is_some(), spec.name == "exact");
+        }
+        let exact = solver_spec("exact").unwrap();
+        let small = Scenario::paper();
+        assert_eq!(exact.skip_reason(&small), None);
+        let big = Scenario::builder()
+            .arrival(crate::scenario::Arrival::PoissonWard {
+                jobs: 11,
+                rate: 0.3,
+            })
+            .build()
+            .unwrap();
+        let reason = exact.skip_reason(&big).expect("11 > 10 must skip");
+        assert!(reason.contains("11 jobs"), "{reason}");
+        assert_eq!(solver_spec("tabu").unwrap().skip_reason(&big), None);
     }
 
     #[test]

@@ -116,6 +116,22 @@ impl Value {
             .ok_or_else(|| Error::Json(format!("missing field {key:?}")))
     }
 
+    /// Recursively sort object keys (ascending byte order) — the
+    /// canonical form for documents that must serialize byte-identically
+    /// across runs (suite results, golden baselines).
+    pub fn sort_keys(&mut self) {
+        match self {
+            Value::Array(items) => {
+                items.iter_mut().for_each(Value::sort_keys)
+            }
+            Value::Object(entries) => {
+                entries.iter_mut().for_each(|(_, v)| v.sort_keys());
+                entries.sort_by(|a, b| a.0.cmp(&b.0));
+            }
+            _ => {}
+        }
+    }
+
     // --------------------------------------------------------- writers
     /// Compact rendering.
     pub fn to_string(&self) -> String {
@@ -563,6 +579,24 @@ mod tests {
     fn object_insertion_order_preserved() {
         let v = parse(r#"{"z":1,"a":2}"#).unwrap();
         assert_eq!(v.to_string(), r#"{"z":1,"a":2}"#);
+    }
+
+    #[test]
+    fn sort_keys_is_canonical_and_recursive() {
+        let mut v =
+            parse(r#"{"z":1,"a":{"y":[{"b":2,"a":3}],"x":0}}"#).unwrap();
+        v.sort_keys();
+        assert_eq!(
+            v.to_string(),
+            r#"{"a":{"x":0,"y":[{"a":3,"b":2}]},"z":1}"#
+        );
+        // idempotent, and equal to sorting any insertion order
+        let mut w =
+            parse(r#"{"a":{"x":0,"y":[{"a":3,"b":2}]},"z":1}"#).unwrap();
+        w.sort_keys();
+        assert_eq!(v, w);
+        v.sort_keys();
+        assert_eq!(v, w);
     }
 
     #[test]

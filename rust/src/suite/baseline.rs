@@ -1,0 +1,612 @@
+//! Golden-baseline comparison: pin every suite cell to a committed
+//! expectation with typed pass/drift/fail verdicts.
+//!
+//! Baselines live one JSON file per scenario (`baselines/<stem>.json`)
+//! so a regression diffs as a small, reviewable change to one file.
+//! [`bless`] (re)writes them from a fresh run; [`check`] compares a run
+//! against them cell-by-cell in both directions — a baseline cell the
+//! run no longer produces is as much a failure as a run cell with no
+//! baseline.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::serialize::{json, Value};
+use crate::{Error, Result};
+
+use super::{Cell, CellKey, CellStatus, SuiteResult};
+
+/// The outcome of comparing one run cell against its golden baseline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Verdict {
+    /// Every compared field matches the golden value exactly.
+    Pass,
+    /// The cell exists in both places but a numeric field moved — the
+    /// regression (or improvement) the harness exists to catch.
+    Drift {
+        field: &'static str,
+        expected: f64,
+        actual: f64,
+    },
+    /// Structural breakage: missing/unreadable/stale baseline, a status
+    /// flip (ok ↔ skipped), or a solver error.
+    Fail { reason: String },
+}
+
+impl Verdict {
+    /// Short verdict label for tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Verdict::Pass => "pass",
+            Verdict::Drift { .. } => "DRIFT",
+            Verdict::Fail { .. } => "FAIL",
+        }
+    }
+
+    /// One-line detail column.
+    pub fn detail(&self) -> String {
+        match self {
+            Verdict::Pass => String::new(),
+            Verdict::Drift {
+                field,
+                expected,
+                actual,
+            } => format!("{field}: expected {expected}, got {actual}"),
+            Verdict::Fail { reason } => reason.clone(),
+        }
+    }
+}
+
+/// One row of a check report.
+#[derive(Debug, Clone)]
+pub struct CheckRow {
+    pub key: CellKey,
+    pub verdict: Verdict,
+}
+
+/// The full comparison of a run against a baseline directory.
+#[derive(Debug, Clone)]
+pub struct CheckReport {
+    /// One row per run cell (plus one per stale baseline cell), in the
+    /// run's deterministic order.
+    pub rows: Vec<CheckRow>,
+}
+
+impl CheckReport {
+    pub fn passed(&self) -> usize {
+        self.count(|v| matches!(v, Verdict::Pass))
+    }
+
+    pub fn drifted(&self) -> usize {
+        self.count(|v| matches!(v, Verdict::Drift { .. }))
+    }
+
+    pub fn failed(&self) -> usize {
+        self.count(|v| matches!(v, Verdict::Fail { .. }))
+    }
+
+    fn count(&self, pred: impl Fn(&Verdict) -> bool) -> usize {
+        self.rows.iter().filter(|r| pred(&r.verdict)).count()
+    }
+
+    /// Whether every cell passed (the CI gate).
+    pub fn clean(&self) -> bool {
+        self.rows
+            .iter()
+            .all(|r| matches!(r.verdict, Verdict::Pass))
+    }
+
+    /// Human diff table: every non-pass row in detail, plus a summary
+    /// line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if !self.clean() {
+            let mut t = crate::report::TextTable::new(&[
+                "Scenario", "Seed", "Objective", "Solver", "Verdict",
+                "Detail",
+            ])
+            .with_title("suite check: baseline deviations");
+            for row in &self.rows {
+                if matches!(row.verdict, Verdict::Pass) {
+                    continue;
+                }
+                t.row(vec![
+                    row.key.scenario.clone(),
+                    row.key.seed.to_string(),
+                    row.key.objective.clone(),
+                    row.key.solver.clone(),
+                    row.verdict.label().to_string(),
+                    row.verdict.detail(),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+        out.push_str(&format!(
+            "suite check: {} pass, {} drift, {} fail ({} cells)\n",
+            self.passed(),
+            self.drifted(),
+            self.failed(),
+            self.rows.len(),
+        ));
+        out
+    }
+}
+
+/// Baseline file path for one scenario stem.
+fn baseline_path(dir: &Path, stem: &str) -> std::path::PathBuf {
+    dir.join(format!("{stem}.json"))
+}
+
+/// Write one baseline file per scenario from a fresh run, and remove
+/// orphan `.json` files left over from deleted/renamed scenarios (so
+/// "bless + commit" is the complete update workflow — [`check`] treats
+/// orphans as failures).  Returns the number of files written.
+///
+/// Refuses runs that would commit broken goldens: a `--solvers`- or
+/// `--objectives`-filtered run (each file is written wholesale, so
+/// blessing a subset would silently delete every other coordinate's
+/// golden cells) and a run containing [`CellStatus::Error`] cells (an
+/// error cell can never pass a later check, so bless→check would never
+/// be clean).  A `--seed`/`--seeds` override is *allowed* — it replaces
+/// the seed axis uniformly and is the canonical bless coordinate (the
+/// committed goldens are blessed at seed 7; see ROADMAP.md).
+pub fn bless(
+    result: &SuiteResult,
+    dir: impl AsRef<Path>,
+) -> Result<usize> {
+    if !covers_full_registry(&result.solvers) {
+        return Err(Error::Config(format!(
+            "refusing to bless a solver-filtered run ({}): baselines \
+             must cover the whole registry — re-run without --solvers",
+            result.solvers.join(", ")
+        )));
+    }
+    if !result.objectives.is_empty() {
+        return Err(Error::Config(format!(
+            "refusing to bless an objective-filtered run ({}): it \
+             would drop every scenario's own-objective golden cells — \
+             re-run without --objectives",
+            result.objectives.join(", ")
+        )));
+    }
+    for cell in &result.cells {
+        if let CellStatus::Error { message } = &cell.status {
+            return Err(Error::Config(format!(
+                "refusing to bless: {} errored ({message}); an error \
+                 cell can never pass a check",
+                cell.key
+            )));
+        }
+    }
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)
+        .map_err(|e| Error::io(dir.display().to_string(), e))?;
+    let mut by_stem: BTreeMap<&str, Vec<&Cell>> = BTreeMap::new();
+    for cell in &result.cells {
+        by_stem
+            .entry(cell.key.scenario.as_str())
+            .or_default()
+            .push(cell);
+    }
+    for (stem, cells) in &by_stem {
+        let mut root = Value::object();
+        root.set("scenario", *stem);
+        root.set(
+            "cells",
+            Value::Array(cells.iter().map(|c| c.to_value()).collect()),
+        );
+        root.sort_keys();
+        crate::benchkit::write_value(baseline_path(dir, stem), &root)?;
+    }
+    let listing = std::fs::read_dir(dir)
+        .map_err(|e| Error::io(dir.display().to_string(), e))?;
+    for path in listing.filter_map(|e| e.ok()).map(|e| e.path()) {
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let Some(stem) = path.file_stem().and_then(|s| s.to_str())
+        else {
+            continue;
+        };
+        if by_stem.contains_key(stem) {
+            continue;
+        }
+        // delete only files this tool plausibly wrote; anything else in
+        // the directory is a user file — leave it
+        if is_baseline_doc(&path, stem) {
+            std::fs::remove_file(&path).map_err(|e| {
+                Error::io(path.display().to_string(), e)
+            })?;
+            println!("bless: removed orphan baseline {}", path.display());
+        }
+    }
+    Ok(by_stem.len())
+}
+
+/// Whether a run's solver list covers the entire registry, regardless
+/// of the order the names were given in.
+fn covers_full_registry(solvers: &[String]) -> bool {
+    let mut got: Vec<&str> =
+        solvers.iter().map(String::as_str).collect();
+    got.sort_unstable();
+    let mut want = crate::scenario::solver_names();
+    want.sort_unstable();
+    got == want
+}
+
+/// Whether `path` holds a baseline document for its own file stem (the
+/// shape [`bless`] writes): both the orphan sweep in [`bless`] and the
+/// orphan detection in [`check`] use this, so they agree on what counts
+/// as a golden.
+fn is_baseline_doc(path: &Path, stem: &str) -> bool {
+    std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| json::parse(&text).ok())
+        .map_or(false, |doc| {
+            doc.get("cells").is_some()
+                && doc.get("scenario").and_then(Value::as_str)
+                    == Some(stem)
+        })
+}
+
+/// Load one scenario's baseline cells, keyed by cell coordinate.
+fn load_baseline(path: &Path) -> Result<BTreeMap<CellKey, Cell>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::io(path.display().to_string(), e))?;
+    let root = json::parse(&text)?;
+    let cells = root
+        .req("cells")?
+        .as_array()
+        .ok_or_else(|| Error::Json("cells: expected an array".into()))?;
+    let mut map = BTreeMap::new();
+    for v in cells {
+        let cell = Cell::from_value(v)?;
+        map.insert(cell.key.clone(), cell);
+    }
+    Ok(map)
+}
+
+/// Compare a run against the baselines under `dir`.  Never errors: every
+/// problem (including an unreadable baseline file) becomes a typed
+/// [`Verdict::Fail`] on the affected cells, so one report covers the
+/// whole matrix.
+pub fn check(result: &SuiteResult, dir: impl AsRef<Path>) -> CheckReport {
+    let dir = dir.as_ref();
+    // load each referenced baseline file once
+    let mut baselines: BTreeMap<String, Result<BTreeMap<CellKey, Cell>>> =
+        BTreeMap::new();
+    for cell in &result.cells {
+        let stem = &cell.key.scenario;
+        baselines
+            .entry(stem.clone())
+            .or_insert_with(|| load_baseline(&baseline_path(dir, stem)));
+    }
+
+    let mut rows = Vec::with_capacity(result.cells.len());
+    for cell in &result.cells {
+        let verdict = match &baselines[&cell.key.scenario] {
+            Err(e) => Verdict::Fail {
+                reason: format!("baseline unreadable: {e}"),
+            },
+            Ok(map) => compare(cell, map.get(&cell.key)),
+        };
+        rows.push(CheckRow {
+            key: cell.key.clone(),
+            verdict,
+        });
+    }
+
+    // stale baseline cells: committed expectations this run no longer
+    // produces (renamed solver, dropped seed/objective, ...).  A
+    // *filtered* run (`--solvers`/`--seeds`/`--objectives`) is a
+    // partial check: baseline cells whose coordinates fall outside the
+    // filter cannot be judged and are ignored, so iterating on one
+    // solver against the full committed goldens stays usable.
+    let run_keys: std::collections::BTreeSet<&CellKey> =
+        result.cells.iter().map(|c| &c.key).collect();
+    let full_registry = covers_full_registry(&result.solvers);
+    for loaded in baselines.values() {
+        let Ok(map) = loaded else { continue };
+        for key in map.keys() {
+            let in_scope = (full_registry
+                || result.solvers.contains(&key.solver))
+                && (result.seeds.is_empty()
+                    || result.seeds.contains(&key.seed))
+                && (result.objectives.is_empty()
+                    || result.objectives.contains(&key.objective));
+            if in_scope && !run_keys.contains(key) {
+                rows.push(CheckRow {
+                    key: key.clone(),
+                    verdict: Verdict::Fail {
+                        reason: "stale baseline cell: not produced by \
+                                 this run"
+                            .into(),
+                    },
+                });
+            }
+        }
+    }
+
+    // orphan baseline files: a committed <stem>.json with no scenario
+    // of that stem in the run (deleted/renamed scenario) must fail the
+    // gate, not pass silently.  Only files shaped like goldens count —
+    // unrelated user JSON in the directory is not ours to judge.
+    if let Ok(listing) = std::fs::read_dir(dir) {
+        let mut orphans: Vec<String> = listing
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.extension().and_then(|e| e.to_str()) == Some("json")
+            })
+            .filter_map(|p| {
+                p.file_stem()
+                    .and_then(|s| s.to_str())
+                    .map(|stem| (p.clone(), stem.to_string()))
+            })
+            .filter(|(path, stem)| {
+                !baselines.contains_key(stem)
+                    && is_baseline_doc(path, stem)
+            })
+            .map(|(_, stem)| stem)
+            .collect();
+        orphans.sort();
+        for stem in orphans {
+            rows.push(CheckRow {
+                key: CellKey {
+                    scenario: stem,
+                    seed: 0,
+                    objective: "-".into(),
+                    solver: "-".into(),
+                },
+                verdict: Verdict::Fail {
+                    reason: "orphan baseline file: no scenario with \
+                             this stem in the run"
+                        .into(),
+                },
+            });
+        }
+    }
+    CheckReport { rows }
+}
+
+/// Verdict for one run cell against its (possibly absent) golden cell.
+fn compare(run: &Cell, golden: Option<&Cell>) -> Verdict {
+    let Some(golden) = golden else {
+        return Verdict::Fail {
+            reason: "no baseline cell (run --bless to accept)".into(),
+        };
+    };
+    match (&run.status, &golden.status) {
+        (CellStatus::Error { message }, _) => Verdict::Fail {
+            reason: format!("solver error: {message}"),
+        },
+        (CellStatus::Ok(r), CellStatus::Ok(g)) => {
+            let fields: [(&'static str, f64, f64); 10] = [
+                ("cost", g.cost as f64, r.cost as f64),
+                (
+                    "weighted_sum",
+                    g.weighted_sum as f64,
+                    r.weighted_sum as f64,
+                ),
+                (
+                    "unweighted_sum",
+                    g.unweighted_sum as f64,
+                    r.unweighted_sum as f64,
+                ),
+                ("makespan", g.makespan as f64, r.makespan as f64),
+                ("p95_response.CC", g.p95[0], r.p95[0]),
+                ("p95_response.ES", g.p95[1], r.p95[1]),
+                ("p95_response.ED", g.p95[2], r.p95[2]),
+                (
+                    "placements.cloud",
+                    g.placements[0] as f64,
+                    r.placements[0] as f64,
+                ),
+                (
+                    "placements.edge",
+                    g.placements[1] as f64,
+                    r.placements[1] as f64,
+                ),
+                (
+                    "placements.device",
+                    g.placements[2] as f64,
+                    r.placements[2] as f64,
+                ),
+            ];
+            for (field, expected, actual) in fields {
+                if expected != actual {
+                    return Verdict::Drift {
+                        field,
+                        expected,
+                        actual,
+                    };
+                }
+            }
+            Verdict::Pass
+        }
+        (CellStatus::Skipped { .. }, CellStatus::Skipped { .. }) => {
+            Verdict::Pass
+        }
+        (run_s, golden_s) => Verdict::Fail {
+            reason: format!(
+                "status {} != baseline {}",
+                run_s.key(),
+                golden_s.key()
+            ),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::suite::CellMetrics;
+
+    fn metrics(cost: u64) -> CellMetrics {
+        CellMetrics {
+            cost,
+            weighted_sum: cost,
+            unweighted_sum: cost / 2,
+            makespan: 30,
+            p95: [0.0, 12.0, 0.0],
+            placements: [1, 2, 3],
+        }
+    }
+
+    fn cell(solver: &str, status: CellStatus) -> Cell {
+        Cell {
+            key: CellKey {
+                scenario: "ward".into(),
+                seed: 7,
+                objective: "weighted-sum".into(),
+                solver: solver.into(),
+            },
+            status,
+        }
+    }
+
+    #[test]
+    fn compare_verdicts_are_typed() {
+        let ok = cell("tabu", CellStatus::Ok(metrics(100)));
+        assert_eq!(compare(&ok, Some(&ok)), Verdict::Pass);
+        assert!(matches!(compare(&ok, None), Verdict::Fail { .. }));
+
+        let drifted = cell("tabu", CellStatus::Ok(metrics(104)));
+        match compare(&drifted, Some(&ok)) {
+            Verdict::Drift {
+                field,
+                expected,
+                actual,
+            } => {
+                assert_eq!(field, "cost");
+                assert_eq!((expected, actual), (100.0, 104.0));
+            }
+            other => panic!("expected drift, got {other:?}"),
+        }
+
+        let skipped = cell(
+            "exact",
+            CellStatus::Skipped {
+                reason: "limit".into(),
+            },
+        );
+        assert_eq!(compare(&skipped, Some(&skipped)), Verdict::Pass);
+        assert!(matches!(
+            compare(&skipped, Some(&ok)),
+            Verdict::Fail { .. }
+        ));
+        let errored = cell(
+            "tabu",
+            CellStatus::Error {
+                message: "boom".into(),
+            },
+        );
+        assert!(matches!(
+            compare(&errored, Some(&errored)),
+            Verdict::Fail { .. }
+        ));
+    }
+
+    #[test]
+    fn p95_drift_is_named_per_layer() {
+        let golden = cell("tabu", CellStatus::Ok(metrics(100)));
+        let mut moved = metrics(100);
+        moved.p95[1] = 13.0;
+        match compare(&cell("tabu", CellStatus::Ok(moved)), Some(&golden))
+        {
+            Verdict::Drift { field, .. } => {
+                assert_eq!(field, "p95_response.ES")
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bless_refuses_filtered_and_errored_runs() {
+        let dir = std::env::temp_dir().join("edgeward_bless_guards");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mini = |solvers: Vec<String>, cells: Vec<Cell>| SuiteResult {
+            dir: "scenarios".into(),
+            scenarios: vec![],
+            solvers,
+            seeds: vec![7],
+            objectives: vec![],
+            cells,
+        };
+        let full: Vec<String> = crate::scenario::solver_names()
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        // a solver-filtered run would delete the other solvers' goldens
+        let filtered = mini(
+            vec!["tabu".into()],
+            vec![cell("tabu", CellStatus::Ok(metrics(1)))],
+        );
+        let err = bless(&filtered, &dir).unwrap_err();
+        assert!(err.to_string().contains("--solvers"), "{err}");
+        // ...as would an objective-filtered run
+        let obj_filtered = SuiteResult {
+            objectives: vec!["makespan".into()],
+            ..mini(
+                full.clone(),
+                vec![cell("tabu", CellStatus::Ok(metrics(1)))],
+            )
+        };
+        let err = bless(&obj_filtered, &dir).unwrap_err();
+        assert!(err.to_string().contains("--objectives"), "{err}");
+        // an error cell can never pass a later check
+        let errored = mini(
+            full.clone(),
+            vec![cell(
+                "tabu",
+                CellStatus::Error {
+                    message: "boom".into(),
+                },
+            )],
+        );
+        let err = bless(&errored, &dir).unwrap_err();
+        assert!(err.to_string().contains("boom"), "{err}");
+        // both refusals happen before anything touches the disk
+        assert!(!dir.exists());
+        // a clean full-registry run blesses fine
+        let ok =
+            mini(full, vec![cell("tabu", CellStatus::Ok(metrics(1)))]);
+        assert_eq!(bless(&ok, &dir).unwrap(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn report_counts_and_render() {
+        let report = CheckReport {
+            rows: vec![
+                CheckRow {
+                    key: cell("tabu", CellStatus::Ok(metrics(1))).key,
+                    verdict: Verdict::Pass,
+                },
+                CheckRow {
+                    key: cell("greedy", CellStatus::Ok(metrics(1))).key,
+                    verdict: Verdict::Drift {
+                        field: "cost",
+                        expected: 1.0,
+                        actual: 2.0,
+                    },
+                },
+                CheckRow {
+                    key: cell("exact", CellStatus::Ok(metrics(1))).key,
+                    verdict: Verdict::Fail {
+                        reason: "no baseline cell".into(),
+                    },
+                },
+            ],
+        };
+        assert_eq!(
+            (report.passed(), report.drifted(), report.failed()),
+            (1, 1, 1)
+        );
+        assert!(!report.clean());
+        let rendered = report.render();
+        assert!(rendered.contains("DRIFT"), "{rendered}");
+        assert!(rendered.contains("expected 1, got 2"), "{rendered}");
+        assert!(rendered.contains("1 pass, 1 drift, 1 fail"));
+    }
+}

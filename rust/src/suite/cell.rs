@@ -1,0 +1,307 @@
+//! One cell of the suite matrix: a `(scenario, seed, objective, solver)`
+//! coordinate plus either its measured metrics or a typed skip.
+//!
+//! Cells serialize to flat JSON objects (sorted keys) so results files
+//! and golden baselines diff cleanly line-by-line, and parse back with
+//! typed errors so a corrupted baseline fails loudly in `--check`.
+
+use crate::metrics::LatencySummary;
+use crate::scenario::Scenario;
+use crate::scheduler::{MachineId, Schedule, SimScratch};
+use crate::serialize::Value;
+use crate::simulation::Tick;
+use crate::{Error, Result};
+
+/// Layer abbreviations in cell-array order (cloud, edge, device).
+pub const LAYER_KEYS: [&str; 3] = ["CC", "ES", "ED"];
+
+/// The matrix coordinate of one cell.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct CellKey {
+    /// Scenario file stem (unique within a suite directory).
+    pub scenario: String,
+    /// Seed the arrival process was realized with.
+    pub seed: u64,
+    /// Objective key the solvers minimized (`weighted-sum`, ...).
+    pub objective: String,
+    /// Canonical solver registry key.
+    pub solver: String,
+}
+
+impl std::fmt::Display for CellKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}[seed {}] × {} × {}",
+            self.scenario, self.seed, self.objective, self.solver
+        )
+    }
+}
+
+/// What happened at a matrix coordinate.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CellStatus {
+    /// The solver ran; metrics attached.
+    Ok(CellMetrics),
+    /// Declared skip (e.g. the exact solver's suite job limit, or an
+    /// objective the scenario cannot express).  Skips are stable and
+    /// compare as passes against a baseline that also skipped.
+    Skipped { reason: String },
+    /// The solver returned an error — never expected in a healthy suite,
+    /// and always a check failure.
+    Error { message: String },
+}
+
+impl CellStatus {
+    /// The `status` string cells carry in JSON.
+    pub fn key(&self) -> &'static str {
+        match self {
+            CellStatus::Ok(_) => "ok",
+            CellStatus::Skipped { .. } => "skipped",
+            CellStatus::Error { .. } => "error",
+        }
+    }
+}
+
+/// Deterministic outcome numbers for one solved cell.  Every field is a
+/// pure function of `(scenario, seed, objective, solver)`, which is what
+/// makes byte-exact golden comparison possible.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellMetrics {
+    /// Value of the scenario objective (what the solver minimized).
+    pub cost: u64,
+    /// Priority-weighted whole response time (eq. 5).
+    pub weighted_sum: u64,
+    /// Unweighted whole response time (Table VII column 1).
+    pub unweighted_sum: u64,
+    /// Completion time of the last job (Table VII column 2).
+    pub makespan: u64,
+    /// p95 response time per layer (`[CC, ES, ED]`; 0 where the layer
+    /// ran no jobs), from [`LatencySummary`].
+    pub p95: [f64; 3],
+    /// Jobs placed per layer (`[cloud, edge, device]`).
+    pub placements: [usize; 3],
+}
+
+impl CellMetrics {
+    /// Measure a finished schedule.  `scratch` is the worker thread's
+    /// reused [`SimScratch`], so re-deriving the objective value for the
+    /// cell allocates nothing in the suite's inner loop.
+    pub fn measure(
+        scenario: &Scenario,
+        schedule: &Schedule,
+        scratch: &mut SimScratch,
+    ) -> CellMetrics {
+        let cost = crate::scheduler::objective_cost(
+            &scenario.jobs,
+            &scenario.topology,
+            &schedule.assignment,
+            &scenario.objective,
+            scratch,
+        );
+        debug_assert_eq!(cost, scenario.evaluate(schedule));
+        let mut responses: [Vec<Tick>; 3] = Default::default();
+        for e in &schedule.trace.entries {
+            let lane = match e.machine.class {
+                MachineId::Cloud => 0,
+                MachineId::Edge => 1,
+                MachineId::Device => 2,
+            };
+            responses[lane].push(e.response());
+        }
+        let p95 = [
+            LatencySummary::from_ticks(&responses[0]).p95,
+            LatencySummary::from_ticks(&responses[1]).p95,
+            LatencySummary::from_ticks(&responses[2]).p95,
+        ];
+        let (cloud, edge, device) = schedule.placement_counts();
+        CellMetrics {
+            cost,
+            weighted_sum: schedule.weighted_sum,
+            unweighted_sum: schedule.unweighted_sum(),
+            makespan: schedule.last_completion(),
+            p95,
+            placements: [cloud, edge, device],
+        }
+    }
+}
+
+/// One cell: coordinate + outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cell {
+    pub key: CellKey,
+    pub status: CellStatus,
+}
+
+impl Cell {
+    /// Flat JSON object (sorted keys).
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::object();
+        v.set("scenario", self.key.scenario.as_str());
+        v.set("seed", self.key.seed);
+        v.set("objective", self.key.objective.as_str());
+        v.set("solver", self.key.solver.as_str());
+        v.set("status", self.status.key());
+        match &self.status {
+            CellStatus::Ok(m) => {
+                v.set("cost", m.cost);
+                v.set("weighted_sum", m.weighted_sum);
+                v.set("unweighted_sum", m.unweighted_sum);
+                v.set("makespan", m.makespan);
+                let mut p95 = Value::object();
+                for (i, key) in LAYER_KEYS.iter().enumerate() {
+                    p95.set(key, m.p95[i]);
+                }
+                v.set("p95_response", p95);
+                let mut placements = Value::object();
+                placements.set("cloud", m.placements[0]);
+                placements.set("edge", m.placements[1]);
+                placements.set("device", m.placements[2]);
+                v.set("placements", placements);
+            }
+            CellStatus::Skipped { reason } => {
+                v.set("reason", reason.as_str());
+            }
+            CellStatus::Error { message } => {
+                v.set("reason", message.as_str());
+            }
+        }
+        v.sort_keys();
+        v
+    }
+
+    /// Parse a cell back from a results/baseline document.
+    pub fn from_value(v: &Value) -> Result<Cell> {
+        let key = CellKey {
+            scenario: str_field(v, "scenario")?,
+            seed: u64_field(v, "seed")?,
+            objective: str_field(v, "objective")?,
+            solver: str_field(v, "solver")?,
+        };
+        let status = match str_field(v, "status")?.as_str() {
+            "ok" => {
+                let p95_obj = v.req("p95_response")?;
+                let mut p95 = [0.0; 3];
+                for (i, layer) in LAYER_KEYS.iter().enumerate() {
+                    p95[i] = f64_field(p95_obj, layer)?;
+                }
+                let pl = v.req("placements")?;
+                CellStatus::Ok(CellMetrics {
+                    cost: u64_field(v, "cost")?,
+                    weighted_sum: u64_field(v, "weighted_sum")?,
+                    unweighted_sum: u64_field(v, "unweighted_sum")?,
+                    makespan: u64_field(v, "makespan")?,
+                    p95,
+                    placements: [
+                        u64_field(pl, "cloud")? as usize,
+                        u64_field(pl, "edge")? as usize,
+                        u64_field(pl, "device")? as usize,
+                    ],
+                })
+            }
+            "skipped" => CellStatus::Skipped {
+                reason: str_field(v, "reason")?,
+            },
+            "error" => CellStatus::Error {
+                message: str_field(v, "reason")?,
+            },
+            other => {
+                return Err(Error::Json(format!(
+                    "cell status must be ok|skipped|error, got {other:?}"
+                )))
+            }
+        };
+        Ok(Cell { key, status })
+    }
+}
+
+fn str_field(v: &Value, key: &str) -> Result<String> {
+    v.req(key)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| Error::Json(format!("field {key:?}: not a string")))
+}
+
+fn u64_field(v: &Value, key: &str) -> Result<u64> {
+    v.req(key)?.as_u64().ok_or_else(|| {
+        Error::Json(format!("field {key:?}: not a non-negative integer"))
+    })
+}
+
+fn f64_field(v: &Value, key: &str) -> Result<f64> {
+    v.req(key)?
+        .as_f64()
+        .ok_or_else(|| Error::Json(format!("field {key:?}: not a number")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_cell() -> Cell {
+        Cell {
+            key: CellKey {
+                scenario: "paper".into(),
+                seed: 7,
+                objective: "weighted-sum".into(),
+                solver: "tabu".into(),
+            },
+            status: CellStatus::Ok(CellMetrics {
+                cost: 112,
+                weighted_sum: 112,
+                unweighted_sum: 76,
+                makespan: 33,
+                p95: [14.0, 9.0, 0.0],
+                placements: [3, 5, 2],
+            }),
+        }
+    }
+
+    #[test]
+    fn cell_json_roundtrip() {
+        for cell in [
+            sample_cell(),
+            Cell {
+                key: sample_cell().key,
+                status: CellStatus::Skipped {
+                    reason: "11 jobs exceed exact's 10-job suite limit"
+                        .into(),
+                },
+            },
+        ] {
+            let v = cell.to_value();
+            let back = Cell::from_value(&v).unwrap();
+            assert_eq!(back, cell);
+            // keys already canonical: re-sorting changes nothing
+            let mut sorted = v.clone();
+            sorted.sort_keys();
+            assert_eq!(sorted.to_string(), v.to_string());
+        }
+    }
+
+    #[test]
+    fn malformed_cells_are_typed_errors() {
+        let mut v = sample_cell().to_value();
+        v.set("status", "exploded");
+        assert!(matches!(
+            Cell::from_value(&v).unwrap_err(),
+            Error::Json(_)
+        ));
+        let mut v = sample_cell().to_value();
+        v.set("cost", "not a number");
+        assert!(Cell::from_value(&v).is_err());
+    }
+
+    #[test]
+    fn measure_agrees_with_schedule_sums() {
+        let scenario = Scenario::paper();
+        let schedule = scenario.solve("all-edge").unwrap();
+        let mut scratch = SimScratch::default();
+        let m = CellMetrics::measure(&scenario, &schedule, &mut scratch);
+        assert_eq!(m.cost, scenario.evaluate(&schedule));
+        assert_eq!(m.unweighted_sum, 291); // published Table VII row
+        assert_eq!(m.placements, [0, 10, 0]);
+        assert_eq!(m.p95[0], 0.0, "no cloud jobs, p95 must be 0");
+        assert!(m.p95[1] > 0.0);
+    }
+}

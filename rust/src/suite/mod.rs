@@ -1,0 +1,717 @@
+//! Scenario-suite regression harness: batch-run a directory of scenario
+//! TOMLs through the solver registry and pin the results to committed
+//! golden baselines.
+//!
+//! The paper's claims (Table VII under ER/ICU workload mixes) only stay
+//! trustworthy at scale if every solver is continuously re-validated
+//! across many scenarios — allocation strategies are known to invert
+//! their ranking under shifted workloads.  A [`Suite`] discovers every
+//! `*.toml` under a directory, runs the full cross-product of registered
+//! solvers × objectives × seeds in parallel (one reused
+//! [`SimScratch`](crate::scheduler::SimScratch) per worker thread), and
+//! produces a [`SuiteResult`]: a deterministic matrix of [`Cell`]s that
+//! serializes byte-identically for identical inputs (sorted JSON keys,
+//! no wall-clock fields).
+//!
+//! Golden-baseline workflow (CLI: `edgeward suite`):
+//!
+//! ```text
+//! edgeward suite scenarios/ --seed 7             # run, print the matrix
+//! edgeward suite scenarios/ --bless baselines/   # write/refresh goldens
+//! edgeward suite scenarios/ --check baselines/   # compare; exits non-zero
+//!                                                # on any drift or failure
+//! ```
+//!
+//! [`check`] yields a typed verdict per cell — [`Verdict::Pass`],
+//! [`Verdict::Drift`] (a numeric field moved), or [`Verdict::Fail`]
+//! (missing/stale baseline, status flip, solver error) — so CI can fail
+//! precisely and a human can read exactly which solver regressed on
+//! which ward.
+//!
+//! ```no_run
+//! use edgeward::suite::{Suite, SuiteConfig};
+//!
+//! let config = SuiteConfig { seeds: vec![7], ..SuiteConfig::default() };
+//! let result = Suite::discover("scenarios", config)?.run();
+//! result.write("suite_results.json")?;
+//! let report = edgeward::suite::check(&result, "baselines");
+//! assert!(report.clean(), "{}", report.render());
+//! # Ok::<(), edgeward::Error>(())
+//! ```
+
+mod baseline;
+mod cell;
+mod report;
+
+pub use baseline::{bless, check, CheckReport, CheckRow, Verdict};
+pub use cell::{Cell, CellKey, CellMetrics, CellStatus, LAYER_KEYS};
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::scenario::{
+    solver_spec, Objective, Scenario, SolverSpec, SOLVERS,
+};
+use crate::scheduler::SimScratch;
+use crate::{Error, Result};
+
+/// What to run the matrix over.  Empty vectors mean "each scenario's
+/// own" (seed / objective) or "the whole registry" (solvers).
+#[derive(Debug, Clone, Default)]
+pub struct SuiteConfig {
+    /// Solver registry names/aliases (normalized to canonical names by
+    /// [`Suite::discover`]).  Empty: every registered solver.
+    pub solvers: Vec<String>,
+    /// Objective keys to run each scenario under.  Empty: each
+    /// scenario's own objective.
+    pub objectives: Vec<String>,
+    /// Seeds to realize each generative scenario with.  Empty: each
+    /// scenario's own seed.
+    pub seeds: Vec<u64>,
+    /// Worker threads (0: one per available core).
+    pub threads: usize,
+}
+
+/// One discovered scenario file.
+#[derive(Debug, Clone)]
+pub struct SuiteScenario {
+    /// File stem — the scenario's identity in cells and baselines.
+    pub stem: String,
+    /// Path the scenario was loaded from.
+    pub path: String,
+    /// The parsed scenario (its own seed/objective, before overrides).
+    pub scenario: Scenario,
+}
+
+/// A discovered, validated suite, ready to [`Suite::run`].
+///
+/// Construct via [`Suite::discover`] — it validates and canonicalizes
+/// the configuration.  A hand-assembled `Suite` whose config names an
+/// unknown solver panics inside [`Suite::run`].
+#[derive(Debug, Clone)]
+pub struct Suite {
+    /// Scenarios in stem order (the deterministic matrix order).
+    pub scenarios: Vec<SuiteScenario>,
+    /// Normalized configuration (canonical solver names).
+    pub config: SuiteConfig,
+    /// The directory the scenarios came from, as given.
+    pub dir: String,
+}
+
+/// The finished matrix.
+#[derive(Debug, Clone)]
+pub struct SuiteResult {
+    /// The scenario directory, as given to [`Suite::discover`].
+    pub dir: String,
+    /// Scenario summaries in stem order (each scenario's *own* TOML
+    /// defaults — the coordinates actually run are on the cells).
+    pub scenarios: Vec<ScenarioInfo>,
+    /// Canonical solver names run, in registry order.
+    pub solvers: Vec<String>,
+    /// Seed overrides the matrix ran with (empty: each scenario's own).
+    pub seeds: Vec<u64>,
+    /// Objective overrides the matrix ran with (canonical keys; empty:
+    /// each scenario's own).
+    pub objectives: Vec<String>,
+    /// Every cell, in deterministic (scenario, seed, objective, solver)
+    /// order.
+    pub cells: Vec<Cell>,
+}
+
+/// The per-scenario header row of the results matrix: the scenario file
+/// as declared (its own seed/objective defaults), independent of any
+/// `--seeds`/`--objectives` override.
+#[derive(Debug, Clone)]
+pub struct ScenarioInfo {
+    pub stem: String,
+    pub name: String,
+    pub jobs: usize,
+    pub topology: String,
+    pub arrival: String,
+    pub objective: String,
+    pub seed: u64,
+}
+
+/// One realized `(scenario, seed, objective)` slice of the matrix;
+/// `Err` carries a skip reason that applies to every solver in the slice
+/// (e.g. an objective the scenario cannot express).
+struct Variant {
+    stem: String,
+    seed: u64,
+    objective_key: String,
+    realized: std::result::Result<Scenario, String>,
+}
+
+impl Suite {
+    /// Discover every `*.toml` under `dir` (sorted by file stem),
+    /// validate the configuration, and return a runnable suite.
+    pub fn discover(
+        dir: impl AsRef<Path>,
+        config: SuiteConfig,
+    ) -> Result<Suite> {
+        let dir = dir.as_ref();
+        let listing = std::fs::read_dir(dir)
+            .map_err(|e| Error::io(dir.display().to_string(), e))?;
+        let mut scenarios = Vec::new();
+        for entry in listing {
+            let entry = entry
+                .map_err(|e| Error::io(dir.display().to_string(), e))?;
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+                continue;
+            }
+            let stem = path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or_default()
+                .to_string();
+            let scenario = Scenario::load(&path).map_err(|e| {
+                Error::Config(format!("{}: {e}", path.display()))
+            })?;
+            scenarios.push(SuiteScenario {
+                stem,
+                path: path.display().to_string(),
+                scenario,
+            });
+        }
+        scenarios.sort_by_key(|s| s.stem.clone());
+        if scenarios.is_empty() {
+            return Err(Error::Config(format!(
+                "no scenario TOMLs under {}",
+                dir.display()
+            )));
+        }
+        for sc in &scenarios {
+            check_seed_exact(sc.scenario.seed, &sc.path)?;
+        }
+        let config = normalize_config(config)?;
+        Ok(Suite {
+            scenarios,
+            config,
+            dir: dir.display().to_string(),
+        })
+    }
+
+    /// The solver registry rows this suite runs, in registry order.
+    fn solver_specs(&self) -> Vec<&'static SolverSpec> {
+        if self.config.solvers.is_empty() {
+            SOLVERS.iter().collect()
+        } else {
+            self.config
+                .solvers
+                .iter()
+                .map(|name| {
+                    solver_spec(name).unwrap_or_else(|e| {
+                        panic!(
+                            "{e}; Suite must be built via \
+                             Suite::discover, which validates solver \
+                             names up front"
+                        )
+                    })
+                })
+                .collect()
+        }
+    }
+
+    /// Realize every `(scenario, seed, objective)` slice, in order.
+    fn variants(&self) -> Vec<Variant> {
+        let mut variants = Vec::new();
+        for sc in &self.scenarios {
+            let seeds: Vec<u64> = if self.config.seeds.is_empty() {
+                vec![sc.scenario.seed]
+            } else {
+                self.config.seeds.clone()
+            };
+            let objectives: Vec<String> =
+                if self.config.objectives.is_empty() {
+                    vec![sc.scenario.objective.key().to_string()]
+                } else {
+                    self.config.objectives.clone()
+                };
+            for &seed in &seeds {
+                for objective_key in &objectives {
+                    variants.push(Variant {
+                        stem: sc.stem.clone(),
+                        seed,
+                        objective_key: objective_key.clone(),
+                        realized: realize(sc, seed, objective_key),
+                    });
+                }
+            }
+        }
+        variants
+    }
+
+    /// Run the whole matrix.  Cells are computed in parallel (a shared
+    /// work queue over `threads` workers, each reusing one
+    /// [`SimScratch`]) but returned in deterministic order, so the
+    /// resulting JSON is byte-identical for identical inputs.
+    pub fn run(&self) -> SuiteResult {
+        let variants = self.variants();
+        let solvers = self.solver_specs();
+        let tasks: Vec<(&Variant, &'static SolverSpec)> = variants
+            .iter()
+            .flat_map(|v| solvers.iter().map(move |&s| (v, s)))
+            .collect();
+
+        let workers = match self.config.threads {
+            0 => std::thread::available_parallelism()
+                .map(std::num::NonZeroUsize::get)
+                .unwrap_or(1),
+            n => n,
+        }
+        .min(tasks.len().max(1));
+
+        let next = AtomicUsize::new(0);
+        let mut cells: Vec<Option<Cell>> = vec![None; tasks.len()];
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut scratch = SimScratch::default();
+                        let mut out: Vec<(usize, Cell)> = Vec::new();
+                        loop {
+                            let t = next.fetch_add(1, Ordering::Relaxed);
+                            if t >= tasks.len() {
+                                break;
+                            }
+                            let (variant, spec) = tasks[t];
+                            out.push((
+                                t,
+                                run_cell(variant, spec, &mut scratch),
+                            ));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (i, cell) in
+                    h.join().expect("suite worker panicked")
+                {
+                    cells[i] = Some(cell);
+                }
+            }
+        });
+        let cells = cells
+            .into_iter()
+            .map(|c| c.expect("every task yields a cell"))
+            .collect();
+
+        SuiteResult {
+            dir: self.dir.clone(),
+            scenarios: self
+                .scenarios
+                .iter()
+                .map(|sc| ScenarioInfo {
+                    stem: sc.stem.clone(),
+                    name: sc.scenario.name.clone(),
+                    jobs: sc.scenario.jobs.len(),
+                    topology: sc.scenario.topology.label(),
+                    arrival: sc
+                        .scenario
+                        .arrival
+                        .as_ref()
+                        .map(|a| a.key().to_string())
+                        .unwrap_or_else(|| "literal".to_string()),
+                    objective: sc.scenario.objective.key().to_string(),
+                    seed: sc.scenario.seed,
+                })
+                .collect(),
+            solvers: solvers.iter().map(|s| s.name.to_string()).collect(),
+            seeds: self.config.seeds.clone(),
+            objectives: self.config.objectives.clone(),
+            cells,
+        }
+    }
+}
+
+/// Order-preserving dedup (aliases can canonicalize to the same key).
+fn dedup_preserving<T: PartialEq + Clone>(v: &mut Vec<T>) {
+    let mut seen: Vec<T> = Vec::new();
+    v.retain(|x| {
+        if seen.contains(x) {
+            false
+        } else {
+            seen.push(x.clone());
+            true
+        }
+    });
+}
+
+/// Validate solver/objective names up front (typos fail the run, not a
+/// cell) and normalize both to canonical keys, so cell coordinates are
+/// alias-independent and always match blessed baselines.
+fn normalize_config(mut config: SuiteConfig) -> Result<SuiteConfig> {
+    config.solvers = config
+        .solvers
+        .iter()
+        .map(|name| solver_spec(name).map(|s| s.name.to_string()))
+        .collect::<Result<Vec<_>>>()?;
+    config.objectives = config
+        .objectives
+        .iter()
+        // the throwaway deadline only makes the key itself parse;
+        // per-scenario deadline availability is resolved (and
+        // typed-skipped) in `realize`
+        .map(|key| {
+            Objective::parse(key, &[1]).map(|o| o.key().to_string())
+        })
+        .collect::<Result<Vec<_>>>()?;
+    // repeated/aliased entries would silently double every cell
+    dedup_preserving(&mut config.solvers);
+    dedup_preserving(&mut config.objectives);
+    dedup_preserving(&mut config.seeds);
+    for &seed in &config.seeds {
+        check_seed_exact(seed, "--seeds")?;
+    }
+    Ok(config)
+}
+
+/// Cell coordinates round-trip through the f64-backed JSON model, which
+/// is exact only up to 2^53 — reject seeds beyond that loudly instead
+/// of letting a silently-rounded golden key mismatch every cell.
+fn check_seed_exact(seed: u64, source: &str) -> Result<()> {
+    const MAX_EXACT: u64 = 1 << 53;
+    if seed > MAX_EXACT {
+        return Err(Error::Config(format!(
+            "{source}: seed {seed} exceeds 2^53 and would not \
+             round-trip exactly through the JSON results/baselines"
+        )));
+    }
+    Ok(())
+}
+
+/// Rebuild a scenario for one `(seed, objective)` coordinate through the
+/// validating builder.  Literal-job scenarios keep their jobs; generated
+/// ones re-realize their arrival process with `seed`.
+fn realize(
+    sc: &SuiteScenario,
+    seed: u64,
+    objective_key: &str,
+) -> std::result::Result<Scenario, String> {
+    let base = &sc.scenario;
+    let objective = if objective_key == base.objective.key() {
+        // the scenario's own objective keeps its deadlines verbatim
+        base.objective.clone()
+    } else {
+        let deadlines = match &base.objective {
+            Objective::DeadlineMiss { deadlines } => deadlines.clone(),
+            _ => vec![],
+        };
+        Objective::parse(objective_key, &deadlines)
+            .map_err(|e| e.to_string())?
+    };
+    let mut b = Scenario::builder()
+        .name(base.name.clone())
+        .seed(seed)
+        .topology(base.topology)
+        .objective(objective)
+        .params(base.params);
+    b = match &base.arrival {
+        Some(a) => b.arrival(a.clone()),
+        None => b.jobs(base.jobs.clone()),
+    };
+    b.build().map_err(|e| e.to_string())
+}
+
+/// Compute one cell (runs on a worker thread).
+fn run_cell(
+    variant: &Variant,
+    spec: &'static SolverSpec,
+    scratch: &mut SimScratch,
+) -> Cell {
+    let key = CellKey {
+        scenario: variant.stem.clone(),
+        seed: variant.seed,
+        objective: variant.objective_key.clone(),
+        solver: spec.name.to_string(),
+    };
+    let scenario = match &variant.realized {
+        Err(reason) => {
+            return Cell {
+                key,
+                status: CellStatus::Skipped {
+                    reason: reason.clone(),
+                },
+            }
+        }
+        Ok(s) => s,
+    };
+    if let Some(reason) = spec.skip_reason(scenario) {
+        return Cell {
+            key,
+            status: CellStatus::Skipped { reason },
+        };
+    }
+    // the spec is already resolved — no need to round-trip through the
+    // registry's name lookup per cell
+    match spec.build().solve(scenario) {
+        Ok(schedule) => Cell {
+            key,
+            status: CellStatus::Ok(CellMetrics::measure(
+                scenario, &schedule, scratch,
+            )),
+        },
+        Err(e) => Cell {
+            key,
+            status: CellStatus::Error {
+                message: e.to_string(),
+            },
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::Arrival;
+
+    fn write_corpus(dir: &Path) {
+        std::fs::write(
+            dir.join("paper.toml"),
+            "[scenario]\nname = \"paper\"\n",
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("ward.toml"),
+            "[scenario]\narrival = \"poisson-ward\"\njobs = 5\n\
+             rate = 0.4\nseed = 3\nobjective = \"makespan\"\n",
+        )
+        .unwrap();
+        std::fs::write(dir.join("notes.txt"), "not a scenario").unwrap();
+    }
+
+    /// A per-test scratch directory, cleared of any leftovers from a
+    /// previously aborted run.
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("edgeward_suite_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn discover_finds_sorted_toml_scenarios() {
+        let dir = tmp("discover");
+        write_corpus(&dir);
+        let suite =
+            Suite::discover(&dir, SuiteConfig::default()).unwrap();
+        let stems: Vec<&str> =
+            suite.scenarios.iter().map(|s| s.stem.as_str()).collect();
+        assert_eq!(stems, ["paper", "ward"]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn discover_rejects_empty_and_unknown_names() {
+        let dir = tmp("empty");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(Suite::discover(&dir, SuiteConfig::default()).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+
+        let dir = tmp("badcfg");
+        write_corpus(&dir);
+        let bad_solver = SuiteConfig {
+            solvers: vec!["annealing".into()],
+            ..SuiteConfig::default()
+        };
+        assert!(Suite::discover(&dir, bad_solver).is_err());
+        let bad_objective = SuiteConfig {
+            objectives: vec!["profit".into()],
+            ..SuiteConfig::default()
+        };
+        assert!(Suite::discover(&dir, bad_objective).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn run_produces_the_full_matrix_in_order() {
+        let dir = tmp("matrix");
+        write_corpus(&dir);
+        let config = SuiteConfig {
+            solvers: vec!["tabu".into(), "all-edge".into()],
+            seeds: vec![7],
+            ..SuiteConfig::default()
+        };
+        let result = Suite::discover(&dir, config).unwrap().run();
+        // 2 scenarios × 1 seed × 1 objective (own) × 2 solvers
+        assert_eq!(result.cells.len(), 4);
+        let keys: Vec<String> = result
+            .cells
+            .iter()
+            .map(|c| format!("{}/{}", c.key.scenario, c.key.solver))
+            .collect();
+        assert_eq!(
+            keys,
+            [
+                "paper/tabu",
+                "paper/all-edge",
+                "ward/tabu",
+                "ward/all-edge"
+            ]
+        );
+        // the ward keeps its makespan objective; all cells solved
+        assert!(result
+            .cells
+            .iter()
+            .all(|c| matches!(c.status, CellStatus::Ok(_))));
+        assert_eq!(result.cells[2].key.objective, "makespan");
+        assert_eq!(result.cells[2].key.seed, 7);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn objective_override_and_inexpressible_objectives_skip() {
+        let dir = tmp("objectives");
+        write_corpus(&dir);
+        let config = SuiteConfig {
+            solvers: vec!["greedy".into()],
+            objectives: vec!["makespan".into(), "deadline-miss".into()],
+            ..SuiteConfig::default()
+        };
+        let result = Suite::discover(&dir, config).unwrap().run();
+        assert_eq!(result.cells.len(), 4);
+        for cell in &result.cells {
+            match cell.key.objective.as_str() {
+                "makespan" => {
+                    assert!(
+                        matches!(cell.status, CellStatus::Ok(_)),
+                        "{}",
+                        cell.key
+                    )
+                }
+                // neither corpus scenario declares deadlines, so the
+                // deadline-miss column is a typed skip, not an error
+                "deadline-miss" => assert!(
+                    matches!(cell.status, CellStatus::Skipped { .. }),
+                    "{}",
+                    cell.key
+                ),
+                other => panic!("unexpected objective {other}"),
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn aliased_and_repeated_config_entries_dedup() {
+        let dir = tmp("dedup");
+        write_corpus(&dir);
+        let config = SuiteConfig {
+            // "ours" is an alias of "tabu"; seed 7 repeats
+            solvers: vec!["tabu".into(), "ours".into()],
+            seeds: vec![7, 7],
+            ..SuiteConfig::default()
+        };
+        let suite = Suite::discover(&dir, config).unwrap();
+        assert_eq!(suite.config.solvers, ["tabu"]);
+        assert_eq!(suite.config.seeds, [7]);
+        let result = suite.run();
+        // 2 scenarios × 1 seed × 1 objective × 1 solver — no doubled
+        // cells with identical coordinates
+        assert_eq!(result.cells.len(), 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn seeds_beyond_exact_json_range_rejected() {
+        let dir = tmp("bigseed");
+        write_corpus(&dir);
+        let config = SuiteConfig {
+            seeds: vec![1 << 60],
+            ..SuiteConfig::default()
+        };
+        assert!(Suite::discover(&dir, config).is_err());
+        // a scenario's own oversized seed is rejected at discovery too
+        std::fs::write(
+            dir.join("big.toml"),
+            "[scenario]\nseed = 1152921504606846976\n", // 2^60
+        )
+        .unwrap();
+        assert!(Suite::discover(&dir, SuiteConfig::default()).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn objective_aliases_canonicalize_in_cell_keys() {
+        let dir = tmp("objalias");
+        write_corpus(&dir);
+        let config = SuiteConfig {
+            solvers: vec!["greedy".into()],
+            objectives: vec!["eq5".into(), "last_completion".into()],
+            ..SuiteConfig::default()
+        };
+        let result = Suite::discover(&dir, config).unwrap().run();
+        let keys: std::collections::BTreeSet<&str> = result
+            .cells
+            .iter()
+            .map(|c| c.key.objective.as_str())
+            .collect();
+        // aliases never leak into cell coordinates (they would make
+        // every blessed baseline unmatchable)
+        assert_eq!(
+            keys.into_iter().collect::<Vec<_>>(),
+            ["makespan", "weighted-sum"]
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn exact_suite_limit_yields_typed_skip() {
+        let dir = tmp("exactskip");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("big.toml"),
+            "[scenario]\narrival = \"poisson-ward\"\njobs = 11\n\
+             rate = 0.4\n",
+        )
+        .unwrap();
+        let config = SuiteConfig {
+            solvers: vec!["exact".into(), "greedy".into()],
+            ..SuiteConfig::default()
+        };
+        let result = Suite::discover(&dir, config).unwrap().run();
+        let exact = result
+            .cells
+            .iter()
+            .find(|c| c.key.solver == "exact")
+            .unwrap();
+        match &exact.status {
+            CellStatus::Skipped { reason } => {
+                assert!(reason.contains("11 jobs"), "{reason}")
+            }
+            other => panic!("expected skip, got {other:?}"),
+        }
+        assert!(matches!(
+            result
+                .cells
+                .iter()
+                .find(|c| c.key.solver == "greedy")
+                .unwrap()
+                .status,
+            CellStatus::Ok(_)
+        ));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn seed_override_rerealizes_arrivals() {
+        let sc = SuiteScenario {
+            stem: "ward".into(),
+            path: "ward.toml".into(),
+            scenario: Scenario::builder()
+                .arrival(Arrival::poisson_ward())
+                .seed(1)
+                .build()
+                .unwrap(),
+        };
+        let a = realize(&sc, 7, "weighted-sum").unwrap();
+        let b = realize(&sc, 7, "weighted-sum").unwrap();
+        let c = realize(&sc, 8, "weighted-sum").unwrap();
+        assert_eq!(a.jobs, b.jobs);
+        assert_ne!(a.jobs, c.jobs);
+        assert_eq!(a.seed, 7);
+    }
+}

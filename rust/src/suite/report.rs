@@ -1,0 +1,193 @@
+//! Suite results rendering: the machine-readable matrix document and the
+//! human table.
+
+use crate::report::TextTable;
+use crate::serialize::Value;
+use crate::Result;
+
+use super::{CellStatus, SuiteResult};
+
+impl SuiteResult {
+    /// The `suite_results.json` document: scenarios × solvers × cells
+    /// with recursively sorted keys.  Contains no wall-clock or host
+    /// fields, so identical inputs serialize byte-identically — the
+    /// property the determinism regression test pins down.
+    pub fn to_value(&self) -> Value {
+        let mut root = Value::object();
+        root.set("suite", self.dir.as_str());
+        root.set(
+            "solvers",
+            Value::Array(
+                self.solvers
+                    .iter()
+                    .map(|s| Value::from(s.as_str()))
+                    .collect(),
+            ),
+        );
+        let scenarios: Vec<Value> = self
+            .scenarios
+            .iter()
+            .map(|s| {
+                let mut v = Value::object();
+                v.set("stem", s.stem.as_str());
+                v.set("name", s.name.as_str());
+                v.set("jobs", s.jobs);
+                v.set("topology", s.topology.as_str());
+                v.set("arrival", s.arrival.as_str());
+                v.set("objective", s.objective.as_str());
+                v.set("seed", s.seed);
+                v
+            })
+            .collect();
+        root.set("scenarios", Value::Array(scenarios));
+        // the overrides the matrix actually ran with (empty: each
+        // scenario's own defaults from the header above)
+        root.set(
+            "seeds",
+            Value::Array(
+                self.seeds.iter().map(|&s| Value::from(s)).collect(),
+            ),
+        );
+        root.set(
+            "objectives",
+            Value::Array(
+                self.objectives
+                    .iter()
+                    .map(|o| Value::from(o.as_str()))
+                    .collect(),
+            ),
+        );
+        root.set(
+            "cells",
+            Value::Array(
+                self.cells.iter().map(|c| c.to_value()).collect(),
+            ),
+        );
+        root.sort_keys();
+        root
+    }
+
+    /// Write the matrix document to disk (via the shared
+    /// [`crate::benchkit::write_value`] writer).
+    pub fn write(&self, path: &str) -> Result<()> {
+        crate::benchkit::write_value(path, &self.to_value())
+    }
+
+    /// Human matrix table: one row per cell.  Skip/error reasons go in
+    /// the trailing note column so the numeric columns stay aligned.
+    pub fn render(&self) -> String {
+        let mut t = TextTable::new(&[
+            "Scenario", "Seed", "Objective", "Solver", "Cost", "Whole",
+            "Makespan", "p95(CC/ES/ED)", "Note",
+        ])
+        .with_title(format!(
+            "scenario suite {} ({} scenarios × {} solvers, {} cells)",
+            self.dir,
+            self.scenarios.len(),
+            self.solvers.len(),
+            self.cells.len()
+        ));
+        for cell in &self.cells {
+            let dash = || "-".to_string();
+            let (cost, whole, makespan, p95, note) = match &cell.status
+            {
+                CellStatus::Ok(m) => (
+                    m.cost.to_string(),
+                    m.unweighted_sum.to_string(),
+                    m.makespan.to_string(),
+                    format!("{}/{}/{}", m.p95[0], m.p95[1], m.p95[2]),
+                    String::new(),
+                ),
+                CellStatus::Skipped { reason } => (
+                    dash(),
+                    dash(),
+                    dash(),
+                    dash(),
+                    format!("skipped: {reason}"),
+                ),
+                CellStatus::Error { message } => (
+                    dash(),
+                    dash(),
+                    dash(),
+                    dash(),
+                    format!("ERROR: {message}"),
+                ),
+            };
+            t.row(vec![
+                cell.key.scenario.clone(),
+                cell.key.seed.to_string(),
+                cell.key.objective.clone(),
+                cell.key.solver.clone(),
+                cost,
+                whole,
+                makespan,
+                p95,
+                note,
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Suite, SuiteConfig};
+    use crate::serialize::json;
+
+    #[test]
+    fn results_document_shape_and_determinism() {
+        let dir =
+            std::env::temp_dir().join("edgeward_suite_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("mini.toml"),
+            "[scenario]\narrival = \"poisson-ward\"\njobs = 4\n\
+             rate = 0.5\nseed = 2\n",
+        )
+        .unwrap();
+        let config = SuiteConfig {
+            solvers: vec!["greedy".into(), "all-device".into()],
+            seeds: vec![9],
+            ..SuiteConfig::default()
+        };
+        let run = || {
+            Suite::discover(&dir, config.clone())
+                .unwrap()
+                .run()
+                .to_value()
+                .to_string_pretty()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same inputs must serialize byte-identically");
+
+        let doc = json::parse(&a).unwrap();
+        assert_eq!(
+            doc.req("cells").unwrap().as_array().unwrap().len(),
+            2
+        );
+        let first = doc.req("cells").unwrap().idx(0).unwrap();
+        assert_eq!(
+            first.req("solver").unwrap().as_str(),
+            Some("greedy")
+        );
+        assert_eq!(first.req("seed").unwrap().as_u64(), Some(9));
+        assert_eq!(
+            doc.req("scenarios")
+                .unwrap()
+                .idx(0)
+                .unwrap()
+                .req("arrival")
+                .unwrap()
+                .as_str(),
+            Some("poisson-ward")
+        );
+        // the human table mentions the essentials
+        let table =
+            Suite::discover(&dir, config.clone()).unwrap().run().render();
+        assert!(table.contains("mini"), "{table}");
+        assert!(table.contains("greedy"), "{table}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,147 @@
+//! Error-path coverage for the `Scenario` front door: every malformed
+//! spec surfaces as the right *typed* [`edgeward::Error`] variant, never
+//! a panic and never a stringly-typed catch-all where a structured
+//! variant exists.
+
+use edgeward::scenario::{solver, Arrival, Objective, Scenario};
+use edgeward::Error;
+
+#[test]
+fn load_missing_file_is_a_typed_io_error_naming_the_path() {
+    let err = Scenario::load("/nonexistent/ward.toml").unwrap_err();
+    match &err {
+        Error::Io { path, .. } => {
+            assert!(path.contains("ward.toml"), "{path}")
+        }
+        other => panic!("expected Error::Io, got {other:?}"),
+    }
+    assert!(err.to_string().contains("ward.toml"), "{err}");
+}
+
+#[test]
+fn toml_syntax_errors_are_toml_variants() {
+    for bad in ["[scenario", "arrival = ", "= 3"] {
+        match Scenario::from_toml(bad).unwrap_err() {
+            Error::Toml(_) => {}
+            other => panic!("{bad:?}: expected Error::Toml, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn scenario_section_must_be_a_table() {
+    match Scenario::from_toml("scenario = 1\n").unwrap_err() {
+        Error::Config(msg) => assert!(msg.contains("table"), "{msg}"),
+        other => panic!("expected Error::Config, got {other:?}"),
+    }
+}
+
+#[test]
+fn empty_spec_falls_back_to_the_paper_scenario() {
+    // no [scenario] section at all is not an error: the spec defaults to
+    // the paper experiment (fields may also sit at top level)
+    let s = Scenario::from_toml("").unwrap();
+    assert_eq!(s.jobs, edgeward::scheduler::paper_jobs());
+    // but an unknown *section* is rejected loudly
+    match Scenario::from_toml("[banana]\nx = 1\n").unwrap_err() {
+        Error::Config(msg) => assert!(msg.contains("banana"), "{msg}"),
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn unknown_arrival_key_is_a_config_error_listing_the_choices() {
+    let err =
+        Scenario::from_toml("[scenario]\narrival = \"meteor\"\n")
+            .unwrap_err();
+    match &err {
+        Error::Config(msg) => {
+            assert!(msg.contains("meteor"), "{msg}");
+            assert!(msg.contains("diurnal-ward"), "{msg}");
+        }
+        other => panic!("{other:?}"),
+    }
+    assert!(matches!(Arrival::parse("meteor"), Err(Error::Config(_))));
+}
+
+#[test]
+fn unknown_objective_key_is_a_config_error() {
+    let err =
+        Scenario::from_toml("[scenario]\nobjective = \"profit\"\n")
+            .unwrap_err();
+    match &err {
+        Error::Config(msg) => assert!(msg.contains("profit"), "{msg}"),
+        other => panic!("{other:?}"),
+    }
+    assert!(matches!(
+        Objective::parse("profit", &[]),
+        Err(Error::Config(_))
+    ));
+    // deadline-miss without deadlines is rejected up front
+    assert!(matches!(
+        Scenario::from_toml(
+            "[scenario]\nobjective = \"deadline-miss\"\n"
+        ),
+        Err(Error::Config(_))
+    ));
+}
+
+#[test]
+fn unknown_solver_key_is_a_config_error_listing_the_registry() {
+    let err = Scenario::paper().solve("annealing").unwrap_err();
+    match &err {
+        Error::Config(msg) => {
+            assert!(msg.contains("annealing"), "{msg}");
+            assert!(msg.contains("tabu"), "{msg}");
+        }
+        other => panic!("{other:?}"),
+    }
+    assert!(matches!(solver("annealing"), Err(Error::Config(_))));
+}
+
+#[test]
+fn invalid_topology_is_the_invalid_topology_variant() {
+    let err = Scenario::from_toml(
+        "[scenario]\n\n[scenario.topology]\nclouds = 0\nedges = 3\n",
+    )
+    .unwrap_err();
+    match err {
+        Error::InvalidTopology { clouds, edges, .. } => {
+            assert_eq!((clouds, edges), (0, 3));
+        }
+        other => panic!("expected InvalidTopology, got {other:?}"),
+    }
+}
+
+#[test]
+fn degenerate_arrival_parameters_are_config_errors() {
+    for bad in [
+        // zero rate
+        "[scenario]\narrival = \"poisson-ward\"\nrate = 0.0\n",
+        // diurnal amplitude out of range
+        "[scenario]\narrival = \"diurnal-ward\"\namplitude = 2.0\n",
+        // diurnal period of zero ticks
+        "[scenario]\narrival = \"diurnal-ward\"\nperiod = 0\n",
+    ] {
+        match Scenario::from_toml(bad).unwrap_err() {
+            Error::Config(_) => {}
+            other => panic!("{bad:?}: expected Config, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn unknown_and_misplaced_fields_are_named_in_the_error() {
+    // a typo'd field
+    match Scenario::from_toml("[scenario]\nseeed = 7\n").unwrap_err() {
+        Error::Config(msg) => assert!(msg.contains("seeed"), "{msg}"),
+        other => panic!("{other:?}"),
+    }
+    // a sizing field belonging to a different arrival process
+    assert!(matches!(
+        Scenario::from_toml(
+            "[scenario]\narrival = \"paper-trace\"\nperiod = 48\n"
+        ),
+        Err(Error::Config(_))
+    ));
+}

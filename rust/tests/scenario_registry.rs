@@ -91,9 +91,11 @@ fn objective_threading_reaches_every_solver() {
     let mk = |objective: Objective| {
         Scenario::builder()
             .jobs(paper_jobs().into_iter().take(7).collect())
-            .objective(objective)
+            .objective(objective.clone())
             .build()
-            .unwrap()
+            .unwrap_or_else(|e| {
+                panic!("building the 7-job {objective} scenario: {e}")
+            })
     };
     let scenario = mk(Objective::Makespan);
     let optimum = scenario.evaluate(&scenario.solve("exact").unwrap());
@@ -122,27 +124,41 @@ fn generated_scenarios_run_end_to_end_and_reproduce() {
             surge: 3,
             surge_at: 25,
         },
+        Arrival::DiurnalWard {
+            jobs: 9,
+            rate: 0.3,
+            amplitude: 0.7,
+            period: 40,
+        },
     ] {
         let build = |seed: u64| {
             Scenario::builder()
                 .arrival(arrival.clone())
                 .seed(seed)
-                .topology(Topology::try_new(1, 2).unwrap())
+                .topology(
+                    Topology::try_new(1, 2)
+                        .expect("1c+2e is a valid topology"),
+                )
                 .objective(Objective::Makespan)
                 .build()
-                .unwrap()
+                .unwrap_or_else(|e| {
+                    panic!("building {arrival} seed {seed}: {e}")
+                })
+        };
+        let solve = |s: &Scenario, name: &str| {
+            s.solve(name).unwrap_or_else(|e| {
+                panic!("{name} on {}: {e}", s.label())
+            })
         };
         let a = build(11);
         let b = build(11);
         assert_eq!(a.jobs, b.jobs, "same seed, same scenario");
-        let sa = a.solve("tabu").unwrap();
-        let sb = b.solve("tabu").unwrap();
+        let sa = solve(&a, "tabu");
+        let sb = solve(&b, "tabu");
         assert_eq!(sa.assignment, sb.assignment, "deterministic solve");
         check_schedule(&sa, a.jobs.len(), "generated");
         // the tabu plan is never worse than greedy under the objective
-        assert!(
-            a.evaluate(&sa) <= a.evaluate(&a.solve("greedy").unwrap())
-        );
+        assert!(a.evaluate(&sa) <= a.evaluate(&solve(&a, "greedy")));
     }
 }
 
@@ -162,9 +178,12 @@ objective = \"makespan\"
 clouds = 1
 edges = 2
 ";
-    let scenario = Scenario::from_toml(text).unwrap();
+    let scenario = Scenario::from_toml(text)
+        .unwrap_or_else(|e| panic!("parsing the ward spec: {e}\n{text}"));
     assert_eq!(scenario.jobs.len(), 10);
-    let s = scenario.solve("tabu").unwrap();
+    let s = scenario
+        .solve("tabu")
+        .unwrap_or_else(|e| panic!("tabu on the toml ward: {e}"));
     check_schedule(&s, 10, "toml ward");
     assert_eq!(scenario.evaluate(&s), s.last_completion());
 }

@@ -1,0 +1,343 @@
+//! Scenario-suite regression harness, end to end: the committed corpus
+//! under `scenarios/` runs clean against the committed goldens under
+//! `baselines/`, the paper-trace row reproduces Table VII bit-for-bit,
+//! results serialize byte-identically across runs, and bless/check
+//! round-trips detect exactly the mutations they should.
+
+use std::path::{Path, PathBuf};
+
+use edgeward::scenario::Arrival;
+use edgeward::scheduler::Job;
+use edgeward::suite::{self, CellStatus, Suite, SuiteConfig, Verdict};
+
+/// The committed corpus/goldens live at the repository root.  Cargo runs
+/// integration tests from the package root, whose location relative to
+/// the repository root depends on where the build harness put the
+/// manifest — probe both.
+fn repo_path(name: &str) -> PathBuf {
+    for base in ["..", "."] {
+        let p = Path::new(base).join(name);
+        if p.is_dir() {
+            return p;
+        }
+    }
+    panic!(
+        "committed {name}/ directory not found relative to {:?}",
+        std::env::current_dir()
+    )
+}
+
+fn seed7() -> SuiteConfig {
+    SuiteConfig {
+        seeds: vec![7],
+        ..SuiteConfig::default()
+    }
+}
+
+fn run_corpus() -> edgeward::suite::SuiteResult {
+    Suite::discover(repo_path("scenarios"), seed7())
+        .unwrap_or_else(|e| panic!("discovering scenarios/: {e}"))
+        .run()
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("edgeward_sreg_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn committed_corpus_covers_the_required_scenarios() {
+    let suite = Suite::discover(repo_path("scenarios"), seed7())
+        .unwrap_or_else(|e| panic!("discovering scenarios/: {e}"));
+    assert!(
+        suite.scenarios.len() >= 8,
+        "corpus must hold at least 8 scenarios, found {}",
+        suite.scenarios.len()
+    );
+    let arrivals: Vec<&str> = suite
+        .scenarios
+        .iter()
+        .filter_map(|s| s.scenario.arrival.as_ref().map(|a| a.key()))
+        .collect();
+    for required in [
+        "paper-trace",
+        "poisson-ward",
+        "code-blue-surge",
+        "diurnal-ward",
+    ] {
+        assert!(
+            arrivals.contains(&required),
+            "corpus is missing a {required} scenario: {arrivals:?}"
+        );
+    }
+    // objective diversity: the matrix re-ranks solvers under these
+    let objectives: Vec<&str> = suite
+        .scenarios
+        .iter()
+        .map(|s| s.scenario.objective.key())
+        .collect();
+    for required in ["weighted-sum", "makespan", "deadline-miss"] {
+        assert!(
+            objectives.contains(&required),
+            "corpus is missing a {required} scenario"
+        );
+    }
+}
+
+#[test]
+fn committed_corpus_runs_clean_against_committed_baselines() {
+    let result = run_corpus();
+    assert!(
+        !result
+            .cells
+            .iter()
+            .any(|c| matches!(c.status, CellStatus::Error { .. })),
+        "no suite cell may error on the committed corpus"
+    );
+    // the oversized scenarios carry a typed exact-solver skip...
+    assert!(result.cells.iter().any(|c| c.key.solver == "exact"
+        && matches!(c.status, CellStatus::Skipped { .. })));
+    // ...and every cell matches its committed golden
+    let report = suite::check(&result, repo_path("baselines"));
+    assert!(
+        report.clean(),
+        "committed baselines drifted:\n{}",
+        report.render()
+    );
+}
+
+#[test]
+fn paper_trace_cells_reproduce_table_vii_bit_for_bit() {
+    let result = run_corpus();
+    let cell = |solver: &str| {
+        let c = result
+            .cells
+            .iter()
+            .find(|c| c.key.scenario == "paper" && c.key.solver == solver)
+            .unwrap_or_else(|| panic!("paper × {solver} cell missing"));
+        match &c.status {
+            CellStatus::Ok(m) => m.clone(),
+            other => panic!("paper × {solver}: {other:?}"),
+        }
+    };
+    // the paper's published fixed-layer rows (cloud/edge label swap
+    // documented in DESIGN.md §5)
+    let cloud = cell("all-cloud");
+    assert_eq!(cloud.unweighted_sum, 416);
+    assert_eq!(cloud.makespan, 100);
+    assert_eq!(cell("all-edge").unweighted_sum, 291);
+    let device = cell("all-device");
+    assert_eq!(device.unweighted_sum, 366);
+    assert_eq!(device.makespan, 94);
+    // ours never loses to a baseline row, and the optimum bounds it
+    let ours = cell("tabu");
+    for solver in ["per-job-optimal", "all-cloud", "all-edge", "all-device"]
+    {
+        assert!(ours.unweighted_sum <= cell(solver).unweighted_sum);
+    }
+    assert!(cell("exact").cost <= ours.cost);
+}
+
+#[test]
+fn suite_results_json_is_byte_identical_across_runs() {
+    let out = tmp_dir("determinism");
+    let path_a = out.join("a.json");
+    let path_b = out.join("b.json");
+    run_corpus().write(path_a.to_str().unwrap()).unwrap();
+    run_corpus().write(path_b.to_str().unwrap()).unwrap();
+    let a = std::fs::read(&path_a).unwrap();
+    let b = std::fs::read(&path_b).unwrap();
+    assert!(!a.is_empty());
+    assert_eq!(
+        a, b,
+        "same corpus + same seed must produce byte-identical \
+         suite_results.json"
+    );
+    std::fs::remove_dir_all(&out).unwrap();
+}
+
+#[test]
+fn bless_then_check_roundtrip_detects_exactly_the_mutation() {
+    // a small private corpus so mutations don't race the shared one
+    let corpus = tmp_dir("roundtrip_corpus");
+    std::fs::write(
+        corpus.join("mini.toml"),
+        "[scenario]\narrival = \"poisson-ward\"\njobs = 6\nrate = 0.4\n\
+         seed = 3\n",
+    )
+    .unwrap();
+    std::fs::write(
+        corpus.join("mini_diurnal.toml"),
+        "[scenario]\narrival = \"diurnal-ward\"\njobs = 5\nrate = 0.3\n\
+         amplitude = 0.7\nperiod = 30\nseed = 3\n",
+    )
+    .unwrap();
+    let result = Suite::discover(&corpus, seed7())
+        .unwrap()
+        .run();
+
+    // bless → check is clean
+    let goldens = tmp_dir("roundtrip_goldens");
+    let written = suite::bless(&result, &goldens).unwrap();
+    assert_eq!(written, 2, "one baseline file per scenario");
+    assert!(suite::check(&result, &goldens).clean());
+
+    // a single drifted cost is reported as exactly one Drift
+    let mut drifted = result.clone();
+    let mutated = drifted
+        .cells
+        .iter_mut()
+        .find_map(|c| match &mut c.status {
+            CellStatus::Ok(m) => {
+                m.cost += 1;
+                Some(c.key.clone())
+            }
+            _ => None,
+        })
+        .expect("at least one ok cell");
+    let drifted_goldens = tmp_dir("roundtrip_drifted");
+    suite::bless(&drifted, &drifted_goldens).unwrap();
+    let report = suite::check(&result, &drifted_goldens);
+    assert_eq!(report.drifted(), 1, "{}", report.render());
+    assert_eq!(report.failed(), 0, "{}", report.render());
+    let drift_row = report
+        .rows
+        .iter()
+        .find(|r| matches!(r.verdict, Verdict::Drift { .. }))
+        .unwrap();
+    assert_eq!(drift_row.key, mutated);
+    match &drift_row.verdict {
+        Verdict::Drift { field, .. } => assert_eq!(*field, "cost"),
+        other => panic!("{other:?}"),
+    }
+
+    // a stale baseline cell (solver no longer produced) is a Fail
+    let mut extra = result.clone();
+    let mut phantom = result.cells[0].clone();
+    phantom.key.solver = "phantom-solver".into();
+    extra.cells.push(phantom);
+    let stale_goldens = tmp_dir("roundtrip_stale");
+    suite::bless(&extra, &stale_goldens).unwrap();
+    let report = suite::check(&result, &stale_goldens);
+    assert_eq!(report.failed(), 1, "{}", report.render());
+    assert_eq!(report.drifted(), 0);
+
+    // an orphan baseline file (its scenario was deleted/renamed) fails
+    // the gate instead of passing silently
+    let orphan_goldens = tmp_dir("roundtrip_orphan");
+    suite::bless(&result, &orphan_goldens).unwrap();
+    std::fs::write(
+        orphan_goldens.join("ghost_ward.json"),
+        "{\"cells\": [], \"scenario\": \"ghost_ward\"}\n",
+    )
+    .unwrap();
+    let report = suite::check(&result, &orphan_goldens);
+    assert_eq!(report.failed(), 1, "{}", report.render());
+    assert!(
+        report.render().contains("orphan baseline file"),
+        "{}",
+        report.render()
+    );
+    // re-blessing removes the orphan: bless + commit is the complete
+    // scenario rename/delete workflow
+    suite::bless(&result, &orphan_goldens).unwrap();
+    assert!(!orphan_goldens.join("ghost_ward.json").exists());
+    assert!(suite::check(&result, &orphan_goldens).clean());
+
+    // a missing baseline directory fails every cell, not panics
+    let report =
+        suite::check(&result, tmp_dir("roundtrip_missing"));
+    assert_eq!(report.failed(), result.cells.len());
+
+    for d in [
+        corpus,
+        goldens,
+        drifted_goldens,
+        stale_goldens,
+        orphan_goldens,
+        tmp_dir("roundtrip_missing"),
+    ] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+/// Fixed-seed diurnal-ward generation matches the committed
+/// expectations (cross-checked against the independent oracle in
+/// `python/tools/suite_oracle.py`).  If this test moves, either the RNG,
+/// the thinning loop, or the jitter changed — all of which invalidate
+/// every committed baseline.
+#[test]
+#[rustfmt::skip]
+fn diurnal_ward_golden_job_lists() {
+    let arrival = Arrival::DiurnalWard {
+        jobs: 6,
+        rate: 0.3,
+        amplitude: 0.8,
+        period: 40,
+    };
+    let expected_seed_11 = [
+        Job { release: 15, weight: 2, proc_cloud: 3, trans_cloud: 31, proc_edge: 3, trans_edge: 5, proc_device: 11 },
+        Job { release: 15, weight: 1, proc_cloud: 4, trans_cloud: 14, proc_edge: 7, trans_edge: 2, proc_device: 52 },
+        Job { release: 17, weight: 1, proc_cloud: 9, trans_cloud: 20, proc_edge: 14, trans_edge: 5, proc_device: 52 },
+        Job { release: 19, weight: 1, proc_cloud: 4, trans_cloud: 15, proc_edge: 6, trans_edge: 2, proc_device: 50 },
+        Job { release: 26, weight: 2, proc_cloud: 4, trans_cloud: 73, proc_edge: 6, trans_edge: 17, proc_device: 23 },
+        Job { release: 33, weight: 2, proc_cloud: 5, trans_cloud: 59, proc_edge: 6, trans_edge: 17, proc_device: 25 },
+    ];
+    let expected_seed_12 = [
+        Job { release: 7, weight: 1, proc_cloud: 8, trans_cloud: 22, proc_edge: 9, trans_edge: 6, proc_device: 83 },
+        Job { release: 7, weight: 1, proc_cloud: 4, trans_cloud: 14, proc_edge: 5, trans_edge: 2, proc_device: 50 },
+        Job { release: 11, weight: 2, proc_cloud: 5, trans_cloud: 80, proc_edge: 5, trans_edge: 14, proc_device: 20 },
+        Job { release: 17, weight: 2, proc_cloud: 5, trans_cloud: 47, proc_edge: 10, trans_edge: 10, proc_device: 15 },
+        Job { release: 18, weight: 2, proc_cloud: 4, trans_cloud: 84, proc_edge: 5, trans_edge: 17, proc_device: 17 },
+        Job { release: 19, weight: 1, proc_cloud: 3, trans_cloud: 12, proc_edge: 5, trans_edge: 2, proc_device: 43 },
+    ];
+    assert_eq!(arrival.generate(11), expected_seed_11);
+    assert_eq!(arrival.generate(12), expected_seed_12);
+}
+
+#[test]
+fn seed_override_changes_cells_but_not_the_paper_trace() {
+    let corpus = tmp_dir("seed_override");
+    std::fs::write(
+        corpus.join("paper.toml"),
+        "[scenario]\nname = \"paper\"\n",
+    )
+    .unwrap();
+    std::fs::write(
+        corpus.join("ward.toml"),
+        "[scenario]\narrival = \"poisson-ward\"\njobs = 6\nrate = 0.4\n",
+    )
+    .unwrap();
+    let run = |seed: u64| {
+        Suite::discover(
+            &corpus,
+            SuiteConfig {
+                seeds: vec![seed],
+                solvers: vec!["greedy".into()],
+                ..SuiteConfig::default()
+            },
+        )
+        .unwrap()
+        .run()
+    };
+    let a = run(7);
+    let b = run(8);
+    let by = |r: &edgeward::suite::SuiteResult, stem: &str| {
+        match &r
+            .cells
+            .iter()
+            .find(|c| c.key.scenario == stem)
+            .unwrap()
+            .status
+        {
+            CellStatus::Ok(m) => m.clone(),
+            other => panic!("{other:?}"),
+        }
+    };
+    // the paper trace is seed-independent; the generated ward is not
+    assert_eq!(by(&a, "paper"), by(&b, "paper"));
+    assert_ne!(by(&a, "ward"), by(&b, "ward"));
+    std::fs::remove_dir_all(&corpus).unwrap();
+}
