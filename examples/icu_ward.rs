@@ -133,7 +133,7 @@ fn main() -> anyhow::Result<()> {
                 rate: base.arrival_rate_hz / 10.0,
             })
             .seed(1234)
-            .topology(topo)
+            .topology(topo.clone())
             .objective(Objective::Makespan)
             .build()?;
         let s = plan.solve("tabu")?;

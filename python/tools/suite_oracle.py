@@ -12,7 +12,10 @@ of the two implementations.
 
 The only platform dependence shared with the Rust side is libm's `log`
 (exponential interarrivals); every other operation is exact integer or
-IEEE-754 arithmetic with identical operation order.
+IEEE-754 arithmetic with identical operation order.  Heterogeneous
+topologies (per-replica `cloud_speeds` / `edge_speeds` in the scenario
+TOML) scale processing as `ceil(p / speed)` — an exact-identity no-op at
+the default 1.0 — mirroring `Topology::scaled_processing`.
 
 Usage: python3 python/tools/suite_oracle.py [--seed 7] [--print-goldens]
 (run from the repository root).
@@ -209,9 +212,17 @@ ARRIVAL_DEFAULTS = {
 
 # ---------------------------------------------------------- topology ---
 class Topology:
-    def __init__(self, clouds, edges):
+    """Machine set with per-replica speed factors (mirrors
+    rust/src/topology/mod.rs: processing is ceil(p / speed), exact
+    identity at the default 1.0)."""
+
+    def __init__(self, clouds, edges, cloud_speeds=None, edge_speeds=None):
         self.clouds = clouds
         self.edges = edges
+        cs = list(cloud_speeds) if cloud_speeds else [1.0] * clouds
+        es = list(edge_speeds) if edge_speeds else [1.0] * edges
+        assert len(cs) == clouds and len(es) == edges
+        self.speeds = [float(s) for s in cs + es]
 
     @property
     def shared_count(self):
@@ -237,6 +248,16 @@ class Topology:
     def spread(self, cls, k):
         return (cls, k % max(self.replicas(cls), 1))
 
+    def scaled(self, p, m):
+        """Effective processing time of p ticks on machine m — the same
+        ceil(p / speed) (IEEE-754 double division) the Rust side uses,
+        with the exact-identity fast path at speed 1.0."""
+        s = self.shared_index(m)
+        if s is None:
+            return p
+        f = self.speeds[s]
+        return p if f == 1.0 else math.ceil(p / f)
+
 
 # --------------------------------------------------------- simulator ---
 def simulate(jobs, topo, assignment):
@@ -251,7 +272,7 @@ def simulate(jobs, topo, assignment):
     for i in order:
         m = assignment[i]
         a = jobs[i].release + jobs[i].transmission(m[0])
-        p = jobs[i].processing(m[0])
+        p = topo.scaled(jobs[i].processing(m[0]), m)
         s = topo.shared_index(m)
         if s is not None:
             start = max(a, free[s])
@@ -305,11 +326,16 @@ class Objective:
             return max(partial, suffix)
         return partial + suffix
 
-    def suffix_bounds(self, jobs):
+    def suffix_bounds(self, jobs, topo):
+        # minimum over concrete replicas (speed-scaled processing +
+        # per-class transmission), mirroring Objective::suffix_bounds
+        machines = topo.machines()
         bounds = [0] * (len(jobs) + 1)
         for k in reversed(range(len(jobs))):
             j = jobs[k]
-            best = min(j.execution(m) for m in (CLOUD, EDGE, DEVICE))
+            best = min(j.transmission(m[0]) +
+                       topo.scaled(j.processing(m[0]), m)
+                       for m in machines)
             if self.kind == "weighted-sum":
                 contrib = j.weight * best
             elif self.kind == "unweighted-sum":
@@ -336,7 +362,7 @@ def greedy_assignment(jobs, topo):
             avail = j.release + j.transmission(m[0])
             s = topo.shared_index(m)
             base = max(avail, free[s]) if s is not None else avail
-            end = base + j.processing(m[0])
+            end = base + topo.scaled(j.processing(m[0]), m)
             if best is None or end < best[1]:
                 best = (m, end)
         m = best[0]
@@ -344,7 +370,8 @@ def greedy_assignment(jobs, topo):
         s = topo.shared_index(m)
         if s is not None:
             avail = j.release + j.transmission(m[0])
-            free[s] = max(avail, free[s]) + j.processing(m[0])
+            free[s] = (max(avail, free[s])
+                       + topo.scaled(j.processing(m[0]), m))
     return assignment
 
 
@@ -394,7 +421,7 @@ def improve(jobs, topo, start, objective,
 
 def schedule_exact(jobs, topo, objective):
     machines = topo.machines()
-    suffix = objective.suffix_bounds(jobs)
+    suffix = objective.suffix_bounds(jobs, topo)
     assignment = [DEVICE_REF] * len(jobs)
     best = [None]  # (assignment, value)
 
@@ -432,7 +459,7 @@ def schedule_online(jobs, topo, objective):
             avail = j.release + j.transmission(m[0])
             s = topo.shared_index(m)
             base = max(avail, free[s]) if s is not None else avail
-            end = base + j.processing(m[0])
+            end = base + topo.scaled(j.processing(m[0]), m)
             c = objective.marginal(i, j, end)
             if best is None or c < best[1]:
                 best = (m, c)
@@ -441,7 +468,8 @@ def schedule_online(jobs, topo, objective):
         s = topo.shared_index(m)
         if s is not None:
             avail = j.release + j.transmission(m[0])
-            free[s] = max(avail, free[s]) + j.processing(m[0])
+            free[s] = (max(avail, free[s])
+                       + topo.scaled(j.processing(m[0]), m))
     return assignment
 
 
@@ -553,10 +581,15 @@ def load_scenario(path):
         if field in sc and field in arrival:
             arrival[field] = sc[field]
     topo_sec = sc.get("topology", {})
+    cloud_speeds = topo_sec.get("cloud_speeds")
+    edge_speeds = topo_sec.get("edge_speeds")
+    clouds = topo_sec.get(
+        "clouds", len(cloud_speeds) if cloud_speeds else 1)
+    edges = topo_sec.get(
+        "edges", len(edge_speeds) if edge_speeds else 1)
     return {
         "arrival": arrival,
-        "topology": Topology(topo_sec.get("clouds", 1),
-                             topo_sec.get("edges", 1)),
+        "topology": Topology(clouds, edges, cloud_speeds, edge_speeds),
         "objective": Objective(sc.get("objective", "weighted-sum"),
                                sc.get("deadlines", [])),
     }

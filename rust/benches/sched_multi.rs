@@ -144,6 +144,24 @@ fn main() {
         });
     }
 
+    // heterogeneous-topology row: the speed-scaled hot path (big.LITTLE
+    // edge pool) against the same-size homogeneous pool above
+    let biglittle =
+        Topology::heterogeneous(vec![1.0], vec![2.0, 0.5]).expect("valid");
+    b.bench("algorithm2_paper_trace_biglittle_2edges", || {
+        std::hint::black_box(schedule_jobs_objective(
+            &jobs,
+            &biglittle,
+            &params,
+            &Objective::WeightedSum,
+        ));
+    });
+    let all_fast_edge: Vec<MachineRef> =
+        jobs.iter().map(|_| MachineRef::edge(0)).collect();
+    b.bench("simulate_10_jobs_heterogeneous", || {
+        std::hint::black_box(simulate(&jobs, &biglittle, &all_fast_edge));
+    });
+
     // scaling
     for n in [20usize, 40, 80] {
         let jobs_n = synthetic(n);

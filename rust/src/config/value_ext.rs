@@ -131,6 +131,27 @@ impl<'a> FieldReader<'a> {
         }
     }
 
+    /// Variable-length list of numbers (e.g. per-replica speed factors).
+    pub fn f64_list(&self, key: &str) -> Result<Option<Vec<f64>>> {
+        match self.field(key) {
+            None => Ok(None),
+            Some(v) => {
+                let items = v
+                    .as_array()
+                    .ok_or_else(|| self.wrong_type(key, "an array"))?;
+                items
+                    .iter()
+                    .map(|item| {
+                        item.as_f64().ok_or_else(|| {
+                            self.wrong_type(key, "an array of numbers")
+                        })
+                    })
+                    .collect::<Result<Vec<f64>>>()
+                    .map(Some)
+            }
+        }
+    }
+
     /// Variable-length list of non-negative integers (e.g. per-job
     /// deadlines).
     pub fn u64_list(&self, key: &str) -> Result<Option<Vec<u64>>> {
@@ -212,6 +233,16 @@ mod tests {
         assert_eq!(r.u64_list("d").unwrap(), Some(vec![1, 2, 30]));
         assert_eq!(r.u64_list("missing").unwrap(), None);
         assert!(r.u64_list("bad").is_err());
+    }
+
+    #[test]
+    fn f64_list_extraction() {
+        let v = toml::parse("s = [1.5, 2, 0.75]\nbad = [1.0, \"x\"]\n")
+            .unwrap();
+        let r = FieldReader::new(&v, "t").unwrap();
+        assert_eq!(r.f64_list("s").unwrap(), Some(vec![1.5, 2.0, 0.75]));
+        assert_eq!(r.f64_list("missing").unwrap(), None);
+        assert!(r.f64_list("bad").is_err());
     }
 
     #[test]

@@ -7,6 +7,18 @@
 //! PJRT per-record inference cost, the configured emulation profile, and
 //! the configured network model.  Routing decisions made with the result
 //! are consistent with what the executors will actually do.
+//!
+//! With heterogeneous machines, one fit per *class* is no longer enough:
+//! a 2× edge replica responds faster than its 1× sibling, so Algorithm 1
+//! must see a per-replica λ1.  [`live_calibration_per_lane`] performs the
+//! host measurement once and fits a [`Calibration`] per dispatch lane:
+//! each lane's own layer is predicted with its speed-scaled compute, and
+//! the residual is absorbed into that lane's λ1 (λ2 stays anchored on the
+//! unscaled device measurement, exactly like the class-level fit — a λ1
+//! below the base value, possibly negative, is how a faster-than-class
+//! replica expresses itself in eq. 2's transmission weight).
+//! [`live_calibration`] remains the class-level fit (equivalently: any
+//! unit-speed lane's fit).
 
 use std::time::Duration;
 
@@ -15,33 +27,28 @@ use crate::config::Environment;
 use crate::data::EpisodeGenerator;
 use crate::device::{Layer, PerLayer};
 use crate::runtime::InferenceRuntime;
+use crate::topology::MachineRef;
 use crate::workload::Application;
 use crate::Result;
 
 use super::ServeConfig;
 
-/// Measure per-record host inference cost and fit a calibration that
-/// predicts this serving stack (median of `trials` batched runs per app).
-pub fn live_calibration(
-    env: &Environment,
-    cfg: &ServeConfig,
+/// Measured per-record host inference cost per application — the PJRT
+/// measurement step (median of `TRIALS` batched runs) shared by every
+/// fit below.
+fn measure_per_record_host(
     artifact_dir: &str,
     seed: u64,
-) -> Result<Calibration> {
+) -> Result<[(Application, Duration); 3]> {
     let runtime = InferenceRuntime::open(artifact_dir)?;
     runtime.warmup()?;
     let mut gen = EpisodeGenerator::new(seed);
-    let emu = if cfg.emulate_compute {
-        env.emulation(Layer::Cloud)
-    } else {
-        crate::device::EmulationProfile::identity()
-    };
 
     const ROWS: usize = 32;
     const TRIALS: usize = 5;
 
-    let mut responses: Vec<(Application, PerLayer<f64>)> = Vec::new();
-    for app in Application::ALL {
+    let mut out = [(Application::Breath, Duration::ZERO); 3];
+    for (slot, app) in Application::ALL.into_iter().enumerate() {
         let input = gen.batch(app, ROWS);
         let mut costs: Vec<Duration> = (0..TRIALS)
             .map(|_| {
@@ -52,31 +59,183 @@ pub fn live_calibration(
             })
             .collect();
         costs.sort_unstable();
-        let per_record_host = costs[TRIALS / 2] / ROWS as u32;
+        out[slot] = (app, costs[TRIALS / 2] / ROWS as u32);
+    }
+    Ok(out)
+}
 
-        // Unit (64-record) response per layer: emulated compute + modeled
-        // transmission of the unit payload.
+/// Fit a [`Calibration`] that predicts one concrete machine: `machine`'s
+/// own layer is modeled with its per-replica speed factor (from
+/// `cfg.topology`), the other layers at class speed.  Pure given the
+/// measured per-record host costs, so it is unit-testable without PJRT
+/// artifacts.
+pub fn fit_lane_calibration(
+    env: &Environment,
+    cfg: &ServeConfig,
+    per_record_host: &[(Application, Duration); 3],
+    machine: MachineRef,
+) -> Calibration {
+    let emu = if cfg.emulate_compute {
+        env.emulation(Layer::Cloud)
+    } else {
+        crate::device::EmulationProfile::identity()
+    };
+    let speed = cfg.topology.speed(machine);
+    let mut responses = [(Application::Breath, PerLayer::default()); 3];
+    for (slot, &(app, per_record)) in per_record_host.iter().enumerate()
+    {
+        // Unit (64-record) response per layer: emulated compute (speed-
+        // scaled on the lane's own layer) + modeled transmission of the
+        // unit payload.
         let unit_kb = app.unit_kb();
         let unit_response = PerLayer::from_fn(|layer| {
+            let lane_speed =
+                if layer == machine.layer() { speed } else { 1.0 };
             let compute_ms = emu
-                .scale(layer, per_record_host * 64)
-                .mul_f64(cfg.compute_scale)
+                .scale(layer, per_record * 64)
+                .mul_f64(cfg.compute_scale / lane_speed)
                 .as_secs_f64()
                 * 1e3;
             compute_ms + env.network.transmission_ms(layer, unit_kb)
         });
-        responses.push((app, unit_response));
+        responses[slot] = (app, unit_response);
     }
-    let arr: [(Application, PerLayer<f64>); 3] =
-        [responses[0], responses[1], responses[2]];
-    Ok(Calibration::fit(arr, env))
+    Calibration::fit(responses, env)
+}
+
+/// Measure per-record host inference cost and fit the class-level
+/// calibration (every layer at unit speed) — see the module docs.
+pub fn live_calibration(
+    env: &Environment,
+    cfg: &ServeConfig,
+    artifact_dir: &str,
+    seed: u64,
+) -> Result<Calibration> {
+    let costs = measure_per_record_host(artifact_dir, seed)?;
+    // the device pseudo-replica is always unit speed, so fitting "its"
+    // lane is exactly the class-level fit
+    Ok(fit_lane_calibration(env, cfg, &costs, MachineRef::DEVICE))
+}
+
+/// One [`Calibration`] per dispatch lane (lane order =
+/// `cfg.topology.machines()`), each fitted with that replica's own
+/// speed-scaled compute — Algorithm 1's per-replica λ1.  The host is
+/// measured once; unit-speed lanes share the class-level fit bit-for-bit.
+pub fn live_calibration_per_lane(
+    env: &Environment,
+    cfg: &ServeConfig,
+    artifact_dir: &str,
+    seed: u64,
+) -> Result<Vec<(MachineRef, Calibration)>> {
+    let costs = measure_per_record_host(artifact_dir, seed)?;
+    Ok(cfg
+        .topology
+        .machines()
+        .into_iter()
+        .map(|m| (m, fit_lane_calibration(env, cfg, &costs, m)))
+        .collect())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::allocation::allocate_single;
+    use crate::topology::Topology;
     use crate::workload::Workload;
+
+    fn synthetic_costs() -> [(Application, Duration); 3] {
+        [
+            (Application::Breath, Duration::from_micros(180)),
+            (Application::Mortality, Duration::from_micros(40)),
+            (Application::Phenotype, Duration::from_micros(320)),
+        ]
+    }
+
+    /// Per-lane fits diverge exactly where speeds do: a unit-speed lane
+    /// reproduces the class-level fit; a fast edge lane shrinks its own
+    /// λ1(ES) and leaves λ2/λ1(CC) untouched.
+    #[test]
+    fn per_replica_lambda1_tracks_the_speed_factor() {
+        let env = Environment::paper();
+        let mut cfg = ServeConfig::default();
+        cfg.topology =
+            Topology::with_speeds(1, 2, None, Some(vec![1.0, 2.0]))
+                .unwrap();
+        let costs = synthetic_costs();
+        let base =
+            fit_lane_calibration(&env, &cfg, &costs, MachineRef::DEVICE);
+        let unit_edge = fit_lane_calibration(
+            &env,
+            &cfg,
+            &costs,
+            MachineRef::edge(0),
+        );
+        let fast_edge = fit_lane_calibration(
+            &env,
+            &cfg,
+            &costs,
+            MachineRef::edge(1),
+        );
+        for app in Application::ALL {
+            let b = base.for_app(app);
+            let u = unit_edge.for_app(app);
+            let f = fast_edge.for_app(app);
+            // unit-speed lane ≡ class-level fit
+            assert_eq!(b.lambda1, u.lambda1, "{app}");
+            assert_eq!(b.lambda2, u.lambda2, "{app}");
+            // λ2 anchors on the (never-scaled) device measurement
+            assert_eq!(b.lambda2, f.lambda2, "{app}");
+            // the fast lane only moves its own layer's λ1, downward
+            assert_eq!(b.lambda1.cloud, f.lambda1.cloud, "{app}");
+            assert!(
+                f.lambda1.edge < b.lambda1.edge,
+                "{app}: {} !< {}",
+                f.lambda1.edge,
+                b.lambda1.edge
+            );
+        }
+    }
+
+    /// The per-lane fit predicts the lane: reconstructing the edge-layer
+    /// unit response from the fast lane's coefficients must give the
+    /// speed-scaled compute plus transmission.
+    #[test]
+    fn lane_fit_reconstructs_the_scaled_response() {
+        let env = Environment::paper();
+        let mut cfg = ServeConfig::default();
+        cfg.topology =
+            Topology::with_speeds(1, 1, None, Some(vec![2.0])).unwrap();
+        let costs = synthetic_costs();
+        let lane = fit_lane_calibration(
+            &env,
+            &cfg,
+            &costs,
+            MachineRef::edge(0),
+        );
+        let emu = env.emulation(Layer::Cloud);
+        for &(app, per_record) in &costs {
+            let c = lane.for_app(app);
+            let comp = app.paper_flops() as f64;
+            let g = env.gflops();
+            let unit_kb = app.unit_kb();
+            // model: I + λ1·D_iu at the edge layer
+            let i = c.lambda2 * comp / g.edge / 1e3;
+            let d = c.lambda1.edge
+                * env.network.unit_latency_ms(Layer::Edge, unit_kb);
+            // target: speed-scaled emulated compute + transmission
+            let want = emu
+                .scale(Layer::Edge, per_record * 64)
+                .mul_f64(cfg.compute_scale / 2.0)
+                .as_secs_f64()
+                * 1e3
+                + env.network.transmission_ms(Layer::Edge, unit_kb);
+            assert!(
+                (i + d - want).abs() < 1e-9,
+                "{app}: {} vs {want}",
+                i + d
+            );
+        }
+    }
 
     /// Live calibration on the real artifacts: the fitted model must route
     /// consistently with the measured cost structure (device-dominant on a
@@ -94,6 +253,32 @@ mod tests {
             let d = allocate_single(&Workload::new(app, 64), &env, &calib);
             // on this host the cloud's WAN hop can never win at unit size
             assert_ne!(d.chosen, Layer::Cloud, "{app}");
+        }
+    }
+
+    /// Per-lane calibration on the real artifacts: the paper topology's
+    /// lanes (all unit speed) must share one fit.
+    #[test]
+    fn per_lane_calibration_degenerates_on_the_paper_topology() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let env = Environment::paper();
+        let cfg = ServeConfig::default();
+        let lanes =
+            live_calibration_per_lane(&env, &cfg, "artifacts", 3)
+                .unwrap();
+        assert_eq!(lanes.len(), cfg.topology.lane_count());
+        // measurement noise: each lane is fitted from ONE shared
+        // measurement, so unit-speed lanes agree exactly
+        for (_, c) in &lanes {
+            for app in Application::ALL {
+                assert_eq!(
+                    c.for_app(app).lambda2,
+                    lanes[0].1.for_app(app).lambda2
+                );
+            }
         }
     }
 }

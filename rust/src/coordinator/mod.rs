@@ -15,7 +15,9 @@
 //!   before becoming runnable (constraint C4: transmission overlaps other
 //!   jobs' execution);
 //! * **compute** — the measured host inference time is padded by the
-//!   layer's FLOPS ratio ([`crate::device::EmulationProfile`]);
+//!   layer's FLOPS ratio ([`crate::device::EmulationProfile`]), divided
+//!   by the lane's per-replica speed factor ([`Topology::speed`]) so a
+//!   big and a little box in the same class emulate faithfully;
 //! * **exclusivity** — every shared replica executes on a dedicated
 //!   engine thread, one batch at a time (constraint C1); device requests
 //!   are per-patient and batch=1.
@@ -46,7 +48,9 @@ mod policy;
 mod request;
 
 pub use batcher::{Batcher, Item};
-pub use calibrate::live_calibration;
+pub use calibrate::{
+    fit_lane_calibration, live_calibration, live_calibration_per_lane,
+};
 pub use delay::DelayQueue;
 pub use engine::{EngineHandle, EngineRequest};
 pub use policy::Policy;
@@ -208,6 +212,8 @@ impl ServeConfig {
 #[derive(Debug, Clone, Copy)]
 pub struct LaneReport {
     pub machine: MachineRef,
+    /// The replica's configured speed factor (1.0 unless heterogeneous).
+    pub speed: f64,
     /// Requests completed on this replica.
     pub requests: u64,
     /// Total engine-busy time (batch execution, emulation included —
@@ -251,6 +257,7 @@ impl ServeReport {
             .map(|lane| {
                 let mut l = Value::object();
                 l.set("machine", lane.machine.label());
+                l.set("speed", lane.speed);
                 l.set("requests", lane.requests);
                 l.set("busy_ms", lane.busy_ms);
                 l.set("utilization", lane.utilization);
@@ -299,7 +306,7 @@ impl Coordinator {
     /// Run the serving experiment to completion (blocking).
     pub fn run(&self, seed: u64) -> Result<ServeReport> {
         let cfg = self.cfg.clone();
-        let topo = cfg.topology;
+        let topo = cfg.topology.clone();
         let lanes = topo.machines();
         let emu = if cfg.emulate_compute {
             self.env.emulation(Layer::Cloud)
@@ -340,18 +347,20 @@ impl Coordinator {
                     }
                 })
                 .map_err(|e| Error::Serving(e.to_string()))?;
-            // executor: batcher + engine + emulation padding
+            // executor: batcher + engine + emulation padding (scaled by
+            // this lane's per-replica speed factor)
             let engine = engines[li].clone();
             let done = done_tx.clone();
             let cfg_c = cfg.clone();
             let emu_c = emu.clone();
             let backlog_c = backlog.clone();
+            let speed = topo.speed(machine);
             let exec = std::thread::Builder::new()
                 .name(format!("exec-{}", machine.label()))
                 .spawn(move || {
                     run_executor(
-                        machine, li, exec_rx, engine, done, cfg_c, emu_c,
-                        backlog_c,
+                        machine, li, speed, exec_rx, engine, done, cfg_c,
+                        emu_c, backlog_c,
                     )
                 })
                 .map_err(|e| Error::Serving(e.to_string()))?;
@@ -398,12 +407,13 @@ impl Coordinator {
         let backlog_r = backlog.clone();
         let routed = Arc::new(std::sync::Mutex::new([0u64; 3]));
         let routed_c = routed.clone();
+        let topo_r = topo.clone();
         let router = std::thread::Builder::new()
             .name("router".into())
             .spawn(move || {
                 let mut rr = 0usize;
                 let mut net_rng = Rng::new(seed ^ 0xDEAD_BEEF);
-                let mut snapshot = vec![0u64; topo.lane_count()];
+                let mut snapshot = vec![0u64; topo_r.lane_count()];
                 while let Ok(req) = gen_rx.recv() {
                     for (s, a) in
                         snapshot.iter_mut().zip(backlog_r.iter())
@@ -415,11 +425,11 @@ impl Coordinator {
                         req.size_units,
                         &env,
                         &calib,
-                        &topo,
+                        &topo_r,
                         &snapshot,
                         &mut rr,
                     );
-                    let lane = topo.lane_index(machine);
+                    let lane = topo_r.lane_index(machine);
                     routed_c.lock().unwrap()
                         [layer_index(machine.layer())] += 1;
                     backlog_r[lane].fetch_add(1, Ordering::Relaxed);
@@ -493,6 +503,7 @@ impl Coordinator {
                     lane_busy[li].as_secs_f64() * 1e3;
                 LaneReport {
                     machine,
+                    speed: topo.speed(machine),
                     requests: lane_requests[li],
                     busy_ms,
                     utilization: if wall_ms > 0.0 {
@@ -542,11 +553,14 @@ fn transmission_with_jitter(
 
 /// Per-lane executor: drains the queue through the batcher and runs
 /// batches on the replica's engine, padding wall time per the emulation
-/// profile.
+/// profile scaled by the lane's per-replica speed factor (`speed` 2.0
+/// halves the emulated compute pad, 0.5 doubles it — the serving-path
+/// mirror of [`Topology::scaled_processing`]).
 #[allow(clippy::too_many_arguments)]
 fn run_executor(
     machine: MachineRef,
     lane: usize,
+    speed: f64,
     rx: mpsc::Receiver<Item>,
     engine: EngineHandle,
     done: mpsc::Sender<Completion>,
@@ -578,9 +592,11 @@ fn run_executor(
             Err(_) => Duration::ZERO,
         };
         // emulate the slower layer: pad to the FLOPS-scaled (and
-        // compute_scale-multiplied) duration
-        let processing =
-            emu.scale(layer, host_elapsed).mul_f64(cfg.compute_scale);
+        // compute_scale-multiplied) duration, divided by this replica's
+        // speed factor (a 2× box pads half as long)
+        let processing = emu
+            .scale(layer, host_elapsed)
+            .mul_f64(cfg.compute_scale / speed);
         let pad = processing
             .saturating_sub(host_elapsed)
             .mul_f64(cfg.time_scale);

@@ -2,11 +2,19 @@
 //!
 //! A policy maps each incoming request to a concrete [`MachineRef`] in
 //! the configured [`Topology`].  Class selection follows the paper
-//! (Algorithm 1 / fixed layers); replica selection within a class is
-//! backlog-aware: the router passes the per-lane backlog (queued +
-//! in-flight requests, indexed by [`Topology::lane_index`]) and ties go
-//! to the lowest replica, so the paper topology reproduces the old
-//! per-layer behavior exactly.
+//! (Algorithm 1 / fixed layers); replica selection within a class picks
+//! the best *speed-adjusted finish time*: the router passes the per-lane
+//! backlog (queued + in-flight requests, indexed by
+//! [`Topology::lane_index`]) and each candidate is scored
+//! `(backlog + 1) / speed` — the queue it would join, in units of that
+//! replica's service rate — so a 2× box with three waiters beats a 1×
+//! box with two.  Ties go to the lowest replica; with unit speed factors
+//! the score is a monotone transform of raw backlog, so homogeneous
+//! topologies reproduce the old per-layer behavior exactly.
+//!
+//! Replica selection is infallible: [`Topology::validate`] guarantees at
+//! least one replica of every class (see the invariant documented on
+//! [`Topology`]), so the loops below always have a first candidate.
 
 use crate::allocation::{allocate_single, Calibration};
 use crate::config::Environment;
@@ -28,9 +36,9 @@ pub enum Policy {
     FixedDevice,
     /// Round-robin across all machines (load-spreading strawman).
     RoundRobin,
-    /// The least-backlogged machine overall, ignoring cost estimates —
-    /// the queue-depth-only strawman that shows why Algorithm 1's
-    /// estimates matter.
+    /// The machine with the best speed-adjusted finish time overall,
+    /// ignoring cost estimates — the queue-depth-only strawman that
+    /// shows why Algorithm 1's estimates matter.
     LeastLoaded,
 }
 
@@ -65,17 +73,13 @@ impl Policy {
                     calib,
                 )
                 .chosen;
-                least_loaded_replica(
-                    topo,
-                    MachineId::from_layer(layer),
-                    backlog,
-                )
+                best_replica(topo, MachineId::from_layer(layer), backlog)
             }
             Policy::FixedCloud => {
-                least_loaded_replica(topo, MachineId::Cloud, backlog)
+                best_replica(topo, MachineId::Cloud, backlog)
             }
             Policy::FixedEdge => {
-                least_loaded_replica(topo, MachineId::Edge, backlog)
+                best_replica(topo, MachineId::Edge, backlog)
             }
             Policy::FixedDevice => MachineRef::DEVICE,
             Policy::RoundRobin => {
@@ -83,10 +87,20 @@ impl Policy {
                 *rr_state += 1;
                 m
             }
-            Policy::LeastLoaded => (0..topo.lane_count())
-                .map(|lane| topo.machine_at(lane))
-                .min_by_key(|&m| backlog_of(topo, m, backlog))
-                .expect("topology has at least the device"),
+            Policy::LeastLoaded => {
+                // lane 0 always exists (>= 1 cloud replica, validated)
+                let mut best = topo.machine_at(0);
+                let mut best_score = finish_score(topo, best, backlog);
+                for lane in 1..topo.lane_count() {
+                    let m = topo.machine_at(lane);
+                    let score = finish_score(topo, m, backlog);
+                    if score < best_score {
+                        best = m;
+                        best_score = score;
+                    }
+                }
+                best
+            }
         }
     }
 
@@ -106,18 +120,34 @@ fn backlog_of(topo: &Topology, m: MachineRef, backlog: &[u64]) -> u64 {
     backlog.get(topo.lane_index(m)).copied().unwrap_or(0)
 }
 
-/// The replica of `class` with the smallest backlog; ties go to the
-/// lowest replica index (so an idle pool degenerates to replica 0, the
-/// paper's single machine).
-fn least_loaded_replica(
+/// Speed-adjusted finish-time estimate of joining `m`'s queue: the
+/// requests it would wait behind (plus itself) in units of the replica's
+/// service rate.  Speeds are validated finite and positive, so the score
+/// is never NaN and `<` is a total order over candidates.
+fn finish_score(topo: &Topology, m: MachineRef, backlog: &[u64]) -> f64 {
+    (backlog_of(topo, m, backlog) + 1) as f64 / topo.speed(m)
+}
+
+/// The replica of `class` with the best speed-adjusted finish time; ties
+/// go to the lowest replica index (so an idle homogeneous pool
+/// degenerates to replica 0, the paper's single machine).  Infallible:
+/// the validated [`Topology`] guarantees every class has a replica 0.
+fn best_replica(
     topo: &Topology,
     class: MachineId,
     backlog: &[u64],
 ) -> MachineRef {
-    (0..topo.replicas(class).max(1))
-        .map(|r| MachineRef { class, replica: r })
-        .min_by_key(|&m| backlog_of(topo, m, backlog))
-        .expect("classes have at least one replica")
+    let mut best = MachineRef { class, replica: 0 };
+    let mut best_score = finish_score(topo, best, backlog);
+    for r in 1..topo.replicas(class) {
+        let m = MachineRef { class, replica: r };
+        let score = finish_score(topo, m, backlog);
+        if score < best_score {
+            best = m;
+            best_score = score;
+        }
+    }
+    best
 }
 
 impl std::str::FromStr for Policy {
@@ -217,6 +247,62 @@ mod tests {
             &mut rr,
         );
         assert_eq!(m, MachineRef::edge(0));
+    }
+
+    #[test]
+    fn algorithm1_prefers_the_fast_replica_under_load() {
+        // lanes: [CC0, ES0(×2), ES1(×1), ED]; Breath routes to the edge
+        // class.  ES0 has 3 waiters but is twice as fast: score
+        // (3+1)/2 = 2 beats ES1's (1+1)/1 = 2?  No — equal; bump to 4
+        // waiters: (4+1)/2 = 2.5 > 2 → ES1.  At 2 waiters: (2+1)/2 =
+        // 1.5 < 2 → ES0 despite the longer queue.
+        let topo = Topology::with_speeds(
+            1,
+            2,
+            None,
+            Some(vec![2.0, 1.0]),
+        )
+        .unwrap();
+        let env = Environment::paper();
+        let calib = Calibration::paper();
+        let mut rr = 0;
+        let route = |backlog: &[u64], rr: &mut usize| {
+            Policy::AlgorithmOne.route(
+                Application::Breath,
+                64,
+                &env,
+                &calib,
+                &topo,
+                backlog,
+                rr,
+            )
+        };
+        assert_eq!(route(&[0, 2, 1, 0], &mut rr), MachineRef::edge(0));
+        assert_eq!(route(&[0, 4, 1, 0], &mut rr), MachineRef::edge(1));
+        // exact ties keep the canonical lowest-replica break
+        assert_eq!(route(&[0, 3, 1, 0], &mut rr), MachineRef::edge(0));
+    }
+
+    #[test]
+    fn least_loaded_is_speed_adjusted() {
+        // CC0 at ×4 with 3 waiters (score 1.0) beats everything idle at
+        // ×1 except... nothing: idle scores are 1/speed ≥ 1/1
+        let topo =
+            Topology::with_speeds(1, 1, Some(vec![4.0]), None).unwrap();
+        let env = Environment::paper();
+        let calib = Calibration::paper();
+        let mut rr = 0;
+        let m = Policy::LeastLoaded.route(
+            Application::Phenotype,
+            64,
+            &env,
+            &calib,
+            &topo,
+            &[2, 1, 1],
+            &mut rr,
+        );
+        // scores: CC0 (2+1)/4 = 0.75, ES0 (1+1)/1 = 2, ED 2
+        assert_eq!(m, MachineRef::cloud(0));
     }
 
     #[test]

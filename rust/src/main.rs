@@ -64,7 +64,14 @@ scheduler.
 under DIR across the solver registry (in parallel), writes the results
 matrix to --out (default suite_results.json), and with --check compares
 every cell against committed goldens — exiting non-zero on any drift.
---bless (re)writes the goldens from the current run.
+--bless (re)writes the goldens from the current run.  --objectives all
+sweeps every registered objective per scenario (scenarios without
+deadlines run deadline-miss with the documented broadcast default).
+
+Heterogeneous machines: a scenario's [scenario.topology] (or the config
+[serve.topology]) section accepts per-replica speed factors
+(cloud_speeds = [..] / edge_speeds = [..], default 1.0 each); every
+solver and the serving path charge each replica ceil(I/speed).
 ";
 
 /// Minimal argument cursor: `--key value` and `--flag` handling.
@@ -397,7 +404,7 @@ fn run() -> edgeward::Result<()> {
                 let strat = parse_strategy(&strategy)?;
                 let scenario = Scenario::builder()
                     .name("paper")
-                    .topology(topo)
+                    .topology(topo.clone())
                     .params(cfg.scheduler)
                     .build()?;
                 let s = scenario.solve(strat.solver_key())?;
@@ -433,11 +440,21 @@ fn run() -> edgeward::Result<()> {
             if let Some(r) = requests {
                 serve_cfg.requests_per_patient = r;
             }
-            if let Some(c) = clouds {
-                serve_cfg.topology.clouds = c;
-            }
-            if let Some(e) = edges {
-                serve_cfg.topology.edges = e;
+            if clouds.is_some() || edges.is_some() {
+                // a changed count invalidates that class's configured
+                // per-replica speed vector (reset to unit speeds); the
+                // untouched class keeps its configured speeds
+                let t = &serve_cfg.topology;
+                let cloud_speeds =
+                    clouds.is_none().then(|| t.cloud_speeds());
+                let edge_speeds =
+                    edges.is_none().then(|| t.edge_speeds());
+                serve_cfg.topology = Topology::with_speeds(
+                    clouds.unwrap_or(t.clouds),
+                    edges.unwrap_or(t.edges),
+                    cloud_speeds,
+                    edge_speeds,
+                )?;
             }
             let coord = Coordinator::new(
                 env.clone(),
@@ -458,11 +475,16 @@ fn run() -> edgeward::Result<()> {
                 );
                 for lane in &report.lanes {
                     println!(
-                        "  lane {:4}: n={:<4} busy={:.1}ms util={:.1}%",
+                        "  lane {:4}: n={:<4} busy={:.1}ms util={:.1}%{}",
                         lane.machine.label(),
                         lane.requests,
                         lane.busy_ms,
                         lane.utilization * 100.0,
+                        if lane.speed != 1.0 {
+                            format!(" (×{} speed)", lane.speed)
+                        } else {
+                            String::new()
+                        },
                     );
                 }
                 println!(
@@ -618,10 +640,20 @@ fn override_scenario(
             None => base.objective.clone(),
         },
     };
-    let topology = Topology::try_new(
-        clouds.unwrap_or(base.topology.clouds),
-        edges.unwrap_or(base.topology.edges),
-    )?;
+    // no count flags: keep the base topology verbatim.  A changed count
+    // resets that class's per-replica speed vector to unit speeds; the
+    // untouched class keeps its configured speeds.
+    let topology = if clouds.is_none() && edges.is_none() {
+        base.topology.clone()
+    } else {
+        let t = &base.topology;
+        Topology::with_speeds(
+            clouds.unwrap_or(t.clouds),
+            edges.unwrap_or(t.edges),
+            clouds.is_none().then(|| t.cloud_speeds()),
+            edges.is_none().then(|| t.edge_speeds()),
+        )?
+    };
     let mut b = Scenario::builder()
         .seed(seed.unwrap_or(base.seed))
         .topology(topology)
@@ -795,7 +827,7 @@ fn render_table_vi() -> String {
 fn render_table_vii(topo: &Topology) -> String {
     let scenario = Scenario::builder()
         .name("paper")
-        .topology(*topo)
+        .topology(topo.clone())
         .build()
         .expect("paper trace on a validated topology");
     let title = if topo.is_paper() {

@@ -506,6 +506,57 @@ edges = 2
     }
 
     #[test]
+    fn toml_heterogeneous_topology_roundtrip() {
+        let text = "\
+[scenario]
+name = \"biglittle\"
+arrival = \"poisson-ward\"
+jobs = 6
+rate = 0.4
+seed = 3
+
+[scenario.topology]
+clouds = 1
+edges = 2
+edge_speeds = [1.5, 0.75]
+";
+        let s = Scenario::from_toml(text).unwrap();
+        assert_eq!(
+            s.topology,
+            Topology::with_speeds(
+                1,
+                2,
+                None,
+                Some(vec![1.5, 0.75])
+            )
+            .unwrap()
+        );
+        assert_eq!(
+            s.topology.speed(crate::topology::MachineRef::edge(1)),
+            0.75
+        );
+        // spec serialization re-parses to the same scenario, speeds
+        // included
+        let mut root = Value::object();
+        root.set("scenario", s.to_value());
+        let text2 = crate::serialize::toml::emit(&root);
+        let back = Scenario::from_toml(&text2).unwrap();
+        assert_eq!(back, s, "emitted:\n{text2}");
+        // invalid speed vectors are typed topology errors
+        let bad = "\
+[scenario]
+
+[scenario.topology]
+edges = 2
+edge_speeds = [1.5, 0.0]
+";
+        assert!(matches!(
+            Scenario::from_toml(bad),
+            Err(Error::InvalidTopology { .. })
+        ));
+    }
+
+    #[test]
     fn toml_diurnal_ward_roundtrip() {
         let text = "\
 [scenario]

@@ -42,6 +42,15 @@ impl Default for Objective {
 }
 
 impl Objective {
+    /// Canonical keys of every registered objective, in declaration
+    /// order — what `edgeward suite --objectives all` sweeps over.
+    pub const KEYS: [&'static str; 4] = [
+        "weighted-sum",
+        "unweighted-sum",
+        "makespan",
+        "deadline-miss",
+    ];
+
     /// Canonical CLI/TOML key (`deadline-miss` etc.).
     pub fn key(&self) -> &'static str {
         match self {
@@ -163,16 +172,30 @@ impl Objective {
 
     /// `bounds[k]` = lower bound on the objective contribution of jobs
     /// `k..`, each at its machine-minimal uncontended execution time —
-    /// the eq.-6 bound generalized per objective.  Replicas share class
-    /// costs, so the bound is topology-independent.
-    pub fn suffix_bounds(&self, jobs: &[Job]) -> Vec<u64> {
-        use crate::scheduler::MachineId;
+    /// the eq.-6 bound generalized per objective.  The minimum ranges
+    /// over the topology's concrete replicas (per-replica speed-scaled
+    /// processing + per-class transmission): with unit speed factors it
+    /// degenerates to the class-level bound, but a faster replica can
+    /// undercut every class-level time, so topology-independence would
+    /// make the branch-and-bound pruning unsound.
+    pub fn suffix_bounds(
+        &self,
+        jobs: &[Job],
+        topo: &crate::topology::Topology,
+    ) -> Vec<u64> {
+        let machines = topo.machines();
         let mut bounds = vec![0u64; jobs.len() + 1];
         for k in (0..jobs.len()).rev() {
             let j = &jobs[k];
-            let best = MachineId::ALL
+            let best = machines
                 .iter()
-                .map(|&m| j.execution(m))
+                .map(|&m| {
+                    j.transmission(m.class)
+                        + topo.scaled_processing(
+                            j.processing(m.class),
+                            m,
+                        )
+                })
                 .min()
                 .unwrap_or(0);
             let contrib = match self {
@@ -199,6 +222,15 @@ impl std::fmt::Display for Objective {
 mod tests {
     use super::*;
     use crate::scheduler::{paper_jobs, simulate, MachineRef, Topology};
+
+    #[test]
+    fn keys_cover_every_variant() {
+        for key in Objective::KEYS {
+            let obj = Objective::parse(key, &[30]).unwrap();
+            assert_eq!(obj.key(), key);
+        }
+        assert_eq!(Objective::KEYS.len(), 4);
+    }
 
     #[test]
     fn parse_roundtrips_keys() {
@@ -260,25 +292,50 @@ mod tests {
     #[test]
     fn suffix_bounds_dominated_by_real_schedules() {
         let jobs = paper_jobs();
-        let topo = Topology::paper();
-        for obj in [
-            Objective::WeightedSum,
-            Objective::UnweightedSum,
-            Objective::Makespan,
-            Objective::DeadlineMiss { deadlines: vec![10] },
+        for topo in [
+            Topology::paper(),
+            // a fast replica shrinks the bound but must keep it sound
+            Topology::heterogeneous(vec![1.0], vec![2.0, 0.5]).unwrap(),
         ] {
-            let bounds = obj.suffix_bounds(&jobs);
-            assert_eq!(bounds.len(), jobs.len() + 1);
-            assert_eq!(bounds[jobs.len()], 0);
-            // bounds[0] never exceeds the value of any feasible schedule
-            for m in topo.machines() {
-                let s = simulate(&jobs, &topo, &vec![m; jobs.len()]);
-                assert!(
-                    bounds[0] <= obj.evaluate(&jobs, &s.trace),
-                    "{obj}: bound {} beats schedule on {m}",
-                    bounds[0]
-                );
+            for obj in [
+                Objective::WeightedSum,
+                Objective::UnweightedSum,
+                Objective::Makespan,
+                Objective::DeadlineMiss { deadlines: vec![10] },
+            ] {
+                let bounds = obj.suffix_bounds(&jobs, &topo);
+                assert_eq!(bounds.len(), jobs.len() + 1);
+                assert_eq!(bounds[jobs.len()], 0);
+                // bounds[0] never exceeds any feasible schedule's value
+                for m in topo.machines() {
+                    let s = simulate(&jobs, &topo, &vec![m; jobs.len()]);
+                    assert!(
+                        bounds[0] <= obj.evaluate(&jobs, &s.trace),
+                        "{obj}: bound {} beats schedule on {m}",
+                        bounds[0]
+                    );
+                }
             }
         }
+    }
+
+    #[test]
+    fn suffix_bounds_unit_speeds_match_class_level() {
+        // at unit factors the replica-aware bound degenerates to the
+        // seed's class-level eq.-6 bound
+        let jobs = paper_jobs();
+        use crate::scheduler::MachineId;
+        let class_best = |j: &crate::scheduler::Job| {
+            MachineId::ALL
+                .iter()
+                .map(|&m| j.execution(m))
+                .min()
+                .unwrap()
+        };
+        let expected: u64 =
+            jobs.iter().map(|j| j.weight as u64 * class_best(j)).sum();
+        let bounds = Objective::WeightedSum
+            .suffix_bounds(&jobs, &Topology::new(2, 3));
+        assert_eq!(bounds[0], expected);
     }
 }

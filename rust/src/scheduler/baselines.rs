@@ -58,8 +58,12 @@ impl Strategy {
     /// The fixed assignment this strategy induces (Ours runs the tabu
     /// optimizer; prefer solving through the [`crate::scenario`] registry
     /// via [`Strategy::solver_key`]).  Fixed-class strategies cycle over
-    /// the class's replicas, which degenerates to the single machine in
-    /// the paper topology.
+    /// the class's *concrete replicas* in index order — deliberately
+    /// speed-oblivious round-robin, so on a heterogeneous topology they
+    /// stay the naive baselines the optimizing solvers are measured
+    /// against (the simulator still charges each replica its own
+    /// speed-scaled processing time).  The cycle degenerates to the
+    /// single machine in the paper topology.
     pub fn assignment(self, jobs: &[Job], topo: &Topology) -> Assignment {
         let fixed = |class: MachineId| -> Assignment {
             (0..jobs.len()).map(|i| topo.spread(class, i)).collect()
@@ -233,6 +237,22 @@ mod tests {
             eval(&jobs, &Topology::paper(), Strategy::AllEdge);
         let wide = eval(&jobs, &topo, Strategy::AllEdge);
         assert!(wide.weighted_sum < narrow.weighted_sum);
+    }
+
+    #[test]
+    fn fixed_class_baseline_pays_for_a_slow_replica() {
+        // all-edge round-robins onto both replicas; making one slower
+        // must cost the speed-oblivious baseline
+        let jobs = paper_jobs();
+        let unit = eval(&jobs, &Topology::new(1, 2), Strategy::AllEdge);
+        let topo =
+            Topology::heterogeneous(vec![1.0], vec![1.0, 0.5]).unwrap();
+        let slow = eval(&jobs, &topo, Strategy::AllEdge);
+        assert!(slow.weighted_sum > unit.weighted_sum);
+        // ...while the optimizing solver routes around the slow box and
+        // beats the baseline by more than it does at unit speeds
+        let ours = eval(&jobs, &topo, Strategy::Ours);
+        assert!(ours.weighted_sum <= slow.weighted_sum);
     }
 
     #[test]

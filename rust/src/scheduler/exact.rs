@@ -59,9 +59,11 @@ pub fn schedule_exact_objective(
     let mut assignment = vec![MachineRef::DEVICE; jobs.len()];
 
     // Per-objective uncontended suffix bound: the value contribution of
-    // jobs k..n each at its machine-minimal execution time (class-level,
-    // so replica count doesn't change it).
-    let suffix_lb = objective.suffix_bounds(jobs);
+    // jobs k..n each at its machine-minimal execution time.  The minimum
+    // ranges over *concrete replicas* (a fast replica can beat every
+    // class-level time), so the bound stays sound on heterogeneous
+    // topologies.
+    let suffix_lb = objective.suffix_bounds(jobs, topo);
 
     fn dfs(
         jobs: &[Job],
@@ -231,6 +233,27 @@ mod tests {
         let narrow = exact(&jobs, &Topology::paper());
         let wide = exact(&jobs, &Topology::new(1, 2));
         assert!(wide.weighted_sum <= narrow.weighted_sum);
+    }
+
+    #[test]
+    fn exact_with_faster_replica_never_worse() {
+        // the optimum is monotone in replica speed: scaling one replica
+        // up only shrinks its processing times
+        let jobs: Vec<Job> = paper_jobs().into_iter().take(7).collect();
+        let unit = exact(&jobs, &Topology::new(1, 2));
+        let fast = exact(
+            &jobs,
+            &Topology::heterogeneous(vec![1.0], vec![1.0, 2.0])
+                .unwrap(),
+        );
+        assert!(fast.weighted_sum <= unit.weighted_sum);
+        // ...and the heuristic still never beats the hetero optimum
+        let ours = tabu(
+            &jobs,
+            &Topology::heterogeneous(vec![1.0], vec![1.0, 2.0])
+                .unwrap(),
+        );
+        assert!(ours.weighted_sum >= fast.weighted_sum);
     }
 
     #[test]

@@ -5,9 +5,12 @@
 //! minimum completion time by time sequence" — jobs are considered in
 //! release order (priority-first within a tie, per C5), and each is
 //! committed to the machine on which it would finish earliest given the
-//! commitments made so far.  Ties go to the earliest machine in canonical
-//! order (cloud replicas, then edge replicas, then the device — the
-//! paper's machine order, preserved from the pre-topology scheduler).
+//! commitments made so far.  Candidate completions are evaluated per
+//! concrete replica (each with its own speed-scaled processing time), so
+//! on a heterogeneous topology the greedy stage naturally prefers a fast
+//! replica over its slower siblings.  Ties go to the earliest machine in
+//! canonical order (cloud replicas, then edge replicas, then the device —
+//! the paper's machine order, preserved from the pre-topology scheduler).
 
 use super::{Assignment, Job, Topology};
 use crate::simulation::MachineTimeline;
@@ -33,9 +36,10 @@ pub fn greedy_assignment(jobs: &[Job], topo: &Topology) -> Assignment {
         let mut best = None;
         for &m in &machines {
             let avail = j.release + j.transmission(m.class);
+            let p = topo.scaled_processing(j.processing(m.class), m);
             let end = match topo.shared_index(m) {
-                Some(s) => timelines[s].peek(avail, j.processing(m.class)).1,
-                None => avail + j.processing(m.class),
+                Some(s) => timelines[s].peek(avail, p).1,
+                None => avail + p,
             };
             if best.map_or(true, |(_, b)| end < b) {
                 best = Some((m, end));
@@ -46,7 +50,7 @@ pub fn greedy_assignment(jobs: &[Job], topo: &Topology) -> Assignment {
         if let Some(s) = topo.shared_index(m) {
             timelines[s].schedule(
                 j.release + j.transmission(m.class),
-                j.processing(m.class),
+                topo.scaled_processing(j.processing(m.class), m),
             );
         }
     }
@@ -114,6 +118,21 @@ mod tests {
             edge_replicas.len() > 1,
             "expected both edge replicas used, got {edge_replicas:?}"
         );
+    }
+
+    #[test]
+    fn greedy_prefers_the_fast_replica_when_idle() {
+        // with a 2× Edge:1 and everything idle, an edge-optimal job must
+        // land on the fast replica, not the canonical-first Edge:0
+        let jobs = vec![paper_jobs()[2]]; // J3 is edge-optimal
+        let topo =
+            Topology::heterogeneous(vec![1.0], vec![1.0, 2.0]).unwrap();
+        let a = greedy_assignment(&jobs, &topo);
+        assert_eq!(a[0], MachineRef::edge(1));
+        // at unit speeds the canonical tie-break (replica 0) is preserved
+        let unit = Topology::new(1, 2);
+        let b = greedy_assignment(&jobs, &unit);
+        assert_eq!(b[0], MachineRef::edge(0));
     }
 
     #[test]

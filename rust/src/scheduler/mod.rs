@@ -2,12 +2,14 @@
 //!
 //! The ICU room is an unrelated-parallel-machine system described by a
 //! [`Topology`]: `clouds` shared cloud servers, `edges` shared edge
-//! servers, and a private end device per patient.  Jobs arrive in a time
-//! sequence with priorities; the objective is the priority-weighted whole
-//! response time `Σ wᵢ(Eᵢ − Rᵢ)` (eq. 5) under constraints C1–C5.
+//! servers — each replica with its own speed factor — and a private end
+//! device per patient.  Jobs arrive in a time sequence with priorities;
+//! the objective is the priority-weighted whole response time
+//! `Σ wᵢ(Eᵢ − Rᵢ)` (eq. 5) under constraints C1–C5.
 //! [`Topology::paper`] is the paper's degenerate 1-cloud + 1-edge setup
 //! (assumption (d)) and reproduces its Table VII numbers bit-for-bit;
-//! every core below accepts arbitrary replica counts.
+//! every core below accepts arbitrary replica counts and per-replica
+//! speeds (machines are truly *unrelated*, per §V).
 //!
 //! * [`simulate`] — list-scheduling simulator for a fixed assignment
 //!   (transmission overlaps other jobs' execution per C4; shared machines
@@ -58,7 +60,7 @@ pub use online::schedule_online;
 #[allow(deprecated)]
 pub use tabu::schedule_jobs;
 
-pub use crate::topology::{MachineId, MachineRef, Topology};
+pub use crate::topology::{scale_ticks, MachineId, MachineRef, Topology};
 
 use crate::simulation::{ScheduleTrace, Tick};
 
@@ -126,8 +128,10 @@ impl Schedule {
 }
 
 /// Lower bound on the weighted whole response time (eq. 6): every job at
-/// its machine-minimal execution time, ignoring contention.  Replicas
-/// share their class's costs, so the bound is topology-independent.
+/// its machine-minimal execution time, ignoring contention.  This is the
+/// class-level bound — exact for homogeneous (unit-speed) topologies; on
+/// a heterogeneous topology use [`lower_bound_in`], which accounts for
+/// replicas faster than their class.
 pub fn lower_bound(jobs: &[Job]) -> Tick {
     jobs.iter()
         .map(|j| {
@@ -139,6 +143,16 @@ pub fn lower_bound(jobs: &[Job]) -> Tick {
             j.weight as Tick * best
         })
         .sum()
+}
+
+/// [`lower_bound`] generalized to a concrete [`Topology`]: the per-job
+/// minimum ranges over replicas (speed-scaled processing + per-class
+/// transmission).  Identical to [`lower_bound`] at unit speed factors.
+/// Delegates to the replica-aware eq.-6 bound the exact solver prunes
+/// with ([`crate::scenario::Objective::suffix_bounds`]) so there is one
+/// implementation of the bound.
+pub fn lower_bound_in(jobs: &[Job], topo: &Topology) -> Tick {
+    crate::scenario::Objective::WeightedSum.suffix_bounds(jobs, topo)[0]
 }
 
 #[cfg(test)]
@@ -158,6 +172,28 @@ mod tests {
         );
         assert!(sched.weighted_sum >= lb, "{} < {lb}", sched.weighted_sum);
         assert!(lb > 0);
+    }
+
+    #[test]
+    fn lower_bound_in_respects_fast_replicas() {
+        let jobs = paper_jobs();
+        // unit speeds: identical to the class-level bound
+        assert_eq!(
+            lower_bound_in(&jobs, &Topology::new(2, 3)),
+            lower_bound(&jobs)
+        );
+        // a faster replica can only lower the bound, and the optimum
+        // still dominates it
+        let fast = Topology::heterogeneous(vec![1.0], vec![4.0]).unwrap();
+        let lb = lower_bound_in(&jobs, &fast);
+        assert!(lb <= lower_bound(&jobs));
+        let sched = schedule_jobs_objective(
+            &jobs,
+            &fast,
+            &SchedulerParams::default(),
+            &crate::scenario::Objective::WeightedSum,
+        );
+        assert!(sched.weighted_sum >= lb);
     }
 
     #[test]

@@ -8,8 +8,10 @@
 //! commitments so far — the natural online counterpart of the greedy
 //! stage — and serves as the policy bridge between the offline analysis
 //! (§V–VI) and the serving coordinator.  With multiple replicas it is
-//! exactly the "least-backlogged replica of the best class" rule the
-//! serving router applies.
+//! exactly the "best speed-adjusted finish time" rule the serving router
+//! applies: each candidate replica is scored with its own speed-scaled
+//! processing time, so a fast box attracts work even when its queue is
+//! no shorter.
 //!
 //! The competitive gap against offline Algorithm 2 and the exact optimum
 //! is measured in `rust/benches/sched_multi.rs` and the tests below.
@@ -58,11 +60,11 @@ pub fn schedule_online_objective(
             .iter()
             .map(|&m| {
                 let avail = j.release + j.transmission(m.class);
+                let p =
+                    topo.scaled_processing(j.processing(m.class), m);
                 let end = match topo.shared_index(m) {
-                    Some(s) => {
-                        timelines[s].peek(avail, j.processing(m.class)).1
-                    }
-                    None => avail + j.processing(m.class),
+                    Some(s) => timelines[s].peek(avail, p).1,
+                    None => avail + p,
                 };
                 (m, objective.marginal(i, j, end))
             })
@@ -72,7 +74,7 @@ pub fn schedule_online_objective(
         if let Some(s) = topo.shared_index(m) {
             timelines[s].schedule(
                 j.release + j.transmission(m.class),
-                j.processing(m.class),
+                topo.scaled_processing(j.processing(m.class), m),
             );
         }
     }
@@ -190,6 +192,32 @@ mod tests {
         );
         assert_eq!(by_makespan.assignment.len(), jobs.len());
         assert!(by_makespan.last_completion() > 0);
+    }
+
+    #[test]
+    fn online_routes_to_the_fast_replica_first() {
+        // an idle 2× Edge:1 finishes sooner than the canonical Edge:0,
+        // so the dispatcher must pick it
+        let jobs = vec![Job {
+            release: 1,
+            weight: 1,
+            proc_cloud: 50,
+            trans_cloud: 50,
+            proc_edge: 10,
+            trans_edge: 1,
+            proc_device: 100,
+        }];
+        let topo =
+            Topology::heterogeneous(vec![1.0], vec![1.0, 2.0]).unwrap();
+        let s = schedule_online_objective(
+            &jobs,
+            &topo,
+            &Objective::WeightedSum,
+        );
+        assert_eq!(
+            s.assignment[0],
+            crate::topology::MachineRef::edge(1)
+        );
     }
 
     #[test]

@@ -6,8 +6,13 @@
 //!
 //! * data transmission starts at release and overlaps other jobs'
 //!   execution on the target machine (C4) — a job becomes *available* at
-//!   `release + transmission`; transmission cost is per *class*
-//!   (replicas of a class share the class timing model);
+//!   `release + transmission`; transmission cost is per *class* (the
+//!   network path is shared by the class);
+//! * processing cost is per *replica*: the class-level `I_i` is scaled by
+//!   the assigned replica's speed factor
+//!   ([`Topology::scaled_processing`]), which is the identity at the
+//!   default factor 1.0 — homogeneous topologies stay bit-for-bit
+//!   identical to the per-class model;
 //! * every shared replica (cloud, edge) executes one job at a time without
 //!   preemption (C1, C2), serving in FCFS order of availability (ties:
 //!   earlier release, then lower index);
@@ -69,14 +74,19 @@ fn fold_completions(
             "job {i} assigned to {m:?}, outside topology {topo:?}"
         );
         let avail = j.release + j.transmission(m.class);
-        let p = j.processing(m.class);
         let end = match topo.shared_index(m) {
             Some(s) => {
+                // per-replica speed scaling without allocating: the
+                // speed lives in the Topology, indexed like `free`
+                let p = crate::topology::scale_ticks(
+                    j.processing(m.class),
+                    topo.shared_speed(s),
+                );
                 let start = avail.max(free[s]);
                 free[s] = start + p;
                 free[s]
             }
-            None => avail + p,
+            None => avail + j.processing(m.class),
         };
         f(i, j, end);
     }
@@ -160,7 +170,7 @@ pub fn simulate(
     for &i in &order {
         let m = assignment[i];
         let a = avail(i);
-        let p = jobs[i].processing(m.class);
+        let p = topo.scaled_processing(jobs[i].processing(m.class), m);
         let (start, end) = match topo.shared_index(m) {
             Some(s) => timelines[s].schedule(a, p),
             // private device: immediate start at availability (= release)
@@ -180,7 +190,7 @@ pub fn simulate(
     let weights: Vec<u32> = jobs.iter().map(|j| j.weight).collect();
     let weighted_sum = trace.weighted_sum(&weights);
     Schedule {
-        topology: *topo,
+        topology: topo.clone(),
         assignment: assignment.to_vec(),
         trace,
         weighted_sum,
@@ -355,8 +365,9 @@ mod tests {
     }
 
     #[test]
-    fn replicas_share_class_costs() {
-        // all on Edge:0 vs all on Edge:1: identical by symmetry
+    fn unit_speed_replicas_share_class_costs() {
+        // all on Edge:0 vs all on Edge:1: identical by symmetry at the
+        // default unit speed factors
         let jobs = paper_jobs();
         let topo = Topology::new(2, 2);
         let a =
@@ -379,6 +390,79 @@ mod tests {
             .collect();
         let two = simulate(&jobs, &topo, &split);
         assert!(two.weighted_sum < one.weighted_sum);
+    }
+
+    #[test]
+    fn speed_factors_make_replicas_unrelated() {
+        // a 2× edge replica beats its 1× twin; a ½× replica loses
+        let jobs = paper_jobs();
+        let topo =
+            Topology::heterogeneous(vec![1.0], vec![2.0, 1.0, 0.5])
+                .unwrap();
+        let fast =
+            simulate(&jobs, &topo, &all_on(MachineRef::edge(0), 10));
+        let unit =
+            simulate(&jobs, &topo, &all_on(MachineRef::edge(1), 10));
+        let slow =
+            simulate(&jobs, &topo, &all_on(MachineRef::edge(2), 10));
+        assert!(fast.weighted_sum < unit.weighted_sum);
+        assert!(unit.weighted_sum < slow.weighted_sum);
+        // the unit replica reproduces the class-level Table VII row
+        assert_eq!(unit.unweighted_sum(), 291);
+    }
+
+    #[test]
+    fn explicit_unit_speeds_are_bit_for_bit() {
+        use crate::data::Rng;
+        // an all-1.0 speed vector is indistinguishable from no vector
+        let jobs = paper_jobs();
+        let homo = Topology::new(2, 2);
+        let hetero = Topology::with_speeds(
+            2,
+            2,
+            Some(vec![1.0, 1.0]),
+            Some(vec![1.0, 1.0]),
+        )
+        .unwrap();
+        let mut scratch = SimScratch::default();
+        let machines = homo.machines();
+        for seed in 0..50u64 {
+            let mut rng = Rng::new(seed ^ 0x51EED);
+            let assignment: Assignment = (0..jobs.len())
+                .map(|_| {
+                    machines[rng.below(machines.len() as u64) as usize]
+                })
+                .collect();
+            let a = simulate(&jobs, &homo, &assignment);
+            let b = simulate(&jobs, &hetero, &assignment);
+            assert_eq!(a.trace.entries, b.trace.entries, "seed {seed}");
+            assert_eq!(
+                weighted_cost(&jobs, &homo, &assignment, &mut scratch),
+                weighted_cost(&jobs, &hetero, &assignment, &mut scratch),
+            );
+        }
+    }
+
+    #[test]
+    fn weighted_cost_equals_simulate_heterogeneous() {
+        use crate::data::Rng;
+        let mut scratch = SimScratch::default();
+        let topo =
+            Topology::heterogeneous(vec![1.5], vec![0.75, 2.0]).unwrap();
+        let machines = topo.machines();
+        for seed in 0..60 {
+            let mut rng = Rng::new(seed ^ 0xFA57);
+            let jobs = paper_jobs();
+            let assignment: Assignment = (0..jobs.len())
+                .map(|_| {
+                    machines[rng.below(machines.len() as u64) as usize]
+                })
+                .collect();
+            let full = simulate(&jobs, &topo, &assignment).weighted_sum;
+            let fast =
+                weighted_cost(&jobs, &topo, &assignment, &mut scratch);
+            assert_eq!(full, fast, "seed {seed}");
+        }
     }
 
     #[test]

@@ -2,10 +2,13 @@
 //! improved by a tabu-style neighborhood search (paper §VI, citing
 //! variable neighborhood search [24]), over an arbitrary [`Topology`].
 //!
-//! Moves reassign one job to a different machine (any replica of any
-//! class); the whole schedule is re-simulated (transmission overlap + FCFS
-//! availability order) and the move is kept if the priority-weighted whole
-//! response time `L*sum` improves.  A short-term tabu memory forbids
+//! Moves reassign one job to a different machine (any *concrete replica*
+//! of any class — on a heterogeneous topology a move to "Edge" enumerates
+//! each edge replica separately, so the search can trade a short queue on
+//! a slow box against a long queue on a fast one); the whole schedule is
+//! re-simulated (transmission overlap + FCFS availability order, with
+//! per-replica speed-scaled processing) and the move is kept if the
+//! priority-weighted whole response time `L*sum` improves.  A short-term tabu memory forbids
 //! immediately reversing a move, letting the search escape shallow local
 //! minima; the best solution ever seen is returned.
 
@@ -294,11 +297,35 @@ mod tests {
     #[test]
     fn deterministic() {
         let jobs = paper_jobs();
-        let topo = Topology::new(1, 2);
-        let a = tabu(&jobs, &topo);
-        let b = tabu(&jobs, &topo);
-        assert_eq!(a.assignment, b.assignment);
-        assert_eq!(a.weighted_sum, b.weighted_sum);
+        for topo in [
+            Topology::new(1, 2),
+            Topology::heterogeneous(vec![1.0], vec![1.5, 0.75])
+                .unwrap(),
+        ] {
+            let a = tabu(&jobs, &topo);
+            let b = tabu(&jobs, &topo);
+            assert_eq!(a.assignment, b.assignment);
+            assert_eq!(a.weighted_sum, b.weighted_sum);
+        }
+    }
+
+    #[test]
+    fn tabu_exploits_a_fast_replica() {
+        // doubling one edge replica's speed must never hurt, and the
+        // search must actually place work on the fast box
+        let jobs = paper_jobs();
+        let unit = tabu(&jobs, &Topology::new(1, 2));
+        let topo =
+            Topology::heterogeneous(vec![1.0], vec![1.0, 2.0]).unwrap();
+        let fast = tabu(&jobs, &topo);
+        assert!(fast.weighted_sum <= unit.weighted_sum);
+        assert!(
+            fast.assignment
+                .iter()
+                .any(|m| *m == MachineRef::edge(1)),
+            "fast replica unused: {:?}",
+            fast.assignment
+        );
     }
 
     #[test]

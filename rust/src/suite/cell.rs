@@ -43,9 +43,9 @@ impl std::fmt::Display for CellKey {
 pub enum CellStatus {
     /// The solver ran; metrics attached.
     Ok(CellMetrics),
-    /// Declared skip (e.g. the exact solver's suite job limit, or an
-    /// objective the scenario cannot express).  Skips are stable and
-    /// compare as passes against a baseline that also skipped.
+    /// Declared skip (e.g. the exact solver's suite job limit).  Skips
+    /// are stable and compare as passes against a baseline that also
+    /// skipped.
     Skipped { reason: String },
     /// The solver returned an error — never expected in a healthy suite,
     /// and always a check failure.

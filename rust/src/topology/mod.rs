@@ -4,19 +4,37 @@
 //! machine scheduling (§V, citing [3][35]) but experiments with the
 //! degenerate 1-cloud + 1-edge configuration (assumption (d)).  This module
 //! is the single source of truth for the machine set: a [`Topology`] names
-//! how many interchangeable replicas each shared class has, and a
-//! [`MachineRef`] names one concrete machine (class + replica).  Every
-//! scheduler core and the serving coordinator are parameterized by it;
-//! [`Topology::paper`] reproduces the paper's setup bit-for-bit.
+//! how many replicas each shared class has — and how fast each one is —
+//! and a [`MachineRef`] names one concrete machine (class + replica).
+//! Every scheduler core and the serving coordinator are parameterized by
+//! it; [`Topology::paper`] reproduces the paper's setup bit-for-bit.
 //!
-//! Replicas of a class share the class's timing model (processing and
-//! transmission costs are per-class, per assumption (c)); what a replica
-//! adds is an independent exclusive execution timeline (constraint C1).
-//! The per-patient end device is never shared, so it is modeled as a
-//! single pseudo-replica whose queue never forms.
+//! Machines are truly *unrelated*: besides the per-class timing model
+//! (transmission costs stay per-class — the network path is shared by the
+//! class), every shared replica carries its own **speed factor**
+//! ([`Topology::speed`], default 1.0).  A replica's effective processing
+//! time is `ceil(I_i / speed)` ([`Topology::scaled_processing`]), so a
+//! `speed` of 2.0 models a box twice as fast as the class's calibrated
+//! machine and 0.5 a box half as fast.  All-1.0 topologies are bit-for-bit
+//! identical to the per-class model (the `p / 1.0` division is exact), so
+//! the paper's published numbers are unchanged.  The per-patient end
+//! device is never shared and never scaled: it is modeled as a single
+//! pseudo-replica (speed 1.0) whose queue never forms.
+//!
+//! # Invariant
+//!
+//! A validated `Topology` ([`Topology::try_new`], [`Topology::validate`])
+//! always has **at least one replica of every class**: `clouds >= 1`,
+//! `edges >= 1`, and the device pseudo-replica always exists.  Downstream
+//! code (e.g. the serving router's replica selection) relies on this to
+//! stay infallible — `machines()` and each class's replica range are
+//! never empty.  Speed factors are validated finite and within
+//! [`Topology::SPEED_RANGE`], so speed-scaled arithmetic can never
+//! overflow or produce NaN orderings.
 
 use crate::device::Layer;
 use crate::serialize::Value;
+use crate::simulation::Tick;
 use crate::{Error, Result};
 
 /// A machine *class* in the unrelated-parallel-machine system.
@@ -132,12 +150,39 @@ impl std::fmt::Display for MachineRef {
     }
 }
 
-/// The machine set: `clouds` cloud servers + `edges` edge servers, plus
-/// the per-patient end devices (always available, never shared).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// The machine set: `clouds` cloud servers + `edges` edge servers, each
+/// with its own speed factor, plus the per-patient end devices (always
+/// available, never shared).
+///
+/// Constructed homogeneous via [`Topology::new`] / [`Topology::try_new`]
+/// (every replica at speed 1.0 — the paper's assumption (c)) or
+/// heterogeneous via [`Topology::heterogeneous`] /
+/// [`Topology::with_speeds`].  See the module docs for the ≥1-replica
+/// invariant validated constructors guarantee.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Topology {
     pub clouds: usize,
     pub edges: usize,
+    /// Per-shared-replica speed factors in canonical order (cloud
+    /// replicas, then edge replicas).  Canonical form: empty means every
+    /// replica runs at 1.0 (constructors normalize an explicit all-1.0
+    /// vector to empty, so `PartialEq`/`Hash` never distinguish the two).
+    speeds: Vec<f64>,
+}
+
+// Speeds are validated finite (never NaN), so the partial equivalence is
+// total and `Eq` is sound.
+impl Eq for Topology {}
+
+impl std::hash::Hash for Topology {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        use std::hash::Hash;
+        self.clouds.hash(state);
+        self.edges.hash(state);
+        for s in &self.speeds {
+            s.to_bits().hash(state);
+        }
+    }
 }
 
 impl Default for Topology {
@@ -147,38 +192,126 @@ impl Default for Topology {
 }
 
 impl Topology {
-    /// Construct without validation (infallible, for literals known to be
-    /// sane).  Degenerate replica counts only surface when a scheduler
-    /// core is reached, so prefer [`Topology::try_new`] on any path that
-    /// takes user input — it rejects them up front with
-    /// [`Error::InvalidTopology`].
+    /// Accepted speed-factor range (a factor outside ±64× of the
+    /// calibrated class machine is almost certainly a config typo, and
+    /// the bound keeps `ceil(p / speed)` far from overflow).
+    pub const SPEED_RANGE: std::ops::RangeInclusive<f64> =
+        0.015625..=64.0;
+
+    /// Construct a homogeneous topology without validation (infallible,
+    /// for literals known to be sane).  Degenerate replica counts only
+    /// surface when a scheduler core is reached, so prefer
+    /// [`Topology::try_new`] on any path that takes user input — it
+    /// rejects them up front with [`Error::InvalidTopology`].
     pub fn new(clouds: usize, edges: usize) -> Self {
-        Topology { clouds, edges }
+        Topology { clouds, edges, speeds: Vec::new() }
     }
 
-    /// Validated construction: the front-door constructor for config,
-    /// CLI, and [`crate::scenario`] input.  `try_new(0, _)` /
+    /// Validated homogeneous construction: the front-door constructor for
+    /// config, CLI, and [`crate::scenario`] input.  `try_new(0, _)` /
     /// `try_new(_, 0)` return [`Error::InvalidTopology`] instead of
-    /// panicking later inside `simulate`.
+    /// panicking later inside `simulate`; the result upholds the
+    /// ≥1-replica invariant documented on the module.
     pub fn try_new(clouds: usize, edges: usize) -> Result<Self> {
-        let t = Topology { clouds, edges };
+        let t = Topology::new(clouds, edges);
+        t.validate()?;
+        Ok(t)
+    }
+
+    /// Validated heterogeneous construction: replica counts are the
+    /// speed-vector lengths.  Speeds must be finite and inside
+    /// [`Topology::SPEED_RANGE`].
+    pub fn heterogeneous(
+        cloud_speeds: Vec<f64>,
+        edge_speeds: Vec<f64>,
+    ) -> Result<Self> {
+        let clouds = cloud_speeds.len();
+        let edges = edge_speeds.len();
+        Topology::with_speeds(
+            clouds,
+            edges,
+            Some(cloud_speeds),
+            Some(edge_speeds),
+        )
+    }
+
+    /// Validated construction with optional per-class speed vectors
+    /// (`None` = every replica of that class at 1.0).  A provided
+    /// vector's length must equal the class's replica count.
+    pub fn with_speeds(
+        clouds: usize,
+        edges: usize,
+        cloud_speeds: Option<Vec<f64>>,
+        edge_speeds: Option<Vec<f64>>,
+    ) -> Result<Self> {
+        let invalid = |reason: String| Error::InvalidTopology {
+            clouds,
+            edges,
+            reason,
+        };
+        if let Some(cs) = &cloud_speeds {
+            if cs.len() != clouds {
+                return Err(invalid(format!(
+                    "cloud_speeds has {} entries for {clouds} cloud \
+                     replica(s)",
+                    cs.len()
+                )));
+            }
+        }
+        if let Some(es) = &edge_speeds {
+            if es.len() != edges {
+                return Err(invalid(format!(
+                    "edge_speeds has {} entries for {edges} edge \
+                     replica(s)",
+                    es.len()
+                )));
+            }
+        }
+        let mut speeds =
+            cloud_speeds.unwrap_or_else(|| vec![1.0; clouds]);
+        speeds.extend(edge_speeds.unwrap_or_else(|| vec![1.0; edges]));
+        // canonical form: a fully-homogeneous vector is stored empty so
+        // equality/hashing can't distinguish "unspecified" from "all 1.0"
+        if speeds.iter().all(|&s| s == 1.0) {
+            speeds.clear();
+        }
+        let t = Topology { clouds, edges, speeds };
         t.validate()?;
         Ok(t)
     }
 
     /// The paper's configuration: one cloud + one edge server
-    /// (assumption (d)).
+    /// (assumption (d)), both at unit speed (assumption (c)).
     pub fn paper() -> Self {
-        Topology { clouds: 1, edges: 1 }
+        Topology::new(1, 1)
     }
 
     pub fn is_paper(&self) -> bool {
         *self == Topology::paper()
     }
 
-    /// Compact label for reports and bench rows (`1c+2e`).
+    /// Whether every replica runs at the class's calibrated speed
+    /// (factor 1.0) — the regime where this topology is bit-for-bit
+    /// equivalent to the per-class timing model.
+    pub fn is_homogeneous(&self) -> bool {
+        self.speeds.is_empty()
+    }
+
+    /// Compact label for reports and bench rows (`1c+2e`; heterogeneous
+    /// topologies append the speed vector, e.g. `1c+2e speeds=[1,1.5,0.75]`).
     pub fn label(&self) -> String {
-        format!("{}c+{}e", self.clouds, self.edges)
+        if self.is_homogeneous() {
+            format!("{}c+{}e", self.clouds, self.edges)
+        } else {
+            let speeds: Vec<String> =
+                self.speeds.iter().map(|s| s.to_string()).collect();
+            format!(
+                "{}c+{}e speeds=[{}]",
+                self.clouds,
+                self.edges,
+                speeds.join(",")
+            )
+        }
     }
 
     /// Number of shared machines (cloud + edge replicas).
@@ -204,6 +337,49 @@ impl Topology {
     /// Whether a machine reference is valid in this topology.
     pub fn contains(&self, m: MachineRef) -> bool {
         m.replica < self.replicas(m.class)
+    }
+
+    /// The speed factor of one concrete machine (1.0 unless configured
+    /// otherwise; the device pseudo-replica is always 1.0).
+    pub fn speed(&self, m: MachineRef) -> f64 {
+        match self.shared_index(m) {
+            Some(s) => self.shared_speed(s),
+            None => 1.0,
+        }
+    }
+
+    /// The speed factor at a dense shared index (see
+    /// [`Self::shared_index`]); allocation-free, for the simulator's hot
+    /// loop.
+    #[inline]
+    pub fn shared_speed(&self, s: usize) -> f64 {
+        self.speeds.get(s).copied().unwrap_or(1.0)
+    }
+
+    /// The cloud replicas' speed factors, materialized (length
+    /// `clouds`; all 1.0 for a homogeneous class).
+    pub fn cloud_speeds(&self) -> Vec<f64> {
+        (0..self.clouds).map(|s| self.shared_speed(s)).collect()
+    }
+
+    /// The edge replicas' speed factors, materialized (length `edges`;
+    /// all 1.0 for a homogeneous class).
+    pub fn edge_speeds(&self) -> Vec<f64> {
+        (self.clouds..self.shared_count())
+            .map(|s| self.shared_speed(s))
+            .collect()
+    }
+
+    /// A job's effective processing time on a concrete machine:
+    /// `ceil(p / speed)` (a faster replica finishes sooner; ceil keeps
+    /// C3's non-zero integer ticks).  At speed 1.0 this is exactly `p` —
+    /// the guarantee behind the homogeneous bit-for-bit invariant.
+    #[inline]
+    pub fn scaled_processing(&self, p: Tick, m: MachineRef) -> Tick {
+        match self.shared_index(m) {
+            Some(s) => scale_ticks(p, self.shared_speed(s)),
+            None => p,
+        }
     }
 
     /// All machines in canonical order: `Cloud:0..c`, `Edge:0..e`,
@@ -240,7 +416,7 @@ impl Topology {
     }
 
     /// Dense index of a *shared* machine into per-replica state vectors
-    /// (free-times, timelines); `None` for the device.
+    /// (free-times, timelines, speeds); `None` for the device.
     pub fn shared_index(&self, m: MachineRef) -> Option<usize> {
         match m.class {
             MachineId::Cloud => Some(m.replica),
@@ -263,46 +439,100 @@ impl Topology {
     }
 
     pub fn validate(&self) -> Result<()> {
+        let invalid = |reason: String| Error::InvalidTopology {
+            clouds: self.clouds,
+            edges: self.edges,
+            reason,
+        };
         if self.clouds == 0 || self.edges == 0 {
-            return Err(Error::InvalidTopology {
-                clouds: self.clouds,
-                edges: self.edges,
-                reason: "needs at least one cloud and one edge server"
-                    .into(),
-            });
+            return Err(invalid(
+                "needs at least one cloud and one edge server".into(),
+            ));
         }
         if self.shared_count() > 64 {
-            return Err(Error::InvalidTopology {
-                clouds: self.clouds,
-                edges: self.edges,
-                reason: format!(
-                    "{} shared machines; >64 is almost certainly a \
-                     config typo",
-                    self.shared_count()
-                ),
-            });
+            return Err(invalid(format!(
+                "{} shared machines; >64 is almost certainly a \
+                 config typo",
+                self.shared_count()
+            )));
+        }
+        if !self.speeds.is_empty()
+            && self.speeds.len() != self.shared_count()
+        {
+            return Err(invalid(format!(
+                "{} speed factors for {} shared machines (construct \
+                 through Topology::with_speeds)",
+                self.speeds.len(),
+                self.shared_count()
+            )));
+        }
+        for (s, &f) in self.speeds.iter().enumerate() {
+            if !f.is_finite() || !Self::SPEED_RANGE.contains(&f) {
+                return Err(invalid(format!(
+                    "speed factor {f} for shared machine {s} must be \
+                     finite and within {:?}",
+                    Self::SPEED_RANGE
+                )));
+            }
         }
         Ok(())
     }
 
     /// Parse from a config section, layered over the paper defaults.
+    /// Replica counts default to the speed-vector lengths when only
+    /// `cloud_speeds` / `edge_speeds` are given.
     pub fn from_reader(r: &crate::config::FieldReader) -> Result<Self> {
         let def = Topology::paper();
-        let t = Topology {
-            clouds: r.usize("clouds")?.unwrap_or(def.clouds),
-            edges: r.usize("edges")?.unwrap_or(def.edges),
+        let cloud_speeds = r.f64_list("cloud_speeds")?;
+        let edge_speeds = r.f64_list("edge_speeds")?;
+        let clouds = match r.usize("clouds")? {
+            Some(c) => c,
+            None => cloud_speeds
+                .as_ref()
+                .map(|v| v.len())
+                .unwrap_or(def.clouds),
+        };
+        let edges = match r.usize("edges")? {
+            Some(e) => e,
+            None => edge_speeds
+                .as_ref()
+                .map(|v| v.len())
+                .unwrap_or(def.edges),
         };
         r.finish()?;
-        t.validate()?;
-        Ok(t)
+        Topology::with_speeds(clouds, edges, cloud_speeds, edge_speeds)
     }
 
-    /// Serialize as a config section.
+    /// Serialize as a config section (speed vectors are only emitted for
+    /// heterogeneous classes, so homogeneous output is unchanged).
     pub fn to_value(&self) -> Value {
         let mut v = Value::object();
         v.set("clouds", self.clouds);
         v.set("edges", self.edges);
+        if !self.is_homogeneous() {
+            let cloud = self.cloud_speeds();
+            let edge = self.edge_speeds();
+            if cloud.iter().any(|&f| f != 1.0) {
+                v.set("cloud_speeds", cloud);
+            }
+            if edge.iter().any(|&f| f != 1.0) {
+                v.set("edge_speeds", edge);
+            }
+        }
         v
+    }
+}
+
+/// `ceil(p / speed)` — the shared speed-scaling primitive (also the
+/// contract `python/tools/suite_oracle.py` mirrors).  The `speed == 1.0`
+/// fast path is what keeps homogeneous topologies bit-for-bit identical
+/// to the per-class model.
+#[inline]
+pub fn scale_ticks(p: Tick, speed: f64) -> Tick {
+    if speed == 1.0 {
+        p
+    } else {
+        (p as f64 / speed).ceil() as Tick
     }
 }
 
@@ -413,6 +643,103 @@ mod tests {
         let v = t.to_value();
         let r = crate::config::FieldReader::new(&v, "topology").unwrap();
         assert_eq!(Topology::from_reader(&r).unwrap(), t);
+    }
+
+    #[test]
+    fn heterogeneous_config_roundtrip() {
+        let t = Topology::heterogeneous(vec![2.0], vec![1.5, 0.75])
+            .unwrap();
+        let v = t.to_value();
+        let r = crate::config::FieldReader::new(&v, "topology").unwrap();
+        let back = Topology::from_reader(&r).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.speed(MachineRef::cloud(0)), 2.0);
+        assert_eq!(back.speed(MachineRef::edge(1)), 0.75);
+    }
+
+    #[test]
+    fn counts_inferred_from_speed_vectors() {
+        let v = crate::serialize::toml::parse(
+            "edge_speeds = [1.5, 0.75, 1.0]\n",
+        )
+        .unwrap();
+        let r = crate::config::FieldReader::new(&v, "topology").unwrap();
+        let t = Topology::from_reader(&r).unwrap();
+        assert_eq!((t.clouds, t.edges), (1, 3));
+        assert_eq!(t.speed(MachineRef::edge(0)), 1.5);
+        // explicit mismatched count is a typed error
+        let v = crate::serialize::toml::parse(
+            "edges = 2\nedge_speeds = [1.5]\n",
+        )
+        .unwrap();
+        let r = crate::config::FieldReader::new(&v, "topology").unwrap();
+        assert!(matches!(
+            Topology::from_reader(&r),
+            Err(Error::InvalidTopology { .. })
+        ));
+    }
+
+    #[test]
+    fn speeds_default_to_unit_and_validate() {
+        let t = Topology::new(2, 2);
+        for m in t.machines() {
+            assert_eq!(t.speed(m), 1.0, "{m}");
+        }
+        assert!(t.is_homogeneous());
+        // explicit all-1.0 vectors normalize to the homogeneous form
+        let explicit = Topology::with_speeds(
+            2,
+            2,
+            Some(vec![1.0, 1.0]),
+            Some(vec![1.0, 1.0]),
+        )
+        .unwrap();
+        assert_eq!(explicit, t);
+        assert!(explicit.is_homogeneous());
+        // invalid factors are typed errors
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY, 1e9, 1e-9] {
+            assert!(
+                Topology::heterogeneous(vec![bad], vec![1.0]).is_err(),
+                "{bad}"
+            );
+        }
+        // wrong-length vectors are typed errors
+        assert!(Topology::with_speeds(2, 1, Some(vec![1.5]), None)
+            .is_err());
+    }
+
+    #[test]
+    fn scaled_processing_ceil_and_identity() {
+        let t = Topology::heterogeneous(vec![1.0], vec![2.0, 0.5])
+            .unwrap();
+        // unit speed: exact identity
+        assert_eq!(t.scaled_processing(7, MachineRef::cloud(0)), 7);
+        assert_eq!(t.scaled_processing(7, MachineRef::DEVICE), 7);
+        // 2× faster: ceil(7/2) = 4
+        assert_eq!(t.scaled_processing(7, MachineRef::edge(0)), 4);
+        // 2× slower: 14
+        assert_eq!(t.scaled_processing(7, MachineRef::edge(1)), 14);
+        // C3: non-zero ticks survive scaling
+        assert_eq!(t.scaled_processing(1, MachineRef::edge(0)), 1);
+        assert_eq!(scale_ticks(9, 1.5), 6);
+        assert_eq!(scale_ticks(10, 1.5), 7);
+    }
+
+    #[test]
+    fn heterogeneous_identity_equality_and_hash() {
+        use std::collections::HashSet;
+        let a = Topology::heterogeneous(vec![1.0], vec![1.5]).unwrap();
+        let b = Topology::heterogeneous(vec![1.0], vec![1.5]).unwrap();
+        let c = Topology::new(1, 1);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(!a.is_paper());
+        assert!(c.is_paper());
+        let set: HashSet<Topology> =
+            [a.clone(), b, c].into_iter().collect();
+        assert_eq!(set.len(), 2);
+        assert!(a.label().contains("speeds=[1,1.5]"), "{}", a.label());
+        assert_eq!(Topology::new(1, 2).label(), "1c+2e");
     }
 
     #[test]

@@ -114,6 +114,48 @@ fn invalid_topology_is_the_invalid_topology_variant() {
 }
 
 #[test]
+fn invalid_speed_factors_are_invalid_topology_variants() {
+    for (bad, why) in [
+        (
+            "[scenario]\n\n[scenario.topology]\nedges = 2\n\
+             edge_speeds = [1.5]\n",
+            "length mismatch",
+        ),
+        (
+            "[scenario]\n\n[scenario.topology]\nedge_speeds = [0.0]\n",
+            "zero factor",
+        ),
+        (
+            "[scenario]\n\n[scenario.topology]\n\
+             cloud_speeds = [-2.0]\n",
+            "negative factor",
+        ),
+        (
+            "[scenario]\n\n[scenario.topology]\n\
+             cloud_speeds = [1000.0]\n",
+            "absurd factor",
+        ),
+    ] {
+        match Scenario::from_toml(bad).unwrap_err() {
+            Error::InvalidTopology { reason, .. } => {
+                assert!(!reason.is_empty(), "{why}")
+            }
+            other => {
+                panic!("{why}: expected InvalidTopology, got {other:?}")
+            }
+        }
+    }
+    // a non-numeric entry is a config (type) error from the reader
+    assert!(matches!(
+        Scenario::from_toml(
+            "[scenario]\n\n[scenario.topology]\n\
+             edge_speeds = [\"fast\"]\n"
+        ),
+        Err(Error::Config(_))
+    ));
+}
+
+#[test]
 fn degenerate_arrival_parameters_are_config_errors() {
     for bad in [
         // zero rate

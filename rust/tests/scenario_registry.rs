@@ -163,6 +163,32 @@ fn generated_scenarios_run_end_to_end_and_reproduce() {
 }
 
 #[test]
+fn every_registered_solver_handles_a_heterogeneous_scenario() {
+    // a big.LITTLE edge room through the whole registry: every solver
+    // produces a valid schedule and none beats the exact optimum
+    let scenario = Scenario::builder()
+        .jobs(paper_jobs().into_iter().take(7).collect())
+        .topology(
+            Topology::heterogeneous(vec![1.0], vec![2.0, 0.5])
+                .expect("valid speeds"),
+        )
+        .build()
+        .unwrap();
+    let optimum = scenario.evaluate(&scenario.solve("exact").unwrap());
+    for spec in SOLVERS {
+        let s = scenario
+            .solve(spec.name)
+            .unwrap_or_else(|e| panic!("{} failed: {e}", spec.name));
+        check_schedule(&s, scenario.jobs.len(), spec.name);
+        assert!(
+            scenario.evaluate(&s) >= optimum,
+            "{} beat the heterogeneous optimum?!",
+            spec.name
+        );
+    }
+}
+
+#[test]
 fn toml_scenario_end_to_end() {
     // the acceptance-criteria flow: a Poisson-ward TOML spec solved
     // under makespan by the tabu solver

@@ -66,7 +66,13 @@ fn check_schedule_invariants(jobs: &[Job], s: &Schedule, ctx: &str) {
             "{ctx}"
         );
         assert!(e.start >= e.available, "{ctx}: start before data arrives");
-        assert_eq!(e.end, e.start + j.processing(m.class), "{ctx}: duration");
+        assert_eq!(
+            e.end,
+            e.start
+                + s.topology
+                    .scaled_processing(j.processing(m.class), m),
+            "{ctx}: duration"
+        );
         if m.class == MachineId::Device {
             assert_eq!(e.start, e.available, "{ctx}: device queued");
         }
@@ -210,8 +216,65 @@ fn prop_topology_sweep_monotone_and_feasible() {
     }
 }
 
-/// Replicas of a class are interchangeable: permuting which replica a
-/// fixed all-edge assignment uses never changes the objective.
+/// Speeding up any single replica never worsens the *optimal* makespan
+/// (ISSUE 4 satellite): `ceil(p / speed)` is non-increasing in `speed`
+/// and the FCFS availability order is speed-independent, so every
+/// assignment's completions — and hence the optimum over all
+/// assignments — are monotone.  Checked against the exact
+/// branch-and-bound on small random traces, for speed-ups of each
+/// shared replica in turn.
+#[test]
+fn prop_speeding_up_a_replica_never_worsens_optimal_makespan() {
+    use edgeward::scenario::solver;
+    let exact = solver("exact").unwrap();
+    let makespan_opt = |jobs: &[Job], topo: &Topology| -> u64 {
+        let scenario = edgeward::scenario::Scenario::builder()
+            .jobs(jobs.to_vec())
+            .topology(topo.clone())
+            .objective(Objective::Makespan)
+            .build()
+            .unwrap();
+        let s = exact.solve(&scenario).unwrap();
+        scenario.evaluate(&s)
+    };
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(seed ^ 0xFEED);
+        let jobs: Vec<Job> =
+            random_jobs(&mut rng).into_iter().take(6).collect();
+        // 1 cloud + 2 edges, three shared replicas to speed up in turn
+        let base_speeds = [1.0, 1.0, 1.0];
+        let base = Topology::with_speeds(
+            1,
+            2,
+            Some(vec![base_speeds[0]]),
+            Some(vec![base_speeds[1], base_speeds[2]]),
+        )
+        .unwrap();
+        let base_opt = makespan_opt(&jobs, &base);
+        for bump in 0..3usize {
+            for factor in [1.5, 2.0, 4.0] {
+                let mut speeds = base_speeds;
+                speeds[bump] = factor;
+                let topo = Topology::with_speeds(
+                    1,
+                    2,
+                    Some(vec![speeds[0]]),
+                    Some(vec![speeds[1], speeds[2]]),
+                )
+                .unwrap();
+                let opt = makespan_opt(&jobs, &topo);
+                assert!(
+                    opt <= base_opt,
+                    "seed {seed}: speeding replica {bump} ×{factor} \
+                     worsened optimal makespan {base_opt} -> {opt}"
+                );
+            }
+        }
+    }
+}
+
+/// Unit-speed replicas of a class are interchangeable: permuting which
+/// replica a fixed all-edge assignment uses never changes the objective.
 #[test]
 fn prop_replica_symmetry() {
     for seed in 0..50 {

@@ -102,6 +102,38 @@ fn multi_edge_serving_completes_and_reports_utilization() {
 }
 
 #[test]
+fn heterogeneous_lanes_serve_and_report_speeds() {
+    if !have_artifacts() {
+        return;
+    }
+    // a big (×2) and a little (×0.5) edge box: the run completes and the
+    // per-lane report carries each replica's speed factor
+    let env = Environment::paper();
+    let mut cfg = fast_cfg(Policy::RoundRobin);
+    cfg.topology =
+        Topology::with_speeds(1, 2, None, Some(vec![2.0, 0.5]))
+            .unwrap();
+    let coord =
+        Coordinator::new(env, Calibration::paper(), cfg, "artifacts")
+            .unwrap();
+    let report = coord.run(31).unwrap();
+    assert_eq!(report.completed, 12);
+    assert_eq!(report.lanes.len(), 4);
+    let by_label = |label: &str| {
+        report
+            .lanes
+            .iter()
+            .find(|l| l.machine.label() == label)
+            .unwrap_or_else(|| panic!("no lane {label}"))
+    };
+    assert_eq!(by_label("ES0").speed, 2.0);
+    assert_eq!(by_label("ES1").speed, 0.5);
+    assert_eq!(by_label("CC0").speed, 1.0);
+    let v = report.to_value().to_string_pretty();
+    assert!(v.contains("\"speed\""), "{v}");
+}
+
+#[test]
 fn least_loaded_policy_serves_all_requests() {
     if !have_artifacts() {
         return;

@@ -87,6 +87,75 @@ fn committed_corpus_covers_the_required_scenarios() {
 }
 
 #[test]
+fn committed_corpus_includes_heterogeneous_topologies() {
+    let suite = Suite::discover(repo_path("scenarios"), seed7())
+        .unwrap_or_else(|e| panic!("discovering scenarios/: {e}"));
+    let hetero: Vec<&str> = suite
+        .scenarios
+        .iter()
+        .filter(|s| !s.scenario.topology.is_homogeneous())
+        .map(|s| s.stem.as_str())
+        .collect();
+    assert!(
+        hetero.len() >= 2,
+        "corpus must pin at least 2 heterogeneous-topology scenarios, \
+         found {hetero:?}"
+    );
+}
+
+/// ISSUE 4 satellite: spelling every committed scenario's speed factors
+/// out as explicit 1.0 vectors must reproduce `baselines/*.json`
+/// byte-for-byte — the homogeneous corpus cannot tell the difference
+/// between "no speeds" and "all speeds 1.0".
+#[test]
+fn explicit_unit_speeds_reproduce_committed_baselines() {
+    let corpus = tmp_dir("unit_speeds");
+    for entry in std::fs::read_dir(repo_path("scenarios")).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        let scenario = edgeward::scenario::Scenario::load(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        if scenario.topology.is_homogeneous() {
+            // make the implicit unit speeds explicit, appending a
+            // topology section when the file has none (the committed
+            // files keep theirs last, so a bare append stays in-section)
+            let t = &scenario.topology;
+            if !text.contains("[scenario.topology]") {
+                text.push_str(&format!(
+                    "\n[scenario.topology]\nclouds = {}\nedges = {}\n",
+                    t.clouds, t.edges
+                ));
+            }
+            let ones = |n: usize| {
+                vec!["1.0"; n].join(", ")
+            };
+            text.push_str(&format!(
+                "cloud_speeds = [{}]\nedge_speeds = [{}]\n",
+                ones(t.clouds),
+                ones(t.edges)
+            ));
+        }
+        std::fs::write(
+            corpus.join(path.file_name().unwrap()),
+            text,
+        )
+        .unwrap();
+    }
+    let result = Suite::discover(&corpus, seed7()).unwrap().run();
+    let report = suite::check(&result, repo_path("baselines"));
+    assert!(
+        report.clean(),
+        "explicit all-1.0 speed vectors drifted from the committed \
+         goldens:\n{}",
+        report.render()
+    );
+    std::fs::remove_dir_all(&corpus).unwrap();
+}
+
+#[test]
 fn committed_corpus_runs_clean_against_committed_baselines() {
     let result = run_corpus();
     assert!(

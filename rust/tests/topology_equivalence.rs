@@ -291,6 +291,64 @@ fn tabu_matches_reference() {
     }
 }
 
+/// ISSUE 4 satellite: an *explicit* all-1.0 speed vector is the same
+/// topology as no speed vector at all — the whole pre-refactor test
+/// battery above must hold verbatim through the explicit-speeds
+/// constructor.  (Constructors canonicalize all-1.0 to the homogeneous
+/// form, so equality is structural, and the simulate/greedy/tabu runs
+/// below prove the scaled-processing path is the identity at 1.0.)
+#[test]
+fn explicit_unit_speeds_match_reference_bit_for_bit() {
+    let topo = Topology::with_speeds(
+        1,
+        1,
+        Some(vec![1.0]),
+        Some(vec![1.0]),
+    )
+    .unwrap();
+    assert_eq!(topo, Topology::paper());
+    assert!(topo.is_paper());
+
+    let params = SchedulerParams::default();
+    let mut scratch = SimScratch::default();
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed ^ 0x0E0E);
+        let jobs = random_jobs(&mut rng);
+        let classes: Vec<MachineId> = (0..jobs.len())
+            .map(|_| MachineId::ALL[rng.below(3) as usize])
+            .collect();
+        // simulate + weighted_cost against the frozen seed scheduler
+        let unified = simulate(&jobs, &topo, &lift(&classes));
+        assert_eq!(
+            unified.weighted_sum,
+            reference::weighted_cost(&jobs, &classes),
+            "seed {seed}"
+        );
+        assert_eq!(
+            weighted_cost(&jobs, &topo, &lift(&classes), &mut scratch),
+            reference::weighted_cost(&jobs, &classes),
+            "seed {seed}"
+        );
+        // greedy + tabu against the frozen seed scheduler
+        assert_eq!(
+            greedy_assignment(&jobs, &topo),
+            lift(&reference::greedy_assignment(&jobs)),
+            "seed {seed}"
+        );
+        if seed < 15 {
+            let unified = schedule_jobs(&jobs, &topo, &params);
+            let (ref_assignment, ref_cost) =
+                reference::schedule_jobs(&jobs, &params);
+            assert_eq!(
+                unified.assignment,
+                lift(&ref_assignment),
+                "seed {seed}"
+            );
+            assert_eq!(unified.weighted_sum, ref_cost, "seed {seed}");
+        }
+    }
+}
+
 #[test]
 fn single_allocation_classes_unchanged() {
     // the single-job argmin (Algorithm 1's scheduling analogue) is a
