@@ -13,9 +13,13 @@ of the two implementations.
 The only platform dependence shared with the Rust side is libm's `log`
 (exponential interarrivals); every other operation is exact integer or
 IEEE-754 arithmetic with identical operation order.  Heterogeneous
-topologies (per-replica `cloud_speeds` / `edge_speeds` in the scenario
-TOML) scale processing as `ceil(p / speed)` — an exact-identity no-op at
-the default 1.0 — mirroring `Topology::scaled_processing`.
+topologies (per-replica `cloud_speeds` / `edge_speeds` /
+`cloud_links` / `edge_links` in the scenario TOML) scale processing as
+`ceil(p / speed)` and transmission as `ceil(t / link)` — exact-identity
+no-ops at the default 1.0 — mirroring `Topology::scaled_processing` and
+`Topology::scaled_transmission` (including the exact integer
+ceil-division the Rust side switches to for ticks beyond 2^53, where
+f64 division loses precision).
 
 Usage: python3 python/tools/suite_oracle.py [--seed 7] [--print-goldens]
 (run from the repository root).
@@ -211,18 +215,40 @@ ARRIVAL_DEFAULTS = {
 
 
 # ---------------------------------------------------------- topology ---
-class Topology:
-    """Machine set with per-replica speed factors (mirrors
-    rust/src/topology/mod.rs: processing is ceil(p / speed), exact
-    identity at the default 1.0)."""
+MAX_F64_EXACT_TICK = 1 << 53
 
-    def __init__(self, clouds, edges, cloud_speeds=None, edge_speeds=None):
+
+def scale_ticks(p, factor):
+    """ceil(p / factor), mirroring rust Topology's scale_ticks: the
+    IEEE-754 division path up to 2^53 (what the committed goldens pin),
+    exact integer ceil-division on the factor's binary num/den beyond
+    (f64 division loses precision there)."""
+    if factor == 1.0:
+        return p
+    if p <= MAX_F64_EXACT_TICK:
+        return math.ceil(p / factor)
+    num, den = factor.as_integer_ratio()
+    return min(-((-p * den) // num), (1 << 64) - 1)
+
+
+class Topology:
+    """Machine set with per-replica speed and link factors (mirrors
+    rust/src/topology/mod.rs: processing is ceil(p / speed),
+    transmission is ceil(t / link), exact identities at the default
+    1.0)."""
+
+    def __init__(self, clouds, edges, cloud_speeds=None, edge_speeds=None,
+                 cloud_links=None, edge_links=None):
         self.clouds = clouds
         self.edges = edges
         cs = list(cloud_speeds) if cloud_speeds else [1.0] * clouds
         es = list(edge_speeds) if edge_speeds else [1.0] * edges
+        cl = list(cloud_links) if cloud_links else [1.0] * clouds
+        el = list(edge_links) if edge_links else [1.0] * edges
         assert len(cs) == clouds and len(es) == edges
+        assert len(cl) == clouds and len(el) == edges
         self.speeds = [float(s) for s in cs + es]
+        self.links = [float(s) for s in cl + el]
 
     @property
     def shared_count(self):
@@ -250,13 +276,25 @@ class Topology:
 
     def scaled(self, p, m):
         """Effective processing time of p ticks on machine m — the same
-        ceil(p / speed) (IEEE-754 double division) the Rust side uses,
-        with the exact-identity fast path at speed 1.0."""
+        ceil(p / speed) the Rust side uses, with the exact-identity fast
+        path at speed 1.0."""
         s = self.shared_index(m)
         if s is None:
             return p
-        f = self.speeds[s]
-        return p if f == 1.0 else math.ceil(p / f)
+        return scale_ticks(p, self.speeds[s])
+
+    def scaled_trans(self, t, m):
+        """Effective transmission time of t ticks to machine m —
+        ceil(t / link), mirroring Topology::scaled_transmission."""
+        s = self.shared_index(m)
+        if s is None:
+            return t
+        return scale_ticks(t, self.links[s])
+
+    def avail(self, job, m):
+        """Availability of `job` on machine m: release + link-scaled
+        transmission (constraint C4)."""
+        return job.release + self.scaled_trans(job.transmission(m[0]), m)
 
 
 # --------------------------------------------------------- simulator ---
@@ -264,14 +302,13 @@ def simulate(jobs, topo, assignment):
     """Entries of (job, machine, release, available, start, end)."""
     order = sorted(
         range(len(jobs)),
-        key=lambda i: (jobs[i].release
-                       + jobs[i].transmission(assignment[i][0]),
+        key=lambda i: (topo.avail(jobs[i], assignment[i]),
                        jobs[i].release, i))
     free = [0] * topo.shared_count
     entries = []
     for i in order:
         m = assignment[i]
-        a = jobs[i].release + jobs[i].transmission(m[0])
+        a = topo.avail(jobs[i], m)
         p = topo.scaled(jobs[i].processing(m[0]), m)
         s = topo.shared_index(m)
         if s is not None:
@@ -333,7 +370,7 @@ class Objective:
         bounds = [0] * (len(jobs) + 1)
         for k in reversed(range(len(jobs))):
             j = jobs[k]
-            best = min(j.transmission(m[0]) +
+            best = min(topo.scaled_trans(j.transmission(m[0]), m) +
                        topo.scaled(j.processing(m[0]), m)
                        for m in machines)
             if self.kind == "weighted-sum":
@@ -359,7 +396,7 @@ def greedy_assignment(jobs, topo):
         j = jobs[i]
         best = None
         for m in machines:
-            avail = j.release + j.transmission(m[0])
+            avail = topo.avail(j, m)
             s = topo.shared_index(m)
             base = max(avail, free[s]) if s is not None else avail
             end = base + topo.scaled(j.processing(m[0]), m)
@@ -369,7 +406,7 @@ def greedy_assignment(jobs, topo):
         assignment[i] = m
         s = topo.shared_index(m)
         if s is not None:
-            avail = j.release + j.transmission(m[0])
+            avail = topo.avail(j, m)
             free[s] = (max(avail, free[s])
                        + topo.scaled(j.processing(m[0]), m))
     return assignment
@@ -456,7 +493,7 @@ def schedule_online(jobs, topo, objective):
         j = jobs[i]
         best = None
         for m in machines:
-            avail = j.release + j.transmission(m[0])
+            avail = topo.avail(j, m)
             s = topo.shared_index(m)
             base = max(avail, free[s]) if s is not None else avail
             end = base + topo.scaled(j.processing(m[0]), m)
@@ -467,7 +504,7 @@ def schedule_online(jobs, topo, objective):
         assignment[i] = m
         s = topo.shared_index(m)
         if s is not None:
-            avail = j.release + j.transmission(m[0])
+            avail = topo.avail(j, m)
             free[s] = (max(avail, free[s])
                        + topo.scaled(j.processing(m[0]), m))
     return assignment
@@ -583,13 +620,23 @@ def load_scenario(path):
     topo_sec = sc.get("topology", {})
     cloud_speeds = topo_sec.get("cloud_speeds")
     edge_speeds = topo_sec.get("edge_speeds")
-    clouds = topo_sec.get(
-        "clouds", len(cloud_speeds) if cloud_speeds else 1)
-    edges = topo_sec.get(
-        "edges", len(edge_speeds) if edge_speeds else 1)
+    cloud_links = topo_sec.get("cloud_links")
+    edge_links = topo_sec.get("edge_links")
+
+    def infer(explicit, speeds, links):
+        if explicit is not None:
+            return explicit
+        for v in (speeds, links):
+            if v:
+                return len(v)
+        return 1
+
+    clouds = infer(topo_sec.get("clouds"), cloud_speeds, cloud_links)
+    edges = infer(topo_sec.get("edges"), edge_speeds, edge_links)
     return {
         "arrival": arrival,
-        "topology": Topology(clouds, edges, cloud_speeds, edge_speeds),
+        "topology": Topology(clouds, edges, cloud_speeds, edge_speeds,
+                             cloud_links, edge_links),
         "objective": Objective(sc.get("objective", "weighted-sum"),
                                sc.get("deadlines", [])),
     }

@@ -162,6 +162,40 @@ fn main() {
         std::hint::black_box(simulate(&jobs, &biglittle, &all_fast_edge));
     });
 
+    // link-heterogeneous rows: the link-scaled availability hot path
+    // (Wi-Fi + wired edge pair), and both factor axes at once
+    let wifi_wired =
+        Topology::with_links(1, 2, None, Some(vec![0.5, 1.0]))
+            .expect("valid");
+    b.bench("algorithm2_paper_trace_wifi_wired_2edges", || {
+        std::hint::black_box(schedule_jobs_objective(
+            &jobs,
+            &wifi_wired,
+            &params,
+            &Objective::WeightedSum,
+        ));
+    });
+    b.bench("simulate_10_jobs_link_heterogeneous", || {
+        std::hint::black_box(simulate(&jobs, &wifi_wired, &all_fast_edge));
+    });
+    let far_near = Topology::with_factors(
+        2,
+        1,
+        Some(vec![2.0, 1.0]),
+        None,
+        Some(vec![0.5, 2.0]),
+        None,
+    )
+    .expect("valid");
+    b.bench("algorithm2_paper_trace_far_near_clouds", || {
+        std::hint::black_box(schedule_jobs_objective(
+            &jobs,
+            &far_near,
+            &params,
+            &Objective::WeightedSum,
+        ));
+    });
+
     // scaling
     for n in [20usize, 40, 80] {
         let jobs_n = synthetic(n);

@@ -110,20 +110,26 @@ impl Bench {
     }
 
     /// Measure a closure; prints the result line immediately.
+    ///
+    /// A `min_samples` of 0 is clamped to 1: the statistics below index
+    /// `samples[0]`, so a zero-sample configuration (e.g. a zeroed-out
+    /// budget sweep) must still collect one sample instead of panicking
+    /// — and `budget / 0` would panic even earlier.
     pub fn bench(&mut self, case: &str, mut f: impl FnMut()) -> &Measurement {
+        let min_samples = self.min_samples.max(1);
         // 1. warmup + calibrate iterations so one sample is ~budget/samples
         f();
         let probe_start = Instant::now();
         f();
         let probe = probe_start.elapsed().max(Duration::from_nanos(20));
-        let per_sample = self.budget / self.min_samples as u32;
+        let per_sample = self.budget / min_samples as u32;
         let iters = (per_sample.as_secs_f64() / probe.as_secs_f64())
             .clamp(1.0, 1e7) as u64;
 
         // 2. collect samples
-        let mut samples = Vec::with_capacity(self.min_samples);
+        let mut samples = Vec::with_capacity(min_samples);
         let deadline = Instant::now() + self.budget;
-        while samples.len() < self.min_samples
+        while samples.len() < min_samples
             || (Instant::now() < deadline && samples.len() < 200)
         {
             let t = Instant::now();
@@ -207,6 +213,21 @@ mod tests {
         assert!(m.samples >= 3);
         let all = b.finish();
         assert_eq!(all.len(), 1);
+    }
+
+    #[test]
+    fn zero_sample_config_is_clamped_not_panicking() {
+        // a zeroed budget/min_samples sweep must still measure once
+        let mut b = Bench::new("zerotest");
+        b.budget = Duration::ZERO;
+        b.min_samples = 0;
+        let m = b.bench("clamped", || {
+            std::hint::black_box(3 * 3);
+        });
+        assert!(m.samples >= 1, "at least one sample must be collected");
+        assert!(m.median > Duration::ZERO);
+        assert!(m.max >= m.min);
+        assert_eq!(b.finish().len(), 1);
     }
 
     #[test]

@@ -9,16 +9,26 @@
 //! are consistent with what the executors will actually do.
 //!
 //! With heterogeneous machines, one fit per *class* is no longer enough:
-//! a 2× edge replica responds faster than its 1× sibling, so Algorithm 1
-//! must see a per-replica λ1.  [`live_calibration_per_lane`] performs the
+//! a 2× edge replica responds faster than its 1× sibling — and a gateway
+//! on Wi-Fi receives data at half the class rate — so Algorithm 1 must
+//! see a per-replica λ1.  [`live_calibration_per_lane`] performs the
 //! host measurement once and fits a [`Calibration`] per dispatch lane:
-//! each lane's own layer is predicted with its speed-scaled compute, and
-//! the residual is absorbed into that lane's λ1 (λ2 stays anchored on the
-//! unscaled device measurement, exactly like the class-level fit — a λ1
-//! below the base value, possibly negative, is how a faster-than-class
-//! replica expresses itself in eq. 2's transmission weight).
-//! [`live_calibration`] remains the class-level fit (equivalently: any
-//! unit-speed lane's fit).
+//! each lane's own layer is predicted with its speed-scaled compute and
+//! link-scaled transmission, and the residual is absorbed into that
+//! lane's λ1 (λ2 stays anchored on the unscaled device measurement,
+//! exactly like the class-level fit — a λ1 below the base value,
+//! possibly negative, is how a faster-than-class replica expresses
+//! itself in eq. 2's transmission weight).  [`live_calibration`] remains
+//! the class-level fit (equivalently: any unit-factor lane's fit).
+//!
+//! Measurement-free paths (the serving router, unit tests) use
+//! [`lane_calibrations`], which derives each lane's fit *analytically*
+//! from a given class-level [`Calibration`]: the base coefficients are
+//! inverted back into per-layer unit responses, the lane's own layer is
+//! re-scaled (compute ÷ speed, transmission ÷ link), and the scaled
+//! responses are re-fitted.  Unit-factor lanes return the base
+//! calibration bit-for-bit, so homogeneous topologies route exactly as
+//! before.
 
 use std::time::Duration;
 
@@ -65,10 +75,10 @@ fn measure_per_record_host(
 }
 
 /// Fit a [`Calibration`] that predicts one concrete machine: `machine`'s
-/// own layer is modeled with its per-replica speed factor (from
-/// `cfg.topology`), the other layers at class speed.  Pure given the
-/// measured per-record host costs, so it is unit-testable without PJRT
-/// artifacts.
+/// own layer is modeled with its per-replica speed and link factors
+/// (from `cfg.topology`), the other layers at class factors.  Pure given
+/// the measured per-record host costs, so it is unit-testable without
+/// PJRT artifacts.
 pub fn fit_lane_calibration(
     env: &Environment,
     cfg: &ServeConfig,
@@ -81,26 +91,98 @@ pub fn fit_lane_calibration(
         crate::device::EmulationProfile::identity()
     };
     let speed = cfg.topology.speed(machine);
+    let link = cfg.topology.link(machine);
     let mut responses = [(Application::Breath, PerLayer::default()); 3];
     for (slot, &(app, per_record)) in per_record_host.iter().enumerate()
     {
         // Unit (64-record) response per layer: emulated compute (speed-
         // scaled on the lane's own layer) + modeled transmission of the
-        // unit payload.
+        // unit payload (link-scaled on the lane's own layer).
         let unit_kb = app.unit_kb();
         let unit_response = PerLayer::from_fn(|layer| {
-            let lane_speed =
-                if layer == machine.layer() { speed } else { 1.0 };
+            let (lane_speed, lane_link) = if layer == machine.layer() {
+                (speed, link)
+            } else {
+                (1.0, 1.0)
+            };
             let compute_ms = emu
                 .scale(layer, per_record * 64)
                 .mul_f64(cfg.compute_scale / lane_speed)
                 .as_secs_f64()
                 * 1e3;
-            compute_ms + env.network.transmission_ms(layer, unit_kb)
+            compute_ms
+                + env.network.transmission_ms(layer, unit_kb) / lane_link
         });
         responses[slot] = (app, unit_response);
     }
     Calibration::fit(responses, env)
+}
+
+/// Derive one lane's [`Calibration`] analytically from a class-level
+/// fit (no host measurement): reconstruct each app's per-layer unit
+/// response from `base`'s coefficients, scale the lane's own layer
+/// (compute ÷ speed, transmission ÷ link), and re-fit.  A unit-factor
+/// lane returns `base` bit-for-bit, which is what keeps homogeneous
+/// serving routing byte-identical to the class-level path.
+pub fn lane_calibration_from(
+    env: &Environment,
+    topo: &crate::topology::Topology,
+    base: &Calibration,
+    machine: MachineRef,
+) -> Calibration {
+    let speed = topo.speed(machine);
+    let link = topo.link(machine);
+    if speed == 1.0 && link == 1.0 {
+        return *base;
+    }
+    let own = machine.layer();
+    let gflops = env.gflops();
+    let mut responses = [(Application::Breath, PerLayer::default()); 3];
+    for (slot, app) in Application::ALL.into_iter().enumerate() {
+        let c = base.for_app(app);
+        let comp = app.paper_flops() as f64;
+        let unit_kb = app.unit_kb();
+        let unit_response = PerLayer::from_fn(|layer| {
+            // the base model's unit response at this layer (eq. 4)
+            let i = c.lambda2 * comp / gflops.get(layer) / 1e3;
+            let d = match layer {
+                Layer::Device => 0.0,
+                l => {
+                    c.lambda1.get(l)
+                        * env.network.unit_latency_ms(l, unit_kb)
+                }
+            };
+            if layer == own {
+                // split the response into the modeled wire time and the
+                // compute-side residual, then scale each by the lane's
+                // own factor
+                let trans =
+                    env.network.transmission_ms(layer, unit_kb);
+                let compute = i + d - trans;
+                compute / speed + trans / link
+            } else {
+                i + d
+            }
+        });
+        responses[slot] = (app, unit_response);
+    }
+    Calibration::fit(responses, env)
+}
+
+/// One analytically-derived [`Calibration`] per dispatch lane (lane
+/// order = `topo.machines()`), from a class-level fit — what the
+/// serving router consumes for per-lane Algorithm-1 routing (see
+/// [`super::Policy`]).  Homogeneous topologies get `base` in every
+/// slot, bit-for-bit.
+pub fn lane_calibrations(
+    env: &Environment,
+    topo: &crate::topology::Topology,
+    base: &Calibration,
+) -> Vec<Calibration> {
+    topo.machines()
+        .into_iter()
+        .map(|m| lane_calibration_from(env, topo, base, m))
+        .collect()
 }
 
 /// Measure per-record host inference cost and fit the class-level
@@ -119,8 +201,9 @@ pub fn live_calibration(
 
 /// One [`Calibration`] per dispatch lane (lane order =
 /// `cfg.topology.machines()`), each fitted with that replica's own
-/// speed-scaled compute — Algorithm 1's per-replica λ1.  The host is
-/// measured once; unit-speed lanes share the class-level fit bit-for-bit.
+/// speed-scaled compute and link-scaled transmission — Algorithm 1's
+/// per-replica λ1.  The host is measured once; unit-factor lanes share
+/// the class-level fit bit-for-bit.
 pub fn live_calibration_per_lane(
     env: &Environment,
     cfg: &ServeConfig,
@@ -234,6 +317,107 @@ mod tests {
                 "{app}: {} vs {want}",
                 i + d
             );
+        }
+    }
+
+    /// Link factors move λ1 the same way speed factors do: a fast-link
+    /// lane shrinks its own layer's λ1 and leaves λ2 (and the other
+    /// layers) untouched.
+    #[test]
+    fn per_replica_lambda1_tracks_the_link_factor() {
+        let env = Environment::paper();
+        let mut cfg = ServeConfig::default();
+        cfg.topology =
+            Topology::with_links(1, 2, None, Some(vec![1.0, 2.0]))
+                .unwrap();
+        let costs = synthetic_costs();
+        let base =
+            fit_lane_calibration(&env, &cfg, &costs, MachineRef::DEVICE);
+        let unit_edge = fit_lane_calibration(
+            &env,
+            &cfg,
+            &costs,
+            MachineRef::edge(0),
+        );
+        let fast_link = fit_lane_calibration(
+            &env,
+            &cfg,
+            &costs,
+            MachineRef::edge(1),
+        );
+        for app in Application::ALL {
+            let b = base.for_app(app);
+            let u = unit_edge.for_app(app);
+            let f = fast_link.for_app(app);
+            // unit-factor lane ≡ class-level fit
+            assert_eq!(b.lambda1, u.lambda1, "{app}");
+            assert_eq!(b.lambda2, u.lambda2, "{app}");
+            // λ2 anchors on the (never-scaled) device measurement
+            assert_eq!(b.lambda2, f.lambda2, "{app}");
+            // the fast-link lane only moves its own layer's λ1, downward
+            assert_eq!(b.lambda1.cloud, f.lambda1.cloud, "{app}");
+            assert!(
+                f.lambda1.edge < b.lambda1.edge,
+                "{app}: {} !< {}",
+                f.lambda1.edge,
+                b.lambda1.edge
+            );
+        }
+    }
+
+    /// The analytic (measurement-free) per-lane derivation agrees with
+    /// the measured fit when the base calibration came from the same
+    /// measurement, and degenerates to the base on unit-factor lanes.
+    #[test]
+    fn analytic_lane_fit_matches_the_measured_fit() {
+        let env = Environment::paper();
+        let mut cfg = ServeConfig::default();
+        cfg.topology = Topology::with_factors(
+            1,
+            2,
+            None,
+            Some(vec![2.0, 1.0]),
+            None,
+            Some(vec![1.0, 0.5]),
+        )
+        .unwrap();
+        let costs = synthetic_costs();
+        // class-level fit = the (unit-factor) device lane's fit
+        let base =
+            fit_lane_calibration(&env, &cfg, &costs, MachineRef::DEVICE);
+        // the measured path quantizes compute at Duration's nanosecond
+        // resolution; the analytic path stays in f64 — allow a few ns
+        // of slack (still 4+ significant digits of agreement)
+        let close = |a: f64, b: f64| {
+            (a - b).abs() <= 1e-4 * a.abs().max(b.abs()).max(1.0)
+        };
+        for m in cfg.topology.machines() {
+            let measured = fit_lane_calibration(&env, &cfg, &costs, m);
+            let analytic =
+                lane_calibration_from(&env, &cfg.topology, &base, m);
+            for app in Application::ALL {
+                let me = measured.for_app(app);
+                let an = analytic.for_app(app);
+                assert!(
+                    close(me.lambda2, an.lambda2),
+                    "{m} {app}: λ2 {} vs {}",
+                    me.lambda2,
+                    an.lambda2
+                );
+                for l in [Layer::Cloud, Layer::Edge] {
+                    assert!(
+                        close(*me.lambda1.get(l), *an.lambda1.get(l)),
+                        "{m} {app} {l:?}: λ1 {} vs {}",
+                        me.lambda1.get(l),
+                        an.lambda1.get(l)
+                    );
+                }
+            }
+        }
+        // homogeneous topology: every lane is the base, bit-for-bit
+        let homo = Topology::new(2, 2);
+        for c in lane_calibrations(&env, &homo, &base) {
+            assert_eq!(c, base);
         }
     }
 

@@ -12,8 +12,10 @@
 //!
 //! * **network** — a request routed to an edge/cloud replica sits in that
 //!   replica's [`DelayQueue`] for the link model's transmission time
-//!   before becoming runnable (constraint C4: transmission overlaps other
-//!   jobs' execution);
+//!   divided by the lane's per-replica link factor ([`Topology::link`]:
+//!   a Wi-Fi gateway waits twice as long as its wired sibling at link
+//!   0.5) before becoming runnable (constraint C4: transmission overlaps
+//!   other jobs' execution);
 //! * **compute** — the measured host inference time is padded by the
 //!   layer's FLOPS ratio ([`crate::device::EmulationProfile`]), divided
 //!   by the lane's per-replica speed factor ([`Topology::speed`]) so a
@@ -49,7 +51,8 @@ mod request;
 
 pub use batcher::{Batcher, Item};
 pub use calibrate::{
-    fit_lane_calibration, live_calibration, live_calibration_per_lane,
+    fit_lane_calibration, lane_calibration_from, lane_calibrations,
+    live_calibration, live_calibration_per_lane,
 };
 pub use delay::DelayQueue;
 pub use engine::{EngineHandle, EngineRequest};
@@ -214,6 +217,8 @@ pub struct LaneReport {
     pub machine: MachineRef,
     /// The replica's configured speed factor (1.0 unless heterogeneous).
     pub speed: f64,
+    /// The replica's configured link factor (1.0 unless heterogeneous).
+    pub link: f64,
     /// Requests completed on this replica.
     pub requests: u64,
     /// Total engine-busy time (batch execution, emulation included —
@@ -258,6 +263,7 @@ impl ServeReport {
                 let mut l = Value::object();
                 l.set("machine", lane.machine.label());
                 l.set("speed", lane.speed);
+                l.set("link", lane.link);
                 l.set("requests", lane.requests);
                 l.set("busy_ms", lane.busy_ms);
                 l.set("utilization", lane.utilization);
@@ -402,6 +408,10 @@ impl Coordinator {
         // --- router -------------------------------------------------------
         let env = self.env.clone();
         let calib = self.calib;
+        // per-lane Algorithm-1 fits, derived analytically from the
+        // class-level calibration (bit-identical to it on homogeneous
+        // topologies) — the end-to-end consumer of the per-lane λ1 model
+        let lane_calibs = lane_calibrations(&self.env, &topo, &calib);
         let cfg_c = cfg.clone();
         let dq_router: Vec<Arc<DelayQueue<Item>>> = delay_queues.clone();
         let backlog_r = backlog.clone();
@@ -425,6 +435,7 @@ impl Coordinator {
                         req.size_units,
                         &env,
                         &calib,
+                        &lane_calibs,
                         &topo_r,
                         &snapshot,
                         &mut rr,
@@ -438,12 +449,15 @@ impl Coordinator {
                     let payload_kb = req.app.data_kb(req.size_units)
                         / req.size_units.max(1) as f64;
                     let u = net_rng.uniform();
+                    // the class path's (jittered) wire time, scaled by
+                    // this replica's own link factor — the serving-path
+                    // mirror of Topology::scaled_transmission
                     let trans_ms = transmission_with_jitter(
                         &env,
                         machine.layer(),
                         payload_kb,
                         u,
-                    );
+                    ) / topo_r.link(machine);
                     let t = Duration::from_secs_f64(
                         trans_ms / 1e3 * cfg_c.time_scale,
                     );
@@ -504,6 +518,7 @@ impl Coordinator {
                 LaneReport {
                     machine,
                     speed: topo.speed(machine),
+                    link: topo.link(machine),
                     requests: lane_requests[li],
                     busy_ms,
                     utilization: if wall_ms > 0.0 {

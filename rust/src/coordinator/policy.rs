@@ -3,20 +3,31 @@
 //! A policy maps each incoming request to a concrete [`MachineRef`] in
 //! the configured [`Topology`].  Class selection follows the paper
 //! (Algorithm 1 / fixed layers); replica selection within a class picks
-//! the best *speed-adjusted finish time*: the router passes the per-lane
-//! backlog (queued + in-flight requests, indexed by
+//! the best *speed-and-link-adjusted finish time*: the router passes the
+//! per-lane backlog (queued + in-flight requests, indexed by
 //! [`Topology::lane_index`]) and each candidate is scored
-//! `(backlog + 1) / speed` — the queue it would join, in units of that
-//! replica's service rate — so a 2× box with three waiters beats a 1×
-//! box with two.  Ties go to the lowest replica; with unit speed factors
-//! the score is a monotone transform of raw backlog, so homogeneous
-//! topologies reproduce the old per-layer behavior exactly.
+//! `(backlog + 1) / (speed · link)` — the queue it would join, in units
+//! of that replica's effective service rate (every waiting request costs
+//! both compute, which scales with `speed`, and transmission, which
+//! scales with `link`) — so a 2× box with three waiters beats a 1× box
+//! with two.  Ties go to the lowest replica; with unit factors the score
+//! is a monotone transform of raw backlog, so homogeneous topologies
+//! reproduce the old per-layer behavior exactly.
+//!
+//! [`Policy::AlgorithmOne`]'s *layer* choice consumes the per-lane
+//! calibrations ([`super::live_calibration_per_lane`] /
+//! [`super::lane_calibrations`]) end-to-end: each class's candidate
+//! replica is scored by its own lane's fitted λ coefficients, so a fast
+//! (or well-connected) edge lane attracts borderline workloads the
+//! class-level fit would have sent to the device or cloud.  With an
+//! empty `lane_calibs` slice every candidate falls back to the
+//! class-level `calib`, reproducing the pre-per-lane routing exactly.
 //!
 //! Replica selection is infallible: [`Topology::validate`] guarantees at
 //! least one replica of every class (see the invariant documented on
 //! [`Topology`]), so the loops below always have a first candidate.
 
-use crate::allocation::{allocate_single, Calibration};
+use crate::allocation::{estimate_single, Calibration};
 use crate::config::Environment;
 use crate::topology::{MachineId, MachineRef, Topology};
 use crate::workload::{Application, Workload};
@@ -26,7 +37,9 @@ use crate::workload::{Application, Workload};
 pub enum Policy {
     /// The paper's Algorithm 1: per-request argmin of estimated response
     /// time (the workload's size decides — heavy models go up, light
-    /// models stay down); least-backlogged replica of the chosen class.
+    /// models stay down), evaluated with each candidate lane's *own*
+    /// fitted calibration when per-lane fits are supplied; best
+    /// finish-scored replica of the winning class.
     AlgorithmOne,
     /// Everything to the cloud pool (the classic pre-edge deployment).
     FixedCloud,
@@ -36,9 +49,9 @@ pub enum Policy {
     FixedDevice,
     /// Round-robin across all machines (load-spreading strawman).
     RoundRobin,
-    /// The machine with the best speed-adjusted finish time overall,
-    /// ignoring cost estimates — the queue-depth-only strawman that
-    /// shows why Algorithm 1's estimates matter.
+    /// The machine with the best speed-and-link-adjusted finish time
+    /// overall, ignoring cost estimates — the queue-depth-only strawman
+    /// that shows why Algorithm 1's estimates matter.
     LeastLoaded,
 }
 
@@ -53,27 +66,52 @@ impl Policy {
     ];
 
     /// Route one request.  `backlog` is the per-lane outstanding-request
-    /// count (see [`Topology::lane_index`]); `rr_state` is the router's
-    /// round-robin counter.
+    /// count (see [`Topology::lane_index`]); `lane_calibs` holds one
+    /// fitted [`Calibration`] per dispatch lane (lane order; empty =
+    /// class-level routing with `calib` everywhere); `rr_state` is the
+    /// router's round-robin counter.
+    #[allow(clippy::too_many_arguments)]
     pub fn route(
         self,
         app: Application,
         size_units: u32,
         env: &Environment,
         calib: &Calibration,
+        lane_calibs: &[Calibration],
         topo: &Topology,
         backlog: &[u64],
         rr_state: &mut usize,
     ) -> MachineRef {
         match self {
             Policy::AlgorithmOne => {
-                let layer = allocate_single(
-                    &Workload::new(app, size_units),
-                    env,
-                    calib,
-                )
-                .chosen;
-                best_replica(topo, MachineId::from_layer(layer), backlog)
+                // Algorithm 1 over concrete lanes: per class, the
+                // candidate replica with the best finish score; across
+                // classes, the candidate whose *own lane's* fit
+                // estimates the lowest response (falling back to the
+                // class-level fit when no per-lane fits are supplied —
+                // bit-identical to the paper's per-layer argmin there).
+                let wl = Workload::new(app, size_units);
+                // the class-level estimate is computed once; only a
+                // lane whose fit actually differs (unit-factor lanes
+                // are the base bit-for-bit) re-estimates, so the
+                // homogeneous hot path does the same work as before
+                let base_total = estimate_single(&wl, env, calib).total();
+                let mut best: Option<(MachineRef, f64)> = None;
+                for class in MachineId::ALL {
+                    let m = best_replica(topo, class, backlog);
+                    let t = match lane_calibs.get(topo.lane_index(m)) {
+                        Some(c) if c != calib => {
+                            *estimate_single(&wl, env, c)
+                                .total()
+                                .get(class.layer())
+                        }
+                        _ => *base_total.get(class.layer()),
+                    };
+                    if best.map_or(true, |(_, bt)| t < bt) {
+                        best = Some((m, t));
+                    }
+                }
+                best.expect("every class has a replica").0
             }
             Policy::FixedCloud => {
                 best_replica(topo, MachineId::Cloud, backlog)
@@ -120,18 +158,23 @@ fn backlog_of(topo: &Topology, m: MachineRef, backlog: &[u64]) -> u64 {
     backlog.get(topo.lane_index(m)).copied().unwrap_or(0)
 }
 
-/// Speed-adjusted finish-time estimate of joining `m`'s queue: the
-/// requests it would wait behind (plus itself) in units of the replica's
-/// service rate.  Speeds are validated finite and positive, so the score
-/// is never NaN and `<` is a total order over candidates.
+/// Speed-and-link-adjusted finish-time estimate of joining `m`'s queue:
+/// the requests it would wait behind (plus itself) in units of the
+/// replica's effective service rate — `speed · link`, since each queued
+/// request costs both compute (÷ speed) and transmission (÷ link).  At
+/// unit links this is exactly the PR-4 speed-adjusted score.  Factors
+/// are validated finite and positive, so the score is never NaN and `<`
+/// is a total order over candidates.
 fn finish_score(topo: &Topology, m: MachineRef, backlog: &[u64]) -> f64 {
-    (backlog_of(topo, m, backlog) + 1) as f64 / topo.speed(m)
+    (backlog_of(topo, m, backlog) + 1) as f64
+        / (topo.speed(m) * topo.link(m))
 }
 
-/// The replica of `class` with the best speed-adjusted finish time; ties
-/// go to the lowest replica index (so an idle homogeneous pool
-/// degenerates to replica 0, the paper's single machine).  Infallible:
-/// the validated [`Topology`] guarantees every class has a replica 0.
+/// The replica of `class` with the best speed-and-link-adjusted finish
+/// time; ties go to the lowest replica index (so an idle homogeneous
+/// pool degenerates to replica 0, the paper's single machine).
+/// Infallible: the validated [`Topology`] guarantees every class has a
+/// replica 0.
 fn best_replica(
     topo: &Topology,
     class: MachineId,
@@ -182,7 +225,7 @@ mod tests {
         let env = Environment::paper();
         let calib = Calibration::paper();
         let backlog = vec![0u64; topo.lane_count()];
-        policy.route(app, 64, &env, &calib, topo, &backlog, rr)
+        policy.route(app, 64, &env, &calib, &[], topo, &backlog, rr)
     }
 
     #[test]
@@ -230,6 +273,7 @@ mod tests {
             64,
             &env,
             &calib,
+            &[],
             &topo,
             &backlog,
             &mut rr,
@@ -242,6 +286,7 @@ mod tests {
             64,
             &env,
             &calib,
+            &[],
             &topo,
             &idle,
             &mut rr,
@@ -272,6 +317,7 @@ mod tests {
                 64,
                 &env,
                 &calib,
+                &[],
                 &topo,
                 backlog,
                 rr,
@@ -297,12 +343,119 @@ mod tests {
             64,
             &env,
             &calib,
+            &[],
             &topo,
             &[2, 1, 1],
             &mut rr,
         );
         // scores: CC0 (2+1)/4 = 0.75, ES0 (1+1)/1 = 2, ED 2
         assert_eq!(m, MachineRef::cloud(0));
+    }
+
+    /// ISSUE 5 satellite: on a big.LITTLE edge room the class-level
+    /// calibration and the per-lane fits must *disagree* about a
+    /// borderline workload, and Algorithm 1 must follow the per-lane
+    /// fits end-to-end.  Mortality's Table V row picks the device at the
+    /// class level (79 < 109 < 212), but the big edge box — ×4 compute
+    /// and ×4 uplink — serves the whole unit response at 109/4 = 27.25,
+    /// so its own fit wins the workload for the edge lane.
+    #[test]
+    fn algorithm1_per_lane_fits_steer_borderline_workloads() {
+        use crate::coordinator::lane_calibrations;
+        let env = Environment::paper();
+        let calib = Calibration::paper();
+        let topo = Topology::with_factors(
+            1,
+            2,
+            None,
+            Some(vec![4.0, 1.0]),
+            None,
+            Some(vec![4.0, 1.0]),
+        )
+        .unwrap();
+        let lane_calibs = lane_calibrations(&env, &topo, &calib);
+        assert_eq!(lane_calibs.len(), topo.lane_count());
+        let backlog = vec![0u64; topo.lane_count()];
+        let mut rr = 0;
+        // class-level routing (no per-lane fits): Table V's device row
+        let class_level = Policy::AlgorithmOne.route(
+            Application::Mortality,
+            64,
+            &env,
+            &calib,
+            &[],
+            &topo,
+            &backlog,
+            &mut rr,
+        );
+        assert_eq!(class_level.layer(), Layer::Device);
+        // per-lane routing: the big box's own fit attracts the workload
+        let per_lane = Policy::AlgorithmOne.route(
+            Application::Mortality,
+            64,
+            &env,
+            &calib,
+            &lane_calibs,
+            &topo,
+            &backlog,
+            &mut rr,
+        );
+        assert_eq!(per_lane, MachineRef::edge(0));
+        // a class-level-edge workload stays on the edge under per-lane
+        // fits (they only sharpen, never scramble, the clear cases)
+        let clear = Policy::AlgorithmOne.route(
+            Application::Breath,
+            64,
+            &env,
+            &calib,
+            &lane_calibs,
+            &topo,
+            &backlog,
+            &mut rr,
+        );
+        assert_eq!(clear.layer(), Layer::Edge);
+    }
+
+    #[test]
+    fn algorithm1_replica_choice_is_link_adjusted() {
+        // lanes: [CC0, ES0, ES1, ED]; ES1 rides a 2x uplink, so with
+        // equal backlog it wins the edge class even though ES0 is the
+        // canonical tie-break at unit factors
+        let topo = Topology::with_links(
+            1,
+            2,
+            None,
+            Some(vec![1.0, 2.0]),
+        )
+        .unwrap();
+        let env = Environment::paper();
+        let calib = Calibration::paper();
+        let mut rr = 0;
+        let backlog = vec![0, 1, 1, 0];
+        let m = Policy::AlgorithmOne.route(
+            Application::Breath,
+            64,
+            &env,
+            &calib,
+            &[],
+            &topo,
+            &backlog,
+            &mut rr,
+        );
+        assert_eq!(m, MachineRef::edge(1));
+        // at unit links the canonical lowest-replica tie-break holds
+        let unit = Topology::new(1, 2);
+        let m = Policy::AlgorithmOne.route(
+            Application::Breath,
+            64,
+            &env,
+            &calib,
+            &[],
+            &unit,
+            &backlog,
+            &mut rr,
+        );
+        assert_eq!(m, MachineRef::edge(0));
     }
 
     #[test]
@@ -346,6 +499,7 @@ mod tests {
             64,
             &env,
             &calib,
+            &[],
             &topo,
             &backlog,
             &mut rr,
@@ -358,6 +512,7 @@ mod tests {
             64,
             &env,
             &calib,
+            &[],
             &topo,
             &flat,
             &mut rr,

@@ -442,18 +442,25 @@ fn run() -> edgeward::Result<()> {
             }
             if clouds.is_some() || edges.is_some() {
                 // a changed count invalidates that class's configured
-                // per-replica speed vector (reset to unit speeds); the
-                // untouched class keeps its configured speeds
+                // per-replica speed/link vectors (reset to unit
+                // factors); the untouched class keeps its configured
+                // factors
                 let t = &serve_cfg.topology;
                 let cloud_speeds =
                     clouds.is_none().then(|| t.cloud_speeds());
                 let edge_speeds =
                     edges.is_none().then(|| t.edge_speeds());
-                serve_cfg.topology = Topology::with_speeds(
+                let cloud_links =
+                    clouds.is_none().then(|| t.cloud_links());
+                let edge_links =
+                    edges.is_none().then(|| t.edge_links());
+                serve_cfg.topology = Topology::with_factors(
                     clouds.unwrap_or(t.clouds),
                     edges.unwrap_or(t.edges),
                     cloud_speeds,
                     edge_speeds,
+                    cloud_links,
+                    edge_links,
                 )?;
             }
             let coord = Coordinator::new(
@@ -474,17 +481,26 @@ fn run() -> edgeward::Result<()> {
                     report.routed[0], report.routed[1], report.routed[2]
                 );
                 for lane in &report.lanes {
+                    let mut factors = String::new();
+                    if lane.speed != 1.0 {
+                        factors.push_str(&format!(
+                            " (×{} speed)",
+                            lane.speed
+                        ));
+                    }
+                    if lane.link != 1.0 {
+                        factors.push_str(&format!(
+                            " (×{} link)",
+                            lane.link
+                        ));
+                    }
                     println!(
                         "  lane {:4}: n={:<4} busy={:.1}ms util={:.1}%{}",
                         lane.machine.label(),
                         lane.requests,
                         lane.busy_ms,
                         lane.utilization * 100.0,
-                        if lane.speed != 1.0 {
-                            format!(" (×{} speed)", lane.speed)
-                        } else {
-                            String::new()
-                        },
+                        factors,
                     );
                 }
                 println!(
@@ -641,17 +657,19 @@ fn override_scenario(
         },
     };
     // no count flags: keep the base topology verbatim.  A changed count
-    // resets that class's per-replica speed vector to unit speeds; the
-    // untouched class keeps its configured speeds.
+    // resets that class's per-replica speed/link vectors to unit
+    // factors; the untouched class keeps its configured factors.
     let topology = if clouds.is_none() && edges.is_none() {
         base.topology.clone()
     } else {
         let t = &base.topology;
-        Topology::with_speeds(
+        Topology::with_factors(
             clouds.unwrap_or(t.clouds),
             edges.unwrap_or(t.edges),
             clouds.is_none().then(|| t.cloud_speeds()),
             edges.is_none().then(|| t.edge_speeds()),
+            clouds.is_none().then(|| t.cloud_links()),
+            edges.is_none().then(|| t.edge_links()),
         )?
     };
     let mut b = Scenario::builder()

@@ -12,6 +12,13 @@
 //! Transmission time of `s` bytes over a link is `latency + s/bandwidth`.
 //! Deploying on the end device incurs zero transmission (assumption (a):
 //! data originates there).
+//!
+//! These are *class-level* path models.  Per-replica heterogeneity — a
+//! gateway on Wi-Fi vs its wired sibling — is expressed one level up as
+//! a link factor on the [`crate::topology::Topology`]
+//! ([`crate::topology::Topology::scaled_transmission`] for the
+//! scheduler's integer ticks; the serving coordinator divides this
+//! module's wire time by the same factor).
 
 mod link;
 

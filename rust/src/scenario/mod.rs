@@ -557,6 +557,77 @@ edge_speeds = [1.5, 0.0]
     }
 
     #[test]
+    fn toml_link_topology_roundtrip() {
+        let text = "\
+[scenario]
+name = \"wifi-wired\"
+arrival = \"poisson-ward\"
+jobs = 6
+rate = 0.4
+seed = 3
+
+[scenario.topology]
+clouds = 1
+edges = 2
+edge_links = [0.5, 1.0]
+";
+        let s = Scenario::from_toml(text).unwrap();
+        assert_eq!(
+            s.topology,
+            Topology::with_links(1, 2, None, Some(vec![0.5, 1.0]))
+                .unwrap()
+        );
+        assert_eq!(
+            s.topology.link(crate::topology::MachineRef::edge(0)),
+            0.5
+        );
+        assert_eq!(
+            s.topology.speed(crate::topology::MachineRef::edge(0)),
+            1.0
+        );
+        // spec serialization re-parses to the same scenario, links
+        // included
+        let mut root = Value::object();
+        root.set("scenario", s.to_value());
+        let text2 = crate::serialize::toml::emit(&root);
+        let back = Scenario::from_toml(&text2).unwrap();
+        assert_eq!(back, s, "emitted:\n{text2}");
+        // both axes at once round-trip too
+        let both = Scenario::builder()
+            .topology(
+                Topology::with_factors(
+                    2,
+                    1,
+                    Some(vec![2.0, 1.0]),
+                    None,
+                    Some(vec![0.5, 2.0]),
+                    None,
+                )
+                .unwrap(),
+            )
+            .build()
+            .unwrap();
+        let mut root = Value::object();
+        root.set("scenario", both.to_value());
+        let back2 =
+            Scenario::from_toml(&crate::serialize::toml::emit(&root))
+                .unwrap();
+        assert_eq!(back2.topology, both.topology);
+        // invalid link vectors are typed topology errors
+        let bad = "\
+[scenario]
+
+[scenario.topology]
+edges = 2
+edge_links = [1.5, 0.0]
+";
+        assert!(matches!(
+            Scenario::from_toml(bad),
+            Err(Error::InvalidTopology { .. })
+        ));
+    }
+
+    #[test]
     fn toml_diurnal_ward_roundtrip() {
         let text = "\
 [scenario]

@@ -174,10 +174,11 @@ impl Objective {
     /// `k..`, each at its machine-minimal uncontended execution time —
     /// the eq.-6 bound generalized per objective.  The minimum ranges
     /// over the topology's concrete replicas (per-replica speed-scaled
-    /// processing + per-class transmission): with unit speed factors it
-    /// degenerates to the class-level bound, but a faster replica can
-    /// undercut every class-level time, so topology-independence would
-    /// make the branch-and-bound pruning unsound.
+    /// processing + per-replica link-scaled transmission): with unit
+    /// factors it degenerates to the class-level bound, but a faster
+    /// replica — or one on a faster link — can undercut every
+    /// class-level time, so topology-independence would make the
+    /// branch-and-bound pruning unsound.
     pub fn suffix_bounds(
         &self,
         jobs: &[Job],
@@ -190,11 +191,13 @@ impl Objective {
             let best = machines
                 .iter()
                 .map(|&m| {
-                    j.transmission(m.class)
-                        + topo.scaled_processing(
-                            j.processing(m.class),
-                            m,
-                        )
+                    topo.scaled_transmission(
+                        j.transmission(m.class),
+                        m,
+                    ) + topo.scaled_processing(
+                        j.processing(m.class),
+                        m,
+                    )
                 })
                 .min()
                 .unwrap_or(0);
@@ -296,6 +299,18 @@ mod tests {
             Topology::paper(),
             // a fast replica shrinks the bound but must keep it sound
             Topology::heterogeneous(vec![1.0], vec![2.0, 0.5]).unwrap(),
+            // ...and so does a fast (or Wi-Fi-slow) link
+            Topology::with_links(1, 2, None, Some(vec![2.0, 0.5]))
+                .unwrap(),
+            Topology::with_factors(
+                2,
+                1,
+                Some(vec![2.0, 1.0]),
+                None,
+                Some(vec![0.5, 2.0]),
+                None,
+            )
+            .unwrap(),
         ] {
             for obj in [
                 Objective::WeightedSum,

@@ -59,11 +59,12 @@ impl Strategy {
     /// optimizer; prefer solving through the [`crate::scenario`] registry
     /// via [`Strategy::solver_key`]).  Fixed-class strategies cycle over
     /// the class's *concrete replicas* in index order — deliberately
-    /// speed-oblivious round-robin, so on a heterogeneous topology they
-    /// stay the naive baselines the optimizing solvers are measured
-    /// against (the simulator still charges each replica its own
-    /// speed-scaled processing time).  The cycle degenerates to the
-    /// single machine in the paper topology.
+    /// speed- and link-oblivious round-robin, so on a heterogeneous
+    /// topology they stay the naive baselines the optimizing solvers are
+    /// measured against (the simulator still charges each replica its
+    /// own speed-scaled processing and link-scaled transmission time).
+    /// The cycle degenerates to the single machine in the paper
+    /// topology.
     pub fn assignment(self, jobs: &[Job], topo: &Topology) -> Assignment {
         let fixed = |class: MachineId| -> Assignment {
             (0..jobs.len()).map(|i| topo.spread(class, i)).collect()
@@ -251,6 +252,26 @@ mod tests {
         assert!(slow.weighted_sum > unit.weighted_sum);
         // ...while the optimizing solver routes around the slow box and
         // beats the baseline by more than it does at unit speeds
+        let ours = eval(&jobs, &topo, Strategy::Ours);
+        assert!(ours.weighted_sum <= slow.weighted_sum);
+    }
+
+    #[test]
+    fn fixed_class_baseline_pays_for_a_wifi_link() {
+        // all-edge round-robins onto both replicas; putting one on a
+        // half-rate Wi-Fi link must cost the link-oblivious baseline
+        let jobs = paper_jobs();
+        let unit = eval(&jobs, &Topology::new(1, 2), Strategy::AllEdge);
+        let topo = Topology::with_links(
+            1,
+            2,
+            None,
+            Some(vec![1.0, 0.5]),
+        )
+        .unwrap();
+        let slow = eval(&jobs, &topo, Strategy::AllEdge);
+        assert!(slow.weighted_sum > unit.weighted_sum);
+        // ...while the optimizing solver routes around the Wi-Fi box
         let ours = eval(&jobs, &topo, Strategy::Ours);
         assert!(ours.weighted_sum <= slow.weighted_sum);
     }

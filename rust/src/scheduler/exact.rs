@@ -60,9 +60,9 @@ pub fn schedule_exact_objective(
 
     // Per-objective uncontended suffix bound: the value contribution of
     // jobs k..n each at its machine-minimal execution time.  The minimum
-    // ranges over *concrete replicas* (a fast replica can beat every
-    // class-level time), so the bound stays sound on heterogeneous
-    // topologies.
+    // ranges over *concrete replicas* (a fast replica — or one on a
+    // fast link — can beat every class-level time), so the bound stays
+    // sound on heterogeneous topologies.
     let suffix_lb = objective.suffix_bounds(jobs, topo);
 
     fn dfs(
@@ -253,6 +253,26 @@ mod tests {
             &Topology::heterogeneous(vec![1.0], vec![1.0, 2.0])
                 .unwrap(),
         );
+        assert!(ours.weighted_sum >= fast.weighted_sum);
+    }
+
+    #[test]
+    fn exact_with_faster_link_never_worse() {
+        // the optimum is monotone in a replica's link factor: scaling
+        // one replica's link up only shrinks its transmission times
+        let jobs: Vec<Job> = paper_jobs().into_iter().take(7).collect();
+        let unit = exact(&jobs, &Topology::new(1, 2));
+        let topo = Topology::with_links(
+            1,
+            2,
+            None,
+            Some(vec![1.0, 2.0]),
+        )
+        .unwrap();
+        let fast = exact(&jobs, &topo);
+        assert!(fast.weighted_sum <= unit.weighted_sum);
+        // ...and the heuristic still never beats the link-aware optimum
+        let ours = tabu(&jobs, &topo);
         assert!(ours.weighted_sum >= fast.weighted_sum);
     }
 

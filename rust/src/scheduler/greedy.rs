@@ -6,9 +6,10 @@
 //! release order (priority-first within a tie, per C5), and each is
 //! committed to the machine on which it would finish earliest given the
 //! commitments made so far.  Candidate completions are evaluated per
-//! concrete replica (each with its own speed-scaled processing time), so
-//! on a heterogeneous topology the greedy stage naturally prefers a fast
-//! replica over its slower siblings.  Ties go to the earliest machine in
+//! concrete replica (each with its own speed-scaled processing time and
+//! link-scaled transmission time), so on a heterogeneous topology the
+//! greedy stage naturally prefers a fast replica — or a well-connected
+//! one — over its slower siblings.  Ties go to the earliest machine in
 //! canonical order (cloud replicas, then edge replicas, then the device —
 //! the paper's machine order, preserved from the pre-topology scheduler).
 
@@ -35,7 +36,8 @@ pub fn greedy_assignment(jobs: &[Job], topo: &Topology) -> Assignment {
         // (canonical order = cloud-first, the paper's tie-break)
         let mut best = None;
         for &m in &machines {
-            let avail = j.release + j.transmission(m.class);
+            let avail = j.release
+                + topo.scaled_transmission(j.transmission(m.class), m);
             let p = topo.scaled_processing(j.processing(m.class), m);
             let end = match topo.shared_index(m) {
                 Some(s) => timelines[s].peek(avail, p).1,
@@ -49,7 +51,9 @@ pub fn greedy_assignment(jobs: &[Job], topo: &Topology) -> Assignment {
         assignment[i] = m;
         if let Some(s) = topo.shared_index(m) {
             timelines[s].schedule(
-                j.release + j.transmission(m.class),
+                j.release
+                    + topo
+                        .scaled_transmission(j.transmission(m.class), m),
                 topo.scaled_processing(j.processing(m.class), m),
             );
         }
@@ -130,6 +134,27 @@ mod tests {
         let a = greedy_assignment(&jobs, &topo);
         assert_eq!(a[0], MachineRef::edge(1));
         // at unit speeds the canonical tie-break (replica 0) is preserved
+        let unit = Topology::new(1, 2);
+        let b = greedy_assignment(&jobs, &unit);
+        assert_eq!(b[0], MachineRef::edge(0));
+    }
+
+    #[test]
+    fn greedy_prefers_the_well_connected_replica_when_idle() {
+        // with a 2x link on Edge:1 and everything idle, an edge-optimal
+        // job's data arrives sooner there, so it must win over the
+        // canonical-first Edge:0
+        let jobs = vec![paper_jobs()[2]]; // J3 is edge-optimal
+        let topo = Topology::with_links(
+            1,
+            2,
+            None,
+            Some(vec![1.0, 2.0]),
+        )
+        .unwrap();
+        let a = greedy_assignment(&jobs, &topo);
+        assert_eq!(a[0], MachineRef::edge(1));
+        // at unit links the canonical tie-break (replica 0) is preserved
         let unit = Topology::new(1, 2);
         let b = greedy_assignment(&jobs, &unit);
         assert_eq!(b[0], MachineRef::edge(0));

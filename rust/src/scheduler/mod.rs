@@ -2,14 +2,15 @@
 //!
 //! The ICU room is an unrelated-parallel-machine system described by a
 //! [`Topology`]: `clouds` shared cloud servers, `edges` shared edge
-//! servers — each replica with its own speed factor — and a private end
-//! device per patient.  Jobs arrive in a time sequence with priorities;
+//! servers — each replica with its own speed factor (compute) and link
+//! factor (network) — and a private end device per patient.  Jobs arrive
+//! in a time sequence with priorities;
 //! the objective is the priority-weighted whole response time
 //! `Σ wᵢ(Eᵢ − Rᵢ)` (eq. 5) under constraints C1–C5.
 //! [`Topology::paper`] is the paper's degenerate 1-cloud + 1-edge setup
 //! (assumption (d)) and reproduces its Table VII numbers bit-for-bit;
 //! every core below accepts arbitrary replica counts and per-replica
-//! speeds (machines are truly *unrelated*, per §V).
+//! speed/link factors (machines are truly *unrelated*, per §V).
 //!
 //! * [`simulate`] — list-scheduling simulator for a fixed assignment
 //!   (transmission overlaps other jobs' execution per C4; shared machines
@@ -146,8 +147,8 @@ pub fn lower_bound(jobs: &[Job]) -> Tick {
 }
 
 /// [`lower_bound`] generalized to a concrete [`Topology`]: the per-job
-/// minimum ranges over replicas (speed-scaled processing + per-class
-/// transmission).  Identical to [`lower_bound`] at unit speed factors.
+/// minimum ranges over replicas (speed-scaled processing + link-scaled
+/// transmission).  Identical to [`lower_bound`] at unit factors.
 /// Delegates to the replica-aware eq.-6 bound the exact solver prunes
 /// with ([`crate::scenario::Objective::suffix_bounds`]) so there is one
 /// implementation of the bound.

@@ -10,8 +10,9 @@
 //! (§V–VI) and the serving coordinator.  With multiple replicas it is
 //! exactly the "best speed-adjusted finish time" rule the serving router
 //! applies: each candidate replica is scored with its own speed-scaled
-//! processing time, so a fast box attracts work even when its queue is
-//! no shorter.
+//! processing time and link-scaled transmission time, so a fast box — or
+//! a well-connected one — attracts work even when its queue is no
+//! shorter.
 //!
 //! The competitive gap against offline Algorithm 2 and the exact optimum
 //! is measured in `rust/benches/sched_multi.rs` and the tests below.
@@ -59,7 +60,9 @@ pub fn schedule_online_objective(
         let (m, _) = machines
             .iter()
             .map(|&m| {
-                let avail = j.release + j.transmission(m.class);
+                let avail = j.release
+                    + topo
+                        .scaled_transmission(j.transmission(m.class), m);
                 let p =
                     topo.scaled_processing(j.processing(m.class), m);
                 let end = match topo.shared_index(m) {
@@ -73,7 +76,9 @@ pub fn schedule_online_objective(
         assignment[i] = m;
         if let Some(s) = topo.shared_index(m) {
             timelines[s].schedule(
-                j.release + j.transmission(m.class),
+                j.release
+                    + topo
+                        .scaled_transmission(j.transmission(m.class), m),
                 topo.scaled_processing(j.processing(m.class), m),
             );
         }
@@ -209,6 +214,37 @@ mod tests {
         }];
         let topo =
             Topology::heterogeneous(vec![1.0], vec![1.0, 2.0]).unwrap();
+        let s = schedule_online_objective(
+            &jobs,
+            &topo,
+            &Objective::WeightedSum,
+        );
+        assert_eq!(
+            s.assignment[0],
+            crate::topology::MachineRef::edge(1)
+        );
+    }
+
+    #[test]
+    fn online_routes_to_the_well_connected_replica_first() {
+        // an idle Edge:1 on a 4x link receives the payload sooner than
+        // the canonical Edge:0, so the dispatcher must pick it
+        let jobs = vec![Job {
+            release: 1,
+            weight: 1,
+            proc_cloud: 50,
+            trans_cloud: 50,
+            proc_edge: 10,
+            trans_edge: 8,
+            proc_device: 100,
+        }];
+        let topo = Topology::with_links(
+            1,
+            2,
+            None,
+            Some(vec![1.0, 4.0]),
+        )
+        .unwrap();
         let s = schedule_online_objective(
             &jobs,
             &topo,

@@ -6,12 +6,14 @@
 //!
 //! * data transmission starts at release and overlaps other jobs'
 //!   execution on the target machine (C4) — a job becomes *available* at
-//!   `release + transmission`; transmission cost is per *class* (the
-//!   network path is shared by the class);
-//! * processing cost is per *replica*: the class-level `I_i` is scaled by
-//!   the assigned replica's speed factor
-//!   ([`Topology::scaled_processing`]), which is the identity at the
-//!   default factor 1.0 — homogeneous topologies stay bit-for-bit
+//!   `release + transmission`, where the class-level transmission `D_i`
+//!   is scaled by the assigned replica's link factor
+//!   ([`Topology::scaled_transmission`]: a gateway on Wi-Fi receives
+//!   later than its wired sibling);
+//! * processing cost is per *replica* too: the class-level `I_i` is
+//!   scaled by the assigned replica's speed factor
+//!   ([`Topology::scaled_processing`]).  Both scalings are the identity
+//!   at the default factor 1.0 — homogeneous topologies stay bit-for-bit
 //!   identical to the per-class model;
 //! * every shared replica (cloud, edge) executes one job at a time without
 //!   preemption (C1, C2), serving in FCFS order of availability (ties:
@@ -50,18 +52,19 @@ fn fold_completions(
     mut f: impl FnMut(usize, &Job, u64),
 ) {
     debug_assert_eq!(jobs.len(), assignment.len());
+    // per-replica link scaling without allocating: like the speed, the
+    // link factor lives in the Topology, indexed like `free`
+    let avail_of = |i: usize| {
+        let m = assignment[i];
+        jobs[i].release
+            + topo.scaled_transmission(jobs[i].transmission(m.class), m)
+    };
     let order = &mut scratch.order;
     order.clear();
     order.extend(0..jobs.len());
     // (a carried nearly-sorted order was tried and reverted: no stable
     // win over a fresh sort at these n — see EXPERIMENTS.md §Perf)
-    order.sort_unstable_by_key(|&i| {
-        (
-            jobs[i].release + jobs[i].transmission(assignment[i].class),
-            jobs[i].release,
-            i,
-        )
-    });
+    order.sort_unstable_by_key(|&i| (avail_of(i), jobs[i].release, i));
 
     let free = &mut scratch.free;
     free.clear();
@@ -73,11 +76,11 @@ fn fold_completions(
             topo.contains(m),
             "job {i} assigned to {m:?}, outside topology {topo:?}"
         );
-        let avail = j.release + j.transmission(m.class);
+        let avail = j.release
+            + topo.scaled_transmission(j.transmission(m.class), m);
         let end = match topo.shared_index(m) {
             Some(s) => {
-                // per-replica speed scaling without allocating: the
-                // speed lives in the Topology, indexed like `free`
+                // per-replica speed scaling, same indexing as `free`
                 let p = crate::topology::scale_ticks(
                     j.processing(m.class),
                     topo.shared_speed(s),
@@ -155,10 +158,13 @@ pub fn simulate(
         );
     }
 
-    // availability time per job on its assigned machine
+    // availability time per job on its assigned machine (link-scaled
+    // transmission per replica)
     let mut order: Vec<usize> = (0..jobs.len()).collect();
     let avail = |i: usize| {
-        jobs[i].release + jobs[i].transmission(assignment[i].class)
+        let m = assignment[i];
+        jobs[i].release
+            + topo.scaled_transmission(jobs[i].transmission(m.class), m)
     };
     // FCFS by availability; ties by release then index
     order.sort_by_key(|&i| (avail(i), jobs[i].release, i));
@@ -452,6 +458,101 @@ mod tests {
         let machines = topo.machines();
         for seed in 0..60 {
             let mut rng = Rng::new(seed ^ 0xFA57);
+            let jobs = paper_jobs();
+            let assignment: Assignment = (0..jobs.len())
+                .map(|_| {
+                    machines[rng.below(machines.len() as u64) as usize]
+                })
+                .collect();
+            let full = simulate(&jobs, &topo, &assignment).weighted_sum;
+            let fast =
+                weighted_cost(&jobs, &topo, &assignment, &mut scratch);
+            assert_eq!(full, fast, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn link_factors_make_replicas_unrelated() {
+        // a 2x-link edge replica receives data sooner than its 1x twin;
+        // a Wi-Fi (half-rate) replica receives later
+        let jobs = paper_jobs();
+        let topo = Topology::with_links(
+            1,
+            3,
+            None,
+            Some(vec![2.0, 1.0, 0.5]),
+        )
+        .unwrap();
+        let fast =
+            simulate(&jobs, &topo, &all_on(MachineRef::edge(0), 10));
+        let unit =
+            simulate(&jobs, &topo, &all_on(MachineRef::edge(1), 10));
+        let slow =
+            simulate(&jobs, &topo, &all_on(MachineRef::edge(2), 10));
+        assert!(fast.weighted_sum <= unit.weighted_sum);
+        assert!(unit.weighted_sum < slow.weighted_sum);
+        // the unit replica reproduces the class-level Table VII row
+        assert_eq!(unit.unweighted_sum(), 291);
+        // every job on the Wi-Fi replica becomes available no earlier
+        for u in &unit.trace.entries {
+            let s = slow
+                .trace
+                .entries
+                .iter()
+                .find(|e| e.job == u.job)
+                .unwrap();
+            assert!(s.available >= u.available, "job {}", u.job);
+        }
+    }
+
+    #[test]
+    fn explicit_unit_links_are_bit_for_bit() {
+        use crate::data::Rng;
+        // an all-1.0 link vector is indistinguishable from no vector
+        let jobs = paper_jobs();
+        let homo = Topology::new(2, 2);
+        let hetero = Topology::with_links(
+            2,
+            2,
+            Some(vec![1.0, 1.0]),
+            Some(vec![1.0, 1.0]),
+        )
+        .unwrap();
+        let mut scratch = SimScratch::default();
+        let machines = homo.machines();
+        for seed in 0..50u64 {
+            let mut rng = Rng::new(seed ^ 0x11AA);
+            let assignment: Assignment = (0..jobs.len())
+                .map(|_| {
+                    machines[rng.below(machines.len() as u64) as usize]
+                })
+                .collect();
+            let a = simulate(&jobs, &homo, &assignment);
+            let b = simulate(&jobs, &hetero, &assignment);
+            assert_eq!(a.trace.entries, b.trace.entries, "seed {seed}");
+            assert_eq!(
+                weighted_cost(&jobs, &homo, &assignment, &mut scratch),
+                weighted_cost(&jobs, &hetero, &assignment, &mut scratch),
+            );
+        }
+    }
+
+    #[test]
+    fn weighted_cost_equals_simulate_with_links_and_speeds() {
+        use crate::data::Rng;
+        let mut scratch = SimScratch::default();
+        let topo = Topology::with_factors(
+            1,
+            2,
+            Some(vec![1.5]),
+            Some(vec![0.75, 2.0]),
+            Some(vec![0.5]),
+            Some(vec![2.0, 1.0]),
+        )
+        .unwrap();
+        let machines = topo.machines();
+        for seed in 0..60 {
+            let mut rng = Rng::new(seed ^ 0x11BB);
             let jobs = paper_jobs();
             let assignment: Assignment = (0..jobs.len())
                 .map(|_| {

@@ -7,7 +7,8 @@
 //! each edge replica separately, so the search can trade a short queue on
 //! a slow box against a long queue on a fast one); the whole schedule is
 //! re-simulated (transmission overlap + FCFS availability order, with
-//! per-replica speed-scaled processing) and the move is kept if the
+//! per-replica speed-scaled processing and link-scaled transmission) and
+//! the move is kept if the
 //! priority-weighted whole response time `L*sum` improves.  A short-term tabu memory forbids
 //! immediately reversing a move, letting the search escape shallow local
 //! minima; the best solution ever seen is returned.

@@ -9,17 +9,21 @@
 //! Every scheduler core and the serving coordinator are parameterized by
 //! it; [`Topology::paper`] reproduces the paper's setup bit-for-bit.
 //!
-//! Machines are truly *unrelated*: besides the per-class timing model
-//! (transmission costs stay per-class — the network path is shared by the
-//! class), every shared replica carries its own **speed factor**
-//! ([`Topology::speed`], default 1.0).  A replica's effective processing
-//! time is `ceil(I_i / speed)` ([`Topology::scaled_processing`]), so a
-//! `speed` of 2.0 models a box twice as fast as the class's calibrated
-//! machine and 0.5 a box half as fast.  All-1.0 topologies are bit-for-bit
-//! identical to the per-class model (the `p / 1.0` division is exact), so
-//! the paper's published numbers are unchanged.  The per-patient end
-//! device is never shared and never scaled: it is modeled as a single
-//! pseudo-replica (speed 1.0) whose queue never forms.
+//! Machines are truly *unrelated*: every shared replica carries its own
+//! **speed factor** ([`Topology::speed`], default 1.0) *and* its own
+//! **link factor** ([`Topology::link`], default 1.0).  A replica's
+//! effective processing time is `ceil(I_i / speed)`
+//! ([`Topology::scaled_processing`]) — a `speed` of 2.0 models a box
+//! twice as fast as the class's calibrated machine — and its effective
+//! transmission time is `ceil(D_i / link)`
+//! ([`Topology::scaled_transmission`]) — a `link` of 0.5 models a
+//! gateway on Wi-Fi reaching the class's network path at half the rate,
+//! 2.0 a replica on a premium uplink.  All-1.0 topologies are
+//! bit-for-bit identical to the per-class model (the `x / 1.0` division
+//! is exact), so the paper's published numbers are unchanged.  The
+//! per-patient end device is never shared and never scaled: it is
+//! modeled as a single pseudo-replica (speed and link 1.0) whose queue
+//! never forms and which transmits nothing (assumption (a)).
 //!
 //! # Invariant
 //!
@@ -28,9 +32,9 @@
 //! `edges >= 1`, and the device pseudo-replica always exists.  Downstream
 //! code (e.g. the serving router's replica selection) relies on this to
 //! stay infallible — `machines()` and each class's replica range are
-//! never empty.  Speed factors are validated finite and within
-//! [`Topology::SPEED_RANGE`], so speed-scaled arithmetic can never
-//! overflow or produce NaN orderings.
+//! never empty.  Speed and link factors are validated finite and within
+//! [`Topology::SPEED_RANGE`] / [`Topology::LINK_RANGE`], so
+//! factor-scaled arithmetic can never overflow or produce NaN orderings.
 
 use crate::device::Layer;
 use crate::serialize::Value;
@@ -151,13 +155,14 @@ impl std::fmt::Display for MachineRef {
 }
 
 /// The machine set: `clouds` cloud servers + `edges` edge servers, each
-/// with its own speed factor, plus the per-patient end devices (always
-/// available, never shared).
+/// with its own speed and link factor, plus the per-patient end devices
+/// (always available, never shared).
 ///
 /// Constructed homogeneous via [`Topology::new`] / [`Topology::try_new`]
-/// (every replica at speed 1.0 — the paper's assumption (c)) or
-/// heterogeneous via [`Topology::heterogeneous`] /
-/// [`Topology::with_speeds`].  See the module docs for the ≥1-replica
+/// (every replica at speed and link 1.0 — the paper's assumptions (b)
+/// and (c)) or heterogeneous via [`Topology::heterogeneous`] /
+/// [`Topology::with_speeds`] / [`Topology::with_links`] /
+/// [`Topology::with_factors`].  See the module docs for the ≥1-replica
 /// invariant validated constructors guarantee.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Topology {
@@ -168,10 +173,13 @@ pub struct Topology {
     /// replica runs at 1.0 (constructors normalize an explicit all-1.0
     /// vector to empty, so `PartialEq`/`Hash` never distinguish the two).
     speeds: Vec<f64>,
+    /// Per-shared-replica link factors, same canonical order and same
+    /// empty-means-all-1.0 canonical form as `speeds`.
+    links: Vec<f64>,
 }
 
-// Speeds are validated finite (never NaN), so the partial equivalence is
-// total and `Eq` is sound.
+// Speeds and links are validated finite (never NaN), so the partial
+// equivalence is total and `Eq` is sound.
 impl Eq for Topology {}
 
 impl std::hash::Hash for Topology {
@@ -179,8 +187,15 @@ impl std::hash::Hash for Topology {
         use std::hash::Hash;
         self.clouds.hash(state);
         self.edges.hash(state);
+        // length-prefix each axis so a speeds-only and a links-only
+        // topology carrying the same factor vector hash differently
+        self.speeds.len().hash(state);
         for s in &self.speeds {
             s.to_bits().hash(state);
+        }
+        self.links.len().hash(state);
+        for l in &self.links {
+            l.to_bits().hash(state);
         }
     }
 }
@@ -198,13 +213,18 @@ impl Topology {
     pub const SPEED_RANGE: std::ops::RangeInclusive<f64> =
         0.015625..=64.0;
 
+    /// Accepted link-factor range (same rationale and bounds as
+    /// [`Topology::SPEED_RANGE`]: ±64× of the class's network path).
+    pub const LINK_RANGE: std::ops::RangeInclusive<f64> =
+        0.015625..=64.0;
+
     /// Construct a homogeneous topology without validation (infallible,
     /// for literals known to be sane).  Degenerate replica counts only
     /// surface when a scheduler core is reached, so prefer
     /// [`Topology::try_new`] on any path that takes user input — it
     /// rejects them up front with [`Error::InvalidTopology`].
     pub fn new(clouds: usize, edges: usize) -> Self {
-        Topology { clouds, edges, speeds: Vec::new() }
+        Topology { clouds, edges, speeds: Vec::new(), links: Vec::new() }
     }
 
     /// Validated homogeneous construction: the front-door constructor for
@@ -244,44 +264,95 @@ impl Topology {
         cloud_speeds: Option<Vec<f64>>,
         edge_speeds: Option<Vec<f64>>,
     ) -> Result<Self> {
+        Topology::with_factors(
+            clouds,
+            edges,
+            cloud_speeds,
+            edge_speeds,
+            None,
+            None,
+        )
+    }
+
+    /// Validated construction with optional per-class *link* vectors
+    /// (`None` = every replica of that class reaches the network at the
+    /// class rate, factor 1.0) — the network mirror of
+    /// [`Topology::with_speeds`].
+    pub fn with_links(
+        clouds: usize,
+        edges: usize,
+        cloud_links: Option<Vec<f64>>,
+        edge_links: Option<Vec<f64>>,
+    ) -> Result<Self> {
+        Topology::with_factors(
+            clouds,
+            edges,
+            None,
+            None,
+            cloud_links,
+            edge_links,
+        )
+    }
+
+    /// Fully-general validated construction: optional per-class speed
+    /// *and* link vectors (`None` = all 1.0 for that class and axis).
+    /// Every provided vector's length must equal the class's replica
+    /// count.
+    pub fn with_factors(
+        clouds: usize,
+        edges: usize,
+        cloud_speeds: Option<Vec<f64>>,
+        edge_speeds: Option<Vec<f64>>,
+        cloud_links: Option<Vec<f64>>,
+        edge_links: Option<Vec<f64>>,
+    ) -> Result<Self> {
         let invalid = |reason: String| Error::InvalidTopology {
             clouds,
             edges,
             reason,
         };
-        if let Some(cs) = &cloud_speeds {
-            if cs.len() != clouds {
-                return Err(invalid(format!(
-                    "cloud_speeds has {} entries for {clouds} cloud \
-                     replica(s)",
-                    cs.len()
-                )));
+        let check_len = |v: &Option<Vec<f64>>,
+                         field: &str,
+                         want: usize,
+                         class: &str|
+         -> Result<()> {
+            if let Some(v) = v {
+                if v.len() != want {
+                    return Err(invalid(format!(
+                        "{field} has {} entries for {want} {class} \
+                         replica(s)",
+                        v.len()
+                    )));
+                }
             }
-        }
-        if let Some(es) = &edge_speeds {
-            if es.len() != edges {
-                return Err(invalid(format!(
-                    "edge_speeds has {} entries for {edges} edge \
-                     replica(s)",
-                    es.len()
-                )));
-            }
-        }
-        let mut speeds =
-            cloud_speeds.unwrap_or_else(|| vec![1.0; clouds]);
-        speeds.extend(edge_speeds.unwrap_or_else(|| vec![1.0; edges]));
+            Ok(())
+        };
+        check_len(&cloud_speeds, "cloud_speeds", clouds, "cloud")?;
+        check_len(&edge_speeds, "edge_speeds", edges, "edge")?;
+        check_len(&cloud_links, "cloud_links", clouds, "cloud")?;
+        check_len(&edge_links, "edge_links", edges, "edge")?;
         // canonical form: a fully-homogeneous vector is stored empty so
         // equality/hashing can't distinguish "unspecified" from "all 1.0"
-        if speeds.iter().all(|&s| s == 1.0) {
-            speeds.clear();
-        }
-        let t = Topology { clouds, edges, speeds };
+        let canonical = |cloud: Option<Vec<f64>>,
+                         edge: Option<Vec<f64>>|
+         -> Vec<f64> {
+            let mut v = cloud.unwrap_or_else(|| vec![1.0; clouds]);
+            v.extend(edge.unwrap_or_else(|| vec![1.0; edges]));
+            if v.iter().all(|&f| f == 1.0) {
+                v.clear();
+            }
+            v
+        };
+        let speeds = canonical(cloud_speeds, edge_speeds);
+        let links = canonical(cloud_links, edge_links);
+        let t = Topology { clouds, edges, speeds, links };
         t.validate()?;
         Ok(t)
     }
 
     /// The paper's configuration: one cloud + one edge server
-    /// (assumption (d)), both at unit speed (assumption (c)).
+    /// (assumption (d)), both at unit speed and link (assumptions (b)
+    /// and (c)).
     pub fn paper() -> Self {
         Topology::new(1, 1)
     }
@@ -290,28 +361,32 @@ impl Topology {
         *self == Topology::paper()
     }
 
-    /// Whether every replica runs at the class's calibrated speed
-    /// (factor 1.0) — the regime where this topology is bit-for-bit
-    /// equivalent to the per-class timing model.
+    /// Whether every replica runs at the class's calibrated speed *and*
+    /// reaches the network at the class rate (both factors 1.0) — the
+    /// regime where this topology is bit-for-bit equivalent to the
+    /// per-class timing model.
     pub fn is_homogeneous(&self) -> bool {
-        self.speeds.is_empty()
+        self.speeds.is_empty() && self.links.is_empty()
     }
 
     /// Compact label for reports and bench rows (`1c+2e`; heterogeneous
-    /// topologies append the speed vector, e.g. `1c+2e speeds=[1,1.5,0.75]`).
+    /// topologies append the non-unit factor vectors, e.g.
+    /// `1c+2e speeds=[1,1.5,0.75]` or `1c+2e links=[1,0.5,1]`).
     pub fn label(&self) -> String {
-        if self.is_homogeneous() {
-            format!("{}c+{}e", self.clouds, self.edges)
-        } else {
-            let speeds: Vec<String> =
-                self.speeds.iter().map(|s| s.to_string()).collect();
-            format!(
-                "{}c+{}e speeds=[{}]",
-                self.clouds,
-                self.edges,
-                speeds.join(",")
-            )
+        let mut label = format!("{}c+{}e", self.clouds, self.edges);
+        let join = |v: &[f64]| {
+            v.iter()
+                .map(|f| f.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        };
+        if !self.speeds.is_empty() {
+            label.push_str(&format!(" speeds=[{}]", join(&self.speeds)));
         }
+        if !self.links.is_empty() {
+            label.push_str(&format!(" links=[{}]", join(&self.links)));
+        }
+        label
     }
 
     /// Number of shared machines (cloud + edge replicas).
@@ -370,6 +445,38 @@ impl Topology {
             .collect()
     }
 
+    /// The link factor of one concrete machine (1.0 unless configured
+    /// otherwise; the device pseudo-replica is always 1.0 — it
+    /// transmits nothing, assumption (a)).
+    pub fn link(&self, m: MachineRef) -> f64 {
+        match self.shared_index(m) {
+            Some(s) => self.shared_link(s),
+            None => 1.0,
+        }
+    }
+
+    /// The link factor at a dense shared index (see
+    /// [`Self::shared_index`]); allocation-free, for the simulator's hot
+    /// loop.
+    #[inline]
+    pub fn shared_link(&self, s: usize) -> f64 {
+        self.links.get(s).copied().unwrap_or(1.0)
+    }
+
+    /// The cloud replicas' link factors, materialized (length `clouds`;
+    /// all 1.0 for a class on the shared network path).
+    pub fn cloud_links(&self) -> Vec<f64> {
+        (0..self.clouds).map(|s| self.shared_link(s)).collect()
+    }
+
+    /// The edge replicas' link factors, materialized (length `edges`;
+    /// all 1.0 for a class on the shared network path).
+    pub fn edge_links(&self) -> Vec<f64> {
+        (self.clouds..self.shared_count())
+            .map(|s| self.shared_link(s))
+            .collect()
+    }
+
     /// A job's effective processing time on a concrete machine:
     /// `ceil(p / speed)` (a faster replica finishes sooner; ceil keeps
     /// C3's non-zero integer ticks).  At speed 1.0 this is exactly `p` —
@@ -379,6 +486,19 @@ impl Topology {
         match self.shared_index(m) {
             Some(s) => scale_ticks(p, self.shared_speed(s)),
             None => p,
+        }
+    }
+
+    /// A job's effective transmission time to a concrete machine:
+    /// `ceil(t / link)` — the network mirror of
+    /// [`Self::scaled_processing`].  At link 1.0 this is exactly `t`
+    /// (the homogeneous bit-for-bit guarantee), and the device's zero
+    /// transmission stays zero under any factor.
+    #[inline]
+    pub fn scaled_transmission(&self, t: Tick, m: MachineRef) -> Tick {
+        match self.shared_index(m) {
+            Some(s) => scale_ticks(t, self.shared_link(s)),
+            None => t,
         }
     }
 
@@ -456,84 +576,161 @@ impl Topology {
                 self.shared_count()
             )));
         }
-        if !self.speeds.is_empty()
-            && self.speeds.len() != self.shared_count()
-        {
-            return Err(invalid(format!(
-                "{} speed factors for {} shared machines (construct \
-                 through Topology::with_speeds)",
-                self.speeds.len(),
-                self.shared_count()
-            )));
-        }
-        for (s, &f) in self.speeds.iter().enumerate() {
-            if !f.is_finite() || !Self::SPEED_RANGE.contains(&f) {
+        for (axis, factors, range) in [
+            ("speed", &self.speeds, Self::SPEED_RANGE),
+            ("link", &self.links, Self::LINK_RANGE),
+        ] {
+            if !factors.is_empty()
+                && factors.len() != self.shared_count()
+            {
                 return Err(invalid(format!(
-                    "speed factor {f} for shared machine {s} must be \
-                     finite and within {:?}",
-                    Self::SPEED_RANGE
+                    "{} {axis} factors for {} shared machines \
+                     (construct through Topology::with_factors)",
+                    factors.len(),
+                    self.shared_count()
                 )));
+            }
+            for (s, &f) in factors.iter().enumerate() {
+                if !f.is_finite() || !range.contains(&f) {
+                    return Err(invalid(format!(
+                        "{axis} factor {f} for shared machine {s} must \
+                         be finite and within {range:?}"
+                    )));
+                }
             }
         }
         Ok(())
     }
 
     /// Parse from a config section, layered over the paper defaults.
-    /// Replica counts default to the speed-vector lengths when only
-    /// `cloud_speeds` / `edge_speeds` are given.
+    /// Replica counts default to the speed-/link-vector lengths when
+    /// only `cloud_speeds` / `edge_speeds` / `cloud_links` /
+    /// `edge_links` are given.
     pub fn from_reader(r: &crate::config::FieldReader) -> Result<Self> {
         let def = Topology::paper();
         let cloud_speeds = r.f64_list("cloud_speeds")?;
         let edge_speeds = r.f64_list("edge_speeds")?;
-        let clouds = match r.usize("clouds")? {
-            Some(c) => c,
-            None => cloud_speeds
-                .as_ref()
-                .map(|v| v.len())
-                .unwrap_or(def.clouds),
+        let cloud_links = r.f64_list("cloud_links")?;
+        let edge_links = r.f64_list("edge_links")?;
+        let infer = |explicit: Option<usize>,
+                     speeds: &Option<Vec<f64>>,
+                     links: &Option<Vec<f64>>,
+                     def: usize|
+         -> usize {
+            explicit
+                .or_else(|| speeds.as_ref().map(|v| v.len()))
+                .or_else(|| links.as_ref().map(|v| v.len()))
+                .unwrap_or(def)
         };
-        let edges = match r.usize("edges")? {
-            Some(e) => e,
-            None => edge_speeds
-                .as_ref()
-                .map(|v| v.len())
-                .unwrap_or(def.edges),
-        };
+        let clouds = infer(
+            r.usize("clouds")?,
+            &cloud_speeds,
+            &cloud_links,
+            def.clouds,
+        );
+        let edges = infer(
+            r.usize("edges")?,
+            &edge_speeds,
+            &edge_links,
+            def.edges,
+        );
         r.finish()?;
-        Topology::with_speeds(clouds, edges, cloud_speeds, edge_speeds)
+        Topology::with_factors(
+            clouds,
+            edges,
+            cloud_speeds,
+            edge_speeds,
+            cloud_links,
+            edge_links,
+        )
     }
 
-    /// Serialize as a config section (speed vectors are only emitted for
-    /// heterogeneous classes, so homogeneous output is unchanged).
+    /// Serialize as a config section (speed/link vectors are only
+    /// emitted for heterogeneous classes, so homogeneous output is
+    /// unchanged).
     pub fn to_value(&self) -> Value {
         let mut v = Value::object();
         v.set("clouds", self.clouds);
         v.set("edges", self.edges);
-        if !self.is_homogeneous() {
-            let cloud = self.cloud_speeds();
-            let edge = self.edge_speeds();
-            if cloud.iter().any(|&f| f != 1.0) {
-                v.set("cloud_speeds", cloud);
+        let emit = |v: &mut Value, key: &str, factors: Vec<f64>| {
+            if factors.iter().any(|&f| f != 1.0) {
+                v.set(key, factors);
             }
-            if edge.iter().any(|&f| f != 1.0) {
-                v.set("edge_speeds", edge);
-            }
+        };
+        if !self.speeds.is_empty() {
+            emit(&mut v, "cloud_speeds", self.cloud_speeds());
+            emit(&mut v, "edge_speeds", self.edge_speeds());
+        }
+        if !self.links.is_empty() {
+            emit(&mut v, "cloud_links", self.cloud_links());
+            emit(&mut v, "edge_links", self.edge_links());
         }
         v
     }
 }
 
-/// `ceil(p / speed)` — the shared speed-scaling primitive (also the
-/// contract `python/tools/suite_oracle.py` mirrors).  The `speed == 1.0`
-/// fast path is what keeps homogeneous topologies bit-for-bit identical
-/// to the per-class model.
+/// Largest tick count the IEEE-754 division path handles exactly: up to
+/// here `p as f64` is lossless, and the committed golden baselines pin
+/// the `(p as f64 / factor).ceil()` result bit-for-bit (the contract
+/// `python/tools/suite_oracle.py` mirrors with `math.ceil(p / f)`).
+const MAX_F64_EXACT_TICK: Tick = 1 << 53;
+
+/// `ceil(p / factor)` — the shared factor-scaling primitive behind
+/// [`Topology::scaled_processing`] and [`Topology::scaled_transmission`]
+/// (also the contract `python/tools/suite_oracle.py` mirrors).  The
+/// `factor == 1.0` fast path is what keeps homogeneous topologies
+/// bit-for-bit identical to the per-class model.
+///
+/// Ticks above 2^53 don't round-trip through `f64`: the old
+/// float-division path silently lost precision there and the final
+/// `as Tick` cast saturated.  Those are now computed by exact integer
+/// ceil-division on the factor's binary mantissa/exponent decomposition
+/// (every finite `f64` is `mantissa × 2^exponent` exactly), with an
+/// explicit, documented saturation at `Tick::MAX` when a sub-unit
+/// factor pushes the true quotient past the tick domain.  `scale_ticks
+/// (p, 1.0) == p` for every `p`, and the result is monotone in `p`
+/// within each regime.
 #[inline]
-pub fn scale_ticks(p: Tick, speed: f64) -> Tick {
-    if speed == 1.0 {
+pub fn scale_ticks(p: Tick, factor: f64) -> Tick {
+    if factor == 1.0 {
         p
+    } else if p <= MAX_F64_EXACT_TICK {
+        (p as f64 / factor).ceil() as Tick
     } else {
-        (p as f64 / speed).ceil() as Tick
+        scale_ticks_exact(p, factor)
     }
+}
+
+/// Exact `ceil(p / factor)` over `u128` for ticks beyond the `f64`-exact
+/// range.  `factor` is a validated [`Topology::SPEED_RANGE`] /
+/// [`Topology::LINK_RANGE`] value: always a positive normal `f64`, so
+/// the mantissa/exponent decomposition below is total.
+fn scale_ticks_exact(p: Tick, factor: f64) -> Tick {
+    debug_assert!(
+        factor.is_finite() && factor > 0.0 && factor.is_normal(),
+        "factor {factor} outside the validated range"
+    );
+    // factor = mantissa * 2^exponent, exactly (IEEE-754 binary64)
+    let bits = factor.to_bits();
+    let mantissa = (bits & ((1u64 << 52) - 1)) | (1u64 << 52);
+    let exponent = ((bits >> 52) & 0x7FF) as i32 - 1075;
+    if exponent >= 0 {
+        // factor >= 2^52, far outside the validated range — keep the
+        // saturating float path rather than shifting out of u128
+        return (p as f64 / factor).ceil() as Tick;
+    }
+    // p / factor = p * 2^(-exponent) / mantissa.  For in-range factors
+    // (>= 2^-6) the exponent is in [-58, -46], so the shifted numerator
+    // fits u128 comfortably (2^64 * 2^58 = 2^122).
+    let shift = (-exponent) as u32;
+    if shift > 63 {
+        // factor below ~2^-11: the true quotient exceeds the tick
+        // domain for every p in this branch (p > 2^53) — saturate
+        return Tick::MAX;
+    }
+    let numerator = (p as u128) << shift;
+    let q = numerator.div_ceil(mantissa as u128);
+    Tick::try_from(q).unwrap_or(Tick::MAX)
 }
 
 #[cfg(test)]
@@ -740,6 +937,179 @@ mod tests {
         assert_eq!(set.len(), 2);
         assert!(a.label().contains("speeds=[1,1.5]"), "{}", a.label());
         assert_eq!(Topology::new(1, 2).label(), "1c+2e");
+    }
+
+    #[test]
+    fn links_default_to_unit_and_validate() {
+        let t = Topology::new(2, 2);
+        for m in t.machines() {
+            assert_eq!(t.link(m), 1.0, "{m}");
+        }
+        assert!(t.is_homogeneous());
+        // explicit all-1.0 link vectors normalize to the homogeneous form
+        let explicit = Topology::with_links(
+            2,
+            2,
+            Some(vec![1.0, 1.0]),
+            Some(vec![1.0, 1.0]),
+        )
+        .unwrap();
+        assert_eq!(explicit, t);
+        assert!(explicit.is_homogeneous());
+        // invalid factors are typed errors
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY, 1e9, 1e-9] {
+            assert!(
+                Topology::with_links(1, 1, Some(vec![bad]), None)
+                    .is_err(),
+                "{bad}"
+            );
+        }
+        // wrong-length vectors are typed errors naming the field
+        let err = Topology::with_links(2, 1, Some(vec![1.5]), None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cloud_links"), "{err}");
+    }
+
+    #[test]
+    fn scaled_transmission_ceil_and_identity() {
+        let t = Topology::with_links(
+            1,
+            2,
+            Some(vec![1.0]),
+            Some(vec![2.0, 0.5]),
+        )
+        .unwrap();
+        // unit link: exact identity
+        assert_eq!(t.scaled_transmission(7, MachineRef::cloud(0)), 7);
+        assert_eq!(t.scaled_transmission(7, MachineRef::DEVICE), 7);
+        // 2x link: ceil(7/2) = 4; half-rate Wi-Fi: 14
+        assert_eq!(t.scaled_transmission(7, MachineRef::edge(0)), 4);
+        assert_eq!(t.scaled_transmission(7, MachineRef::edge(1)), 14);
+        // zero transmission (the device's) stays zero under any factor
+        assert_eq!(t.scaled_transmission(0, MachineRef::edge(1)), 0);
+        // C3: non-zero ticks survive scaling
+        assert_eq!(t.scaled_transmission(1, MachineRef::edge(0)), 1);
+        // processing is untouched by link factors
+        assert_eq!(t.scaled_processing(7, MachineRef::edge(0)), 7);
+    }
+
+    #[test]
+    fn link_config_roundtrip_and_count_inference() {
+        let t = Topology::with_factors(
+            2,
+            1,
+            Some(vec![2.0, 1.0]),
+            None,
+            Some(vec![0.5, 1.0]),
+            Some(vec![1.5]),
+        )
+        .unwrap();
+        let v = t.to_value();
+        let r = crate::config::FieldReader::new(&v, "topology").unwrap();
+        let back = Topology::from_reader(&r).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.link(MachineRef::cloud(0)), 0.5);
+        assert_eq!(back.link(MachineRef::edge(0)), 1.5);
+        assert_eq!(back.speed(MachineRef::cloud(0)), 2.0);
+        // counts are inferrable from link vectors alone
+        let v = crate::serialize::toml::parse(
+            "edge_links = [0.5, 1.0, 2.0]\n",
+        )
+        .unwrap();
+        let r = crate::config::FieldReader::new(&v, "topology").unwrap();
+        let t = Topology::from_reader(&r).unwrap();
+        assert_eq!((t.clouds, t.edges), (1, 3));
+        assert_eq!(t.link(MachineRef::edge(0)), 0.5);
+        assert!(t.speed(MachineRef::edge(0)) == 1.0);
+        // explicit mismatched count is a typed error
+        let v = crate::serialize::toml::parse(
+            "edges = 2\nedge_links = [1.5]\n",
+        )
+        .unwrap();
+        let r = crate::config::FieldReader::new(&v, "topology").unwrap();
+        assert!(matches!(
+            Topology::from_reader(&r),
+            Err(Error::InvalidTopology { .. })
+        ));
+    }
+
+    #[test]
+    fn link_identity_equality_hash_and_label() {
+        use std::collections::HashSet;
+        let a = Topology::with_links(1, 1, None, Some(vec![0.5]))
+            .unwrap();
+        let b = Topology::with_links(1, 1, None, Some(vec![0.5]))
+            .unwrap();
+        let speeds_only =
+            Topology::heterogeneous(vec![1.0], vec![0.5]).unwrap();
+        let unit = Topology::new(1, 1);
+        assert_eq!(a, b);
+        assert_ne!(a, speeds_only, "links are not speeds");
+        assert_ne!(a, unit);
+        assert!(!a.is_paper() && !a.is_homogeneous());
+        let set: HashSet<Topology> =
+            [a.clone(), b, speeds_only, unit].into_iter().collect();
+        assert_eq!(set.len(), 3);
+        assert!(a.label().contains("links=[1,0.5]"), "{}", a.label());
+        let both = Topology::with_factors(
+            1,
+            1,
+            None,
+            Some(vec![2.0]),
+            None,
+            Some(vec![0.5]),
+        )
+        .unwrap();
+        let l = both.label();
+        assert!(
+            l.contains("speeds=[1,2]") && l.contains("links=[1,0.5]"),
+            "{l}"
+        );
+    }
+
+    #[test]
+    fn scale_ticks_exact_beyond_f64_range() {
+        // the documented bugfix: (2^60 + 1) / 2 lost the +1 through f64
+        let p = (1u64 << 60) + 1;
+        assert_eq!(scale_ticks(p, 2.0), (1 << 59) + 1);
+        assert_eq!(scale_ticks(p, 1.0), p, "unit factor is the identity");
+        assert_eq!(scale_ticks(u64::MAX, 1.0), u64::MAX);
+        // exact agreement with integer arithmetic on a power-of-two
+        // factor, where both paths are exact
+        assert_eq!(scale_ticks(1 << 54, 2.0), 1 << 53);
+        assert_eq!(scale_ticks((1 << 54) + 3, 4.0), (1 << 52) + 1);
+        // sub-unit factors past the tick domain saturate explicitly
+        assert_eq!(scale_ticks(u64::MAX, 0.5), u64::MAX);
+        assert_eq!(scale_ticks(u64::MAX - 7, 0.015625), u64::MAX);
+        // speeding never lengthens, slowing never shortens
+        assert!(scale_ticks(p, 4.0) <= scale_ticks(p, 2.0));
+        assert!(scale_ticks(p, 0.5) >= p);
+    }
+
+    #[test]
+    fn scale_ticks_large_tick_identity_and_monotonicity() {
+        // property pinned by the ISSUE: identity at 1.0 for huge ticks,
+        // and monotone in p within the exact-integer regime
+        let mut rng = crate::data::Rng::new(0x71C5);
+        for _ in 0..500 {
+            let p = (1u64 << 53) + 1 + rng.below(1 << 62);
+            assert_eq!(scale_ticks(p, 1.0), p);
+            for factor in [0.75, 1.5, 2.0, 3.0, 64.0, 0.015625] {
+                let a = scale_ticks(p, factor);
+                let b = scale_ticks(p + 1, factor);
+                assert!(
+                    a <= b,
+                    "scale_ticks not monotone at p={p} factor={factor}: \
+                     {a} > {b}"
+                );
+                // ceil-division bounds: q >= p/f - 1 and q <= p/f + 1
+                // checked exactly via the inverse on non-saturated results
+                if a < u64::MAX && factor >= 1.0 {
+                    assert!(a <= p, "speed-up lengthened {p} -> {a}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -156,6 +156,54 @@ fn invalid_speed_factors_are_invalid_topology_variants() {
 }
 
 #[test]
+fn invalid_link_factors_are_invalid_topology_variants() {
+    for (bad, why) in [
+        (
+            "[scenario]\n\n[scenario.topology]\nedges = 2\n\
+             edge_links = [1.5]\n",
+            "length mismatch",
+        ),
+        (
+            "[scenario]\n\n[scenario.topology]\nedge_links = [0.0]\n",
+            "zero factor",
+        ),
+        (
+            "[scenario]\n\n[scenario.topology]\n\
+             cloud_links = [-2.0]\n",
+            "negative factor",
+        ),
+        (
+            "[scenario]\n\n[scenario.topology]\n\
+             cloud_links = [1000.0]\n",
+            "absurd factor",
+        ),
+        (
+            // speeds and links must agree on the replica count
+            "[scenario]\n\n[scenario.topology]\n\
+             edge_speeds = [1.5, 0.75]\nedge_links = [0.5]\n",
+            "speed/link length disagreement",
+        ),
+    ] {
+        match Scenario::from_toml(bad).unwrap_err() {
+            Error::InvalidTopology { reason, .. } => {
+                assert!(!reason.is_empty(), "{why}")
+            }
+            other => {
+                panic!("{why}: expected InvalidTopology, got {other:?}")
+            }
+        }
+    }
+    // a non-numeric entry is a config (type) error from the reader
+    assert!(matches!(
+        Scenario::from_toml(
+            "[scenario]\n\n[scenario.topology]\n\
+             edge_links = [\"wifi\"]\n"
+        ),
+        Err(Error::Config(_))
+    ));
+}
+
+#[test]
 fn degenerate_arrival_parameters_are_config_errors() {
     for bad in [
         // zero rate

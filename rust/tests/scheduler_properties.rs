@@ -273,6 +273,59 @@ fn prop_speeding_up_a_replica_never_worsens_optimal_makespan() {
     }
 }
 
+/// Speeding up any single replica's *link* never worsens the optimal
+/// makespan (ISSUE 5 satellite): `ceil(t / link)` is non-increasing in
+/// `link`, so every job's availability on that replica only moves
+/// earlier — and although earlier availability can reshuffle the FCFS
+/// serving order for a *fixed* assignment, the optimum over all
+/// assignments can always route around a reshuffle.  Checked against
+/// the exact branch-and-bound on small random traces, for link-ups of
+/// each shared replica in turn — the link mirror of
+/// `prop_speeding_up_a_replica_never_worsens_optimal_makespan`.
+#[test]
+fn prop_speeding_up_a_link_never_worsens_optimal_makespan() {
+    use edgeward::scenario::solver;
+    let exact = solver("exact").unwrap();
+    let makespan_opt = |jobs: &[Job], topo: &Topology| -> u64 {
+        let scenario = edgeward::scenario::Scenario::builder()
+            .jobs(jobs.to_vec())
+            .topology(topo.clone())
+            .objective(Objective::Makespan)
+            .build()
+            .unwrap();
+        let s = exact.solve(&scenario).unwrap();
+        scenario.evaluate(&s)
+    };
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(seed ^ 0xF1ED);
+        let jobs: Vec<Job> =
+            random_jobs(&mut rng).into_iter().take(6).collect();
+        // 1 cloud + 2 edges, three shared replicas to re-link in turn
+        let base = Topology::new(1, 2);
+        let base_opt = makespan_opt(&jobs, &base);
+        for bump in 0..3usize {
+            for factor in [1.5, 2.0, 4.0] {
+                let mut links = [1.0, 1.0, 1.0];
+                links[bump] = factor;
+                let topo = Topology::with_links(
+                    1,
+                    2,
+                    Some(vec![links[0]]),
+                    Some(vec![links[1], links[2]]),
+                )
+                .unwrap();
+                let opt = makespan_opt(&jobs, &topo);
+                assert!(
+                    opt <= base_opt,
+                    "seed {seed}: speeding replica {bump}'s link \
+                     ×{factor} worsened optimal makespan {base_opt} -> \
+                     {opt}"
+                );
+            }
+        }
+    }
+}
+
 /// Unit-speed replicas of a class are interchangeable: permuting which
 /// replica a fixed all-edge assignment uses never changes the objective.
 #[test]

@@ -134,6 +134,40 @@ fn heterogeneous_lanes_serve_and_report_speeds() {
 }
 
 #[test]
+fn link_heterogeneous_lanes_serve_and_report_links() {
+    if !have_artifacts() {
+        return;
+    }
+    // a wired (×1) and a Wi-Fi (×0.5) edge box: the run completes, each
+    // replica's delay queue uses its own link-scaled transmission, and
+    // the per-lane report carries the link factor
+    let env = Environment::paper();
+    let mut cfg = fast_cfg(Policy::RoundRobin);
+    cfg.topology =
+        Topology::with_links(1, 2, None, Some(vec![1.0, 0.5]))
+            .unwrap();
+    let coord =
+        Coordinator::new(env, Calibration::paper(), cfg, "artifacts")
+            .unwrap();
+    let report = coord.run(41).unwrap();
+    assert_eq!(report.completed, 12);
+    assert_eq!(report.lanes.len(), 4);
+    let by_label = |label: &str| {
+        report
+            .lanes
+            .iter()
+            .find(|l| l.machine.label() == label)
+            .unwrap_or_else(|| panic!("no lane {label}"))
+    };
+    assert_eq!(by_label("ES0").link, 1.0);
+    assert_eq!(by_label("ES1").link, 0.5);
+    assert_eq!(by_label("CC0").link, 1.0);
+    assert_eq!(by_label("ES0").speed, 1.0);
+    let v = report.to_value().to_string_pretty();
+    assert!(v.contains("\"link\""), "{v}");
+}
+
+#[test]
 fn least_loaded_policy_serves_all_requests() {
     if !have_artifacts() {
         return;

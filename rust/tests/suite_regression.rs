@@ -97,19 +97,37 @@ fn committed_corpus_includes_heterogeneous_topologies() {
         .map(|s| s.stem.as_str())
         .collect();
     assert!(
-        hetero.len() >= 2,
-        "corpus must pin at least 2 heterogeneous-topology scenarios, \
-         found {hetero:?}"
+        hetero.len() >= 4,
+        "corpus must pin at least 4 heterogeneous-topology scenarios \
+         (2 speed + 2 link), found {hetero:?}"
+    );
+    // ISSUE 5: at least two scenarios exercise *link* heterogeneity
+    let linked: Vec<&str> = suite
+        .scenarios
+        .iter()
+        .filter(|s| {
+            let t = &s.scenario.topology;
+            t.cloud_links()
+                .into_iter()
+                .chain(t.edge_links())
+                .any(|l| l != 1.0)
+        })
+        .map(|s| s.stem.as_str())
+        .collect();
+    assert!(
+        linked.len() >= 2,
+        "corpus must pin at least 2 link-heterogeneous scenarios, \
+         found {linked:?}"
     );
 }
 
-/// ISSUE 4 satellite: spelling every committed scenario's speed factors
-/// out as explicit 1.0 vectors must reproduce `baselines/*.json`
-/// byte-for-byte — the homogeneous corpus cannot tell the difference
-/// between "no speeds" and "all speeds 1.0".
+/// ISSUE 4/5 satellite: spelling every committed scenario's speed *and
+/// link* factors out as explicit 1.0 vectors must reproduce
+/// `baselines/*.json` byte-for-byte — the homogeneous corpus cannot
+/// tell the difference between "no factors" and "all factors 1.0".
 #[test]
-fn explicit_unit_speeds_reproduce_committed_baselines() {
-    let corpus = tmp_dir("unit_speeds");
+fn explicit_unit_factors_reproduce_committed_baselines() {
+    let corpus = tmp_dir("unit_factors");
     for entry in std::fs::read_dir(repo_path("scenarios")).unwrap() {
         let path = entry.unwrap().path();
         if path.extension().and_then(|e| e.to_str()) != Some("toml") {
@@ -119,7 +137,7 @@ fn explicit_unit_speeds_reproduce_committed_baselines() {
             .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
         let mut text = std::fs::read_to_string(&path).unwrap();
         if scenario.topology.is_homogeneous() {
-            // make the implicit unit speeds explicit, appending a
+            // make the implicit unit factors explicit, appending a
             // topology section when the file has none (the committed
             // files keep theirs last, so a bare append stays in-section)
             let t = &scenario.topology;
@@ -133,7 +151,10 @@ fn explicit_unit_speeds_reproduce_committed_baselines() {
                 vec!["1.0"; n].join(", ")
             };
             text.push_str(&format!(
-                "cloud_speeds = [{}]\nedge_speeds = [{}]\n",
+                "cloud_speeds = [{}]\nedge_speeds = [{}]\n\
+                 cloud_links = [{}]\nedge_links = [{}]\n",
+                ones(t.clouds),
+                ones(t.edges),
                 ones(t.clouds),
                 ones(t.edges)
             ));
@@ -148,8 +169,8 @@ fn explicit_unit_speeds_reproduce_committed_baselines() {
     let report = suite::check(&result, repo_path("baselines"));
     assert!(
         report.clean(),
-        "explicit all-1.0 speed vectors drifted from the committed \
-         goldens:\n{}",
+        "explicit all-1.0 speed/link vectors drifted from the \
+         committed goldens:\n{}",
         report.render()
     );
     std::fs::remove_dir_all(&corpus).unwrap();

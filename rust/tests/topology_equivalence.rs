@@ -349,6 +349,98 @@ fn explicit_unit_speeds_match_reference_bit_for_bit() {
     }
 }
 
+/// ISSUE 5 satellite: an *explicit* all-1.0 link vector is the same
+/// topology as no link vector at all — the frozen seed-scheduler battery
+/// must hold verbatim through the explicit-links constructor, proving
+/// the scaled-transmission path is the identity at 1.0.
+#[test]
+fn explicit_unit_links_match_reference_bit_for_bit() {
+    let topo = Topology::with_links(
+        1,
+        1,
+        Some(vec![1.0]),
+        Some(vec![1.0]),
+    )
+    .unwrap();
+    assert_eq!(topo, Topology::paper());
+    assert!(topo.is_paper());
+
+    let params = SchedulerParams::default();
+    let mut scratch = SimScratch::default();
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed ^ 0x1E0E);
+        let jobs = random_jobs(&mut rng);
+        let classes: Vec<MachineId> = (0..jobs.len())
+            .map(|_| MachineId::ALL[rng.below(3) as usize])
+            .collect();
+        // simulate + weighted_cost against the frozen seed scheduler
+        let unified = simulate(&jobs, &topo, &lift(&classes));
+        assert_eq!(
+            unified.weighted_sum,
+            reference::weighted_cost(&jobs, &classes),
+            "seed {seed}"
+        );
+        assert_eq!(
+            weighted_cost(&jobs, &topo, &lift(&classes), &mut scratch),
+            reference::weighted_cost(&jobs, &classes),
+            "seed {seed}"
+        );
+        // full trace equivalence, not just the objective
+        let ref_slots = reference::simulate_slots(&jobs, &classes);
+        for e in &unified.trace.entries {
+            assert_eq!(
+                (e.start, e.end),
+                ref_slots[e.job],
+                "seed {seed} job {}",
+                e.job
+            );
+        }
+        // greedy + tabu against the frozen seed scheduler
+        assert_eq!(
+            greedy_assignment(&jobs, &topo),
+            lift(&reference::greedy_assignment(&jobs)),
+            "seed {seed}"
+        );
+        if seed < 15 {
+            let unified = schedule_jobs(&jobs, &topo, &params);
+            let (ref_assignment, ref_cost) =
+                reference::schedule_jobs(&jobs, &params);
+            assert_eq!(
+                unified.assignment,
+                lift(&ref_assignment),
+                "seed {seed}"
+            );
+            assert_eq!(unified.weighted_sum, ref_cost, "seed {seed}");
+        }
+    }
+}
+
+/// Mixed explicit unit factors (speeds *and* links spelled out as 1.0)
+/// still canonicalize to the paper topology and reproduce the golden
+/// Table VII rows.
+#[test]
+fn explicit_unit_factors_keep_table_vii_goldens() {
+    let topo = Topology::with_factors(
+        1,
+        1,
+        Some(vec![1.0]),
+        Some(vec![1.0]),
+        Some(vec![1.0]),
+        Some(vec![1.0]),
+    )
+    .unwrap();
+    assert_eq!(topo, Topology::paper());
+    let jobs = paper_jobs();
+    let cloud = simulate(&jobs, &topo, &vec![MachineRef::cloud(0); 10]);
+    assert_eq!(cloud.unweighted_sum(), 416);
+    assert_eq!(cloud.last_completion(), 100);
+    let edge = simulate(&jobs, &topo, &vec![MachineRef::edge(0); 10]);
+    assert_eq!(edge.unweighted_sum(), 291);
+    let device = simulate(&jobs, &topo, &vec![MachineRef::DEVICE; 10]);
+    assert_eq!(device.unweighted_sum(), 366);
+    assert_eq!(device.last_completion(), 94);
+}
+
 #[test]
 fn single_allocation_classes_unchanged() {
     // the single-job argmin (Algorithm 1's scheduling analogue) is a
