@@ -1,0 +1,109 @@
+#!/usr/bin/env python3
+"""Perf-trend gate for the scheduler bench report.
+
+Compares a freshly produced ``BENCH_sched.json`` against the committed
+base report (``baselines/BENCH_sched.base.json``) and fails when a
+*hot-path* case regressed by more than ``--factor`` (default 2x) on
+``median_ns``.  This is a trend check, not a noise gate: the factor is
+wide enough that scheduler-jitter never trips it, but an accidental
+O(n) -> O(n^2) slip in the delta evaluator or the LNS repair loop does.
+
+Cases present on only one side are reported but never fail the run, so
+adding a bench row does not require touching the base file in the same
+change.  After a trusted CI run, refresh the base with ``--bless``.
+
+Usage:
+  bench_check.py FRESH_JSON BASE_JSON [--factor X] [--bless]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# The cases that guard the PR's perf story: the paper-trace tabu solve
+# (delta evaluation end-to-end), one incremental sweep at 10k jobs
+# (parallel neighborhood scoring), and the 100k-job LNS tier.
+HOT_CASES = (
+    "algorithm2_paper_trace",
+    "tabu_iteration_10k_jobs",
+    "lns_100k_jobs",
+)
+
+
+def load_medians(path):
+    with open(path) as fh:
+        doc = json.load(fh)
+    rows = doc.get("results", [])
+    return {r["case"]: int(r["median_ns"]) for r in rows if "case" in r}
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("fresh", help="freshly produced BENCH_sched.json")
+    parser.add_argument("base", help="committed BENCH_sched.base.json")
+    parser.add_argument(
+        "--factor",
+        type=float,
+        default=2.0,
+        help="fail when fresh median exceeds base * FACTOR (default 2.0)",
+    )
+    parser.add_argument(
+        "--bless",
+        action="store_true",
+        help="rewrite BASE from FRESH instead of checking",
+    )
+    args = parser.parse_args(argv)
+
+    fresh = load_medians(args.fresh)
+
+    if args.bless:
+        with open(args.fresh) as fh:
+            doc = json.load(fh)
+        doc["note"] = (
+            "perf-trend base for bench_check.py; medians blessed from a "
+            "real bench run"
+        )
+        with open(args.base, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print("blessed %s from %s (%d cases)"
+              % (args.base, args.fresh, len(fresh)))
+        return 0
+
+    base = load_medians(args.base)
+    failures = []
+    for case in sorted(set(fresh) | set(base)):
+        hot = case in HOT_CASES
+        if case not in base:
+            print("  new case (no base):       %s" % case)
+            continue
+        if case not in fresh:
+            print("  base case missing:        %s" % case)
+            continue
+        ratio = fresh[case] / max(base[case], 1)
+        verdict = "ok"
+        if hot and ratio > args.factor:
+            verdict = "REGRESSED"
+            failures.append((case, ratio))
+        print(
+            "  %-9s %s  %-36s %12d ns vs %12d ns  (%.2fx)"
+            % ("hot-path" if hot else "", verdict, case,
+               fresh[case], base[case], ratio)
+        )
+
+    if failures:
+        print(
+            "\nFAIL: %d hot-path case(s) regressed beyond %.1fx:"
+            % (len(failures), args.factor)
+        )
+        for case, ratio in failures:
+            print("  %s: %.2fx" % (case, ratio))
+        return 1
+    print("\nperf trend ok (factor %.1fx)" % args.factor)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

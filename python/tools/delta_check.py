@@ -1,0 +1,401 @@
+#!/usr/bin/env python3
+"""Property check + timing harness for the incremental (delta) move
+evaluator behind the Rust tabu scheduler.
+
+This mirrors ``rust/src/scheduler/simulate.rs``'s lane-decomposed
+delta machinery in Python, then drives it against the oracle's full
+``simulate`` over random topologies (speed- and link-heterogeneous),
+all four objectives, and random move sequences:
+
+  * ``cost_delta(job, to)`` must equal a fresh full re-simulation of
+    the moved assignment, for every quoted move;
+  * ``apply(job, to)`` must commit exactly the quoted cost;
+  * the LNS destroy/repair solver is never worse than greedy.
+
+It also times full-recompute vs delta pricing of candidate moves at
+n = 1k/10k jobs, giving an honest (algorithmic, same-language)
+speedup figure for the perf story.  The Rust implementation shares the
+algorithm, so the asymptotic ratio carries over even though absolute
+times do not.
+
+Usage: delta_check.py [--quick] [--no-timing]
+"""
+
+from __future__ import annotations
+
+import argparse
+import bisect
+import sys
+import time
+
+from suite_oracle import (
+    DEVICE,
+    DEVICE_REF,
+    Job,
+    Objective,
+    Rng,
+    Topology,
+    greedy_assignment,
+    lns_assignment,
+    paper_jobs,
+    simulate,
+)
+
+OBJECTIVES = (
+    Objective("weighted-sum"),
+    Objective("unweighted-sum"),
+    Objective("makespan"),
+    Objective("deadline-miss", deadlines=(20, 45)),
+)
+
+
+def contrib(objective, jobs, i, end):
+    """One job's fold contribution (Rust: Objective::accumulate)."""
+    resp = end - jobs[i].release
+    k = objective.kind
+    if k == "weighted-sum":
+        return jobs[i].weight * resp
+    if k == "unweighted-sum":
+        return resp
+    if k == "makespan":
+        return end
+    return 1 if resp > objective.deadline(i) else 0
+
+
+def combine(objective, a, b):
+    return max(a, b) if objective.kind == "makespan" else a + b
+
+
+class Lane:
+    """One shared machine's FCFS queue with prefix fold state
+    (Rust: ``LaneState``)."""
+
+    __slots__ = ("jobs", "keys", "prefix_free", "prefix_val")
+
+    def __init__(self):
+        self.jobs = []
+        self.keys = []
+        self.prefix_free = [0]
+        self.prefix_val = [0]
+
+    def value(self):
+        return self.prefix_val[-1]
+
+
+class DeltaState:
+    """Python mirror of the Rust ``SimScratch`` delta machinery:
+    per-lane availability-ordered queues with prefix completion state,
+    a device-end multiset, and suffix-only re-folds with early exit."""
+
+    def __init__(self, jobs, topo, assignment, objective):
+        self.jobs = jobs
+        self.topo = topo
+        self.objective = objective
+        self.assignment = list(assignment)
+        self.lanes = [Lane() for _ in range(topo.shared_count)]
+        self.device = {}  # end tick -> multiplicity
+        self.device_add = 0
+        for i, m in enumerate(self.assignment):
+            s = topo.shared_index(m)
+            if s is None:
+                end = self._device_end(i)
+                self.device[end] = self.device.get(end, 0) + 1
+                self.device_add = combine(
+                    objective, self.device_add,
+                    contrib(objective, jobs, i, end))
+            else:
+                self.lanes[s].jobs.append(i)
+        for s, lane in enumerate(self.lanes):
+            lane.jobs.sort(key=lambda i: self._key(i, (None, s)))
+            self._rebuild(s)
+        self.total = self._combined()
+
+    # --- folding helpers -------------------------------------------
+    def _machine(self, s):
+        for m in self.topo.machines():
+            if self.topo.shared_index(m) == s:
+                return m
+        raise AssertionError("no machine for lane %d" % s)
+
+    def _key(self, i, m_or_lane):
+        m = (self._machine(m_or_lane[1]) if m_or_lane[0] is None
+             else m_or_lane)
+        j = self.jobs[i]
+        return (self.topo.avail(j, m), j.release, i)
+
+    def _device_end(self, i):
+        j = self.jobs[i]
+        return (self.topo.avail(j, DEVICE_REF)
+                + self.topo.scaled(j.processing(DEVICE), DEVICE_REF))
+
+    def _rebuild(self, s):
+        lane, m = self.lanes[s], self._machine(s)
+        lane.keys = [self._key(i, m) for i in lane.jobs]
+        lane.prefix_free = [0]
+        lane.prefix_val = [0]
+        free = val = 0
+        for i in lane.jobs:
+            j = self.jobs[i]
+            free = (max(self.topo.avail(j, m), free)
+                    + self.topo.scaled(j.processing(m[0]), m))
+            val = combine(self.objective, val,
+                          contrib(self.objective, self.jobs, i, free))
+            lane.prefix_free.append(free)
+            lane.prefix_val.append(val)
+
+    def _resume(self, s, free, val, from_k):
+        """Re-fold a lane suffix, early-exiting when the running free
+        tick reconverges with the stored prefix."""
+        lane, m = self.lanes[s], self._machine(s)
+        for k in range(from_k, len(lane.jobs)):
+            if free == lane.prefix_free[k]:
+                if self.objective.kind == "makespan":
+                    tail = lane.value()
+                else:
+                    tail = lane.value() - lane.prefix_val[k]
+                return combine(self.objective, val, tail)
+            i = lane.jobs[k]
+            j = self.jobs[i]
+            free = (max(self.topo.avail(j, m), free)
+                    + self.topo.scaled(j.processing(m[0]), m))
+            val = combine(self.objective, val,
+                          contrib(self.objective, self.jobs, i, free))
+        return val
+
+    def _value_without(self, s, job):
+        lane = self.lanes[s]
+        pos = lane.jobs.index(job)
+        return self._resume(
+            s, lane.prefix_free[pos], lane.prefix_val[pos], pos + 1)
+
+    def _value_with(self, s, job, m):
+        lane = self.lanes[s]
+        key = self._key(job, m)
+        pos = bisect.bisect_left(lane.keys, key)
+        free = max(key[0], lane.prefix_free[pos]) + self.topo.scaled(
+            self.jobs[job].processing(m[0]), m)
+        val = combine(self.objective, lane.prefix_val[pos],
+                      contrib(self.objective, self.jobs, job, free))
+        return self._resume(s, free, val, pos)
+
+    def _device_partial(self, removed=None, added=None):
+        if self.objective.kind == "makespan":
+            ends = dict(self.device)
+            if removed is not None:
+                e = self._device_end(removed)
+                ends[e] -= 1
+                if not ends[e]:
+                    del ends[e]
+            if added is not None:
+                e = self._device_end(added)
+                ends[e] = ends.get(e, 0) + 1
+            return max(ends) if ends else 0
+        acc = self.device_add
+        if removed is not None:
+            acc -= contrib(self.objective, self.jobs, removed,
+                           self._device_end(removed))
+        if added is not None:
+            acc += contrib(self.objective, self.jobs, added,
+                           self._device_end(added))
+        return acc
+
+    def _combined(self):
+        acc = self._device_partial()
+        for lane in self.lanes:
+            acc = combine(self.objective, acc, lane.value())
+        return acc
+
+    # --- the public mirror of objective_cost_delta / apply_move ----
+    def cost_delta(self, job, to):
+        frm = self.assignment[job]
+        if frm == to:
+            return self.total
+        s_from = self.topo.shared_index(frm)
+        s_to = self.topo.shared_index(to)
+        acc = self._device_partial(
+            removed=job if s_from is None else None,
+            added=job if s_to is None else None)
+        for s in range(len(self.lanes)):
+            if s == s_from:
+                v = self._value_without(s, job)
+            elif s == s_to:
+                v = self._value_with(s, job, to)
+            else:
+                v = self.lanes[s].value()
+            acc = combine(self.objective, acc, v)
+        return acc
+
+    def apply(self, job, to):
+        frm = self.assignment[job]
+        if frm == to:
+            return self.total
+        s_from = self.topo.shared_index(frm)
+        s_to = self.topo.shared_index(to)
+        if s_from is None:
+            e = self._device_end(job)
+            self.device[e] -= 1
+            if not self.device[e]:
+                del self.device[e]
+            if self.objective.kind != "makespan":
+                self.device_add -= contrib(
+                    self.objective, self.jobs, job, e)
+        else:
+            self.lanes[s_from].jobs.remove(job)
+        self.assignment[job] = to
+        if s_to is None:
+            e = self._device_end(job)
+            self.device[e] = self.device.get(e, 0) + 1
+            if self.objective.kind != "makespan":
+                self.device_add += contrib(
+                    self.objective, self.jobs, job, e)
+        else:
+            lane = self.lanes[s_to]
+            key = self._key(job, to)
+            lane.jobs.insert(bisect.bisect_left(lane.keys, key), job)
+        for s in {s_from, s_to} - {None}:
+            self._rebuild(s)
+        self.total = self._combined()
+        return self.total
+
+
+# ------------------------------------------------------ test corpus ---
+def random_jobs(rng, n):
+    jobs, release = [], 0
+    for _ in range(n):
+        release += rng.below(4)
+        jobs.append(Job(
+            release, 1 + rng.below(3),
+            1 + rng.below(9), 1 + rng.below(60),
+            1 + rng.below(12), 1 + rng.below(15),
+            1 + rng.below(70)))
+    return jobs
+
+
+FACTORS = (0.5, 1.0, 1.5, 2.0)
+
+
+def random_topology(rng):
+    clouds = 1 + rng.below(2)
+    edges = 1 + rng.below(3)
+    pick = lambda k: [FACTORS[rng.below(4)] for _ in range(k)]
+    return Topology(clouds, edges,
+                    cloud_speeds=pick(clouds), edge_speeds=pick(edges),
+                    cloud_links=pick(clouds), edge_links=pick(edges))
+
+
+def full_cost(jobs, topo, assignment, objective):
+    return objective.evaluate(jobs, simulate(jobs, topo, assignment))
+
+
+def check_delta(seeds, moves):
+    checked = 0
+    for seed in range(seeds):
+        rng = Rng(seed ^ 0xDE17A)
+        topo = random_topology(rng)
+        machines = topo.machines()
+        jobs = random_jobs(rng, 8 + rng.below(25))
+        assignment = [machines[rng.below(len(machines))]
+                      for _ in jobs]
+        for objective in OBJECTIVES:
+            state = DeltaState(jobs, topo, assignment, objective)
+            assert state.total == full_cost(
+                jobs, topo, assignment, objective), \
+                "prepare mismatch seed %d %s" % (seed, objective.kind)
+            for _ in range(moves):
+                job = rng.below(len(jobs))
+                to = machines[rng.below(len(machines))]
+                quote = state.cost_delta(job, to)
+                probe = list(state.assignment)
+                probe[job] = to
+                fresh = full_cost(jobs, topo, probe, objective)
+                assert quote == fresh, (
+                    "delta quote %d != full %d (seed %d, %s, job %d "
+                    "-> %s)" % (quote, fresh, seed, objective.kind,
+                                job, (to,)))
+                committed = state.apply(job, to)
+                assert committed == quote, "commit != quote"
+                checked += 1
+    print("delta == full re-simulation: %d moves across %d seeds x %d "
+          "objectives" % (checked, seeds, len(OBJECTIVES)))
+
+
+def check_lns(seeds):
+    for seed in range(seeds):
+        rng = Rng(seed ^ 0x715A)
+        topo = random_topology(rng)
+        jobs = random_jobs(rng, 10 + rng.below(30))
+        for objective in OBJECTIVES:
+            greedy = full_cost(jobs, topo,
+                               greedy_assignment(jobs, topo), objective)
+            lns = full_cost(jobs, topo,
+                            lns_assignment(jobs, topo, objective, seed),
+                            objective)
+            assert lns <= greedy, (
+                "lns %d worse than greedy %d (seed %d, %s)"
+                % (lns, greedy, seed, objective.kind))
+    print("lns never worse than greedy: %d seeds x %d objectives"
+          % (seeds, len(OBJECTIVES)))
+
+
+# ----------------------------------------------------------- timing ---
+def time_moves(jobs, topo, price, candidates):
+    t0 = time.perf_counter()
+    acc = 0
+    for job, to in candidates:
+        acc ^= price(job, to)
+    dt = time.perf_counter() - t0
+    return dt / len(candidates) * 1e6, acc  # us per priced move
+
+
+def timing_report(quick):
+    objective = Objective("weighted-sum")
+    topo = Topology(1, 2)
+    machines = topo.machines()
+    rng = Rng(4242)
+    sizes = [1000] if quick else [1000, 10000]
+    print("\nmove-pricing cost, full re-simulation vs delta "
+          "(Python mirror, us/move):")
+    for n in sizes:
+        jobs = random_jobs(rng, n)
+        assignment = greedy_assignment(jobs, topo)
+        state = DeltaState(jobs, topo, assignment, objective)
+        cands = [(rng.below(n), machines[rng.below(len(machines))])
+                 for _ in range(60 if n <= 1000 else 30)]
+
+        def full_price(job, to, _a=assignment):
+            probe = list(_a)
+            probe[job] = to
+            return full_cost(jobs, topo, probe, objective)
+
+        full_us, a1 = time_moves(jobs, topo, full_price, cands)
+        delta_us, a2 = time_moves(jobs, topo, state.cost_delta, cands)
+        assert a1 == a2, "timed paths disagree"
+        print("  n=%6d  full %10.1f  delta %8.1f  speedup %7.1fx"
+              % (n, full_us, delta_us, full_us / max(delta_us, 1e-9)))
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--quick", action="store_true",
+                        help="fewer seeds, 1k-job timing only")
+    parser.add_argument("--no-timing", action="store_true",
+                        help="skip the timing report")
+    args = parser.parse_args(argv)
+    seeds = 8 if args.quick else 25
+    check_delta(seeds, moves=12 if args.quick else 25)
+    check_lns(seeds)
+    # the paper trace itself, through every objective
+    jobs, topo = paper_jobs(), Topology(1, 1)
+    for objective in OBJECTIVES:
+        state = DeltaState(jobs, topo,
+                           greedy_assignment(jobs, topo), objective)
+        assert state.total == full_cost(
+            jobs, topo, state.assignment, objective)
+    print("paper-trace prepare matches full fold for all objectives")
+    if not args.no_timing:
+        timing_report(args.quick)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

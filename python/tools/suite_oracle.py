@@ -32,7 +32,8 @@ import sys
 
 MASK = (1 << 64) - 1
 SEED = 7
-SUITE_EXACT_LIMIT = 10
+# per-solver suite job-count limits (mirrors SolverSpec.suite_limit)
+SUITE_LIMITS = {"exact": 10, "lns": 100000}
 
 # machine classes (canonical order: cloud, edge, device)
 CLOUD, EDGE, DEVICE = 0, 1, 2
@@ -520,7 +521,94 @@ def per_job_optimal_assignment(jobs, topo):
     return out
 
 
-def solve(solver, jobs, topo, objective):
+def per_job_scaled_assignment(jobs, topo):
+    """Speed- and link-aware per-job-optimal (mirrors
+    scheduler/baselines.rs per_job_scaled_assignment): each job on the
+    replica minimizing its uncontended scaled execution, first minimum
+    wins in canonical machine order."""
+    machines = topo.machines()
+    out = []
+    for j in jobs:
+        best = None
+        for m in machines:
+            t = (topo.scaled_trans(j.transmission(m[0]), m)
+                 + topo.scaled(j.processing(m[0]), m))
+            if best is None or t < best[1]:
+                best = (m, t)
+        out.append(best[0])
+    return out
+
+
+# mirrors rust/src/scheduler/lns.rs ("lns_" in ASCII; fixed rounds)
+LNS_SEED_TAG = 0x6C6E735F
+LNS_ROUNDS = 32
+
+
+def lns_repair(jobs, topo, assignment, destroyed):
+    """Greedily reassign the destroyed jobs against the surviving load
+    (mirrors lns.rs::repair: same dispatch-order fold of kept jobs, same
+    (release, priority-first, index) repair order, strict earliest-end
+    with canonical-order tie-break)."""
+    gone = [False] * len(jobs)
+    for i in destroyed:
+        gone[i] = True
+    kept = [i for i in range(len(jobs)) if not gone[i]]
+    kept.sort(key=lambda i: (topo.avail(jobs[i], assignment[i]),
+                             jobs[i].release, i))
+    free = [0] * topo.shared_count
+    for i in kept:
+        m = assignment[i]
+        s = topo.shared_index(m)
+        if s is not None:
+            avail = topo.avail(jobs[i], m)
+            free[s] = (max(avail, free[s])
+                       + topo.scaled(jobs[i].processing(m[0]), m))
+    machines = topo.machines()
+    for i in sorted(destroyed,
+                    key=lambda i: (jobs[i].release, -jobs[i].weight, i)):
+        j = jobs[i]
+        best = None
+        for m in machines:
+            avail = topo.avail(j, m)
+            s = topo.shared_index(m)
+            base = max(avail, free[s]) if s is not None else avail
+            end = base + topo.scaled(j.processing(m[0]), m)
+            if best is None or end < best[1]:
+                best = (m, end)
+        m, end = best
+        assignment[i] = m
+        s = topo.shared_index(m)
+        if s is not None:
+            free[s] = end
+
+
+def lns_assignment(jobs, topo, objective, seed):
+    """Greedy seed + seeded destroy / greedy-repair / accept-if-better
+    rounds (mirrors lns.rs::schedule_lns_objective)."""
+    current = greedy_assignment(jobs, topo)
+    if not jobs:
+        return current
+
+    def cost_of(a):
+        return objective.evaluate(jobs, simulate(jobs, topo, a))
+
+    best_cost = cost_of(current)
+    rng = Rng(seed ^ LNS_SEED_TAG)
+    n = len(jobs)
+    slab = max(n // 8, 1)
+    for _ in range(LNS_ROUNDS):
+        first = rng.below(n)
+        destroyed = [(first + k) % n for k in range(slab)]
+        candidate = list(current)
+        lns_repair(jobs, topo, candidate, destroyed)
+        cost = cost_of(candidate)
+        if cost < best_cost:
+            best_cost = cost
+            current = candidate
+    return current
+
+
+def solve(solver, jobs, topo, objective, seed):
     if solver == "tabu":
         return improve(jobs, topo, greedy_assignment(jobs, topo),
                        objective)
@@ -530,8 +618,12 @@ def solve(solver, jobs, topo, objective):
         return schedule_exact(jobs, topo, objective)
     if solver == "online":
         return schedule_online(jobs, topo, objective)
+    if solver == "lns":
+        return lns_assignment(jobs, topo, objective, seed)
     if solver == "per-job-optimal":
         return per_job_optimal_assignment(jobs, topo)
+    if solver == "per-job-optimal-scaled":
+        return per_job_scaled_assignment(jobs, topo)
     if solver == "all-cloud":
         return [topo.spread(CLOUD, i) for i in range(len(jobs))]
     if solver == "all-edge":
@@ -541,8 +633,12 @@ def solve(solver, jobs, topo, objective):
     raise ValueError(solver)
 
 
+# registry order (mirrors scenario/solver.rs SOLVERS: the two newest
+# solvers are appended after the original eight so committed baseline
+# cells keep their positions)
 SOLVERS = ["tabu", "greedy", "exact", "online", "per-job-optimal",
-           "all-cloud", "all-edge", "all-device"]
+           "all-cloud", "all-edge", "all-device", "lns",
+           "per-job-optimal-scaled"]
 
 
 # ----------------------------------------------------------- metrics ---
@@ -651,14 +747,15 @@ def build_cells(stem, scenario, seed):
     for solver in SOLVERS:
         key = {"scenario": stem, "seed": seed,
                "objective": objective.kind, "solver": solver}
-        if solver == "exact" and len(jobs) > SUITE_EXACT_LIMIT:
+        limit = SUITE_LIMITS.get(solver)
+        if limit is not None and len(jobs) > limit:
             cells.append(dict(key, status="skipped",
-                              reason="%d jobs exceed exact's %d-job "
+                              reason="%d jobs exceed %s's %d-job "
                                      "suite limit"
-                                     % (len(jobs), SUITE_EXACT_LIMIT)))
+                                     % (len(jobs), solver, limit)))
             continue
         m = cell_metrics(jobs, topo, objective, solve(
-            solver, jobs, topo, objective))
+            solver, jobs, topo, objective, seed))
         cells.append(dict(
             key, status="ok",
             cost=m["cost"], weighted_sum=m["weighted_sum"],
@@ -689,6 +786,8 @@ def sanity_checks(all_cells):
     for stem, cells in all_cells.items():
         ok = {c["solver"]: c for c in cells if c["status"] == "ok"}
         assert ok["tabu"]["cost"] <= ok["greedy"]["cost"], stem
+        # accept-if-better from the greedy seed: never worse than greedy
+        assert ok["lns"]["cost"] <= ok["greedy"]["cost"], stem
         if "exact" in ok:
             for solver, c in ok.items():
                 assert ok["exact"]["cost"] <= c["cost"], (stem, solver)

@@ -10,7 +10,8 @@ use edgeward::config::Environment;
 use edgeward::data::Rng;
 use edgeward::scenario::{Arrival, Objective, Scenario, SOLVERS};
 use edgeward::scheduler::{
-    jobs_from_workloads, schedule_jobs_objective, simulate, Job,
+    greedy_assignment, improve_objective, jobs_from_workloads,
+    schedule_jobs_objective, schedule_lns_objective, simulate, Job,
     MachineRef, SchedulerParams, Topology,
 };
 use edgeward::workload::{Application, Workload, SIZE_UNITS};
@@ -208,6 +209,35 @@ fn main() {
             ));
         });
     }
+    // the 100k-job tier: one incremental tabu sweep (delta-priced,
+    // parallel-scored neighborhood) and the LNS destroy/repair solver.
+    // These runs are orders of magnitude beyond the 300 ms default
+    // budget, so widen it and settle for fewer samples per case.
+    b.budget = std::time::Duration::from_secs(2);
+    b.min_samples = 5;
+    let one_iter = SchedulerParams { max_iters: 1, ..SchedulerParams::default() };
+    for (label, n) in [("1k", 1_000usize), ("10k", 10_000), ("100k", 100_000)] {
+        let jobs_n = synthetic(n);
+        let start = greedy_assignment(&jobs_n, &paper_topo);
+        b.bench(&format!("tabu_iteration_{label}_jobs"), || {
+            std::hint::black_box(improve_objective(
+                &jobs_n,
+                &paper_topo,
+                start.clone(),
+                &one_iter,
+                &Objective::WeightedSum,
+            ));
+        });
+        b.bench(&format!("lns_{label}_jobs"), || {
+            std::hint::black_box(schedule_lns_objective(
+                &jobs_n,
+                &paper_topo,
+                &Objective::WeightedSum,
+                4242,
+            ));
+        });
+    }
+
     let results = b.finish();
     if let Err(e) = write_json("sched_multi", &results, "BENCH_sched.json")
     {

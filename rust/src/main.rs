@@ -47,8 +47,8 @@ APP:       breath | mortality | phenotype
 POLICY:    algorithm-1 | fixed-cloud | fixed-edge | fixed-device |
            round-robin | least-loaded
 STRATEGY:  ours | per-job-optimal | all-cloud | all-edge | all-device
-SOLVER:    tabu | greedy | exact | online | per-job-optimal | all-cloud |
-           all-edge | all-device
+SOLVER:    tabu | greedy | exact | online | lns | per-job-optimal |
+           per-job-optimal-scaled | all-cloud | all-edge | all-device
 OBJECTIVE: weighted-sum | unweighted-sum | makespan | deadline-miss
 ARRIVAL:   paper-trace | poisson-ward | code-blue-surge | diurnal-ward
 

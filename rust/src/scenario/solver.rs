@@ -9,8 +9,10 @@
 //! adding a strategy is one registry entry.
 
 use crate::scheduler::{
-    greedy_assignment, schedule_exact_objective, schedule_jobs_objective,
-    schedule_online_objective, simulate, Schedule, Strategy,
+    greedy_assignment, per_job_scaled_assignment,
+    schedule_exact_objective, schedule_jobs_objective,
+    schedule_lns_objective, schedule_online_objective, simulate, Schedule,
+    Strategy,
 };
 use crate::{Error, Result};
 
@@ -37,9 +39,11 @@ pub struct SolverSpec {
     pub summary: &'static str,
     /// Largest job count the batch suite ([`crate::suite`]) runs this
     /// solver at; bigger scenarios get a typed "skipped" cell instead of
-    /// an open-ended run.  Only the exponential exact search sets one
-    /// (well below [`crate::scheduler::EXACT_JOB_LIMIT`], which merely
-    /// guards against pathological misuse).
+    /// an open-ended run.  The exponential exact search sets one (well
+    /// below [`crate::scheduler::EXACT_JOB_LIMIT`], which merely guards
+    /// against pathological misuse), and so does the large-instance
+    /// `lns` tier (it is the recommended solver at 10k–100k jobs, but a
+    /// bound keeps suite sweeps finite).
     pub suite_limit: Option<usize>,
     build: fn() -> Box<dyn Solver>,
 }
@@ -123,6 +127,22 @@ pub const SOLVERS: &[SolverSpec] = &[
         summary: "everything on the patients' own devices",
         suite_limit: None,
         build: || Box::new(FixedSolver(Strategy::AllDevice)),
+    },
+    // appended after the original eight so committed suite baselines
+    // keep their cell positions
+    SolverSpec {
+        name: "lns",
+        aliases: &["large-neighborhood"],
+        summary: "large-neighborhood search: destroy/repair, 100k-job tier",
+        suite_limit: Some(100_000),
+        build: || Box::new(LnsSolver),
+    },
+    SolverSpec {
+        name: "per-job-optimal-scaled",
+        aliases: &["per-job-scaled"],
+        summary: "each job on its best replica (speed- and link-aware)",
+        suite_limit: None,
+        build: || Box::new(PerJobScaledSolver),
     },
 ];
 
@@ -228,6 +248,48 @@ impl Solver for OnlineSolver {
     }
 }
 
+/// Large-neighborhood search: greedy seed, then seeded destroy /
+/// greedy-repair / accept-if-better rounds — the solver tier for the
+/// 10k–100k-job instances where the full tabu neighborhood is too slow
+/// and exact is infeasible.  The scenario seed drives the destroy
+/// stream, so generated and TOML scenarios solve reproducibly.
+struct LnsSolver;
+
+impl Solver for LnsSolver {
+    fn name(&self) -> &'static str {
+        "lns"
+    }
+
+    fn solve(&self, scenario: &Scenario) -> Result<Schedule> {
+        scenario.validate()?;
+        Ok(schedule_lns_objective(
+            &scenario.jobs,
+            &scenario.topology,
+            &scenario.objective,
+            scenario.seed,
+        ))
+    }
+}
+
+/// The speed- and link-aware per-job-optimal baseline: each job on the
+/// replica minimizing its uncontended scaled execution.
+struct PerJobScaledSolver;
+
+impl Solver for PerJobScaledSolver {
+    fn name(&self) -> &'static str {
+        "per-job-optimal-scaled"
+    }
+
+    fn solve(&self, scenario: &Scenario) -> Result<Schedule> {
+        scenario.validate()?;
+        let a = per_job_scaled_assignment(
+            &scenario.jobs,
+            &scenario.topology,
+        );
+        Ok(simulate(&scenario.jobs, &scenario.topology, &a))
+    }
+}
+
 /// A fixed Table VII baseline strategy (objective-independent placement;
 /// the objective still decides how the result is scored).
 struct FixedSolver(Strategy);
@@ -272,14 +334,24 @@ mod tests {
     fn spec_lookup_and_suite_limits() {
         assert_eq!(solver_spec("optimal").unwrap().name, "exact");
         assert!(solver_spec("nope").is_err());
-        // only the exponential exact search carries a suite limit, and
-        // its skip reason names the offending job count
+        // the exponential exact search and the bounded lns tier carry
+        // suite limits; exact's skip reason names the offending count
         for spec in SOLVERS {
-            assert_eq!(spec.suite_limit.is_some(), spec.name == "exact");
+            assert_eq!(
+                spec.suite_limit.is_some(),
+                matches!(spec.name, "exact" | "lns"),
+                "{}",
+                spec.name
+            );
         }
         let exact = solver_spec("exact").unwrap();
         let small = Scenario::paper();
         assert_eq!(exact.skip_reason(&small), None);
+        // lns's 100k bound never trips on committed scenarios
+        assert_eq!(
+            solver_spec("lns").unwrap().skip_reason(&small),
+            None
+        );
         let big = Scenario::builder()
             .arrival(crate::scenario::Arrival::PoissonWard {
                 jobs: 11,

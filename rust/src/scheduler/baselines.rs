@@ -1,8 +1,10 @@
-//! The four comparison strategies of Table VII.
+//! The four comparison strategies of Table VII, plus the speed-aware
+//! sibling of the per-job-optimal baseline
+//! ([`per_job_scaled_assignment`]).
 
 use super::{
     schedule_jobs_objective, simulate, Assignment, Job, MachineId,
-    Schedule, SchedulerParams, Topology,
+    MachineRef, Schedule, SchedulerParams, Topology,
 };
 use crate::scenario::Objective;
 
@@ -101,6 +103,36 @@ impl Strategy {
             Strategy::AllDevice => fixed(MachineId::Device),
         }
     }
+}
+
+/// The speed- and link-aware variant of [`Strategy::PerJobOptimal`]:
+/// each job independently on the concrete *replica* minimizing its
+/// uncontended execution `scaled_transmission + scaled_processing`
+/// (first minimum wins, in canonical class-major machine order).
+/// Unlike the class-level original this sees per-replica speed and link
+/// factors — and unlike the class-level original's replica round-robin,
+/// equal-cost unit replicas all collapse onto the first one: it stays a
+/// deliberately contention-blind baseline for the optimizing solvers to
+/// be measured against.  Registered as `"per-job-optimal-scaled"`.
+pub fn per_job_scaled_assignment(
+    jobs: &[Job],
+    topo: &Topology,
+) -> Assignment {
+    let machines = topo.machines();
+    jobs.iter()
+        .map(|j| {
+            let mut best: Option<(MachineRef, u64)> = None;
+            for &m in &machines {
+                let t = topo
+                    .scaled_transmission(j.transmission(m.class), m)
+                    + topo.scaled_processing(j.processing(m.class), m);
+                if best.map_or(true, |(_, b)| t < b) {
+                    best = Some((m, t));
+                }
+            }
+            best.expect("topology has at least the device").0
+        })
+        .collect()
 }
 
 /// A strategy's evaluated outcome (one row of Table VII).
@@ -274,6 +306,39 @@ mod tests {
         // ...while the optimizing solver routes around the Wi-Fi box
         let ours = eval(&jobs, &topo, Strategy::Ours);
         assert!(ours.weighted_sum <= slow.weighted_sum);
+    }
+
+    #[test]
+    fn per_job_scaled_matches_class_optimum_at_unit_factors() {
+        // at unit speed/link factors a replica costs exactly its class,
+        // so the scaled variant picks a machine of class-optimal cost
+        let jobs = paper_jobs();
+        let topo = Topology::new(2, 3);
+        let a = per_job_scaled_assignment(&jobs, &topo);
+        for (j, m) in jobs.iter().zip(&a) {
+            assert_eq!(
+                j.execution(m.class),
+                j.execution(j.optimal_machine())
+            );
+        }
+    }
+
+    #[test]
+    fn per_job_scaled_sees_a_fast_replica() {
+        let jobs = paper_jobs();
+        let topo =
+            Topology::heterogeneous(vec![1.0], vec![4.0, 1.0]).unwrap();
+        let a = per_job_scaled_assignment(&jobs, &topo);
+        // the 4x edge replica is the uncontended winner for jobs the
+        // class-level baseline routes elsewhere
+        assert!(a.iter().any(|m| *m == MachineRef::edge(0)));
+        // and no job pays more (uncontended) than its class-level pick
+        for (j, m) in jobs.iter().zip(&a) {
+            let cost = topo
+                .scaled_transmission(j.transmission(m.class), *m)
+                + topo.scaled_processing(j.processing(m.class), *m);
+            assert!(cost <= j.execution(j.optimal_machine()));
+        }
     }
 
     #[test]

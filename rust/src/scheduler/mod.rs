@@ -19,6 +19,9 @@
 //!   order, each on its earliest-completion machine.
 //! * [`schedule_jobs_objective`] — Algorithm 2: greedy + tabu neighborhood
 //!   search, minimizing any [`crate::scenario::Objective`].
+//! * [`schedule_lns_objective`] — large-neighborhood search (destroy /
+//!   greedy-repair / accept-if-better), the solver tier for the
+//!   10k–100k-job instances where the full tabu neighborhood is too slow.
 //! * [`schedule_exact_objective`] / [`schedule_online_objective`] —
 //!   branch-and-bound optimum and the non-clairvoyant counterpart, for
 //!   gap measurement.
@@ -34,17 +37,22 @@ mod baselines;
 mod exact;
 mod greedy;
 mod jobs;
+mod lns;
 mod online;
 mod simulate;
 mod tabu;
 
-pub use baselines::{Strategy, StrategyResult};
+pub use baselines::{
+    per_job_scaled_assignment, Strategy, StrategyResult,
+};
 pub use exact::{schedule_exact_objective, EXACT_JOB_LIMIT};
 pub use greedy::greedy_assignment;
 pub use jobs::{jobs_from_workloads, paper_jobs, Job};
+pub use lns::schedule_lns_objective;
 pub use online::schedule_online_objective;
 pub use simulate::{
-    objective_cost, simulate, weighted_cost, Assignment, SimScratch,
+    apply_move, objective_cost, objective_cost_delta, prepare_delta,
+    simulate, weighted_cost, Assignment, SimScratch,
 };
 pub use tabu::{
     improve, improve_objective, schedule_jobs_objective, SchedulerParams,

@@ -31,11 +31,47 @@ pub type Assignment = Vec<MachineRef>;
 /// Reusable scratch for [`weighted_cost`] — lets the tabu search evaluate
 /// thousands of candidate moves without allocating (§Perf: this is the
 /// optimizer's inner loop).  Holds the dispatch order and one free-time
-/// slot per shared replica.
+/// slot per shared replica, plus (after [`prepare_delta`]) the per-lane
+/// prefix state that makes [`objective_cost_delta`] price a single-job
+/// move without re-folding the whole schedule.
 #[derive(Debug, Default, Clone)]
 pub struct SimScratch {
     order: Vec<usize>,
     free: Vec<u64>,
+    /// Per shared replica: its availability-ordered jobs and prefix
+    /// completion state (built by [`prepare_delta`]).
+    lanes: Vec<LaneState>,
+    /// Multiset of device-job completion times (Makespan needs the max
+    /// *after removal*, which the additive sum below cannot answer).
+    device_ends: std::collections::BTreeMap<u64, usize>,
+    /// The device partial: `objective.accumulate` folded over all device
+    /// jobs (a sum for additive objectives, the max end for Makespan).
+    device_add: u64,
+    /// The prepared assignment's total objective value.
+    total: u64,
+}
+
+/// One shared replica's slice of the FCFS fold.  The global dispatch
+/// order restricted to one lane is the lane-local sort by the same
+/// `(availability, release, index)` key, and `free[s]` is only ever
+/// touched by lane-`s` jobs — so the fold decomposes exactly into
+/// independent per-lane folds, and a single-job move only perturbs the
+/// two touched lanes from the moved job's position onward.
+#[derive(Debug, Default, Clone)]
+struct LaneState {
+    /// Lane job indices in `(availability, release, index)` order.
+    jobs: Vec<usize>,
+    /// `prefix_free[k]`: the replica's free time after its first `k` jobs.
+    prefix_free: Vec<u64>,
+    /// `prefix_val[k]`: the objective partial over its first `k` jobs.
+    prefix_val: Vec<u64>,
+}
+
+impl LaneState {
+    /// The lane's full objective partial.
+    fn value(&self) -> u64 {
+        self.prefix_val.last().copied().unwrap_or(0)
+    }
 }
 
 /// The FCFS completion-time fold shared by [`weighted_cost`] and
@@ -134,6 +170,400 @@ pub fn objective_cost(
         acc = objective.accumulate(acc, i, j, end);
     });
     acc
+}
+
+// --------------------------------------------------------------------
+// Incremental (delta) move evaluation.
+//
+// `fold_completions` is O(n log n) per candidate move, which makes the
+// tabu neighborhood O(n² log n · m) per iteration — hopeless at 10k+
+// jobs (ROADMAP: "Solver raw speed at 100k-job scale").  The fold
+// decomposes per lane (see [`LaneState`]), so a single-job move from
+// replica A to replica B only re-folds the *suffixes* of lanes A and B
+// — and each suffix fold stops early as soon as the replica's free time
+// re-converges with the prepared prefix state.  Device "lanes" are
+// private, so their contribution updates in O(1) (O(log n) for the
+// Makespan multiset).  Equivalence with the full re-simulation is
+// bit-for-bit and pinned by tests here, by randomized property tests,
+// and by the committed suite goldens.
+
+/// The global FCFS dispatch key of job `i` on machine `m`, restricted
+/// to one lane: `(availability, release, index)`.
+#[inline]
+fn lane_key(
+    jobs: &[Job],
+    topo: &Topology,
+    i: usize,
+    m: MachineRef,
+) -> (u64, u64, usize) {
+    let avail = jobs[i].release
+        + topo.scaled_transmission(jobs[i].transmission(m.class), m);
+    (avail, jobs[i].release, i)
+}
+
+/// Completion of a device job: private lane, immediate start, no
+/// scaling (device factors are the identity).
+#[inline]
+fn device_end(jobs: &[Job], i: usize) -> u64 {
+    jobs[i].release + jobs[i].processing(crate::scheduler::MachineId::Device)
+}
+
+/// Rebuild `lane`'s prefix completion state from its (already sorted)
+/// job list.
+fn rebuild_lane_prefixes(
+    jobs: &[Job],
+    topo: &Topology,
+    assignment: &[MachineRef],
+    objective: &Objective,
+    s: usize,
+    lane: &mut LaneState,
+) {
+    lane.prefix_free.clear();
+    lane.prefix_free.push(0);
+    lane.prefix_val.clear();
+    lane.prefix_val.push(0);
+    let speed = topo.shared_speed(s);
+    let mut free = 0u64;
+    let mut val = 0u64;
+    for &i in &lane.jobs {
+        let j = &jobs[i];
+        let m = assignment[i];
+        let avail = j.release
+            + topo.scaled_transmission(j.transmission(m.class), m);
+        let p = crate::topology::scale_ticks(j.processing(m.class), speed);
+        free = avail.max(free) + p;
+        val = objective.accumulate(val, i, j, free);
+        lane.prefix_free.push(free);
+        lane.prefix_val.push(val);
+    }
+}
+
+/// Combine per-lane partials and the device partial into the total.
+fn combined_total(
+    objective: &Objective,
+    lanes: &[LaneState],
+    device: u64,
+) -> u64 {
+    let mut total = 0u64;
+    for lane in lanes {
+        total = objective.combine(total, lane.value());
+    }
+    objective.combine(total, device)
+}
+
+/// Build the incremental per-lane state for `assignment` in `scratch`
+/// and return its objective value — bit-for-bit equal to
+/// [`objective_cost`].  Afterwards [`objective_cost_delta`] prices any
+/// single-job move against `scratch` without mutating it (safe to share
+/// read-only across scoring workers), and [`apply_move`] commits one.
+pub fn prepare_delta(
+    jobs: &[Job],
+    topo: &Topology,
+    assignment: &[MachineRef],
+    objective: &Objective,
+    scratch: &mut SimScratch,
+) -> u64 {
+    debug_assert_eq!(jobs.len(), assignment.len());
+    scratch.lanes.resize(topo.shared_count(), LaneState::default());
+    for lane in &mut scratch.lanes {
+        lane.jobs.clear();
+    }
+    scratch.device_ends.clear();
+    scratch.device_add = 0;
+
+    for (i, &m) in assignment.iter().enumerate() {
+        debug_assert!(
+            topo.contains(m),
+            "job {i} assigned to {m:?}, outside topology {topo:?}"
+        );
+        match topo.shared_index(m) {
+            Some(s) => scratch.lanes[s].jobs.push(i),
+            None => {
+                let end = device_end(jobs, i);
+                *scratch.device_ends.entry(end).or_insert(0) += 1;
+                scratch.device_add = objective
+                    .accumulate(scratch.device_add, i, &jobs[i], end);
+            }
+        }
+    }
+    for (s, lane) in scratch.lanes.iter_mut().enumerate() {
+        lane.jobs
+            .sort_unstable_by_key(|&i| lane_key(jobs, topo, i, assignment[i]));
+        rebuild_lane_prefixes(jobs, topo, assignment, objective, s, lane);
+    }
+    let total =
+        combined_total(objective, &scratch.lanes, scratch.device_add);
+    scratch.total = total;
+    total
+}
+
+/// Re-fold `lane.jobs[from..]` starting from `(free, val)`, early-exiting
+/// as soon as the replica's free time matches the prepared prefix state
+/// (every later completion is then unchanged, so the prepared suffix can
+/// be combined wholesale).
+fn resume_fold(
+    jobs: &[Job],
+    topo: &Topology,
+    assignment: &[MachineRef],
+    objective: &Objective,
+    lane: &LaneState,
+    s: usize,
+    mut free: u64,
+    mut val: u64,
+    from: usize,
+) -> u64 {
+    let speed = topo.shared_speed(s);
+    for (k, &i) in lane.jobs.iter().enumerate().skip(from) {
+        if free == lane.prefix_free[k] {
+            // identical suffix: for Makespan the lane partial is its
+            // final (maximal) end, which lives in that suffix; for the
+            // additive objectives subtract the replayed prefix
+            let tail = if matches!(objective, Objective::Makespan) {
+                lane.value()
+            } else {
+                lane.value() - lane.prefix_val[k]
+            };
+            return objective.combine(val, tail);
+        }
+        let j = &jobs[i];
+        let m = assignment[i];
+        let avail = j.release
+            + topo.scaled_transmission(j.transmission(m.class), m);
+        let p = crate::topology::scale_ticks(j.processing(m.class), speed);
+        free = avail.max(free) + p;
+        val = objective.accumulate(val, i, j, free);
+    }
+    val
+}
+
+/// Lane `s`'s objective partial with `job` (currently assigned there)
+/// removed: replay the prepared prefix up to the job, then re-fold the
+/// suffix.
+fn lane_value_without(
+    jobs: &[Job],
+    topo: &Topology,
+    assignment: &[MachineRef],
+    objective: &Objective,
+    lane: &LaneState,
+    s: usize,
+    job: usize,
+) -> u64 {
+    let key = lane_key(jobs, topo, job, assignment[job]);
+    let pos = lane
+        .jobs
+        .binary_search_by_key(&key, |&i| lane_key(jobs, topo, i, assignment[i]))
+        .expect("prepared lane must contain the moved job");
+    resume_fold(
+        jobs,
+        topo,
+        assignment,
+        objective,
+        lane,
+        s,
+        lane.prefix_free[pos],
+        lane.prefix_val[pos],
+        pos + 1,
+    )
+}
+
+/// Lane `s`'s objective partial with `job` inserted on machine `to`
+/// (one of lane `s`'s replicas).
+fn lane_value_with(
+    jobs: &[Job],
+    topo: &Topology,
+    assignment: &[MachineRef],
+    objective: &Objective,
+    lane: &LaneState,
+    s: usize,
+    job: usize,
+    to: MachineRef,
+) -> u64 {
+    let key = lane_key(jobs, topo, job, to);
+    let pos = lane
+        .jobs
+        .binary_search_by_key(&key, |&i| lane_key(jobs, topo, i, assignment[i]))
+        .expect_err("job indices are unique, so the key cannot collide");
+    let j = &jobs[job];
+    let p = crate::topology::scale_ticks(
+        j.processing(to.class),
+        topo.shared_speed(s),
+    );
+    let free = key.0.max(lane.prefix_free[pos]) + p;
+    let val = objective.accumulate(lane.prefix_val[pos], job, j, free);
+    resume_fold(jobs, topo, assignment, objective, lane, s, free, val, pos)
+}
+
+/// The device partial after hypothetically removing job `removed` from
+/// the device and/or adding job `added` onto it.
+fn device_value_after(
+    jobs: &[Job],
+    objective: &Objective,
+    scratch: &SimScratch,
+    removed: Option<usize>,
+    added: Option<usize>,
+) -> u64 {
+    let base = match removed {
+        Some(i) => {
+            let end = device_end(jobs, i);
+            if matches!(objective, Objective::Makespan) {
+                device_max_without(&scratch.device_ends, end)
+            } else {
+                scratch.device_add
+                    - objective.accumulate(0, i, &jobs[i], end)
+            }
+        }
+        None => scratch.device_add,
+    };
+    match added {
+        Some(i) => {
+            objective.accumulate(base, i, &jobs[i], device_end(jobs, i))
+        }
+        None => base,
+    }
+}
+
+/// Largest device end once one occurrence of `end` is removed (under
+/// Makespan the device partial can shrink, which the additive running
+/// sum cannot express — hence the multiset).
+fn device_max_without(
+    ends: &std::collections::BTreeMap<u64, usize>,
+    end: u64,
+) -> u64 {
+    let mut it = ends.iter().rev();
+    match it.next() {
+        Some((&top, &count)) if top == end && count == 1 => {
+            it.next().map_or(0, |(&next, _)| next)
+        }
+        Some((&top, _)) => top,
+        None => 0,
+    }
+}
+
+/// Price the move of `job` onto `to` against the state prepared by
+/// [`prepare_delta`], without committing anything.  Only the two touched
+/// lanes are re-folded (suffix-only, with early exit); every untouched
+/// lane contributes its prepared partial.  Bit-for-bit equal to a fresh
+/// [`objective_cost`] on the moved assignment — which is what lets the
+/// incremental tabu search reproduce the full-re-simulation solver
+/// exactly (pinned by the committed suite goldens).
+pub fn objective_cost_delta(
+    jobs: &[Job],
+    topo: &Topology,
+    assignment: &[MachineRef],
+    objective: &Objective,
+    scratch: &SimScratch,
+    job: usize,
+    to: MachineRef,
+) -> u64 {
+    let from = assignment[job];
+    if from == to {
+        return scratch.total;
+    }
+    let from_lane = topo.shared_index(from);
+    let to_lane = topo.shared_index(to);
+    let mut total = 0u64;
+    for (s, lane) in scratch.lanes.iter().enumerate() {
+        let v = if from_lane == Some(s) {
+            lane_value_without(
+                jobs, topo, assignment, objective, lane, s, job,
+            )
+        } else if to_lane == Some(s) {
+            lane_value_with(
+                jobs, topo, assignment, objective, lane, s, job, to,
+            )
+        } else {
+            lane.value()
+        };
+        total = objective.combine(total, v);
+    }
+    let device = device_value_after(
+        jobs,
+        objective,
+        scratch,
+        from_lane.is_none().then_some(job),
+        to_lane.is_none().then_some(job),
+    );
+    objective.combine(total, device)
+}
+
+/// Commit the move of `job` onto `to`: update `assignment` and the
+/// prepared incremental state, returning the new total — equal to the
+/// [`objective_cost_delta`] quote for the same move.
+pub fn apply_move(
+    jobs: &[Job],
+    topo: &Topology,
+    assignment: &mut [MachineRef],
+    objective: &Objective,
+    scratch: &mut SimScratch,
+    job: usize,
+    to: MachineRef,
+) -> u64 {
+    let from = assignment[job];
+    if from == to {
+        return scratch.total;
+    }
+    if let Some(s) = topo.shared_index(from) {
+        let key = lane_key(jobs, topo, job, from);
+        let lane = &mut scratch.lanes[s];
+        let pos = lane
+            .jobs
+            .binary_search_by_key(&key, |&i| {
+                lane_key(jobs, topo, i, assignment[i])
+            })
+            .expect("prepared lane must contain the moved job");
+        lane.jobs.remove(pos);
+    } else {
+        let end = device_end(jobs, job);
+        let count = scratch
+            .device_ends
+            .remove(&end)
+            .expect("device multiset must contain the moved job's end");
+        if count > 1 {
+            scratch.device_ends.insert(end, count - 1);
+        }
+        if !matches!(objective, Objective::Makespan) {
+            scratch.device_add -=
+                objective.accumulate(0, job, &jobs[job], end);
+        }
+    }
+    assignment[job] = to;
+    if let Some(s) = topo.shared_index(to) {
+        let key = lane_key(jobs, topo, job, to);
+        let lane = &mut scratch.lanes[s];
+        let pos = lane
+            .jobs
+            .binary_search_by_key(&key, |&i| {
+                lane_key(jobs, topo, i, assignment[i])
+            })
+            .expect_err("job indices are unique, so the key cannot collide");
+        lane.jobs.insert(pos, job);
+    } else {
+        let end = device_end(jobs, job);
+        *scratch.device_ends.entry(end).or_insert(0) += 1;
+        if !matches!(objective, Objective::Makespan) {
+            scratch.device_add +=
+                objective.accumulate(0, job, &jobs[job], end);
+        }
+    }
+    if matches!(objective, Objective::Makespan) {
+        // the running max is not maintainable by ±; re-read the multiset
+        scratch.device_add = scratch
+            .device_ends
+            .iter()
+            .next_back()
+            .map_or(0, |(&end, _)| end);
+    }
+    for s in [topo.shared_index(from), topo.shared_index(to)]
+        .into_iter()
+        .flatten()
+    {
+        let lane = &mut scratch.lanes[s];
+        rebuild_lane_prefixes(jobs, topo, assignment, objective, s, lane);
+    }
+    let total =
+        combined_total(objective, &scratch.lanes, scratch.device_add);
+    scratch.total = total;
+    total
 }
 
 /// Simulate an assignment and return the finished [`Schedule`].
@@ -563,6 +993,87 @@ mod tests {
             let fast =
                 weighted_cost(&jobs, &topo, &assignment, &mut scratch);
             assert_eq!(full, fast, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn delta_cost_matches_full_recomputation() {
+        use crate::data::Rng;
+        let objectives = [
+            Objective::WeightedSum,
+            Objective::UnweightedSum,
+            Objective::Makespan,
+            Objective::DeadlineMiss { deadlines: vec![15, 40] },
+        ];
+        for seed in 0..40u64 {
+            let mut rng = Rng::new(seed ^ 0xDE17A);
+            let jobs = paper_jobs();
+            let topo = match seed % 3 {
+                0 => Topology::paper(),
+                1 => Topology::new(2, 3),
+                _ => Topology::with_factors(
+                    1,
+                    2,
+                    Some(vec![1.5]),
+                    Some(vec![0.75, 2.0]),
+                    Some(vec![0.5]),
+                    Some(vec![2.0, 1.0]),
+                )
+                .unwrap(),
+            };
+            let machines = topo.machines();
+            let mut assignment: Assignment = (0..jobs.len())
+                .map(|_| {
+                    machines[rng.below(machines.len() as u64) as usize]
+                })
+                .collect();
+            for obj in &objectives {
+                let mut scratch = SimScratch::default();
+                let mut fresh = SimScratch::default();
+                let total = prepare_delta(
+                    &jobs, &topo, &assignment, obj, &mut scratch,
+                );
+                assert_eq!(
+                    total,
+                    objective_cost(
+                        &jobs, &topo, &assignment, obj, &mut fresh
+                    ),
+                    "prepare, seed {seed}, {obj}"
+                );
+                // quote + commit a chain of random moves; every quote
+                // must equal a fresh full re-simulation of the moved
+                // assignment, and every commit must equal its quote
+                for step in 0..30 {
+                    let i = rng.below(jobs.len() as u64) as usize;
+                    let m = machines
+                        [rng.below(machines.len() as u64) as usize];
+                    let quoted = objective_cost_delta(
+                        &jobs, &topo, &assignment, obj, &scratch, i, m,
+                    );
+                    let mut moved = assignment.clone();
+                    moved[i] = m;
+                    assert_eq!(
+                        quoted,
+                        objective_cost(
+                            &jobs, &topo, &moved, obj, &mut fresh
+                        ),
+                        "quote, seed {seed}, step {step}, {obj}"
+                    );
+                    let committed = apply_move(
+                        &jobs,
+                        &topo,
+                        &mut assignment,
+                        obj,
+                        &mut scratch,
+                        i,
+                        m,
+                    );
+                    assert_eq!(
+                        committed, quoted,
+                        "commit, seed {seed}, step {step}, {obj}"
+                    );
+                }
+            }
         }
     }
 

@@ -14,8 +14,8 @@
 //! minima; the best solution ever seen is returned.
 
 use super::{
-    greedy_assignment, objective_cost, simulate, Assignment, Job,
-    MachineRef, Schedule, SimScratch, Topology,
+    apply_move, greedy_assignment, objective_cost_delta, prepare_delta,
+    simulate, Assignment, Job, MachineRef, Schedule, SimScratch, Topology,
 };
 use crate::scenario::Objective;
 
@@ -124,49 +124,46 @@ pub fn improve_objective(
     let machines = topo.machines();
     let mut current = start;
     let mut scratch = SimScratch::default();
+    // one full fold up front; every candidate move after this is priced
+    // incrementally (§Perf: suffix-only re-folds of the two touched
+    // lanes — see `objective_cost_delta`)
     let mut current_cost =
-        objective_cost(jobs, topo, &current, objective, &mut scratch);
+        prepare_delta(jobs, topo, &current, objective, &mut scratch);
     let mut best_assignment = current.clone();
     let mut best_cost = current_cost;
 
-    // tabu[(job, machine)] = iteration until which moving `job` onto
-    // `machine` is forbidden (prevents undoing a move immediately)
-    let mut tabu: std::collections::HashMap<(usize, MachineRef), usize> =
-        std::collections::HashMap::new();
+    // flat tabu tenure, no hashing in the hot loop:
+    // `until[job * machines + lane]` is the iteration until which moving
+    // `job` onto that machine is forbidden (prevents undoing a move
+    // immediately); 0 — the initial state — means never forbidden,
+    // matching the old map's missing-entry semantics
+    let mut until = vec![0usize; jobs.len() * machines.len()];
     let mut stall = 0usize;
+    let workers = neighborhood_workers(jobs.len());
 
     for iter in 0..params.max_iters {
         // evaluate the full 1-move neighborhood
-        let mut best_move: Option<(usize, MachineRef, u64)> = None;
-        for i in 0..jobs.len() {
-            let old_m = current[i];
-            for &m in &machines {
-                if m == old_m {
-                    continue;
-                }
-                let forbidden =
-                    tabu.get(&(i, m)).map_or(false, |&until| iter < until);
-                // evaluate the move in place (§Perf: no clone, no trace)
-                current[i] = m;
-                let cost = objective_cost(
-                    jobs, topo, &current, objective, &mut scratch,
-                );
-                current[i] = old_m;
-                // aspiration: a tabu move is allowed if it beats the best
-                if forbidden && cost >= best_cost {
-                    continue;
-                }
-                if best_move.map_or(true, |(_, _, c)| cost < c) {
-                    best_move = Some((i, m, cost));
-                }
-            }
-        }
-        let Some((i, m, cost)) = best_move else { break };
+        let Some((cost, i, m)) = best_neighborhood_move(
+            jobs, topo, &current, objective, &scratch, &machines, &until,
+            iter, best_cost, workers,
+        ) else {
+            break;
+        };
 
         // commit; forbid the reverse move for `tenure` iterations
         let old_m = current[i];
-        current[i] = m;
-        tabu.insert((i, old_m), iter + params.tenure);
+        let applied = apply_move(
+            jobs,
+            topo,
+            &mut current,
+            objective,
+            &mut scratch,
+            i,
+            m,
+        );
+        debug_assert_eq!(applied, cost, "commit must equal its quote");
+        until[i * machines.len() + topo.lane_index(old_m)] =
+            iter + params.tenure;
         current_cost = cost;
 
         if current_cost < best_cost {
@@ -184,11 +181,109 @@ pub fn improve_objective(
     simulate(jobs, topo, &best_assignment)
 }
 
+/// How many scoring workers for an `n`-job neighborhood: small instances
+/// stay on the caller's thread (spawn overhead dominates), metro-scale
+/// ones shard across the available cores.  The selected move is
+/// bit-for-bit independent of the worker count — see
+/// [`best_neighborhood_move`].
+fn neighborhood_workers(n: usize) -> usize {
+    const PARALLEL_MIN_JOBS: usize = 2048;
+    if n < PARALLEL_MIN_JOBS {
+        1
+    } else {
+        std::thread::available_parallelism().map_or(1, |p| p.get())
+    }
+}
+
+/// Find the neighborhood's winning move: the allowed candidate
+/// minimizing `(cost, job, machine)`.  This is the sequential scan's
+/// selection rule made explicit — strict `cost <` with first-wins
+/// tie-break over jobs in ascending order and machines in canonical
+/// class-major order — so sharding jobs across workers and merging the
+/// per-worker minima by the same total key reproduces the sequential
+/// argmin byte-for-byte.  Workers share `scratch` read-only; the
+/// aspiration test against the iteration-constant `best_cost` is
+/// order-independent.
+#[allow(clippy::too_many_arguments)]
+fn best_neighborhood_move(
+    jobs: &[Job],
+    topo: &Topology,
+    current: &[MachineRef],
+    objective: &Objective,
+    scratch: &SimScratch,
+    machines: &[MachineRef],
+    until: &[usize],
+    iter: usize,
+    best_cost: u64,
+    workers: usize,
+) -> Option<(u64, usize, MachineRef)> {
+    let scan_job =
+        |i: usize, best: &mut Option<(u64, usize, MachineRef)>| {
+            let old_m = current[i];
+            for (lane, &m) in machines.iter().enumerate() {
+                if m == old_m {
+                    continue;
+                }
+                let forbidden = iter < until[i * machines.len() + lane];
+                let cost = objective_cost_delta(
+                    jobs, topo, current, objective, scratch, i, m,
+                );
+                // aspiration: a tabu move is allowed if it beats the best
+                if forbidden && cost >= best_cost {
+                    continue;
+                }
+                let candidate = (cost, i, m);
+                if best.map_or(true, |b| candidate < b) {
+                    *best = Some(candidate);
+                }
+            }
+        };
+
+    if workers <= 1 || jobs.len() < workers {
+        let mut best = None;
+        for i in 0..jobs.len() {
+            scan_job(i, &mut best);
+        }
+        return best;
+    }
+
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let next = AtomicUsize::new(0);
+    let mut best: Option<(u64, usize, MachineRef)> = None;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut local = None;
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= jobs.len() {
+                            break;
+                        }
+                        scan_job(i, &mut local);
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            if let Some(candidate) =
+                h.join().expect("neighborhood worker panicked")
+            {
+                if best.map_or(true, |b| candidate < b) {
+                    best = Some(candidate);
+                }
+            }
+        }
+    });
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::scheduler::{
-        lower_bound, paper_jobs, weighted_cost, Strategy,
+        lower_bound, objective_cost, paper_jobs, weighted_cost, Strategy,
     };
 
     /// Algorithm 2 under the paper objective (the old `schedule_jobs`).
@@ -327,6 +422,50 @@ mod tests {
             "fast replica unused: {:?}",
             fast.assignment
         );
+    }
+
+    #[test]
+    fn parallel_neighborhood_scan_matches_sequential() {
+        // the deterministic-argmin contract: sharding the scan across
+        // workers selects the exact move the sequential scan selects,
+        // including under tabu marks and aspiration
+        use crate::data::Rng;
+        let topo = Topology::new(2, 3);
+        let machines = topo.machines();
+        let objective = Objective::WeightedSum;
+        for seed in 0..20u64 {
+            let mut rng = Rng::new(seed ^ 0x9A11);
+            let jobs: Vec<Job> =
+                paper_jobs().into_iter().cycle().take(50).collect();
+            let assignment: Assignment = (0..jobs.len())
+                .map(|_| {
+                    machines[rng.below(machines.len() as u64) as usize]
+                })
+                .collect();
+            let mut scratch = SimScratch::default();
+            let total = prepare_delta(
+                &jobs,
+                &topo,
+                &assignment,
+                &objective,
+                &mut scratch,
+            );
+            let mut until = vec![0usize; jobs.len() * machines.len()];
+            for _ in 0..12 {
+                until[rng.below(until.len() as u64) as usize] =
+                    1 + rng.below(5) as usize;
+            }
+            let scan = |workers: usize| {
+                best_neighborhood_move(
+                    &jobs, &topo, &assignment, &objective, &scratch,
+                    &machines, &until, 0, total, workers,
+                )
+            };
+            let sequential = scan(1);
+            for workers in [2, 4, 7] {
+                assert_eq!(sequential, scan(workers), "seed {seed}");
+            }
+        }
     }
 
     #[test]

@@ -77,11 +77,18 @@ fn registry_is_complete_and_aliased() {
         "all-cloud",
         "all-edge",
         "all-device",
+        "lns",
+        "per-job-optimal-scaled",
     ] {
         assert!(names.contains(&expected), "missing {expected}");
     }
     // the paper's name for Algorithm 2 resolves
     assert_eq!(solver("ours").unwrap().name(), "tabu");
+    assert_eq!(solver("large-neighborhood").unwrap().name(), "lns");
+    assert_eq!(
+        solver("per-job-scaled").unwrap().name(),
+        "per-job-optimal-scaled"
+    );
     assert!(solver("no-such-solver").is_err());
 }
 

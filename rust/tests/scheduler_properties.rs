@@ -8,9 +8,11 @@
 use edgeward::data::Rng;
 use edgeward::scenario::Objective;
 use edgeward::scheduler::{
-    greedy_assignment, improve, improve_objective, lower_bound,
-    paper_jobs, schedule_jobs_objective, simulate, Job, MachineId,
-    MachineRef, Schedule, SchedulerParams, Strategy, Topology,
+    apply_move, greedy_assignment, improve, improve_objective,
+    lower_bound, objective_cost, objective_cost_delta, paper_jobs,
+    prepare_delta, schedule_jobs_objective, schedule_lns_objective,
+    simulate, Job, MachineId, MachineRef, Schedule, SchedulerParams,
+    SimScratch, Strategy, Topology,
 };
 
 const CASES: u64 = 200;
@@ -43,6 +45,43 @@ fn random_jobs(rng: &mut Rng) -> Vec<Job> {
             }
         })
         .collect()
+}
+
+/// Per-replica factors drawn from the grid the heterogeneous scenarios
+/// exercise.
+fn random_factors(rng: &mut Rng, k: usize) -> Vec<f64> {
+    const FACTORS: [f64; 4] = [0.5, 1.0, 1.5, 2.0];
+    (0..k).map(|_| FACTORS[rng.below(4) as usize]).collect()
+}
+
+/// Random topology with independent per-replica speed *and* link
+/// factors — the worst case for any incremental-evaluation shortcut.
+fn random_topology(rng: &mut Rng) -> Topology {
+    let clouds = 1 + rng.below(2) as usize;
+    let edges = 1 + rng.below(3) as usize;
+    let cloud_speeds = random_factors(rng, clouds);
+    let edge_speeds = random_factors(rng, edges);
+    let cloud_links = random_factors(rng, clouds);
+    let edge_links = random_factors(rng, edges);
+    Topology::with_factors(
+        clouds,
+        edges,
+        Some(cloud_speeds),
+        Some(edge_speeds),
+        Some(cloud_links),
+        Some(edge_links),
+    )
+    .expect("grid factors are positive and finite")
+}
+
+/// All four objective families, including a multi-deadline rotation.
+fn all_objectives() -> [Objective; 4] {
+    [
+        Objective::WeightedSum,
+        Objective::UnweightedSum,
+        Objective::Makespan,
+        Objective::DeadlineMiss { deadlines: vec![20, 45] },
+    ]
 }
 
 /// C1–C5 invariants of a finished schedule, for any topology.
@@ -473,6 +512,118 @@ fn prop_strategies_agree_on_singleton_jobs() {
             ours.weighted_sum, opt.weighted_sum,
             "seed {seed}"
         );
+    }
+}
+
+/// The incremental move evaluator is an *exact* mirror of the full
+/// re-simulation: over random heterogeneous topologies, every objective,
+/// and random move sequences, each quoted `objective_cost_delta` equals
+/// a fresh `objective_cost` of the moved assignment, and each committed
+/// `apply_move` equals its quote — so the delta-priced tabu search
+/// selects bit-for-bit the same moves the full-recompute search did.
+#[test]
+fn prop_delta_cost_matches_full_after_every_move() {
+    let mut probe_scratch = SimScratch::default();
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed ^ 0xDE17A);
+        let topo = random_topology(&mut rng);
+        let machines = topo.machines();
+        let jobs = random_jobs(&mut rng);
+        for objective in all_objectives() {
+            let mut assignment: Vec<MachineRef> = (0..jobs.len())
+                .map(|_| {
+                    machines[rng.below(machines.len() as u64) as usize]
+                })
+                .collect();
+            let mut scratch = SimScratch::default();
+            let total = prepare_delta(
+                &jobs,
+                &topo,
+                &assignment,
+                &objective,
+                &mut scratch,
+            );
+            assert_eq!(
+                total,
+                objective_cost(
+                    &jobs,
+                    &topo,
+                    &assignment,
+                    &objective,
+                    &mut probe_scratch
+                ),
+                "seed {seed}: prepare mismatch under {objective}"
+            );
+            for step in 0..20 {
+                let job = rng.below(jobs.len() as u64) as usize;
+                let to =
+                    machines[rng.below(machines.len() as u64) as usize];
+                let quote = objective_cost_delta(
+                    &jobs, &topo, &assignment, &objective, &scratch,
+                    job, to,
+                );
+                let mut probe = assignment.clone();
+                probe[job] = to;
+                let fresh = objective_cost(
+                    &jobs,
+                    &topo,
+                    &probe,
+                    &objective,
+                    &mut probe_scratch,
+                );
+                assert_eq!(
+                    quote, fresh,
+                    "seed {seed} step {step}: delta quote diverged \
+                     from full re-simulation under {objective}"
+                );
+                let committed = apply_move(
+                    &jobs,
+                    &topo,
+                    &mut assignment,
+                    &objective,
+                    &mut scratch,
+                    job,
+                    to,
+                );
+                assert_eq!(
+                    committed, quote,
+                    "seed {seed} step {step}: commit != quote"
+                );
+            }
+        }
+    }
+}
+
+/// The LNS destroy/repair tier accepts a repaired plan only when it
+/// strictly improves, starting from the greedy seed — so it is never
+/// worse than greedy, on any topology, under any objective.
+#[test]
+fn prop_lns_never_worse_than_greedy_for_any_objective() {
+    let mut scratch = SimScratch::default();
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed ^ 0x715A);
+        let topo = random_topology(&mut rng);
+        let jobs = random_jobs(&mut rng);
+        for objective in all_objectives() {
+            let greedy = objective_cost(
+                &jobs,
+                &topo,
+                &greedy_assignment(&jobs, &topo),
+                &objective,
+                &mut scratch,
+            );
+            let s = schedule_lns_objective(&jobs, &topo, &objective, seed);
+            check_schedule_invariants(
+                &jobs,
+                &s,
+                &format!("lns seed {seed}"),
+            );
+            assert!(
+                objective.evaluate(&jobs, &s.trace) <= greedy,
+                "seed {seed}: lns lost to its greedy seed under \
+                 {objective}"
+            );
+        }
     }
 }
 
