@@ -5,7 +5,7 @@ evaluator behind the Rust tabu scheduler.
 This mirrors ``rust/src/scheduler/simulate.rs``'s lane-decomposed
 delta machinery in Python, then drives it against the oracle's full
 ``simulate`` over random topologies (speed- and link-heterogeneous),
-all four objectives, and random move sequences:
+all five objectives, and random move sequences:
 
   * ``cost_delta(job, to)`` must equal a fresh full re-simulation of
     the moved assignment, for every quoted move;
@@ -46,6 +46,7 @@ OBJECTIVES = (
     Objective("unweighted-sum"),
     Objective("makespan"),
     Objective("deadline-miss", deadlines=(20, 45)),
+    Objective("weighted-tardiness", deadlines=(20, 45)),
 )
 
 
@@ -59,6 +60,8 @@ def contrib(objective, jobs, i, end):
         return resp
     if k == "makespan":
         return end
+    if k == "weighted-tardiness":
+        return jobs[i].weight * max(resp - objective.deadline(i), 0)
     return 1 if resp > objective.deadline(i) else 0
 
 

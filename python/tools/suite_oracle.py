@@ -21,6 +21,13 @@ no-ops at the default 1.0 — mirroring `Topology::scaled_processing` and
 ceil-division the Rust side switches to for ticks beyond 2^53, where
 f64 division loses precision).
 
+Beyond the flat suite, the oracle also mirrors the metro tier
+(`rust/src/metro/mod.rs`): every `scenarios/metro/*.toml` runs through
+the same coordination ladder — static split, memoized water-filling,
+optional cross-ward refinement descent — and regenerates
+`baselines/metro/*.json` byte-for-byte against `edgeward metro
+scenarios/metro --check baselines/metro --seed 7`.
+
 Usage: python3 python/tools/suite_oracle.py [--seed 7] [--print-goldens]
 (run from the repository root).
 """
@@ -202,6 +209,23 @@ def generate(arrival, seed):
                 j.release = max(math.ceil(t), 1)
                 out.append(j)
         return out
+    if kind == "correlated-burst":
+        # parent events arrive as a Poisson stream; each spawns a
+        # cluster of `burst` jitter-drawn jobs released within `span`
+        # ticks of the parent (mirrors Arrival::CorrelatedBurst)
+        rng = Rng(seed ^ 0xC011E1A7)
+        catalog = paper_jobs()
+        out = []
+        t = 1.0
+        for _ in range(arrival["events"]):
+            t += rng.exponential(arrival["rate"])
+            parent = max(math.ceil(t), 1)
+            for _ in range(arrival["burst"]):
+                template = catalog[rng.below(len(catalog))]
+                j = jitter(rng, template)
+                j.release = parent + rng.below(arrival["span"])
+                out.append(j)
+        return out
     raise ValueError("unknown arrival %r" % kind)
 
 
@@ -212,6 +236,8 @@ ARRIVAL_DEFAULTS = {
                         "surge_at": 30},
     "diurnal-ward": {"jobs": 12, "rate": 0.25, "amplitude": 0.8,
                      "period": 48},
+    "correlated-burst": {"events": 4, "rate": 0.1, "burst": 3,
+                         "span": 4},
 }
 
 
@@ -329,7 +355,8 @@ class Objective:
         self.deadlines = list(deadlines)
 
     def deadline(self, i):
-        if self.kind == "deadline-miss" and self.deadlines:
+        if (self.kind in ("deadline-miss", "weighted-tardiness")
+                and self.deadlines):
             return self.deadlines[i % len(self.deadlines)]
         return 1 << 62
 
@@ -345,6 +372,8 @@ class Objective:
                 acc = max(acc, end)
             elif self.kind == "deadline-miss":
                 acc += 1 if resp > self.deadline(i) else 0
+            elif self.kind == "weighted-tardiness":
+                acc += jobs[i].weight * max(resp - self.deadline(i), 0)
             else:
                 raise ValueError(self.kind)
         return acc
@@ -357,6 +386,10 @@ class Objective:
             return resp
         if self.kind == "makespan":
             return end
+        if self.kind == "weighted-tardiness":
+            # tardiness-dominant, response tie-break (mirrors
+            # Objective::marginal)
+            return job.weight * max(resp - self.deadline(i), 0) + resp
         return (1 << 40) * (1 if resp > self.deadline(i) else 0) + resp
 
     def combine(self, partial, suffix):
@@ -380,6 +413,8 @@ class Objective:
                 contrib = best
             elif self.kind == "makespan":
                 contrib = j.release + best
+            elif self.kind == "weighted-tardiness":
+                contrib = j.weight * max(best - self.deadline(k), 0)
             else:
                 contrib = 1 if best > self.deadline(k) else 0
             bounds[k] = self.combine(contrib, bounds[k + 1])
@@ -676,17 +711,33 @@ def cell_metrics(jobs, topo, objective, assignment):
 
 # --------------------------------------------------- scenario loading ---
 def parse_toml(text):
-    """The tiny TOML subset the scenario corpus uses."""
+    """The tiny TOML subset the scenario corpus uses: `[a.b]` tables,
+    `[[a.b]]` array-of-tables, and scalar/array values.  A header path
+    addresses the *last* element when it traverses an array-of-tables,
+    mirroring the in-tree Rust parser."""
     root = {}
     section = root
     for raw in text.splitlines():
         line = raw.split("#", 1)[0].strip()
         if not line:
             continue
+        if line.startswith("[["):
+            path = [seg.strip() for seg in line[2:-2].split(".")]
+            node = root
+            for seg in path[:-1]:
+                node = node.setdefault(seg, {})
+                if isinstance(node, list):
+                    node = node[-1]
+            node.setdefault(path[-1], []).append({})
+            section = node[path[-1]][-1]
+            continue
         if line.startswith("["):
-            section = root
+            node = root
             for seg in line[1:-1].split("."):
-                section = section.setdefault(seg.strip(), {})
+                node = node.setdefault(seg.strip(), {})
+                if isinstance(node, list):
+                    node = node[-1]
+            section = node
             continue
         k, v = line.split("=", 1)
         section[k.strip()] = parse_scalar(v.strip())
@@ -699,6 +750,10 @@ def parse_scalar(s):
     if s.startswith("["):
         return [parse_scalar(p.strip())
                 for p in s[1:-1].split(",") if p.strip()]
+    if s == "true":
+        return True
+    if s == "false":
+        return False
     try:
         return int(s)
     except ValueError:
@@ -736,6 +791,295 @@ def load_scenario(path):
         "objective": Objective(sc.get("objective", "weighted-sum"),
                                sc.get("deadlines", [])),
     }
+
+
+# ------------------------------------------------------------- metro ---
+# Mirrors rust/src/metro/mod.rs: wards contending for a shared, finite
+# cloud tier, coordinated by a three-rung ladder (static split,
+# memoized water-filling, optional cross-ward refinement descent).
+
+REFINE_MAX_ROUNDS = 200  # mirrors metro::REFINE_MAX_ROUNDS
+
+SOLVER_ALIASES = {"ours": "tabu", "optimal": "exact"}
+
+WARD_PARAM_DEFAULTS = {"max_iters": 200, "tenure": 5, "patience": 30}
+
+
+def load_metro(path):
+    m = parse_toml(open(path).read())["metro"]
+    wards = []
+    for i, w in enumerate(m.get("ward", [])):
+        kind = w.get("arrival", "paper-trace")
+        arrival = dict(ARRIVAL_DEFAULTS[kind], kind=kind)
+        for field in ("jobs", "rate", "baseline", "surge", "surge_at",
+                      "amplitude", "period", "events", "burst", "span"):
+            if field in w and field in arrival:
+                arrival[field] = w[field]
+        sched = w.get("scheduler", {})
+        params = dict(WARD_PARAM_DEFAULTS)
+        for key in params:
+            if key in sched:
+                params[key] = sched[key]
+        solver = w.get("solver", "tabu")
+        wards.append({
+            "name": w.get("name", "ward-%d" % i),
+            "arrival": arrival,
+            "objective": Objective(w.get("objective", "weighted-sum"),
+                                   w.get("deadlines", [])),
+            "weight": w.get("weight", 1),
+            "solver": SOLVER_ALIASES.get(solver, solver),
+            "edges": w.get("edges", 1),
+            "edge_speeds": w.get("edge_speeds"),
+            "edge_links": w.get("edge_links"),
+            "params": params,
+        })
+    return {
+        "name": m.get("name", "metro"),
+        "seed": m.get("seed", 0),
+        "refine": m.get("refine", True),
+        "cloud_replicas": m.get("cloud_replicas", 1),
+        "cloud_speeds": m.get("cloud_speeds"),
+        "cloud_links": m.get("cloud_links"),
+        "wards": wards,
+    }
+
+
+def metro_ward_topology(metro, ward, granted):
+    """The topology a ward sees under a (sorted) cloud grant: the
+    granted shared replicas keep their metro-level factors."""
+    def subset(factors):
+        return [factors[g] for g in granted] if factors else None
+    return Topology(len(granted), ward["edges"],
+                    subset(metro["cloud_speeds"]), ward["edge_speeds"],
+                    subset(metro["cloud_links"]), ward["edge_links"])
+
+
+def ward_assignment(ward, jobs, topo, seed):
+    """One ward's own plan (mirrors Scenario::solve for the ward's
+    solver, with its scheduler params threaded into tabu)."""
+    if ward["solver"] == "tabu":
+        p = ward["params"]
+        return improve(jobs, topo, greedy_assignment(jobs, topo),
+                       ward["objective"], p["max_iters"], p["tenure"],
+                       p["patience"])
+    return solve(ward["solver"], jobs, topo, ward["objective"], seed)
+
+
+def descend_restricted(jobs, topo, start, objective, candidates,
+                       max_rounds):
+    """Strict-improving best-move descent over per-job candidate lists
+    (mirrors scheduler::descend_restricted: jobs ascending, candidates
+    in list order, first-wins tie-break on strictly smaller cost)."""
+    current = list(start)
+
+    def cost_of(a):
+        return objective.evaluate(jobs, simulate(jobs, topo, a))
+
+    cost = cost_of(current)
+    for _ in range(max_rounds):
+        best = None
+        for i, cands in enumerate(candidates):
+            old_m = current[i]
+            for m in cands:
+                if m == old_m:
+                    continue
+                current[i] = m
+                c = cost_of(current)
+                current[i] = old_m
+                if c < cost and (best is None or c < best[0]):
+                    best = (c, i, m)
+        if best is None:
+            break
+        cost, i, m = best
+        current[i] = m
+    return current, cost
+
+
+def refine_metro(metro, seed, wf_grants):
+    """Fuse the wards into one instance seeded from the water-filling
+    allocation and run the restricted cross-ward descent.  Returns
+    (granted, costs, total) or None when skipped (a non-sum ward
+    objective or a fused weight beyond u32)."""
+    wards = metro["wards"]
+    if any(w["objective"].kind not in ("weighted-sum", "unweighted-sum")
+           for w in wards):
+        return None
+    clouds = metro["cloud_replicas"]
+    edge_speeds, edge_links = [], []
+    for w in wards:
+        edge_speeds += list(w["edge_speeds"] or [1.0] * w["edges"])
+        edge_links += list(w["edge_links"] or [1.0] * w["edges"])
+    topo = Topology(clouds, len(edge_speeds), metro["cloud_speeds"],
+                    edge_speeds, metro["cloud_links"], edge_links)
+    jobs, orig_weight, owner, start, candidates = [], [], [], [], []
+    edge_off = 0
+    for w, ward in enumerate(wards):
+        wseed = (seed + w) & MASK
+        wjobs = generate(ward["arrival"], wseed)
+        wtopo = metro_ward_topology(metro, ward, wf_grants[w])
+        plan = ward_assignment(ward, wjobs, wtopo, wseed)
+        lanes = ([(CLOUD, r) for r in range(clouds)]
+                 + [(EDGE, e) for e in
+                    range(edge_off, edge_off + ward["edges"])]
+                 + [DEVICE_REF])
+        for j, m in zip(wjobs, plan):
+            factor = (j.weight if ward["objective"].kind
+                      == "weighted-sum" else 1)
+            fused = ward["weight"] * factor
+            if fused > (1 << 32) - 1:
+                return None
+            jobs.append(Job(j.release, fused, j.proc_cloud,
+                            j.trans_cloud, j.proc_edge, j.trans_edge,
+                            j.proc_device))
+            orig_weight.append(j.weight)
+            owner.append(w)
+            cls, rep = m
+            if cls == CLOUD:
+                start.append((CLOUD, wf_grants[w][rep]))
+            elif cls == EDGE:
+                start.append((EDGE, edge_off + rep))
+            else:
+                start.append(DEVICE_REF)
+            candidates.append(lanes)
+        edge_off += ward["edges"]
+    end, total = descend_restricted(jobs, topo, start,
+                                    Objective("weighted-sum"),
+                                    candidates, REFINE_MAX_ROUNDS)
+    costs = [0] * len(wards)
+    granted = [set() for _ in wards]
+    for (i, m, rel, _a, _s, fin) in simulate(jobs, topo, end):
+        w = owner[i]
+        resp = fin - rel
+        if wards[w]["objective"].kind == "weighted-sum":
+            costs[w] += orig_weight[i] * resp
+        else:
+            costs[w] += resp
+        if m[0] == CLOUD:
+            granted[w].add(m[1])
+    assert total == sum(w["weight"] * c for w, c in zip(wards, costs)), \
+        "fused objective must equal the weighted ward totals"
+    return [sorted(g) for g in granted], costs, total
+
+
+def solve_metro(metro, seed):
+    """The full coordination ladder; returns the MetroOutcome dict in
+    the golden-baseline shape (mirrors Metro::solve_seeded)."""
+    wards = metro["wards"]
+    w_count = len(wards)
+    c_count = metro["cloud_replicas"]
+    memo = {}
+    jobs_per_ward = [0] * w_count
+
+    def solve_ward(w, granted):
+        key = (w, tuple(granted))
+        if key in memo:
+            return memo[key]
+        ward = wards[w]
+        wseed = (seed + w) & MASK
+        jobs = generate(ward["arrival"], wseed)
+        topo = metro_ward_topology(metro, ward, granted)
+        plan = ward_assignment(ward, jobs, topo, wseed)
+        cost = ward["objective"].evaluate(jobs,
+                                          simulate(jobs, topo, plan))
+        jobs_per_ward[w] = len(jobs)
+        memo[key] = cost
+        return cost
+
+    def weighted_total(costs):
+        return sum(w["weight"] * c for w, c in zip(wards, costs))
+
+    # 1. static split: replica r belongs to ward (r mod W) forever
+    static_grants = [[r for r in range(c_count) if r % w_count == w]
+                     for w in range(w_count)]
+    static_costs = [solve_ward(w, g)
+                    for w, g in enumerate(static_grants)]
+    local_total = weighted_total(static_costs)
+
+    # 2. water-filling from zero grants: award the replica with the
+    # largest strictly-positive weighted-cost reduction each round
+    # (first-wins: wards ascending, then replicas ascending)
+    wf_grants = [[] for _ in range(w_count)]
+    wf_costs = [solve_ward(w, []) for w in range(w_count)]
+    remaining = list(range(c_count))
+    while remaining:
+        best = None
+        for w in range(w_count):
+            for r in remaining:
+                cand = sorted(wf_grants[w] + [r])
+                c = solve_ward(w, cand)
+                if c >= wf_costs[w]:
+                    continue
+                gain = wards[w]["weight"] * (wf_costs[w] - c)
+                if best is None or gain > best[0]:
+                    best = (gain, w, r, c)
+        if best is None:
+            break
+        _, w, r, c = best
+        wf_grants[w] = sorted(wf_grants[w] + [r])
+        wf_costs[w] = c
+        remaining.remove(r)
+    wf_total = weighted_total(wf_costs)
+
+    # 3. optional cross-ward refinement on the fused instance
+    refined = refine_metro(metro, seed, wf_grants) \
+        if metro["refine"] else None
+
+    # best candidate wins; ties prefer the simpler mechanism
+    winner = "static"
+    coordinated_total = local_total
+    winning = (static_grants, static_costs)
+    if wf_total < coordinated_total:
+        winner = "water-filling"
+        coordinated_total = wf_total
+        winning = (wf_grants, wf_costs)
+    if refined is not None and refined[2] < coordinated_total:
+        winner = "refined"
+        coordinated_total = refined[2]
+        winning = (refined[0], refined[1])
+
+    return {
+        "cloud_replicas": c_count,
+        "coordinated_total": coordinated_total,
+        "local_total": local_total,
+        "name": metro["name"],
+        "price_of_ward_local": local_total - coordinated_total,
+        "refined": refined is not None,
+        "seed": seed,
+        "winner": winner,
+        "wards": [{
+            "cost": winning[1][w],
+            "granted": winning[0][w],
+            "jobs": jobs_per_ward[w],
+            "local_cost": static_costs[w],
+            "local_granted": static_grants[w],
+            "name": wards[w]["name"],
+            "objective": wards[w]["objective"].kind,
+            "solver": wards[w]["solver"],
+            "weight": wards[w]["weight"],
+        } for w in range(w_count)],
+    }
+
+
+def run_metros(seed, metro_dir, out_dir):
+    """Regenerate baselines/metro/*.json (the same bytes `edgeward
+    metro scenarios/metro --bless baselines/metro --seed N` writes)."""
+    os.makedirs(out_dir, exist_ok=True)
+    for fname in sorted(os.listdir(metro_dir)):
+        if not fname.endswith(".toml"):
+            continue
+        stem = fname[:-5]
+        metro = load_metro(os.path.join(metro_dir, fname))
+        out = solve_metro(metro, seed)
+        assert out["coordinated_total"] <= out["local_total"], stem
+        assert out["price_of_ward_local"] == \
+            out["local_total"] - out["coordinated_total"], stem
+        doc = {"metro": out, "scenario": stem}
+        path = os.path.join(out_dir, stem + ".json")
+        with open(path, "w") as f:
+            f.write(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+        print("%-16s winner=%-13s price=%-5d -> %s"
+              % (stem, out["winner"], out["price_of_ward_local"],
+                 path))
 
 
 # -------------------------------------------------------------- main ---
@@ -794,12 +1138,20 @@ def sanity_checks(all_cells):
 
 
 def print_goldens():
-    """Emit the fixed-seed diurnal job lists the Rust golden test pins."""
+    """Emit the fixed-seed job lists the Rust golden tests pin."""
     arrival = {"kind": "diurnal-ward", "jobs": 6, "rate": 0.3,
                "amplitude": 0.8, "period": 40}
     for seed in (11, 12):
         jobs = generate(arrival, seed)
         print("// diurnal-ward jobs=6 rate=0.3 amplitude=0.8 period=40, "
+              "seed %d" % seed)
+        for j in jobs:
+            print("    %s," % j.rust_literal())
+    arrival = {"kind": "correlated-burst", "events": 3, "rate": 0.2,
+               "burst": 2, "span": 5}
+    for seed in (11, 12):
+        jobs = generate(arrival, seed)
+        print("// correlated-burst events=3 rate=0.2 burst=2 span=5, "
               "seed %d" % seed)
         for j in jobs:
             print("    %s," % j.rust_literal())
@@ -833,6 +1185,9 @@ def main():
               % (stem, ok, len(cells) - ok, path))
     sanity_checks(all_cells)
     print("sanity checks passed (Table VII rows reproduced)")
+    metro_dir = os.path.join(scenario_dir, "metro")
+    if os.path.isdir(metro_dir):
+        run_metros(seed, metro_dir, os.path.join(baseline_dir, "metro"))
 
 
 if __name__ == "__main__":

@@ -152,6 +152,18 @@ impl<'a> FieldReader<'a> {
         }
     }
 
+    /// Raw value list (e.g. the `[[metro.ward]]` array of tables); the
+    /// caller wraps each element in its own [`FieldReader`].
+    pub fn array(&self, key: &str) -> Result<Option<&'a [Value]>> {
+        match self.field(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_array()
+                .map(Some)
+                .ok_or_else(|| self.wrong_type(key, "an array")),
+        }
+    }
+
     /// Variable-length list of non-negative integers (e.g. per-job
     /// deadlines).
     pub fn u64_list(&self, key: &str) -> Result<Option<Vec<u64>>> {
@@ -243,6 +255,19 @@ mod tests {
         assert_eq!(r.f64_list("s").unwrap(), Some(vec![1.5, 2.0, 0.75]));
         assert_eq!(r.f64_list("missing").unwrap(), None);
         assert!(r.f64_list("bad").is_err());
+    }
+
+    #[test]
+    fn array_of_tables_extraction() {
+        let v = toml::parse("[[w]]\nn = 1\n\n[[w]]\nn = 2\n").unwrap();
+        let r = FieldReader::new(&v, "t").unwrap();
+        let items = r.array("w").unwrap().unwrap();
+        assert_eq!(items.len(), 2);
+        let first = FieldReader::new(&items[0], "t.w[0]").unwrap();
+        assert_eq!(first.u64("n").unwrap(), Some(1));
+        first.finish().unwrap();
+        assert_eq!(r.array("missing").unwrap(), None);
+        r.finish().unwrap();
     }
 
     #[test]

@@ -15,7 +15,13 @@
 //!   divided by the lane's per-replica link factor ([`Topology::link`]:
 //!   a Wi-Fi gateway waits twice as long as its wired sibling at link
 //!   0.5) before becoming runnable (constraint C4: transmission overlaps
-//!   other jobs' execution);
+//!   other jobs' execution).  The wire time splits half uplink (request
+//!   payload) / half downlink (response), each scalable by a
+//!   per-replica jitter factor ([`ServeConfig::uplink_jitter`] /
+//!   [`ServeConfig::downlink_jitter`]) — asymmetric paths like a
+//!   congested ward uplink next to a clean downlink; at the symmetric
+//!   default (all 1.0) the halves sum back exactly, bit-for-bit the
+//!   unsplit path;
 //! * **compute** — the measured host inference time is padded by the
 //!   layer's FLOPS ratio ([`crate::device::EmulationProfile`]), divided
 //!   by the lane's per-replica speed factor ([`Topology::speed`]) so a
@@ -107,6 +113,15 @@ pub struct ServeConfig {
     pub compute_scale: f64,
     /// Application mix as relative weights (breath, mortality, phenotype).
     pub app_mix: [f64; 3],
+    /// Per-shared-replica *uplink* jitter factors (canonical shared
+    /// order: cloud replicas, then edge replicas).  Half of a request's
+    /// wire time is the uplink; a factor of 2.0 doubles that half
+    /// (congested ward uplink), 0.5 halves it.  Empty = all 1.0, the
+    /// symmetric default — bit-for-bit the unsplit delay.
+    pub uplink_jitter: Vec<f64>,
+    /// Per-shared-replica *downlink* jitter factors — the response-path
+    /// mirror of [`ServeConfig::uplink_jitter`].  Empty = all 1.0.
+    pub downlink_jitter: Vec<f64>,
 }
 
 impl Default for ServeConfig {
@@ -124,6 +139,8 @@ impl Default for ServeConfig {
             emulate_compute: true,
             compute_scale: 1.0,
             app_mix: [0.4, 0.4, 0.2],
+            uplink_jitter: Vec::new(),
+            downlink_jitter: Vec::new(),
         }
     }
 }
@@ -164,6 +181,12 @@ impl ServeConfig {
                 .f64("compute_scale")?
                 .unwrap_or(def.compute_scale),
             app_mix: r.f64_array::<3>("app_mix")?.unwrap_or(def.app_mix),
+            uplink_jitter: r
+                .f64_list("uplink_jitter")?
+                .unwrap_or_default(),
+            downlink_jitter: r
+                .f64_list("downlink_jitter")?
+                .unwrap_or_default(),
         };
         r.finish()?;
         Ok(cfg)
@@ -184,7 +207,27 @@ impl ServeConfig {
         v.set("emulate_compute", self.emulate_compute);
         v.set("compute_scale", self.compute_scale);
         v.set("app_mix", self.app_mix.to_vec());
+        if !self.uplink_jitter.is_empty() {
+            v.set("uplink_jitter", self.uplink_jitter.clone());
+        }
+        if !self.downlink_jitter.is_empty() {
+            v.set("downlink_jitter", self.downlink_jitter.clone());
+        }
         v
+    }
+
+    /// The uplink jitter factor of one shared lane (1.0 unless
+    /// configured).
+    #[inline]
+    pub fn uplink_jitter_at(&self, s: usize) -> f64 {
+        self.uplink_jitter.get(s).copied().unwrap_or(1.0)
+    }
+
+    /// The downlink jitter factor of one shared lane (1.0 unless
+    /// configured).
+    #[inline]
+    pub fn downlink_jitter_at(&self, s: usize) -> f64 {
+        self.downlink_jitter.get(s).copied().unwrap_or(1.0)
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -207,6 +250,38 @@ impl ServeConfig {
             return Err(Error::Config("app_mix must have positive mass".into()));
         }
         self.topology.validate()?;
+        // the serving path keeps the paper's three-layer shape: a lane
+        // per layer (metro's edge-only ward pools are a scheduler-side
+        // concept, not a serving one)
+        if self.topology.clouds == 0 {
+            return Err(Error::Config(
+                "serving needs at least one cloud replica".into(),
+            ));
+        }
+        for (axis, factors) in [
+            ("uplink_jitter", &self.uplink_jitter),
+            ("downlink_jitter", &self.downlink_jitter),
+        ] {
+            if factors.is_empty() {
+                continue;
+            }
+            if factors.len() != self.topology.shared_count() {
+                return Err(Error::Config(format!(
+                    "{axis} has {} entries for {} shared replica(s)",
+                    factors.len(),
+                    self.topology.shared_count()
+                )));
+            }
+            for (s, &f) in factors.iter().enumerate() {
+                if !f.is_finite() || !Topology::LINK_RANGE.contains(&f) {
+                    return Err(Error::Config(format!(
+                        "{axis} factor {f} for shared replica {s} must \
+                         be finite and within {:?}",
+                        Topology::LINK_RANGE
+                    )));
+                }
+            }
+        }
         Ok(())
     }
 }
@@ -452,12 +527,25 @@ impl Coordinator {
                     // the class path's (jittered) wire time, scaled by
                     // this replica's own link factor — the serving-path
                     // mirror of Topology::scaled_transmission
-                    let trans_ms = transmission_with_jitter(
+                    let base_ms = transmission_with_jitter(
                         &env,
                         machine.layer(),
                         payload_kb,
                         u,
                     ) / topo_r.link(machine);
+                    // half the wire time is the uplink, half the
+                    // downlink, each under its own per-replica jitter;
+                    // ×0.5 is exact and the unit-factor halves sum back
+                    // exactly, so the symmetric default is bit-for-bit
+                    // the unsplit delay
+                    let trans_ms = match topo_r.shared_index(machine) {
+                        Some(s) => {
+                            base_ms * 0.5 * cfg_c.uplink_jitter_at(s)
+                                + base_ms * 0.5
+                                    * cfg_c.downlink_jitter_at(s)
+                        }
+                        None => base_ms,
+                    };
                     let t = Duration::from_secs_f64(
                         trans_ms / 1e3 * cfg_c.time_scale,
                     );
@@ -686,6 +774,47 @@ mod tests {
         let back = ServeConfig::from_reader(&r).unwrap();
         assert_eq!(back.topology, Topology::new(2, 3));
         assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn jitter_config_roundtrip_and_validation() {
+        let mut cfg = ServeConfig::default();
+        cfg.topology = Topology::new(1, 2);
+        cfg.uplink_jitter = vec![2.0, 1.0, 0.5];
+        cfg.downlink_jitter = vec![1.0, 1.0, 4.0];
+        cfg.validate().unwrap();
+        let v = cfg.to_value();
+        let r = crate::config::FieldReader::new(&v, "serve").unwrap();
+        let back = ServeConfig::from_reader(&r).unwrap();
+        assert_eq!(back, cfg);
+        assert_eq!(back.uplink_jitter_at(0), 2.0);
+        assert_eq!(back.downlink_jitter_at(2), 4.0);
+        // absent vectors read back as the symmetric default
+        let sym = ServeConfig::default();
+        let v = sym.to_value();
+        assert!(v.get("uplink_jitter").is_none());
+        assert_eq!(sym.uplink_jitter_at(0), 1.0);
+        // wrong length and out-of-range factors are rejected
+        let mut bad = cfg.clone();
+        bad.uplink_jitter = vec![1.0];
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("uplink_jitter"), "{err}");
+        let mut bad = cfg.clone();
+        bad.downlink_jitter = vec![1.0, 1.0, 1e9];
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("downlink_jitter"), "{err}");
+    }
+
+    #[test]
+    fn symmetric_jitter_is_bitwise_identity() {
+        // the delay-split contract: at unit factors the uplink/downlink
+        // halves sum back to the exact unsplit value for any base
+        let cfg = ServeConfig::default();
+        for base_ms in [0.0, 0.125, 3.7, 42.0, 1234.5678, 9e12] {
+            let split = base_ms * 0.5 * cfg.uplink_jitter_at(0)
+                + base_ms * 0.5 * cfg.downlink_jitter_at(0);
+            assert_eq!(split.to_bits(), base_ms.to_bits(), "{base_ms}");
+        }
     }
 
     #[test]

@@ -35,6 +35,8 @@ COMMANDS:
   suite     DIR [--check DIR] [--bless DIR] [--out FILE] [--seed N]
             [--seeds a,b,..] [--solvers s,..] [--objectives o,..]
             [--threads N]                          batch-run scenario DIR
+  metro     DIR [--check DIR] [--bless DIR] [--out FILE] [--seed N]
+                                                   multi-ward metros on a shared cloud
   schedule  [--strategy S] [--compare] [--clouds N] [--edges N]
                                                    Algorithm 2 / baselines
   serve     [--policy P] [--patients N] [--requests N] [--clouds N]
@@ -49,8 +51,10 @@ POLICY:    algorithm-1 | fixed-cloud | fixed-edge | fixed-device |
 STRATEGY:  ours | per-job-optimal | all-cloud | all-edge | all-device
 SOLVER:    tabu | greedy | exact | online | lns | per-job-optimal |
            per-job-optimal-scaled | all-cloud | all-edge | all-device
-OBJECTIVE: weighted-sum | unweighted-sum | makespan | deadline-miss
-ARRIVAL:   paper-trace | poisson-ward | code-blue-surge | diurnal-ward
+OBJECTIVE: weighted-sum | unweighted-sum | makespan | deadline-miss |
+           weighted-tardiness
+ARRIVAL:   paper-trace | poisson-ward | code-blue-surge | diurnal-ward |
+           correlated-burst
 
 `solve` is the polymorphic front door: a scenario (from --scenario TOML,
 an [scenario] section in --config, or --arrival flags) run through any
@@ -67,6 +71,14 @@ every cell against committed goldens — exiting non-zero on any drift.
 --bless (re)writes the goldens from the current run.  --objectives all
 sweeps every registered objective per scenario (scenarios without
 deadlines run deadline-miss with the documented broadcast default).
+
+`metro` schedules several wards — each a [[metro.ward]] with its own
+edge pool, arrival, objective, weight, and solver — over one shared,
+finite cloud tier ([metro] cloud_replicas).  It runs every metro TOML
+under DIR through the ward-local static split, a global water-filling
+allocation, and an optional cross-ward refinement, reports the price of
+ward-local decisions, and pins the whole outcome to byte-exact goldens
+(--check / --bless, like suite).
 
 Heterogeneous machines: a scenario's [scenario.topology] (or the config
 [serve.topology]) section accepts per-replica speed factors
@@ -390,6 +402,61 @@ fn run() -> edgeward::Result<()> {
                 }
             }
         }
+        "metro" => {
+            let check_dir = args.opt("check");
+            let bless_dir = args.opt("bless");
+            if check_dir.is_some() && bless_dir.is_some() {
+                return Err(edgeward::Error::Config(
+                    "--check and --bless are mutually exclusive: bless \
+                     rewrites the goldens, which would make the check \
+                     vacuously pass"
+                        .into(),
+                ));
+            }
+            let out = args
+                .opt("out")
+                .unwrap_or_else(|| "metro_results.json".into());
+            let seed: Option<u64> = args.parse("seed");
+            let dir = args.subcommand().ok_or_else(|| {
+                edgeward::Error::Config(
+                    "metro: missing metro directory \
+                     (usage: edgeward metro scenarios/metro)"
+                        .into(),
+                )
+            })?;
+            args.finish();
+
+            let metros = edgeward::metro::Metro::discover(&dir)?;
+            let mut results = Vec::with_capacity(metros.len());
+            for (stem, metro) in &metros {
+                let outcome = match seed {
+                    Some(s) => metro.solve_seeded(s)?,
+                    None => metro.solve()?,
+                };
+                print!("{}", outcome.render());
+                println!();
+                results.push((stem.clone(), outcome));
+            }
+            edgeward::metro::write_results(&out, &dir, &results)?;
+            println!("wrote {out} ({} metro(s))", results.len());
+            if let Some(bdir) = &bless_dir {
+                let n = edgeward::metro::bless(&results, bdir)?;
+                println!("blessed {n} metro golden(s) under {bdir}");
+            }
+            if let Some(cdir) = &check_dir {
+                let report = edgeward::metro::check(&results, cdir);
+                print!("{}", report.render());
+                if !report.clean() {
+                    return Err(edgeward::Error::Config(format!(
+                        "metro check against {cdir} failed: {} metro(s) \
+                         deviated (to accept intentional changes, re-run \
+                         with --bless {cdir} and the same --seed, then \
+                         commit the diff)",
+                        report.failures.len()
+                    )));
+                }
+            }
+        }
         "schedule" => {
             let strategy = args.opt("strategy").unwrap_or_else(|| "ours".into());
             let compare = args.flag("compare");
@@ -634,18 +701,23 @@ fn override_scenario(
         Some(name) => {
             let deadlines: Vec<u64> = match (deadline, &base.objective) {
                 (Some(d), _) => vec![d],
-                (None, Objective::DeadlineMiss { deadlines }) => {
-                    deadlines.clone()
-                }
+                (None, Objective::DeadlineMiss { deadlines })
+                | (None, Objective::WeightedTardiness {
+                    deadlines,
+                }) => deadlines.clone(),
                 (None, _) => vec![],
             };
             let parsed = Objective::parse(name, &deadlines)?;
             if deadline.is_some()
-                && !matches!(parsed, Objective::DeadlineMiss { .. })
+                && !matches!(
+                    parsed,
+                    Objective::DeadlineMiss { .. }
+                        | Objective::WeightedTardiness { .. }
+                )
             {
                 return Err(edgeward::Error::Config(
                     "--deadline is only meaningful with \
-                     --objective deadline-miss"
+                     --objective deadline-miss or weighted-tardiness"
                         .into(),
                 ));
             }

@@ -1,0 +1,1079 @@
+//! Metropolitan multi-ward scheduling over a shared, finite cloud tier.
+//!
+//! A hospital network is not one ward: a [`Metro`] holds several wards —
+//! each with its own edge pool, seeded [`Arrival`] process,
+//! [`Objective`], priority weight, and registered solver — all
+//! contending for one *shared* cloud tier with finitely many replicas.
+//! The question the paper's single-ward model cannot ask is how much
+//! ward-local autonomy costs: if every ward keeps a fixed static share
+//! of the cloud and plans alone, how far is the city from what a global
+//! coordinator would achieve?
+//!
+//! [`Metro::solve`] answers it with three nested allocations:
+//!
+//! 1. **Static split** (the ward-local baseline): shared replica `r`
+//!    belongs to ward `r mod W` forever; each ward runs its own solver
+//!    against its private pool plus that fixed share.
+//! 2. **Water-filling**: starting from zero grants, repeatedly award the
+//!    remaining replica to the ward whose weighted cost drops the most
+//!    (each bid is a full per-ward solve, memoized), stopping when no
+//!    grant strictly helps — replicas may stay ungranted (admission
+//!    control: a replica no ward benefits from is not handed out).
+//! 3. **Cross-ward refinement** (optional, [`Metro::refine`]): when
+//!    every ward minimizes a sum objective, the wards are fused into one
+//!    combined instance — all shared cloud replicas, every ward's edge
+//!    pool, job weights scaled by ward weight — and
+//!    [`descend_restricted`] moves individual jobs across ward
+//!    boundaries onto any cloud replica (never onto another ward's
+//!    edges), priced by the incremental delta machinery.
+//!
+//! The headline output is the **price of ward-local decisions**:
+//! `local_total − coordinated_total ≥ 0` by construction, since the
+//! coordinated plan is the best of all three candidates (the static
+//! split included).
+//!
+//! Metros load from a `[metro]` TOML section with one `[[metro.ward]]`
+//! array-of-tables entry per ward (CLI: `edgeward metro scenarios/metro
+//! --check baselines/metro`); see the repository's `scenarios/metro/`
+//! corpus and the quick tour in the crate docs.
+
+mod report;
+
+pub use report::{bless, check, write_results, MetroCheck};
+
+use std::collections::BTreeMap;
+
+use crate::config::FieldReader;
+use crate::scenario::{
+    solver_spec, Arrival, Objective, Scenario, ScenarioBuilder,
+};
+use crate::scheduler::{
+    descend_restricted, Job, MachineId, MachineRef, SchedulerParams,
+    Topology,
+};
+use crate::serialize::Value;
+use crate::{Error, Result};
+
+/// Committed-move budget for the cross-ward refinement descent — part
+/// of the golden-baseline contract (the Python oracle mirrors it).
+pub const REFINE_MAX_ROUNDS: usize = 200;
+
+/// The shared cloud tier every ward bids for.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SharedCloud {
+    /// How many cloud replicas the metropolitan tier owns.
+    pub replicas: usize,
+    /// Per-replica speed factors (empty: unit speeds).
+    pub speeds: Vec<f64>,
+    /// Per-replica link factors (empty: unit links).
+    pub links: Vec<f64>,
+}
+
+/// One ward of the metro: a private edge pool plus everything a flat
+/// [`Scenario`] needs (arrival, objective, solver, tunables).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetroWard {
+    /// Display name (unique within the metro).
+    pub name: String,
+    /// Private edge replicas of this ward.
+    pub edges: usize,
+    /// Per-edge-replica speed factors (empty: unit).
+    pub edge_speeds: Vec<f64>,
+    /// Per-edge-replica link factors (empty: unit).
+    pub edge_links: Vec<f64>,
+    /// The ward's arrival process (realized with the metro seed plus
+    /// the ward index, so wards are correlated only by design).
+    pub arrival: Arrival,
+    /// What this ward's solver minimizes.
+    pub objective: Objective,
+    /// The ward's weight in the metropolitan total (ICU wards outrank
+    /// step-down units).
+    pub weight: u64,
+    /// Canonical solver-registry key the ward plans with.
+    pub solver: String,
+    /// Algorithm 2 tunables for the ward's solver.
+    pub params: SchedulerParams,
+}
+
+/// A metropolitan scheduling instance: wards contending for a shared
+/// cloud tier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Metro {
+    /// Display name.
+    pub name: String,
+    /// Base seed; ward `w` realizes its arrival with `seed + w`
+    /// (wrapping), so one seed reproduces the whole city.
+    pub seed: u64,
+    /// The shared cloud tier.
+    pub cloud: SharedCloud,
+    /// The wards, in declaration order.
+    pub wards: Vec<MetroWard>,
+    /// Whether to run the cross-ward refinement descent (skipped
+    /// automatically when a ward's objective is not a sum).
+    pub refine: bool,
+}
+
+/// One allocation candidate: per-ward cloud grants and the resulting
+/// per-ward objective values.
+#[derive(Debug, Clone)]
+struct Allocation {
+    /// Sorted shared-cloud replica indices granted to each ward.
+    grants: Vec<Vec<usize>>,
+    /// Each ward's own objective value under its grant.
+    costs: Vec<u64>,
+}
+
+/// Per-ward row of a [`MetroOutcome`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct WardOutcome {
+    pub name: String,
+    pub solver: String,
+    pub objective: String,
+    pub weight: u64,
+    pub jobs: usize,
+    /// Cloud replicas the ward owns under the static split.
+    pub local_granted: Vec<usize>,
+    /// The ward's objective value planning alone on that share.
+    pub local_cost: u64,
+    /// Cloud replicas the ward uses under the winning coordination
+    /// (may overlap other wards' after refinement).
+    pub granted: Vec<usize>,
+    /// The ward's objective value under the winning coordination.
+    pub cost: u64,
+}
+
+/// The result of [`Metro::solve`]: the ward-local baseline, the best
+/// coordinated plan, and the price of ward-local decisions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetroOutcome {
+    pub name: String,
+    pub seed: u64,
+    pub cloud_replicas: usize,
+    /// Which candidate won: `static`, `water-filling`, or `refined`.
+    pub winner: String,
+    /// Whether the refinement descent actually ran.
+    pub refined: bool,
+    /// `Σ weight_w · local_cost_w` — every ward planning alone.
+    pub local_total: u64,
+    /// The winning candidate's weighted total (never above
+    /// `local_total`).
+    pub coordinated_total: u64,
+    /// `local_total − coordinated_total` — what ward autonomy costs.
+    pub price_of_ward_local: u64,
+    pub wards: Vec<WardOutcome>,
+}
+
+impl Metro {
+    /// Load from a TOML file holding a `[metro]` section.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Metro> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML text (see [`Metro::load`]).
+    pub fn from_toml(text: &str) -> Result<Metro> {
+        let v = crate::serialize::toml::parse(text)?;
+        let root = FieldReader::new(&v, "metro")?;
+        let Some(section) = root.section("metro")? else {
+            return Err(Error::Config(
+                "metro: missing [metro] section".into(),
+            ));
+        };
+        let metro = Metro::from_reader(&section)?;
+        root.finish()?;
+        Ok(metro)
+    }
+
+    /// Parse a `[metro]` section (with its `[[metro.ward]]` array).
+    pub fn from_reader(r: &FieldReader) -> Result<Metro> {
+        let name =
+            r.string("name")?.unwrap_or_else(|| "metro".to_string());
+        let seed = r.u64("seed")?.unwrap_or(0);
+        let refine = r.bool("refine")?.unwrap_or(true);
+        let cloud = SharedCloud {
+            replicas: r.usize("cloud_replicas")?.unwrap_or(1),
+            speeds: r.f64_list("cloud_speeds")?.unwrap_or_default(),
+            links: r.f64_list("cloud_links")?.unwrap_or_default(),
+        };
+        let Some(ward_values) = r.array("ward")? else {
+            return Err(Error::Config(
+                "metro needs at least one [[metro.ward]]".into(),
+            ));
+        };
+        let mut wards = Vec::with_capacity(ward_values.len());
+        for (i, wv) in ward_values.iter().enumerate() {
+            let path = format!("metro.ward[{i}]");
+            let wr = FieldReader::new(wv, &path)?;
+            let name = wr
+                .string("name")?
+                .unwrap_or_else(|| format!("ward-{i}"));
+            let arrival = Arrival::from_reader(&wr)?;
+            let deadlines =
+                wr.u64_list("deadlines")?.unwrap_or_default();
+            let objective = match wr.string("objective")? {
+                Some(obj) => {
+                    let parsed = Objective::parse(&obj, &deadlines)?;
+                    if !deadlines.is_empty()
+                        && !matches!(
+                            parsed,
+                            Objective::DeadlineMiss { .. }
+                                | Objective::WeightedTardiness { .. }
+                        )
+                    {
+                        return Err(Error::Config(format!(
+                            "{path}.deadlines is only meaningful with \
+                             a deadline-carrying objective"
+                        )));
+                    }
+                    parsed
+                }
+                None if !deadlines.is_empty() => {
+                    return Err(Error::Config(format!(
+                        "{path}.deadlines is only meaningful with a \
+                         deadline-carrying objective"
+                    )));
+                }
+                None => Objective::WeightedSum,
+            };
+            let solver = match wr.string("solver")? {
+                // canonicalize aliases up front so outcome rows and
+                // goldens are alias-independent
+                Some(s) => solver_spec(&s)?.name.to_string(),
+                None => "tabu".to_string(),
+            };
+            let params = match wr.section("scheduler")? {
+                Some(p) => SchedulerParams::from_reader(&p)?,
+                None => SchedulerParams::default(),
+            };
+            let ward = MetroWard {
+                name,
+                edges: wr.usize("edges")?.unwrap_or(1),
+                edge_speeds: wr
+                    .f64_list("edge_speeds")?
+                    .unwrap_or_default(),
+                edge_links: wr
+                    .f64_list("edge_links")?
+                    .unwrap_or_default(),
+                arrival,
+                objective,
+                weight: wr.u64("weight")?.unwrap_or(1),
+                solver,
+                params,
+            };
+            wr.finish()?;
+            wards.push(ward);
+        }
+        r.finish()?;
+        let metro = Metro { name, seed, cloud, wards, refine };
+        metro.validate()?;
+        Ok(metro)
+    }
+
+    /// Serialize the metro spec as a config section (inverse of
+    /// [`Metro::from_reader`]).
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::object();
+        v.set("name", self.name.as_str());
+        v.set("seed", self.seed);
+        v.set("refine", self.refine);
+        v.set("cloud_replicas", self.cloud.replicas);
+        if !self.cloud.speeds.is_empty() {
+            v.set("cloud_speeds", f64_array(&self.cloud.speeds));
+        }
+        if !self.cloud.links.is_empty() {
+            v.set("cloud_links", f64_array(&self.cloud.links));
+        }
+        let wards: Vec<Value> = self
+            .wards
+            .iter()
+            .map(|w| {
+                let mut wv = Value::object();
+                wv.set("name", w.name.as_str());
+                w.arrival.write_fields(&mut wv);
+                wv.set("objective", w.objective.key());
+                if let Objective::DeadlineMiss { deadlines }
+                | Objective::WeightedTardiness { deadlines } =
+                    &w.objective
+                {
+                    wv.set(
+                        "deadlines",
+                        Value::Array(
+                            deadlines
+                                .iter()
+                                .map(|&d| Value::from(d))
+                                .collect(),
+                        ),
+                    );
+                }
+                wv.set("weight", w.weight);
+                wv.set("solver", w.solver.as_str());
+                wv.set("edges", w.edges);
+                if !w.edge_speeds.is_empty() {
+                    wv.set("edge_speeds", f64_array(&w.edge_speeds));
+                }
+                if !w.edge_links.is_empty() {
+                    wv.set("edge_links", f64_array(&w.edge_links));
+                }
+                wv.set("scheduler", w.params.to_value());
+                wv
+            })
+            .collect();
+        v.set("ward", Value::Array(wards));
+        v
+    }
+
+    /// Re-check invariants (every construction path calls this; the CLI
+    /// calls it again defensively before solving).
+    pub fn validate(&self) -> Result<()> {
+        if self.wards.is_empty() {
+            return Err(Error::Config(
+                "metro needs at least one [[metro.ward]]".into(),
+            ));
+        }
+        if self.cloud.replicas == 0 {
+            return Err(Error::Config(
+                "metro.cloud_replicas must be at least 1 — a metro \
+                 exists to contend for a shared cloud tier"
+                    .into(),
+            ));
+        }
+        const MAX_EXACT: u64 = 1 << 53;
+        if self.seed > MAX_EXACT {
+            return Err(Error::Config(format!(
+                "metro.seed {} exceeds 2^53 and would not round-trip \
+                 exactly through the JSON goldens",
+                self.seed
+            )));
+        }
+        let mut names: Vec<&str> =
+            self.wards.iter().map(|w| w.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != self.wards.len() {
+            return Err(Error::Config(
+                "metro ward names must be unique".into(),
+            ));
+        }
+        let mut total_edges = 0usize;
+        for (i, w) in self.wards.iter().enumerate() {
+            let path = format!("metro.ward[{i}]");
+            if w.edges == 0 {
+                return Err(Error::Config(format!(
+                    "{path}: needs at least one edge replica (a ward \
+                     granted no cloud share must still be schedulable)"
+                )));
+            }
+            if w.weight == 0 || w.weight > 1_000_000 {
+                return Err(Error::Config(format!(
+                    "{path}: weight must be in 1..=1000000, got {}",
+                    w.weight
+                )));
+            }
+            w.arrival.validate()?;
+            w.params.validate()?;
+            solver_spec(&w.solver)?;
+            if let Objective::DeadlineMiss { deadlines }
+            | Objective::WeightedTardiness { deadlines } = &w.objective
+            {
+                if deadlines.is_empty() {
+                    return Err(Error::Config(format!(
+                        "{path}: {} objective needs at least one \
+                         deadline",
+                        w.objective.key()
+                    )));
+                }
+            }
+            // the full-grant topology exercises every factor vector
+            // (lengths + ranges) through Topology's own validation
+            self.ward_topology(
+                w,
+                &(0..self.cloud.replicas).collect::<Vec<_>>(),
+            )?;
+            total_edges += w.edges;
+        }
+        if self.refine
+            && self.cloud.replicas + total_edges > Topology::MAX_SHARED
+        {
+            return Err(Error::Config(format!(
+                "metro: refinement fuses all wards into one topology \
+                 with {} shared machines, above the {} limit — shrink \
+                 the metro or set refine = false",
+                self.cloud.replicas + total_edges,
+                Topology::MAX_SHARED
+            )));
+        }
+        Ok(())
+    }
+
+    /// The topology ward `w` sees when granted the given (sorted)
+    /// shared-cloud replica indices.
+    fn ward_topology(
+        &self,
+        ward: &MetroWard,
+        granted: &[usize],
+    ) -> Result<Topology> {
+        for &g in granted {
+            if g >= self.cloud.replicas {
+                return Err(Error::Config(format!(
+                    "granted cloud replica {g} outside the metro's \
+                     {} shared replica(s)",
+                    self.cloud.replicas
+                )));
+            }
+        }
+        let subset = |factors: &Vec<f64>| -> Option<Vec<f64>> {
+            if factors.is_empty() {
+                None
+            } else {
+                Some(granted.iter().map(|&g| factors[g]).collect())
+            }
+        };
+        Topology::with_factors(
+            granted.len(),
+            ward.edges,
+            subset(&self.cloud.speeds),
+            (!ward.edge_speeds.is_empty())
+                .then(|| ward.edge_speeds.clone()),
+            subset(&self.cloud.links),
+            (!ward.edge_links.is_empty())
+                .then(|| ward.edge_links.clone()),
+        )
+    }
+
+    /// Ward `w` as a flat [`Scenario`] under a cloud grant: its private
+    /// edge pool plus the granted shared replicas (with their factors),
+    /// its own arrival realized at `seed + w`.  A 1-ward metro granted
+    /// the whole cloud tier is bit-for-bit the equivalent flat
+    /// scenario.
+    pub fn ward_scenario(
+        &self,
+        w: usize,
+        granted: &[usize],
+    ) -> Result<Scenario> {
+        self.ward_scenario_seeded(w, granted, self.seed)
+    }
+
+    fn ward_scenario_seeded(
+        &self,
+        w: usize,
+        granted: &[usize],
+        seed: u64,
+    ) -> Result<Scenario> {
+        let ward = &self.wards[w];
+        let b: ScenarioBuilder = Scenario::builder()
+            .name(ward.name.clone())
+            .arrival(ward.arrival.clone())
+            .seed(seed.wrapping_add(w as u64))
+            .topology(self.ward_topology(ward, granted)?)
+            .objective(ward.objective.clone())
+            .params(ward.params);
+        b.build()
+    }
+
+    /// Solve the metro with its own seed — see [`Metro::solve_seeded`].
+    pub fn solve(&self) -> Result<MetroOutcome> {
+        self.solve_seeded(self.seed)
+    }
+
+    /// Run the full coordination ladder (static split, water-filling,
+    /// optional cross-ward refinement) and report the price of
+    /// ward-local decisions.  Deterministic in `(metro, seed)`.
+    pub fn solve_seeded(&self, seed: u64) -> Result<MetroOutcome> {
+        self.validate()?;
+        let w_count = self.wards.len();
+        let c_count = self.cloud.replicas;
+        // every (ward, grant) solve is memoized: water-filling re-bids
+        // the same candidate grants across rounds
+        let mut memo: BTreeMap<(usize, Vec<usize>), u64> =
+            BTreeMap::new();
+        let mut jobs_per_ward = vec![0usize; w_count];
+        let mut solve_ward = |w: usize,
+                              granted: &[usize],
+                              jobs_out: &mut [usize]|
+         -> Result<u64> {
+            if let Some(&c) = memo.get(&(w, granted.to_vec())) {
+                return Ok(c);
+            }
+            let sc = self.ward_scenario_seeded(w, granted, seed)?;
+            let schedule = sc.solve(&self.wards[w].solver)?;
+            let cost = sc.evaluate(&schedule);
+            jobs_out[w] = sc.jobs.len();
+            memo.insert((w, granted.to_vec()), cost);
+            Ok(cost)
+        };
+
+        // 1. static split: replica r belongs to ward (r mod W) forever
+        let static_grants: Vec<Vec<usize>> = (0..w_count)
+            .map(|w| {
+                (0..c_count).filter(|r| r % w_count == w).collect()
+            })
+            .collect();
+        let mut static_costs = Vec::with_capacity(w_count);
+        for (w, g) in static_grants.iter().enumerate() {
+            static_costs.push(solve_ward(w, g, &mut jobs_per_ward)?);
+        }
+        let local = Allocation {
+            grants: static_grants,
+            costs: static_costs,
+        };
+        let local_total = self.weighted_total(&local.costs)?;
+
+        // 2. water-filling from zero grants: award the replica with the
+        // largest strictly-positive weighted-cost reduction each round
+        // (deterministic first-wins tie-break: wards ascending, then
+        // replicas ascending)
+        let mut wf = Allocation {
+            grants: vec![Vec::new(); w_count],
+            costs: Vec::with_capacity(w_count),
+        };
+        for w in 0..w_count {
+            let c = solve_ward(w, &[], &mut jobs_per_ward)?;
+            wf.costs.push(c);
+        }
+        let mut remaining: Vec<usize> = (0..c_count).collect();
+        while !remaining.is_empty() {
+            let mut best: Option<(u128, usize, usize, u64)> = None;
+            for w in 0..w_count {
+                for &r in &remaining {
+                    let mut cand = wf.grants[w].clone();
+                    cand.push(r);
+                    cand.sort_unstable();
+                    let c =
+                        solve_ward(w, &cand, &mut jobs_per_ward)?;
+                    if c >= wf.costs[w] {
+                        continue;
+                    }
+                    let gain = self.wards[w].weight as u128
+                        * (wf.costs[w] - c) as u128;
+                    if best.map_or(true, |(bg, ..)| gain > bg) {
+                        best = Some((gain, w, r, c));
+                    }
+                }
+            }
+            let Some((_, w, r, c)) = best else { break };
+            wf.grants[w].push(r);
+            wf.grants[w].sort_unstable();
+            wf.costs[w] = c;
+            remaining.retain(|&x| x != r);
+        }
+        let wf_total = self.weighted_total(&wf.costs)?;
+
+        // 3. optional cross-ward refinement on the fused instance
+        let refined = if self.refine {
+            self.refine_allocation(seed, &wf)?
+        } else {
+            None
+        };
+
+        // the coordinated plan is the best candidate; ties prefer the
+        // simpler mechanism (static, then water-filling, then refined)
+        let mut winner = "static";
+        let mut coordinated_total = local_total;
+        let mut winning: (&Vec<Vec<usize>>, &Vec<u64>) =
+            (&local.grants, &local.costs);
+        if wf_total < coordinated_total {
+            winner = "water-filling";
+            coordinated_total = wf_total;
+            winning = (&wf.grants, &wf.costs);
+        }
+        if let Some(r) = &refined {
+            if r.total < coordinated_total {
+                winner = "refined";
+                coordinated_total = r.total;
+                winning = (&r.granted, &r.costs);
+            }
+        }
+
+        let wards = (0..w_count)
+            .map(|w| WardOutcome {
+                name: self.wards[w].name.clone(),
+                solver: self.wards[w].solver.clone(),
+                objective: self.wards[w].objective.key().to_string(),
+                weight: self.wards[w].weight,
+                jobs: jobs_per_ward[w],
+                local_granted: local.grants[w].clone(),
+                local_cost: local.costs[w],
+                granted: winning.0[w].clone(),
+                cost: winning.1[w],
+            })
+            .collect();
+        Ok(MetroOutcome {
+            name: self.name.clone(),
+            seed,
+            cloud_replicas: c_count,
+            winner: winner.to_string(),
+            refined: refined.is_some(),
+            local_total,
+            coordinated_total,
+            price_of_ward_local: local_total - coordinated_total,
+            wards,
+        })
+    }
+
+    /// `Σ weight_w · cost_w`, rejecting totals beyond the JSON-exact
+    /// range instead of silently rounding them in the goldens.
+    fn weighted_total(&self, costs: &[u64]) -> Result<u64> {
+        let total: u128 = self
+            .wards
+            .iter()
+            .zip(costs)
+            .map(|(w, &c)| w.weight as u128 * c as u128)
+            .sum();
+        u64::try_from(total)
+            .ok()
+            .filter(|&t| t <= (1 << 53))
+            .ok_or_else(|| {
+                Error::Config(format!(
+                    "metro weighted total {total} exceeds 2^53 and \
+                     would not round-trip through the JSON goldens"
+                ))
+            })
+    }
+
+    /// Fuse the wards into one combined instance seeded from the
+    /// water-filling allocation and run the restricted cross-ward
+    /// descent.  Returns `None` (refinement skipped, never an error)
+    /// when a ward's objective is not a sum or a fused job weight would
+    /// overflow.
+    fn refine_allocation(
+        &self,
+        seed: u64,
+        wf: &Allocation,
+    ) -> Result<Option<Refined>> {
+        let sum_factor = |obj: &Objective, j: &Job| -> Option<u32> {
+            match obj {
+                Objective::WeightedSum => Some(j.weight),
+                Objective::UnweightedSum => Some(1),
+                _ => None,
+            }
+        };
+        if self.wards.iter().any(|w| {
+            !matches!(
+                w.objective,
+                Objective::WeightedSum | Objective::UnweightedSum
+            )
+        }) {
+            return Ok(None);
+        }
+
+        // combined topology: the whole cloud tier + every ward's edges
+        let mut edge_speeds = Vec::new();
+        let mut edge_links = Vec::new();
+        for w in &self.wards {
+            let fill = |v: &Vec<f64>, out: &mut Vec<f64>| {
+                if v.is_empty() {
+                    out.resize(out.len() + w.edges, 1.0);
+                } else {
+                    out.extend_from_slice(v);
+                }
+            };
+            fill(&w.edge_speeds, &mut edge_speeds);
+            fill(&w.edge_links, &mut edge_links);
+        }
+        let topo = Topology::with_factors(
+            self.cloud.replicas,
+            edge_speeds.len(),
+            (!self.cloud.speeds.is_empty())
+                .then(|| self.cloud.speeds.clone()),
+            Some(edge_speeds),
+            (!self.cloud.links.is_empty())
+                .then(|| self.cloud.links.clone()),
+            Some(edge_links),
+        )?;
+
+        // combined jobs + start assignment mapped from water-filling
+        let mut jobs: Vec<Job> = Vec::new();
+        let mut orig_weight: Vec<u32> = Vec::new();
+        let mut owner: Vec<usize> = Vec::new();
+        let mut start: Vec<MachineRef> = Vec::new();
+        let mut candidates: Vec<Vec<MachineRef>> = Vec::new();
+        let mut edge_off = 0usize;
+        for (w, ward) in self.wards.iter().enumerate() {
+            let sc =
+                self.ward_scenario_seeded(w, &wf.grants[w], seed)?;
+            let schedule = sc.solve(&ward.solver)?;
+            let mut lanes: Vec<MachineRef> = (0..self.cloud.replicas)
+                .map(MachineRef::cloud)
+                .collect();
+            lanes.extend(
+                (edge_off..edge_off + ward.edges)
+                    .map(MachineRef::edge),
+            );
+            lanes.push(MachineRef::DEVICE);
+            for (j, &m) in
+                sc.jobs.iter().zip(&schedule.assignment)
+            {
+                let factor = sum_factor(&ward.objective, j)
+                    .expect("sum objectives checked above");
+                let Some(fused) = u32::try_from(ward.weight)
+                    .ok()
+                    .and_then(|w| w.checked_mul(factor))
+                else {
+                    return Ok(None);
+                };
+                let mut job = *j;
+                job.weight = fused;
+                jobs.push(job);
+                orig_weight.push(j.weight);
+                owner.push(w);
+                start.push(match m.class {
+                    MachineId::Cloud => {
+                        MachineRef::cloud(wf.grants[w][m.replica])
+                    }
+                    MachineId::Edge => {
+                        MachineRef::edge(edge_off + m.replica)
+                    }
+                    MachineId::Device => MachineRef::DEVICE,
+                });
+                candidates.push(lanes.clone());
+            }
+            edge_off += ward.edges;
+        }
+
+        let (end, total) = descend_restricted(
+            &jobs,
+            &topo,
+            start,
+            &Objective::WeightedSum,
+            &candidates,
+            REFINE_MAX_ROUNDS,
+        );
+
+        // per-ward costs and used cloud replicas from the refined plan
+        let schedule =
+            crate::scheduler::simulate(&jobs, &topo, &end);
+        let mut costs = vec![0u64; self.wards.len()];
+        let mut granted: Vec<Vec<usize>> =
+            vec![Vec::new(); self.wards.len()];
+        for e in &schedule.trace.entries {
+            let w = owner[e.job];
+            let r = e.response();
+            costs[w] += match self.wards[w].objective {
+                Objective::WeightedSum => {
+                    orig_weight[e.job] as u64 * r
+                }
+                _ => r,
+            };
+            if e.machine.class == MachineId::Cloud {
+                granted[w].push(e.machine.replica);
+            }
+        }
+        for g in &mut granted {
+            g.sort_unstable();
+            g.dedup();
+        }
+        debug_assert_eq!(
+            total,
+            self.weighted_total(&costs)?,
+            "fused objective must equal the weighted ward totals"
+        );
+        Ok(Some(Refined { granted, costs, total }))
+    }
+
+    /// Discover every `*.toml` under `dir` (sorted by file stem) as
+    /// metros — the CLI's batch entry point.
+    pub fn discover(
+        dir: impl AsRef<std::path::Path>,
+    ) -> Result<Vec<(String, Metro)>> {
+        let dir = dir.as_ref();
+        let listing = std::fs::read_dir(dir)
+            .map_err(|e| Error::io(dir.display().to_string(), e))?;
+        let mut metros = Vec::new();
+        for entry in listing {
+            let entry = entry
+                .map_err(|e| Error::io(dir.display().to_string(), e))?;
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str())
+                != Some("toml")
+            {
+                continue;
+            }
+            let stem = path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or_default()
+                .to_string();
+            let metro = Metro::load(&path).map_err(|e| {
+                Error::Config(format!("{}: {e}", path.display()))
+            })?;
+            metros.push((stem, metro));
+        }
+        metros.sort_by_key(|m| m.0.clone());
+        if metros.is_empty() {
+            return Err(Error::Config(format!(
+                "no metro TOMLs under {}",
+                dir.display()
+            )));
+        }
+        Ok(metros)
+    }
+}
+
+/// The refinement candidate's result.
+struct Refined {
+    granted: Vec<Vec<usize>>,
+    costs: Vec<u64>,
+    total: u64,
+}
+
+fn f64_array(v: &[f64]) -> Value {
+    Value::Array(v.iter().map(|&f| Value::from(f)).collect())
+}
+
+impl MetroOutcome {
+    /// Flat JSON object (sorted keys) — the golden-baseline shape.
+    pub fn to_value(&self) -> Value {
+        let grant_list = |g: &[usize]| {
+            Value::Array(
+                g.iter().map(|&r| Value::from(r as u64)).collect(),
+            )
+        };
+        let mut v = Value::object();
+        v.set("name", self.name.as_str());
+        v.set("seed", self.seed);
+        v.set("cloud_replicas", self.cloud_replicas);
+        v.set("winner", self.winner.as_str());
+        v.set("refined", self.refined);
+        v.set("local_total", self.local_total);
+        v.set("coordinated_total", self.coordinated_total);
+        v.set("price_of_ward_local", self.price_of_ward_local);
+        let wards: Vec<Value> = self
+            .wards
+            .iter()
+            .map(|w| {
+                let mut wv = Value::object();
+                wv.set("name", w.name.as_str());
+                wv.set("solver", w.solver.as_str());
+                wv.set("objective", w.objective.as_str());
+                wv.set("weight", w.weight);
+                wv.set("jobs", w.jobs);
+                wv.set("local_granted", grant_list(&w.local_granted));
+                wv.set("local_cost", w.local_cost);
+                wv.set("granted", grant_list(&w.granted));
+                wv.set("cost", w.cost);
+                wv.sort_keys();
+                wv
+            })
+            .collect();
+        v.set("wards", Value::Array(wards));
+        v.sort_keys();
+        v
+    }
+
+    /// Human summary: one table row per ward plus the coordination
+    /// verdict and the price of ward-local decisions.
+    pub fn render(&self) -> String {
+        let grants = |g: &[usize]| {
+            if g.is_empty() {
+                "-".to_string()
+            } else {
+                g.iter()
+                    .map(|r| format!("CC{r}"))
+                    .collect::<Vec<_>>()
+                    .join("+")
+            }
+        };
+        let mut t = crate::report::TextTable::new(&[
+            "Ward", "Solver", "Objective", "Wt", "Jobs", "Local Cloud",
+            "Local Cost", "Cloud", "Cost",
+        ])
+        .with_title(format!(
+            "metro {}: {} ward(s) over {} shared cloud replica(s), \
+             seed {}",
+            self.name,
+            self.wards.len(),
+            self.cloud_replicas,
+            self.seed
+        ));
+        for w in &self.wards {
+            t.row(vec![
+                w.name.clone(),
+                w.solver.clone(),
+                w.objective.clone(),
+                w.weight.to_string(),
+                w.jobs.to_string(),
+                grants(&w.local_granted),
+                w.local_cost.to_string(),
+                grants(&w.granted),
+                w.cost.to_string(),
+            ]);
+        }
+        let mut out = t.render();
+        out.push_str(&format!(
+            "coordination winner : {}\nward-local total    : {}\n\
+             coordinated total   : {}\nprice of ward-local : {}\n",
+            self.winner,
+            self.local_total,
+            self.coordinated_total,
+            self.price_of_ward_local
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_metro() -> Metro {
+        Metro::from_toml(
+            "[metro]\nname = \"duo\"\nseed = 7\ncloud_replicas = 2\n\n\
+             [[metro.ward]]\nname = \"icu\"\n\
+             arrival = \"poisson-ward\"\njobs = 6\nrate = 0.4\n\
+             weight = 2\nedges = 1\n\n\
+             [[metro.ward]]\nname = \"stepdown\"\n\
+             arrival = \"poisson-ward\"\njobs = 5\nrate = 0.3\n\
+             edges = 2\n",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let m = tiny_metro();
+        assert_eq!(m.name, "duo");
+        assert_eq!(m.cloud.replicas, 2);
+        assert_eq!(m.wards.len(), 2);
+        assert_eq!(m.wards[0].weight, 2);
+        assert_eq!(m.wards[1].edges, 2);
+        assert!(m.refine);
+        let mut root = Value::object();
+        root.set("metro", m.to_value());
+        let text = crate::serialize::toml::emit(&root);
+        let back = Metro::from_toml(&text).unwrap();
+        assert_eq!(back, m, "emitted:\n{text}");
+    }
+
+    #[test]
+    fn parse_rejects_degenerate_metros() {
+        // no wards
+        assert!(Metro::from_toml(
+            "[metro]\ncloud_replicas = 2\n"
+        )
+        .is_err());
+        // no [metro] section at all
+        assert!(Metro::from_toml("x = 1\n").is_err());
+        // zero-replica cloud tier
+        assert!(Metro::from_toml(
+            "[metro]\ncloud_replicas = 0\n\n[[metro.ward]]\n"
+        )
+        .is_err());
+        // duplicate ward names
+        assert!(Metro::from_toml(
+            "[metro]\n\n[[metro.ward]]\nname = \"a\"\n\n\
+             [[metro.ward]]\nname = \"a\"\n"
+        )
+        .is_err());
+        // zero-edge ward
+        assert!(Metro::from_toml(
+            "[metro]\n\n[[metro.ward]]\nedges = 0\n"
+        )
+        .is_err());
+        // unknown ward field
+        assert!(Metro::from_toml(
+            "[metro]\n\n[[metro.ward]]\nbanana = 1\n"
+        )
+        .is_err());
+        // ward solver aliases canonicalize
+        let m = Metro::from_toml(
+            "[metro]\n\n[[metro.ward]]\nsolver = \"ours\"\n",
+        )
+        .unwrap();
+        assert_eq!(m.wards[0].solver, "tabu");
+    }
+
+    #[test]
+    fn ward_scenario_subsets_shared_factors() {
+        let m = Metro::from_toml(
+            "[metro]\nseed = 3\ncloud_replicas = 2\n\
+             cloud_speeds = [2.0, 1.0]\ncloud_links = [1.0, 0.5]\n\n\
+             [[metro.ward]]\narrival = \"poisson-ward\"\njobs = 4\n\
+             rate = 0.4\nedges = 1\n",
+        )
+        .unwrap();
+        // granted only the second shared replica: its factors follow
+        let sc = m.ward_scenario(0, &[1]).unwrap();
+        assert_eq!(sc.topology.clouds, 1);
+        assert_eq!(sc.topology.cloud_speeds(), vec![1.0]);
+        assert_eq!(sc.topology.cloud_links(), vec![0.5]);
+        // granted nothing: an edge-only pool
+        let none = m.ward_scenario(0, &[]).unwrap();
+        assert_eq!(none.topology.clouds, 0);
+        assert_eq!(none.topology.edges, 1);
+        // out-of-range grants are typed errors
+        assert!(m.ward_scenario(0, &[2]).is_err());
+    }
+
+    #[test]
+    fn solve_reports_nonnegative_price_and_winning_totals() {
+        let m = tiny_metro();
+        let out = m.solve().unwrap();
+        assert_eq!(out.wards.len(), 2);
+        assert!(out.coordinated_total <= out.local_total);
+        assert_eq!(
+            out.price_of_ward_local,
+            out.local_total - out.coordinated_total
+        );
+        // the reported per-ward costs must reproduce the totals
+        let coordinated: u64 = out
+            .wards
+            .iter()
+            .map(|w| w.weight * w.cost)
+            .sum();
+        assert_eq!(coordinated, out.coordinated_total);
+        let local: u64 = out
+            .wards
+            .iter()
+            .map(|w| w.weight * w.local_cost)
+            .sum();
+        assert_eq!(local, out.local_total);
+        // deterministic end to end
+        let again = m.solve().unwrap();
+        assert_eq!(again, out);
+        // JSON shape survives sorting (golden stability)
+        let v = out.to_value();
+        let mut sorted = v.clone();
+        sorted.sort_keys();
+        assert_eq!(sorted.to_string(), v.to_string());
+        // render mentions the headline number
+        let r = out.render();
+        assert!(r.contains("price of ward-local"), "{r}");
+    }
+
+    #[test]
+    fn useless_cloud_resolves_tie_to_static_at_zero_price() {
+        // a ward whose solver never touches the cloud: granting or
+        // withholding the shared replica changes nothing, so
+        // water-filling finds no positive gain (admission control
+        // leaves the replica ungranted), every candidate ties, and the
+        // tie must resolve to the simplest mechanism at price zero
+        let m = Metro::from_toml(
+            "[metro]\nseed = 5\ncloud_replicas = 1\n\
+             cloud_speeds = [0.015625]\ncloud_links = [0.015625]\n\
+             refine = false\n\n\
+             [[metro.ward]]\narrival = \"poisson-ward\"\njobs = 5\n\
+             rate = 0.4\nsolver = \"all-edge\"\nedges = 2\n",
+        )
+        .unwrap();
+        let out = m.solve().unwrap();
+        assert_eq!(out.winner, "static");
+        assert_eq!(out.price_of_ward_local, 0);
+        assert_eq!(out.wards[0].cost, out.wards[0].local_cost);
+    }
+
+    #[test]
+    fn refinement_skips_non_sum_objectives() {
+        let m = Metro::from_toml(
+            "[metro]\nseed = 2\ncloud_replicas = 1\n\n\
+             [[metro.ward]]\narrival = \"poisson-ward\"\njobs = 5\n\
+             rate = 0.4\nobjective = \"makespan\"\nedges = 1\n",
+        )
+        .unwrap();
+        assert!(m.refine);
+        let out = m.solve().unwrap();
+        assert!(!out.refined);
+        assert_ne!(out.winner, "refined");
+    }
+}

@@ -1,0 +1,336 @@
+//! Golden pinning and artifacts for metro runs.
+//!
+//! Each metro pins to one JSON golden (`baselines/metro/<stem>.json`)
+//! holding the full [`MetroOutcome`] — grants, per-ward costs, winner,
+//! and the price of ward-local decisions — so a coordination regression
+//! diffs as a small, reviewable change to one file.  Unlike the flat
+//! suite's field-by-field [`crate::suite::check`], a metro golden is
+//! compared *byte-for-byte*: the document is exactly what
+//! [`bless`] writes, so any deviation (a moved cost, a re-ordered
+//! grant, a winner flip) fails the gate with the same precision the
+//! Python oracle's `git diff` cross-check uses.
+
+use std::path::{Path, PathBuf};
+
+use crate::serialize::{json, Value};
+use crate::{Error, Result};
+
+use super::MetroOutcome;
+
+/// Golden file path for one metro stem.
+fn golden_path(dir: &Path, stem: &str) -> PathBuf {
+    dir.join(format!("{stem}.json"))
+}
+
+/// The exact document [`bless`] writes and [`check`] compares against:
+/// `{"metro": <outcome>, "scenario": <stem>}` with sorted keys, so the
+/// golden names its own scenario like the flat suite's baselines do.
+pub fn golden_document(stem: &str, outcome: &MetroOutcome) -> Value {
+    let mut root = Value::object();
+    root.set("scenario", stem);
+    root.set("metro", outcome.to_value());
+    root.sort_keys();
+    root
+}
+
+/// Whether `path` holds a metro golden for its own file stem (the shape
+/// [`bless`] writes) — both the orphan sweep in [`bless`] and the
+/// orphan detection in [`check`] use this, so they agree on what counts
+/// as ours to judge.
+fn is_metro_golden(path: &Path, stem: &str) -> bool {
+    std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| json::parse(&text).ok())
+        .map_or(false, |doc| {
+            doc.get("metro").is_some()
+                && doc.get("scenario").and_then(Value::as_str)
+                    == Some(stem)
+        })
+}
+
+/// (Re)write one golden per metro from a fresh run and remove orphan
+/// goldens left over from deleted/renamed metros, so "bless + commit"
+/// is the complete update workflow.  Returns the number written.
+pub fn bless(
+    results: &[(String, MetroOutcome)],
+    dir: impl AsRef<Path>,
+) -> Result<usize> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)
+        .map_err(|e| Error::io(dir.display().to_string(), e))?;
+    for (stem, outcome) in results {
+        crate::benchkit::write_value(
+            golden_path(dir, stem),
+            &golden_document(stem, outcome),
+        )?;
+    }
+    let listing = std::fs::read_dir(dir)
+        .map_err(|e| Error::io(dir.display().to_string(), e))?;
+    for path in listing.filter_map(|e| e.ok()).map(|e| e.path()) {
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let Some(stem) = path.file_stem().and_then(|s| s.to_str())
+        else {
+            continue;
+        };
+        if results.iter().any(|(s, _)| s == stem) {
+            continue;
+        }
+        // delete only files this tool plausibly wrote; anything else
+        // in the directory is a user file — leave it
+        if is_metro_golden(&path, stem) {
+            std::fs::remove_file(&path).map_err(|e| {
+                Error::io(path.display().to_string(), e)
+            })?;
+            println!(
+                "bless: removed orphan metro golden {}",
+                path.display()
+            );
+        }
+    }
+    Ok(results.len())
+}
+
+/// The comparison of a metro run against its golden directory.
+#[derive(Debug, Clone)]
+pub struct MetroCheck {
+    /// `(stem, reason)` for every metro that deviated (plus orphan
+    /// goldens), in deterministic order.
+    pub failures: Vec<(String, String)>,
+    /// How many metros the run produced.
+    pub total: usize,
+}
+
+impl MetroCheck {
+    /// Whether every metro matched its golden byte-for-byte (the CI
+    /// gate).
+    pub fn clean(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    /// Human diff table: every failure in detail, plus a summary line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if !self.clean() {
+            let mut t = crate::report::TextTable::new(&[
+                "Metro", "Detail",
+            ])
+            .with_title("metro check: golden deviations");
+            for (stem, reason) in &self.failures {
+                t.row(vec![stem.clone(), reason.clone()]);
+            }
+            out.push_str(&t.render());
+        }
+        out.push_str(&format!(
+            "metro check: {} pass, {} fail ({} metros)\n",
+            self.total - self.failures.len().min(self.total),
+            self.failures.len(),
+            self.total,
+        ));
+        out
+    }
+}
+
+/// Compare a run against the goldens under `dir`, byte-for-byte.
+/// Never errors: every problem (missing golden, drifted bytes, orphan
+/// file) becomes one failure row, so one report covers the whole run.
+pub fn check(
+    results: &[(String, MetroOutcome)],
+    dir: impl AsRef<Path>,
+) -> MetroCheck {
+    let dir = dir.as_ref();
+    let mut failures = Vec::new();
+    for (stem, outcome) in results {
+        let path = golden_path(dir, stem);
+        let expected = golden_document(stem, outcome)
+            .to_string_pretty();
+        match std::fs::read_to_string(&path) {
+            Err(_) => failures.push((
+                stem.clone(),
+                "no golden (run --bless to accept)".to_string(),
+            )),
+            Ok(actual) if actual != expected => {
+                // name the first diverging line so the failure reads
+                // without a local re-run
+                let line = expected
+                    .lines()
+                    .zip(actual.lines())
+                    .position(|(e, a)| e != a)
+                    .map_or_else(
+                        || expected.lines().count().min(
+                            actual.lines().count(),
+                        ) + 1,
+                        |i| i + 1,
+                    );
+                failures.push((
+                    stem.clone(),
+                    format!(
+                        "golden drift at line {line} (run --bless \
+                         after review)"
+                    ),
+                ));
+            }
+            Ok(_) => {}
+        }
+    }
+    // orphan goldens: a committed <stem>.json with no metro of that
+    // stem in the run must fail the gate, not pass silently
+    if let Ok(listing) = std::fs::read_dir(dir) {
+        let mut orphans: Vec<String> = listing
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.extension().and_then(|e| e.to_str()) == Some("json")
+            })
+            .filter_map(|p| {
+                p.file_stem()
+                    .and_then(|s| s.to_str())
+                    .map(|stem| (p.clone(), stem.to_string()))
+            })
+            .filter(|(path, stem)| {
+                !results.iter().any(|(s, _)| s == stem)
+                    && is_metro_golden(path, stem)
+            })
+            .map(|(_, stem)| stem)
+            .collect();
+        orphans.sort();
+        for stem in orphans {
+            failures.push((
+                stem,
+                "orphan golden: no metro with this stem in the run"
+                    .to_string(),
+            ));
+        }
+    }
+    MetroCheck { failures, total: results.len() }
+}
+
+/// Write the machine-readable run artifact (`--out`): every metro's
+/// golden document under one `metros` array, plus the scenario
+/// directory the run came from.
+pub fn write_results(
+    path: impl AsRef<Path>,
+    dir: &str,
+    results: &[(String, MetroOutcome)],
+) -> Result<()> {
+    let mut root = Value::object();
+    root.set("dir", dir);
+    root.set(
+        "metros",
+        Value::Array(
+            results
+                .iter()
+                .map(|(stem, o)| golden_document(stem, o))
+                .collect(),
+        ),
+    );
+    root.sort_keys();
+    crate::benchkit::write_value(path, &root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metro::WardOutcome;
+
+    fn outcome(price: u64) -> MetroOutcome {
+        MetroOutcome {
+            name: "duo".into(),
+            seed: 7,
+            cloud_replicas: 2,
+            winner: "water-filling".into(),
+            refined: false,
+            local_total: 100 + price,
+            coordinated_total: 100,
+            price_of_ward_local: price,
+            wards: vec![WardOutcome {
+                name: "icu".into(),
+                solver: "tabu".into(),
+                objective: "weighted-sum".into(),
+                weight: 1,
+                jobs: 6,
+                local_granted: vec![0],
+                local_cost: 100 + price,
+                granted: vec![0, 1],
+                cost: 100,
+            }],
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn bless_then_check_roundtrips() {
+        let dir = tmp("edgeward_metro_golden_roundtrip");
+        let run = vec![("duo".to_string(), outcome(8))];
+        assert_eq!(bless(&run, &dir).unwrap(), 1);
+        assert!(check(&run, &dir).clean());
+        // any byte-level deviation fails with a located reason
+        let drifted = vec![("duo".to_string(), outcome(9))];
+        let report = check(&drifted, &dir);
+        assert!(!report.clean());
+        assert!(
+            report.failures[0].1.contains("golden drift"),
+            "{:?}",
+            report.failures
+        );
+        let rendered = report.render();
+        assert!(rendered.contains("0 pass, 1 fail"), "{rendered}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_and_orphan_goldens_fail_the_gate() {
+        let dir = tmp("edgeward_metro_golden_orphans");
+        let run = vec![("duo".to_string(), outcome(8))];
+        // no golden at all
+        let report = check(&run, &dir);
+        assert_eq!(report.failures.len(), 1);
+        assert!(report.failures[0].1.contains("no golden"));
+        // a golden for a metro the run no longer contains
+        let stale = [
+            ("duo".to_string(), outcome(8)),
+            ("old".to_string(), outcome(1)),
+        ];
+        bless(&stale, &dir).unwrap();
+        let report = check(&run, &dir);
+        assert_eq!(report.failures.len(), 1);
+        assert!(report.failures[0].1.contains("orphan"));
+        // re-blessing the current run sweeps the orphan away
+        bless(&run, &dir).unwrap();
+        assert!(check(&run, &dir).clean());
+        assert!(!golden_path(&dir, "old").exists());
+        // unrelated user JSON in the directory is never judged
+        std::fs::write(dir.join("notes.json"), "{\"x\": 1}\n")
+            .unwrap();
+        assert!(check(&run, &dir).clean());
+        bless(&run, &dir).unwrap();
+        assert!(dir.join("notes.json").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn results_artifact_holds_all_golden_documents() {
+        let dir = tmp("edgeward_metro_results_artifact");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("metro_results.json");
+        let run = vec![("duo".to_string(), outcome(8))];
+        write_results(&path, "scenarios/metro", &run).unwrap();
+        let doc = json::parse(
+            &std::fs::read_to_string(&path).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(
+            doc.get("dir").and_then(Value::as_str),
+            Some("scenarios/metro")
+        );
+        let metros = doc.get("metros").and_then(Value::as_array);
+        assert_eq!(metros.map(|m| m.len()), Some(1));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -20,6 +20,11 @@
 //!   a sinusoid on purpose: the modulation itself is exact IEEE-754
 //!   arithmetic, adding no libm dependence beyond the `log` already
 //!   inside every ward's exponential sampler ([`Rng::exponential`]).
+//! * [`Arrival::CorrelatedBurst`] — patient-correlated bursts: parent
+//!   events arrive as a Poisson process at `rate`, and each one spawns a
+//!   clustered batch of `burst` jobs across app classes, released within
+//!   `span` ticks of the parent (one deteriorating patient fires several
+//!   monitors at once — arrivals are correlated, not independent).
 //!
 //! Generation is a pure function of `(process, seed)` — the same seed
 //! reproduces the same job list bit-for-bit on a given platform, which
@@ -60,6 +65,15 @@ pub enum Arrival {
         amplitude: f64,
         period: Tick,
     },
+    /// `events` Poisson parent events at `rate`, each spawning `burst`
+    /// catalog-sampled jobs released within `span` ticks of the parent —
+    /// `events * burst` jobs total, clustered rather than independent.
+    CorrelatedBurst {
+        events: usize,
+        rate: f64,
+        burst: usize,
+        span: Tick,
+    },
 }
 
 impl Default for Arrival {
@@ -76,17 +90,19 @@ impl Arrival {
             Arrival::PoissonWard { .. } => "poisson-ward",
             Arrival::CodeBlueSurge { .. } => "code-blue-surge",
             Arrival::DiurnalWard { .. } => "diurnal-ward",
+            Arrival::CorrelatedBurst { .. } => "correlated-burst",
         }
     }
 
     /// Every arrival process with its default CLI sizing, in key order
     /// (what `Arrival::parse` accepts; suite/docs enumeration).
-    pub fn defaults() -> [Arrival; 4] {
+    pub fn defaults() -> [Arrival; 5] {
         [
             Arrival::PaperTrace,
             Arrival::poisson_ward(),
             Arrival::code_blue_surge(),
             Arrival::diurnal_ward(),
+            Arrival::correlated_burst(),
         ]
     }
 
@@ -116,6 +132,147 @@ impl Arrival {
         }
     }
 
+    /// A correlated-burst ward with the default CLI sizing: 4 parent
+    /// events spawning 3-job clusters within 4 ticks (12 jobs).
+    pub fn correlated_burst() -> Arrival {
+        Arrival::CorrelatedBurst {
+            events: 4,
+            rate: 0.1,
+            burst: 3,
+            span: 4,
+        }
+    }
+
+    /// Read the `arrival` key plus the selected process's sizing fields
+    /// from a config section (shared by `[scenario]` and
+    /// `[[metro.ward]]` parsing).  Only the fields of the selected
+    /// process are consumed; foreign sizing fields are left for the
+    /// caller's `finish()` to reject as unknown.
+    pub fn from_reader(
+        r: &crate::config::FieldReader,
+    ) -> Result<Arrival> {
+        let mut arrival = match r.string("arrival")? {
+            Some(kind) => Arrival::parse(&kind)?,
+            None => Arrival::PaperTrace,
+        };
+        match &mut arrival {
+            Arrival::PaperTrace => {}
+            Arrival::PoissonWard { jobs, rate } => {
+                if let Some(n) = r.usize("jobs")? {
+                    *jobs = n;
+                }
+                if let Some(x) = r.f64("rate")? {
+                    *rate = x;
+                }
+            }
+            Arrival::CodeBlueSurge {
+                baseline,
+                rate,
+                surge,
+                surge_at,
+            } => {
+                if let Some(n) = r.usize("baseline")? {
+                    *baseline = n;
+                }
+                if let Some(x) = r.f64("rate")? {
+                    *rate = x;
+                }
+                if let Some(n) = r.usize("surge")? {
+                    *surge = n;
+                }
+                if let Some(t) = r.u64("surge_at")? {
+                    *surge_at = t;
+                }
+            }
+            Arrival::DiurnalWard {
+                jobs,
+                rate,
+                amplitude,
+                period,
+            } => {
+                if let Some(n) = r.usize("jobs")? {
+                    *jobs = n;
+                }
+                if let Some(x) = r.f64("rate")? {
+                    *rate = x;
+                }
+                if let Some(x) = r.f64("amplitude")? {
+                    *amplitude = x;
+                }
+                if let Some(p) = r.u64("period")? {
+                    *period = p;
+                }
+            }
+            Arrival::CorrelatedBurst {
+                events,
+                rate,
+                burst,
+                span,
+            } => {
+                if let Some(n) = r.usize("events")? {
+                    *events = n;
+                }
+                if let Some(x) = r.f64("rate")? {
+                    *rate = x;
+                }
+                if let Some(n) = r.usize("burst")? {
+                    *burst = n;
+                }
+                if let Some(t) = r.u64("span")? {
+                    *span = t;
+                }
+            }
+        }
+        Ok(arrival)
+    }
+
+    /// Write the `arrival` key and the process's sizing fields into a
+    /// config object (inverse of [`Arrival::from_reader`]; shared by the
+    /// scenario and metro-ward spec serializers).
+    pub fn write_fields(&self, v: &mut crate::serialize::Value) {
+        v.set("arrival", self.key());
+        match *self {
+            Arrival::PaperTrace => {}
+            Arrival::PoissonWard { jobs, rate } => {
+                v.set("jobs", jobs);
+                v.set("rate", rate);
+            }
+            Arrival::CodeBlueSurge {
+                baseline,
+                rate,
+                surge,
+                surge_at,
+            } => {
+                v.set("baseline", baseline);
+                v.set("rate", rate);
+                v.set("surge", surge);
+                v.set("surge_at", surge_at);
+            }
+            Arrival::DiurnalWard {
+                jobs,
+                rate,
+                amplitude,
+                period,
+            } => {
+                v.set("jobs", jobs);
+                v.set("rate", rate);
+                v.set("amplitude", amplitude);
+                v.set("period", period);
+            }
+            Arrival::CorrelatedBurst {
+                events,
+                rate,
+                burst,
+                span,
+            } => {
+                v.set("events", events);
+                v.set("rate", rate);
+                v.set("burst", burst);
+                v.set("span", span);
+            }
+        }
+    }
+
     /// Parse a CLI/TOML arrival key into the default-sized process (the
     /// scenario spec then overrides individual fields).
     pub fn parse(name: &str) -> Result<Arrival> {
@@ -130,9 +287,13 @@ impl Arrival {
                 Ok(Arrival::code_blue_surge())
             }
             "diurnal-ward" | "diurnal" => Ok(Arrival::diurnal_ward()),
+            "correlated-burst" | "correlated" | "burst" => {
+                Ok(Arrival::correlated_burst())
+            }
             other => Err(Error::Config(format!(
                 "unknown arrival process {other:?}; expected paper-trace \
-                 | poisson-ward | code-blue-surge | diurnal-ward"
+                 | poisson-ward | code-blue-surge | diurnal-ward | \
+                 correlated-burst"
             ))),
         }
     }
@@ -213,6 +374,23 @@ impl Arrival {
                     *r = x;
                 }
             }
+            Arrival::CorrelatedBurst { events, rate: r, .. } => {
+                if surge.is_some() || surge_at.is_some() {
+                    return Err(Error::Config(
+                        "--surge/--surge-at only apply to the \
+                         code-blue-surge arrival process"
+                            .into(),
+                    ));
+                }
+                // --jobs sizes the parent-event count (each spawns a
+                // whole burst)
+                if let Some(n) = count {
+                    *events = n;
+                }
+                if let Some(x) = rate {
+                    *r = x;
+                }
+            }
         }
         Ok(())
     }
@@ -238,6 +416,24 @@ impl Arrival {
                 if *period == 0 {
                     return Err(Error::Config(
                         "diurnal period must be at least one tick".into(),
+                    ));
+                }
+                *rate
+            }
+            Arrival::CorrelatedBurst {
+                rate, burst, span, ..
+            } => {
+                if *burst == 0 {
+                    return Err(Error::Config(
+                        "correlated-burst needs at least one job per \
+                         parent event"
+                            .into(),
+                    ));
+                }
+                if *span == 0 {
+                    return Err(Error::Config(
+                        "correlated-burst span must be at least one tick"
+                            .into(),
                     ));
                 }
                 *rate
@@ -307,6 +503,30 @@ impl Arrival {
                 }
                 out
             }
+            Arrival::CorrelatedBurst {
+                events,
+                rate,
+                burst,
+                span,
+            } => {
+                let mut rng = Rng::new(seed ^ 0xC011_E1A7);
+                let catalog = paper_jobs();
+                let mut out = Vec::with_capacity(events * burst);
+                let mut t = 1.0_f64;
+                for _ in 0..events {
+                    t += rng.exponential(rate);
+                    let parent = (t.ceil() as Tick).max(1);
+                    for _ in 0..burst {
+                        // same two-stage catalog draw every ward
+                        // shares, then the release snaps into the
+                        // parent's cluster window
+                        let mut j = sample_job_at(&mut rng, &catalog, t);
+                        j.release = parent + rng.below(span);
+                        out.push(j);
+                    }
+                }
+                out
+            }
         }
     }
 }
@@ -347,6 +567,16 @@ impl std::fmt::Display for Arrival {
                 f,
                 "diurnal-ward(jobs={jobs}, rate={rate}, \
                  amplitude={amplitude}, period={period})"
+            ),
+            Arrival::CorrelatedBurst {
+                events,
+                rate,
+                burst,
+                span,
+            } => write!(
+                f,
+                "correlated-burst(events={events}, rate={rate}, \
+                 burst={burst}, span={span})"
             ),
         }
     }
@@ -413,6 +643,7 @@ mod tests {
             Arrival::poisson_ward(),
             Arrival::code_blue_surge(),
             Arrival::diurnal_ward(),
+            Arrival::correlated_burst(),
         ] {
             let a = arrival.generate(42);
             let b = arrival.generate(42);
@@ -526,6 +757,62 @@ mod tests {
             .filter(|j| (50..53).contains(&j.release) && j.weight == 2)
             .count();
         assert!(surge >= 4, "surge jobs missing: {jobs:?}");
+    }
+
+    #[test]
+    fn correlated_burst_shape() {
+        let arrival = Arrival::CorrelatedBurst {
+            events: 5,
+            rate: 0.1,
+            burst: 4,
+            span: 3,
+        };
+        let jobs = arrival.generate(11);
+        assert_eq!(jobs.len(), 20, "events * burst jobs");
+        // each consecutive chunk of 4 is one parent's cluster: all
+        // releases within `span` ticks of the cluster's earliest
+        for cluster in jobs.chunks(4) {
+            let earliest =
+                cluster.iter().map(|j| j.release).min().unwrap();
+            let latest =
+                cluster.iter().map(|j| j.release).max().unwrap();
+            assert!(earliest >= 1);
+            assert!(
+                latest < earliest + 3,
+                "cluster spread {earliest}..={latest} exceeds the span"
+            );
+            for j in cluster {
+                assert!(j.proc_cloud >= 1 && j.proc_edge >= 1);
+                assert!(j.proc_device >= 1);
+                assert!(j.trans_cloud >= 1 && j.trans_edge >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn correlated_burst_rejects_degenerate_parameters() {
+        assert!(Arrival::correlated_burst().validate().is_ok());
+        let bad = |rate: f64, burst: usize, span: Tick| {
+            Arrival::CorrelatedBurst { events: 3, rate, burst, span }
+        };
+        assert!(bad(0.0, 3, 4).validate().is_err());
+        assert!(bad(f64::NAN, 3, 4).validate().is_err());
+        assert!(bad(0.1, 0, 4).validate().is_err());
+        assert!(bad(0.1, 3, 0).validate().is_err());
+    }
+
+    #[test]
+    fn correlated_burst_override_sizing() {
+        let mut b = Arrival::correlated_burst();
+        b.override_sizing(Some(7), Some(0.3), None, None).unwrap();
+        match b {
+            Arrival::CorrelatedBurst { events, rate, .. } => {
+                assert_eq!((events, rate), (7, 0.3));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(b.override_sizing(None, None, Some(2), None).is_err());
+        assert!(b.override_sizing(None, None, None, Some(9)).is_err());
     }
 
     #[test]

@@ -106,12 +106,14 @@ impl Scenario {
         if let Some(a) = &self.arrival {
             a.validate()?;
         }
-        if let Objective::DeadlineMiss { deadlines } = &self.objective {
+        if let Objective::DeadlineMiss { deadlines }
+        | Objective::WeightedTardiness { deadlines } = &self.objective
+        {
             if deadlines.is_empty() {
-                return Err(Error::Config(
-                    "deadline-miss objective needs at least one deadline"
-                        .into(),
-                ));
+                return Err(Error::Config(format!(
+                    "{} objective needs at least one deadline",
+                    self.objective.key()
+                )));
             }
         }
         Ok(())
@@ -152,72 +154,26 @@ impl Scenario {
         }
         // arrival process + its sizing fields (only the fields of the
         // selected process are meaningful; others are rejected as
-        // unknown by `finish`)
-        let mut arrival = match r.string("arrival")? {
-            Some(kind) => Arrival::parse(&kind)?,
-            None => Arrival::PaperTrace,
-        };
-        match &mut arrival {
-            Arrival::PaperTrace => {}
-            Arrival::PoissonWard { jobs, rate } => {
-                if let Some(n) = r.usize("jobs")? {
-                    *jobs = n;
-                }
-                if let Some(x) = r.f64("rate")? {
-                    *rate = x;
-                }
-            }
-            Arrival::CodeBlueSurge {
-                baseline,
-                rate,
-                surge,
-                surge_at,
-            } => {
-                if let Some(n) = r.usize("baseline")? {
-                    *baseline = n;
-                }
-                if let Some(x) = r.f64("rate")? {
-                    *rate = x;
-                }
-                if let Some(n) = r.usize("surge")? {
-                    *surge = n;
-                }
-                if let Some(t) = r.u64("surge_at")? {
-                    *surge_at = t;
-                }
-            }
-            Arrival::DiurnalWard {
-                jobs,
-                rate,
-                amplitude,
-                period,
-            } => {
-                if let Some(n) = r.usize("jobs")? {
-                    *jobs = n;
-                }
-                if let Some(x) = r.f64("rate")? {
-                    *rate = x;
-                }
-                if let Some(x) = r.f64("amplitude")? {
-                    *amplitude = x;
-                }
-                if let Some(p) = r.u64("period")? {
-                    *period = p;
-                }
-            }
-        }
+        // unknown by `finish`) — shared with `[[metro.ward]]` sections
+        let arrival = Arrival::from_reader(r)?;
         b = b.arrival(arrival);
-        // objective (+ deadlines, only meaningful for deadline-miss)
+        // objective (+ deadlines, only meaningful for the
+        // deadline-carrying objectives)
         let deadlines = r.u64_list("deadlines")?.unwrap_or_default();
         match r.string("objective")? {
             Some(obj) => {
                 let parsed = Objective::parse(&obj, &deadlines)?;
                 if !deadlines.is_empty()
-                    && !matches!(parsed, Objective::DeadlineMiss { .. })
+                    && !matches!(
+                        parsed,
+                        Objective::DeadlineMiss { .. }
+                            | Objective::WeightedTardiness { .. }
+                    )
                 {
                     return Err(Error::Config(
                         "scenario.deadlines is only meaningful with \
-                         `objective = \"deadline-miss\"`"
+                         `objective = \"deadline-miss\"` or \
+                         `objective = \"weighted-tardiness\"`"
                             .into(),
                     ));
                 }
@@ -226,7 +182,8 @@ impl Scenario {
             None if !deadlines.is_empty() => {
                 return Err(Error::Config(
                     "scenario.deadlines is only meaningful with \
-                     `objective = \"deadline-miss\"`"
+                     `objective = \"deadline-miss\"` or \
+                     `objective = \"weighted-tardiness\"`"
                         .into(),
                 ));
             }
@@ -250,39 +207,14 @@ impl Scenario {
         let mut v = Value::object();
         v.set("name", self.name.as_str());
         v.set("seed", self.seed);
-        let arrival = self.arrival.clone().unwrap_or_default();
-        v.set("arrival", arrival.key());
-        match arrival {
-            Arrival::PaperTrace => {}
-            Arrival::PoissonWard { jobs, rate } => {
-                v.set("jobs", jobs);
-                v.set("rate", rate);
-            }
-            Arrival::CodeBlueSurge {
-                baseline,
-                rate,
-                surge,
-                surge_at,
-            } => {
-                v.set("baseline", baseline);
-                v.set("rate", rate);
-                v.set("surge", surge);
-                v.set("surge_at", surge_at);
-            }
-            Arrival::DiurnalWard {
-                jobs,
-                rate,
-                amplitude,
-                period,
-            } => {
-                v.set("jobs", jobs);
-                v.set("rate", rate);
-                v.set("amplitude", amplitude);
-                v.set("period", period);
-            }
-        }
+        self.arrival
+            .clone()
+            .unwrap_or_default()
+            .write_fields(&mut v);
         v.set("objective", self.objective.key());
-        if let Objective::DeadlineMiss { deadlines } = &self.objective {
+        if let Objective::DeadlineMiss { deadlines }
+        | Objective::WeightedTardiness { deadlines } = &self.objective
+        {
             v.set(
                 "deadlines",
                 Value::Array(
@@ -432,7 +364,7 @@ mod tests {
     #[test]
     fn builder_rejects_invalid_topology_with_typed_error() {
         let err = Scenario::builder()
-            .topology(Topology::new(0, 1))
+            .topology(Topology::new(1, 0))
             .build()
             .unwrap_err();
         assert!(
@@ -658,6 +590,70 @@ seed = 4
         // diurnal sizing fields stay unknown on the other processes
         assert!(Scenario::from_toml(
             "[scenario]\narrival = \"poisson-ward\"\namplitude = 0.5\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn toml_correlated_burst_roundtrip() {
+        let text = "\
+[scenario]
+arrival = \"correlated-burst\"
+events = 5
+rate = 0.2
+burst = 2
+span = 3
+seed = 9
+";
+        let s = Scenario::from_toml(text).unwrap();
+        assert_eq!(s.jobs.len(), 10, "events * burst jobs");
+        assert_eq!(
+            s.arrival,
+            Some(Arrival::CorrelatedBurst {
+                events: 5,
+                rate: 0.2,
+                burst: 2,
+                span: 3,
+            })
+        );
+        let mut root = Value::object();
+        root.set("scenario", s.to_value());
+        let back =
+            Scenario::from_toml(&crate::serialize::toml::emit(&root))
+                .unwrap();
+        assert_eq!(back, s);
+        // burst sizing fields stay unknown on the other processes
+        assert!(Scenario::from_toml(
+            "[scenario]\narrival = \"poisson-ward\"\nburst = 2\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn toml_weighted_tardiness_roundtrip() {
+        let text = "\
+[scenario]
+arrival = \"poisson-ward\"
+jobs = 6
+rate = 0.4
+seed = 2
+objective = \"weighted-tardiness\"
+deadlines = [30, 45]
+";
+        let s = Scenario::from_toml(text).unwrap();
+        assert_eq!(
+            s.objective,
+            Objective::WeightedTardiness { deadlines: vec![30, 45] }
+        );
+        let mut root = Value::object();
+        root.set("scenario", s.to_value());
+        let back =
+            Scenario::from_toml(&crate::serialize::toml::emit(&root))
+                .unwrap();
+        assert_eq!(back, s);
+        // weighted-tardiness without deadlines is rejected
+        assert!(Scenario::from_toml(
+            "[scenario]\nobjective = \"weighted-tardiness\"\n"
         )
         .is_err());
     }

@@ -33,6 +33,13 @@ pub enum Objective {
     /// a single entry broadcasts one deadline to every job; it must be
     /// non-empty (validated by the scenario builder).
     DeadlineMiss { deadlines: Vec<Tick> },
+    /// Priority-weighted total tardiness `Σ wᵢ·max(0, (Eᵢ − Rᵢ) − dᵢ)`:
+    /// a miss counts in proportion to both how *important* and how
+    /// *late* the job is, where `DeadlineMiss` counts every miss as 1.
+    /// `deadlines` cycles over job indices exactly like `DeadlineMiss`
+    /// and must be non-empty.  Monotone: delaying a job only grows (or
+    /// leaves unchanged) its clamped lateness.
+    WeightedTardiness { deadlines: Vec<Tick> },
 }
 
 impl Default for Objective {
@@ -44,11 +51,12 @@ impl Default for Objective {
 impl Objective {
     /// Canonical keys of every registered objective, in declaration
     /// order — what `edgeward suite --objectives all` sweeps over.
-    pub const KEYS: [&'static str; 4] = [
+    pub const KEYS: [&'static str; 5] = [
         "weighted-sum",
         "unweighted-sum",
         "makespan",
         "deadline-miss",
+        "weighted-tardiness",
     ];
 
     /// Canonical CLI/TOML key (`deadline-miss` etc.).
@@ -58,6 +66,7 @@ impl Objective {
             Objective::UnweightedSum => "unweighted-sum",
             Objective::Makespan => "makespan",
             Objective::DeadlineMiss { .. } => "deadline-miss",
+            Objective::WeightedTardiness { .. } => "weighted-tardiness",
         }
     }
 
@@ -68,11 +77,13 @@ impl Objective {
             Objective::UnweightedSum => "whole response time",
             Objective::Makespan => "makespan",
             Objective::DeadlineMiss { .. } => "deadline misses",
+            Objective::WeightedTardiness { .. } => "weighted tardiness",
         }
     }
 
-    /// Parse a CLI/TOML objective key.  `deadlines` is only consulted for
-    /// `deadline-miss` and must be non-empty there.
+    /// Parse a CLI/TOML objective key.  `deadlines` is only consulted
+    /// for the deadline-carrying objectives (`deadline-miss`,
+    /// `weighted-tardiness`) and must be non-empty there.
     pub fn parse(name: &str, deadlines: &[Tick]) -> Result<Objective> {
         match name.to_ascii_lowercase().replace('_', "-").as_str() {
             "weighted-sum" | "weighted" | "eq5" => {
@@ -94,9 +105,23 @@ impl Objective {
                     deadlines: deadlines.to_vec(),
                 })
             }
+            "weighted-tardiness" | "tardiness" => {
+                if deadlines.is_empty() {
+                    return Err(Error::Config(
+                        "objective weighted-tardiness needs at least \
+                         one deadline (set `deadlines = [..]` or \
+                         --deadline)"
+                            .into(),
+                    ));
+                }
+                Ok(Objective::WeightedTardiness {
+                    deadlines: deadlines.to_vec(),
+                })
+            }
             other => Err(Error::Config(format!(
                 "unknown objective {other:?}; expected weighted-sum | \
-                 unweighted-sum | makespan | deadline-miss"
+                 unweighted-sum | makespan | deadline-miss | \
+                 weighted-tardiness"
             ))),
         }
     }
@@ -106,6 +131,7 @@ impl Objective {
     pub fn deadline(&self, i: usize) -> Tick {
         match self {
             Objective::DeadlineMiss { deadlines }
+            | Objective::WeightedTardiness { deadlines }
                 if !deadlines.is_empty() =>
             {
                 deadlines[i % deadlines.len()]
@@ -134,6 +160,10 @@ impl Objective {
             Objective::DeadlineMiss { .. } => {
                 acc + u64::from(response > self.deadline(i))
             }
+            Objective::WeightedTardiness { .. } => {
+                acc + job.weight as u64
+                    * response.saturating_sub(self.deadline(i))
+            }
         }
     }
 
@@ -157,6 +187,14 @@ impl Objective {
             Objective::DeadlineMiss { .. } => {
                 const MISS: u64 = 1 << 40;
                 u64::from(response > self.deadline(i)) * MISS + response
+            }
+            Objective::WeightedTardiness { .. } => {
+                // tardiness-dominant, response tie-break: among equally
+                // (un)late placements the dispatcher still prefers the
+                // faster machine
+                job.weight as u64
+                    * response.saturating_sub(self.deadline(i))
+                    + response
             }
         }
     }
@@ -208,6 +246,12 @@ impl Objective {
                 Objective::DeadlineMiss { .. } => {
                     u64::from(best > self.deadline(k))
                 }
+                // response >= best on every machine, so the clamped
+                // lateness of `best` lower-bounds the real tardiness
+                Objective::WeightedTardiness { .. } => {
+                    j.weight as u64
+                        * best.saturating_sub(self.deadline(k))
+                }
             };
             bounds[k] = self.combine(contrib, bounds[k + 1]);
         }
@@ -232,7 +276,7 @@ mod tests {
             let obj = Objective::parse(key, &[30]).unwrap();
             assert_eq!(obj.key(), key);
         }
-        assert_eq!(Objective::KEYS.len(), 4);
+        assert_eq!(Objective::KEYS.len(), 5);
     }
 
     #[test]
@@ -242,13 +286,16 @@ mod tests {
             Objective::UnweightedSum,
             Objective::Makespan,
             Objective::DeadlineMiss { deadlines: vec![30] },
+            Objective::WeightedTardiness { deadlines: vec![30] },
         ] {
             let back = Objective::parse(obj.key(), &[30]).unwrap();
             assert_eq!(back, obj);
         }
         assert!(Objective::parse("banana", &[]).is_err());
-        // deadline-miss without deadlines is rejected
+        // deadline-carrying objectives without deadlines are rejected
         assert!(Objective::parse("deadline-miss", &[]).is_err());
+        assert!(Objective::parse("weighted-tardiness", &[]).is_err());
+        assert!(Objective::parse("tardiness", &[45]).is_ok());
     }
 
     #[test]
@@ -317,6 +364,7 @@ mod tests {
                 Objective::UnweightedSum,
                 Objective::Makespan,
                 Objective::DeadlineMiss { deadlines: vec![10] },
+                Objective::WeightedTardiness { deadlines: vec![10] },
             ] {
                 let bounds = obj.suffix_bounds(&jobs, &topo);
                 assert_eq!(bounds.len(), jobs.len() + 1);
@@ -332,6 +380,42 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn weighted_tardiness_semantics() {
+        let jobs = paper_jobs();
+        let s = simulate(
+            &jobs,
+            &Topology::paper(),
+            &vec![MachineRef::DEVICE; jobs.len()],
+        );
+        // on the device every response equals proc_device (no queueing,
+        // no transmission), so tardiness is directly checkable
+        let tardy = Objective::WeightedTardiness { deadlines: vec![0] };
+        let expected: u64 = jobs
+            .iter()
+            .map(|j| j.weight as u64 * j.proc_device)
+            .sum();
+        assert_eq!(tardy.evaluate(&jobs, &s.trace), expected);
+        // a loose deadline zeroes the objective (nothing is late)
+        let loose =
+            Objective::WeightedTardiness { deadlines: vec![1000] };
+        assert_eq!(loose.evaluate(&jobs, &s.trace), 0);
+        // cycling: deadlines broadcast over job indices
+        let cyc = Objective::WeightedTardiness {
+            deadlines: vec![10, 20],
+        };
+        assert_eq!(cyc.deadline(0), 10);
+        assert_eq!(cyc.deadline(3), 20);
+        // marginal is tardiness-dominant with a response tie-break
+        let j = &jobs[0];
+        let d = Objective::WeightedTardiness { deadlines: vec![5] };
+        let on_time = d.marginal(0, j, j.release + 5);
+        let late = d.marginal(0, j, j.release + 6);
+        assert_eq!(on_time, 5, "on-time marginal is the response alone");
+        assert_eq!(late, j.weight as u64 + 6);
+        assert!(late > on_time, "delaying never improves (monotone)");
     }
 
     #[test]

@@ -55,7 +55,8 @@ pub use simulate::{
     simulate, weighted_cost, Assignment, SimScratch,
 };
 pub use tabu::{
-    improve, improve_objective, schedule_jobs_objective, SchedulerParams,
+    descend_restricted, improve, improve_objective,
+    schedule_jobs_objective, SchedulerParams,
 };
 
 // the deprecated single-objective entry points stay re-exported so old

@@ -771,6 +771,7 @@ mod tests {
             Objective::UnweightedSum,
             Objective::Makespan,
             Objective::DeadlineMiss { deadlines: vec![15, 40] },
+            Objective::WeightedTardiness { deadlines: vec![15, 40] },
         ];
         for seed in 0..60 {
             let mut rng = Rng::new(seed ^ 0x0B1E);
@@ -1004,6 +1005,7 @@ mod tests {
             Objective::UnweightedSum,
             Objective::Makespan,
             Objective::DeadlineMiss { deadlines: vec![15, 40] },
+            Objective::WeightedTardiness { deadlines: vec![15, 40] },
         ];
         for seed in 0..40u64 {
             let mut rng = Rng::new(seed ^ 0xDE17A);

@@ -181,6 +181,73 @@ pub fn improve_objective(
     simulate(jobs, topo, &best_assignment)
 }
 
+
+/// Steepest descent over *restricted* per-job candidate machine lists:
+/// job `i` may only move to machines in `candidates[i]` (which must all
+/// belong to `topo`).  Each round commits the single strictly-improving
+/// move minimizing the resulting objective value — jobs scanned in
+/// ascending order, candidates in the given order, first-wins on ties —
+/// so the trajectory is deterministic and cheap to mirror externally
+/// (every candidate is priced with [`objective_cost_delta`], which
+/// equals a full re-simulation of the modified assignment).  Stops at
+/// the first round with no strict improvement, or after `max_rounds`
+/// committed moves.  Returns the final assignment and its objective
+/// value — never worse than `start` by construction.
+///
+/// This is the cross-ward refinement core of [`crate::metro`]: the
+/// candidate lists encode which machines a job is *allowed* to use (any
+/// shared cloud replica, its own ward's edge replicas, its device),
+/// which a full tabu neighborhood over the combined topology could not
+/// express.
+pub fn descend_restricted(
+    jobs: &[Job],
+    topo: &Topology,
+    start: Assignment,
+    objective: &Objective,
+    candidates: &[Vec<MachineRef>],
+    max_rounds: usize,
+) -> (Assignment, u64) {
+    assert_eq!(
+        candidates.len(),
+        jobs.len(),
+        "one candidate list per job"
+    );
+    let mut current = start;
+    let mut scratch = SimScratch::default();
+    let mut cost =
+        prepare_delta(jobs, topo, &current, objective, &mut scratch);
+    for _ in 0..max_rounds {
+        let mut best: Option<(u64, usize, MachineRef)> = None;
+        for (i, cands) in candidates.iter().enumerate() {
+            for &m in cands {
+                if m == current[i] {
+                    continue;
+                }
+                debug_assert!(topo.contains(m), "candidate {m} not in topology");
+                let c = objective_cost_delta(
+                    jobs, topo, &current, objective, &scratch, i, m,
+                );
+                if c < cost && best.map_or(true, |(bc, _, _)| c < bc) {
+                    best = Some((c, i, m));
+                }
+            }
+        }
+        let Some((c, i, m)) = best else { break };
+        let applied = apply_move(
+            jobs,
+            topo,
+            &mut current,
+            objective,
+            &mut scratch,
+            i,
+            m,
+        );
+        debug_assert_eq!(applied, c, "commit must equal its quote");
+        cost = c;
+    }
+    (current, cost)
+}
+
 /// How many scoring workers for an `n`-job neighborhood: small instances
 /// stay on the caller's thread (spawn overhead dominates), metro-scale
 /// ones shard across the available cores.  The selected move is
@@ -466,6 +533,98 @@ mod tests {
                 assert_eq!(sequential, scan(workers), "seed {seed}");
             }
         }
+    }
+
+
+    #[test]
+    fn descend_restricted_improves_within_candidates() {
+        let jobs = paper_jobs();
+        let topo = Topology::new(2, 2);
+        // jobs may use cloud 0, edge 1, or their device — never cloud 1
+        // or edge 0
+        let cands: Vec<Vec<MachineRef>> = (0..jobs.len())
+            .map(|_| {
+                vec![
+                    MachineRef::cloud(0),
+                    MachineRef::edge(1),
+                    MachineRef::DEVICE,
+                ]
+            })
+            .collect();
+        let start: Assignment =
+            vec![MachineRef::cloud(0); jobs.len()];
+        let mut scratch = SimScratch::default();
+        let start_cost = objective_cost(
+            &jobs,
+            &topo,
+            &start,
+            &Objective::WeightedSum,
+            &mut scratch,
+        );
+        let (end, cost) = descend_restricted(
+            &jobs,
+            &topo,
+            start.clone(),
+            &Objective::WeightedSum,
+            &cands,
+            100,
+        );
+        assert!(cost <= start_cost);
+        assert_eq!(
+            cost,
+            objective_cost(
+                &jobs,
+                &topo,
+                &end,
+                &Objective::WeightedSum,
+                &mut scratch
+            )
+        );
+        for (i, m) in end.iter().enumerate() {
+            assert!(
+                cands[i].contains(m) || *m == start[i],
+                "job {i} moved outside its candidate list: {m}"
+            );
+        }
+        // deterministic
+        let again = descend_restricted(
+            &jobs,
+            &topo,
+            start,
+            &Objective::WeightedSum,
+            &cands,
+            100,
+        );
+        assert_eq!(again.0, end);
+        assert_eq!(again.1, cost);
+    }
+
+    #[test]
+    fn descend_restricted_zero_rounds_is_identity() {
+        let jobs = paper_jobs();
+        let topo = Topology::paper();
+        let start: Assignment =
+            vec![MachineRef::DEVICE; jobs.len()];
+        let cands: Vec<Vec<MachineRef>> =
+            (0..jobs.len()).map(|_| topo.machines()).collect();
+        let mut scratch = SimScratch::default();
+        let start_cost = objective_cost(
+            &jobs,
+            &topo,
+            &start,
+            &Objective::WeightedSum,
+            &mut scratch,
+        );
+        let (end, cost) = descend_restricted(
+            &jobs,
+            &topo,
+            start.clone(),
+            &Objective::WeightedSum,
+            &cands,
+            0,
+        );
+        assert_eq!(end, start);
+        assert_eq!(cost, start_cost);
     }
 
     #[test]

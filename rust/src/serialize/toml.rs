@@ -4,6 +4,10 @@
 //!
 //! * `# comments` and blank lines
 //! * `[section]` and dotted `[section.sub]` headers
+//! * `[[section.item]]` array-of-tables headers (each occurrence appends
+//!   one table; later `[section.item.sub]` headers and dotted keys
+//!   address the *last* appended table, per the TOML spec) — the
+//!   `[[metro.ward]]` layout
 //! * `key = value` with dotted keys
 //! * values: basic strings (`"..."` with the JSON escape set), integers,
 //!   floats (incl. `inf`/`nan` forms TOML allows), booleans, homogeneous
@@ -26,15 +30,21 @@ pub fn parse(text: &str) -> Result<Value> {
             continue;
         }
         if let Some(rest) = line.strip_prefix('[') {
-            let inner = rest
-                .strip_suffix(']')
-                .ok_or_else(|| err(lineno, "unterminated section header"))?;
-            if inner.starts_with('[') {
-                return Err(err(lineno, "array-of-tables is not supported"));
+            if let Some(inner) = rest.strip_prefix('[') {
+                // [[array.of.tables]]: append one table, address it
+                let inner = inner.strip_suffix("]]").ok_or_else(|| {
+                    err(lineno, "unterminated array-of-tables header")
+                })?;
+                section_path = parse_dotted_key(inner, lineno)?;
+                push_array_table(&mut root, &section_path, lineno)?;
+            } else {
+                let inner = rest.strip_suffix(']').ok_or_else(|| {
+                    err(lineno, "unterminated section header")
+                })?;
+                section_path = parse_dotted_key(inner, lineno)?;
+                // ensure the section object exists
+                ensure_path(&mut root, &section_path, lineno)?;
             }
-            section_path = parse_dotted_key(inner, lineno)?;
-            // ensure the section object exists
-            ensure_path(&mut root, &section_path, lineno)?;
         } else {
             let eq = find_unquoted_eq(line)
                 .ok_or_else(|| err(lineno, "expected key = value"))?;
@@ -98,6 +108,13 @@ fn ensure_path<'a>(
 ) -> Result<&'a mut Value> {
     let mut cur = root;
     for seg in path {
+        // a path segment landing on an array-of-tables addresses the
+        // most recently appended table (TOML's [[...]] semantics)
+        if let Value::Array(items) = cur {
+            cur = items.last_mut().ok_or_else(|| {
+                err(lineno, "key path crosses an empty array")
+            })?;
+        }
         let Value::Object(entries) = cur else {
             return Err(err(lineno, "key path crosses a non-table"));
         };
@@ -110,7 +127,40 @@ fn ensure_path<'a>(
         };
         cur = &mut entries[idx].1;
     }
+    if let Value::Array(items) = cur {
+        cur = items.last_mut().ok_or_else(|| {
+            err(lineno, "key path crosses an empty array")
+        })?;
+    }
     Ok(cur)
+}
+
+/// Append one table to the array at `path` (creating the array on first
+/// use), per a `[[path]]` header.
+fn push_array_table(
+    root: &mut Value,
+    path: &[String],
+    lineno: usize,
+) -> Result<()> {
+    let (last, parents) = path
+        .split_last()
+        .ok_or_else(|| err(lineno, "empty array-of-tables header"))?;
+    let parent = ensure_path(root, parents, lineno)?;
+    let Value::Object(entries) = parent else {
+        return Err(err(lineno, "parent is not a table"));
+    };
+    match entries.iter_mut().find(|(k, _)| k == last) {
+        None => entries
+            .push((last.clone(), Value::Array(vec![Value::object()]))),
+        Some((_, Value::Array(items))) => items.push(Value::object()),
+        Some(_) => {
+            return Err(err(
+                lineno,
+                &format!("{last:?} is already a non-array value"),
+            ))
+        }
+    }
+    Ok(())
 }
 
 fn insert_path(
@@ -258,9 +308,22 @@ fn unescape(s: &str, lineno: usize) -> Result<Value> {
     Ok(Value::String(out))
 }
 
+/// Whether a value must serialize as `[[path]]` headers (a non-empty
+/// array whose elements are all tables).
+fn is_table_array(v: &Value) -> bool {
+    matches!(v, Value::Array(items)
+        if !items.is_empty()
+            && items.iter().all(|i| matches!(i, Value::Object(_))))
+}
+
+/// Whether a value serializes as its own section(s) rather than inline.
+fn is_sectional(v: &Value) -> bool {
+    matches!(v, Value::Object(_)) || is_table_array(v)
+}
+
 /// Serialize a [`Value::Object`] as TOML (sections for nested objects,
-/// inline values otherwise).  The inverse of [`parse`] for the documents
-/// the config system emits.
+/// `[[...]]` headers for arrays of tables, inline values otherwise).
+/// The inverse of [`parse`] for the documents the config system emits.
 pub fn emit(v: &Value) -> String {
     let mut out = String::new();
     let Value::Object(entries) = v else {
@@ -268,12 +331,12 @@ pub fn emit(v: &Value) -> String {
     };
     // scalars first, then sections
     for (k, val) in entries {
-        if !matches!(val, Value::Object(_)) {
+        if !is_sectional(val) {
             out.push_str(&format!("{k} = {}\n", emit_value(val)));
         }
     }
     for (k, val) in entries {
-        if matches!(val, Value::Object(_)) {
+        if is_sectional(val) {
             emit_section(&mut out, k, val);
         }
     }
@@ -281,10 +344,33 @@ pub fn emit(v: &Value) -> String {
 }
 
 fn emit_section(out: &mut String, path: &str, v: &Value) {
+    if let Value::Array(items) = v {
+        // array-of-tables: one [[path]] header per element; each
+        // element's own scalars and subsections follow it, so the
+        // parser's "address the last table" rule reassembles exactly
+        for item in items {
+            let Value::Object(entries) = item else { continue };
+            out.push_str(&format!("\n[[{path}]]\n"));
+            for (k, val) in entries {
+                if !is_sectional(val) {
+                    out.push_str(&format!(
+                        "{k} = {}\n",
+                        emit_value(val)
+                    ));
+                }
+            }
+            for (k, val) in entries {
+                if is_sectional(val) {
+                    emit_section(out, &format!("{path}.{k}"), val);
+                }
+            }
+        }
+        return;
+    }
     let Value::Object(entries) = v else { return };
     let scalars: Vec<_> = entries
         .iter()
-        .filter(|(_, v)| !matches!(v, Value::Object(_)))
+        .filter(|(_, v)| !is_sectional(v))
         .collect();
     if !scalars.is_empty() || entries.is_empty() {
         out.push_str(&format!("\n[{path}]\n"));
@@ -293,7 +379,7 @@ fn emit_section(out: &mut String, path: &str, v: &Value) {
         }
     }
     for (k, val) in entries {
-        if matches!(val, Value::Object(_)) {
+        if is_sectional(val) {
             emit_section(out, &format!("{path}.{k}"), val);
         }
     }
@@ -409,6 +495,67 @@ freq_ghz = 2.2
         let emitted = emit(&v);
         let back = parse(&emitted).unwrap();
         assert_eq!(back, v, "emitted:\n{emitted}");
+    }
+
+    #[test]
+    fn array_of_tables() {
+        let doc = r#"
+[metro]
+name = "tri"
+
+[[metro.ward]]
+name = "icu-a"
+edges = 2
+
+[metro.ward.scheduler]
+tenure = 7
+
+[[metro.ward]]
+name = "icu-b"
+edges = 1
+"#;
+        let v = parse(doc).unwrap();
+        let wards = v
+            .get("metro")
+            .unwrap()
+            .get("ward")
+            .unwrap()
+            .as_array()
+            .unwrap();
+        assert_eq!(wards.len(), 2);
+        assert_eq!(wards[0].get("name").unwrap().as_str(), Some("icu-a"));
+        assert_eq!(wards[0].get("edges").unwrap().as_u64(), Some(2));
+        // the dotted subsection landed on the *first* ward (it was the
+        // last appended table at that point)
+        assert_eq!(
+            wards[0]
+                .get("scheduler")
+                .unwrap()
+                .get("tenure")
+                .unwrap()
+                .as_u64(),
+            Some(7)
+        );
+        assert_eq!(wards[1].get("name").unwrap().as_str(), Some("icu-b"));
+        assert!(wards[1].get("scheduler").is_none());
+    }
+
+    #[test]
+    fn array_of_tables_emit_roundtrip() {
+        let doc = "\
+[metro]\nseed = 7\n\n[[metro.ward]]\nname = \"a\"\nedges = 2\n\n\
+[[metro.ward]]\nname = \"b\"\nrate = 0.5\n";
+        let v = parse(doc).unwrap();
+        let emitted = emit(&v);
+        let back = parse(&emitted).unwrap();
+        assert_eq!(back, v, "emitted:\n{emitted}");
+        assert!(emitted.contains("[[metro.ward]]"), "{emitted}");
+    }
+
+    #[test]
+    fn array_of_tables_bad_headers_rejected() {
+        assert!(parse("[[sec]").is_err());
+        assert!(parse("x = 1\n[[x]]\n").is_err());
     }
 
     #[test]

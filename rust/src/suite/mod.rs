@@ -25,10 +25,10 @@
 //! ```
 //!
 //! `--objectives all` expands to every [`Objective`] key; scenarios that
-//! declare no deadlines run the `deadline-miss` column with the
-//! documented [`SWEEP_DEADLINE_DEFAULT`] broadcast deadline, so the
-//! sweep folds into the same deterministic matrix with no skipped
-//! cells.  The corpus may mix homogeneous and heterogeneous topologies
+//! declare no deadlines run the deadline-dependent columns
+//! (`deadline-miss`, `weighted-tardiness`) with the documented
+//! [`SWEEP_DEADLINE_DEFAULT`] broadcast deadline, so the sweep folds
+//! into the same deterministic matrix with no skipped cells.  The corpus may mix homogeneous and heterogeneous topologies
 //! (per-replica `cloud_speeds` / `edge_speeds` in the scenario's
 //! `[scenario.topology]` section); `python/tools/suite_oracle.py`
 //! re-derives both kinds of golden independently.
@@ -66,9 +66,9 @@ use crate::scenario::{
 use crate::scheduler::SimScratch;
 use crate::{Error, Result};
 
-/// The broadcast deadline a `deadline-miss` sweep applies to scenarios
-/// that declare no deadlines of their own (`--objectives all` /
-/// `--objectives deadline-miss`).  45 ticks matches the committed
+/// The broadcast deadline a deadline-dependent sweep (`deadline-miss`,
+/// `weighted-tardiness`) applies to scenarios that declare no deadlines
+/// of their own (`--objectives all` / `--objectives deadline-miss`).  45 ticks matches the committed
 /// `ward_deadline` scenario, so sweep cells and native deadline cells
 /// are comparable; scenarios with explicit `deadlines = [..]` keep them
 /// verbatim.
@@ -430,7 +430,10 @@ fn realize(
         base.objective.clone()
     } else {
         let deadlines = match &base.objective {
-            Objective::DeadlineMiss { deadlines } => deadlines.clone(),
+            Objective::DeadlineMiss { deadlines }
+            | Objective::WeightedTardiness { deadlines } => {
+                deadlines.clone()
+            }
             // an objective sweep must be runnable on every scenario:
             // scenarios without deadlines of their own get the
             // documented broadcast default
@@ -634,8 +637,8 @@ mod tests {
         let suite = Suite::discover(&dir, config).unwrap();
         assert_eq!(suite.config.objectives, Objective::KEYS);
         let result = suite.run();
-        // 2 scenarios × 1 seed × 4 objectives × 1 solver, all solved
-        assert_eq!(result.cells.len(), 8);
+        // 2 scenarios × 1 seed × 5 objectives × 1 solver, all solved
+        assert_eq!(result.cells.len(), 10);
         assert!(result
             .cells
             .iter()

@@ -28,13 +28,18 @@
 //! # Invariant
 //!
 //! A validated `Topology` ([`Topology::try_new`], [`Topology::validate`])
-//! always has **at least one replica of every class**: `clouds >= 1`,
-//! `edges >= 1`, and the device pseudo-replica always exists.  Downstream
-//! code (e.g. the serving router's replica selection) relies on this to
-//! stay infallible — `machines()` and each class's replica range are
-//! never empty.  Speed and link factors are validated finite and within
-//! [`Topology::SPEED_RANGE`] / [`Topology::LINK_RANGE`], so
-//! factor-scaled arithmetic can never overflow or produce NaN orderings.
+//! always has **at least one edge replica** (`edges >= 1`) and the device
+//! pseudo-replica.  The *cloud* class, uniquely, may be empty
+//! (`clouds == 0`): a metro ward granted no share of the shared cloud
+//! tier (see [`crate::metro`]) schedules against an edge-only pool.
+//! `machines()` is therefore never empty, and fixed-class strategies
+//! that target an empty class fall back to the device
+//! ([`Topology::spread`]).  The serving coordinator additionally
+//! requires `clouds >= 1` (`ServeConfig::validate`) so the three-layer
+//! request path keeps at least one lane per layer.  Speed and link
+//! factors are validated finite and within [`Topology::SPEED_RANGE`] /
+//! [`Topology::LINK_RANGE`], so factor-scaled arithmetic can never
+//! overflow or produce NaN orderings.
 
 use crate::device::Layer;
 use crate::serialize::Value;
@@ -218,6 +223,12 @@ impl Topology {
     pub const LINK_RANGE: std::ops::RangeInclusive<f64> =
         0.015625..=64.0;
 
+    /// Most shared machines (cloud + edge replicas) a topology may
+    /// hold; more is almost certainly a config typo, and the bound
+    /// keeps per-replica bookkeeping cheap.  [`crate::metro`] checks
+    /// fused ward topologies against the same limit up front.
+    pub const MAX_SHARED: usize = 64;
+
     /// Construct a homogeneous topology without validation (infallible,
     /// for literals known to be sane).  Degenerate replica counts only
     /// surface when a scheduler core is reached, so prefer
@@ -228,10 +239,11 @@ impl Topology {
     }
 
     /// Validated homogeneous construction: the front-door constructor for
-    /// config, CLI, and [`crate::scenario`] input.  `try_new(0, _)` /
-    /// `try_new(_, 0)` return [`Error::InvalidTopology`] instead of
-    /// panicking later inside `simulate`; the result upholds the
-    /// ≥1-replica invariant documented on the module.
+    /// config, CLI, and [`crate::scenario`] input.  `try_new(_, 0)`
+    /// returns [`Error::InvalidTopology`] instead of panicking later
+    /// inside `simulate`; `try_new(0, e)` is a valid edge-only pool (a
+    /// metro ward granted no cloud share).  The result upholds the
+    /// invariant documented on the module.
     pub fn try_new(clouds: usize, edges: usize) -> Result<Self> {
         let t = Topology::new(clouds, edges);
         t.validate()?;
@@ -553,9 +565,15 @@ impl Topology {
 
     /// The `k`-th placement within a class, cycling over its replicas —
     /// how fixed-class strategies spread load (degenerates to replica 0
-    /// in the paper topology).
+    /// in the paper topology).  A class with no replicas (an edge-only
+    /// ward's empty cloud tier) falls back to the device, which always
+    /// exists, so fixed strategies stay total on every valid topology.
     pub fn spread(&self, class: MachineId, k: usize) -> MachineRef {
-        MachineRef { class, replica: k % self.replicas(class).max(1) }
+        let n = self.replicas(class);
+        if n == 0 {
+            return MachineRef::DEVICE;
+        }
+        MachineRef { class, replica: k % n }
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -564,16 +582,17 @@ impl Topology {
             edges: self.edges,
             reason,
         };
-        if self.clouds == 0 || self.edges == 0 {
+        if self.edges == 0 {
             return Err(invalid(
-                "needs at least one cloud and one edge server".into(),
+                "needs at least one edge server".into(),
             ));
         }
-        if self.shared_count() > 64 {
+        if self.shared_count() > Topology::MAX_SHARED {
             return Err(invalid(format!(
-                "{} shared machines; >64 is almost certainly a \
+                "{} shared machines; >{} is almost certainly a \
                  config typo",
-                self.shared_count()
+                self.shared_count(),
+                Topology::MAX_SHARED
             )));
         }
         for (axis, factors, range) in [
@@ -812,7 +831,8 @@ mod tests {
     #[test]
     fn validation() {
         assert!(Topology::paper().validate().is_ok());
-        assert!(Topology::new(0, 1).validate().is_err());
+        // edge-only pools (a ward granted no cloud share) are valid
+        assert!(Topology::new(0, 1).validate().is_ok());
         assert!(Topology::new(1, 0).validate().is_err());
         assert!(Topology::new(1, 64).validate().is_err());
         assert!(Topology::new(2, 4).validate().is_ok());
@@ -821,7 +841,7 @@ mod tests {
     #[test]
     fn try_new_returns_typed_error() {
         assert_eq!(Topology::try_new(1, 2).unwrap(), Topology::new(1, 2));
-        for (c, e) in [(0usize, 1usize), (1, 0), (0, 0), (32, 33)] {
+        for (c, e) in [(1usize, 0usize), (0, 0), (32, 33)] {
             match Topology::try_new(c, e) {
                 Err(Error::InvalidTopology { clouds, edges, .. }) => {
                     assert_eq!((clouds, edges), (c, e));
@@ -830,8 +850,28 @@ mod tests {
             }
         }
         // the message names the offending counts
-        let msg = Topology::try_new(0, 3).unwrap_err().to_string();
-        assert!(msg.contains("0c+3e"), "{msg}");
+        let msg = Topology::try_new(3, 0).unwrap_err().to_string();
+        assert!(msg.contains("3c+0e"), "{msg}");
+    }
+
+    #[test]
+    fn cloudless_topology_is_edge_only() {
+        let t = Topology::try_new(0, 2).unwrap();
+        assert_eq!(t.shared_count(), 2);
+        assert_eq!(
+            t.machines(),
+            vec![
+                MachineRef::edge(0),
+                MachineRef::edge(1),
+                MachineRef::DEVICE
+            ]
+        );
+        assert_eq!(t.machine_at(0), MachineRef::edge(0));
+        assert_eq!(t.lane_index(MachineRef::edge(1)), 1);
+        assert!(!t.contains(MachineRef::cloud(0)));
+        // fixed-cloud strategies fall back to the device, which exists
+        assert_eq!(t.spread(MachineId::Cloud, 3), MachineRef::DEVICE);
+        assert_eq!(t.spread(MachineId::Edge, 3).replica, 1);
     }
 
     #[test]

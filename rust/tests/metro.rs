@@ -1,0 +1,185 @@
+//! Metro regression harness, end to end: a 1-ward metro granted the
+//! whole shared cloud is bit-for-bit the equivalent flat scenario, the
+//! committed metros under `scenarios/metro/` run clean against the
+//! committed goldens under `baselines/metro/`, global coordination is
+//! never worse than ward-local planning, and the corpus covers the
+//! features the metro tier exists to exercise.
+
+use std::path::{Path, PathBuf};
+
+use edgeward::metro::{self, Metro};
+use edgeward::scenario::Scenario;
+
+/// The committed corpus/goldens live at the repository root.  Cargo
+/// runs integration tests from the package root, whose location
+/// relative to the repository root depends on where the build harness
+/// put the manifest — probe both.
+fn repo_path(name: &str) -> PathBuf {
+    for base in ["..", "."] {
+        let p = Path::new(base).join(name);
+        if p.is_dir() {
+            return p;
+        }
+    }
+    panic!(
+        "committed {name}/ directory not found relative to {:?}",
+        std::env::current_dir()
+    )
+}
+
+fn committed_metros() -> Vec<(String, Metro)> {
+    Metro::discover(repo_path("scenarios").join("metro"))
+        .unwrap_or_else(|e| panic!("discovering scenarios/metro/: {e}"))
+}
+
+/// ISSUE 7 tentpole invariant: one ward granted the entire shared cloud
+/// tier *is* the flat single-scenario model — same jobs, same topology
+/// (shared factors included), same schedule, bit for bit.
+#[test]
+fn one_ward_metro_with_whole_cloud_is_the_flat_scenario() {
+    let m = Metro::from_toml(
+        "[metro]\nname = \"solo\"\nseed = 11\ncloud_replicas = 2\n\
+         cloud_speeds = [2.0, 1.0]\ncloud_links = [1.0, 0.5]\n\n\
+         [[metro.ward]]\nname = \"ward\"\narrival = \"poisson-ward\"\n\
+         jobs = 7\nrate = 0.4\nedges = 2\nedge_speeds = [2.0, 0.5]\n",
+    )
+    .unwrap();
+    let granted: Vec<usize> = vec![0, 1];
+    let from_metro = m.ward_scenario(0, &granted).unwrap();
+    let flat = Scenario::from_toml(
+        "[scenario]\nname = \"ward\"\narrival = \"poisson-ward\"\n\
+         jobs = 7\nrate = 0.4\nseed = 11\n\n[scenario.topology]\n\
+         clouds = 2\nedges = 2\ncloud_speeds = [2.0, 1.0]\n\
+         cloud_links = [1.0, 0.5]\nedge_speeds = [2.0, 0.5]\n",
+    )
+    .unwrap();
+    assert_eq!(from_metro, flat, "metro ward != flat scenario");
+    let a = from_metro.solve("tabu").unwrap();
+    let b = flat.solve("tabu").unwrap();
+    assert_eq!(a.assignment, b.assignment);
+    assert_eq!(a.trace.entries, b.trace.entries);
+    assert_eq!(from_metro.evaluate(&a), flat.evaluate(&b));
+}
+
+/// ISSUE 7 satellite: the coordinated plan is the best of the candidate
+/// mechanisms, so it can never lose to every ward planning alone — the
+/// price of ward-local decisions is non-negative on every committed
+/// metro, and the whole outcome matches its committed golden
+/// byte-for-byte at the canonical seed 7.
+#[test]
+fn committed_metros_run_clean_against_committed_goldens() {
+    let metros = committed_metros();
+    assert!(
+        metros.len() >= 3,
+        "corpus must hold at least 3 metros, found {}",
+        metros.len()
+    );
+    let mut results = Vec::new();
+    for (stem, m) in &metros {
+        let out = m
+            .solve_seeded(7)
+            .unwrap_or_else(|e| panic!("{stem}: {e}"));
+        assert!(
+            out.coordinated_total <= out.local_total,
+            "{stem}: coordination lost to ward-local planning \
+             ({} > {})",
+            out.coordinated_total,
+            out.local_total
+        );
+        assert_eq!(
+            out.price_of_ward_local,
+            out.local_total - out.coordinated_total,
+            "{stem}: price must be the local/coordinated gap"
+        );
+        results.push((stem.clone(), out));
+    }
+    let report = metro::check(
+        &results,
+        repo_path("baselines").join("metro"),
+    );
+    assert!(
+        report.clean(),
+        "committed metro goldens drifted:\n{}",
+        report.render()
+    );
+}
+
+/// The corpus exercises what the metro tier exists for: a surge ward
+/// riding next to steady wards, heterogeneous ward links, the new
+/// correlated-burst arrival, the weighted-tardiness objective, and at
+/// least one metro where the cross-ward refinement actually runs.
+#[test]
+fn committed_metro_corpus_covers_required_features() {
+    let metros = committed_metros();
+    let all_wards: Vec<_> = metros
+        .iter()
+        .flat_map(|(_, m)| m.wards.iter())
+        .collect();
+    let arrivals: Vec<&str> =
+        all_wards.iter().map(|w| w.arrival.key()).collect();
+    for required in ["code-blue-surge", "correlated-burst"] {
+        assert!(
+            arrivals.contains(&required),
+            "no committed metro has a {required} ward: {arrivals:?}"
+        );
+    }
+    assert!(
+        all_wards
+            .iter()
+            .any(|w| w.objective.key() == "weighted-tardiness"),
+        "no committed metro has a weighted-tardiness ward"
+    );
+    assert!(
+        all_wards.iter().any(|w| w
+            .edge_links
+            .iter()
+            .chain(w.edge_speeds.iter())
+            .any(|&f| f != 1.0)),
+        "no committed metro has a heterogeneous ward"
+    );
+    assert!(
+        metros.iter().any(|(_, m)| {
+            m.refine && m.solve_seeded(7).unwrap().refined
+        }),
+        "no committed metro exercises cross-ward refinement"
+    );
+}
+
+/// Every committed metro TOML round-trips through `to_value` + the TOML
+/// emitter, and the solve is deterministic (same metro + same seed →
+/// identical outcome object).
+#[test]
+fn committed_metros_roundtrip_and_are_deterministic() {
+    for (stem, m) in committed_metros() {
+        let mut root = edgeward::serialize::Value::object();
+        root.set("metro", m.to_value());
+        let text = edgeward::serialize::toml::emit(&root);
+        let back = Metro::from_toml(&text)
+            .unwrap_or_else(|e| panic!("{stem}: re-parse: {e}"));
+        assert_eq!(back, m, "{stem}: TOML round-trip drifted");
+        assert_eq!(
+            m.solve_seeded(7).unwrap(),
+            m.solve_seeded(7).unwrap(),
+            "{stem}: solve must be deterministic"
+        );
+    }
+}
+
+/// Discovery is strict: a directory without metros is a typed error,
+/// and a broken TOML names its file.
+#[test]
+fn discovery_errors_are_typed_and_name_the_file() {
+    let dir = std::env::temp_dir().join("edgeward_metro_discovery");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let err = Metro::discover(&dir).unwrap_err();
+    assert!(err.to_string().contains("no metro TOMLs"), "{err}");
+    std::fs::write(
+        dir.join("broken.toml"),
+        "[metro]\ncloud_replicas = 0\n\n[[metro.ward]]\n",
+    )
+    .unwrap();
+    let err = Metro::discover(&dir).unwrap_err();
+    assert!(err.to_string().contains("broken.toml"), "{err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -227,7 +227,7 @@ fn invalid_topologies_are_typed_errors_not_panics() {
     // Error::InvalidTopology from the front door, not a panic inside
     // simulate
     let err = Scenario::builder()
-        .topology(Topology::new(0, 1))
+        .topology(Topology::new(1, 0))
         .build()
         .unwrap_err();
     assert!(

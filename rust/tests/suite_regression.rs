@@ -387,6 +387,41 @@ fn diurnal_ward_golden_job_lists() {
     assert_eq!(arrival.generate(12), expected_seed_12);
 }
 
+/// Fixed-seed correlated-burst generation matches the committed
+/// expectations (cross-checked against the independent oracle via
+/// `python/tools/suite_oracle.py --print-goldens`).  Releases cluster
+/// within `span` ticks of each parent event — the correlation the
+/// process exists for — and any drift here invalidates the committed
+/// metro goldens.
+#[test]
+#[rustfmt::skip]
+fn correlated_burst_golden_job_lists() {
+    let arrival = Arrival::CorrelatedBurst {
+        events: 3,
+        rate: 0.2,
+        burst: 2,
+        span: 5,
+    };
+    let expected_seed_11 = [
+        Job { release: 2, weight: 1, proc_cloud: 3, trans_cloud: 9, proc_edge: 7, trans_edge: 2, proc_device: 59 },
+        Job { release: 4, weight: 1, proc_cloud: 7, trans_cloud: 23, proc_edge: 10, trans_edge: 6, proc_device: 73 },
+        Job { release: 6, weight: 2, proc_cloud: 3, trans_cloud: 31, proc_edge: 3, trans_edge: 7, proc_device: 13 },
+        Job { release: 4, weight: 2, proc_cloud: 4, trans_cloud: 82, proc_edge: 4, trans_edge: 11, proc_device: 21 },
+        Job { release: 11, weight: 2, proc_cloud: 4, trans_cloud: 34, proc_edge: 5, trans_edge: 5, proc_device: 11 },
+        Job { release: 11, weight: 1, proc_cloud: 4, trans_cloud: 14, proc_edge: 6, trans_edge: 2, proc_device: 45 },
+    ];
+    let expected_seed_12 = [
+        Job { release: 3, weight: 2, proc_cloud: 4, trans_cloud: 68, proc_edge: 4, trans_edge: 14, proc_device: 18 },
+        Job { release: 5, weight: 2, proc_cloud: 5, trans_cloud: 46, proc_edge: 9, trans_edge: 9, proc_device: 17 },
+        Job { release: 15, weight: 2, proc_cloud: 3, trans_cloud: 40, proc_edge: 3, trans_edge: 6, proc_device: 11 },
+        Job { release: 13, weight: 1, proc_cloud: 4, trans_cloud: 12, proc_edge: 6, trans_edge: 2, proc_device: 57 },
+        Job { release: 12, weight: 1, proc_cloud: 7, trans_cloud: 28, proc_edge: 11, trans_edge: 6, proc_device: 64 },
+        Job { release: 15, weight: 2, proc_cloud: 4, trans_cloud: 29, proc_edge: 6, trans_edge: 6, proc_device: 10 },
+    ];
+    assert_eq!(arrival.generate(11), expected_seed_11);
+    assert_eq!(arrival.generate(12), expected_seed_12);
+}
+
 #[test]
 fn seed_override_changes_cells_but_not_the_paper_trace() {
     let corpus = tmp_dir("seed_override");
