@@ -115,6 +115,7 @@ fn main() -> anyhow::Result<()> {
         app_mix: [0.4, 0.4, 0.2],
         policy: Policy::AlgorithmOne,
         topology: Topology::paper(),
+        ..ServeConfig::default()
     };
 
     println!(

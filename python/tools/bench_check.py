@@ -12,8 +12,12 @@ Cases present on only one side are reported but never fail the run, so
 adding a bench row does not require touching the base file in the same
 change.  After a trusted CI run, refresh the base with ``--bless``.
 
+The same gate guards the serving loadtest (``BENCH_serve.json`` vs
+``baselines/BENCH_serve.base.json``): pass ``--hot loadtest_storm`` to
+name that report's hot-path case instead of the scheduler defaults.
+
 Usage:
-  bench_check.py FRESH_JSON BASE_JSON [--factor X] [--bless]
+  bench_check.py FRESH_JSON BASE_JSON [--factor X] [--hot a,b,..] [--bless]
 """
 
 from __future__ import annotations
@@ -50,11 +54,18 @@ def main(argv=None):
         help="fail when fresh median exceeds base * FACTOR (default 2.0)",
     )
     parser.add_argument(
+        "--hot",
+        default=",".join(HOT_CASES),
+        help="comma-separated hot-path case names (default: the "
+        "scheduler cases)",
+    )
+    parser.add_argument(
         "--bless",
         action="store_true",
         help="rewrite BASE from FRESH instead of checking",
     )
     args = parser.parse_args(argv)
+    hot_cases = {c.strip() for c in args.hot.split(",") if c.strip()}
 
     fresh = load_medians(args.fresh)
 
@@ -75,7 +86,7 @@ def main(argv=None):
     base = load_medians(args.base)
     failures = []
     for case in sorted(set(fresh) | set(base)):
-        hot = case in HOT_CASES
+        hot = case in hot_cases
         if case not in base:
             print("  new case (no base):       %s" % case)
             continue

@@ -3,63 +3,58 @@
 //! The artifacts are compiled at fixed batch sizes; the batcher groups
 //! same-application requests that arrive within a window, up to
 //! `max_batch`, so shared machines amortize per-call overhead.  Requests
-//! of a *different* application than the batch head are left queued for
-//! the next round (models have different input shapes, so cross-app
-//! batching is impossible).
+//! of a *different* application than the batch head stay at the front of
+//! the lane's [`LaneQueue`] (models have different input shapes, so
+//! cross-app batching is impossible) and become the next batch's head.
+//!
+//! The window is anchored at the **head's arrival instant**, not the
+//! call instant: `deadline = arrived + window`.  A head that already sat
+//! out its window — because the lane was backlogged, or because it was
+//! deferred behind a different-app batch — dispatches immediately
+//! instead of paying a second full window.  (The first version opened a
+//! fresh `now() + window` per batch, so a deferred request's queueing
+//! delay roughly doubled; `deferred_head_pays_no_extra_window` pins the
+//! fix.)
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
+use super::shed::{Front, LaneQueue};
 use crate::coordinator::InferenceRequest;
 
 /// A request plus the instant it arrived at the machine's queue.
 pub type Item = (InferenceRequest, Instant);
 
-/// Greedy same-app batcher over an mpsc queue.
+/// Greedy same-app batcher over a lane's run queue.
 pub struct Batcher {
     max_batch: usize,
     window: Duration,
-    /// Request deferred because its app differed from the last batch head.
-    holdover: Option<Item>,
 }
 
 impl Batcher {
     pub fn new(max_batch: usize, window: Duration) -> Self {
-        Batcher { max_batch: max_batch.max(1), window, holdover: None }
+        Batcher { max_batch: max_batch.max(1), window }
     }
 
-    /// Collect the next batch: blocks for the first request, then extends
-    /// with same-app arrivals until the window closes or `max_batch` is
-    /// reached.  Returns `None` once the channel is closed and drained.
-    pub fn next_batch(&mut self, rx: &Receiver<Item>) -> Option<Vec<Item>> {
-        let head = match self.holdover.take() {
-            Some(h) => h,
-            None => rx.recv().ok()?,
-        };
+    /// Collect the next batch: pops the queue head (None when nothing is
+    /// queued), then extends with same-app arrivals until the head's
+    /// window closes or `max_batch` is reached.
+    pub fn next_batch(&self, q: &LaneQueue) -> Option<Vec<Item>> {
+        let head = q.try_pop()?;
         let app = head.0.app;
+        // anchored at the head's own arrival: an aged head (backlog or
+        // deferral) has no window left and dispatches immediately
+        let deadline = head.1 + self.window;
         let mut batch = vec![head];
-        if self.max_batch == 1 {
-            return Some(batch);
-        }
-        let deadline = Instant::now() + self.window;
         while batch.len() < self.max_batch {
-            let remaining =
-                deadline.saturating_duration_since(Instant::now());
-            if remaining.is_zero() {
-                break;
-            }
-            match rx.recv_timeout(remaining) {
-                Ok(item) => {
-                    if item.0.app == app {
-                        batch.push(item);
-                    } else {
-                        // different shape: defer to the next batch
-                        self.holdover = Some(item);
+            match q.pop_front_if(app) {
+                Front::Popped(item) => batch.push(item),
+                // different shape: leave it as the next batch's head
+                Front::OtherApp => break,
+                Front::Empty => {
+                    if !q.wait_until(deadline) {
                         break;
                     }
                 }
-                Err(RecvTimeoutError::Timeout)
-                | Err(RecvTimeoutError::Disconnected) => break,
             }
         }
         Some(batch)
@@ -69,8 +64,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc;
-
+    use crate::coordinator::ShedPolicy;
     use crate::workload::Application;
 
     fn req(app: Application) -> Item {
@@ -87,79 +81,136 @@ mod tests {
         (gen.next_request(), Instant::now())
     }
 
+    fn queue() -> LaneQueue {
+        LaneQueue::new(0, ShedPolicy::Priority)
+    }
+
     #[test]
     fn batches_same_app() {
-        let (tx, rx) = mpsc::channel();
+        let q = queue();
         for _ in 0..3 {
-            tx.send(req(Application::Breath)).unwrap();
+            q.offer(req(Application::Breath));
         }
-        drop(tx);
-        let mut b = Batcher::new(8, Duration::from_millis(5));
-        let batch = b.next_batch(&rx).unwrap();
+        q.close();
+        let b = Batcher::new(8, Duration::from_millis(5));
+        let batch = b.next_batch(&q).unwrap();
         assert_eq!(batch.len(), 3);
-        assert!(b.next_batch(&rx).is_none());
+        assert!(b.next_batch(&q).is_none());
     }
 
     #[test]
     fn respects_max_batch() {
-        let (tx, rx) = mpsc::channel();
+        let q = queue();
         for _ in 0..5 {
-            tx.send(req(Application::Mortality)).unwrap();
+            q.offer(req(Application::Mortality));
         }
-        drop(tx);
-        let mut b = Batcher::new(2, Duration::from_millis(5));
-        assert_eq!(b.next_batch(&rx).unwrap().len(), 2);
-        assert_eq!(b.next_batch(&rx).unwrap().len(), 2);
-        assert_eq!(b.next_batch(&rx).unwrap().len(), 1);
-        assert!(b.next_batch(&rx).is_none());
+        q.close();
+        let b = Batcher::new(2, Duration::from_millis(5));
+        assert_eq!(b.next_batch(&q).unwrap().len(), 2);
+        assert_eq!(b.next_batch(&q).unwrap().len(), 2);
+        assert_eq!(b.next_batch(&q).unwrap().len(), 1);
+        assert!(b.next_batch(&q).is_none());
     }
 
     #[test]
     fn different_app_splits_batch() {
-        let (tx, rx) = mpsc::channel();
-        tx.send(req(Application::Breath)).unwrap();
-        tx.send(req(Application::Phenotype)).unwrap();
-        tx.send(req(Application::Phenotype)).unwrap();
-        drop(tx);
-        let mut b = Batcher::new(8, Duration::from_millis(5));
-        let b1 = b.next_batch(&rx).unwrap();
+        let q = queue();
+        q.offer(req(Application::Breath));
+        q.offer(req(Application::Phenotype));
+        q.offer(req(Application::Phenotype));
+        q.close();
+        let b = Batcher::new(8, Duration::from_millis(5));
+        let b1 = b.next_batch(&q).unwrap();
         assert_eq!(b1.len(), 1);
         assert_eq!(b1[0].0.app, Application::Breath);
-        let b2 = b.next_batch(&rx).unwrap();
+        let b2 = b.next_batch(&q).unwrap();
         assert_eq!(b2.len(), 2);
         assert_eq!(b2[0].0.app, Application::Phenotype);
-        assert!(b.next_batch(&rx).is_none());
+        assert!(b.next_batch(&q).is_none());
     }
 
     #[test]
     fn single_batch_mode_skips_window() {
-        let (tx, rx) = mpsc::channel();
-        tx.send(req(Application::Breath)).unwrap();
-        drop(tx);
-        let mut b = Batcher::new(1, Duration::from_secs(60));
+        let q = queue();
+        q.offer(req(Application::Breath));
+        let b = Batcher::new(1, Duration::from_secs(60));
         let start = Instant::now();
-        assert_eq!(b.next_batch(&rx).unwrap().len(), 1);
+        assert_eq!(b.next_batch(&q).unwrap().len(), 1);
         assert!(start.elapsed() < Duration::from_secs(1));
     }
 
     #[test]
-    fn closed_empty_channel_returns_none() {
-        let (tx, rx) = mpsc::channel::<Item>();
-        drop(tx);
-        let mut b = Batcher::new(4, Duration::from_millis(1));
-        assert!(b.next_batch(&rx).is_none());
+    fn empty_queue_returns_none() {
+        let q = queue();
+        let b = Batcher::new(4, Duration::from_millis(1));
+        assert!(b.next_batch(&q).is_none());
     }
 
     #[test]
-    fn window_bounds_wait() {
-        // a lone request should not wait the whole window once the sender
-        // side hangs up
-        let (tx, rx) = mpsc::channel();
-        tx.send(req(Application::Breath)).unwrap();
-        drop(tx);
-        let mut b = Batcher::new(8, Duration::from_millis(30));
+    fn closed_queue_bounds_wait() {
+        // a lone request on a closed queue should not wait the window
+        let q = queue();
+        q.offer(req(Application::Breath));
+        q.close();
+        let b = Batcher::new(8, Duration::from_millis(30));
         let start = Instant::now();
-        assert_eq!(b.next_batch(&rx).unwrap().len(), 1);
+        assert_eq!(b.next_batch(&q).unwrap().len(), 1);
         assert!(start.elapsed() < Duration::from_millis(25));
+    }
+
+    #[test]
+    fn window_closes_at_head_deadline() {
+        // an open, quiet queue waits out the head's remaining window —
+        // and no longer than that
+        let q = queue();
+        q.offer(req(Application::Breath));
+        let b = Batcher::new(8, Duration::from_millis(30));
+        let start = Instant::now();
+        assert_eq!(b.next_batch(&q).unwrap().len(), 1);
+        let waited = start.elapsed();
+        assert!(waited < Duration::from_millis(120), "{waited:?}");
+    }
+
+    /// The bugfix regression: a head deferred behind a different-app
+    /// batch (or aged in a backlog) must NOT pay a fresh full window.
+    #[test]
+    fn deferred_head_pays_no_extra_window() {
+        let window = Duration::from_millis(200);
+        let q = queue();
+        q.offer(req(Application::Breath));
+        q.offer(req(Application::Phenotype));
+        let b = Batcher::new(8, window);
+        // batch 1 dispatches on the different-app boundary
+        let b1 = b.next_batch(&q).unwrap();
+        assert_eq!(b1[0].0.app, Application::Breath);
+        // "execute" batch 1 for longer than the window: the deferred
+        // phenotype head's window has fully elapsed by now
+        std::thread::sleep(window + Duration::from_millis(20));
+        let start = Instant::now();
+        let b2 = b.next_batch(&q).unwrap();
+        let head_latency = start.elapsed();
+        assert_eq!(b2[0].0.app, Application::Phenotype);
+        // pre-fix this waited a fresh 200 ms window; anchored at the
+        // head's arrival it dispatches immediately
+        assert!(
+            head_latency < window / 2,
+            "deferred head paid an extra window: {head_latency:?}"
+        );
+    }
+
+    /// Within the anchored window, same-app stragglers still join.
+    #[test]
+    fn stragglers_join_within_window() {
+        let q = std::sync::Arc::new(queue());
+        q.offer(req(Application::Mortality));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            q2.offer(req(Application::Mortality));
+        });
+        let b = Batcher::new(8, Duration::from_millis(250));
+        let batch = b.next_batch(&q).unwrap();
+        h.join().unwrap();
+        assert_eq!(batch.len(), 2);
     }
 }

@@ -4,14 +4,14 @@
 //! scenario, Fig. 3, generalized to N-replica cloud/edge pools): every
 //! patient's end device releases inference requests over time; a router
 //! places each request on a concrete machine replica (per the configured
-//! [`Policy`]); per-replica executors run the *real* AOT-compiled LSTM
+//! [`Policy`]); a fixed worker pool runs the *real* AOT-compiled LSTM
 //! inference through PJRT.
 //!
 //! Because the paper's testbed is physical machines and ours is one host,
 //! each replica is emulated faithfully (DESIGN.md §3):
 //!
-//! * **network** — a request routed to an edge/cloud replica sits in that
-//!   replica's [`DelayQueue`] for the link model's transmission time
+//! * **network** — a request routed to an edge/cloud replica waits on the
+//!   shared [`TimingWheel`] for the link model's transmission time
 //!   divided by the lane's per-replica link factor ([`Topology::link`]:
 //!   a Wi-Fi gateway waits twice as long as its wired sibling at link
 //!   0.5) before becoming runnable (constraint C4: transmission overlaps
@@ -21,32 +21,46 @@
 //!   [`ServeConfig::downlink_jitter`]) — asymmetric paths like a
 //!   congested ward uplink next to a clean downlink; at the symmetric
 //!   default (all 1.0) the halves sum back exactly, bit-for-bit the
-//!   unsplit path;
+//!   unsplit path.  On the cloud path, the edge↔device and cloud↔edge
+//!   hops draw *independent* jitter uniforms;
 //! * **compute** — the measured host inference time is padded by the
 //!   layer's FLOPS ratio ([`crate::device::EmulationProfile`]), divided
 //!   by the lane's per-replica speed factor ([`Topology::speed`]) so a
 //!   big and a little box in the same class emulate faithfully;
-//! * **exclusivity** — every shared replica executes on a dedicated
-//!   engine thread, one batch at a time (constraint C1); device requests
-//!   are per-patient and batch=1.
+//! * **exclusivity** — every lane is statically owned by exactly one
+//!   pool worker (`lane % workers`), so a replica executes one batch at
+//!   a time (constraint C1) structurally, while distinct replicas run
+//!   concurrently up to the pool width.
 //!
-//! PJRT wrapper types are deliberately `!Send` (`Rc`-based), so each
-//! replica owns an OS engine thread with its own `InferenceRuntime`; the
-//! rest of the coordinator is plain threads + channels (this build is
-//! offline and dependency-free; the same engine-thread pattern vLLM's
-//! router uses).
-//!
-//! Thread layout per run, with `L = clouds + edges + 1` dispatch lanes:
+//! The first version of this core spawned a forwarder thread + private
+//! `DelayQueue` *and* an executor + engine thread per replica — 4 OS
+//! threads per lane, fine for the paper's 3 lanes, impossible for a
+//! metro fleet.  The event-driven layout is O(workers) threads for any
+//! lane count:
 //!
 //! ```text
-//! patient-gen ×P ──▶ router ──▶ delay-queue ×L ──▶ executor ×L ──▶ collector
-//!                                (network sim)       │  ▲
-//!                                                    ▼  │ (rendezvous)
-//!                                                  engine ×L (PJRT)
+//! patient-gen ×P ──▶ router ──▶ timing wheel ×1 (all lanes' network events)
+//!                                    │ network-ready, global time order
+//!                                    ▼
+//!                        bounded lane queue ×L  ── admission control:
+//!                                    │              overflow sheds per
+//!                                    ▼              [`ShedPolicy`]
+//!                        worker pool ×W (own PJRT runtime each)
+//!                                    │
+//!                                    ▼
+//!                                collector
 //! ```
 //!
+//! PJRT wrapper types are deliberately `!Send` (`Rc`-based), so each
+//! *pool worker* owns an OS thread with its own `InferenceRuntime` — W
+//! runtimes instead of one per replica; the rest of the coordinator is
+//! plain threads + channels (this build is offline and dependency-free).
+//!
 //! The router tracks per-lane backlog (queued + in-flight requests) so
-//! replica-aware policies can steer to the least-loaded replica.
+//! replica-aware policies can steer to the least-loaded replica.  Every
+//! terminal outcome — completion *or* shed — reaches the collector; a
+//! serving run that loses requests (a dead worker, a broken channel)
+//! returns `Err`, never a quietly truncated report.
 
 mod batcher;
 mod calibrate;
@@ -54,6 +68,8 @@ mod delay;
 mod engine;
 mod policy;
 mod request;
+mod shed;
+mod wheel;
 
 pub use batcher::{Batcher, Item};
 pub use calibrate::{
@@ -64,6 +80,8 @@ pub use delay::DelayQueue;
 pub use engine::{EngineHandle, EngineRequest};
 pub use policy::Policy;
 pub use request::{InferenceRequest, RequestGenerator};
+pub use shed::{admit, Admission, Front, LaneQueue, Offer, ShedPolicy};
+pub use wheel::{EventCore, ReadyQueue, TimingWheel};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
@@ -75,8 +93,10 @@ use crate::config::Environment;
 use crate::data::Rng;
 use crate::device::{EmulationProfile, Layer};
 use crate::metrics::{MetricsRegistry, MetricsReport};
+use crate::runtime::InferenceRuntime;
 use crate::serialize::Value;
 use crate::topology::{MachineRef, Topology};
+use crate::workload::Application;
 use crate::{Error, Result};
 
 /// Serving-run parameters.
@@ -90,8 +110,9 @@ pub struct ServeConfig {
     pub arrival_rate_hz: f64,
     /// Routing policy.
     pub policy: Policy,
-    /// Machine replicas to serve with (one engine thread + delay queue
-    /// per replica; `Topology::paper()` is the paper's 3-lane setup).
+    /// Machine replicas to serve with (one bounded run queue per
+    /// replica, executed by the shared worker pool; `Topology::paper()`
+    /// is the paper's 3-lane setup).
     pub topology: Topology,
     /// Dynamic batching window per shared machine (ms, simulated).
     pub batch_window_ms: u64,
@@ -122,6 +143,17 @@ pub struct ServeConfig {
     /// Per-shared-replica *downlink* jitter factors — the response-path
     /// mirror of [`ServeConfig::uplink_jitter`].  Empty = all 1.0.
     pub downlink_jitter: Vec<f64>,
+    /// Bound on each lane's run queue (network-released requests waiting
+    /// to execute).  0 = unbounded, the legacy behavior: nothing is ever
+    /// shed.
+    pub queue_capacity: usize,
+    /// What to drop when a bounded lane queue overflows (ignored at
+    /// `queue_capacity` 0).
+    pub shed: ShedPolicy,
+    /// Worker-pool width (each worker owns one PJRT runtime and the
+    /// lanes `lane % workers`).  0 = auto: min(lane count, available
+    /// host parallelism).
+    pub workers: usize,
 }
 
 impl Default for ServeConfig {
@@ -141,6 +173,9 @@ impl Default for ServeConfig {
             app_mix: [0.4, 0.4, 0.2],
             uplink_jitter: Vec::new(),
             downlink_jitter: Vec::new(),
+            queue_capacity: 0,
+            shed: ShedPolicy::Priority,
+            workers: 0,
         }
     }
 }
@@ -151,6 +186,10 @@ impl ServeConfig {
         let def = ServeConfig::default();
         let policy = match r.string("policy")? {
             None => def.policy,
+            Some(s) => s.parse()?,
+        };
+        let shed = match r.string("shed")? {
+            None => def.shed,
             Some(s) => s.parse()?,
         };
         let topology = r
@@ -187,6 +226,11 @@ impl ServeConfig {
             downlink_jitter: r
                 .f64_list("downlink_jitter")?
                 .unwrap_or_default(),
+            queue_capacity: r
+                .usize("queue_capacity")?
+                .unwrap_or(def.queue_capacity),
+            shed,
+            workers: r.usize("workers")?.unwrap_or(def.workers),
         };
         r.finish()?;
         Ok(cfg)
@@ -213,6 +257,9 @@ impl ServeConfig {
         if !self.downlink_jitter.is_empty() {
             v.set("downlink_jitter", self.downlink_jitter.clone());
         }
+        v.set("queue_capacity", self.queue_capacity);
+        v.set("shed", self.shed.label());
+        v.set("workers", self.workers);
         v
     }
 
@@ -228,6 +275,19 @@ impl ServeConfig {
     #[inline]
     pub fn downlink_jitter_at(&self, s: usize) -> f64 {
         self.downlink_jitter.get(s).copied().unwrap_or(1.0)
+    }
+
+    /// The worker-pool width actually used for this config's topology.
+    pub fn effective_workers(&self) -> usize {
+        let lanes = self.topology.lane_count();
+        let w = if self.workers > 0 {
+            self.workers
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        };
+        w.min(lanes).max(1)
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -318,6 +378,11 @@ pub struct ServeReport {
     pub lanes: Vec<LaneReport>,
     /// Total requests completed.
     pub completed: u64,
+    /// Requests shed by admission control, per application class
+    /// (breath, mortality, phenotype).  All zero at `queue_capacity` 0;
+    /// `completed + dropped.sum() == patients × requests_per_patient`
+    /// always holds — anything less is an `Err`, not a report.
+    pub dropped: [u64; 3],
 }
 
 impl ServeReport {
@@ -330,6 +395,10 @@ impl ServeReport {
         v.set(
             "routed",
             vec![self.routed[0], self.routed[1], self.routed[2]],
+        );
+        v.set(
+            "dropped",
+            vec![self.dropped[0], self.dropped[1], self.dropped[2]],
         );
         let lanes: Vec<Value> = self
             .lanes
@@ -365,6 +434,85 @@ struct Completion {
     batch_head: bool,
 }
 
+/// One terminal request outcome.  Every routed request produces exactly
+/// one — completed or shed — so the collector can account for the whole
+/// storm and detect a dead pipeline.
+enum Outcome {
+    Done(Completion),
+    Shed { app: Application },
+}
+
+/// What the collector accumulated over one run.
+struct Collected {
+    registry: MetricsRegistry,
+    completed: u64,
+    dropped: [u64; 3],
+    lane_requests: Vec<u64>,
+    lane_busy: Vec<Duration>,
+}
+
+/// Drain terminal outcomes until every routed request is accounted for.
+/// A channel disconnect before that — a dead worker, wheel, or router —
+/// surfaces as `Err(Error::Serving)` instead of a quietly truncated
+/// report (the pre-rework collector returned whatever it had).
+fn collect_outcomes(
+    rx: &mpsc::Receiver<Outcome>,
+    expected: u64,
+    lane_count: usize,
+) -> Result<Collected> {
+    let mut out = Collected {
+        registry: MetricsRegistry::new(),
+        completed: 0,
+        dropped: [0; 3],
+        lane_requests: vec![0; lane_count],
+        lane_busy: vec![Duration::ZERO; lane_count],
+    };
+    loop {
+        let accounted =
+            out.completed + out.dropped.iter().sum::<u64>();
+        if accounted >= expected {
+            return Ok(out);
+        }
+        let outcome = rx.recv().map_err(|_| {
+            Error::Serving(format!(
+                "serving pipeline died: {accounted} of {expected} requests \
+                 accounted for ({} completed, {} shed)",
+                out.completed,
+                out.dropped.iter().sum::<u64>()
+            ))
+        })?;
+        match outcome {
+            Outcome::Done(c) => {
+                out.registry.record_request(
+                    c.machine.layer(),
+                    c.total,
+                    c.transmission,
+                    c.queueing,
+                    c.processing,
+                );
+                out.lane_requests[c.lane] += 1;
+                if c.batch_head {
+                    out.registry.record_batch(c.machine.layer(), c.batch_rows);
+                    // the batch occupies its worker once, not once per row
+                    out.lane_busy[c.lane] += c.processing;
+                }
+                out.completed += 1;
+            }
+            Outcome::Shed { app } => {
+                out.dropped[app_index(app)] += 1;
+            }
+        }
+    }
+}
+
+/// Per-lane execution parameters, resolved once at startup.
+#[derive(Clone, Copy)]
+struct LaneMeta {
+    machine: MachineRef,
+    speed: f64,
+    max_batch: usize,
+}
+
 /// The serving coordinator.
 pub struct Coordinator {
     env: Environment,
@@ -389,65 +537,104 @@ impl Coordinator {
         let cfg = self.cfg.clone();
         let topo = cfg.topology.clone();
         let lanes = topo.machines();
+        let lane_count = topo.lane_count();
         let emu = if cfg.emulate_compute {
             self.env.emulation(Layer::Cloud)
         } else {
             EmulationProfile::identity()
         };
 
-        // --- engines: one per machine replica, own PJRT client each ------
-        let engines: Vec<EngineHandle> = lanes
-            .iter()
-            .map(|&m| EngineHandle::spawn(&self.artifact_dir, m))
-            .collect::<Result<_>>()?;
-
-        let (done_tx, done_rx) = mpsc::channel::<Completion>();
+        let (done_tx, done_rx) = mpsc::channel::<Outcome>();
 
         // per-lane outstanding requests (queued + in-flight): incremented
-        // by the router at dispatch, decremented by the executor on
-        // completion — the backlog signal replica-aware policies read
+        // by the router at dispatch, decremented on every terminal
+        // outcome — the backlog signal replica-aware policies read
         let backlog: Arc<Vec<AtomicU64>> = Arc::new(
-            (0..topo.lane_count()).map(|_| AtomicU64::new(0)).collect(),
+            (0..lane_count).map(|_| AtomicU64::new(0)).collect(),
         );
 
-        // --- per-lane delay queue (network) + executor -------------------
-        let mut delay_queues: Vec<Arc<DelayQueue<Item>>> = Vec::new();
-        let mut lane_threads = Vec::new();
-        for (li, &machine) in lanes.iter().enumerate() {
-            let dq: Arc<DelayQueue<Item>> = Arc::new(DelayQueue::new());
-            delay_queues.push(dq.clone());
-            let (exec_tx, exec_rx) = mpsc::channel::<Item>();
-            // forwarder: delay queue -> executor channel
-            let fwd = std::thread::Builder::new()
-                .name(format!("net-{}", machine.label()))
+        // --- bounded lane run queues (admission control) -----------------
+        let queues: Arc<Vec<LaneQueue>> = Arc::new(
+            (0..lane_count)
+                .map(|_| LaneQueue::new(cfg.queue_capacity, cfg.shed))
+                .collect(),
+        );
+        let lane_meta: Arc<Vec<LaneMeta>> = Arc::new(
+            lanes
+                .iter()
+                .map(|&m| LaneMeta {
+                    machine: m,
+                    speed: topo.speed(m),
+                    // device lane: per-patient private hardware → no
+                    // cross-patient batching; run singles
+                    max_batch: if m.is_shared() { cfg.max_batch } else { 1 },
+                })
+                .collect(),
+        );
+
+        // --- fixed worker pool: each worker owns one PJRT runtime and
+        // the lanes `lane % workers` (static ownership keeps constraint
+        // C1 — one batch at a time per replica — structural, with no
+        // cross-worker claims)
+        let worker_count = cfg.effective_workers();
+        let ready: Arc<Vec<ReadyQueue>> = Arc::new(
+            (0..worker_count).map(|_| ReadyQueue::new()).collect(),
+        );
+        let mut worker_threads = Vec::new();
+        for w in 0..worker_count {
+            let (boot_tx, boot_rx) = mpsc::channel::<Result<()>>();
+            let dir = self.artifact_dir.clone();
+            let ready_w = ready.clone();
+            let queues_w = queues.clone();
+            let meta_w = lane_meta.clone();
+            let done_w = done_tx.clone();
+            let cfg_w = cfg.clone();
+            let emu_w = emu.clone();
+            let backlog_w = backlog.clone();
+            let t = std::thread::Builder::new()
+                .name(format!("serve-worker-{w}"))
                 .spawn(move || {
-                    while let Some(item) = dq.pop_blocking() {
-                        if exec_tx.send(item).is_err() {
-                            break;
+                    // the runtime must be built in-thread (PJRT types
+                    // are !Send); compile errors surface via the boot
+                    // channel before any request is routed
+                    let runtime = match InferenceRuntime::open(&dir)
+                        .and_then(|r| r.warmup().map(|_| r))
+                    {
+                        Ok(r) => {
+                            let _ = boot_tx.send(Ok(()));
+                            r
                         }
-                    }
+                        Err(e) => {
+                            let _ = boot_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    run_worker(
+                        &runtime, &ready_w[w], &queues_w, &meta_w, &done_w,
+                        &cfg_w, &emu_w, &backlog_w,
+                    );
                 })
-                .map_err(|e| Error::Serving(e.to_string()))?;
-            // executor: batcher + engine + emulation padding (scaled by
-            // this lane's per-replica speed factor)
-            let engine = engines[li].clone();
-            let done = done_tx.clone();
-            let cfg_c = cfg.clone();
-            let emu_c = emu.clone();
-            let backlog_c = backlog.clone();
-            let speed = topo.speed(machine);
-            let exec = std::thread::Builder::new()
-                .name(format!("exec-{}", machine.label()))
-                .spawn(move || {
-                    run_executor(
-                        machine, li, speed, exec_rx, engine, done, cfg_c,
-                        emu_c, backlog_c,
-                    )
-                })
-                .map_err(|e| Error::Serving(e.to_string()))?;
-            lane_threads.push(fwd);
-            lane_threads.push(exec);
+                .map_err(|e| Error::Serving(format!("spawn worker: {e}")))?;
+            worker_threads.push(t);
+            let boot = boot_rx.recv().unwrap_or_else(|_| {
+                Err(Error::Serving("worker thread died during startup".into()))
+            });
+            if let Err(e) = boot {
+                for r in ready.iter() {
+                    r.close();
+                }
+                for q in queues.iter() {
+                    q.close();
+                }
+                for t in worker_threads {
+                    let _ = t.join();
+                }
+                return Err(e);
+            }
         }
+        // the wheel thread reports sheds; the collector's disconnect
+        // check needs every sender dropped once the pipeline is done
+        let done_for_wheel = done_tx.clone();
         drop(done_tx);
 
         // --- patient request generators ----------------------------------
@@ -480,7 +667,9 @@ impl Coordinator {
         }
         drop(gen_tx);
 
-        // --- router -------------------------------------------------------
+        // --- router: one shared timing wheel for every lane ---------------
+        let wheel: Arc<TimingWheel<(usize, Item)>> =
+            Arc::new(TimingWheel::new());
         let env = self.env.clone();
         let calib = self.calib;
         // per-lane Algorithm-1 fits, derived analytically from the
@@ -488,7 +677,7 @@ impl Coordinator {
         // topologies) — the end-to-end consumer of the per-lane λ1 model
         let lane_calibs = lane_calibrations(&self.env, &topo, &calib);
         let cfg_c = cfg.clone();
-        let dq_router: Vec<Arc<DelayQueue<Item>>> = delay_queues.clone();
+        let wheel_r = wheel.clone();
         let backlog_r = backlog.clone();
         let routed = Arc::new(std::sync::Mutex::new([0u64; 3]));
         let routed_c = routed.clone();
@@ -523,7 +712,12 @@ impl Coordinator {
                     // workload dataset
                     let payload_kb = req.app.data_kb(req.size_units)
                         / req.size_units.max(1) as f64;
-                    let u = net_rng.uniform();
+                    // each physical hop draws its own uniform so the
+                    // cloud path's two hops jitter independently; both
+                    // draws always happen, keeping the RNG stream
+                    // deterministic regardless of routing
+                    let u_edge = net_rng.uniform();
+                    let u_cloud = net_rng.uniform();
                     // the class path's (jittered) wire time, scaled by
                     // this replica's own link factor — the serving-path
                     // mirror of Topology::scaled_transmission
@@ -531,7 +725,8 @@ impl Coordinator {
                         &env,
                         machine.layer(),
                         payload_kb,
-                        u,
+                        u_edge,
+                        u_cloud,
                     ) / topo_r.link(machine);
                     // half the wire time is the uplink, half the
                     // downlink, each under its own per-replica jitter;
@@ -550,64 +745,82 @@ impl Coordinator {
                         trans_ms / 1e3 * cfg_c.time_scale,
                     );
                     let ready = Instant::now() + t;
-                    dq_router[lane]
-                        .push(ready, (req.with_transmission(t), ready));
+                    wheel_r
+                        .push(ready, (lane, (req.with_transmission(t), ready)));
                 }
-                for dq in &dq_router {
-                    dq.close();
+                wheel_r.close();
+            })
+            .map_err(|e| Error::Serving(e.to_string()))?;
+
+        // --- wheel thread: network release + admission control ------------
+        let wheel_n = wheel.clone();
+        let queues_n = queues.clone();
+        let ready_n = ready.clone();
+        let backlog_n = backlog.clone();
+        let done_n = done_for_wheel;
+        let net = std::thread::Builder::new()
+            .name("wheel".into())
+            .spawn(move || {
+                while let Some((lane, item)) = wheel_n.pop_blocking() {
+                    let worker = lane % ready_n.len();
+                    match queues_n[lane].offer(item) {
+                        Offer::Queued => ready_n[worker].push(lane),
+                        Offer::ShedIncoming(victim) => {
+                            backlog_n[lane].fetch_sub(1, Ordering::Relaxed);
+                            let _ = done_n.send(Outcome::Shed {
+                                app: victim.0.app,
+                            });
+                        }
+                        Offer::Evicted(victim) => {
+                            backlog_n[lane].fetch_sub(1, Ordering::Relaxed);
+                            let _ = done_n.send(Outcome::Shed {
+                                app: victim.0.app,
+                            });
+                            ready_n[worker].push(lane);
+                        }
+                    }
+                }
+                // arrivals exhausted and every network event released:
+                // drain the pool
+                for q in queues_n.iter() {
+                    q.close();
+                }
+                for r in ready_n.iter() {
+                    r.close();
                 }
             })
             .map_err(|e| Error::Serving(e.to_string()))?;
 
-        // --- collector (this thread) ---------------------------------------
+        // --- collector (this thread) --------------------------------------
         let total_requests = (cfg.patients * cfg.requests_per_patient) as u64;
         let started = Instant::now();
-        let mut registry = MetricsRegistry::new();
-        let mut completed = 0u64;
-        let mut lane_requests = vec![0u64; topo.lane_count()];
-        let mut lane_busy = vec![Duration::ZERO; topo.lane_count()];
-        while let Ok(c) = done_rx.recv() {
-            registry.record_request(
-                c.machine.layer(),
-                c.total,
-                c.transmission,
-                c.queueing,
-                c.processing,
-            );
-            lane_requests[c.lane] += 1;
-            if c.batch_head {
-                registry.record_batch(c.machine.layer(), c.batch_rows);
-                // the batch occupies its engine once, not once per row
-                lane_busy[c.lane] += c.processing;
-            }
-            completed += 1;
-            if completed >= total_requests {
-                break;
-            }
-        }
+        let collected =
+            collect_outcomes(&done_rx, total_requests, lane_count);
         let wall_ms = started.elapsed().as_secs_f64() * 1e3;
-        registry.set_window(0.0, wall_ms);
 
-        // --- orderly shutdown ----------------------------------------------
+        // --- orderly shutdown (join before surfacing any error) -----------
         for t in gen_threads {
             let _ = t.join();
         }
         let _ = router.join();
-        for t in lane_threads {
+        let _ = net.join();
+        for t in worker_threads {
             let _ = t.join();
         }
+        let mut collected = collected?;
+        collected.registry.set_window(0.0, wall_ms);
 
         let lane_reports: Vec<LaneReport> = lanes
             .iter()
             .enumerate()
             .map(|(li, &machine)| {
                 let busy_ms =
-                    lane_busy[li].as_secs_f64() * 1e3;
+                    collected.lane_busy[li].as_secs_f64() * 1e3;
                 LaneReport {
                     machine,
                     speed: topo.speed(machine),
                     link: topo.link(machine),
-                    requests: lane_requests[li],
+                    requests: collected.lane_requests[li],
                     busy_ms,
                     utilization: if wall_ms > 0.0 {
                         busy_ms / wall_ms
@@ -622,15 +835,16 @@ impl Coordinator {
         Ok(ServeReport {
             policy: cfg.policy,
             topology: topo,
-            metrics: registry.report(),
+            metrics: collected.registry.report(),
             routed,
             lanes: lane_reports,
-            completed,
+            completed: collected.completed,
+            dropped: collected.dropped,
         })
     }
 }
 
-fn layer_index(l: Layer) -> usize {
+pub(crate) fn layer_index(l: Layer) -> usize {
     match l {
         Layer::Cloud => 0,
         Layer::Edge => 1,
@@ -638,89 +852,130 @@ fn layer_index(l: Layer) -> usize {
     }
 }
 
-fn transmission_with_jitter(
+pub(crate) fn app_index(a: Application) -> usize {
+    match a {
+        Application::Breath => 0,
+        Application::Mortality => 1,
+        Application::Phenotype => 2,
+    }
+}
+
+/// The class path's wire time (ms) with per-hop jitter.  Each physical
+/// hop draws its own uniform — `u_edge` for the edge↔device hop,
+/// `u_cloud` for the cloud↔edge hop — so the two hops of the composed
+/// cloud path (assumption (b)) jitter independently rather than in
+/// lockstep.  (The first version reused one draw for both hops, which
+/// narrowed the cloud-path delay distribution.)
+pub(crate) fn transmission_with_jitter(
     env: &Environment,
     layer: Layer,
     kb: f64,
-    u: f64,
+    u_edge: f64,
+    u_cloud: f64,
 ) -> f64 {
     match layer {
         Layer::Device => 0.0,
-        Layer::Edge => env.network.edge_device.transfer_ms_jittered(kb, u),
+        Layer::Edge => {
+            env.network.edge_device.transfer_ms_jittered(kb, u_edge)
+        }
         Layer::Cloud => {
-            env.network.edge_device.transfer_ms_jittered(kb, u)
-                + env.network.cloud_edge.transfer_ms_jittered(kb, u)
+            env.network.edge_device.transfer_ms_jittered(kb, u_edge)
+                + env.network.cloud_edge.transfer_ms_jittered(kb, u_cloud)
         }
     }
 }
 
-/// Per-lane executor: drains the queue through the batcher and runs
-/// batches on the replica's engine, padding wall time per the emulation
+/// One pool worker: serves every lane it statically owns, batching from
+/// that lane's bounded run queue and padding wall time per the emulation
 /// profile scaled by the lane's per-replica speed factor (`speed` 2.0
 /// halves the emulated compute pad, 0.5 doubles it — the serving-path
 /// mirror of [`Topology::scaled_processing`]).
 #[allow(clippy::too_many_arguments)]
-fn run_executor(
-    machine: MachineRef,
-    lane: usize,
-    speed: f64,
-    rx: mpsc::Receiver<Item>,
-    engine: EngineHandle,
-    done: mpsc::Sender<Completion>,
-    cfg: ServeConfig,
-    emu: EmulationProfile,
-    backlog: Arc<Vec<AtomicU64>>,
+fn run_worker(
+    runtime: &InferenceRuntime,
+    ready: &ReadyQueue,
+    queues: &[LaneQueue],
+    lane_meta: &[LaneMeta],
+    done: &mpsc::Sender<Outcome>,
+    cfg: &ServeConfig,
+    emu: &EmulationProfile,
+    backlog: &[AtomicU64],
 ) {
-    let layer = machine.layer();
     let window = Duration::from_secs_f64(
         cfg.batch_window_ms as f64 / 1e3 * cfg.time_scale,
     );
-    // device lane: per-patient private hardware → no cross-patient
-    // batching; run singles
-    let max_batch = if machine.is_shared() { cfg.max_batch } else { 1 };
-    let mut batcher = Batcher::new(max_batch, window);
+    while let Some(lane) = ready.pop_blocking() {
+        let meta = lane_meta[lane];
+        let batcher = Batcher::new(meta.max_batch, window);
+        if let Some(batch) = batcher.next_batch(&queues[lane]) {
+            execute_batch(
+                runtime, meta.machine, lane, meta.speed, &batch, done, cfg,
+                emu, backlog,
+            );
+        }
+        // a deferred different-app head (or a request admitted while we
+        // were executing) may still be queued: re-notify ourselves so it
+        // is served even though its original notification is consumed
+        if !queues[lane].is_empty() {
+            ready.push(lane);
+        }
+    }
+}
 
-    while let Some(batch) = batcher.next_batch(&rx) {
-        let app = batch[0].0.app;
-        let rows = batch.len();
-        let row_len = app.seq_len() * app.input_dim();
-        let mut input = Vec::with_capacity(rows * row_len);
-        for (req, _) in &batch {
-            input.extend_from_slice(&req.features);
-        }
-        let exec_start = Instant::now();
-        let result = engine.infer(app, rows, input);
-        let host_elapsed = match &result {
-            Ok(out) => out.elapsed,
-            Err(_) => Duration::ZERO,
-        };
-        // emulate the slower layer: pad to the FLOPS-scaled (and
-        // compute_scale-multiplied) duration, divided by this replica's
-        // speed factor (a 2× box pads half as long)
-        let processing = emu
-            .scale(layer, host_elapsed)
-            .mul_f64(cfg.compute_scale / speed);
-        let pad = processing
-            .saturating_sub(host_elapsed)
-            .mul_f64(cfg.time_scale);
-        if pad > Duration::ZERO {
-            std::thread::sleep(pad);
-        }
-        for (i, (req, arrived)) in batch.iter().enumerate() {
-            backlog[lane].fetch_sub(1, Ordering::Relaxed);
-            let total = req.created.elapsed();
-            let queueing = exec_start.saturating_duration_since(*arrived);
-            let _ = done.send(Completion {
-                machine,
-                lane,
-                total,
-                transmission: req.transmission,
-                queueing,
-                processing,
-                batch_rows: rows,
-                batch_head: i == 0,
-            });
-        }
+/// Execute one same-app batch on the worker's own runtime and report a
+/// [`Completion`] per row.
+#[allow(clippy::too_many_arguments)]
+fn execute_batch(
+    runtime: &InferenceRuntime,
+    machine: MachineRef,
+    lane: usize,
+    speed: f64,
+    batch: &[Item],
+    done: &mpsc::Sender<Outcome>,
+    cfg: &ServeConfig,
+    emu: &EmulationProfile,
+    backlog: &[AtomicU64],
+) {
+    let layer = machine.layer();
+    let app = batch[0].0.app;
+    let rows = batch.len();
+    let row_len = app.seq_len() * app.input_dim();
+    let mut input = Vec::with_capacity(rows * row_len);
+    for (req, _) in batch {
+        input.extend_from_slice(&req.features);
+    }
+    let exec_start = Instant::now();
+    let result = runtime.infer_rows(app, rows, &input);
+    let host_elapsed = match &result {
+        Ok(out) => out.elapsed,
+        Err(_) => Duration::ZERO,
+    };
+    // emulate the slower layer: pad to the FLOPS-scaled (and
+    // compute_scale-multiplied) duration, divided by this replica's
+    // speed factor (a 2× box pads half as long)
+    let processing = emu
+        .scale(layer, host_elapsed)
+        .mul_f64(cfg.compute_scale / speed);
+    let pad = processing
+        .saturating_sub(host_elapsed)
+        .mul_f64(cfg.time_scale);
+    if pad > Duration::ZERO {
+        std::thread::sleep(pad);
+    }
+    for (i, (req, arrived)) in batch.iter().enumerate() {
+        backlog[lane].fetch_sub(1, Ordering::Relaxed);
+        let total = req.created.elapsed();
+        let queueing = exec_start.saturating_duration_since(*arrived);
+        let _ = done.send(Outcome::Done(Completion {
+            machine,
+            lane,
+            total,
+            transmission: req.transmission,
+            queueing,
+            processing,
+            batch_rows: rows,
+            batch_head: i == 0,
+        }));
     }
 }
 
@@ -757,6 +1012,15 @@ mod tests {
     }
 
     #[test]
+    fn app_index_matches_mix_order() {
+        // app_mix and ServeReport.dropped share the (breath, mortality,
+        // phenotype) order of Application::ALL
+        for (i, &a) in Application::ALL.iter().enumerate() {
+            assert_eq!(app_index(a), i);
+        }
+    }
+
+    #[test]
     fn config_value_roundtrip() {
         let cfg = ServeConfig::default();
         let v = cfg.to_value();
@@ -774,6 +1038,35 @@ mod tests {
         let back = ServeConfig::from_reader(&r).unwrap();
         assert_eq!(back.topology, Topology::new(2, 3));
         assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn shed_config_roundtrip() {
+        let mut cfg = ServeConfig::default();
+        cfg.queue_capacity = 16;
+        cfg.shed = ShedPolicy::TailDrop;
+        cfg.workers = 4;
+        cfg.validate().unwrap();
+        let v = cfg.to_value();
+        let r = crate::config::FieldReader::new(&v, "serve").unwrap();
+        let back = ServeConfig::from_reader(&r).unwrap();
+        assert_eq!(back, cfg);
+        assert_eq!(back.shed, ShedPolicy::TailDrop);
+        assert_eq!(back.queue_capacity, 16);
+        assert_eq!(back.workers, 4);
+    }
+
+    #[test]
+    fn effective_workers_bounds() {
+        let mut cfg = ServeConfig::default();
+        cfg.workers = 128;
+        // capped at the lane count (paper topology: 3 lanes)
+        assert_eq!(cfg.effective_workers(), 3);
+        cfg.workers = 2;
+        assert_eq!(cfg.effective_workers(), 2);
+        cfg.workers = 0;
+        let auto = cfg.effective_workers();
+        assert!((1..=3).contains(&auto));
     }
 
     #[test]
@@ -820,10 +1113,93 @@ mod tests {
     #[test]
     fn transmission_monotone_in_layer() {
         let env = Environment::paper();
-        let t_e = transmission_with_jitter(&env, Layer::Edge, 100.0, 0.5);
-        let t_c = transmission_with_jitter(&env, Layer::Cloud, 100.0, 0.5);
-        let t_d = transmission_with_jitter(&env, Layer::Device, 100.0, 0.5);
+        let t_e =
+            transmission_with_jitter(&env, Layer::Edge, 100.0, 0.5, 0.5);
+        let t_c =
+            transmission_with_jitter(&env, Layer::Cloud, 100.0, 0.5, 0.5);
+        let t_d =
+            transmission_with_jitter(&env, Layer::Device, 100.0, 0.5, 0.5);
         assert_eq!(t_d, 0.0);
         assert!(t_c > t_e && t_e > 0.0);
+    }
+
+    /// The bugfix regression: the cloud path's two hops must jitter
+    /// independently — the pre-fix code fed one uniform to both, so a
+    /// slow edge hop always implied a slow WAN hop.
+    #[test]
+    fn cloud_hops_jitter_independently() {
+        let mut env = Environment::paper();
+        env.network.edge_device =
+            env.network.edge_device.with_jitter(0.25);
+        env.network.cloud_edge = env.network.cloud_edge.with_jitter(0.25);
+        // varying only the cloud-hop draw must move the cloud path...
+        let high =
+            transmission_with_jitter(&env, Layer::Cloud, 100.0, 0.9, 0.9);
+        let low =
+            transmission_with_jitter(&env, Layer::Cloud, 100.0, 0.9, 0.1);
+        assert_ne!(high, low);
+        // ...and must not move the edge path (which has no cloud hop)
+        assert_eq!(
+            transmission_with_jitter(&env, Layer::Edge, 100.0, 0.9, 0.1),
+            transmission_with_jitter(&env, Layer::Edge, 100.0, 0.9, 0.7),
+        );
+        // the composed path is exactly the sum of independently
+        // jittered hops (assumption (b))
+        let edge_hop =
+            env.network.edge_device.transfer_ms_jittered(100.0, 0.9);
+        let cloud_hop =
+            env.network.cloud_edge.transfer_ms_jittered(100.0, 0.1);
+        assert_eq!(low, edge_hop + cloud_hop);
+    }
+
+    fn fake_completion(lane: usize) -> Completion {
+        Completion {
+            machine: MachineRef::DEVICE,
+            lane,
+            total: Duration::from_millis(5),
+            transmission: Duration::ZERO,
+            queueing: Duration::from_millis(1),
+            processing: Duration::from_millis(2),
+            batch_rows: 1,
+            batch_head: true,
+        }
+    }
+
+    /// The bugfix regression: a lane dying mid-run (its outcome sender
+    /// dropped before every request is accounted for) must surface as
+    /// `Err`, not as a quietly truncated report.
+    #[test]
+    fn dead_lane_surfaces_as_error() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(Outcome::Done(fake_completion(2))).unwrap();
+        tx.send(Outcome::Shed { app: Application::Phenotype }).unwrap();
+        drop(tx); // the pipeline dies with 3 of 5 requests missing
+        let err = collect_outcomes(&rx, 5, 3).unwrap_err().to_string();
+        assert!(err.contains("2 of 5"), "{err}");
+        assert!(err.contains("1 completed"), "{err}");
+        assert!(err.contains("1 shed"), "{err}");
+    }
+
+    #[test]
+    fn collector_accounts_completions_and_sheds() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(Outcome::Done(fake_completion(0))).unwrap();
+        tx.send(Outcome::Shed { app: Application::Breath }).unwrap();
+        tx.send(Outcome::Shed { app: Application::Phenotype }).unwrap();
+        tx.send(Outcome::Done(fake_completion(0))).unwrap();
+        let out = collect_outcomes(&rx, 4, 2).unwrap();
+        assert_eq!(out.completed, 2);
+        assert_eq!(out.dropped, [1, 0, 1]);
+        assert_eq!(out.lane_requests, vec![2, 0]);
+        assert_eq!(out.registry.total_requests(), 2);
+    }
+
+    #[test]
+    fn collector_ignores_surplus_after_total() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(Outcome::Done(fake_completion(0))).unwrap();
+        let out = collect_outcomes(&rx, 1, 1).unwrap();
+        assert_eq!(out.completed, 1);
+        drop(tx);
     }
 }

@@ -1,0 +1,425 @@
+//! Bounded per-lane run queues with class-aware load shedding.
+//!
+//! The paper's response-time claims only mean something at saturation if
+//! the system decides *what* to drop when a replica can't keep up
+//! (PAPERS.md: time-sensitive cloud-continuum admission; criticality-
+//! aware orchestration in pure edge computing).  Each dispatch lane owns
+//! a [`LaneQueue`] bounded at [`ServeConfig::queue_capacity`]
+//! (0 = unbounded, the legacy behavior); on overflow the configured
+//! [`ShedPolicy`] picks a victim:
+//!
+//! * [`ShedPolicy::Priority`] (default) — life-death alerts
+//!   (`ShortOfBreath` / `LifeDeath`, priority 2) evict the **newest
+//!   queued phenotype** query (priority 1); arriving phenotype on a full
+//!   queue is dropped.  A critical request is only ever shed when the
+//!   whole queue is critical.
+//! * [`ShedPolicy::TailDrop`] — class-blind: whatever arrives at a full
+//!   queue is dropped.
+//!
+//! The decision itself is the pure [`admit`] function, shared
+//! bit-for-bit by the real serving path and the virtual-time loadtest.
+//! Dropped requests are counted per class in
+//! [`ServeReport::dropped`](super::ServeReport).
+//!
+//! [`ServeConfig::queue_capacity`]: super::ServeConfig::queue_capacity
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use crate::workload::Application;
+use crate::{Error, Result};
+
+use super::Item;
+
+/// What to drop when a bounded lane queue overflows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Evict the newest queued lower-priority request to admit a
+    /// higher-priority one; drop the incoming request otherwise.
+    Priority,
+    /// Drop whatever arrives at a full queue, class-blind.
+    TailDrop,
+}
+
+impl ShedPolicy {
+    pub const ALL: [ShedPolicy; 2] = [ShedPolicy::Priority, ShedPolicy::TailDrop];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShedPolicy::Priority => "priority",
+            ShedPolicy::TailDrop => "tail-drop",
+        }
+    }
+}
+
+impl std::str::FromStr for ShedPolicy {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "priority" => Ok(ShedPolicy::Priority),
+            "tail-drop" => Ok(ShedPolicy::TailDrop),
+            other => Err(Error::Config(format!(
+                "unknown shed policy '{other}' (expected priority|tail-drop)"
+            ))),
+        }
+    }
+}
+
+/// Admission decision for one arrival at a lane queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Room (or unbounded): enqueue.
+    Accept,
+    /// Full and nothing cheaper queued: shed the arrival.
+    DropIncoming,
+    /// Full: evict the queued item at this index, then enqueue.
+    Evict(usize),
+}
+
+/// The pure admission rule, shared by the serving path and the
+/// virtual-time loadtest.  `victim` is the index of the newest queued
+/// item with *strictly lower* priority than the arrival (None when no
+/// such item exists); it is only consulted under [`ShedPolicy::Priority`]
+/// on a full queue.
+pub fn admit(
+    policy: ShedPolicy,
+    len: usize,
+    capacity: usize,
+    victim: Option<usize>,
+) -> Admission {
+    if capacity == 0 || len < capacity {
+        return Admission::Accept;
+    }
+    match policy {
+        ShedPolicy::TailDrop => Admission::DropIncoming,
+        ShedPolicy::Priority => match victim {
+            Some(i) => Admission::Evict(i),
+            None => Admission::DropIncoming,
+        },
+    }
+}
+
+/// Outcome of offering one item to a lane queue.
+#[derive(Debug)]
+pub enum Offer {
+    /// Enqueued; notify a worker.
+    Queued,
+    /// Queue full: the arrival itself was shed (returned for accounting).
+    ShedIncoming(Item),
+    /// Queue full: a queued lower-priority victim was shed to admit the
+    /// arrival (victim returned for accounting); notify a worker.
+    Evicted(Item),
+}
+
+/// Result of a same-app conditional pop (the batcher's extend step).
+#[derive(Debug)]
+pub enum Front {
+    /// The head matched `app` and was popped.
+    Popped(Item),
+    /// The head is a different application: left queued as the next
+    /// batch's head (it keeps its arrival instant — no re-queue).
+    OtherApp,
+    /// Nothing queued.
+    Empty,
+}
+
+/// One lane's bounded run queue (network-released requests waiting for a
+/// pool worker), with admission control at the tail and the batcher's
+/// same-app pops at the head.
+pub struct LaneQueue {
+    capacity: usize,
+    policy: ShedPolicy,
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+}
+
+struct QueueInner {
+    items: VecDeque<Item>,
+    closed: bool,
+}
+
+impl LaneQueue {
+    /// `capacity` 0 = unbounded (nothing is ever shed).
+    pub fn new(capacity: usize, policy: ShedPolicy) -> Self {
+        LaneQueue {
+            capacity,
+            policy,
+            inner: Mutex::new(QueueInner {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Offer one network-released request; applies the admission rule.
+    pub fn offer(&self, item: Item) -> Offer {
+        let mut g = self.inner.lock().unwrap();
+        let victim = if self.capacity > 0
+            && g.items.len() >= self.capacity
+            && self.policy == ShedPolicy::Priority
+        {
+            let p = item.0.app.priority();
+            g.items.iter().rposition(|(q, _)| q.app.priority() < p)
+        } else {
+            None
+        };
+        match admit(self.policy, g.items.len(), self.capacity, victim) {
+            Admission::Accept => {
+                g.items.push_back(item);
+                self.cv.notify_one();
+                Offer::Queued
+            }
+            Admission::DropIncoming => Offer::ShedIncoming(item),
+            Admission::Evict(i) => {
+                let evicted = g.items.remove(i).expect("victim index valid");
+                g.items.push_back(item);
+                self.cv.notify_one();
+                Offer::Evicted(evicted)
+            }
+        }
+    }
+
+    /// Pop the head unconditionally (the batcher's first step).
+    pub fn try_pop(&self) -> Option<Item> {
+        self.inner.lock().unwrap().items.pop_front()
+    }
+
+    /// Pop the head only if it belongs to `app` (the batcher's extend
+    /// step: cross-app batching is impossible, so a mismatched head
+    /// stays queued and becomes the next batch).
+    pub fn pop_front_if(&self, app: Application) -> Front {
+        let mut g = self.inner.lock().unwrap();
+        match g.items.front() {
+            None => Front::Empty,
+            Some((req, _)) if req.app == app => {
+                Front::Popped(g.items.pop_front().unwrap())
+            }
+            Some(_) => Front::OtherApp,
+        }
+    }
+
+    /// Block until the queue is non-empty, `deadline` passes, or the
+    /// queue is closed while empty.  Returns true iff items may be
+    /// present (callers re-check via [`LaneQueue::pop_front_if`]).
+    pub fn wait_until(&self, deadline: Instant) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.items.is_empty() {
+                return true;
+            }
+            if g.closed {
+                return false;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (g2, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+    }
+
+    /// Close the queue: pending items stay poppable; waits return.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RequestGenerator;
+    use std::time::Duration;
+
+    fn req(app: Application) -> Item {
+        let mut gen = RequestGenerator::new(
+            7,
+            0,
+            match app {
+                Application::Breath => [1.0, 0.0, 0.0],
+                Application::Mortality => [0.0, 1.0, 0.0],
+                Application::Phenotype => [0.0, 0.0, 1.0],
+            },
+            64,
+        );
+        (gen.next_request(), Instant::now())
+    }
+
+    #[test]
+    fn admit_unbounded_always_accepts() {
+        assert_eq!(
+            admit(ShedPolicy::Priority, 10_000, 0, None),
+            Admission::Accept
+        );
+        assert_eq!(
+            admit(ShedPolicy::TailDrop, 10_000, 0, None),
+            Admission::Accept
+        );
+    }
+
+    #[test]
+    fn admit_below_capacity_accepts() {
+        assert_eq!(
+            admit(ShedPolicy::Priority, 3, 4, Some(0)),
+            Admission::Accept
+        );
+    }
+
+    #[test]
+    fn admit_full_tail_drop_sheds_incoming() {
+        assert_eq!(
+            admit(ShedPolicy::TailDrop, 4, 4, Some(0)),
+            Admission::DropIncoming
+        );
+    }
+
+    #[test]
+    fn admit_full_priority_prefers_victim() {
+        assert_eq!(
+            admit(ShedPolicy::Priority, 4, 4, Some(2)),
+            Admission::Evict(2)
+        );
+        assert_eq!(
+            admit(ShedPolicy::Priority, 4, 4, None),
+            Admission::DropIncoming
+        );
+    }
+
+    /// The satellite contract: phenotype is dropped before life-death
+    /// classes under forced overload.
+    #[test]
+    fn priority_sheds_phenotype_before_life_death() {
+        let q = LaneQueue::new(2, ShedPolicy::Priority);
+        assert!(matches!(q.offer(req(Application::Phenotype)), Offer::Queued));
+        assert!(matches!(q.offer(req(Application::Phenotype)), Offer::Queued));
+        // full of phenotype: a breath alert evicts the newest phenotype
+        match q.offer(req(Application::Breath)) {
+            Offer::Evicted(victim) => {
+                assert_eq!(victim.0.app, Application::Phenotype)
+            }
+            other => panic!("expected eviction, got {other:?}"),
+        }
+        // [phenotype, breath]: mortality evicts the remaining phenotype
+        match q.offer(req(Application::Mortality)) {
+            Offer::Evicted(victim) => {
+                assert_eq!(victim.0.app, Application::Phenotype)
+            }
+            other => panic!("expected eviction, got {other:?}"),
+        }
+        // [breath, mortality]: all critical — a further breath is shed,
+        // never a queued alert
+        match q.offer(req(Application::Breath)) {
+            Offer::ShedIncoming(victim) => {
+                assert_eq!(victim.0.app, Application::Breath)
+            }
+            other => panic!("expected incoming shed, got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn priority_sheds_incoming_phenotype_on_full_queue() {
+        let q = LaneQueue::new(1, ShedPolicy::Priority);
+        assert!(matches!(q.offer(req(Application::Breath)), Offer::Queued));
+        assert!(matches!(
+            q.offer(req(Application::Phenotype)),
+            Offer::ShedIncoming(_)
+        ));
+    }
+
+    #[test]
+    fn priority_evicts_newest_phenotype_first() {
+        let q = LaneQueue::new(3, ShedPolicy::Priority);
+        let mut gen =
+            RequestGenerator::new(7, 0, [0.0, 0.0, 1.0], 64);
+        let ids: Vec<u64> = (0..3)
+            .map(|_| {
+                let r = gen.next_request();
+                let id = r.id;
+                q.offer((r, Instant::now()));
+                id
+            })
+            .collect();
+        match q.offer(req(Application::Mortality)) {
+            Offer::Evicted(victim) => assert_eq!(victim.0.id, ids[2]),
+            other => panic!("expected eviction, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tail_drop_is_class_blind() {
+        let q = LaneQueue::new(1, ShedPolicy::TailDrop);
+        assert!(matches!(q.offer(req(Application::Phenotype)), Offer::Queued));
+        assert!(matches!(
+            q.offer(req(Application::Breath)),
+            Offer::ShedIncoming(_)
+        ));
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn unbounded_queue_never_sheds() {
+        let q = LaneQueue::new(0, ShedPolicy::Priority);
+        for _ in 0..64 {
+            assert!(matches!(
+                q.offer(req(Application::Phenotype)),
+                Offer::Queued
+            ));
+        }
+        assert_eq!(q.len(), 64);
+    }
+
+    #[test]
+    fn pop_front_if_defers_other_app() {
+        let q = LaneQueue::new(0, ShedPolicy::Priority);
+        q.offer(req(Application::Breath));
+        q.offer(req(Application::Phenotype));
+        match q.pop_front_if(Application::Breath) {
+            Front::Popped(item) => assert_eq!(item.0.app, Application::Breath),
+            other => panic!("expected pop, got {other:?}"),
+        }
+        assert!(matches!(
+            q.pop_front_if(Application::Breath),
+            Front::OtherApp
+        ));
+        // the deferred head is still queued, arrival instant intact
+        assert_eq!(q.len(), 1);
+        assert!(matches!(
+            q.pop_front_if(Application::Phenotype),
+            Front::Popped(_)
+        ));
+        assert!(matches!(q.pop_front_if(Application::Breath), Front::Empty));
+    }
+
+    #[test]
+    fn wait_until_returns_on_close_and_deadline() {
+        let q = LaneQueue::new(0, ShedPolicy::Priority);
+        let start = Instant::now();
+        assert!(!q.wait_until(start + Duration::from_millis(20)));
+        assert!(start.elapsed() >= Duration::from_millis(19));
+        q.close();
+        let start = Instant::now();
+        assert!(!q.wait_until(start + Duration::from_secs(60)));
+        assert!(start.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn shed_policy_labels_roundtrip() {
+        for p in ShedPolicy::ALL {
+            assert_eq!(p.label().parse::<ShedPolicy>().unwrap(), p);
+        }
+        assert!("banana".parse::<ShedPolicy>().is_err());
+    }
+}

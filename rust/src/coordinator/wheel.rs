@@ -1,0 +1,371 @@
+//! Shared timing wheel: one thread owns every lane's network events.
+//!
+//! The first serving core paired each replica with a private
+//! [`DelayQueue`](crate::coordinator::DelayQueue) and a forwarder thread
+//! — 2 OS threads per lane just to model the wire.  The wheel collapses
+//! all of that into a single min-heap keyed on `(ready_at, seq)`: the
+//! router pushes `(lane, item)` pairs tagged with their network-ready
+//! instant, and one dispatcher thread releases them in global time
+//! order.  FIFO is preserved within an instant (the `seq` tiebreaker,
+//! identical to the per-lane queues' ordering), and cross-lane
+//! interleaving follows `ready_at` exactly as L independent queues
+//! would release — pinned by `wheel_matches_per_lane_delay_queues`.
+//!
+//! Two layers:
+//!
+//! * [`EventCore`] — the deterministic ordering core over any `Ord`
+//!   key.  The virtual-time loadtest drives one directly with `u64`
+//!   nanosecond keys (no threads, no clock).
+//! * [`TimingWheel`] — a thread-safe wrapper keyed on [`Instant`] whose
+//!   `pop_blocking` sleeps until the earliest event is due; the serving
+//!   path's single network thread.
+//!
+//! [`ReadyQueue`] also lives here: the unordered lane-dispatch channel
+//! between the wheel thread and the worker pool (spmc; lanes with newly
+//! runnable work are pushed, idle workers pop).
+
+use std::collections::{BinaryHeap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+struct Entry<K, T> {
+    key: K,
+    seq: u64,
+    item: T,
+}
+
+impl<K: Ord, T> PartialEq for Entry<K, T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key && self.seq == other.seq
+    }
+}
+impl<K: Ord, T> Eq for Entry<K, T> {}
+impl<K: Ord, T> PartialOrd for Entry<K, T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<K: Ord, T> Ord for Entry<K, T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // min-heap on (key, seq)
+        other.key.cmp(&self.key).then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic event heap: pops in `(key, seq)` order, so equal keys
+/// release FIFO.  The pure core of the timing wheel and the engine of
+/// the virtual-time loadtest.
+pub struct EventCore<K: Ord, T> {
+    heap: BinaryHeap<Entry<K, T>>,
+    seq: u64,
+}
+
+impl<K: Ord, T> Default for EventCore<K, T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K: Ord, T> EventCore<K, T> {
+    pub fn new() -> Self {
+        EventCore { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    /// Schedule an event at `key`.
+    pub fn push(&mut self, key: K, item: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Entry { key, seq, item });
+    }
+
+    /// Remove and return the earliest event.
+    pub fn pop(&mut self) -> Option<(K, T)> {
+        self.heap.pop().map(|e| (e.key, e.item))
+    }
+
+    /// The earliest scheduled key, if any.
+    pub fn peek_key(&self) -> Option<&K> {
+        self.heap.peek().map(|e| &e.key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+struct WheelInner<T> {
+    core: EventCore<Instant, T>,
+    closed: bool,
+}
+
+/// A thread-safe timing wheel over wall-clock instants: the shared
+/// replacement for L per-lane [`DelayQueue`](super::DelayQueue)s.
+pub struct TimingWheel<T> {
+    inner: Mutex<WheelInner<T>>,
+    cv: Condvar,
+}
+
+impl<T> Default for TimingWheel<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> TimingWheel<T> {
+    pub fn new() -> Self {
+        TimingWheel {
+            inner: Mutex::new(WheelInner {
+                core: EventCore::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Schedule an item to become available at `ready_at`.
+    pub fn push(&self, ready_at: Instant, item: T) {
+        let mut g = self.inner.lock().unwrap();
+        g.core.push(ready_at, item);
+        self.cv.notify_one();
+    }
+
+    /// Close the wheel: pops drain the remaining items, then return None.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Pending event count (due or not).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().core.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Block until the earliest event is due (or the wheel is closed and
+    /// empty, returning None).
+    pub fn pop_blocking(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            match g.core.peek_key() {
+                None => {
+                    if g.closed {
+                        return None;
+                    }
+                    g = self.cv.wait(g).unwrap();
+                }
+                Some(&ready_at) => {
+                    let now = Instant::now();
+                    if ready_at <= now {
+                        return g.core.pop().map(|(_, item)| item);
+                    }
+                    let wait = ready_at - now;
+                    let (g2, _) = self.cv.wait_timeout(g, wait).unwrap();
+                    g = g2;
+                }
+            }
+        }
+    }
+}
+
+/// Unordered ready-lane dispatch between the wheel thread and the worker
+/// pool (spmc).  Pushes stay legal after `close` so a draining worker can
+/// re-notify a lane it left non-empty.
+pub struct ReadyQueue {
+    inner: Mutex<ReadyInner>,
+    cv: Condvar,
+}
+
+struct ReadyInner {
+    lanes: VecDeque<usize>,
+    closed: bool,
+}
+
+impl Default for ReadyQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReadyQueue {
+    pub fn new() -> Self {
+        ReadyQueue {
+            inner: Mutex::new(ReadyInner {
+                lanes: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Notify that `lane` has runnable work.
+    pub fn push(&self, lane: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.lanes.push_back(lane);
+        self.cv.notify_one();
+    }
+
+    /// Close the dispatch: pops drain pending lanes, then return None.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Block for the next runnable lane (None once closed and drained).
+    pub fn pop_blocking(&self) -> Option<usize> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(lane) = g.lanes.pop_front() {
+                return Some(lane);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::DelayQueue;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn event_core_pops_by_key_then_fifo() {
+        let mut core = EventCore::new();
+        core.push(30u64, "late");
+        core.push(5, "early");
+        core.push(5, "early-second");
+        core.push(0, "now");
+        assert_eq!(core.len(), 4);
+        assert_eq!(core.pop(), Some((0, "now")));
+        assert_eq!(core.pop(), Some((5, "early")));
+        assert_eq!(core.pop(), Some((5, "early-second")));
+        assert_eq!(core.pop(), Some((30, "late")));
+        assert_eq!(core.pop(), None);
+        assert!(core.is_empty());
+    }
+
+    #[test]
+    fn wheel_respects_delay() {
+        let w = TimingWheel::new();
+        let start = Instant::now();
+        w.push(start + Duration::from_millis(25), ());
+        w.pop_blocking().unwrap();
+        assert!(start.elapsed() >= Duration::from_millis(24));
+    }
+
+    #[test]
+    fn wheel_close_drains_then_none() {
+        let w = TimingWheel::new();
+        w.push(Instant::now(), 1);
+        w.close();
+        assert_eq!(w.pop_blocking(), Some(1));
+        assert_eq!(w.pop_blocking(), None);
+    }
+
+    #[test]
+    fn wheel_cross_thread_wakeup() {
+        let w = Arc::new(TimingWheel::new());
+        let w2 = w.clone();
+        let h = std::thread::spawn(move || w2.pop_blocking());
+        std::thread::sleep(Duration::from_millis(10));
+        w.push(Instant::now(), 7);
+        assert_eq!(h.join().unwrap(), Some(7));
+    }
+
+    /// The tentpole's ordering contract: feeding every lane's events
+    /// into ONE wheel releases them (a) per lane in exactly the order
+    /// that lane's private `DelayQueue` would have released them, and
+    /// (b) globally interleaved by `ready_at` with FIFO preserved
+    /// within an instant.
+    #[test]
+    fn wheel_matches_per_lane_delay_queues() {
+        const LANES: usize = 4;
+        let base = Instant::now();
+        // (offset_ms, lane, tag) — deliberate same-instant collisions
+        // both within a lane (FIFO) and across lanes (push order)
+        let events: Vec<(u64, usize, u32)> = vec![
+            (6, 0, 0),
+            (2, 1, 1),
+            (2, 1, 2),
+            (0, 2, 3),
+            (6, 3, 4),
+            (6, 0, 5),
+            (1, 2, 6),
+            (2, 0, 7),
+            (0, 1, 8),
+            (4, 3, 9),
+        ];
+
+        let wheel: TimingWheel<(usize, u32)> = TimingWheel::new();
+        let queues: Vec<DelayQueue<u32>> =
+            (0..LANES).map(|_| DelayQueue::new()).collect();
+        for &(off, lane, tag) in &events {
+            let at = base + Duration::from_millis(off);
+            wheel.push(at, (lane, tag));
+            queues[lane].push(at, tag);
+        }
+        wheel.close();
+        for q in &queues {
+            q.close();
+        }
+
+        let mut wheel_order = Vec::new();
+        while let Some(ev) = wheel.pop_blocking() {
+            wheel_order.push(ev);
+        }
+
+        // (b) global order: sort-stable by ready offset == push order
+        // within an instant
+        let mut expected = events.clone();
+        expected.sort_by_key(|&(off, _, _)| off);
+        let expected_global: Vec<(usize, u32)> =
+            expected.iter().map(|&(_, lane, tag)| (lane, tag)).collect();
+        assert_eq!(wheel_order, expected_global);
+
+        // (a) per-lane subsequences equal each DelayQueue's releases
+        for (lane, q) in queues.iter().enumerate() {
+            let mut dq_order = Vec::new();
+            while let Some(tag) = q.pop_blocking() {
+                dq_order.push(tag);
+            }
+            let wheel_lane: Vec<u32> = wheel_order
+                .iter()
+                .filter(|&&(l, _)| l == lane)
+                .map(|&(_, tag)| tag)
+                .collect();
+            assert_eq!(wheel_lane, dq_order, "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn ready_queue_drains_after_close() {
+        let r = ReadyQueue::new();
+        r.push(3);
+        r.close();
+        r.push(1); // re-notify after close is allowed
+        assert_eq!(r.pop_blocking(), Some(3));
+        assert_eq!(r.pop_blocking(), Some(1));
+        assert_eq!(r.pop_blocking(), None);
+    }
+
+    #[test]
+    fn ready_queue_cross_thread() {
+        let r = Arc::new(ReadyQueue::new());
+        let r2 = r.clone();
+        let h = std::thread::spawn(move || r2.pop_blocking());
+        std::thread::sleep(Duration::from_millis(10));
+        r.push(5);
+        assert_eq!(h.join().unwrap(), Some(5));
+    }
+}

@@ -1,0 +1,233 @@
+//! HDR-style log-bucketed latency histograms.
+//!
+//! A million-request storm cannot keep every latency sample the way the
+//! serving-path [`MetricsRegistry`](crate::metrics::MetricsRegistry)
+//! does (8 B × 10⁶ × lanes), so the loadtest records into fixed-size
+//! logarithmic histograms: 32 subdivisions per power of two
+//! (`SUB_BITS` = 5), bounding relative quantile error at
+//! 1/32 ≈ 3.1% while holding any u64 nanosecond value in 1920 buckets.
+//! Buckets are exact below 2⁵ and merge-able by plain addition, so
+//! per-lane and per-class histograms sum into aggregates losslessly —
+//! `bucketing_roundtrips_exact_counts` pins the total-count invariant.
+
+use crate::serialize::Value;
+
+/// Subdivisions per octave, as a power of two.
+const SUB_BITS: u32 = 5;
+const SUB: usize = 1 << SUB_BITS; // 32
+/// Octaves above the exact range: values up to 2^63 land in-range.
+const OCTAVES: usize = 64 - SUB_BITS as usize; // 59
+const BUCKETS: usize = SUB * (OCTAVES + 1); // 1920
+
+/// A log-bucketed histogram over u64 samples (nanoseconds, by
+/// convention).
+#[derive(Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The bucket index of one sample: exact below 2^SUB_BITS, then
+/// `(octave, sub)` with `sub` the SUB_BITS bits after the leading one.
+#[inline]
+pub fn index_of(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros(); // >= SUB_BITS
+    let sub = ((v >> (msb - SUB_BITS)) as usize) & (SUB - 1);
+    (((msb - SUB_BITS + 1) as usize) << SUB_BITS) + sub
+}
+
+/// The smallest sample value that lands in `index` — the inverse bound
+/// of [`index_of`], used to report quantiles.
+#[inline]
+pub fn low_of(index: usize) -> u64 {
+    if index < SUB {
+        return index as u64;
+    }
+    let octave = (index >> SUB_BITS) - 1;
+    let sub = (index & (SUB - 1)) as u64;
+    (SUB as u64 + sub) << octave
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram { counts: vec![0; BUCKETS], total: 0, sum: 0, max: 0 }
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: u64) {
+        self.counts[index_of(v)] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.max = self.max.max(v);
+    }
+
+    /// Add every count of `other` into `self` (lossless: buckets align).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Mean of the recorded samples (exact — the sum is kept aside).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.total as f64
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// The lower bound of the bucket holding the q-quantile sample
+    /// (0 ≤ q ≤ 1); within 3.1% of the true order statistic.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64)
+            .clamp(1, self.total);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return low_of(i);
+            }
+        }
+        self.max
+    }
+
+    /// Deterministic JSON summary (counts are u64-exact; quantiles are
+    /// bucket lower bounds, so equal seeds give byte-equal output).
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::object();
+        v.set("count", self.total);
+        v.set("mean_ns", self.mean());
+        v.set("p50_ns", self.quantile(0.50));
+        v.set("p90_ns", self.quantile(0.90));
+        v.set("p99_ns", self.quantile(0.99));
+        v.set("p999_ns", self.quantile(0.999));
+        v.set("max_ns", self.max);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_below_subdivisions() {
+        for v in 0..SUB as u64 {
+            assert_eq!(index_of(v), v as usize);
+            assert_eq!(low_of(index_of(v)), v);
+        }
+    }
+
+    #[test]
+    fn low_of_inverts_index_of() {
+        // every bucket's lower bound indexes back to itself, and the
+        // value one below it indexes to the previous bucket
+        for idx in 0..BUCKETS {
+            let low = low_of(idx);
+            assert_eq!(index_of(low), idx, "low {low}");
+            if low > 0 {
+                assert!(index_of(low - 1) < idx, "below {low}");
+            }
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        for v in [100u64, 999, 31_415, 1 << 20, u64::MAX / 3] {
+            let low = low_of(index_of(v));
+            assert!(low <= v);
+            let err = (v - low) as f64 / v as f64;
+            assert!(err <= 1.0 / SUB as f64 + 1e-12, "{v}: {err}");
+        }
+    }
+
+    #[test]
+    fn extremes_stay_in_range() {
+        assert!(index_of(u64::MAX) < BUCKETS);
+        assert_eq!(index_of(0), 0);
+        let mut h = LogHistogram::new();
+        h.record(0);
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max(), u64::MAX);
+    }
+
+    /// The satellite regression: bucketing must lose no counts — the
+    /// histogram total, the per-bucket sum, and a merge of arbitrary
+    /// shards all agree with the number of recorded samples.
+    #[test]
+    fn bucketing_roundtrips_exact_counts() {
+        let mut rng = crate::data::Rng::new(42);
+        let mut whole = LogHistogram::new();
+        let mut shards = vec![LogHistogram::new(); 4];
+        const N: u64 = 10_000;
+        for i in 0..N {
+            // span many octaves
+            let v = (rng.uniform() * 1e12) as u64;
+            whole.record(v);
+            shards[(i % 4) as usize].record(v);
+        }
+        assert_eq!(whole.count(), N);
+        assert_eq!(whole.counts.iter().sum::<u64>(), N);
+        let mut merged = LogHistogram::new();
+        for s in &shards {
+            merged.merge(s);
+        }
+        assert_eq!(merged.count(), N);
+        assert_eq!(merged.counts, whole.counts);
+        assert_eq!(merged.quantile(0.99), whole.quantile(0.99));
+        assert_eq!(merged.mean().to_bits(), whole.mean().to_bits());
+    }
+
+    #[test]
+    fn quantiles_order_and_bound() {
+        let mut h = LogHistogram::new();
+        for v in 1..=1000u64 {
+            h.record(v * 1000);
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99);
+        assert!(p99 <= h.max());
+        // within the bucket-width error of the true order statistic
+        assert!(p50 as f64 >= 500_000.0 * (1.0 - 1.0 / SUB as f64));
+        assert!(p50 <= 500_000);
+    }
+
+    #[test]
+    fn empty_histogram_is_zeroed() {
+        let h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.99), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+}

@@ -1,0 +1,895 @@
+//! `edgeward loadtest` — open-loop serving storms in virtual time.
+//!
+//! The serving coordinator executes *real* PJRT inference and emulates
+//! network/compute with wall-clock sleeps, so a million-request run is
+//! bounded by real time.  The loadtest swaps the clock: the same
+//! pipeline shape — router → timing wheel → bounded lane queues →
+//! worker pool — is replayed as a single-threaded discrete-event
+//! simulation over an [`EventCore`] keyed on u64 *virtual* nanoseconds.
+//! Routing (the real [`Policy`] with live backlog), admission control
+//! (the same pure [`admit`](crate::coordinator::admit) decision),
+//! batching (arrival-anchored windows, same-app joins, other-app
+//! deferral), and the worker cap all follow the serving core's
+//! semantics; only inference and sleeps are replaced by the Algorithm-1
+//! processing estimate.  10⁶+ requests on a 65-lane metro topology run
+//! in one process in seconds, deterministically: equal seeds give
+//! byte-equal reports.
+//!
+//! Latencies land in HDR-style log-bucketed histograms
+//! ([`LogHistogram`], ≤3.1% relative quantile error) per class, per
+//! lane, and overall.  [`sweep`] replays the storm across arrival-rate
+//! multipliers and [`find_knee`] reports where the topology saturates
+//! (drops exceed 1% or p99 blows past 8× the idle point).  The CLI
+//! writes `BENCH_serve.json` for the CI throughput gate
+//! (`python/tools/bench_check.py`).
+
+mod hist;
+
+pub use hist::{index_of, low_of, LogHistogram};
+
+use std::collections::VecDeque;
+
+use crate::allocation::{estimate_single, Calibration};
+use crate::config::Environment;
+use crate::coordinator::{
+    admit, app_index, transmission_with_jitter, Admission, EventCore,
+    Policy, RequestGenerator, ServeConfig,
+};
+use crate::data::Rng;
+use crate::serialize::Value;
+use crate::topology::Topology;
+use crate::workload::{Application, Workload};
+use crate::{Error, Result};
+
+/// Marginal cost of one extra batched row, as a fraction of a
+/// single-row execution (batching amortizes per-call overhead; the
+/// compiled artifacts' batch dimension is nearly free relative to the
+/// sequential LSTM scan).
+const BATCH_ROW_FRACTION: f64 = 0.25;
+
+/// Loadtest parameters: a serving config plus the storm size.
+#[derive(Debug, Clone)]
+pub struct LoadtestConfig {
+    /// The serving setup under test (topology, policy, queue bounds,
+    /// shed policy, batching, app mix, per-patient arrival rate).
+    /// `requests_per_patient` and `time_scale` are ignored — the storm
+    /// is sized by `requests` and runs in virtual time.
+    pub serve: ServeConfig,
+    /// Total requests in the storm (across all patients).
+    pub requests: u64,
+}
+
+impl Default for LoadtestConfig {
+    fn default() -> Self {
+        LoadtestConfig { serve: ServeConfig::default(), requests: 1_000_000 }
+    }
+}
+
+impl LoadtestConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.requests == 0 {
+            return Err(Error::Config("requests must be > 0".into()));
+        }
+        self.serve.validate()
+    }
+
+    /// Pool width used in virtual time: explicit `workers`, else one
+    /// per lane (never the host's core count — reports must not depend
+    /// on the machine running them).
+    fn virtual_workers(&self) -> usize {
+        let lanes = self.serve.topology.lane_count();
+        if self.serve.workers > 0 {
+            self.serve.workers.min(lanes).max(1)
+        } else {
+            lanes
+        }
+    }
+}
+
+/// One virtual request in flight.
+#[derive(Debug, Clone, Copy)]
+struct LReq {
+    app: Application,
+    created_ns: u64,
+    network_ns: u64,
+    /// Set when the request reaches its lane's run queue.
+    queued_ns: u64,
+}
+
+/// Simulation events, in virtual-nanosecond order.
+enum Ev {
+    /// A patient's next request is released.
+    Arrival { patient: usize },
+    /// A routed request clears the (virtual) network.
+    Ready { lane: usize, req: LReq },
+    /// A forming batch's window closes (stale if `gen` mismatches).
+    Close { lane: usize, gen: u64 },
+    /// A lane's executing batch finishes.
+    Done { lane: usize },
+}
+
+/// A batch being formed on a lane (the head is already out of the
+/// queue, so admission control can never evict it).
+struct Forming {
+    app: Application,
+    rows: Vec<LReq>,
+    gen: u64,
+}
+
+/// Per-lane simulation state.
+struct LaneSim {
+    queue: VecDeque<LReq>,
+    forming: Option<Forming>,
+    /// A closed batch waiting for a free pool worker.
+    closed: Option<Vec<LReq>>,
+    /// The executing batch and its start instant.
+    executing: Option<(Vec<LReq>, u64)>,
+    close_gen: u64,
+    /// Single-row service time per app (ns), speed factor applied.
+    service_ns: [f64; 3],
+    max_batch: usize,
+}
+
+/// Per-lane outcome summary.
+#[derive(Debug, Clone)]
+pub struct LaneStat {
+    pub machine: String,
+    pub requests: u64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+}
+
+/// Outcome of one storm.
+pub struct LoadtestReport {
+    pub requests: u64,
+    pub completed: u64,
+    /// Shed per application class (breath, mortality, phenotype).
+    pub dropped: [u64; 3],
+    /// Virtual makespan: the last completion's timestamp.
+    pub duration_ns: u64,
+    /// Aggregate arrival rate offered (patients × per-patient rate).
+    pub offered_rate_hz: f64,
+    /// Completions per virtual second.
+    pub throughput_rps: f64,
+    pub workers: usize,
+    pub policy: Policy,
+    pub topology: Topology,
+    /// End-to-end latency (network + queueing + service), all classes.
+    pub latency: LogHistogram,
+    /// Queueing delay alone (network-ready → execution start).
+    pub queueing: LogHistogram,
+    /// End-to-end latency per class, same order as `dropped`.
+    pub per_class: [LogHistogram; 3],
+    pub lanes: Vec<LaneStat>,
+}
+
+impl LoadtestReport {
+    pub fn drop_fraction(&self) -> f64 {
+        let d: u64 = self.dropped.iter().sum();
+        d as f64 / self.requests as f64
+    }
+
+    /// Deterministic JSON rendering: all counts exact, all quantiles
+    /// bucket lower bounds — equal seeds give byte-equal documents.
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::object();
+        v.set("requests", self.requests);
+        v.set("completed", self.completed);
+        v.set(
+            "dropped",
+            vec![self.dropped[0], self.dropped[1], self.dropped[2]],
+        );
+        v.set("duration_ns", self.duration_ns);
+        v.set("offered_rate_hz", self.offered_rate_hz);
+        v.set("throughput_rps", self.throughput_rps);
+        v.set("workers", self.workers);
+        v.set("policy", self.policy.label());
+        v.set("topology", self.topology.label());
+        v.set("latency", self.latency.to_value());
+        v.set("queueing", self.queueing.to_value());
+        let mut classes = Value::object();
+        for (i, app) in Application::ALL.iter().enumerate() {
+            classes.set(app.key(), self.per_class[i].to_value());
+        }
+        v.set("per_class", classes);
+        let lanes: Vec<Value> = self
+            .lanes
+            .iter()
+            .map(|l| {
+                let mut o = Value::object();
+                o.set("machine", l.machine.as_str());
+                o.set("requests", l.requests);
+                o.set("p50_ns", l.p50_ns);
+                o.set("p99_ns", l.p99_ns);
+                o
+            })
+            .collect();
+        v.set("lanes", lanes);
+        v
+    }
+}
+
+/// Run one storm to completion in virtual time.
+pub fn run(
+    cfg: &LoadtestConfig,
+    env: &Environment,
+    calib: &Calibration,
+    seed: u64,
+) -> Result<LoadtestReport> {
+    cfg.validate()?;
+    let serve = &cfg.serve;
+    let topo = &serve.topology;
+    let lane_count = topo.lane_count();
+    let machines = topo.machines();
+    let window_ns = serve.batch_window_ms.saturating_mul(1_000_000);
+    let workers = cfg.virtual_workers();
+    let lane_calibs =
+        crate::coordinator::lane_calibrations(env, topo, calib);
+
+    // single-row service time per (lane, app): the Algorithm-1
+    // processing estimate (ms → ns), compute_scale applied, divided by
+    // the replica's speed factor — the virtual twin of the serving
+    // path's emulation pad
+    let mut lanes: Vec<LaneSim> = machines
+        .iter()
+        .map(|&m| {
+            let layer = m.layer();
+            let speed = topo.speed(m);
+            let mut service_ns = [0.0f64; 3];
+            for (i, &app) in Application::ALL.iter().enumerate() {
+                let wl = Workload::new(app, serve.size_units);
+                let ms = *estimate_single(&wl, env, calib)
+                    .processing
+                    .get(layer);
+                service_ns[i] = ms * 1e6 * serve.compute_scale / speed;
+            }
+            LaneSim {
+                queue: VecDeque::new(),
+                forming: None,
+                closed: None,
+                executing: None,
+                close_gen: 0,
+                service_ns,
+                max_batch: if m.is_shared() { serve.max_batch } else { 1 },
+            }
+        })
+        .collect();
+
+    let mut gens: Vec<RequestGenerator> = (0..serve.patients)
+        .map(|p| {
+            RequestGenerator::new(
+                seed ^ (p as u64).wrapping_mul(0x9E37_79B9),
+                p,
+                serve.app_mix,
+                serve.size_units,
+            )
+        })
+        .collect();
+    let mut net_rng = Rng::new(seed ^ 0xDEAD_BEEF);
+    let mut rr = 0usize;
+    let mut backlog = vec![0u64; lane_count];
+
+    let mut events: EventCore<u64, Ev> = EventCore::new();
+    let mut issued = 0u64;
+    for (p, g) in gens.iter_mut().enumerate() {
+        let gap = gap_ns(g, serve.arrival_rate_hz);
+        events.push(gap, Ev::Arrival { patient: p });
+    }
+
+    let mut free_workers = workers;
+    let mut ready_lanes: VecDeque<usize> = VecDeque::new();
+    let mut completed = 0u64;
+    let mut dropped = [0u64; 3];
+    let mut duration_ns = 0u64;
+    let mut latency = LogHistogram::new();
+    let mut queueing = LogHistogram::new();
+    let mut per_class: [LogHistogram; 3] = [
+        LogHistogram::new(),
+        LogHistogram::new(),
+        LogHistogram::new(),
+    ];
+    let mut lane_hist: Vec<LogHistogram> =
+        vec![LogHistogram::new(); lane_count];
+
+    while let Some((now, ev)) = events.pop() {
+        match ev {
+            Ev::Arrival { patient } => {
+                if issued >= cfg.requests {
+                    continue;
+                }
+                issued += 1;
+                let app = gens[patient].next_app();
+                let machine = serve.policy.route(
+                    app,
+                    serve.size_units,
+                    env,
+                    calib,
+                    &lane_calibs,
+                    topo,
+                    &backlog,
+                    &mut rr,
+                );
+                let lane = topo.lane_index(machine);
+                backlog[lane] += 1;
+                // identical wire model to the serving router: per-hop
+                // independent jitter, per-replica link factor, half
+                // uplink / half downlink under per-replica factors
+                let payload_kb = app.data_kb(serve.size_units)
+                    / serve.size_units.max(1) as f64;
+                let u_edge = net_rng.uniform();
+                let u_cloud = net_rng.uniform();
+                let base_ms = transmission_with_jitter(
+                    env,
+                    machine.layer(),
+                    payload_kb,
+                    u_edge,
+                    u_cloud,
+                ) / topo.link(machine);
+                let trans_ms = match topo.shared_index(machine) {
+                    Some(s) => {
+                        base_ms * 0.5 * serve.uplink_jitter_at(s)
+                            + base_ms * 0.5 * serve.downlink_jitter_at(s)
+                    }
+                    None => base_ms,
+                };
+                let network_ns = (trans_ms * 1e6).max(0.0) as u64;
+                let req = LReq {
+                    app,
+                    created_ns: now,
+                    network_ns,
+                    queued_ns: 0,
+                };
+                events.push(
+                    now + network_ns,
+                    Ev::Ready { lane, req },
+                );
+                if issued < cfg.requests {
+                    let gap = gap_ns(&mut gens[patient], serve.arrival_rate_hz);
+                    events.push(now + gap, Ev::Arrival { patient });
+                }
+            }
+            Ev::Ready { lane, mut req } => {
+                req.queued_ns = now;
+                let li = &mut lanes[lane];
+                // a same-app arrival joins the forming batch directly
+                // when nothing is queued ahead of it — the virtual twin
+                // of the batcher pulling the same-app queue prefix
+                // while it waits out the head's window
+                let can_join = match &li.forming {
+                    Some(f) => {
+                        f.app == req.app
+                            && li.queue.is_empty()
+                            && f.rows.len() < li.max_batch
+                    }
+                    None => false,
+                };
+                if can_join {
+                    let f = li.forming.as_mut().expect("checked above");
+                    f.rows.push(req);
+                    if f.rows.len() >= li.max_batch {
+                        // batch filled before its window: close early
+                        // (the bumped gen invalidates the pending Close)
+                        li.close_gen += 1;
+                        close_batch(
+                            &mut lanes,
+                            lane,
+                            now,
+                            &mut free_workers,
+                            &mut ready_lanes,
+                            &mut events,
+                        );
+                    }
+                } else {
+                    offer(li, req, serve, &mut backlog[lane], &mut dropped);
+                    maybe_form(&mut lanes, lane, now, window_ns, &mut events);
+                }
+            }
+            Ev::Close { lane, gen } => {
+                if lanes[lane].forming.as_ref().map(|f| f.gen) == Some(gen) {
+                    close_batch(
+                        &mut lanes,
+                        lane,
+                        now,
+                        &mut free_workers,
+                        &mut ready_lanes,
+                        &mut events,
+                    );
+                }
+            }
+            Ev::Done { lane } => {
+                let (rows, start) =
+                    lanes[lane].executing.take().expect("done without exec");
+                for r in &rows {
+                    let total = now - r.created_ns;
+                    latency.record(total);
+                    per_class[app_index(r.app)].record(total);
+                    queueing.record(start - r.queued_ns);
+                    lane_hist[lane].record(total);
+                    backlog[lane] -= 1;
+                }
+                completed += rows.len() as u64;
+                duration_ns = now;
+                free_workers += 1;
+                // the freed worker first serves any batch already
+                // closed and waiting, then this lane may form its next
+                // head (its window may already have elapsed)
+                while free_workers > 0 {
+                    let Some(l2) = ready_lanes.pop_front() else { break };
+                    let rows = lanes[l2].closed.take().expect("ready w/o batch");
+                    start_exec(&mut lanes, l2, rows, now, &mut events);
+                    free_workers -= 1;
+                }
+                maybe_form(&mut lanes, lane, now, window_ns, &mut events);
+            }
+        }
+    }
+
+    let dropped_total: u64 = dropped.iter().sum();
+    if completed + dropped_total != cfg.requests {
+        return Err(Error::Serving(format!(
+            "virtual storm lost requests: {completed} completed + \
+             {dropped_total} shed != {} issued",
+            cfg.requests
+        )));
+    }
+
+    let lane_stats: Vec<LaneStat> = machines
+        .iter()
+        .zip(&lane_hist)
+        .map(|(&m, h)| LaneStat {
+            machine: m.label(),
+            requests: h.count(),
+            p50_ns: h.quantile(0.50),
+            p99_ns: h.quantile(0.99),
+        })
+        .collect();
+
+    Ok(LoadtestReport {
+        requests: cfg.requests,
+        completed,
+        dropped,
+        duration_ns,
+        offered_rate_hz: serve.patients as f64 * serve.arrival_rate_hz,
+        throughput_rps: if duration_ns > 0 {
+            completed as f64 / (duration_ns as f64 / 1e9)
+        } else {
+            0.0
+        },
+        workers,
+        policy: serve.policy,
+        topology: topo.clone(),
+        latency,
+        queueing,
+        per_class,
+        lanes: lane_stats,
+    })
+}
+
+fn gap_ns(g: &mut RequestGenerator, rate_hz: f64) -> u64 {
+    (g.next_gap_s(rate_hz) * 1e9) as u64
+}
+
+/// Admission into a lane's bounded queue — the same pure [`admit`]
+/// decision the serving wheel thread applies, with the same
+/// newest-lower-priority victim selection.
+fn offer(
+    li: &mut LaneSim,
+    req: LReq,
+    serve: &ServeConfig,
+    backlog: &mut u64,
+    dropped: &mut [u64; 3],
+) {
+    let victim = if serve.queue_capacity > 0
+        && li.queue.len() >= serve.queue_capacity
+    {
+        let p = req.app.priority();
+        li.queue.iter().rposition(|q| q.app.priority() < p)
+    } else {
+        None
+    };
+    match admit(serve.shed, li.queue.len(), serve.queue_capacity, victim) {
+        Admission::Accept => li.queue.push_back(req),
+        Admission::DropIncoming => {
+            dropped[app_index(req.app)] += 1;
+            *backlog -= 1;
+        }
+        Admission::Evict(i) => {
+            let evicted = li.queue.remove(i).expect("victim index in range");
+            dropped[app_index(evicted.app)] += 1;
+            *backlog -= 1;
+            li.queue.push_back(req);
+        }
+    }
+}
+
+/// Start forming a batch from the queue head if the lane is idle,
+/// scheduling the window close at `head.queued_ns + window` — anchored
+/// at the head's arrival, so an aged head closes immediately.
+fn maybe_form(
+    lanes: &mut [LaneSim],
+    lane: usize,
+    now: u64,
+    window_ns: u64,
+    events: &mut EventCore<u64, Ev>,
+) {
+    let li = &mut lanes[lane];
+    if li.forming.is_some()
+        || li.closed.is_some()
+        || li.executing.is_some()
+        || li.queue.is_empty()
+    {
+        return;
+    }
+    let head = li.queue.pop_front().expect("non-empty");
+    li.close_gen += 1;
+    let gen = li.close_gen;
+    let app = head.app;
+    let head_queued = head.queued_ns;
+    let mut rows = vec![head];
+    // pull the same-app queue prefix that already accumulated while
+    // the lane was busy (the batcher's pop_front_if loop)
+    while rows.len() < li.max_batch {
+        match li.queue.front() {
+            Some(q) if q.app == app => {
+                rows.push(li.queue.pop_front().expect("non-empty"));
+            }
+            _ => break,
+        }
+    }
+    let full = rows.len() >= li.max_batch;
+    li.forming = Some(Forming { app, rows, gen });
+    // anchored at the head's arrival: an aged head (it queued behind a
+    // busy lane) or an already-full batch closes immediately
+    let close_at = if li.max_batch <= 1 || full {
+        now
+    } else {
+        (head_queued + window_ns).max(now)
+    };
+    events.push(close_at, Ev::Close { lane, gen });
+}
+
+/// Seal the forming batch: execute immediately if a pool worker is
+/// free, else park it on the ready list (the worker-cap model).
+fn close_batch(
+    lanes: &mut [LaneSim],
+    lane: usize,
+    now: u64,
+    free_workers: &mut usize,
+    ready_lanes: &mut VecDeque<usize>,
+    events: &mut EventCore<u64, Ev>,
+) {
+    let Some(f) = lanes[lane].forming.take() else { return };
+    if *free_workers > 0 {
+        start_exec(lanes, lane, f.rows, now, events);
+        // start_exec consumed a worker
+        *free_workers -= 1;
+    } else {
+        lanes[lane].closed = Some(f.rows);
+        ready_lanes.push_back(lane);
+    }
+}
+
+/// Begin executing a closed batch: service time is the single-row
+/// estimate plus [`BATCH_ROW_FRACTION`] per extra row.
+fn start_exec(
+    lanes: &mut [LaneSim],
+    lane: usize,
+    rows: Vec<LReq>,
+    now: u64,
+    events: &mut EventCore<u64, Ev>,
+) {
+    let li = &mut lanes[lane];
+    let single = li.service_ns[app_index(rows[0].app)];
+    let batch_factor = 1.0 + BATCH_ROW_FRACTION * (rows.len() - 1) as f64;
+    let service = (single * batch_factor).max(1.0) as u64;
+    li.executing = Some((rows, now));
+    events.push(now + service, Ev::Done { lane });
+}
+
+// ----------------------------------------------------------------- sweep
+
+/// One operating point of a saturation sweep.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// Arrival-rate multiplier applied to the base config.
+    pub multiplier: f64,
+    /// Aggregate offered rate at this point (requests/s).
+    pub offered_rate_hz: f64,
+    pub drop_fraction: f64,
+    pub p99_ns: u64,
+    pub throughput_rps: f64,
+}
+
+impl SweepPoint {
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::object();
+        v.set("multiplier", self.multiplier);
+        v.set("offered_rate_hz", self.offered_rate_hz);
+        v.set("drop_fraction", self.drop_fraction);
+        v.set("p99_ns", self.p99_ns);
+        v.set("throughput_rps", self.throughput_rps);
+        v
+    }
+}
+
+/// Replay the storm across arrival-rate multipliers (each point
+/// `requests_per_point` requests, same seed).
+pub fn sweep(
+    cfg: &LoadtestConfig,
+    env: &Environment,
+    calib: &Calibration,
+    seed: u64,
+    multipliers: &[f64],
+    requests_per_point: u64,
+) -> Result<Vec<SweepPoint>> {
+    let mut points = Vec::with_capacity(multipliers.len());
+    for &m in multipliers {
+        let mut point_cfg = cfg.clone();
+        point_cfg.requests = requests_per_point;
+        point_cfg.serve.arrival_rate_hz = cfg.serve.arrival_rate_hz * m;
+        let report = run(&point_cfg, env, calib, seed)?;
+        points.push(SweepPoint {
+            multiplier: m,
+            offered_rate_hz: report.offered_rate_hz,
+            drop_fraction: report.drop_fraction(),
+            p99_ns: report.latency.quantile(0.99),
+            throughput_rps: report.throughput_rps,
+        });
+    }
+    Ok(points)
+}
+
+/// The saturation knee: the first sweep point where the topology stops
+/// keeping up — drops exceed 1% of offered load, or p99 latency blows
+/// past 8× the first (presumed-idle) point's p99.  `None` when every
+/// point is healthy.
+pub fn find_knee(points: &[SweepPoint]) -> Option<usize> {
+    let base_p99 = points.first()?.p99_ns.max(1);
+    points.iter().position(|p| {
+        p.drop_fraction > 0.01 || p.p99_ns > base_p99.saturating_mul(8)
+    })
+}
+
+/// Build the `BENCH_serve.json` document: the bench_check contract
+/// (`{group, results: [{case, median_ns}]}`) with the full
+/// deterministic report (and optional sweep) attached for humans.
+pub fn bench_value(
+    report: &LoadtestReport,
+    wall_ns: u64,
+    sweep_points: Option<&[SweepPoint]>,
+) -> Value {
+    let mut case = Value::object();
+    case.set("case", "loadtest_storm");
+    // real wall nanoseconds per simulated request — the serving-core
+    // throughput number the CI gate watches
+    case.set("median_ns", wall_ns / report.requests.max(1));
+    case.set("requests", report.requests);
+    case.set("wall_ns", wall_ns);
+    let mut root = Value::object();
+    root.set("group", "serve_loadtest");
+    root.set("results", vec![case]);
+    root.set("report", report.to_value());
+    if let Some(points) = sweep_points {
+        root.set(
+            "sweep",
+            points.iter().map(|p| p.to_value()).collect::<Vec<_>>(),
+        );
+        match find_knee(points) {
+            Some(i) => root.set("knee_multiplier", points[i].multiplier),
+            None => root.set("knee_multiplier", Value::Null),
+        }
+    }
+    root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_cfg(requests: u64) -> LoadtestConfig {
+        let mut serve = ServeConfig::default();
+        serve.patients = 16;
+        serve.arrival_rate_hz = 4.0;
+        LoadtestConfig { serve, requests }
+    }
+
+    fn env() -> Environment {
+        Environment::paper()
+    }
+
+    #[test]
+    fn storm_accounts_every_request() {
+        let cfg = base_cfg(5_000);
+        let r = run(&cfg, &env(), &Calibration::paper(), 7).unwrap();
+        assert_eq!(r.completed + r.dropped.iter().sum::<u64>(), 5_000);
+        // unbounded queues: the legacy behavior, nothing shed
+        assert_eq!(r.dropped, [0, 0, 0]);
+        assert_eq!(r.latency.count(), r.completed);
+        let class_total: u64 =
+            r.per_class.iter().map(|h| h.count()).sum();
+        assert_eq!(class_total, r.completed);
+        let lane_total: u64 = r.lanes.iter().map(|l| l.requests).sum();
+        assert_eq!(lane_total, r.completed);
+        assert!(r.duration_ns > 0);
+        assert!(r.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn equal_seeds_give_byte_equal_reports() {
+        let mut cfg = base_cfg(3_000);
+        cfg.serve.topology = Topology::new(2, 6);
+        cfg.serve.queue_capacity = 8;
+        let a = run(&cfg, &env(), &Calibration::paper(), 42).unwrap();
+        let b = run(&cfg, &env(), &Calibration::paper(), 42).unwrap();
+        assert_eq!(
+            a.to_value().to_string_pretty(),
+            b.to_value().to_string_pretty()
+        );
+        let c = run(&cfg, &env(), &Calibration::paper(), 43).unwrap();
+        assert_ne!(
+            a.to_value().to_string_pretty(),
+            c.to_value().to_string_pretty()
+        );
+    }
+
+    #[test]
+    fn metro_topology_runs_in_one_process() {
+        // the acceptance topology: ≥64 lanes, one process, virtual time
+        let mut cfg = base_cfg(20_000);
+        cfg.serve.topology = Topology::new(16, 48); // 65 lanes
+        cfg.serve.patients = 64;
+        let r = run(&cfg, &env(), &Calibration::paper(), 7).unwrap();
+        assert_eq!(r.topology.lane_count(), 65);
+        assert_eq!(r.completed + r.dropped.iter().sum::<u64>(), 20_000);
+        assert_eq!(r.workers, 65);
+    }
+
+    #[test]
+    fn overload_sheds_and_still_accounts() {
+        // one bounded edge lane, everything routed at it, far beyond
+        // its service rate: admission control must shed, and the
+        // storm must still account for every request
+        let mut cfg = base_cfg(4_000);
+        cfg.serve.topology = Topology::new(1, 1);
+        cfg.serve.policy = Policy::FixedEdge;
+        cfg.serve.queue_capacity = 4;
+        cfg.serve.arrival_rate_hz = 500.0;
+        cfg.serve.app_mix = [0.3, 0.3, 0.4];
+        let r = run(&cfg, &env(), &Calibration::paper(), 7).unwrap();
+        let shed: u64 = r.dropped.iter().sum();
+        assert!(shed > 0, "expected drops under 100x overload");
+        assert_eq!(r.completed + shed, 4_000);
+        // priority shedding prefers phenotype over the critical classes
+        assert!(
+            r.dropped[2] > 0,
+            "phenotype must be shed under priority policy: {:?}",
+            r.dropped
+        );
+    }
+
+    #[test]
+    fn tail_drop_is_class_blind_under_overload() {
+        let mut cfg = base_cfg(4_000);
+        cfg.serve.topology = Topology::new(1, 1);
+        cfg.serve.policy = Policy::FixedEdge;
+        cfg.serve.queue_capacity = 4;
+        cfg.serve.arrival_rate_hz = 500.0;
+        cfg.serve.shed = crate::coordinator::ShedPolicy::TailDrop;
+        let r = run(&cfg, &env(), &Calibration::paper(), 7).unwrap();
+        // tail-drop sheds whatever arrives: critical classes drop too
+        assert!(r.dropped[0] > 0 || r.dropped[1] > 0);
+    }
+
+    #[test]
+    fn batching_reduces_executions() {
+        // heavy same-lane traffic with a window must complete every
+        // request while batching (mean latency under batching stays
+        // below the no-batching run's, since service amortizes)
+        let mut cfg = base_cfg(2_000);
+        cfg.serve.topology = Topology::new(1, 1);
+        cfg.serve.policy = Policy::FixedEdge;
+        cfg.serve.arrival_rate_hz = 200.0;
+        cfg.serve.max_batch = 8;
+        let batched = run(&cfg, &env(), &Calibration::paper(), 7).unwrap();
+        cfg.serve.max_batch = 1;
+        let single = run(&cfg, &env(), &Calibration::paper(), 7).unwrap();
+        assert_eq!(batched.completed, 2_000);
+        assert_eq!(single.completed, 2_000);
+        assert!(
+            batched.duration_ns <= single.duration_ns,
+            "batching must not slow the storm: {} vs {}",
+            batched.duration_ns,
+            single.duration_ns
+        );
+    }
+
+    #[test]
+    fn worker_cap_slows_the_storm() {
+        let mut cfg = base_cfg(2_000);
+        cfg.serve.topology = Topology::new(2, 6);
+        cfg.serve.arrival_rate_hz = 100.0;
+        cfg.serve.policy = Policy::RoundRobin;
+        let wide = run(&cfg, &env(), &Calibration::paper(), 7).unwrap();
+        cfg.serve.workers = 1;
+        let narrow = run(&cfg, &env(), &Calibration::paper(), 7).unwrap();
+        assert_eq!(wide.workers, 9);
+        assert_eq!(narrow.workers, 1);
+        assert!(narrow.duration_ns >= wide.duration_ns);
+    }
+
+    #[test]
+    fn knee_detection_on_synthetic_points() {
+        let mk = |drop_fraction: f64, p99_ns: u64| SweepPoint {
+            multiplier: 1.0,
+            offered_rate_hz: 1.0,
+            drop_fraction,
+            p99_ns,
+            throughput_rps: 1.0,
+        };
+        // healthy everywhere
+        let pts = vec![mk(0.0, 100), mk(0.0, 150), mk(0.005, 300)];
+        assert_eq!(find_knee(&pts), None);
+        // drops cross 1% at index 2
+        let pts = vec![mk(0.0, 100), mk(0.002, 120), mk(0.05, 130)];
+        assert_eq!(find_knee(&pts), Some(2));
+        // p99 blows past 8x base at index 1
+        let pts = vec![mk(0.0, 100), mk(0.0, 900), mk(0.0, 2000)];
+        assert_eq!(find_knee(&pts), Some(1));
+        assert_eq!(find_knee(&[]), None);
+    }
+
+    #[test]
+    fn sweep_points_track_multipliers() {
+        let mut cfg = base_cfg(500);
+        cfg.serve.topology = Topology::new(1, 1);
+        cfg.serve.queue_capacity = 8;
+        let pts = sweep(
+            &cfg,
+            &env(),
+            &Calibration::paper(),
+            7,
+            &[1.0, 4.0],
+            500,
+        )
+        .unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[0].multiplier, 1.0);
+        assert!(pts[1].offered_rate_hz > pts[0].offered_rate_hz);
+    }
+
+    #[test]
+    fn bench_value_has_gate_contract() {
+        let cfg = base_cfg(1_000);
+        let r = run(&cfg, &env(), &Calibration::paper(), 7).unwrap();
+        let v = bench_value(&r, 5_000_000, None);
+        assert_eq!(v.get("group").unwrap().as_str(), Some("serve_loadtest"));
+        let rows = v.get("results").unwrap().as_array().unwrap();
+        assert_eq!(
+            rows[0].get("case").unwrap().as_str(),
+            Some("loadtest_storm")
+        );
+        assert_eq!(
+            rows[0].get("median_ns").unwrap().as_u64(),
+            Some(5_000)
+        );
+        assert!(v.get("report").is_some());
+    }
+
+    /// The full acceptance storm: 10⁶ requests on a 65-lane metro.
+    /// Ignored by default (seconds, not milliseconds, in debug builds);
+    /// CI runs the release CLI equivalent.
+    #[test]
+    #[ignore]
+    fn million_request_storm() {
+        let mut cfg = base_cfg(1_000_000);
+        cfg.serve.topology = Topology::new(16, 48);
+        cfg.serve.patients = 256;
+        cfg.serve.queue_capacity = 64;
+        cfg.serve.arrival_rate_hz = 50.0;
+        let r = run(&cfg, &env(), &Calibration::paper(), 7).unwrap();
+        assert_eq!(
+            r.completed + r.dropped.iter().sum::<u64>(),
+            1_000_000
+        );
+    }
+}

@@ -41,6 +41,10 @@ COMMANDS:
                                                    Algorithm 2 / baselines
   serve     [--policy P] [--patients N] [--requests N] [--clouds N]
             [--edges N] [--seed N] [--json]
+  loadtest  [--requests N] [--patients N] [--rate HZ] [--policy P]
+            [--clouds N] [--edges N] [--capacity N] [--shed S]
+            [--workers N] [--window MS] [--max-batch N] [--seed N]
+            [--sweep] [--out FILE] [--json]        virtual-time serving storms
   calibrate [--live]                               print fitted λ coefficients
   config                                           print the default TOML config
   datagen   --app APP [--n N] [--seed N]           synthetic ICU episodes (CSV)
@@ -48,6 +52,7 @@ COMMANDS:
 APP:       breath | mortality | phenotype
 POLICY:    algorithm-1 | fixed-cloud | fixed-edge | fixed-device |
            round-robin | least-loaded
+SHED:      priority | tail-drop
 STRATEGY:  ours | per-job-optimal | all-cloud | all-edge | all-device
 SOLVER:    tabu | greedy | exact | online | lns | per-job-optimal |
            per-job-optimal-scaled | all-cloud | all-edge | all-device
@@ -84,6 +89,15 @@ Heterogeneous machines: a scenario's [scenario.topology] (or the config
 [serve.topology]) section accepts per-replica speed factors
 (cloud_speeds = [..] / edge_speeds = [..], default 1.0 each); every
 solver and the serving path charge each replica ceil(I/speed).
+
+`loadtest` replays the serving pipeline (router, timing wheel, bounded
+lane queues, worker pool) as a virtual-time simulation: open-loop
+seeded storms of millions of requests on any topology, per-class
+HDR-style latency histograms, deterministic for a fixed seed.
+--capacity bounds each lane's run queue (0 = unbounded) and --shed
+picks what overflow drops; --sweep replays across arrival-rate
+multipliers and reports the saturation knee; --out writes the
+BENCH_serve.json document consumed by python/tools/bench_check.py.
 ";
 
 /// Minimal argument cursor: `--key value` and `--flag` handling.
@@ -547,6 +561,16 @@ fn run() -> edgeward::Result<()> {
                     "routed     : CC={} ES={} ED={}",
                     report.routed[0], report.routed[1], report.routed[2]
                 );
+                let shed: u64 = report.dropped.iter().sum();
+                if shed > 0 {
+                    println!(
+                        "shed       : {} (breath={} mortality={} phenotype={})",
+                        shed,
+                        report.dropped[0],
+                        report.dropped[1],
+                        report.dropped[2],
+                    );
+                }
                 for lane in &report.lanes {
                     let mut factors = String::new();
                     if lane.speed != 1.0 {
@@ -585,6 +609,184 @@ fn run() -> edgeward::Result<()> {
                         m.queueing.mean,
                     );
                 }
+            }
+        }
+        "loadtest" => {
+            let requests: u64 = args.parse("requests").unwrap_or(1_000_000);
+            let patients: Option<usize> = args.parse("patients");
+            let rate: Option<f64> = args.parse("rate");
+            let policy: Option<Policy> = args.parse("policy");
+            let clouds: Option<usize> = args.parse("clouds");
+            let edges: Option<usize> = args.parse("edges");
+            let capacity: Option<usize> = args.parse("capacity");
+            let shed: Option<edgeward::coordinator::ShedPolicy> =
+                args.parse("shed");
+            let workers: Option<usize> = args.parse("workers");
+            let window: Option<u64> = args.parse("window");
+            let max_batch: Option<usize> = args.parse("max-batch");
+            let seed: u64 = args.parse("seed").unwrap_or(cfg.seed);
+            let do_sweep = args.flag("sweep");
+            let out = args.opt("out");
+            let json = args.flag("json");
+            args.finish();
+
+            let mut serve_cfg = cfg.serve.clone();
+            if let Some(p) = policy {
+                serve_cfg.policy = p;
+            }
+            if let Some(p) = patients {
+                serve_cfg.patients = p;
+            }
+            if let Some(r) = rate {
+                serve_cfg.arrival_rate_hz = r;
+            }
+            if let Some(c) = capacity {
+                serve_cfg.queue_capacity = c;
+            }
+            if let Some(s) = shed {
+                serve_cfg.shed = s;
+            }
+            if let Some(w) = workers {
+                serve_cfg.workers = w;
+            }
+            if let Some(w) = window {
+                serve_cfg.batch_window_ms = w;
+            }
+            if let Some(m) = max_batch {
+                serve_cfg.max_batch = m;
+            }
+            if clouds.is_some() || edges.is_some() {
+                let t = &serve_cfg.topology;
+                let cloud_speeds =
+                    clouds.is_none().then(|| t.cloud_speeds());
+                let edge_speeds =
+                    edges.is_none().then(|| t.edge_speeds());
+                let cloud_links =
+                    clouds.is_none().then(|| t.cloud_links());
+                let edge_links =
+                    edges.is_none().then(|| t.edge_links());
+                serve_cfg.topology = Topology::with_factors(
+                    clouds.unwrap_or(t.clouds),
+                    edges.unwrap_or(t.edges),
+                    cloud_speeds,
+                    edge_speeds,
+                    cloud_links,
+                    edge_links,
+                )?;
+            }
+            let lt_cfg = edgeward::loadtest::LoadtestConfig {
+                serve: serve_cfg,
+                requests,
+            };
+            let started = std::time::Instant::now();
+            let report = edgeward::loadtest::run(&lt_cfg, &env, &calib, seed)?;
+            let wall_ns = started.elapsed().as_nanos() as u64;
+            let sweep_points = if do_sweep {
+                let per_point = (requests / 10).max(1_000);
+                Some(edgeward::loadtest::sweep(
+                    &lt_cfg,
+                    &env,
+                    &calib,
+                    seed,
+                    &[0.25, 0.5, 1.0, 2.0, 4.0, 8.0],
+                    per_point,
+                )?)
+            } else {
+                None
+            };
+
+            if json {
+                print!("{}", report.to_value().to_string_pretty());
+            } else {
+                let shed_total: u64 = report.dropped.iter().sum();
+                println!("policy     : {}", report.policy.label());
+                println!("topology   : {}", report.topology.label());
+                println!(
+                    "storm      : {} requests, {} patients @ {:.1} req/s each",
+                    report.requests,
+                    lt_cfg.serve.patients,
+                    lt_cfg.serve.arrival_rate_hz,
+                );
+                println!("workers    : {}", report.workers);
+                println!("completed  : {}", report.completed);
+                println!(
+                    "shed       : {} (breath={} mortality={} phenotype={})",
+                    shed_total,
+                    report.dropped[0],
+                    report.dropped[1],
+                    report.dropped[2],
+                );
+                println!(
+                    "virtual    : {:.2}s, {:.0} req/s served",
+                    report.duration_ns as f64 / 1e9,
+                    report.throughput_rps,
+                );
+                println!(
+                    "wall       : {:.2}s ({:.0} req/s simulated)",
+                    wall_ns as f64 / 1e9,
+                    report.requests as f64 / (wall_ns as f64 / 1e9).max(1e-9),
+                );
+                println!(
+                    "latency    : p50={:.1}ms p99={:.1}ms p99.9={:.1}ms max={:.1}ms",
+                    report.latency.quantile(0.50) as f64 / 1e6,
+                    report.latency.quantile(0.99) as f64 / 1e6,
+                    report.latency.quantile(0.999) as f64 / 1e6,
+                    report.latency.max() as f64 / 1e6,
+                );
+                for (i, app) in Application::ALL.iter().enumerate() {
+                    let h = &report.per_class[i];
+                    if h.is_empty() {
+                        continue;
+                    }
+                    println!(
+                        "  {:10} n={:<8} p50={:.1}ms p99={:.1}ms",
+                        app.key(),
+                        h.count(),
+                        h.quantile(0.50) as f64 / 1e6,
+                        h.quantile(0.99) as f64 / 1e6,
+                    );
+                }
+                if report.lanes.len() <= 8 {
+                    for l in &report.lanes {
+                        println!(
+                            "  lane {:4}: n={:<6} p50={:.1}ms p99={:.1}ms",
+                            l.machine,
+                            l.requests,
+                            l.p50_ns as f64 / 1e6,
+                            l.p99_ns as f64 / 1e6,
+                        );
+                    }
+                }
+                if let Some(points) = &sweep_points {
+                    println!("saturation sweep:");
+                    for p in points {
+                        println!(
+                            "  x{:<5} offered={:>8.1} req/s drop={:>6.2}% p99={:.1}ms",
+                            p.multiplier,
+                            p.offered_rate_hz,
+                            p.drop_fraction * 100.0,
+                            p.p99_ns as f64 / 1e6,
+                        );
+                    }
+                    match edgeward::loadtest::find_knee(points) {
+                        Some(i) => println!(
+                            "knee       : x{} (offered {:.1} req/s)",
+                            points[i].multiplier, points[i].offered_rate_hz
+                        ),
+                        None => println!(
+                            "knee       : none within the swept range"
+                        ),
+                    }
+                }
+            }
+            if let Some(path) = out {
+                let doc = edgeward::loadtest::bench_value(
+                    &report,
+                    wall_ns,
+                    sweep_points.as_deref(),
+                );
+                edgeward::benchkit::write_value(&path, &doc)?;
+                println!("wrote {path}");
             }
         }
         "calibrate" => {

@@ -31,6 +31,7 @@ fn fast_cfg(policy: Policy) -> ServeConfig {
         emulate_compute: true,
         compute_scale: 1.0,
         app_mix: [1.0, 1.0, 1.0],
+        ..ServeConfig::default()
     }
 }
 
