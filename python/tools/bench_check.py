@@ -1,23 +1,32 @@
 #!/usr/bin/env python3
-"""Perf-trend gate for the scheduler bench report.
+"""Perf-trend gate for the bench reports.
 
-Compares a freshly produced ``BENCH_sched.json`` against the committed
-base report (``baselines/BENCH_sched.base.json``) and fails when a
-*hot-path* case regressed by more than ``--factor`` (default 2x) on
-``median_ns``.  This is a trend check, not a noise gate: the factor is
-wide enough that scheduler-jitter never trips it, but an accidental
-O(n) -> O(n^2) slip in the delta evaluator or the LNS repair loop does.
+Compares freshly produced bench JSON against the committed base report
+and fails when a *hot-path* case regressed by more than ``--factor``
+(default 2x) on ``median_ns``.  This is a trend check, not a noise
+gate: the factor is wide enough that scheduler-jitter never trips it,
+but an accidental O(n) -> O(n^2) slip in the delta evaluator or the
+LNS repair loop does.
+
+Positional arguments are FRESH/BASE *pairs*, and ``--hot`` may be
+repeated, so a single invocation can gate several reports at once::
+
+  bench_check.py BENCH_sched.json ../baselines/BENCH_sched.base.json \\
+                 BENCH_serve.json ../baselines/BENCH_serve.base.json \\
+                 --hot algorithm2_paper_trace --hot loadtest_storm
+
+Rows that carry an ``allocs_per_request`` field (the serving loadtest's
+per-op breakdown) get a second gate: a hot case fails when the fresh
+storm allocates more than ``base + 0.5`` per request — the zero-alloc
+steady state must not silently erode.
 
 Cases present on only one side are reported but never fail the run, so
 adding a bench row does not require touching the base file in the same
-change.  After a trusted CI run, refresh the base with ``--bless``.
-
-The same gate guards the serving loadtest (``BENCH_serve.json`` vs
-``baselines/BENCH_serve.base.json``): pass ``--hot loadtest_storm`` to
-name that report's hot-path case instead of the scheduler defaults.
+change.  After a trusted CI run, refresh the bases with ``--bless``.
 
 Usage:
-  bench_check.py FRESH_JSON BASE_JSON [--factor X] [--hot a,b,..] [--bless]
+  bench_check.py FRESH BASE [FRESH BASE ...] [--factor X]
+                 [--hot a,b,..]... [--bless]
 """
 
 from __future__ import annotations
@@ -26,65 +35,50 @@ import argparse
 import json
 import sys
 
-# The cases that guard the PR's perf story: the paper-trace tabu solve
+# The cases that guard the perf story: the paper-trace tabu solve
 # (delta evaluation end-to-end), one incremental sweep at 10k jobs
-# (parallel neighborhood scoring), and the 100k-job LNS tier.
+# (parallel neighborhood scoring), the 100k-job LNS tier, and the
+# virtual-time serving storm (hierarchical wheel + zero-alloc
+# lifecycle).
 HOT_CASES = (
     "algorithm2_paper_trace",
     "tabu_iteration_10k_jobs",
     "lns_100k_jobs",
+    "loadtest_storm",
 )
 
+# A hot case with per-op data fails when it allocates this much more
+# per request than its base.
+ALLOC_SLACK_PER_REQUEST = 0.5
 
-def load_medians(path):
+
+def load_rows(path):
     with open(path) as fh:
         doc = json.load(fh)
     rows = doc.get("results", [])
-    return {r["case"]: int(r["median_ns"]) for r in rows if "case" in r}
+    return {r["case"]: r for r in rows if "case" in r}
 
 
-def main(argv=None):
-    parser = argparse.ArgumentParser(description=__doc__)
-    parser.add_argument("fresh", help="freshly produced BENCH_sched.json")
-    parser.add_argument("base", help="committed BENCH_sched.base.json")
-    parser.add_argument(
-        "--factor",
-        type=float,
-        default=2.0,
-        help="fail when fresh median exceeds base * FACTOR (default 2.0)",
+def bless(fresh_path, base_path):
+    with open(fresh_path) as fh:
+        doc = json.load(fh)
+    doc["note"] = (
+        "perf-trend base for bench_check.py; medians blessed from a "
+        "real bench run"
     )
-    parser.add_argument(
-        "--hot",
-        default=",".join(HOT_CASES),
-        help="comma-separated hot-path case names (default: the "
-        "scheduler cases)",
+    with open(base_path, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(
+        "blessed %s from %s (%d cases)"
+        % (base_path, fresh_path, len(doc.get("results", [])))
     )
-    parser.add_argument(
-        "--bless",
-        action="store_true",
-        help="rewrite BASE from FRESH instead of checking",
-    )
-    args = parser.parse_args(argv)
-    hot_cases = {c.strip() for c in args.hot.split(",") if c.strip()}
 
-    fresh = load_medians(args.fresh)
 
-    if args.bless:
-        with open(args.fresh) as fh:
-            doc = json.load(fh)
-        doc["note"] = (
-            "perf-trend base for bench_check.py; medians blessed from a "
-            "real bench run"
-        )
-        with open(args.base, "w") as fh:
-            json.dump(doc, fh, indent=2, sort_keys=True)
-            fh.write("\n")
-        print("blessed %s from %s (%d cases)"
-              % (args.base, args.fresh, len(fresh)))
-        return 0
-
-    base = load_medians(args.base)
-    failures = []
+def check_pair(fresh_path, base_path, hot_cases, factor, failures):
+    fresh = load_rows(fresh_path)
+    base = load_rows(base_path)
+    print("%s vs %s:" % (fresh_path, base_path))
     for case in sorted(set(fresh) | set(base)):
         hot = case in hot_cases
         if case not in base:
@@ -93,24 +87,93 @@ def main(argv=None):
         if case not in fresh:
             print("  base case missing:        %s" % case)
             continue
-        ratio = fresh[case] / max(base[case], 1)
+        f_med = int(fresh[case]["median_ns"])
+        b_med = int(base[case]["median_ns"])
+        ratio = f_med / max(b_med, 1)
         verdict = "ok"
-        if hot and ratio > args.factor:
+        if hot and ratio > factor:
             verdict = "REGRESSED"
-            failures.append((case, ratio))
+            failures.append(("%s median_ns" % case, "%.2fx" % ratio))
         print(
             "  %-9s %s  %-36s %12d ns vs %12d ns  (%.2fx)"
-            % ("hot-path" if hot else "", verdict, case,
-               fresh[case], base[case], ratio)
+            % ("hot-path" if hot else "", verdict, case, f_med, b_med, ratio)
         )
+        f_allocs = fresh[case].get("allocs_per_request")
+        b_allocs = base[case].get("allocs_per_request")
+        if f_allocs is None or b_allocs is None:
+            continue
+        limit = float(b_allocs) + ALLOC_SLACK_PER_REQUEST
+        alloc_verdict = "ok"
+        if hot and float(f_allocs) > limit:
+            alloc_verdict = "REGRESSED"
+            failures.append(
+                (
+                    "%s allocs_per_request" % case,
+                    "%.2f vs base %.2f" % (f_allocs, b_allocs),
+                )
+            )
+        print(
+            "  %-9s %s  %-36s %12.2f    vs %12.2f    allocs/request"
+            % (
+                "hot-path" if hot else "",
+                alloc_verdict,
+                case,
+                float(f_allocs),
+                float(b_allocs),
+            )
+        )
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "paths",
+        nargs="+",
+        help="FRESH BASE report pairs (2, 4, 6, ... paths)",
+    )
+    parser.add_argument(
+        "--factor",
+        type=float,
+        default=2.0,
+        help="fail when fresh median exceeds base * FACTOR (default 2.0)",
+    )
+    parser.add_argument(
+        "--hot",
+        action="append",
+        help="hot-path case names, comma-separated; may be repeated "
+        "(default: the scheduler cases + loadtest_storm)",
+    )
+    parser.add_argument(
+        "--bless",
+        action="store_true",
+        help="rewrite each BASE from its FRESH instead of checking",
+    )
+    args = parser.parse_args(argv)
+    if len(args.paths) % 2 != 0:
+        parser.error("paths must come in FRESH BASE pairs")
+    pairs = list(zip(args.paths[0::2], args.paths[1::2]))
+    hot_flags = args.hot if args.hot else [",".join(HOT_CASES)]
+    hot_cases = {
+        c.strip() for flag in hot_flags for c in flag.split(",") if c.strip()
+    }
+
+    if args.bless:
+        for fresh_path, base_path in pairs:
+            bless(fresh_path, base_path)
+        return 0
+
+    failures = []
+    for fresh_path, base_path in pairs:
+        check_pair(fresh_path, base_path, hot_cases, args.factor, failures)
 
     if failures:
         print(
-            "\nFAIL: %d hot-path case(s) regressed beyond %.1fx:"
-            % (len(failures), args.factor)
+            "\nFAIL: %d hot-path gate(s) regressed (factor %.1fx, "
+            "alloc slack %.1f):"
+            % (len(failures), args.factor, ALLOC_SLACK_PER_REQUEST)
         )
-        for case, ratio in failures:
-            print("  %s: %.2fx" % (case, ratio))
+        for what, detail in failures:
+            print("  %s: %s" % (what, detail))
         return 1
     print("\nperf trend ok (factor %.1fx)" % args.factor)
     return 0

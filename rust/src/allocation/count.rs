@@ -1,0 +1,87 @@
+//! Counting global allocator: the measurement hook behind the
+//! loadtest's allocations-per-request gate.
+//!
+//! [`CountingAllocator`] wraps [`System`] and bumps relaxed atomic
+//! counters on every `alloc`/`alloc_zeroed`/`realloc` — a handful of
+//! nanoseconds per event, cheap enough to leave on permanently.  The
+//! `edgeward` binary registers it as the `#[global_allocator]` so the
+//! CLI can report real allocation counts around a storm
+//! (`BENCH_serve.json`'s `allocs_per_request`), and the library's unit
+//! tests register it under `#[cfg(test)]` so
+//! `steady_state_is_allocation_free` can pin the zero-alloc request
+//! lifecycle.  When no one registers it, [`allocation_count`] simply
+//! stays at zero — callers must treat the counters as deltas, not
+//! absolutes.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// A [`System`]-backed allocator that counts allocation events and
+/// bytes requested.  Register with `#[global_allocator]`.
+pub struct CountingAllocator;
+
+// SAFETY: defers every allocation verbatim to `System`; the counter
+// bumps have no effect on the returned memory.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Allocation events since process start (0 unless the counting
+/// allocator is registered).  Compare before/after a region of
+/// interest; the counter never resets.
+pub fn allocation_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Bytes requested since process start (same caveats as
+/// [`allocation_count`]).
+pub fn allocated_bytes() -> u64 {
+    BYTES.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// With the allocator registered (lib tests register it), a boxed
+    /// allocation must move the counters.
+    #[test]
+    fn counters_observe_allocations() {
+        let a0 = allocation_count();
+        let b0 = allocated_bytes();
+        let v: Vec<u64> = Vec::with_capacity(1024);
+        let a1 = allocation_count();
+        let b1 = allocated_bytes();
+        assert!(a1 > a0, "allocation event not counted");
+        assert!(b1 - b0 >= 8 * 1024, "allocated bytes not counted");
+        drop(v);
+    }
+}

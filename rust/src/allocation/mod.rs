@@ -17,9 +17,10 @@
 //! respectively small dataset" (§IV).  The chosen layer is the argmin.
 
 mod calibration;
+mod count;
 
 pub use calibration::{AppCalibration, Calibration};
-
+pub use count::{allocated_bytes, allocation_count, CountingAllocator};
 
 use crate::config::Environment;
 use crate::device::{Layer, PerLayer};

@@ -81,7 +81,7 @@ pub use engine::{EngineHandle, EngineRequest};
 pub use policy::Policy;
 pub use request::{InferenceRequest, RequestGenerator};
 pub use shed::{admit, Admission, Front, LaneQueue, Offer, ShedPolicy};
-pub use wheel::{EventCore, ReadyQueue, TimingWheel};
+pub use wheel::{EventCore, ReadyQueue, TimingWheel, WheelKey};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
@@ -294,10 +294,12 @@ impl ServeConfig {
         if self.patients == 0 {
             return Err(Error::Config("patients must be > 0".into()));
         }
-        if self.arrival_rate_hz <= 0.0 {
+        // `<= 0.0` alone is false for NaN, which would sail through
+        // into arrival gaps — require finite explicitly
+        if !self.arrival_rate_hz.is_finite() || self.arrival_rate_hz <= 0.0 {
             return Err(Error::Config("arrival_rate_hz must be > 0".into()));
         }
-        if self.time_scale <= 0.0 {
+        if !self.time_scale.is_finite() || self.time_scale <= 0.0 {
             return Err(Error::Config("time_scale must be > 0".into()));
         }
         if self.max_batch == 0 {

@@ -2,20 +2,42 @@
 //!
 //! The first serving core paired each replica with a private
 //! [`DelayQueue`](crate::coordinator::DelayQueue) and a forwarder thread
-//! — 2 OS threads per lane just to model the wire.  The wheel collapses
-//! all of that into a single min-heap keyed on `(ready_at, seq)`: the
-//! router pushes `(lane, item)` pairs tagged with their network-ready
-//! instant, and one dispatcher thread releases them in global time
-//! order.  FIFO is preserved within an instant (the `seq` tiebreaker,
-//! identical to the per-lane queues' ordering), and cross-lane
-//! interleaving follows `ready_at` exactly as L independent queues
-//! would release — pinned by `wheel_matches_per_lane_delay_queues`.
+//! — 2 OS threads per lane just to model the wire.  PR 8 collapsed all
+//! of that into a single comparison-based min-heap keyed on
+//! `(ready_at, seq)`.  This version replaces the heap with a true
+//! **hierarchical timing wheel**: schedule and advance are O(1)
+//! amortized (no `log n` sift per event), which is what the storm
+//! engine's hot path spends most of its time doing at 10⁶+ events.
+//!
+//! Layout: 11 levels × 64 power-of-two buckets.  Level *i* buckets are
+//! 64^i ticks wide, so the levels jointly cover the whole `u64` tick
+//! range (66 bits) with no overflow list.  An event lands at the level
+//! of the highest 6-bit group in which its tick differs from the
+//! cursor; advancing pops the lowest occupied bucket (a one-word
+//! bitmap scan per level) and **cascades** its contents one level down
+//! — each event moves at most 10 times, so scheduling stays O(1)
+//! amortized and the release order is *byte-identical* to the heap
+//! reference:
+//!
+//! * a level-0 bucket holds exactly one tick, so draining it into the
+//!   FIFO `ready` queue preserves the `(key, seq)` tie-break contract;
+//! * bucket vectors are always seq-ascending (pushes append, cascades
+//!   drain in order), so no sort is ever needed on the hot path;
+//! * the one cold fallback is an event pushed *behind* the cursor
+//!   (legal for the generic core, never produced by the DES): those go
+//!   to a tiny ordered drain — a `(key, seq)` min-heap — that releases
+//!   strictly before any wheel event, exactly as the reference would.
+//!
+//! `wheel_release_order_matches_heap_reference` property-tests the
+//! equivalence across random streams (duplicates, far-future cascades,
+//! interleaved pops, late pushes); `wheel_matches_per_lane_delay_queues`
+//! pins the cross-lane interleaving contract.
 //!
 //! Two layers:
 //!
-//! * [`EventCore`] — the deterministic ordering core over any `Ord`
-//!   key.  The virtual-time loadtest drives one directly with `u64`
-//!   nanosecond keys (no threads, no clock).
+//! * [`EventCore`] — the deterministic ordering core over any
+//!   [`WheelKey`].  The virtual-time loadtest drives one directly with
+//!   `u64` nanosecond keys (no threads, no clock).
 //! * [`TimingWheel`] — a thread-safe wrapper keyed on [`Instant`] whose
 //!   `pop_blocking` sleeps until the earliest event is due; the serving
 //!   path's single network thread.
@@ -25,75 +47,230 @@
 //! runnable work are pushed, idle workers pop).
 
 use std::collections::{BinaryHeap, VecDeque};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, OnceLock};
 use std::time::Instant;
+
+/// Bits per wheel level: 64 buckets each.
+const GROUP_BITS: u32 = 6;
+/// Buckets per level.
+const SLOTS: usize = 1 << GROUP_BITS;
+/// 11 × 6 = 66 bits ≥ 64: the levels cover every `u64` tick.
+const LEVELS: usize = 64usize.div_ceil(GROUP_BITS as usize);
+
+/// A key the hierarchical wheel can place on its `u64` tick line.
+///
+/// `wheel_ticks` must be strictly monotone in `Ord` over the keys a
+/// core actually sees, so tick order *is* key order and the wheel's
+/// release order matches the `(key, seq)` heap reference bit-for-bit.
+pub trait WheelKey: Ord + Copy {
+    /// This key's position on the wheel's tick line.
+    fn wheel_ticks(&self) -> u64;
+}
+
+impl WheelKey for u64 {
+    #[inline]
+    fn wheel_ticks(&self) -> u64 {
+        *self
+    }
+}
+
+/// Instants are measured in nanoseconds since a process-wide anchor
+/// taken at first use (instants never precede it on the serving path:
+/// every push is `Instant::now() + transmission`).
+impl WheelKey for Instant {
+    #[inline]
+    fn wheel_ticks(&self) -> u64 {
+        static ANCHOR: OnceLock<Instant> = OnceLock::new();
+        let anchor = *ANCHOR.get_or_init(Instant::now);
+        self.saturating_duration_since(anchor).as_nanos() as u64
+    }
+}
 
 struct Entry<K, T> {
     key: K,
+    tick: u64,
     seq: u64,
     item: T,
 }
 
-impl<K: Ord, T> PartialEq for Entry<K, T> {
+/// Min-heap adapter for the cold past-cursor fallback: `(key, seq)`
+/// order, identical to the old heap core's comparator.
+struct Late<K, T>(Entry<K, T>);
+
+impl<K: Ord, T> PartialEq for Late<K, T> {
     fn eq(&self, other: &Self) -> bool {
-        self.key == other.key && self.seq == other.seq
+        self.0.key == other.0.key && self.0.seq == other.0.seq
     }
 }
-impl<K: Ord, T> Eq for Entry<K, T> {}
-impl<K: Ord, T> PartialOrd for Entry<K, T> {
+impl<K: Ord, T> Eq for Late<K, T> {}
+impl<K: Ord, T> PartialOrd for Late<K, T> {
     fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
         Some(self.cmp(other))
     }
 }
-impl<K: Ord, T> Ord for Entry<K, T> {
+impl<K: Ord, T> Ord for Late<K, T> {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         // min-heap on (key, seq)
-        other.key.cmp(&self.key).then(other.seq.cmp(&self.seq))
+        other
+            .0
+            .key
+            .cmp(&self.0.key)
+            .then(other.0.seq.cmp(&self.0.seq))
     }
 }
 
-/// Deterministic event heap: pops in `(key, seq)` order, so equal keys
-/// release FIFO.  The pure core of the timing wheel and the engine of
-/// the virtual-time loadtest.
-pub struct EventCore<K: Ord, T> {
-    heap: BinaryHeap<Entry<K, T>>,
+/// Deterministic event wheel: pops in `(key, seq)` order, so equal keys
+/// release FIFO.  O(1) amortized schedule/advance; the engine of the
+/// virtual-time loadtest and the pure core of the serving
+/// [`TimingWheel`].
+///
+/// All storage (buckets, ready queue, cascade scratch) retains its
+/// capacity across events, so a long-running core stops allocating once
+/// warm — the storm engine's request lifecycle rides on this.
+pub struct EventCore<K: WheelKey, T> {
+    /// `LEVELS × SLOTS` bucket vectors, flattened level-major.
+    buckets: Vec<Vec<Entry<K, T>>>,
+    /// One occupancy bitmap word per level.
+    occupied: [u64; LEVELS],
+    /// The wheel's current position: the tick of the bucket most
+    /// recently drained (all wheel contents are strictly beyond it).
+    cursor: u64,
+    /// Events at exactly `cursor`, in seq (FIFO) order.
+    ready: VecDeque<Entry<K, T>>,
+    /// Ordered drain for events pushed behind the cursor (cold path).
+    late: BinaryHeap<Late<K, T>>,
+    /// Reusable cascade buffer (keeps drains allocation-free).
+    scratch: Vec<Entry<K, T>>,
     seq: u64,
+    len: usize,
 }
 
-impl<K: Ord, T> Default for EventCore<K, T> {
+impl<K: WheelKey, T> Default for EventCore<K, T> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl<K: Ord, T> EventCore<K, T> {
+impl<K: WheelKey, T> EventCore<K, T> {
     pub fn new() -> Self {
-        EventCore { heap: BinaryHeap::new(), seq: 0 }
+        EventCore {
+            buckets: (0..LEVELS * SLOTS).map(|_| Vec::new()).collect(),
+            occupied: [0; LEVELS],
+            cursor: 0,
+            ready: VecDeque::new(),
+            late: BinaryHeap::new(),
+            scratch: Vec::new(),
+            seq: 0,
+            len: 0,
+        }
     }
 
-    /// Schedule an event at `key`.
+    /// Schedule an event at `key`.  O(1): one bitmap OR and one bucket
+    /// append (an event cascades at most `LEVELS - 1` times over its
+    /// whole lifetime).
     pub fn push(&mut self, key: K, item: T) {
+        let tick = key.wheel_ticks();
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(Entry { key, seq, item });
+        self.len += 1;
+        let e = Entry { key, tick, seq, item };
+        if tick > self.cursor {
+            self.insert(e);
+        } else if tick == self.cursor {
+            // joins the tick currently being released, after its
+            // already-queued peers — exactly the (key, seq) order
+            self.ready.push_back(e);
+        } else {
+            // behind the cursor: the ordered-drain fallback releases it
+            // before any wheel event, as the heap reference would
+            self.late.push(Late(e));
+        }
+    }
+
+    /// Place an entry with `tick > cursor` at the level of the highest
+    /// 6-bit group in which it differs from the cursor.
+    fn insert(&mut self, e: Entry<K, T>) {
+        let diff = self.cursor ^ e.tick;
+        let level = ((63 - diff.leading_zeros()) / GROUP_BITS) as usize;
+        let slot =
+            ((e.tick >> (GROUP_BITS as usize * level)) & (SLOTS as u64 - 1))
+                as usize;
+        self.buckets[level * SLOTS + slot].push(e);
+        self.occupied[level] |= 1 << slot;
+    }
+
+    /// Advance until the earliest remaining event sits at the front of
+    /// `ready` (no-op when it already does, or the wheel is empty).
+    ///
+    /// The earliest event is always in the lowest occupied level's
+    /// lowest occupied bucket: level-*i* entries differ from the cursor
+    /// only in groups ≤ *i*, so every level-*i* tick is strictly below
+    /// every level-*(i+1)* tick, and within a level the bucket index
+    /// *is* the differing group's value.
+    fn expose_next(&mut self) {
+        while self.ready.is_empty() {
+            let Some(level) =
+                (0..LEVELS).find(|&l| self.occupied[l] != 0)
+            else {
+                return;
+            };
+            let slot = self.occupied[level].trailing_zeros() as usize;
+            self.occupied[level] &= !(1u64 << slot);
+            let mut tmp = std::mem::take(&mut self.scratch);
+            std::mem::swap(&mut tmp, &mut self.buckets[level * SLOTS + slot]);
+            debug_assert!(!tmp.is_empty(), "occupancy bit without entries");
+            if level == 0 {
+                // a level-0 bucket is one tick wide: FIFO drain is the
+                // (key, seq) order
+                self.cursor = tmp[0].tick;
+                self.ready.extend(tmp.drain(..));
+            } else {
+                // advance to the bucket's base tick and cascade its
+                // contents a level down (drain order keeps every target
+                // bucket seq-ascending)
+                let width = GROUP_BITS as usize * level;
+                self.cursor = (tmp[0].tick >> width) << width;
+                for e in tmp.drain(..) {
+                    if e.tick == self.cursor {
+                        self.ready.push_back(e);
+                    } else {
+                        self.insert(e);
+                    }
+                }
+            }
+            self.scratch = tmp;
+        }
     }
 
     /// Remove and return the earliest event.
     pub fn pop(&mut self) -> Option<(K, T)> {
-        self.heap.pop().map(|e| (e.key, e.item))
+        if let Some(Late(e)) = self.late.pop() {
+            self.len -= 1;
+            return Some((e.key, e.item));
+        }
+        self.expose_next();
+        let e = self.ready.pop_front()?;
+        self.len -= 1;
+        Some((e.key, e.item))
     }
 
-    /// The earliest scheduled key, if any.
-    pub fn peek_key(&self) -> Option<&K> {
-        self.heap.peek().map(|e| &e.key)
+    /// The earliest scheduled key, if any.  Takes `&mut self`: peeking
+    /// may cascade buckets to expose the minimum (the order of releases
+    /// is unaffected).
+    pub fn peek_key(&mut self) -> Option<&K> {
+        if !self.late.is_empty() {
+            return self.late.peek().map(|l| &l.0.key);
+        }
+        self.expose_next();
+        self.ready.front().map(|e| &e.key)
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
     }
 }
 
@@ -153,14 +330,14 @@ impl<T> TimingWheel<T> {
     pub fn pop_blocking(&self) -> Option<T> {
         let mut g = self.inner.lock().unwrap();
         loop {
-            match g.core.peek_key() {
+            match g.core.peek_key().copied() {
                 None => {
                     if g.closed {
                         return None;
                     }
                     g = self.cv.wait(g).unwrap();
                 }
-                Some(&ready_at) => {
+                Some(ready_at) => {
                     let now = Instant::now();
                     if ready_at <= now {
                         return g.core.pop().map(|(_, item)| item);
@@ -236,8 +413,49 @@ impl ReadyQueue {
 mod tests {
     use super::*;
     use crate::coordinator::DelayQueue;
+    use crate::data::Rng;
     use std::sync::Arc;
     use std::time::Duration;
+
+    /// The pre-tentpole reference: a plain `(key, seq)` binary heap.
+    /// The wheel's release order must match it byte-for-byte.
+    struct HeapRef<K, T> {
+        heap: BinaryHeap<Late<K, T>>,
+        seq: u64,
+    }
+
+    impl<K: WheelKey, T> HeapRef<K, T> {
+        fn new() -> Self {
+            HeapRef { heap: BinaryHeap::new(), seq: 0 }
+        }
+
+        fn push(&mut self, key: K, item: T) {
+            let tick = key.wheel_ticks();
+            let seq = self.seq;
+            self.seq += 1;
+            self.heap.push(Late(Entry { key, tick, seq, item }));
+        }
+
+        fn pop(&mut self) -> Option<(K, T)> {
+            self.heap.pop().map(|Late(e)| (e.key, e.item))
+        }
+
+        fn peek_key(&self) -> Option<&K> {
+            self.heap.peek().map(|l| &l.0.key)
+        }
+    }
+
+    #[test]
+    fn levels_cover_the_full_tick_range() {
+        assert_eq!(LEVELS, 11);
+        assert!(LEVELS * GROUP_BITS as usize >= 64);
+        // the farthest possible event classifies in-range
+        let mut core: EventCore<u64, ()> = EventCore::new();
+        core.push(u64::MAX, ());
+        core.push(0, ());
+        assert_eq!(core.pop(), Some((0, ())));
+        assert_eq!(core.pop(), Some((u64::MAX, ())));
+    }
 
     #[test]
     fn event_core_pops_by_key_then_fifo() {
@@ -253,6 +471,86 @@ mod tests {
         assert_eq!(core.pop(), Some((30, "late")));
         assert_eq!(core.pop(), None);
         assert!(core.is_empty());
+    }
+
+    #[test]
+    fn push_behind_cursor_releases_first() {
+        // the ordered-drain fallback: after releasing tick 10, a tick-3
+        // push must come out before the scheduled tick 20 — and two
+        // late pushes release in (key, seq) order
+        let mut core = EventCore::new();
+        core.push(10u64, "a");
+        core.push(20, "b");
+        assert_eq!(core.pop(), Some((10, "a")));
+        core.push(5, "late-2");
+        core.push(3, "late-1");
+        core.push(5, "late-3");
+        assert_eq!(core.pop(), Some((3, "late-1")));
+        assert_eq!(core.pop(), Some((5, "late-2")));
+        assert_eq!(core.pop(), Some((5, "late-3")));
+        assert_eq!(core.pop(), Some((20, "b")));
+        assert_eq!(core.pop(), None);
+    }
+
+    /// The tentpole's equivalence contract: across random streams of
+    /// interleaved pushes and pops — duplicate keys, dense ticks,
+    /// far-future cascades through every level, and pushes behind the
+    /// cursor — the wheel's pops and peeks are byte-identical to the
+    /// binary-heap reference.
+    #[test]
+    fn wheel_release_order_matches_heap_reference() {
+        for seed in 0..40u64 {
+            let mut rng = Rng::new(0x57EE1 ^ seed);
+            let mut wheel: EventCore<u64, u32> = EventCore::new();
+            let mut heap: HeapRef<u64, u32> = HeapRef::new();
+            let mut tag = 0u32;
+            let mut released = 0u64;
+            for _ in 0..600 {
+                if rng.uniform() < 0.55 {
+                    let u = rng.uniform();
+                    let delta = if u < 0.45 {
+                        // dense: many same-tick collisions
+                        (rng.uniform() * 200.0) as u64
+                    } else if u < 0.8 {
+                        (rng.uniform() * 1e6) as u64
+                    } else {
+                        // far future: cascades across high levels
+                        (rng.uniform() * 9.2e18) as u64
+                    };
+                    // even seeds replay a DES (keys from the release
+                    // point forward); odd seeds push arbitrary keys,
+                    // including behind the cursor
+                    let key = if seed % 2 == 0 {
+                        released.saturating_add(delta)
+                    } else {
+                        delta
+                    };
+                    wheel.push(key, tag);
+                    heap.push(key, tag);
+                    tag += 1;
+                } else {
+                    assert_eq!(
+                        wheel.peek_key().copied(),
+                        heap.peek_key().copied(),
+                        "peek diverged (seed {seed})"
+                    );
+                    let (a, b) = (wheel.pop(), heap.pop());
+                    assert_eq!(a, b, "pop diverged (seed {seed})");
+                    if let Some((k, _)) = b {
+                        released = k;
+                    }
+                    assert_eq!(wheel.len(), heap.heap.len());
+                }
+            }
+            loop {
+                let (a, b) = (wheel.pop(), heap.pop());
+                assert_eq!(a, b, "drain diverged (seed {seed})");
+                if a.is_none() {
+                    break;
+                }
+            }
+            assert!(wheel.is_empty());
+        }
     }
 
     #[test]
@@ -283,11 +581,11 @@ mod tests {
         assert_eq!(h.join().unwrap(), Some(7));
     }
 
-    /// The tentpole's ordering contract: feeding every lane's events
-    /// into ONE wheel releases them (a) per lane in exactly the order
-    /// that lane's private `DelayQueue` would have released them, and
-    /// (b) globally interleaved by `ready_at` with FIFO preserved
-    /// within an instant.
+    /// The ordering contract: feeding every lane's events into ONE
+    /// wheel releases them (a) per lane in exactly the order that
+    /// lane's private `DelayQueue` would have released them, and (b)
+    /// globally interleaved by `ready_at` with FIFO preserved within an
+    /// instant.
     #[test]
     fn wheel_matches_per_lane_delay_queues() {
         const LANES: usize = 4;

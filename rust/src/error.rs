@@ -49,6 +49,17 @@ pub enum Error {
     #[error("serving error: {0}")]
     Serving(String),
 
+    /// A loadtest parameter rejected before the storm starts.  Typed
+    /// (field + offending value) so callers and tests can distinguish
+    /// which knob was wrong; raised instead of letting NaN or zero
+    /// rates melt into virtual-time arrival gaps downstream.
+    #[error("invalid loadtest config: {field} = {value} ({reason})")]
+    InvalidLoadtest {
+        field: &'static str,
+        value: String,
+        reason: &'static str,
+    },
+
     /// I/O with context.
     #[error("io error on {path}: {source}")]
     Io {

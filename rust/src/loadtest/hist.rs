@@ -9,6 +9,14 @@
 //! Buckets are exact below 2⁵ and merge-able by plain addition, so
 //! per-lane and per-class histograms sum into aggregates losslessly —
 //! `bucketing_roundtrips_exact_counts` pins the total-count invariant.
+//!
+//! `record` is on the storm engine's per-request hot path, so the
+//! counts live in a boxed fixed-size array and the index is clamped to
+//! the top bucket: the clamp doubles as the saturation guard for values
+//! beyond the highest octave (no index can overflow, they pile into the
+//! last bucket) and lets the compiler elide the bounds check in the
+//! common octaves.  Exact min/max are tracked alongside the buckets so
+//! p0 and p100 are exact rather than bucket-quantized.
 
 use crate::serialize::Value;
 
@@ -23,9 +31,13 @@ const BUCKETS: usize = SUB * (OCTAVES + 1); // 1920
 /// convention).
 #[derive(Clone)]
 pub struct LogHistogram {
-    counts: Vec<u64>,
+    /// Fixed-size so `index.min(BUCKETS - 1)` provably fits and the
+    /// hot-path increment compiles without a bounds check.
+    counts: Box<[u64; BUCKETS]>,
     total: u64,
     sum: u128,
+    /// Exact extremes (`min` is `u64::MAX` until the first sample).
+    min: u64,
     max: u64,
 }
 
@@ -61,24 +73,33 @@ pub fn low_of(index: usize) -> u64 {
 
 impl LogHistogram {
     pub fn new() -> Self {
-        LogHistogram { counts: vec![0; BUCKETS], total: 0, sum: 0, max: 0 }
+        let counts: Box<[u64; BUCKETS]> = vec![0u64; BUCKETS]
+            .into_boxed_slice()
+            .try_into()
+            .expect("BUCKETS-length slice");
+        LogHistogram { counts, total: 0, sum: 0, min: u64::MAX, max: 0 }
     }
 
-    /// Record one sample.
+    /// Record one sample.  The clamp saturates anything beyond the top
+    /// octave into the last bucket (and proves the index in-range, so
+    /// no branch is emitted for the common octaves).
+    #[inline]
     pub fn record(&mut self, v: u64) {
-        self.counts[index_of(v)] += 1;
+        self.counts[index_of(v).min(BUCKETS - 1)] += 1;
         self.total += 1;
         self.sum += v as u128;
+        self.min = self.min.min(v);
         self.max = self.max.max(v);
     }
 
     /// Add every count of `other` into `self` (lossless: buckets align).
     pub fn merge(&mut self, other: &LogHistogram) {
-        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
             *a += b;
         }
         self.total += other.total;
         self.sum += other.sum;
+        self.min = self.min.min(other.min);
         self.max = self.max.max(other.max);
     }
 
@@ -98,18 +119,32 @@ impl LogHistogram {
         self.sum as f64 / self.total as f64
     }
 
+    /// Exact smallest recorded sample (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.total == 0 { 0 } else { self.min }
+    }
+
+    /// Exact largest recorded sample.
     pub fn max(&self) -> u64 {
         self.max
     }
 
     /// The lower bound of the bucket holding the q-quantile sample
-    /// (0 ≤ q ≤ 1); within 3.1% of the true order statistic.
+    /// (0 ≤ q ≤ 1); within 3.1% of the true order statistic.  The
+    /// extremes are exact: rank 1 reports the tracked min (p0) and the
+    /// top rank the tracked max (p100).
     pub fn quantile(&self, q: f64) -> u64 {
         if self.total == 0 {
             return 0;
         }
         let rank = ((q * self.total as f64).ceil() as u64)
             .clamp(1, self.total);
+        if rank == 1 {
+            return self.min;
+        }
+        if rank == self.total {
+            return self.max;
+        }
         let mut cum = 0u64;
         for (i, &c) in self.counts.iter().enumerate() {
             cum += c;
@@ -121,11 +156,13 @@ impl LogHistogram {
     }
 
     /// Deterministic JSON summary (counts are u64-exact; quantiles are
-    /// bucket lower bounds, so equal seeds give byte-equal output).
+    /// bucket lower bounds except the exact extremes, so equal seeds
+    /// give byte-equal output).
     pub fn to_value(&self) -> Value {
         let mut v = Value::object();
         v.set("count", self.total);
         v.set("mean_ns", self.mean());
+        v.set("min_ns", self.min());
         v.set("p50_ns", self.quantile(0.50));
         v.set("p90_ns", self.quantile(0.90));
         v.set("p99_ns", self.quantile(0.99));
@@ -170,6 +207,22 @@ mod tests {
         }
     }
 
+    /// The satellite regression: the top bucket saturates — every value
+    /// beyond the highest octave lands in bucket `BUCKETS - 1` (no
+    /// index overflow, counts stay exact).
+    #[test]
+    fn top_bucket_saturates() {
+        assert!(index_of(u64::MAX) < BUCKETS);
+        assert_eq!(index_of(u64::MAX).min(BUCKETS - 1), BUCKETS - 1);
+        let mut h = LogHistogram::new();
+        for v in [u64::MAX, u64::MAX - 1, low_of(BUCKETS - 1)] {
+            h.record(v);
+        }
+        assert_eq!(h.counts[BUCKETS - 1], 3);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.max(), u64::MAX);
+    }
+
     #[test]
     fn extremes_stay_in_range() {
         assert!(index_of(u64::MAX) < BUCKETS);
@@ -178,7 +231,29 @@ mod tests {
         h.record(0);
         h.record(u64::MAX);
         assert_eq!(h.count(), 2);
+        assert_eq!(h.min(), 0);
         assert_eq!(h.max(), u64::MAX);
+    }
+
+    /// p0 and p100 report the exact extremes, not bucket lower bounds.
+    #[test]
+    fn extreme_quantiles_are_exact() {
+        let mut h = LogHistogram::new();
+        // 1_000_003 is mid-bucket: low_of(index_of(v)) < v
+        for v in [1_000_003u64, 2_000_017, 3_000_001] {
+            assert!(low_of(index_of(v)) < v);
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.0), 1_000_003);
+        assert_eq!(h.quantile(1.0), 3_000_001);
+        // interior ranks still report bucket lower bounds
+        assert_eq!(h.quantile(0.5), low_of(index_of(2_000_017)));
+        // merge keeps the exact extremes
+        let mut other = LogHistogram::new();
+        other.record(17);
+        other.merge(&h);
+        assert_eq!(other.quantile(0.0), 17);
+        assert_eq!(other.quantile(1.0), 3_000_001);
     }
 
     /// The satellite regression: bucketing must lose no counts — the
@@ -228,6 +303,7 @@ mod tests {
         let h = LogHistogram::new();
         assert!(h.is_empty());
         assert_eq!(h.quantile(0.99), 0);
+        assert_eq!(h.min(), 0);
         assert_eq!(h.mean(), 0.0);
     }
 }

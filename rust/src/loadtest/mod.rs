@@ -15,19 +15,34 @@
 //! in one process in seconds, deterministically: equal seeds give
 //! byte-equal reports.
 //!
+//! The engine itself runs at hardware speed.  The [`EventCore`] is a
+//! hierarchical timing wheel (O(1) schedule/advance), and the request
+//! lifecycle is allocation-free once warm: `LReq` rows live in a
+//! slab with a freelist, batches borrow reusable row buffers from a
+//! pool, lane labels are process-interned `Arc<str>`s, and histogram
+//! recording clamps its index so the common octaves compile without a
+//! bounds check.  `steady_state_is_allocation_free` pins the property
+//! with the counting allocator in [`crate::allocation`]; the CLI
+//! reports the measured per-op breakdown (events/sec, ns per wheel op,
+//! allocations per request) in `BENCH_serve.json` for the CI gate
+//! (`python/tools/bench_check.py`).
+//!
 //! Latencies land in HDR-style log-bucketed histograms
 //! ([`LogHistogram`], ≤3.1% relative quantile error) per class, per
 //! lane, and overall.  [`sweep`] replays the storm across arrival-rate
 //! multipliers and [`find_knee`] reports where the topology saturates
-//! (drops exceed 1% or p99 blows past 8× the idle point).  The CLI
-//! writes `BENCH_serve.json` for the CI throughput gate
-//! (`python/tools/bench_check.py`).
+//! (drops exceed 1% or p99 blows past 8× the idle point).  Sweep
+//! points — and [`storm_suite`] multi-seed replays — fan out across a
+//! scoped thread pool: each storm is an independent deterministic DES,
+//! and results merge in input order, byte-equal to a serial run.
 
 mod hist;
 
 pub use hist::{index_of, low_of, LogHistogram};
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::allocation::{estimate_single, Calibration};
 use crate::config::Environment;
@@ -37,7 +52,7 @@ use crate::coordinator::{
 };
 use crate::data::Rng;
 use crate::serialize::Value;
-use crate::topology::Topology;
+use crate::topology::{MachineRef, Topology};
 use crate::workload::{Application, Workload};
 use crate::{Error, Result};
 
@@ -66,9 +81,32 @@ impl Default for LoadtestConfig {
 }
 
 impl LoadtestConfig {
+    /// Reject storms that cannot run: zero requests or patients, and
+    /// non-finite / non-positive arrival rates (which would otherwise
+    /// turn [`gap_ns`] into NaN-as-zero gaps and melt the virtual
+    /// clock).  Typed [`Error::InvalidLoadtest`] names the field.
     pub fn validate(&self) -> Result<()> {
         if self.requests == 0 {
-            return Err(Error::Config("requests must be > 0".into()));
+            return Err(Error::InvalidLoadtest {
+                field: "requests",
+                value: "0".into(),
+                reason: "the storm must issue at least one request",
+            });
+        }
+        if self.serve.patients == 0 {
+            return Err(Error::InvalidLoadtest {
+                field: "patients",
+                value: "0".into(),
+                reason: "arrivals need at least one patient generator",
+            });
+        }
+        let rate = self.serve.arrival_rate_hz;
+        if !rate.is_finite() || rate <= 0.0 {
+            return Err(Error::InvalidLoadtest {
+                field: "arrival_rate_hz",
+                value: format!("{rate}"),
+                reason: "inter-arrival gaps need a finite positive rate",
+            });
         }
         self.serve.validate()
     }
@@ -86,7 +124,8 @@ impl LoadtestConfig {
     }
 }
 
-/// One virtual request in flight.
+/// One virtual request in flight.  Rows live in the storm's [`Slab`];
+/// queues and batches hold `u32` slot handles, not the rows themselves.
 #[derive(Debug, Clone, Copy)]
 struct LReq {
     app: Application,
@@ -96,47 +135,245 @@ struct LReq {
     queued_ns: u64,
 }
 
-/// Simulation events, in virtual-nanosecond order.
+/// Slab + freelist for in-flight requests: a request allocates nothing
+/// after the slab's high-water mark — slots recycle through `free`.
+#[derive(Default)]
+struct Slab {
+    rows: Vec<LReq>,
+    free: Vec<u32>,
+}
+
+impl Slab {
+    fn insert(&mut self, req: LReq) -> u32 {
+        match self.free.pop() {
+            Some(slot) => {
+                self.rows[slot as usize] = req;
+                slot
+            }
+            None => {
+                self.rows.push(req);
+                (self.rows.len() - 1) as u32
+            }
+        }
+    }
+
+    #[inline]
+    fn get(&self, slot: u32) -> &LReq {
+        &self.rows[slot as usize]
+    }
+
+    #[inline]
+    fn get_mut(&mut self, slot: u32) -> &mut LReq {
+        &mut self.rows[slot as usize]
+    }
+
+    fn release(&mut self, slot: u32) {
+        self.free.push(slot);
+    }
+}
+
+/// Simulation events, in virtual-nanosecond order.  Deliberately
+/// compact (8 bytes + tag): 10⁶-request storms keep millions of these
+/// in the wheel's buckets.
 enum Ev {
     /// A patient's next request is released.
-    Arrival { patient: usize },
+    Arrival { patient: u32 },
     /// A routed request clears the (virtual) network.
-    Ready { lane: usize, req: LReq },
+    Ready { lane: u32, slot: u32 },
     /// A forming batch's window closes (stale if `gen` mismatches).
-    Close { lane: usize, gen: u64 },
+    Close { lane: u32, gen: u32 },
     /// A lane's executing batch finishes.
-    Done { lane: usize },
+    Done { lane: u32 },
 }
 
 /// A batch being formed on a lane (the head is already out of the
 /// queue, so admission control can never evict it).
 struct Forming {
     app: Application,
-    rows: Vec<LReq>,
-    gen: u64,
+    rows: Vec<u32>,
+    gen: u32,
 }
 
 /// Per-lane simulation state.
 struct LaneSim {
-    queue: VecDeque<LReq>,
+    queue: VecDeque<u32>,
     forming: Option<Forming>,
     /// A closed batch waiting for a free pool worker.
-    closed: Option<Vec<LReq>>,
+    closed: Option<Vec<u32>>,
     /// The executing batch and its start instant.
-    executing: Option<(Vec<LReq>, u64)>,
-    close_gen: u64,
+    executing: Option<(Vec<u32>, u64)>,
+    close_gen: u32,
     /// Single-row service time per app (ns), speed factor applied.
     service_ns: [f64; 3],
     max_batch: usize,
 }
 
-/// Per-lane outcome summary.
+/// The storm's mutable machinery: lanes, the request slab, the batch
+/// buffer pool, the event wheel, and the worker-cap bookkeeping.
+/// Bundled so the lifecycle helpers below are methods rather than
+/// seven-argument free functions.
+struct Engine<'a> {
+    serve: &'a ServeConfig,
+    lanes: Vec<LaneSim>,
+    slab: Slab,
+    /// Recycled batch row buffers (`Vec<u32>` of slab slots): a batch
+    /// takes one on forming and returns it on completion, so forming
+    /// allocates nothing once the pool is warm.
+    batch_pool: Vec<Vec<u32>>,
+    events: EventCore<u64, Ev>,
+    free_workers: usize,
+    ready_lanes: VecDeque<u32>,
+    backlog: Vec<u64>,
+    dropped: [u64; 3],
+    window_ns: u64,
+}
+
+impl Engine<'_> {
+    fn take_buf(&mut self) -> Vec<u32> {
+        self.batch_pool.pop().unwrap_or_default()
+    }
+
+    fn put_buf(&mut self, mut buf: Vec<u32>) {
+        buf.clear();
+        self.batch_pool.push(buf);
+    }
+
+    /// Admission into a lane's bounded queue — the same pure [`admit`]
+    /// decision the serving wheel thread applies, with the same
+    /// newest-lower-priority victim selection.
+    fn offer(&mut self, lane: usize, slot: u32) {
+        let app = self.slab.get(slot).app;
+        let capacity = self.serve.queue_capacity;
+        let shed = self.serve.shed;
+        let slab = &self.slab;
+        let li = &mut self.lanes[lane];
+        let victim = if capacity > 0 && li.queue.len() >= capacity {
+            let p = app.priority();
+            li.queue
+                .iter()
+                .rposition(|&q| slab.get(q).app.priority() < p)
+        } else {
+            None
+        };
+        match admit(shed, li.queue.len(), capacity, victim) {
+            Admission::Accept => li.queue.push_back(slot),
+            Admission::DropIncoming => {
+                self.dropped[app_index(app)] += 1;
+                self.backlog[lane] -= 1;
+                self.slab.release(slot);
+            }
+            Admission::Evict(i) => {
+                let evicted =
+                    li.queue.remove(i).expect("victim index in range");
+                li.queue.push_back(slot);
+                let evicted_app = self.slab.get(evicted).app;
+                self.dropped[app_index(evicted_app)] += 1;
+                self.backlog[lane] -= 1;
+                self.slab.release(evicted);
+            }
+        }
+    }
+
+    /// Start forming a batch from the queue head if the lane is idle,
+    /// scheduling the window close at `head.queued_ns + window` —
+    /// anchored at the head's arrival, so an aged head closes
+    /// immediately.
+    fn maybe_form(&mut self, lane: usize, now: u64) {
+        {
+            let li = &self.lanes[lane];
+            if li.forming.is_some()
+                || li.closed.is_some()
+                || li.executing.is_some()
+                || li.queue.is_empty()
+            {
+                return;
+            }
+        }
+        let mut rows = self.take_buf();
+        let slab = &self.slab;
+        let li = &mut self.lanes[lane];
+        let head = li.queue.pop_front().expect("non-empty");
+        li.close_gen += 1;
+        let gen = li.close_gen;
+        let head_req = slab.get(head);
+        let app = head_req.app;
+        let head_queued = head_req.queued_ns;
+        rows.push(head);
+        // pull the same-app queue prefix that already accumulated while
+        // the lane was busy (the batcher's pop_front_if loop)
+        while rows.len() < li.max_batch {
+            match li.queue.front() {
+                Some(&q) if slab.get(q).app == app => {
+                    rows.push(li.queue.pop_front().expect("non-empty"));
+                }
+                _ => break,
+            }
+        }
+        let full = rows.len() >= li.max_batch;
+        let max_batch = li.max_batch;
+        li.forming = Some(Forming { app, rows, gen });
+        // anchored at the head's arrival: an aged head (it queued
+        // behind a busy lane) or an already-full batch closes
+        // immediately
+        let close_at = if max_batch <= 1 || full {
+            now
+        } else {
+            (head_queued + self.window_ns).max(now)
+        };
+        self.events.push(close_at, Ev::Close { lane: lane as u32, gen });
+    }
+
+    /// Seal the forming batch: execute immediately if a pool worker is
+    /// free, else park it on the ready list (the worker-cap model).
+    fn close_batch(&mut self, lane: usize, now: u64) {
+        let Some(f) = self.lanes[lane].forming.take() else { return };
+        if self.free_workers > 0 {
+            self.start_exec(lane, f.rows, now);
+            // start_exec consumed a worker
+            self.free_workers -= 1;
+        } else {
+            self.lanes[lane].closed = Some(f.rows);
+            self.ready_lanes.push_back(lane as u32);
+        }
+    }
+
+    /// Begin executing a closed batch: service time is the single-row
+    /// estimate plus [`BATCH_ROW_FRACTION`] per extra row.
+    fn start_exec(&mut self, lane: usize, rows: Vec<u32>, now: u64) {
+        let head_app = self.slab.get(rows[0]).app;
+        let li = &mut self.lanes[lane];
+        let single = li.service_ns[app_index(head_app)];
+        let batch_factor =
+            1.0 + BATCH_ROW_FRACTION * (rows.len() - 1) as f64;
+        let service = (single * batch_factor).max(1.0) as u64;
+        li.executing = Some((rows, now));
+        self.events.push(now + service, Ev::Done { lane: lane as u32 });
+    }
+}
+
+/// Per-lane outcome summary.  `machine` is a process-interned label
+/// ([`lane_label`]): building a report allocates one `Arc` clone per
+/// lane, not a fresh `String`.
 #[derive(Debug, Clone)]
 pub struct LaneStat {
-    pub machine: String,
+    pub machine: Arc<str>,
     pub requests: u64,
     pub p50_ns: u64,
     pub p99_ns: u64,
+}
+
+/// The interned display label of a machine replica ("CC0", "ES1", …).
+/// Storms over the same topology share one allocation per lane for the
+/// life of the process.
+pub fn lane_label(machine: MachineRef) -> Arc<str> {
+    static LABELS: OnceLock<Mutex<HashMap<MachineRef, Arc<str>>>> =
+        OnceLock::new();
+    let map = LABELS.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut guard = map.lock().unwrap();
+    guard
+        .entry(machine)
+        .or_insert_with(|| machine.label().into())
+        .clone()
 }
 
 /// Outcome of one storm.
@@ -151,6 +388,10 @@ pub struct LoadtestReport {
     pub offered_rate_hz: f64,
     /// Completions per virtual second.
     pub throughput_rps: f64,
+    /// Simulation events processed (arrivals, network readies, window
+    /// closes, batch completions) — the wheel did one push and one pop
+    /// per event, so this is the denominator of the per-op breakdown.
+    pub events: u64,
     pub workers: usize,
     pub policy: Policy,
     pub topology: Topology,
@@ -170,7 +411,8 @@ impl LoadtestReport {
     }
 
     /// Deterministic JSON rendering: all counts exact, all quantiles
-    /// bucket lower bounds — equal seeds give byte-equal documents.
+    /// bucket lower bounds (extremes exact) — equal seeds give
+    /// byte-equal documents.
     pub fn to_value(&self) -> Value {
         let mut v = Value::object();
         v.set("requests", self.requests);
@@ -182,6 +424,7 @@ impl LoadtestReport {
         v.set("duration_ns", self.duration_ns);
         v.set("offered_rate_hz", self.offered_rate_hz);
         v.set("throughput_rps", self.throughput_rps);
+        v.set("events", self.events);
         v.set("workers", self.workers);
         v.set("policy", self.policy.label());
         v.set("topology", self.topology.label());
@@ -197,7 +440,7 @@ impl LoadtestReport {
             .iter()
             .map(|l| {
                 let mut o = Value::object();
-                o.set("machine", l.machine.as_str());
+                o.set("machine", &*l.machine);
                 o.set("requests", l.requests);
                 o.set("p50_ns", l.p50_ns);
                 o.set("p99_ns", l.p99_ns);
@@ -230,7 +473,7 @@ pub fn run(
     // processing estimate (ms → ns), compute_scale applied, divided by
     // the replica's speed factor — the virtual twin of the serving
     // path's emulation pad
-    let mut lanes: Vec<LaneSim> = machines
+    let lanes: Vec<LaneSim> = machines
         .iter()
         .map(|&m| {
             let layer = m.layer();
@@ -267,19 +510,28 @@ pub fn run(
         .collect();
     let mut net_rng = Rng::new(seed ^ 0xDEAD_BEEF);
     let mut rr = 0usize;
-    let mut backlog = vec![0u64; lane_count];
 
-    let mut events: EventCore<u64, Ev> = EventCore::new();
+    let mut eng = Engine {
+        serve,
+        lanes,
+        slab: Slab::default(),
+        batch_pool: Vec::new(),
+        events: EventCore::new(),
+        free_workers: workers,
+        ready_lanes: VecDeque::new(),
+        backlog: vec![0u64; lane_count],
+        dropped: [0u64; 3],
+        window_ns,
+    };
+
     let mut issued = 0u64;
     for (p, g) in gens.iter_mut().enumerate() {
         let gap = gap_ns(g, serve.arrival_rate_hz);
-        events.push(gap, Ev::Arrival { patient: p });
+        eng.events.push(gap, Ev::Arrival { patient: p as u32 });
     }
 
-    let mut free_workers = workers;
-    let mut ready_lanes: VecDeque<usize> = VecDeque::new();
+    let mut events_processed = 0u64;
     let mut completed = 0u64;
-    let mut dropped = [0u64; 3];
     let mut duration_ns = 0u64;
     let mut latency = LogHistogram::new();
     let mut queueing = LogHistogram::new();
@@ -291,13 +543,15 @@ pub fn run(
     let mut lane_hist: Vec<LogHistogram> =
         vec![LogHistogram::new(); lane_count];
 
-    while let Some((now, ev)) = events.pop() {
+    while let Some((now, ev)) = eng.events.pop() {
+        events_processed += 1;
         match ev {
             Ev::Arrival { patient } => {
                 if issued >= cfg.requests {
                     continue;
                 }
                 issued += 1;
+                let patient = patient as usize;
                 let app = gens[patient].next_app();
                 let machine = serve.policy.route(
                     app,
@@ -306,11 +560,11 @@ pub fn run(
                     calib,
                     &lane_calibs,
                     topo,
-                    &backlog,
+                    &eng.backlog,
                     &mut rr,
                 );
                 let lane = topo.lane_index(machine);
-                backlog[lane] += 1;
+                eng.backlog[lane] += 1;
                 // identical wire model to the serving router: per-hop
                 // independent jitter, per-replica link factor, half
                 // uplink / half downlink under per-replica factors
@@ -333,97 +587,104 @@ pub fn run(
                     None => base_ms,
                 };
                 let network_ns = (trans_ms * 1e6).max(0.0) as u64;
-                let req = LReq {
+                let slot = eng.slab.insert(LReq {
                     app,
                     created_ns: now,
                     network_ns,
                     queued_ns: 0,
-                };
-                events.push(
+                });
+                eng.events.push(
                     now + network_ns,
-                    Ev::Ready { lane, req },
+                    Ev::Ready { lane: lane as u32, slot },
                 );
                 if issued < cfg.requests {
-                    let gap = gap_ns(&mut gens[patient], serve.arrival_rate_hz);
-                    events.push(now + gap, Ev::Arrival { patient });
+                    let gap =
+                        gap_ns(&mut gens[patient], serve.arrival_rate_hz);
+                    eng.events
+                        .push(now + gap, Ev::Arrival { patient: patient as u32 });
                 }
             }
-            Ev::Ready { lane, mut req } => {
-                req.queued_ns = now;
-                let li = &mut lanes[lane];
+            Ev::Ready { lane, slot } => {
+                let lane = lane as usize;
+                eng.slab.get_mut(slot).queued_ns = now;
+                let app = eng.slab.get(slot).app;
                 // a same-app arrival joins the forming batch directly
                 // when nothing is queued ahead of it — the virtual twin
                 // of the batcher pulling the same-app queue prefix
                 // while it waits out the head's window
+                let li = &eng.lanes[lane];
                 let can_join = match &li.forming {
                     Some(f) => {
-                        f.app == req.app
+                        f.app == app
                             && li.queue.is_empty()
                             && f.rows.len() < li.max_batch
                     }
                     None => false,
                 };
                 if can_join {
+                    let li = &mut eng.lanes[lane];
+                    let max_batch = li.max_batch;
                     let f = li.forming.as_mut().expect("checked above");
-                    f.rows.push(req);
-                    if f.rows.len() >= li.max_batch {
+                    f.rows.push(slot);
+                    if f.rows.len() >= max_batch {
                         // batch filled before its window: close early
                         // (the bumped gen invalidates the pending Close)
                         li.close_gen += 1;
-                        close_batch(
-                            &mut lanes,
-                            lane,
-                            now,
-                            &mut free_workers,
-                            &mut ready_lanes,
-                            &mut events,
-                        );
+                        eng.close_batch(lane, now);
                     }
                 } else {
-                    offer(li, req, serve, &mut backlog[lane], &mut dropped);
-                    maybe_form(&mut lanes, lane, now, window_ns, &mut events);
+                    eng.offer(lane, slot);
+                    eng.maybe_form(lane, now);
                 }
             }
             Ev::Close { lane, gen } => {
-                if lanes[lane].forming.as_ref().map(|f| f.gen) == Some(gen) {
-                    close_batch(
-                        &mut lanes,
-                        lane,
-                        now,
-                        &mut free_workers,
-                        &mut ready_lanes,
-                        &mut events,
-                    );
+                let lane = lane as usize;
+                if eng.lanes[lane].forming.as_ref().map(|f| f.gen)
+                    == Some(gen)
+                {
+                    eng.close_batch(lane, now);
                 }
             }
             Ev::Done { lane } => {
-                let (rows, start) =
-                    lanes[lane].executing.take().expect("done without exec");
-                for r in &rows {
+                let lane = lane as usize;
+                let (rows, start) = eng.lanes[lane]
+                    .executing
+                    .take()
+                    .expect("done without exec");
+                for &slot in &rows {
+                    let r = *eng.slab.get(slot);
                     let total = now - r.created_ns;
                     latency.record(total);
                     per_class[app_index(r.app)].record(total);
                     queueing.record(start - r.queued_ns);
                     lane_hist[lane].record(total);
-                    backlog[lane] -= 1;
+                    eng.backlog[lane] -= 1;
+                    eng.slab.release(slot);
                 }
                 completed += rows.len() as u64;
                 duration_ns = now;
-                free_workers += 1;
+                eng.put_buf(rows);
+                eng.free_workers += 1;
                 // the freed worker first serves any batch already
                 // closed and waiting, then this lane may form its next
                 // head (its window may already have elapsed)
-                while free_workers > 0 {
-                    let Some(l2) = ready_lanes.pop_front() else { break };
-                    let rows = lanes[l2].closed.take().expect("ready w/o batch");
-                    start_exec(&mut lanes, l2, rows, now, &mut events);
-                    free_workers -= 1;
+                while eng.free_workers > 0 {
+                    let Some(l2) = eng.ready_lanes.pop_front() else {
+                        break;
+                    };
+                    let rows = eng.lanes[l2 as usize]
+                        .closed
+                        .take()
+                        .expect("ready w/o batch");
+                    eng.start_exec(l2 as usize, rows, now);
+                    eng.free_workers -= 1;
                 }
-                maybe_form(&mut lanes, lane, now, window_ns, &mut events);
+                eng.maybe_form(lane, now);
             }
         }
     }
 
+    let dropped = eng.dropped;
     let dropped_total: u64 = dropped.iter().sum();
     if completed + dropped_total != cfg.requests {
         return Err(Error::Serving(format!(
@@ -437,7 +698,7 @@ pub fn run(
         .iter()
         .zip(&lane_hist)
         .map(|(&m, h)| LaneStat {
-            machine: m.label(),
+            machine: lane_label(m),
             requests: h.count(),
             p50_ns: h.quantile(0.50),
             p99_ns: h.quantile(0.99),
@@ -455,6 +716,7 @@ pub fn run(
         } else {
             0.0
         },
+        events: events_processed,
         workers,
         policy: serve.policy,
         topology: topo.clone(),
@@ -467,123 +729,6 @@ pub fn run(
 
 fn gap_ns(g: &mut RequestGenerator, rate_hz: f64) -> u64 {
     (g.next_gap_s(rate_hz) * 1e9) as u64
-}
-
-/// Admission into a lane's bounded queue — the same pure [`admit`]
-/// decision the serving wheel thread applies, with the same
-/// newest-lower-priority victim selection.
-fn offer(
-    li: &mut LaneSim,
-    req: LReq,
-    serve: &ServeConfig,
-    backlog: &mut u64,
-    dropped: &mut [u64; 3],
-) {
-    let victim = if serve.queue_capacity > 0
-        && li.queue.len() >= serve.queue_capacity
-    {
-        let p = req.app.priority();
-        li.queue.iter().rposition(|q| q.app.priority() < p)
-    } else {
-        None
-    };
-    match admit(serve.shed, li.queue.len(), serve.queue_capacity, victim) {
-        Admission::Accept => li.queue.push_back(req),
-        Admission::DropIncoming => {
-            dropped[app_index(req.app)] += 1;
-            *backlog -= 1;
-        }
-        Admission::Evict(i) => {
-            let evicted = li.queue.remove(i).expect("victim index in range");
-            dropped[app_index(evicted.app)] += 1;
-            *backlog -= 1;
-            li.queue.push_back(req);
-        }
-    }
-}
-
-/// Start forming a batch from the queue head if the lane is idle,
-/// scheduling the window close at `head.queued_ns + window` — anchored
-/// at the head's arrival, so an aged head closes immediately.
-fn maybe_form(
-    lanes: &mut [LaneSim],
-    lane: usize,
-    now: u64,
-    window_ns: u64,
-    events: &mut EventCore<u64, Ev>,
-) {
-    let li = &mut lanes[lane];
-    if li.forming.is_some()
-        || li.closed.is_some()
-        || li.executing.is_some()
-        || li.queue.is_empty()
-    {
-        return;
-    }
-    let head = li.queue.pop_front().expect("non-empty");
-    li.close_gen += 1;
-    let gen = li.close_gen;
-    let app = head.app;
-    let head_queued = head.queued_ns;
-    let mut rows = vec![head];
-    // pull the same-app queue prefix that already accumulated while
-    // the lane was busy (the batcher's pop_front_if loop)
-    while rows.len() < li.max_batch {
-        match li.queue.front() {
-            Some(q) if q.app == app => {
-                rows.push(li.queue.pop_front().expect("non-empty"));
-            }
-            _ => break,
-        }
-    }
-    let full = rows.len() >= li.max_batch;
-    li.forming = Some(Forming { app, rows, gen });
-    // anchored at the head's arrival: an aged head (it queued behind a
-    // busy lane) or an already-full batch closes immediately
-    let close_at = if li.max_batch <= 1 || full {
-        now
-    } else {
-        (head_queued + window_ns).max(now)
-    };
-    events.push(close_at, Ev::Close { lane, gen });
-}
-
-/// Seal the forming batch: execute immediately if a pool worker is
-/// free, else park it on the ready list (the worker-cap model).
-fn close_batch(
-    lanes: &mut [LaneSim],
-    lane: usize,
-    now: u64,
-    free_workers: &mut usize,
-    ready_lanes: &mut VecDeque<usize>,
-    events: &mut EventCore<u64, Ev>,
-) {
-    let Some(f) = lanes[lane].forming.take() else { return };
-    if *free_workers > 0 {
-        start_exec(lanes, lane, f.rows, now, events);
-        // start_exec consumed a worker
-        *free_workers -= 1;
-    } else {
-        lanes[lane].closed = Some(f.rows);
-        ready_lanes.push_back(lane);
-    }
-}
-
-/// Begin executing a closed batch: service time is the single-row
-/// estimate plus [`BATCH_ROW_FRACTION`] per extra row.
-fn start_exec(
-    lanes: &mut [LaneSim],
-    lane: usize,
-    rows: Vec<LReq>,
-    now: u64,
-    events: &mut EventCore<u64, Ev>,
-) {
-    let li = &mut lanes[lane];
-    let single = li.service_ns[app_index(rows[0].app)];
-    let batch_factor = 1.0 + BATCH_ROW_FRACTION * (rows.len() - 1) as f64;
-    let service = (single * batch_factor).max(1.0) as u64;
-    li.executing = Some((rows, now));
-    events.push(now + service, Ev::Done { lane });
 }
 
 // ----------------------------------------------------------------- sweep
@@ -612,8 +757,71 @@ impl SweepPoint {
     }
 }
 
+/// The scoped pool width for fan-out over independent storms.
+fn pool_workers(jobs: usize) -> usize {
+    std::thread::available_parallelism()
+        .map_or(1, |p| p.get())
+        .min(jobs)
+        .max(1)
+}
+
+/// Run independent `(config, seed)` storms across a scoped worker pool
+/// of `workers` threads.  Each storm is a self-contained deterministic
+/// DES, so results return **in input order, byte-identical to running
+/// them serially** (`workers == 1` *is* the serial path) — pinned by
+/// `parallel_sweep_is_byte_equal_to_serial`.
+fn run_many(
+    configs: &[LoadtestConfig],
+    env: &Environment,
+    calib: &Calibration,
+    seeds: &[u64],
+    workers: usize,
+) -> Result<Vec<LoadtestReport>> {
+    debug_assert_eq!(configs.len(), seeds.len());
+    if workers <= 1 || configs.len() <= 1 {
+        return configs
+            .iter()
+            .zip(seeds)
+            .map(|(c, &s)| run(c, env, calib, s))
+            .collect();
+    }
+    // work-stealing over an atomic cursor, the same scoped-pool idiom
+    // as the tabu neighborhood scorer
+    let next = AtomicUsize::new(0);
+    let mut indexed: Vec<(usize, Result<LoadtestReport>)> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers.min(configs.len()))
+                .map(|_| {
+                    let next = &next;
+                    scope.spawn(move || {
+                        let mut out = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= configs.len() {
+                                break;
+                            }
+                            out.push((
+                                i,
+                                run(&configs[i], env, calib, seeds[i]),
+                            ));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("storm worker panicked"))
+                .collect()
+        });
+    indexed.sort_by_key(|&(i, _)| i);
+    indexed.into_iter().map(|(_, r)| r).collect()
+}
+
 /// Replay the storm across arrival-rate multipliers (each point
-/// `requests_per_point` requests, same seed).
+/// `requests_per_point` requests, same seed).  Points run concurrently
+/// on a scoped pool and merge in multiplier order — the report is
+/// byte-equal to a serial sweep.
 pub fn sweep(
     cfg: &LoadtestConfig,
     env: &Environment,
@@ -622,21 +830,62 @@ pub fn sweep(
     multipliers: &[f64],
     requests_per_point: u64,
 ) -> Result<Vec<SweepPoint>> {
-    let mut points = Vec::with_capacity(multipliers.len());
-    for &m in multipliers {
-        let mut point_cfg = cfg.clone();
-        point_cfg.requests = requests_per_point;
-        point_cfg.serve.arrival_rate_hz = cfg.serve.arrival_rate_hz * m;
-        let report = run(&point_cfg, env, calib, seed)?;
-        points.push(SweepPoint {
+    sweep_with_workers(
+        cfg,
+        env,
+        calib,
+        seed,
+        multipliers,
+        requests_per_point,
+        pool_workers(multipliers.len()),
+    )
+}
+
+fn sweep_with_workers(
+    cfg: &LoadtestConfig,
+    env: &Environment,
+    calib: &Calibration,
+    seed: u64,
+    multipliers: &[f64],
+    requests_per_point: u64,
+    workers: usize,
+) -> Result<Vec<SweepPoint>> {
+    let configs: Vec<LoadtestConfig> = multipliers
+        .iter()
+        .map(|&m| {
+            let mut point_cfg = cfg.clone();
+            point_cfg.requests = requests_per_point;
+            point_cfg.serve.arrival_rate_hz =
+                cfg.serve.arrival_rate_hz * m;
+            point_cfg
+        })
+        .collect();
+    let seeds = vec![seed; configs.len()];
+    let reports = run_many(&configs, env, calib, &seeds, workers)?;
+    Ok(multipliers
+        .iter()
+        .zip(reports)
+        .map(|(&m, report)| SweepPoint {
             multiplier: m,
             offered_rate_hz: report.offered_rate_hz,
             drop_fraction: report.drop_fraction(),
             p99_ns: report.latency.quantile(0.99),
             throughput_rps: report.throughput_rps,
-        });
-    }
-    Ok(points)
+        })
+        .collect())
+}
+
+/// Replay the same storm across seeds — a suite-style robustness run —
+/// on the scoped pool.  Reports come back in seed order, byte-identical
+/// to calling [`run`] once per seed.
+pub fn storm_suite(
+    cfg: &LoadtestConfig,
+    env: &Environment,
+    calib: &Calibration,
+    seeds: &[u64],
+) -> Result<Vec<LoadtestReport>> {
+    let configs = vec![cfg.clone(); seeds.len()];
+    run_many(&configs, env, calib, seeds, pool_workers(seeds.len()))
 }
 
 /// The saturation knee: the first sweep point where the topology stops
@@ -651,11 +900,14 @@ pub fn find_knee(points: &[SweepPoint]) -> Option<usize> {
 }
 
 /// Build the `BENCH_serve.json` document: the bench_check contract
-/// (`{group, results: [{case, median_ns}]}`) with the full
-/// deterministic report (and optional sweep) attached for humans.
+/// (`{group, results: [{case, median_ns}]}`) with the measured per-op
+/// breakdown (events/sec, ns per wheel op, allocations per request —
+/// `allocs` comes from the counting allocator around the storm) and
+/// the full deterministic report (and optional sweep) attached.
 pub fn bench_value(
     report: &LoadtestReport,
     wall_ns: u64,
+    allocs: u64,
     sweep_points: Option<&[SweepPoint]>,
 ) -> Value {
     let mut case = Value::object();
@@ -665,6 +917,21 @@ pub fn bench_value(
     case.set("median_ns", wall_ns / report.requests.max(1));
     case.set("requests", report.requests);
     case.set("wall_ns", wall_ns);
+    case.set("events", report.events);
+    case.set(
+        "events_per_sec",
+        report.events as f64 / (wall_ns as f64 / 1e9).max(1e-9),
+    );
+    // every simulation event is exactly one wheel push + one wheel pop
+    case.set(
+        "wheel_ns_per_op",
+        wall_ns as f64 / (2 * report.events).max(1) as f64,
+    );
+    case.set("allocs", allocs);
+    case.set(
+        "allocs_per_request",
+        allocs as f64 / report.requests.max(1) as f64,
+    );
     let mut root = Value::object();
     root.set("group", "serve_loadtest");
     root.set("results", vec![case]);
@@ -712,6 +979,42 @@ mod tests {
         assert_eq!(lane_total, r.completed);
         assert!(r.duration_ns > 0);
         assert!(r.throughput_rps > 0.0);
+        // every request is at least an arrival + a network-ready + a
+        // share of a batch completion
+        assert!(r.events >= 2 * r.requests);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_storms() {
+        let mut cfg = base_cfg(0);
+        assert!(matches!(
+            cfg.validate(),
+            Err(Error::InvalidLoadtest { field: "requests", .. })
+        ));
+        cfg.requests = 100;
+        cfg.serve.patients = 0;
+        assert!(matches!(
+            cfg.validate(),
+            Err(Error::InvalidLoadtest { field: "patients", .. })
+        ));
+        cfg.serve.patients = 4;
+        for bad in [f64::NAN, 0.0, -3.0, f64::INFINITY] {
+            cfg.serve.arrival_rate_hz = bad;
+            assert!(
+                matches!(
+                    cfg.validate(),
+                    Err(Error::InvalidLoadtest {
+                        field: "arrival_rate_hz",
+                        ..
+                    })
+                ),
+                "rate {bad} must be rejected"
+            );
+            // and the rejection happens before any event is simulated
+            assert!(run(&cfg, &env(), &Calibration::paper(), 7).is_err());
+        }
+        cfg.serve.arrival_rate_hz = 4.0;
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]
@@ -742,6 +1045,41 @@ mod tests {
         assert_eq!(r.topology.lane_count(), 65);
         assert_eq!(r.completed + r.dropped.iter().sum::<u64>(), 20_000);
         assert_eq!(r.workers, 65);
+    }
+
+    /// The tentpole's zero-alloc contract: once the slab, batch pool,
+    /// and wheel buckets are warm, requests recycle storage instead of
+    /// allocating.  Growing a storm 5× adds (nearly) no allocations —
+    /// measured with the counting allocator registered for lib tests.
+    /// Before the slab/pool rework the engine allocated ≥1 Vec per
+    /// batch, which this bound rejects by two orders of magnitude.
+    #[test]
+    fn steady_state_is_allocation_free() {
+        let mk = |requests: u64| {
+            let mut cfg = base_cfg(requests);
+            cfg.serve.topology = Topology::new(2, 6);
+            cfg.serve.queue_capacity = 32;
+            cfg
+        };
+        let count_run = |requests: u64| {
+            let cfg = mk(requests);
+            // warm-up: fault in lazy process state (interned labels,
+            // calibration statics) outside the measured window
+            run(&cfg, &env(), &Calibration::paper(), 7).unwrap();
+            let before = crate::allocation::allocation_count();
+            run(&cfg, &env(), &Calibration::paper(), 7).unwrap();
+            crate::allocation::allocation_count() - before
+        };
+        let small = count_run(4_000);
+        let large = count_run(20_000);
+        // per-storm setup (lanes, histograms, generators) allocates the
+        // same for both; the 16k extra requests must be nearly free
+        let delta = large.saturating_sub(small);
+        assert!(
+            delta < 16_000 / 10,
+            "steady state allocates: {small} allocs @4k vs {large} @20k \
+             (delta {delta} for 16k extra requests)"
+        );
     }
 
     #[test]
@@ -857,11 +1195,70 @@ mod tests {
         assert!(pts[1].offered_rate_hz > pts[0].offered_rate_hz);
     }
 
+    /// The satellite byte-equality proof: a parallel sweep (forced onto
+    /// 4 pool threads) renders the identical JSON, point for point, as
+    /// the serial path (workers = 1) for a fixed seed.
+    #[test]
+    fn parallel_sweep_is_byte_equal_to_serial() {
+        let mut cfg = base_cfg(400);
+        cfg.serve.topology = Topology::new(1, 2);
+        cfg.serve.queue_capacity = 8;
+        let mults = [0.5, 1.0, 2.0, 4.0, 8.0];
+        let serial = sweep_with_workers(
+            &cfg,
+            &env(),
+            &Calibration::paper(),
+            7,
+            &mults,
+            400,
+            1,
+        )
+        .unwrap();
+        let parallel = sweep_with_workers(
+            &cfg,
+            &env(),
+            &Calibration::paper(),
+            7,
+            &mults,
+            400,
+            4,
+        )
+        .unwrap();
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(
+                s.to_value().to_string_pretty(),
+                p.to_value().to_string_pretty()
+            );
+        }
+    }
+
+    /// Multi-seed storms fan out the same way: the suite's reports are
+    /// byte-identical to running each seed on its own.
+    #[test]
+    fn storm_suite_is_byte_equal_to_serial_runs() {
+        let mut cfg = base_cfg(600);
+        cfg.serve.topology = Topology::new(1, 2);
+        let seeds = [7u64, 42, 43, 44];
+        let suite =
+            storm_suite(&cfg, &env(), &Calibration::paper(), &seeds)
+                .unwrap();
+        assert_eq!(suite.len(), seeds.len());
+        for (&s, report) in seeds.iter().zip(&suite) {
+            let solo = run(&cfg, &env(), &Calibration::paper(), s).unwrap();
+            assert_eq!(
+                report.to_value().to_string_pretty(),
+                solo.to_value().to_string_pretty(),
+                "seed {s}"
+            );
+        }
+    }
+
     #[test]
     fn bench_value_has_gate_contract() {
         let cfg = base_cfg(1_000);
         let r = run(&cfg, &env(), &Calibration::paper(), 7).unwrap();
-        let v = bench_value(&r, 5_000_000, None);
+        let v = bench_value(&r, 5_000_000, 1_500, None);
         assert_eq!(v.get("group").unwrap().as_str(), Some("serve_loadtest"));
         let rows = v.get("results").unwrap().as_array().unwrap();
         assert_eq!(
@@ -872,7 +1269,23 @@ mod tests {
             rows[0].get("median_ns").unwrap().as_u64(),
             Some(5_000)
         );
+        // the per-op breakdown rides along for bench_check and humans
+        assert_eq!(rows[0].get("events").unwrap().as_u64(), Some(r.events));
+        assert!(rows[0].get("events_per_sec").is_some());
+        assert!(rows[0].get("wheel_ns_per_op").is_some());
+        assert_eq!(
+            rows[0].get("allocs_per_request").unwrap().as_f64(),
+            Some(1.5)
+        );
         assert!(v.get("report").is_some());
+    }
+
+    #[test]
+    fn lane_labels_are_interned() {
+        let a = lane_label(MachineRef::edge(0));
+        let b = lane_label(MachineRef::edge(0));
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(&*a, "ES0");
     }
 
     /// The full acceptance storm: 10⁶ requests on a 65-lane metro.

@@ -10,6 +10,14 @@
 //! then `--flag value` / `--flag` pairs.
 
 use edgeward::allocation::{allocate_single, estimate_single, Calibration};
+
+// Count every allocation so `edgeward loadtest` can report real
+// allocs-per-request in BENCH_serve.json (the CI-gated zero-alloc
+// steady-state number).  The counter is two relaxed atomic adds per
+// allocation — negligible against the allocation itself.
+#[global_allocator]
+static COUNTING_ALLOC: edgeward::allocation::CountingAllocator =
+    edgeward::allocation::CountingAllocator;
 use edgeward::config::{Config, Environment};
 use edgeward::coordinator::{Coordinator, Policy};
 use edgeward::data::EpisodeGenerator;
@@ -679,7 +687,10 @@ fn run() -> edgeward::Result<()> {
                 requests,
             };
             let started = std::time::Instant::now();
+            let allocs_before = edgeward::allocation::allocation_count();
             let report = edgeward::loadtest::run(&lt_cfg, &env, &calib, seed)?;
+            let allocs =
+                edgeward::allocation::allocation_count() - allocs_before;
             let wall_ns = started.elapsed().as_nanos() as u64;
             let sweep_points = if do_sweep {
                 let per_point = (requests / 10).max(1_000);
@@ -725,6 +736,15 @@ fn run() -> edgeward::Result<()> {
                     "wall       : {:.2}s ({:.0} req/s simulated)",
                     wall_ns as f64 / 1e9,
                     report.requests as f64 / (wall_ns as f64 / 1e9).max(1e-9),
+                );
+                println!(
+                    "engine     : {} events ({:.2}M/s), {:.1} ns/wheel-op, {:.2} allocs/request",
+                    report.events,
+                    report.events as f64
+                        / (wall_ns as f64 / 1e9).max(1e-9)
+                        / 1e6,
+                    wall_ns as f64 / (2 * report.events).max(1) as f64,
+                    allocs as f64 / report.requests.max(1) as f64,
                 );
                 println!(
                     "latency    : p50={:.1}ms p99={:.1}ms p99.9={:.1}ms max={:.1}ms",
@@ -783,6 +803,7 @@ fn run() -> edgeward::Result<()> {
                 let doc = edgeward::loadtest::bench_value(
                     &report,
                     wall_ns,
+                    allocs,
                     sweep_points.as_deref(),
                 );
                 edgeward::benchkit::write_value(&path, &doc)?;
