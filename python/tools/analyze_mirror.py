@@ -1,0 +1,627 @@
+#!/usr/bin/env python3
+"""Independent mirror of ``edgeward analyze`` (rust/src/analysis/).
+
+Like ``suite_oracle.py`` for the scenario pipeline, this is a
+from-scratch reimplementation of the in-tree static-analysis pass: the
+same token-level lexer, the same rule set, the same suppression
+grammar, over the same sources.  CI runs it in the pre-manifest suite
+job (it needs no Cargo toolchain) and the Rust analyzer in the
+``analyze`` job; both must report a clean tree, so a rule drifting in
+one implementation and not the other fails loudly.
+
+The rule set and every scoping decision are documented in
+rust/src/analysis/rules.rs — keep the two implementations in lockstep
+when adding or re-scoping a rule.
+
+Usage:
+  analyze_mirror.py [ROOT] [--rules r1,r2] [--json OUT] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+# ------------------------------------------------------------------ lexer
+#
+# Token-level Rust lexing: enough accuracy that strings, raw strings,
+# char literals vs lifetimes, and (nested) block comments never leak
+# tokens into rule matching.  Each token is (kind, text, line); kinds
+# are "ident", "lifetime", "str", "char", "num", "fnum" (float
+# literal), "punct".  Comments are collected separately as
+# (line, text).  Known benign inaccuracies (documented in lex.rs too):
+# raw identifiers (r#type) lex as ident+punct+ident, and nested tuple
+# access (x.0.1) lexes its tail as a float — neither reaches any rule.
+
+JOINED_PUNCT = ("::", "==", "!=", "<=", ">=", "->", "=>", "..", "&&", "||")
+RAW_STR_RE = re.compile(r'(?:r|br)(#*)"')
+FLOAT_RE = re.compile(
+    r"[0-9][0-9_]*\.([0-9][0-9_]*)?([eE][+-]?[0-9_]+)?(f32|f64)?"
+    r"|[0-9][0-9_]*[eE][+-]?[0-9_]+(f32|f64)?"
+    r"|[0-9][0-9_]*(f32|f64)"
+)
+
+
+class LexError(Exception):
+    pass
+
+
+def lex(src, path="<input>"):
+    toks = []      # (kind, text, line)
+    comments = []  # (line, text)
+    i, n, line = 0, len(src), 1
+
+    def err(msg, at_line):
+        return LexError("%s:%d: %s" % (path, at_line, msg))
+
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+        if src.startswith("//", i):
+            j = src.find("\n", i)
+            if j < 0:
+                j = n
+            comments.append((line, src[i + 2 : j]))
+            i = j
+            continue
+        if src.startswith("/*", i):
+            start = line
+            depth, i = 1, i + 2
+            while i < n and depth > 0:
+                if src.startswith("/*", i):
+                    depth, i = depth + 1, i + 2
+                elif src.startswith("*/", i):
+                    depth, i = depth - 1, i + 2
+                else:
+                    if src[i] == "\n":
+                        line += 1
+                    i += 1
+            if depth > 0:
+                raise err("unterminated block comment", start)
+            continue
+        if c in "rb":
+            m = RAW_STR_RE.match(src, i)
+            if m:
+                start = line
+                terminator = '"' + "#" * len(m.group(1))
+                k = src.find(terminator, m.end())
+                if k < 0:
+                    raise err("unterminated raw string", start)
+                line += src.count("\n", m.end(), k)
+                toks.append(("str", "", start))
+                i = k + len(terminator)
+                continue
+            if src.startswith('b"', i):
+                start = line
+                i, line = _cooked_string(src, i + 1, line, err)
+                toks.append(("str", "", start))
+                continue
+            if src.startswith("b'", i):
+                i, tok = _char_or_lifetime(src, i + 1, line, err)
+                toks.append(tok)
+                continue
+        if c == '"':
+            start = line
+            i, line = _cooked_string(src, i, line, err)
+            toks.append(("str", "", start))
+            continue
+        if c == "'":
+            i, tok = _char_or_lifetime(src, i, line, err)
+            toks.append(tok)
+            continue
+        if c.isalpha() or c == "_":
+            j = i
+            while j < n and (src[j].isalnum() or src[j] == "_"):
+                j += 1
+            toks.append(("ident", src[i:j], line))
+            i = j
+            continue
+        if c.isdigit():
+            i, tok = _number(src, i, line)
+            toks.append(tok)
+            continue
+        matched = False
+        for op in JOINED_PUNCT:
+            if src.startswith(op, i):
+                toks.append(("punct", op, line))
+                i += len(op)
+                matched = True
+                break
+        if not matched:
+            toks.append(("punct", c, line))
+            i += 1
+    return toks, comments
+
+
+def _cooked_string(src, i, line, err):
+    """Lex a normal string from its opening quote at ``i``; returns
+    (index past the closing quote, updated line)."""
+    start, j, n = line, i + 1, len(src)
+    while j < n:
+        c = src[j]
+        if c == "\\":
+            # the escaped char may itself be a newline (line
+            # continuation inside a multi-line string)
+            if j + 1 < n and src[j + 1] == "\n":
+                line += 1
+            j += 2
+            continue
+        if c == "\n":
+            line += 1
+        elif c == '"':
+            return j + 1, line
+        j += 1
+    raise err("unterminated string", start)
+
+
+def _char_or_lifetime(src, i, line, err):
+    """Lex from an opening single quote at ``i``: a lifetime ('a,
+    'static) or a char literal ('x', '\\n', '\\u{..}')."""
+    n = len(src)
+    nxt = src[i + 1] if i + 1 < n else ""
+    after = src[i + 2] if i + 2 < n else ""
+    if (nxt.isalpha() or nxt == "_") and after != "'":
+        j = i + 1
+        while j < n and (src[j].isalnum() or src[j] == "_"):
+            j += 1
+        return j, ("lifetime", src[i:j], line)
+    j = i + 1
+    if j < n and src[j] == "\\":
+        j += 1
+        if j < n and src[j] == "u":
+            j = src.find("}", j)
+            if j < 0:
+                raise err("unterminated \\u escape", line)
+        j += 1
+    else:
+        j += 1
+    if j >= n or src[j] != "'":
+        raise err("unterminated char literal", line)
+    return j + 1, ("char", src[i : j + 1], line)
+
+
+def _number(src, i, line):
+    """Lex a numeric literal starting at a digit."""
+    n = len(src)
+    j = i
+    while j < n and (src[j].isalnum() or src[j] == "_"):
+        j += 1
+        # exponent sign: 1e-9 / 2.5E+3 (never inside 0x…)
+        if (
+            src[j - 1] in "eE"
+            and not src[i:j].lower().startswith("0x")
+            and j < n
+            and src[j] in "+-"
+            and j + 1 < n
+            and src[j + 1].isdigit()
+        ):
+            j += 1
+    if (
+        j < n
+        and src[j] == "."
+        and not src.startswith("..", j)
+        and not (j + 1 < n and (src[j + 1].isalpha() or src[j + 1] == "_"))
+    ):
+        j += 1
+        while j < n and (src[j].isalnum() or src[j] == "_"):
+            j += 1
+            if (
+                src[j - 1] in "eE"
+                and j < n
+                and src[j] in "+-"
+                and j + 1 < n
+                and src[j + 1].isdigit()
+            ):
+                j += 1
+    text = src[i:j]
+    kind = "fnum" if FLOAT_RE.fullmatch(text) else "num"
+    return j, (kind, text, line)
+
+
+# ------------------------------------------------------- test regions
+
+
+def mark_test_regions(toks):
+    """Return a bool per token: True when the token is inside an item
+    annotated ``#[cfg(test)]`` (the attribute through the end of the
+    annotated item — its balanced {...} block, or a top-level ';' for
+    brace-less items like statics)."""
+    in_test = [False] * len(toks)
+    texts = [t[1] for t in toks]
+    for i in range(len(toks)):
+        if not (
+            texts[i] == "#"
+            and i + 5 < len(toks)
+            and texts[i + 1] == "["
+            and texts[i + 2] == "cfg"
+            and texts[i + 3] == "("
+            and texts[i + 4] == "test"
+            and texts[i + 5] == ")"
+        ):
+            continue
+        j = i + 6
+        while j < len(toks) and texts[j] != "]":
+            j += 1
+        brace = 0
+        k = j + 1
+        while k < len(toks):
+            t = texts[k]
+            if t == "{":
+                brace += 1
+            elif t == "}":
+                brace -= 1
+                if brace == 0:
+                    break
+            elif t == ";" and brace == 0:
+                break
+            k += 1
+        for m in range(i, min(k + 1, len(toks))):
+            in_test[m] = True
+    return in_test
+
+
+# ------------------------------------------------------- suppressions
+
+RULES = (
+    "unordered-emit",
+    "wall-clock-in-pure",
+    "float-eq",
+    "lossy-tick-cast",
+    "relaxed-sync",
+    "unscoped-spawn",
+    "bare-unwrap",
+    "unjustified-allow",
+)
+
+MARKER = "analysis:"
+
+
+def parse_suppressions(comments, findings, path):
+    """Extract allow() suppressions; malformed ones become
+    unjustified-allow findings.  A valid allow suppresses rule R on its
+    own line and the next line (covering both the trailing-comment and
+    the comment-above styles)."""
+    allowed = set()  # (rule, line)
+    for (line, text) in comments:
+        t = text.strip()
+        if not t.startswith(MARKER):
+            continue
+        body = t[len(MARKER) :].strip()
+        ok = False
+        if body.startswith("allow(") and body.endswith(")"):
+            inner = body[len("allow(") : -1]
+            comma = inner.find(",")
+            rule = (inner if comma < 0 else inner[:comma]).strip()
+            just = "" if comma < 0 else inner[comma + 1 :].strip()
+            if rule not in RULES:
+                findings.append(
+                    (
+                        path,
+                        line,
+                        "unjustified-allow",
+                        "allow() names unknown rule %r" % rule,
+                    )
+                )
+                continue
+            if (
+                len(just) >= 2
+                and just.startswith('"')
+                and just.endswith('"')
+                and just[1:-1].strip()
+            ):
+                allowed.add((rule, line))
+                allowed.add((rule, line + 1))
+                ok = True
+        if not ok:
+            findings.append(
+                (
+                    path,
+                    line,
+                    "unjustified-allow",
+                    "suppression needs a justification: "
+                    '// analysis: allow(<rule>, "<why>")',
+                )
+            )
+    return allowed
+
+
+# ------------------------------------------------------------- rules
+
+EMIT_MODULES = (
+    "benchkit/",
+    "loadtest/",
+    "metrics/",
+    "metro/",
+    "report/",
+    "serialize/",
+    "suite/",
+)
+WALL_CLOCK_ALLOWED_FILES = ("coordinator/delay.rs", "main.rs")
+WALL_CLOCK_ALLOWED_DIRS = ("runtime/", "benchkit/")
+TICK_CAST_MODULES = (
+    "coordinator/",
+    "loadtest/",
+    "scenario/",
+    "scheduler/",
+    "topology/",
+)
+NARROWING_SOURCES = (
+    "ceil",
+    "round",
+    "floor",
+    "as_nanos",
+    "as_micros",
+    "as_millis",
+    "as_secs_f64",
+)
+NARROW_INTS = ("u64", "u32", "usize", "i64", "i32", "Tick")
+
+
+def in_dirs(path, prefixes):
+    return any(path.startswith(p) for p in prefixes)
+
+
+def run_rules(path, toks, in_test, active):
+    findings = []
+
+    def emit(rule, line, msg):
+        findings.append((path, line, rule, msg))
+
+    for i, (kind, text, line) in enumerate(toks):
+        if in_test[i]:
+            continue
+
+        def nxt(k):
+            return toks[i + k] if i + k < len(toks) else ("punct", "", 0)
+
+        def prv(k):
+            return toks[i - k] if i - k >= 0 else ("punct", "", 0)
+
+        if (
+            "unordered-emit" in active
+            and kind == "ident"
+            and text in ("HashMap", "HashSet")
+            and in_dirs(path, EMIT_MODULES)
+        ):
+            emit(
+                "unordered-emit",
+                line,
+                "%s in a report-emitting module: iteration order is "
+                "nondeterministic; use BTreeMap/BTreeSet or sort before "
+                "emitting" % text,
+            )
+        if (
+            "wall-clock-in-pure" in active
+            and kind == "ident"
+            and path not in WALL_CLOCK_ALLOWED_FILES
+            and not in_dirs(path, WALL_CLOCK_ALLOWED_DIRS)
+        ):
+            if text == "Instant" and nxt(1)[1] == "::" and nxt(2)[1] == "now":
+                emit(
+                    "wall-clock-in-pure",
+                    line,
+                    "Instant::now() outside the real-time allowlist: "
+                    "wall-clock reads make results machine-dependent",
+                )
+            elif text == "SystemTime":
+                emit(
+                    "wall-clock-in-pure",
+                    line,
+                    "SystemTime outside the real-time allowlist: "
+                    "wall-clock reads make results machine-dependent",
+                )
+        if (
+            "float-eq" in active
+            and kind == "punct"
+            and text in ("==", "!=")
+            and (prv(1)[0] == "fnum" or nxt(1)[0] == "fnum")
+        ):
+            emit(
+                "float-eq",
+                line,
+                "%s against a float literal: exact float comparison is "
+                "representation-sensitive; compare integers, bits, or a "
+                "documented exact set" % text,
+            )
+        if (
+            "lossy-tick-cast" in active
+            and kind == "ident"
+            and text == "as"
+            and in_dirs(path, TICK_CAST_MODULES)
+        ):
+            target = nxt(1)[1]
+            if target == "Tick":
+                emit(
+                    "lossy-tick-cast",
+                    line,
+                    "`as Tick` cast: silent truncation/saturation; use "
+                    "scale_ticks or a checked conversion",
+                )
+            elif (
+                target in NARROW_INTS
+                and prv(1)[1] == ")"
+                and prv(2)[1] == "("
+                and prv(3)[0] == "ident"
+                and prv(3)[1] in NARROWING_SOURCES
+            ):
+                emit(
+                    "lossy-tick-cast",
+                    line,
+                    "`%s() as %s` narrows a wider value: silent "
+                    "truncation on overflow" % (prv(3)[1], target),
+                )
+        if (
+            "relaxed-sync" in active
+            and kind == "ident"
+            and text == "Ordering"
+            and nxt(1)[1] == "::"
+            and nxt(2)[1] == "Relaxed"
+            and path != "allocation/count.rs"
+        ):
+            emit(
+                "relaxed-sync",
+                line,
+                "Ordering::Relaxed outside a pure counter: state an "
+                "explicit happens-before edge (Acquire/Release) or "
+                "justify why none is needed",
+            )
+        if (
+            "unscoped-spawn" in active
+            and kind == "ident"
+            and text == "thread"
+            and nxt(1)[1] == "::"
+            and nxt(2)[1] in ("spawn", "Builder")
+            and not path.startswith("runtime/")
+        ):
+            emit(
+                "unscoped-spawn",
+                line,
+                "unscoped thread (thread::%s) outside runtime/: prefer "
+                "std::thread::scope, or justify the join point" % nxt(2)[1],
+            )
+        if (
+            "bare-unwrap" in active
+            and kind == "punct"
+            and text == "."
+            and path != "main.rs"
+        ):
+            name = nxt(1)
+            if (
+                name[0] == "ident"
+                and name[1] == "unwrap"
+                and nxt(2)[1] == "("
+                and nxt(3)[1] == ")"
+            ):
+                emit(
+                    "bare-unwrap",
+                    name[2],
+                    ".unwrap() in library code: return a typed Error or "
+                    "justify the locally-provable invariant",
+                )
+            elif (
+                # the string-literal argument is what distinguishes
+                # Option/Result::expect("msg") from same-named methods
+                # (the JSON parser's Parser::expect(b'{')).
+                name[0] == "ident"
+                and name[1] == "expect"
+                and nxt(2)[1] == "("
+                and nxt(3)[0] == "str"
+            ):
+                emit(
+                    "bare-unwrap",
+                    name[2],
+                    ".expect() in library code: return a typed Error or "
+                    "justify the locally-provable invariant",
+                )
+    return findings
+
+
+# ------------------------------------------------------------ driver
+
+
+def analyze_file(root, rel, active):
+    with open(os.path.join(root, rel)) as fh:
+        src = fh.read()
+    path = rel.replace(os.sep, "/")
+    toks, comments = lex(src, path)
+    in_test = mark_test_regions(toks)
+    findings = []
+    allowed = parse_suppressions(comments, findings, path)
+    if "unjustified-allow" not in active:
+        findings = []
+    raw = run_rules(path, toks, in_test, active)
+    suppressed = 0
+    for (p, line, rule, msg) in raw:
+        if (rule, line) in allowed:
+            suppressed += 1
+        else:
+            findings.append((p, line, rule, msg))
+    return findings, suppressed
+
+
+def discover(root):
+    out = []
+    for base, _dirs, files in os.walk(root):
+        for f in files:
+            if f.endswith(".rs"):
+                out.append(os.path.relpath(os.path.join(base, f), root))
+    return sorted(out)
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("root", nargs="?", default=None)
+    parser.add_argument("--rules", default=None)
+    parser.add_argument("--json", dest="json_out", default=None)
+    parser.add_argument("--check", action="store_true")
+    args = parser.parse_args(argv)
+
+    root = args.root
+    if root is None:
+        for cand in ("rust/src", "src", "../rust/src"):
+            if os.path.isdir(cand):
+                root = cand
+                break
+        else:
+            print("error: no source root found", file=sys.stderr)
+            return 2
+
+    active = set(RULES)
+    if args.rules:
+        active = {r.strip() for r in args.rules.split(",") if r.strip()}
+        unknown = active - set(RULES)
+        if unknown:
+            print(
+                "error: unknown rule(s): %s" % ", ".join(sorted(unknown)),
+                file=sys.stderr,
+            )
+            return 2
+
+    findings, suppressed = [], 0
+    for rel in discover(root):
+        f, s = analyze_file(root, rel, active)
+        findings.extend(f)
+        suppressed += s
+    findings.sort(key=lambda f: (f[0], f[1], f[2]))
+
+    counts = {}
+    for (_p, _l, rule, _m) in findings:
+        counts[rule] = counts.get(rule, 0) + 1
+    for (path, line, rule, msg) in findings:
+        print("%-18s %s:%d  %s" % (rule, path, line, msg))
+    print(
+        "%d finding(s), %d suppressed, %d rule(s) active"
+        % (len(findings), suppressed, len(active))
+    )
+    if args.json_out:
+        doc = {
+            "findings": [
+                {"file": p, "line": l, "rule": r, "message": m}
+                for (p, l, r, m) in findings
+            ],
+            "counts": counts,
+            "root": root.replace(os.sep, "/"),
+            "rules": sorted(active),
+            "suppressed": suppressed,
+        }
+        with open(args.json_out, "w") as fh:
+            json.dump(doc, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print("wrote %s" % args.json_out)
+    if args.check and findings:
+        print("FAIL: %d finding(s)" % len(findings))
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,6 +24,13 @@ Cases present on only one side are reported but never fail the run, so
 adding a bench row does not require touching the base file in the same
 change.  After a trusted CI run, refresh the bases with ``--bless``.
 
+Every report is schema-checked before comparison: the document must be
+an object with a non-empty ``results`` list whose rows carry a unique
+string ``case`` and a non-negative numeric ``median_ns`` (plus numeric
+``allocs_per_request`` where present).  A malformed or truncated
+``BENCH_*.json`` therefore fails the gate loudly (exit 2) instead of
+comparing zero rows and passing vacuously.
+
 Usage:
   bench_check.py FRESH BASE [FRESH BASE ...] [--factor X]
                  [--hot a,b,..]... [--bless]
@@ -52,16 +59,72 @@ HOT_CASES = (
 ALLOC_SLACK_PER_REQUEST = 0.5
 
 
+class SchemaError(Exception):
+    """A bench report that must not silently pass the gate."""
+
+
+def validate_report(path, doc):
+    """Schema check: raise SchemaError unless `doc` is a bench report.
+
+    Required shape: ``{"results": [{"case": str, "median_ns": num,
+    ...}, ...]}`` with unique case names, non-negative medians, and
+    numeric ``allocs_per_request`` where the field is present.
+    """
+    if not isinstance(doc, dict):
+        raise SchemaError("%s: top level is not an object" % path)
+    if "results" not in doc:
+        raise SchemaError("%s: missing 'results' list" % path)
+    rows = doc["results"]
+    if not isinstance(rows, list) or not rows:
+        raise SchemaError("%s: 'results' must be a non-empty list" % path)
+    seen = set()
+    for i, row in enumerate(rows):
+        where = "%s: results[%d]" % (path, i)
+        if not isinstance(row, dict):
+            raise SchemaError("%s is not an object" % where)
+        case = row.get("case")
+        if not isinstance(case, str) or not case:
+            raise SchemaError("%s: 'case' must be a non-empty string" % where)
+        if case in seen:
+            raise SchemaError("%s: duplicate case %r" % (where, case))
+        seen.add(case)
+        med = row.get("median_ns")
+        if isinstance(med, bool) or not isinstance(med, (int, float)):
+            raise SchemaError(
+                "%s (%s): 'median_ns' must be a number, got %r"
+                % (where, case, med)
+            )
+        if med < 0:
+            raise SchemaError(
+                "%s (%s): negative median_ns %r" % (where, case, med)
+            )
+        allocs = row.get("allocs_per_request")
+        if allocs is not None and (
+            isinstance(allocs, bool) or not isinstance(allocs, (int, float))
+        ):
+            raise SchemaError(
+                "%s (%s): 'allocs_per_request' must be numeric, got %r"
+                % (where, case, allocs)
+            )
+
+
 def load_rows(path):
     with open(path) as fh:
-        doc = json.load(fh)
-    rows = doc.get("results", [])
-    return {r["case"]: r for r in rows if "case" in r}
+        try:
+            doc = json.load(fh)
+        except json.JSONDecodeError as exc:
+            raise SchemaError("%s: not valid JSON (%s)" % (path, exc))
+    validate_report(path, doc)
+    return {r["case"]: r for r in doc["results"]}
 
 
 def bless(fresh_path, base_path):
     with open(fresh_path) as fh:
-        doc = json.load(fh)
+        try:
+            doc = json.load(fh)
+        except json.JSONDecodeError as exc:
+            raise SchemaError("%s: not valid JSON (%s)" % (fresh_path, exc))
+    validate_report(fresh_path, doc)  # never bless a malformed report
     doc["note"] = (
         "perf-trend base for bench_check.py; medians blessed from a "
         "real bench run"
@@ -158,13 +221,21 @@ def main(argv=None):
     }
 
     if args.bless:
-        for fresh_path, base_path in pairs:
-            bless(fresh_path, base_path)
+        try:
+            for fresh_path, base_path in pairs:
+                bless(fresh_path, base_path)
+        except SchemaError as exc:
+            print("FAIL: malformed bench report: %s" % exc)
+            return 2
         return 0
 
     failures = []
-    for fresh_path, base_path in pairs:
-        check_pair(fresh_path, base_path, hot_cases, args.factor, failures)
+    try:
+        for fresh_path, base_path in pairs:
+            check_pair(fresh_path, base_path, hot_cases, args.factor, failures)
+    except SchemaError as exc:
+        print("FAIL: malformed bench report: %s" % exc)
+        return 2
 
     if failures:
         print(

@@ -1,0 +1,478 @@
+//! Token-level Rust lexer for the in-tree static-analysis pass.
+//!
+//! The crate already hand-rolls its TOML and JSON parsers; this is the
+//! same idiom one layer down: enough lexical accuracy that strings,
+//! raw strings, char literals vs lifetimes, and (nested) block
+//! comments never leak tokens into rule matching, with a line number
+//! on every token so findings point at real source lines.
+//!
+//! Known benign inaccuracies (shared with the Python mirror,
+//! `python/tools/analyze_mirror.py`): raw identifiers (`r#type`) lex
+//! as ident+punct+ident, and nested tuple access (`x.0.1`) lexes its
+//! tail as a float literal — neither reaches any rule.
+
+use crate::error::{Error, Result};
+
+/// Token classes the rule engine matches on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Identifier or keyword (`HashMap`, `as`, `thread`).
+    Ident,
+    /// Integer-shaped numeric literal (`42`, `0x1f`, `1_000u64`).
+    Num,
+    /// Float-shaped numeric literal (`1.0`, `1e9`, `3f64`).
+    FNum,
+    /// Any string literal (cooked, raw, byte); contents are dropped.
+    Str,
+    /// Char or byte-char literal (`'x'`, `b'\n'`).
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    /// Everything else, with two-char operators joined (`::`, `==`).
+    Punct,
+}
+
+/// One lexed token: kind, source text, and 1-based line number.
+/// String literals carry empty text — no rule matches their contents,
+/// and dropping them keeps fixture sources from tripping rules.
+#[derive(Clone, Copy, Debug)]
+pub struct Tok<'a> {
+    pub kind: Kind,
+    pub text: &'a str,
+    pub line: u32,
+}
+
+/// One `//` line comment (text excludes the slashes), for the
+/// suppression parser.  Block comments are discarded entirely:
+/// suppressions must be line comments.
+#[derive(Clone, Copy, Debug)]
+pub struct Comment<'a> {
+    pub line: u32,
+    pub text: &'a str,
+}
+
+/// Two-character operators lexed as one punct token.  Order is
+/// irrelevant (no member is a prefix of another).
+const JOINED_PUNCT: [&str; 10] =
+    ["::", "==", "!=", "<=", ">=", "->", "=>", "..", "&&", "||"];
+
+/// Tokenize `src`; `path` only labels lex errors.
+pub fn lex<'a>(
+    src: &'a str,
+    path: &str,
+) -> Result<(Vec<Tok<'a>>, Vec<Comment<'a>>)> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let err = |msg: &str, at: u32| {
+        Error::Analysis(format!("{path}:{at}: {msg}"))
+    };
+
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        if src[i..].starts_with("//") {
+            let j = src[i..].find('\n').map_or(n, |k| i + k);
+            comments.push(Comment { line, text: &src[i + 2..j] });
+            i = j;
+            continue;
+        }
+        if src[i..].starts_with("/*") {
+            let start = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if src[i..].starts_with("/*") {
+                    depth += 1;
+                    i += 2;
+                } else if src[i..].starts_with("*/") {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            if depth > 0 {
+                return Err(err("unterminated block comment", start));
+            }
+            continue;
+        }
+        if c == b'r' || c == b'b' {
+            if let Some(hashes) = raw_str_hashes(&src[i..]) {
+                let start = line;
+                let prefix = if src[i..].starts_with("br") { 2 } else { 1 };
+                let body = i + prefix + hashes + 1;
+                let terminator = format!("\"{}", "#".repeat(hashes));
+                let Some(k) = src[body..].find(&terminator) else {
+                    return Err(err("unterminated raw string", start));
+                };
+                let k = body + k;
+                line += src[body..k].matches('\n').count() as u32;
+                toks.push(Tok { kind: Kind::Str, text: "", line: start });
+                i = k + terminator.len();
+                continue;
+            }
+            if src[i..].starts_with("b\"") {
+                let start = line;
+                let (j, nl) = cooked_string(src, i + 1, line)
+                    .ok_or_else(|| err("unterminated string", line))?;
+                line = nl;
+                toks.push(Tok { kind: Kind::Str, text: "", line: start });
+                i = j;
+                continue;
+            }
+            if src[i..].starts_with("b'") {
+                let (j, tok) = char_or_lifetime(src, i + 1, line)
+                    .ok_or_else(|| err("unterminated char literal", line))?;
+                toks.push(tok);
+                i = j;
+                continue;
+            }
+        }
+        if c == b'"' {
+            let start = line;
+            let (j, nl) = cooked_string(src, i, line)
+                .ok_or_else(|| err("unterminated string", line))?;
+            line = nl;
+            toks.push(Tok { kind: Kind::Str, text: "", line: start });
+            i = j;
+            continue;
+        }
+        if c == b'\'' {
+            let (j, tok) = char_or_lifetime(src, i, line)
+                .ok_or_else(|| err("unterminated char literal", line))?;
+            toks.push(tok);
+            i = j;
+            continue;
+        }
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let mut j = i;
+            while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Ident, text: &src[i..j], line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let (j, tok) = number(src, i, line);
+            toks.push(tok);
+            i = j;
+            continue;
+        }
+        match JOINED_PUNCT.iter().find(|op| src[i..].starts_with(**op)) {
+            Some(op) => {
+                toks.push(Tok { kind: Kind::Punct, text: op, line });
+                i += op.len();
+            }
+            None => {
+                // one char — by *character*, so a stray non-ASCII byte
+                // sequence outside strings advances past the whole char
+                let w = src[i..].chars().next().map_or(1, char::len_utf8);
+                toks.push(Tok {
+                    kind: Kind::Punct,
+                    text: &src[i..i + w],
+                    line,
+                });
+                i += w;
+            }
+        }
+    }
+    Ok((toks, comments))
+}
+
+/// `r"…"` / `r#"…"#` / `br#"…"#` opener at the start of `s`: returns
+/// the hash count.  `rb"` is not a Rust prefix and returns None (it
+/// lexes as the ident `rb` followed by a cooked string).
+fn raw_str_hashes(s: &str) -> Option<usize> {
+    let t = s
+        .strip_prefix("br")
+        .or_else(|| s.strip_prefix('r'))?
+        .as_bytes();
+    let h = t.iter().take_while(|&&c| c == b'#').count();
+    (t.get(h) == Some(&b'"')).then_some(h)
+}
+
+/// Scan a cooked string from its opening quote at byte `i`; returns
+/// (index past the closing quote, updated line) or None when
+/// unterminated.
+fn cooked_string(src: &str, i: usize, mut line: u32) -> Option<(usize, u32)> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut j = i + 1;
+    while j < n {
+        match b[j] {
+            b'\\' => {
+                // the escaped char may itself be a newline (line
+                // continuation inside a multi-line string)
+                if j + 1 < n && b[j + 1] == b'\n' {
+                    line += 1;
+                }
+                j += 2;
+            }
+            b'\n' => {
+                line += 1;
+                j += 1;
+            }
+            b'"' => return Some((j + 1, line)),
+            _ => j += 1,
+        }
+    }
+    None
+}
+
+/// From an opening single quote at byte `i`: a lifetime (`'a`,
+/// `'static`) or a char literal (`'x'`, `'\n'`, `'\u{..}'`).  Returns
+/// (index past the token, token) or None when unterminated.
+fn char_or_lifetime(src: &str, i: usize, line: u32) -> Option<(usize, Tok)> {
+    let b = src.as_bytes();
+    let n = b.len();
+    let nxt = b.get(i + 1).copied().unwrap_or(0);
+    let after = b.get(i + 2).copied().unwrap_or(0);
+    if (nxt.is_ascii_alphabetic() || nxt == b'_') && after != b'\'' {
+        let mut j = i + 1;
+        while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+            j += 1;
+        }
+        let tok = Tok { kind: Kind::Lifetime, text: &src[i..j], line };
+        return Some((j, tok));
+    }
+    let mut j = i + 1;
+    if j < n && b[j] == b'\\' {
+        j += 1;
+        if j < n && b[j] == b'u' {
+            j = src[j..].find('}').map(|k| j + k)?;
+        }
+        j += 1;
+    } else if j < n {
+        j += src[j..].chars().next().map_or(1, char::len_utf8);
+    }
+    if j >= n || b[j] != b'\'' {
+        return None;
+    }
+    let tok = Tok { kind: Kind::Char, text: &src[i..j + 1], line };
+    Some((j + 1, tok))
+}
+
+/// Lex a numeric literal starting at a digit.  The `e`/`E` handling
+/// lets exponent signs (`1e-9`, `2.5E+3`) stay part of the token.
+fn number(src: &str, i: usize, line: u32) -> (usize, Tok) {
+    let b = src.as_bytes();
+    let n = b.len();
+    let hex = src[i..].len() >= 2 && b[i] == b'0' && (b[i + 1] | 0x20) == b'x';
+    let mut j = i;
+    while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+        j += 1;
+        if (b[j - 1] | 0x20) == b'e'
+            && !hex
+            && j < n
+            && (b[j] == b'+' || b[j] == b'-')
+            && j + 1 < n
+            && b[j + 1].is_ascii_digit()
+        {
+            j += 1;
+        }
+    }
+    if j < n
+        && b[j] == b'.'
+        && !src[j..].starts_with("..")
+        && !(j + 1 < n && (b[j + 1].is_ascii_alphabetic() || b[j + 1] == b'_'))
+    {
+        j += 1;
+        while j < n && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+            j += 1;
+            if (b[j - 1] | 0x20) == b'e'
+                && j < n
+                && (b[j] == b'+' || b[j] == b'-')
+                && j + 1 < n
+                && b[j + 1].is_ascii_digit()
+            {
+                j += 1;
+            }
+        }
+    }
+    let text = &src[i..j];
+    let kind = if is_float_literal(text) { Kind::FNum } else { Kind::Num };
+    (j, Tok { kind, text, line })
+}
+
+/// Float-literal shape test over a whole numeric token: digits with a
+/// decimal point, an exponent, or an `f32`/`f64` suffix.  (`1` and
+/// `0x1f` are Num; `1.0`, `1e9`, `1.`, and `3f64` are FNum.)
+fn is_float_literal(t: &str) -> bool {
+    let b = t.as_bytes();
+    if b.is_empty() || !b[0].is_ascii_digit() {
+        return false;
+    }
+    let mut i = 0usize;
+    while i < b.len() && (b[i].is_ascii_digit() || b[i] == b'_') {
+        i += 1;
+    }
+    let mut floatish = false;
+    if i < b.len() && b[i] == b'.' {
+        i += 1;
+        floatish = true;
+        if i < b.len() && b[i].is_ascii_digit() {
+            while i < b.len() && (b[i].is_ascii_digit() || b[i] == b'_') {
+                i += 1;
+            }
+        }
+    }
+    if i < b.len() && (b[i] | 0x20) == b'e' {
+        let mut j = i + 1;
+        if j < b.len() && (b[j] == b'+' || b[j] == b'-') {
+            j += 1;
+        }
+        let digits = j;
+        while j < b.len() && (b[j].is_ascii_digit() || b[j] == b'_') {
+            j += 1;
+        }
+        if j > digits {
+            i = j;
+            floatish = true;
+        }
+    }
+    match &t[i..] {
+        "" => floatish,
+        "f32" | "f64" => true,
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, String)> {
+        let (toks, _) = lex(src, "fixture.rs").unwrap();
+        toks.iter().map(|t| (t.kind, t.text.to_string())).collect()
+    }
+
+    #[test]
+    fn raw_strings_hide_comment_markers_and_quotes() {
+        let src = r##"let s = r#"not a // comment, "quoted""#;"##;
+        let (toks, comments) = lex(src, "fixture.rs").unwrap();
+        assert!(comments.is_empty());
+        let texts: Vec<_> = toks.iter().map(|t| t.text).collect();
+        assert_eq!(texts, ["let", "s", "=", "", ";"]);
+        assert_eq!(toks[3].kind, Kind::Str);
+    }
+
+    #[test]
+    fn byte_literals_lex_as_strings_and_chars() {
+        let got = kinds(r#"(b"bytes", br"raw", b'x', rb_ident)"#);
+        let want = [
+            (Kind::Punct, "("),
+            (Kind::Str, ""),
+            (Kind::Punct, ","),
+            (Kind::Str, ""),
+            (Kind::Punct, ","),
+            (Kind::Char, "'x'"),
+            (Kind::Punct, ","),
+            (Kind::Ident, "rb_ident"),
+            (Kind::Punct, ")"),
+        ];
+        assert_eq!(
+            got,
+            want.map(|(k, t)| (k, t.to_string())).to_vec()
+        );
+    }
+
+    #[test]
+    fn nested_block_comments_balance() {
+        let src = "/* outer /* inner */ still outer */ fn f() {}";
+        let (toks, comments) = lex(src, "fixture.rs").unwrap();
+        assert!(comments.is_empty());
+        assert_eq!(toks[0].text, "fn");
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let got = kinds(r"<'a> &'static str; 'x' '\n' '\u{1F600}'");
+        let lifetimes: Vec<_> = got
+            .iter()
+            .filter(|(k, _)| *k == Kind::Lifetime)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        let chars: Vec<_> = got
+            .iter()
+            .filter(|(k, _)| *k == Kind::Char)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(lifetimes, ["'a", "'static"]);
+        assert_eq!(chars, ["'x'", r"'\n'", r"'\u{1F600}'"]);
+    }
+
+    #[test]
+    fn numeric_classification() {
+        let got = kinds("1 1_000u64 0x1f 1.0 1. 1e9 2.5E+3 3f64 9e-2");
+        let nums: Vec<_> =
+            got.iter().map(|(k, t)| (*k, t.as_str())).collect();
+        assert_eq!(
+            nums,
+            [
+                (Kind::Num, "1"),
+                (Kind::Num, "1_000u64"),
+                (Kind::Num, "0x1f"),
+                (Kind::FNum, "1.0"),
+                (Kind::FNum, "1."),
+                (Kind::FNum, "1e9"),
+                (Kind::FNum, "2.5E+3"),
+                (Kind::FNum, "3f64"),
+                (Kind::FNum, "9e-2"),
+            ]
+        );
+    }
+
+    #[test]
+    fn joined_punct_and_ranges() {
+        let got = kinds("a::b == c -> d .. e && 0..n");
+        let puncts: Vec<_> = got
+            .iter()
+            .filter(|(k, _)| *k == Kind::Punct)
+            .map(|(_, t)| t.as_str())
+            .collect();
+        assert_eq!(puncts, ["::", "==", "->", "..", "&&", ".."]);
+    }
+
+    #[test]
+    fn line_numbers_survive_string_continuations() {
+        let src = "let a = \"x\\\n  y\";\nfn b() {}\n";
+        let (toks, _) = lex(src, "fixture.rs").unwrap();
+        let fn_tok = toks.iter().find(|t| t.text == "fn").unwrap();
+        assert_eq!(fn_tok.line, 3);
+    }
+
+    #[test]
+    fn comments_collect_text_and_line() {
+        let src = "// first\nlet x = 1; // analysis: allow(float-eq, \"y\")\n";
+        let (_, comments) = lex(src, "fixture.rs").unwrap();
+        assert_eq!(comments.len(), 2);
+        assert_eq!(comments[0].line, 1);
+        assert_eq!(comments[0].text, " first");
+        assert_eq!(comments[1].line, 2);
+        assert!(comments[1].text.contains("analysis: allow"));
+    }
+
+    #[test]
+    fn unterminated_inputs_error() {
+        assert!(lex("\"open", "f.rs").is_err());
+        assert!(lex("r#\"open", "f.rs").is_err());
+        assert!(lex("/* open", "f.rs").is_err());
+        assert!(lex("'", "f.rs").is_err());
+    }
+}

@@ -1,0 +1,553 @@
+//! In-tree static analysis: the determinism & concurrency lint pass
+//! behind `edgeward analyze` (the module README).
+//!
+//! Every result this crate ships — Table VII cells, suite goldens,
+//! metro reports, `BENCH_serve.json` — is gated on byte-exact
+//! determinism, and the hot paths run on scoped thread pools, atomics,
+//! and a timing wheel.  One unordered-map iteration feeding an emitter
+//! or one mis-ordered atomic silently breaks the guarantee the whole
+//! golden corpus rests on.  This pass mechanically enforces the
+//! contract; see the crate docs ("Determinism contract") for the rule
+//! rationale.  The rules:
+//!
+//! * `unordered-emit` — `HashMap`/`HashSet` in report-emitting modules
+//!   (`benchkit/`, `loadtest/`, `metrics/`, `metro/`, `report/`,
+//!   `serialize/`, `suite/`): iteration order would leak
+//!   nondeterminism into emitted bytes.
+//! * `wall-clock-in-pure` — `Instant::now` / `SystemTime` outside the
+//!   real-time allowlist (`coordinator/delay.rs`, `main.rs`,
+//!   `runtime/`, `benchkit/`): wall-clock reads make pure-path results
+//!   machine-dependent.
+//! * `float-eq` — `==` / `!=` against a float literal: only documented
+//!   exact sentinels (unit factors, `fract() == 0.0`) may compare
+//!   floats exactly, and each such site carries a justification.
+//! * `lossy-tick-cast` — ad-hoc `as Tick` casts, or `ceil()/round()/
+//!   floor()/as_nanos()`-style results cast to a narrow integer, in
+//!   tick-handling modules: `topology::scale_ticks` is the blessed
+//!   conversion; anything else documents its bound.
+//! * `relaxed-sync` — `Ordering::Relaxed` outside the allocation
+//!   counter: each use states its happens-before edge or why none is
+//!   needed.
+//! * `unscoped-spawn` — `thread::spawn` / `thread::Builder` outside
+//!   `runtime/`: prefer `std::thread::scope`; long-lived serving
+//!   threads justify their join point.
+//! * `bare-unwrap` — `.unwrap()` / `.expect("…")` in library (non-test,
+//!   non-`main.rs`) code: return a typed [`Error`] where a caller can
+//!   hit it, or justify the locally-provable invariant.
+//! * `unjustified-allow` — the meta-rule: a suppression comment that is
+//!   malformed, names an unknown rule, or omits its justification is
+//!   itself a finding.  Suppressions can never be suppressed.
+//!
+//! ## Suppressing a finding
+//!
+//! Add a line comment on the flagged line or the line above:
+//!
+//! ```text
+//! // analysis: allow(bare-unwrap, "guard held; non-empty by the check above")
+//! ```
+//!
+//! The justification string is mandatory — the pass exists to make
+//! every exception reviewable, not to provide an escape hatch.
+//!
+//! ## Independent mirror
+//!
+//! `python/tools/analyze_mirror.py` reimplements the lexer, the rules,
+//! and the suppression grammar from scratch (the `suite_oracle.py`
+//! idiom) and runs in CI without a Cargo toolchain; both
+//! implementations must report a clean tree.
+
+pub mod lex;
+pub mod rules;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::serialize::json::Value;
+
+pub use rules::{Finding, RULES};
+
+/// The suppression-comment marker: `// analysis: allow(<rule>, "<why>")`.
+const MARKER: &str = "analysis:";
+
+/// Resolve `--rules` (comma-separated, `None` = all) into the active
+/// set, rejecting unknown names.
+pub fn active_rules(csv: Option<&str>) -> Result<BTreeSet<String>> {
+    let Some(csv) = csv else {
+        return Ok(RULES.iter().map(|r| r.to_string()).collect());
+    };
+    let mut active = BTreeSet::new();
+    for name in csv.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        if !RULES.contains(&name) {
+            return Err(Error::Analysis(format!(
+                "unknown rule {name:?} (known: {})",
+                RULES.join(", ")
+            )));
+        }
+        active.insert(name.to_string());
+    }
+    if active.is_empty() {
+        return Err(Error::Analysis("--rules names no rules".into()));
+    }
+    Ok(active)
+}
+
+/// The deterministic result of one pass: findings sorted by
+/// (file, line, rule), plus the suppression count and the active rule
+/// set.
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub suppressed: usize,
+    pub rules: Vec<String>,
+    pub root: String,
+}
+
+impl Report {
+    /// No findings — the tree passes `--check`.
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// The human-readable report (one line per finding + a summary
+    /// footer), identical in shape to the Python mirror's output.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            let _ = writeln!(
+                out,
+                "{:<18} {}:{}  {}",
+                f.rule, f.file, f.line, f.message
+            );
+        }
+        let _ = writeln!(
+            out,
+            "{} finding(s), {} suppressed, {} rule(s) active",
+            self.findings.len(),
+            self.suppressed,
+            self.rules.len()
+        );
+        out
+    }
+
+    /// The `--json` document (sorted keys, stable across runs).
+    pub fn to_value(&self) -> Value {
+        let mut counts: BTreeMap<&str, u64> = BTreeMap::new();
+        for f in &self.findings {
+            *counts.entry(f.rule).or_insert(0) += 1;
+        }
+        let mut counts_v = Value::object();
+        for (rule, n) in counts {
+            counts_v.set(rule, n);
+        }
+        let findings: Vec<Value> = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut o = Value::object();
+                o.set("file", f.file.as_str());
+                o.set("line", f.line);
+                o.set("message", f.message.as_str());
+                o.set("rule", f.rule);
+                o
+            })
+            .collect();
+        let mut doc = Value::object();
+        doc.set("counts", counts_v);
+        doc.set("findings", Value::Array(findings));
+        doc.set("root", self.root.as_str());
+        doc.set(
+            "rules",
+            Value::Array(
+                self.rules.iter().map(|r| Value::String(r.clone())).collect(),
+            ),
+        );
+        doc.set("suppressed", self.suppressed as u64);
+        doc
+    }
+}
+
+/// Extract `allow()` suppressions from a file's comments; malformed
+/// ones become `unjustified-allow` findings.  A valid allow suppresses
+/// rule R on its own line and the next line (covering both the
+/// trailing-comment and the comment-above styles).
+fn parse_suppressions(
+    comments: &[lex::Comment],
+    path: &str,
+    findings: &mut Vec<Finding>,
+) -> BTreeSet<(&'static str, u32)> {
+    let mut allowed = BTreeSet::new();
+    for c in comments {
+        let t = c.text.trim();
+        let Some(body) = t.strip_prefix(MARKER) else {
+            continue;
+        };
+        let body = body.trim();
+        let mut ok = false;
+        if let Some(inner) =
+            body.strip_prefix("allow(").and_then(|b| b.strip_suffix(')'))
+        {
+            let (rule_txt, just) = match inner.find(',') {
+                Some(comma) => {
+                    (inner[..comma].trim(), inner[comma + 1..].trim())
+                }
+                None => (inner.trim(), ""),
+            };
+            let Some(&rule) = RULES.iter().find(|r| **r == rule_txt) else {
+                findings.push(Finding {
+                    file: path.to_string(),
+                    line: c.line,
+                    rule: "unjustified-allow",
+                    message: format!(
+                        "allow() names unknown rule {rule_txt:?}"
+                    ),
+                });
+                continue;
+            };
+            let justified = just.len() >= 2
+                && just.starts_with('"')
+                && just.ends_with('"')
+                && !just[1..just.len() - 1].trim().is_empty();
+            if justified {
+                allowed.insert((rule, c.line));
+                allowed.insert((rule, c.line + 1));
+                ok = true;
+            }
+        }
+        if !ok {
+            findings.push(Finding {
+                file: path.to_string(),
+                line: c.line,
+                rule: "unjustified-allow",
+                message: "suppression needs a justification: \
+                          // analysis: allow(<rule>, \"<why>\")"
+                    .to_string(),
+            });
+        }
+    }
+    allowed
+}
+
+/// Analyze one source text under a root-relative `path` label.
+/// Returns (unsuppressed findings, suppressed count).
+pub fn analyze_source(
+    path: &str,
+    src: &str,
+    active: &BTreeSet<String>,
+) -> Result<(Vec<Finding>, usize)> {
+    let (toks, comments) = lex::lex(src, path)?;
+    let in_test = rules::mark_test_regions(&toks);
+    let mut findings = Vec::new();
+    let allowed = parse_suppressions(&comments, path, &mut findings);
+    if !active.contains("unjustified-allow") {
+        findings.clear();
+    }
+    let mut suppressed = 0;
+    for f in rules::run_rules(path, &toks, &in_test, active) {
+        if allowed.contains(&(f.rule, f.line)) {
+            suppressed += 1;
+        } else {
+            findings.push(f);
+        }
+    }
+    Ok((findings, suppressed))
+}
+
+/// Every `.rs` file under `root`, as sorted root-relative paths with
+/// `/` separators (the rule-scoping path format).
+pub fn discover(root: &Path) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let entries = fs::read_dir(&dir)
+            .map_err(|e| Error::io(dir.display().to_string(), e))?;
+        for entry in entries {
+            let entry = entry
+                .map_err(|e| Error::io(dir.display().to_string(), e))?;
+            let p = entry.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                let rel: Vec<String> = p
+                    .strip_prefix(root)
+                    .map_err(|_| {
+                        Error::Analysis(format!(
+                            "{} escapes root {}",
+                            p.display(),
+                            root.display()
+                        ))
+                    })?
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                    .collect();
+                out.push(rel.join("/"));
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Run the pass over every `.rs` file under `root` with the active
+/// rule set; findings come back sorted by (file, line, rule).
+pub fn analyze_tree(
+    root: &Path,
+    active: &BTreeSet<String>,
+) -> Result<Report> {
+    if !root.is_dir() {
+        return Err(Error::Analysis(format!(
+            "source root {} is not a directory",
+            root.display()
+        )));
+    }
+    let mut findings = Vec::new();
+    let mut suppressed = 0;
+    for rel in discover(root)? {
+        let full = root.join(&rel);
+        let src = fs::read_to_string(&full)
+            .map_err(|e| Error::io(full.display().to_string(), e))?;
+        let (f, s) = analyze_source(&rel, &src, active)?;
+        findings.extend(f);
+        suppressed += s;
+    }
+    findings.sort();
+    Ok(Report {
+        findings,
+        suppressed,
+        rules: active.iter().cloned().collect(),
+        root: root.display().to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all() -> BTreeSet<String> {
+        active_rules(None).unwrap()
+    }
+
+    /// Run one fixture; returns (findings, suppressed).
+    fn run(path: &str, src: &str) -> (Vec<Finding>, usize) {
+        analyze_source(path, src, &all()).unwrap()
+    }
+
+    /// Assert `src` under `path` yields exactly one finding of `rule`,
+    /// and that the same source with `allow_line` prepended suppresses
+    /// it (one positive + one suppressed fixture per rule).
+    fn positive_then_suppressed(path: &str, src: &str, rule: &str) {
+        let (found, suppressed) = run(path, src);
+        assert_eq!(
+            found.len(),
+            1,
+            "{rule} positive fixture: {found:?}"
+        );
+        assert_eq!(found[0].rule, rule);
+        assert_eq!(found[0].file, path);
+
+        let allow = format!(
+            "// analysis: allow({rule}, \"fixture: known-benign\")\n{src}"
+        );
+        let (found, suppressed2) = run(path, &allow);
+        assert!(
+            found.is_empty(),
+            "{rule} suppressed fixture still fires: {found:?}"
+        );
+        assert_eq!(suppressed2, suppressed + 1);
+    }
+
+    #[test]
+    fn unordered_emit_fixture() {
+        positive_then_suppressed(
+            "suite/fx.rs",
+            "fn f(m: &HashMap<u32, u32>) -> usize { m.len() }\n",
+            "unordered-emit",
+        );
+        // outside an emit module the same source is clean
+        let (found, _) = run(
+            "scheduler/fx.rs",
+            "fn f(m: &HashMap<u32, u32>) -> usize { m.len() }\n",
+        );
+        assert!(found.is_empty());
+    }
+
+    #[test]
+    fn wall_clock_fixture() {
+        positive_then_suppressed(
+            "scheduler/fx.rs",
+            "fn f() -> Instant { Instant::now() }\n",
+            "wall-clock-in-pure",
+        );
+        let (found, _) =
+            run("runtime/fx.rs", "fn f() -> Instant { Instant::now() }\n");
+        assert!(found.is_empty(), "runtime/ is allowlisted");
+    }
+
+    #[test]
+    fn float_eq_fixture() {
+        positive_then_suppressed(
+            "metrics/fx.rs",
+            "fn f(x: f64) -> bool { x == 1.0 }\n",
+            "float-eq",
+        );
+        // integer comparison never fires
+        let (found, _) =
+            run("metrics/fx.rs", "fn f(x: u64) -> bool { x == 1 }\n");
+        assert!(found.is_empty());
+    }
+
+    #[test]
+    fn lossy_tick_cast_fixture() {
+        positive_then_suppressed(
+            "scheduler/fx.rs",
+            "fn f(t: f64) -> Tick { t as Tick }\n",
+            "lossy-tick-cast",
+        );
+        positive_then_suppressed(
+            "loadtest/fx.rs",
+            "fn f(t: f64) -> u64 { t.ceil() as u64 }\n",
+            "lossy-tick-cast",
+        );
+        // plain widening casts outside the narrowing pattern are fine
+        let (found, _) =
+            run("scheduler/fx.rs", "fn f(t: u32) -> u64 { t as u64 }\n");
+        assert!(found.is_empty());
+    }
+
+    #[test]
+    fn relaxed_sync_fixture() {
+        positive_then_suppressed(
+            "coordinator/fx.rs",
+            "fn f(c: &AtomicUsize) -> usize { c.load(Ordering::Relaxed) }\n",
+            "relaxed-sync",
+        );
+        let (found, _) = run(
+            "allocation/count.rs",
+            "fn f(c: &AtomicUsize) -> usize { c.load(Ordering::Relaxed) }\n",
+        );
+        assert!(found.is_empty(), "the allocation counter is exempt");
+    }
+
+    #[test]
+    fn unscoped_spawn_fixture() {
+        positive_then_suppressed(
+            "coordinator/fx.rs",
+            "fn f() { std::thread::spawn(|| {}); }\n",
+            "unscoped-spawn",
+        );
+        positive_then_suppressed(
+            "coordinator/fx.rs",
+            "fn f() { let b = std::thread::Builder::new(); }\n",
+            "unscoped-spawn",
+        );
+        let (found, _) = run(
+            "coordinator/fx.rs",
+            "fn f() { std::thread::scope(|s| { s.spawn(|| {}); }); }\n",
+        );
+        assert!(found.is_empty(), "scoped pools are the blessed form");
+    }
+
+    #[test]
+    fn bare_unwrap_fixture() {
+        positive_then_suppressed(
+            "scheduler/fx.rs",
+            "fn f(v: Option<u32>) -> u32 { v.unwrap() }\n",
+            "bare-unwrap",
+        );
+        positive_then_suppressed(
+            "scheduler/fx.rs",
+            "fn f(v: Option<u32>) -> u32 { v.expect(\"msg\") }\n",
+            "bare-unwrap",
+        );
+        // a same-named parser method taking a non-string is not expect()
+        let (found, _) = run(
+            "serialize/fx.rs",
+            "fn f(p: &mut P) { p.expect(b'{'); }\n",
+        );
+        assert!(found.is_empty(), "Parser::expect(b'..') is not flagged");
+    }
+
+    #[test]
+    fn unjustified_allow_fixture() {
+        // missing justification: the suppression itself is the finding
+        let (found, _) = run(
+            "scheduler/fx.rs",
+            "// analysis: allow(bare-unwrap)\nfn f(v: Option<u32>) -> u32 { v.unwrap() }\n",
+        );
+        let rules: Vec<_> = found.iter().map(|f| f.rule).collect();
+        assert!(rules.contains(&"unjustified-allow"), "{found:?}");
+        assert!(
+            rules.contains(&"bare-unwrap"),
+            "an unjustified allow must not suppress: {found:?}"
+        );
+
+        // unknown rule name
+        let (found, _) = run(
+            "scheduler/fx.rs",
+            "// analysis: allow(no-such-rule, \"why\")\nfn f() {}\n",
+        );
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].rule, "unjustified-allow");
+
+        // a well-formed justified allow is itself clean
+        let (found, _) = run(
+            "scheduler/fx.rs",
+            "// analysis: allow(float-eq, \"documented exact sentinel\")\nfn f(x: f64) -> bool { x == 1.0 }\n",
+        );
+        assert!(found.is_empty());
+    }
+
+    #[test]
+    fn cfg_test_regions_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t(v: Option<u32>) -> u32 { v.unwrap() }\n}\n";
+        let (found, _) = run("scheduler/fx.rs", src);
+        assert!(found.is_empty(), "{found:?}");
+    }
+
+    #[test]
+    fn report_renders_sorted_and_counts() {
+        let src = "fn f(v: Option<u32>, x: f64) -> bool { v.unwrap(); x == 1.0 }\n";
+        let (mut found, _) = run("metrics/fx.rs", src);
+        found.sort();
+        let report = Report {
+            findings: found,
+            suppressed: 0,
+            rules: all().into_iter().collect(),
+            root: "fixture".into(),
+        };
+        assert!(!report.clean());
+        let text = report.render();
+        assert!(text.contains("bare-unwrap"));
+        assert!(text.contains("float-eq"));
+        assert!(text.ends_with("2 finding(s), 0 suppressed, 8 rule(s) active\n"));
+        let json = report.to_value().to_string_pretty();
+        assert!(json.contains("\"bare-unwrap\": 1"));
+        assert!(json.contains("\"float-eq\": 1"));
+    }
+
+    #[test]
+    fn unknown_rule_csv_is_rejected() {
+        assert!(active_rules(Some("float-eq,bogus")).is_err());
+        assert!(active_rules(Some("")).is_err());
+        let set = active_rules(Some("float-eq, bare-unwrap")).unwrap();
+        assert_eq!(set.len(), 2);
+    }
+
+    /// The meta-test: the committed tree itself must pass `--check`
+    /// with the full rule set — zero findings, zero unjustified
+    /// suppressions.  (Fixing or justifying every violation is part of
+    /// landing a rule; this pins that the tree stays clean.)
+    #[test]
+    #[cfg_attr(miri, ignore)] // walks and lexes the whole source tree
+    fn committed_tree_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let report = analyze_tree(&root, &all()).unwrap();
+        assert!(report.clean(), "\n{}", report.render());
+        assert!(report.rules.len() >= 7, "at least 7 rules stay active");
+        assert!(
+            report.suppressed > 0,
+            "the committed tree documents its justified exceptions"
+        );
+    }
+}

@@ -1,0 +1,374 @@
+//! Rule engine: the determinism & concurrency rule set the golden
+//! corpus depends on, over the token stream from [`super::lex`].
+//!
+//! This file is the normative statement of every rule and every
+//! scoping decision; `python/tools/analyze_mirror.py` is an
+//! independent from-scratch mirror (like `suite_oracle.py` for the
+//! scenario pipeline) and must be kept in lockstep when a rule is
+//! added or re-scoped.
+//!
+//! Paths are relative to the source root (`rust/src`), always with
+//! `/` separators.  Tokens inside `#[cfg(test)]` items never match:
+//! tests may unwrap, compare floats, and spawn freely.
+
+use std::collections::BTreeSet;
+
+use super::lex::{Kind, Tok};
+
+/// Every rule name, in report order.  `unjustified-allow` is the
+/// meta-rule: a malformed or justification-free suppression comment is
+/// itself a finding.
+pub const RULES: [&str; 8] = [
+    "unordered-emit",
+    "wall-clock-in-pure",
+    "float-eq",
+    "lossy-tick-cast",
+    "relaxed-sync",
+    "unscoped-spawn",
+    "bare-unwrap",
+    "unjustified-allow",
+];
+
+/// Modules whose output feeds `write_value` or a rendered report:
+/// iteration order inside them must be deterministic, so `HashMap` /
+/// `HashSet` are banned in favor of the B-tree forms (or an explicit
+/// sort before emitting).
+const EMIT_MODULES: [&str; 7] = [
+    "benchkit/",
+    "loadtest/",
+    "metrics/",
+    "metro/",
+    "report/",
+    "serialize/",
+    "suite/",
+];
+
+/// The real-time allowlist for `wall-clock-in-pure`: the Instant-keyed
+/// delay queue, the CLI binary, the PJRT runtime, and the measurement
+/// harness are *supposed* to read the clock.  Everything else —
+/// notably the virtual-time loadtest and every solver — must not.
+const WALL_CLOCK_ALLOWED_FILES: [&str; 2] = ["coordinator/delay.rs", "main.rs"];
+const WALL_CLOCK_ALLOWED_DIRS: [&str; 2] = ["runtime/", "benchkit/"];
+
+/// Modules where `lossy-tick-cast` applies: everywhere ticks are
+/// computed or consumed.  `scale_ticks` (topology) is the blessed
+/// conversion primitive; ad-hoc `as Tick` casts need a justification.
+const TICK_CAST_MODULES: [&str; 5] = [
+    "coordinator/",
+    "loadtest/",
+    "scenario/",
+    "scheduler/",
+    "topology/",
+];
+
+/// `f()` sources whose result is wider than (or real-valued next to)
+/// the integer it is cast into — `x.ceil() as u64` and friends.
+const NARROWING_SOURCES: [&str; 7] = [
+    "ceil",
+    "round",
+    "floor",
+    "as_nanos",
+    "as_micros",
+    "as_millis",
+    "as_secs_f64",
+];
+
+/// Narrow integer cast targets the `lossy-tick-cast` rule watches.
+const NARROW_INTS: [&str; 6] = ["u64", "u32", "usize", "i64", "i32", "Tick"];
+
+/// One finding; `Ord` gives the deterministic (file, line, rule)
+/// report order.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// Per-token flag: inside an item annotated `#[cfg(test)]` — the
+/// attribute through the end of the annotated item (its balanced
+/// `{...}` block, or a top-level `;` for brace-less items like the
+/// lib's `#[cfg(test)] #[global_allocator] static ...;`).
+pub fn mark_test_regions(toks: &[Tok]) -> Vec<bool> {
+    let mut in_test = vec![false; toks.len()];
+    for i in 0..toks.len() {
+        let is_cfg_test = toks[i].text == "#"
+            && i + 5 < toks.len()
+            && toks[i + 1].text == "["
+            && toks[i + 2].text == "cfg"
+            && toks[i + 3].text == "("
+            && toks[i + 4].text == "test"
+            && toks[i + 5].text == ")";
+        if !is_cfg_test {
+            continue;
+        }
+        let mut j = i + 6;
+        while j < toks.len() && toks[j].text != "]" {
+            j += 1;
+        }
+        let mut brace = 0i64;
+        let mut k = j + 1;
+        while k < toks.len() {
+            match toks[k].text {
+                "{" => brace += 1,
+                "}" => {
+                    brace -= 1;
+                    if brace == 0 {
+                        break;
+                    }
+                }
+                ";" if brace == 0 => break,
+                _ => {}
+            }
+            k += 1;
+        }
+        let end = (k + 1).min(toks.len());
+        for flag in &mut in_test[i..end] {
+            *flag = true;
+        }
+    }
+    in_test
+}
+
+fn in_dirs(path: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| path.starts_with(p))
+}
+
+/// Run every active rule over one file's tokens.  Suppressions are the
+/// caller's job ([`super::analyze_source`]); this returns raw matches.
+pub fn run_rules(
+    path: &str,
+    toks: &[Tok],
+    in_test: &[bool],
+    active: &BTreeSet<String>,
+) -> Vec<Finding> {
+    const NIL: Tok<'static> =
+        Tok { kind: Kind::Punct, text: "", line: 0 };
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut emit = |rule: &'static str, line: u32, message: String| {
+        findings.push(Finding { file: path.to_string(), line, rule, message });
+    };
+
+    for i in 0..toks.len() {
+        if in_test[i] {
+            continue;
+        }
+        let t = toks[i];
+        let nxt = |k: usize| toks.get(i + k).copied().unwrap_or(NIL);
+        let prv = |k: usize| {
+            if i >= k {
+                toks[i - k]
+            } else {
+                NIL
+            }
+        };
+
+        if active.contains("unordered-emit")
+            && t.kind == Kind::Ident
+            && (t.text == "HashMap" || t.text == "HashSet")
+            && in_dirs(path, &EMIT_MODULES)
+        {
+            emit(
+                "unordered-emit",
+                t.line,
+                format!(
+                    "{} in a report-emitting module: iteration order is \
+                     nondeterministic; use BTreeMap/BTreeSet or sort \
+                     before emitting",
+                    t.text
+                ),
+            );
+        }
+        if active.contains("wall-clock-in-pure")
+            && t.kind == Kind::Ident
+            && !WALL_CLOCK_ALLOWED_FILES.contains(&path)
+            && !in_dirs(path, &WALL_CLOCK_ALLOWED_DIRS)
+        {
+            if t.text == "Instant"
+                && nxt(1).text == "::"
+                && nxt(2).text == "now"
+            {
+                emit(
+                    "wall-clock-in-pure",
+                    t.line,
+                    "Instant::now() outside the real-time allowlist: \
+                     wall-clock reads make results machine-dependent"
+                        .to_string(),
+                );
+            } else if t.text == "SystemTime" {
+                emit(
+                    "wall-clock-in-pure",
+                    t.line,
+                    "SystemTime outside the real-time allowlist: \
+                     wall-clock reads make results machine-dependent"
+                        .to_string(),
+                );
+            }
+        }
+        if active.contains("float-eq")
+            && t.kind == Kind::Punct
+            && (t.text == "==" || t.text == "!=")
+            && (prv(1).kind == Kind::FNum || nxt(1).kind == Kind::FNum)
+        {
+            emit(
+                "float-eq",
+                t.line,
+                format!(
+                    "{} against a float literal: exact float comparison \
+                     is representation-sensitive; compare integers, \
+                     bits, or a documented exact set",
+                    t.text
+                ),
+            );
+        }
+        if active.contains("lossy-tick-cast")
+            && t.kind == Kind::Ident
+            && t.text == "as"
+            && in_dirs(path, &TICK_CAST_MODULES)
+        {
+            let target = nxt(1).text;
+            if target == "Tick" {
+                emit(
+                    "lossy-tick-cast",
+                    t.line,
+                    "`as Tick` cast: silent truncation/saturation; use \
+                     scale_ticks or a checked conversion"
+                        .to_string(),
+                );
+            } else if NARROW_INTS.contains(&target)
+                && prv(1).text == ")"
+                && prv(2).text == "("
+                && prv(3).kind == Kind::Ident
+                && NARROWING_SOURCES.contains(&prv(3).text)
+            {
+                emit(
+                    "lossy-tick-cast",
+                    t.line,
+                    format!(
+                        "`{}() as {}` narrows a wider value: silent \
+                         truncation on overflow",
+                        prv(3).text,
+                        target
+                    ),
+                );
+            }
+        }
+        if active.contains("relaxed-sync")
+            && t.kind == Kind::Ident
+            && t.text == "Ordering"
+            && nxt(1).text == "::"
+            && nxt(2).text == "Relaxed"
+            && path != "allocation/count.rs"
+        {
+            emit(
+                "relaxed-sync",
+                t.line,
+                "Ordering::Relaxed outside a pure counter: state an \
+                 explicit happens-before edge (Acquire/Release) or \
+                 justify why none is needed"
+                    .to_string(),
+            );
+        }
+        if active.contains("unscoped-spawn")
+            && t.kind == Kind::Ident
+            && t.text == "thread"
+            && nxt(1).text == "::"
+            && (nxt(2).text == "spawn" || nxt(2).text == "Builder")
+            && !path.starts_with("runtime/")
+        {
+            emit(
+                "unscoped-spawn",
+                t.line,
+                format!(
+                    "unscoped thread (thread::{}) outside runtime/: \
+                     prefer std::thread::scope, or justify the join \
+                     point",
+                    nxt(2).text
+                ),
+            );
+        }
+        if active.contains("bare-unwrap")
+            && t.kind == Kind::Punct
+            && t.text == "."
+            && path != "main.rs"
+        {
+            let name = nxt(1);
+            if name.kind == Kind::Ident
+                && name.text == "unwrap"
+                && nxt(2).text == "("
+                && nxt(3).text == ")"
+            {
+                emit(
+                    "bare-unwrap",
+                    name.line,
+                    ".unwrap() in library code: return a typed Error or \
+                     justify the locally-provable invariant"
+                        .to_string(),
+                );
+            } else if name.kind == Kind::Ident
+                && name.text == "expect"
+                && nxt(2).text == "("
+                // the string-literal argument is what distinguishes
+                // Option/Result::expect("msg") from same-named methods
+                // (the JSON parser's Parser::expect(b'{')).
+                && nxt(3).kind == Kind::Str
+            {
+                emit(
+                    "bare-unwrap",
+                    name.line,
+                    ".expect() in library code: return a typed Error or \
+                     justify the locally-provable invariant"
+                        .to_string(),
+                );
+            }
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lex::lex;
+
+    fn marks(src: &str) -> (Vec<String>, Vec<bool>) {
+        let (toks, _) = lex(src, "fixture.rs").unwrap();
+        let flags = mark_test_regions(&toks);
+        let texts = toks.iter().map(|t| t.text.to_string()).collect();
+        (texts, flags)
+    }
+
+    #[test]
+    fn cfg_test_marks_braced_items() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let (texts, flags) = marks(src);
+        let flag_of = |needle: &str| {
+            let i = texts.iter().position(|t| t == needle).unwrap();
+            flags[i]
+        };
+        assert!(!flag_of("live"));
+        assert!(flag_of("tests"));
+        assert!(flag_of("t"));
+        assert!(!flag_of("after"));
+    }
+
+    #[test]
+    fn cfg_test_marks_braceless_statics() {
+        // the lib.rs pattern: an annotated static with no brace block
+        let src = "#[cfg(test)]\n#[global_allocator]\nstatic A: B = B;\nfn after() {}\n";
+        let (texts, flags) = marks(src);
+        let a = texts.iter().position(|t| t == "A").unwrap();
+        let after = texts.iter().position(|t| t == "after").unwrap();
+        assert!(flags[a]);
+        assert!(!flags[after]);
+    }
+
+    #[test]
+    fn cfg_test_attr_with_args_is_not_a_region() {
+        // #[cfg(test)] only — cfg(feature = "test") etc. must not match
+        let src = "#[cfg(feature = \"x\")]\nfn f(v: Option<u32>) { v.unwrap(); }\n";
+        let (_, flags) = marks(src);
+        assert!(flags.iter().all(|f| !f));
+    }
+}

@@ -162,6 +162,7 @@ impl Bench {
             mad,
             mean,
             min: samples[0],
+            // analysis: allow(bare-unwrap, "run() always collects at least one sample before building the Measurement")
             max: *samples.last().unwrap(),
         };
         println!(
@@ -173,6 +174,7 @@ impl Bench {
             m.iters_per_sample,
         );
         self.results.push(m);
+        // analysis: allow(bare-unwrap, "the push on the previous line makes results non-empty")
         self.results.last().unwrap()
     }
 

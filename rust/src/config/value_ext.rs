@@ -192,7 +192,12 @@ impl<'a> FieldReader<'a> {
     /// Error if any field of the object was never consumed.
     pub fn finish(&self) -> Result<()> {
         let seen = self.seen.borrow();
-        for (k, _) in self.value.as_object().unwrap() {
+        // a non-object has no fields to leave unconsumed — vacuously
+        // finished (and the typed getters already rejected it)
+        let Some(fields) = self.value.as_object() else {
+            return Ok(());
+        };
+        for (k, _) in fields {
             if !seen.contains(k) {
                 return Err(Error::Config(format!(
                     "{}: unknown field {k:?}",

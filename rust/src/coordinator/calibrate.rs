@@ -132,6 +132,7 @@ pub fn lane_calibration_from(
 ) -> Calibration {
     let speed = topo.speed(machine);
     let link = topo.link(machine);
+    // analysis: allow(float-eq, "unit factors are exact sentinels: 1.0 is stored verbatim, never computed")
     if speed == 1.0 && link == 1.0 {
         return *base;
     }

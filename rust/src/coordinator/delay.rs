@@ -9,6 +9,8 @@ use std::collections::BinaryHeap;
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
+use crate::sync::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned};
+
 struct Entry<T> {
     ready_at: Instant,
     seq: u64,
@@ -68,7 +70,7 @@ impl<T> DelayQueue<T> {
 
     /// Schedule an item to become available at `ready_at`.
     pub fn push(&self, ready_at: Instant, item: T) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.inner);
         let seq = g.seq;
         g.seq += 1;
         g.heap.push(Entry { ready_at, seq, item });
@@ -77,13 +79,13 @@ impl<T> DelayQueue<T> {
 
     /// Close the queue: pops drain the remaining items, then return None.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        lock_unpoisoned(&self.inner).closed = true;
         self.cv.notify_all();
     }
 
     /// Pending item count (ready or not).
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().heap.len()
+        lock_unpoisoned(&self.inner).heap.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -93,22 +95,23 @@ impl<T> DelayQueue<T> {
     /// Block until the earliest item is ready (or the queue is closed and
     /// empty, returning None).
     pub fn pop_blocking(&self) -> Option<T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.inner);
         loop {
             match g.heap.peek() {
                 None => {
                     if g.closed {
                         return None;
                     }
-                    g = self.cv.wait(g).unwrap();
+                    g = wait_unpoisoned(&self.cv, g);
                 }
                 Some(head) => {
                     let now = Instant::now();
                     if head.ready_at <= now {
-                        return Some(g.heap.pop().unwrap().item);
+                        return g.heap.pop().map(|e| e.item);
                     }
                     let wait = head.ready_at - now;
-                    let (g2, _) = self.cv.wait_timeout(g, wait).unwrap();
+                    let (g2, _) =
+                        wait_timeout_unpoisoned(&self.cv, g, wait);
                     g = g2;
                 }
             }

@@ -42,7 +42,7 @@ struct EngineThread {
 
 impl Drop for EngineThread {
     fn drop(&mut self) {
-        if let Some(h) = self.handle.lock().unwrap().take() {
+        if let Some(h) = crate::sync::lock_unpoisoned(&self.handle).take() {
             // all senders are gone by now; the thread exits its recv loop
             let _ = h.join();
         }
@@ -56,6 +56,7 @@ impl EngineHandle {
         let (tx, rx) = mpsc::channel::<EngineRequest>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let dir = artifact_dir.to_string();
+        // analysis: allow(unscoped-spawn, "engine lives as long as its handles; EngineThread::drop joins it")
         let handle = std::thread::Builder::new()
             .name(format!("engine-{}", machine.label()))
             .spawn(move || {

@@ -593,6 +593,7 @@ impl Coordinator {
             let cfg_w = cfg.clone();
             let emu_w = emu.clone();
             let backlog_w = backlog.clone();
+            // analysis: allow(unscoped-spawn, "worker lives for the whole serve run; joined in the shutdown block below")
             let t = std::thread::Builder::new()
                 .name(format!("serve-worker-{w}"))
                 .spawn(move || {
@@ -645,6 +646,7 @@ impl Coordinator {
         for p in 0..cfg.patients {
             let tx = gen_tx.clone();
             let cfg_c = cfg.clone();
+            // analysis: allow(unscoped-spawn, "generators run for the whole serve run; joined in the shutdown block below")
             let t = std::thread::Builder::new()
                 .name(format!("patient-{p}"))
                 .spawn(move || {
@@ -684,6 +686,7 @@ impl Coordinator {
         let routed = Arc::new(std::sync::Mutex::new([0u64; 3]));
         let routed_c = routed.clone();
         let topo_r = topo.clone();
+        // analysis: allow(unscoped-spawn, "router runs for the whole serve run; joined in the shutdown block below")
         let router = std::thread::Builder::new()
             .name("router".into())
             .spawn(move || {
@@ -694,6 +697,7 @@ impl Coordinator {
                     for (s, a) in
                         snapshot.iter_mut().zip(backlog_r.iter())
                     {
+                        // analysis: allow(relaxed-sync, "routing gauge: a stale backlog only skews load balance, never the result bytes")
                         *s = a.load(Ordering::Relaxed);
                     }
                     let machine = cfg_c.policy.route(
@@ -707,8 +711,9 @@ impl Coordinator {
                         &mut rr,
                     );
                     let lane = topo_r.lane_index(machine);
-                    routed_c.lock().unwrap()
+                    crate::sync::lock_unpoisoned(&routed_c)
                         [layer_index(machine.layer())] += 1;
+                    // analysis: allow(relaxed-sync, "backlog gauge: read only as a routing hint and after thread joins")
                     backlog_r[lane].fetch_add(1, Ordering::Relaxed);
                     // one patient window = one record's share of the
                     // workload dataset
@@ -746,6 +751,7 @@ impl Coordinator {
                     let t = Duration::from_secs_f64(
                         trans_ms / 1e3 * cfg_c.time_scale,
                     );
+                    // analysis: allow(wall-clock-in-pure, "real-time serving path: network delay is modeled as wall-clock wheel time")
                     let ready = Instant::now() + t;
                     wheel_r
                         .push(ready, (lane, (req.with_transmission(t), ready)));
@@ -760,6 +766,7 @@ impl Coordinator {
         let ready_n = ready.clone();
         let backlog_n = backlog.clone();
         let done_n = done_for_wheel;
+        // analysis: allow(unscoped-spawn, "wheel thread runs for the whole serve run; joined in the shutdown block below")
         let net = std::thread::Builder::new()
             .name("wheel".into())
             .spawn(move || {
@@ -768,12 +775,14 @@ impl Coordinator {
                     match queues_n[lane].offer(item) {
                         Offer::Queued => ready_n[worker].push(lane),
                         Offer::ShedIncoming(victim) => {
+                            // analysis: allow(relaxed-sync, "backlog gauge: read only as a routing hint and after thread joins")
                             backlog_n[lane].fetch_sub(1, Ordering::Relaxed);
                             let _ = done_n.send(Outcome::Shed {
                                 app: victim.0.app,
                             });
                         }
                         Offer::Evicted(victim) => {
+                            // analysis: allow(relaxed-sync, "backlog gauge: read only as a routing hint and after thread joins")
                             backlog_n[lane].fetch_sub(1, Ordering::Relaxed);
                             let _ = done_n.send(Outcome::Shed {
                                 app: victim.0.app,
@@ -795,6 +804,7 @@ impl Coordinator {
 
         // --- collector (this thread) --------------------------------------
         let total_requests = (cfg.patients * cfg.requests_per_patient) as u64;
+        // analysis: allow(wall-clock-in-pure, "real-time serving path: wall_ms is the measured window, reported as such")
         let started = Instant::now();
         let collected =
             collect_outcomes(&done_rx, total_requests, lane_count);
@@ -833,7 +843,7 @@ impl Coordinator {
             })
             .collect();
 
-        let routed = *routed.lock().unwrap();
+        let routed = *crate::sync::lock_unpoisoned(&routed);
         Ok(ServeReport {
             policy: cfg.policy,
             topology: topo,
@@ -946,6 +956,7 @@ fn execute_batch(
     for (req, _) in batch {
         input.extend_from_slice(&req.features);
     }
+    // analysis: allow(wall-clock-in-pure, "real-time serving path: queueing time is measured, not simulated")
     let exec_start = Instant::now();
     let result = runtime.infer_rows(app, rows, &input);
     let host_elapsed = match &result {
@@ -965,6 +976,7 @@ fn execute_batch(
         std::thread::sleep(pad);
     }
     for (i, (req, arrived)) in batch.iter().enumerate() {
+        // analysis: allow(relaxed-sync, "backlog gauge: read only as a routing hint and after thread joins")
         backlog[lane].fetch_sub(1, Ordering::Relaxed);
         let total = req.created.elapsed();
         let queueing = exec_start.saturating_duration_since(*arrived);

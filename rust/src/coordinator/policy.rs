@@ -111,6 +111,7 @@ impl Policy {
                         best = Some((m, t));
                     }
                 }
+                // analysis: allow(bare-unwrap, "MachineId::ALL is non-empty, so the loop always sets best")
                 best.expect("every class has a replica").0
             }
             Policy::FixedCloud => {

@@ -86,6 +86,7 @@ impl RequestGenerator {
             app,
             size_units: self.size_units,
             features: ep.features,
+            // analysis: allow(wall-clock-in-pure, "real-time serving path: end-to-end latency is measured from arrival")
             created: Instant::now(),
             transmission: Duration::ZERO,
         }

@@ -27,6 +27,7 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
+use crate::sync::{lock_unpoisoned, wait_timeout_unpoisoned};
 use crate::workload::Application;
 use crate::{Error, Result};
 
@@ -156,7 +157,7 @@ impl LaneQueue {
 
     /// Offer one network-released request; applies the admission rule.
     pub fn offer(&self, item: Item) -> Offer {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.inner);
         let victim = if self.capacity > 0
             && g.items.len() >= self.capacity
             && self.policy == ShedPolicy::Priority
@@ -174,7 +175,9 @@ impl LaneQueue {
             }
             Admission::DropIncoming => Offer::ShedIncoming(item),
             Admission::Evict(i) => {
-                let evicted = g.items.remove(i).expect("victim index valid");
+                let evicted =
+                    // analysis: allow(bare-unwrap, "admit() picked the victim index from this queue's current occupancy")
+                    g.items.remove(i).expect("victim index valid");
                 g.items.push_back(item);
                 self.cv.notify_one();
                 Offer::Evicted(evicted)
@@ -184,17 +187,18 @@ impl LaneQueue {
 
     /// Pop the head unconditionally (the batcher's first step).
     pub fn try_pop(&self) -> Option<Item> {
-        self.inner.lock().unwrap().items.pop_front()
+        lock_unpoisoned(&self.inner).items.pop_front()
     }
 
     /// Pop the head only if it belongs to `app` (the batcher's extend
     /// step: cross-app batching is impossible, so a mismatched head
     /// stays queued and becomes the next batch).
     pub fn pop_front_if(&self, app: Application) -> Front {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.inner);
         match g.items.front() {
             None => Front::Empty,
             Some((req, _)) if req.app == app => {
+                // analysis: allow(bare-unwrap, "front() just returned Some on this queue")
                 Front::Popped(g.items.pop_front().unwrap())
             }
             Some(_) => Front::OtherApp,
@@ -205,7 +209,7 @@ impl LaneQueue {
     /// queue is closed while empty.  Returns true iff items may be
     /// present (callers re-check via [`LaneQueue::pop_front_if`]).
     pub fn wait_until(&self, deadline: Instant) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.inner);
         loop {
             if !g.items.is_empty() {
                 return true;
@@ -213,23 +217,25 @@ impl LaneQueue {
             if g.closed {
                 return false;
             }
+            // analysis: allow(wall-clock-in-pure, "real-time serving path: the batch window is a wall-clock deadline")
             let now = Instant::now();
             if now >= deadline {
                 return false;
             }
-            let (g2, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            let (g2, _) =
+                wait_timeout_unpoisoned(&self.cv, g, deadline - now);
             g = g2;
         }
     }
 
     /// Close the queue: pending items stay poppable; waits return.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        lock_unpoisoned(&self.inner).closed = true;
         self.cv.notify_all();
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().items.len()
+        lock_unpoisoned(&self.inner).items.len()
     }
 
     pub fn is_empty(&self) -> bool {

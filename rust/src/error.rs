@@ -60,6 +60,13 @@ pub enum Error {
         reason: &'static str,
     },
 
+    /// Static-analysis failures (unreadable source root, lexer errors,
+    /// unknown rule names).  `edgeward analyze --check` exiting with
+    /// findings is *not* an `Error` — that is the report's job — this
+    /// variant is for the pass itself being unable to run.
+    #[error("analysis error: {0}")]
+    Analysis(String),
+
     /// I/O with context.
     #[error("io error on {path}: {source}")]
     Io {

@@ -53,6 +53,8 @@ COMMANDS:
             [--clouds N] [--edges N] [--capacity N] [--shed S]
             [--workers N] [--window MS] [--max-batch N] [--seed N]
             [--sweep] [--out FILE] [--json]        virtual-time serving storms
+  analyze   [ROOT] [--rules R1,R2] [--json OUT] [--check]
+                                                   determinism/concurrency lints
   calibrate [--live]                               print fitted λ coefficients
   config                                           print the default TOML config
   datagen   --app APP [--n N] [--seed N]           synthetic ICU episodes (CSV)
@@ -106,6 +108,14 @@ HDR-style latency histograms, deterministic for a fixed seed.
 picks what overflow drops; --sweep replays across arrival-rate
 multipliers and reports the saturation knee; --out writes the
 BENCH_serve.json document consumed by python/tools/bench_check.py.
+
+`analyze` runs the in-tree determinism & concurrency lint pass over a
+Rust source root (default: ./src, else ./rust/src) — see the crate's
+\"Determinism contract\" docs for the rule set.  --rules activates a
+subset, --json writes the machine-readable report, --check exits
+non-zero on any finding; suppressions are
+`// analysis: allow(<rule>, \"<why>\")` comments and an unjustified
+one is itself a finding.
 ";
 
 /// Minimal argument cursor: `--key value` and `--flag` handling.
@@ -581,12 +591,14 @@ fn run() -> edgeward::Result<()> {
                 }
                 for lane in &report.lanes {
                     let mut factors = String::new();
+                    // analysis: allow(float-eq, "unit factors are exact sentinels; display-only annotation")
                     if lane.speed != 1.0 {
                         factors.push_str(&format!(
                             " (×{} speed)",
                             lane.speed
                         ));
                     }
+                    // analysis: allow(float-eq, "unit factors are exact sentinels; display-only annotation")
                     if lane.link != 1.0 {
                         factors.push_str(&format!(
                             " (×{} link)",
@@ -808,6 +820,43 @@ fn run() -> edgeward::Result<()> {
                 );
                 edgeward::benchkit::write_value(&path, &doc)?;
                 println!("wrote {path}");
+            }
+        }
+        "analyze" => {
+            let rules_csv = args.opt("rules");
+            let json_out = args.opt("json");
+            let check = args.flag("check");
+            let root = args.subcommand();
+            args.finish();
+            let active =
+                edgeward::analysis::active_rules(rules_csv.as_deref())?;
+            let root = match root {
+                Some(r) => std::path::PathBuf::from(r),
+                None => ["src", "rust/src"]
+                    .iter()
+                    .map(std::path::PathBuf::from)
+                    .find(|p| p.is_dir())
+                    .ok_or_else(|| {
+                        edgeward::Error::Analysis(
+                            "no ./src or ./rust/src here; pass the \
+                             source root (usage: edgeward analyze ROOT)"
+                                .into(),
+                        )
+                    })?,
+            };
+            let report = edgeward::analysis::analyze_tree(&root, &active)?;
+            print!("{}", report.render());
+            if let Some(path) = &json_out {
+                edgeward::benchkit::write_value(path, &report.to_value())?;
+                println!("wrote {path}");
+            }
+            if check && !report.clean() {
+                return Err(edgeward::Error::Analysis(format!(
+                    "{} finding(s); fix them or suppress with a \
+                     justified `analysis: allow(<rule>, \"<why>\")` \
+                     comment",
+                    report.findings.len()
+                )));
             }
         }
         "calibrate" => {

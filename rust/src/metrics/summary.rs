@@ -41,8 +41,10 @@ impl LatencySummary {
         if samples.is_empty() {
             return Self::default();
         }
+        // total_cmp: no NaN panic, and one defined order for every
+        // input — the summary stays deterministic even on junk samples
         let mut sorted: Vec<f64> = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         let n = sorted.len();
         LatencySummary {
             count: n,

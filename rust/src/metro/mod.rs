@@ -706,6 +706,7 @@ impl Metro {
                 sc.jobs.iter().zip(&schedule.assignment)
             {
                 let factor = sum_factor(&ward.objective, j)
+                    // analysis: allow(bare-unwrap, "the fuse_wards pre-pass already rejected non-sum objectives")
                     .expect("sum objectives checked above");
                 let Some(fused) = u32::try_from(ward.weight)
                     .ok()

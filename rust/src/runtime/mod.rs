@@ -108,13 +108,15 @@ impl InferenceRuntime {
         app: Application,
         batch: usize,
     ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(&(app, batch)) {
+        if let Some(exe) =
+            crate::sync::lock_unpoisoned(&self.cache).get(&(app, batch))
+        {
             return Ok(exe.clone());
         }
         // compile outside the lock would risk duplicate work but never
         // deadlock; we keep it simple and compile under the lock since
         // startup warms everything anyway.
-        let mut cache = self.cache.lock().unwrap();
+        let mut cache = crate::sync::lock_unpoisoned(&self.cache);
         if let Some(exe) = cache.get(&(app, batch)) {
             return Ok(exe.clone());
         }

@@ -515,6 +515,7 @@ impl Arrival {
                 let mut t = 1.0_f64;
                 for _ in 0..events {
                     t += rng.exponential(rate);
+                    // analysis: allow(lossy-tick-cast, "arrival clocks stay far below 2^53; ceil+max(1) keeps C3's positive integer ticks")
                     let parent = (t.ceil() as Tick).max(1);
                     for _ in 0..burst {
                         // same two-stage catalog draw every ward
@@ -606,6 +607,7 @@ fn sample_job_at(rng: &mut Rng, catalog: &[Job], t: f64) -> Job {
     let mut j = jitter(rng, template);
     // C3: releases are positive integer ticks (the floor only engages
     // for t < 1, which no current process produces)
+    // analysis: allow(lossy-tick-cast, "arrival clocks stay far below 2^53; ceil+max(1) keeps C3's positive integer ticks")
     j.release = (t.ceil() as Tick).max(1);
     j
 }
@@ -614,6 +616,7 @@ fn sample_job_at(rng: &mut Rng, catalog: &[Job], t: f64) -> Job {
 /// constraint C3 keeps all times non-zero integers).
 fn jitter(rng: &mut Rng, template: Job) -> Job {
     let mut scale = |v: Tick| -> Tick {
+        // analysis: allow(lossy-tick-cast, "catalog costs are tiny (< 100 ticks); 1.25x jitter cannot overflow")
         ((v as f64 * rng.range(0.75, 1.25)).round() as Tick).max(1)
     };
     Job {

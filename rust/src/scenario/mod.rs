@@ -84,6 +84,7 @@ impl Scenario {
         Scenario::builder()
             .name("paper")
             .build()
+            // analysis: allow(bare-unwrap, "the committed Table VI trace always passes builder validation")
             .expect("paper scenario is always valid")
     }
 

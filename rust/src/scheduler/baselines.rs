@@ -130,6 +130,7 @@ pub fn per_job_scaled_assignment(
                     best = Some((m, t));
                 }
             }
+            // analysis: allow(bare-unwrap, "machines() always includes the device, so the loop sets best")
             best.expect("topology has at least the device").0
         })
         .collect()

@@ -118,6 +118,7 @@ pub fn schedule_exact_objective(
         &suffix_lb,
         &mut best,
     );
+    // analysis: allow(bare-unwrap, "the device assignment is always feasible, so the search records some best")
     Ok(best.expect("nonempty search space").0)
 }
 

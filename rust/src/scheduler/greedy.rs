@@ -47,6 +47,7 @@ pub fn greedy_assignment(jobs: &[Job], topo: &Topology) -> Assignment {
                 best = Some((m, end));
             }
         }
+        // analysis: allow(bare-unwrap, "machines() always includes the device, so the loop sets best")
         let (m, _) = best.expect("topology has at least the device");
         assignment[i] = m;
         if let Some(s) = topo.shared_index(m) {

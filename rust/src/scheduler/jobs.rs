@@ -123,6 +123,7 @@ pub fn jobs_from_workloads(
         .fold(0.0f64, f64::max)
         .max(1e-9);
     let scale = normalize_to as f64 / max_val;
+    // analysis: allow(lossy-tick-cast, "v*scale <= normalize_to by construction of scale; round+max(1) keeps C3")
     let q = |v: f64| -> Tick { (v * scale).round().max(1.0) as Tick };
 
     workloads

@@ -118,6 +118,7 @@ fn repair(
                 best = Some((m, end));
             }
         }
+        // analysis: allow(bare-unwrap, "machines() always includes the device, so the loop sets best")
         let (m, end) = best.expect("topology has at least the device");
         assignment[i] = m;
         if let Some(s) = topo.shared_index(m) {

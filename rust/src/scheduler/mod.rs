@@ -150,7 +150,7 @@ pub fn lower_bound(jobs: &[Job]) -> Tick {
                 .map(|&m| j.execution(m))
                 .min()
                 .unwrap_or(0);
-            j.weight as Tick * best
+            Tick::from(j.weight) * best
         })
         .sum()
 }

@@ -72,6 +72,7 @@ pub fn schedule_online_objective(
                 (m, objective.marginal(i, j, end))
             })
             .min_by_key(|(_, c)| *c)
+            // analysis: allow(bare-unwrap, "machines() always includes the device, so the iterator is non-empty")
             .expect("topology has at least the device");
         assignment[i] = m;
         if let Some(s) = topo.shared_index(m) {

@@ -352,6 +352,7 @@ fn lane_value_without(
     let pos = lane
         .jobs
         .binary_search_by_key(&key, |&i| lane_key(jobs, topo, i, assignment[i]))
+        // analysis: allow(bare-unwrap, "prepare_scratch inserted this job under the same lane key")
         .expect("prepared lane must contain the moved job");
     resume_fold(
         jobs,
@@ -510,6 +511,7 @@ pub fn apply_move(
             .binary_search_by_key(&key, |&i| {
                 lane_key(jobs, topo, i, assignment[i])
             })
+            // analysis: allow(bare-unwrap, "prepare_scratch inserted this job under the same lane key")
             .expect("prepared lane must contain the moved job");
         lane.jobs.remove(pos);
     } else {
@@ -517,6 +519,7 @@ pub fn apply_move(
         let count = scratch
             .device_ends
             .remove(&end)
+            // analysis: allow(bare-unwrap, "prepare_scratch counted this job's end into the multiset")
             .expect("device multiset must contain the moved job's end");
         if count > 1 {
             scratch.device_ends.insert(end, count - 1);

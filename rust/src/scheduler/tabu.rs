@@ -323,6 +323,7 @@ fn best_neighborhood_move(
                 scope.spawn(|| {
                     let mut local = None;
                     loop {
+                        // analysis: allow(relaxed-sync, "claim-only cursor: the scope join publishes every worker's result")
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= jobs.len() {
                             break;
@@ -335,6 +336,7 @@ fn best_neighborhood_move(
             .collect();
         for h in handles {
             if let Some(candidate) =
+                // analysis: allow(bare-unwrap, "propagating a scoring worker's panic is the only sane response")
                 h.join().expect("neighborhood worker panicked")
             {
                 if best.map_or(true, |b| candidate < b) {
@@ -492,6 +494,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // thread-per-core scan: the TSan job covers it instead
     fn parallel_neighborhood_scan_matches_sequential() {
         // the deterministic-argmin contract: sharding the scan across
         // workers selects the exact move the sequential scan selects,

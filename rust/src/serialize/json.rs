@@ -78,6 +78,7 @@ impl Value {
 
     pub fn as_u64(&self) -> Option<u64> {
         match self {
+            // analysis: allow(float-eq, "fract() == 0.0 is an exact integrality test, not a tolerance comparison")
             Value::Number(n) if *n >= 0.0 && n.fract() == 0.0 => {
                 Some(*n as u64)
             }
@@ -205,6 +206,7 @@ fn write_container(
 }
 
 fn write_number(out: &mut String, n: f64) {
+    // analysis: allow(float-eq, "fract() == 0.0 is an exact integrality test, not a tolerance comparison")
     if n.fract() == 0.0 && n.abs() < 9.0e15 {
         let _ = write!(out, "{}", n as i64);
     } else if n.is_finite() {

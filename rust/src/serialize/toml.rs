@@ -169,6 +169,7 @@ fn insert_path(
     value: Value,
     lineno: usize,
 ) -> Result<()> {
+    // analysis: allow(bare-unwrap, "parse_key never yields an empty path: every key line has at least one segment")
     let (last, parents) = path.split_last().expect("non-empty path");
     let parent = ensure_path(root, parents, lineno)?;
     let Value::Object(entries) = parent else {
@@ -390,6 +391,7 @@ fn emit_value(v: &Value) -> String {
         Value::Null => "\"\"".into(),
         Value::Bool(b) => b.to_string(),
         Value::Number(n) => {
+            // analysis: allow(float-eq, "fract() == 0.0 is an exact integrality test, not a tolerance comparison")
             if n.fract() == 0.0 && n.is_finite() && n.abs() < 9.0e15 {
                 // keep floats recognizable as floats for round-trip clarity
                 format!("{:.1}", n)

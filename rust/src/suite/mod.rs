@@ -292,7 +292,11 @@ impl Suite {
                         let mut scratch = SimScratch::default();
                         let mut out: Vec<(usize, Cell)> = Vec::new();
                         loop {
-                            let t = next.fetch_add(1, Ordering::Relaxed);
+                            // AcqRel: claiming task t happens-before any
+                            // later claim, so each cell is computed by
+                            // exactly one worker before the join merges
+                            // them in task order
+                            let t = next.fetch_add(1, Ordering::AcqRel);
                             if t >= tasks.len() {
                                 break;
                             }
@@ -308,6 +312,7 @@ impl Suite {
                 .collect();
             for h in handles {
                 for (i, cell) in
+                    // analysis: allow(bare-unwrap, "propagating a suite worker's panic is the only sane response")
                     h.join().expect("suite worker panicked")
                 {
                     cells[i] = Some(cell);
@@ -316,6 +321,7 @@ impl Suite {
         });
         let cells = cells
             .into_iter()
+            // analysis: allow(bare-unwrap, "the cursor covers 0..tasks.len(), so every slot was filled")
             .map(|c| c.expect("every task yields a cell"))
             .collect();
 

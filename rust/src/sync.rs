@@ -1,0 +1,65 @@
+//! Poison-recovering wrappers over [`std::sync`] locking.
+//!
+//! A poisoned mutex means some thread panicked while holding the lock.
+//! Every shared structure in this crate (interned label tables, the
+//! timing wheel's slot map, shed gauges, the delay queue) stays
+//! structurally valid across a panic — updates are single writes or
+//! complete before any unwinding call — so the right recovery is to
+//! take the guard and keep serving rather than cascade the panic
+//! through every other worker via `.unwrap()`.  These helpers make
+//! that policy explicit (and keep `bare-unwrap` findings out of the
+//! lock paths).
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Lock, recovering the guard if a previous holder panicked.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait`], recovering the guard on poison.
+pub fn wait_unpoisoned<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait_timeout`], recovering the guard on poison.
+pub fn wait_timeout_unpoisoned<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(guard, dur)
+        .unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_panic() {
+        let m = Mutex::new(7u32);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison it");
+        }));
+        assert!(r.is_err());
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_unpoisoned(&m), 7);
+    }
+
+    #[test]
+    fn wait_timeout_unpoisoned_times_out() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = lock_unpoisoned(&m);
+        let (_g, res) =
+            wait_timeout_unpoisoned(&cv, g, Duration::from_millis(1));
+        assert!(res.timed_out());
+    }
+}

@@ -350,6 +350,7 @@ impl Topology {
          -> Vec<f64> {
             let mut v = cloud.unwrap_or_else(|| vec![1.0; clouds]);
             v.extend(edge.unwrap_or_else(|| vec![1.0; edges]));
+            // analysis: allow(float-eq, "unit factors are exact sentinels: 1.0 is stored verbatim, never computed")
             if v.iter().all(|&f| f == 1.0) {
                 v.clear();
             }
@@ -672,6 +673,7 @@ impl Topology {
         v.set("clouds", self.clouds);
         v.set("edges", self.edges);
         let emit = |v: &mut Value, key: &str, factors: Vec<f64>| {
+            // analysis: allow(float-eq, "unit factors are exact sentinels: 1.0 is stored verbatim, never computed")
             if factors.iter().any(|&f| f != 1.0) {
                 v.set(key, factors);
             }
@@ -711,9 +713,11 @@ const MAX_F64_EXACT_TICK: Tick = 1 << 53;
 /// within each regime.
 #[inline]
 pub fn scale_ticks(p: Tick, factor: f64) -> Tick {
+    // analysis: allow(float-eq, "unit factors are exact sentinels: 1.0 is stored verbatim, never computed")
     if factor == 1.0 {
         p
     } else if p <= MAX_F64_EXACT_TICK {
+        // analysis: allow(lossy-tick-cast, "p <= 2^53 so the division is exact; this is scale_ticks' audited cast")
         (p as f64 / factor).ceil() as Tick
     } else {
         scale_ticks_exact(p, factor)
@@ -736,6 +740,7 @@ fn scale_ticks_exact(p: Tick, factor: f64) -> Tick {
     if exponent >= 0 {
         // factor >= 2^52, far outside the validated range — keep the
         // saturating float path rather than shifting out of u128
+        // analysis: allow(lossy-tick-cast, "out-of-range factor fallback: documented saturation at Tick::MAX")
         return (p as f64 / factor).ceil() as Tick;
     }
     // p / factor = p * 2^(-exponent) / mantissa.  For in-range factors
